@@ -1,0 +1,74 @@
+//! The §4.4.2 software/hardware co-design loop, replayed:
+//!
+//! 1. compile ResNet-20 for FlexASR + HLSCNN and co-simulate — accuracy
+//!    collapses with the *original* designs (HLSCNN's coarse 8-bit
+//!    fixed-point weight store);
+//! 2. inspect the per-invocation error statistics the co-sim gathers
+//!    (what the paper's authors reported to the accelerator developers);
+//! 3. re-run with the *updated* designs (16-bit weight store) — accuracy
+//!    recovers, without ever deploying to an FPGA.
+//!
+//! Requires `make artifacts`. Run with:
+//! `cargo run --release --example codesign_loop`
+
+use d2a::compiler::compile_app;
+use d2a::coordinator::{accelerators, DesignRev};
+use d2a::cosim::AccelHook;
+use d2a::egraph::RunnerLimits;
+use d2a::ir::interp::eval_with_hook;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use d2a::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open(None)?;
+    let app = d2a::apps::cosim_models::resnet20_lite();
+    let compiled = compile_app(
+        &app,
+        &[Target::FlexAsr, Target::Hlscnn],
+        Matching::Flexible,
+        RunnerLimits::default(),
+    );
+    println!(
+        "ResNet-20 compiled: {} HLSCNN convs + {} FlexASR linears offloaded\n",
+        compiled.invocations(Target::Hlscnn),
+        compiled.invocations(Target::FlexAsr)
+    );
+
+    let weights = store.weights("resnet20")?;
+    let (images, labels) = store.test_images()?;
+    let n = 120usize;
+
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let accels = accelerators(rev);
+        let mut env = weights.clone();
+        let mut correct = 0usize;
+        let mut errors: Vec<f32> = Vec::new();
+        for (img, &label) in images[..n].iter().zip(&labels[..n]) {
+            env.insert("x".to_string(), img.clone());
+            let mut hook = AccelHook::new(&accels);
+            hook.track_errors = true;
+            let out = eval_with_hook(&compiled.expr, &env, &mut hook)?;
+            if out.argmax() == label {
+                correct += 1;
+            }
+            errors.extend(hook.inv_errors);
+        }
+        let stats = d2a::cosim::stats::ErrorStats::from_samples(&errors);
+        println!(
+            "HLSCNN+FlexASR {rev:?}: accuracy {:.1}% | per-invocation error avg {:.2}% (std {:.2}%)",
+            100.0 * correct as f32 / n as f32,
+            stats.mean * 100.0,
+            stats.std_dev * 100.0,
+        );
+        if rev == DesignRev::Original {
+            println!(
+                "  -> reported to the accelerator developers: weight data heavily\n\
+                 \u{20}   quantized by the 8-bit fixed-point store (value range clipped)\n"
+            );
+        } else {
+            println!("  -> updated design (16-bit weight store) recovers the reference");
+        }
+    }
+    Ok(())
+}

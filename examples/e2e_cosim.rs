@@ -1,0 +1,113 @@
+//! End-to-end driver: proves all three layers compose on a real (small)
+//! workload.
+//!
+//! * **L1/L2 → artifacts**: `make artifacts` trained the models in JAX
+//!   (AdaptivFloat Pallas kernel in the compile path) and lowered the
+//!   ResMLP forward pass + the raw Pallas kernel to HLO text.
+//! * **runtime**: this binary loads both HLO modules via the PJRT CPU
+//!   client (`xla` crate) and executes them from Rust — no Python.
+//! * **L3**: the D2A compiler offloads the mirrored IR graph to FlexASR,
+//!   and the coordinator sweeps the 2000-image test set through
+//!   co-simulation, reporting the Table-4-style row.
+//!
+//! Run with: `cargo run --release --example e2e_cosim` (after
+//! `make artifacts`). Set D2A_COSIM_N to change the sweep size.
+
+use d2a::compiler::compile_app;
+use d2a::coordinator::{classify_sweep, DesignRev};
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use d2a::runtime::{pjrt::PjrtInput, ArtifactStore, PjrtRunner};
+use d2a::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let store = ArtifactStore::open(None)?;
+    let mut runner = PjrtRunner::new()?;
+    println!("PJRT platform: {}", runner.platform());
+
+    // ---- 1. execute the AOT-lowered Pallas kernel from Rust ----------
+    runner.load("af_linear", &store.hlo_path("af_linear_pallas"))?;
+    let kx = Tensor::new(vec![8, 32], store.read_f32("kernel_demo_x.bin")?);
+    let kw = Tensor::new(vec![16, 32], store.read_f32("kernel_demo_w.bin")?);
+    let kb = Tensor::new(vec![16], store.read_f32("kernel_demo_b.bin")?);
+    let want = Tensor::new(vec![8, 16], store.read_f32("kernel_demo_out.bin")?);
+    let got = runner.run(
+        "af_linear",
+        &[PjrtInput::F32(kx), PjrtInput::F32(kw), PjrtInput::F32(kb)],
+        &[8, 16],
+    )?;
+    println!(
+        "L1 Pallas kernel via PJRT: max|diff| vs python golden = {:.2e}",
+        got.max_abs_diff(&want)
+    );
+    assert!(got.max_abs_diff(&want) < 1e-5, "kernel artifact mismatch");
+
+    // ---- 2. execute the lowered ResMLP forward pass, check goldens ----
+    runner.load("resmlp", &store.hlo_path("resmlp"))?;
+    let (images, labels) = store.test_images()?;
+    let golden = store.golden("resmlp", &[8, 4])?;
+    let mut maxdiff = 0.0f32;
+    for i in 0..8 {
+        let out = runner.run("resmlp", &resmlp_inputs(&store, &images[i])?, &[1, 4])?;
+        for j in 0..4 {
+            maxdiff = maxdiff.max((out.data[j] - golden.data[i * 4 + j]).abs());
+        }
+    }
+    println!("L2 ResMLP fwd via PJRT: max|diff| vs python golden = {maxdiff:.2e}");
+    assert!(maxdiff < 1e-3, "model artifact mismatch");
+
+    // ---- 3. D2A-compile the IR mirror and co-simulate the sweep -------
+    let app = d2a::apps::cosim_models::resmlp_lite();
+    let compiled = compile_app(
+        &app,
+        &[Target::FlexAsr],
+        Matching::Flexible,
+        RunnerLimits::default(),
+    );
+    println!(
+        "L3 compiled ResMLP: {} FlexASR invocations per image",
+        compiled.invocations(Target::FlexAsr)
+    );
+    let weights = store.weights("resmlp")?;
+    let n: usize = std::env::var("D2A_COSIM_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000)
+        .min(images.len());
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let rep = classify_sweep(
+            &compiled.expr,
+            &weights,
+            &images[..n],
+            &labels[..n],
+            rev,
+            1,
+        );
+        println!(
+            "co-sim {rev:?}: {} images, reference {:.2}%, accelerated {:.2}% \
+             ({:.1?}/image)",
+            rep.n,
+            rep.ref_accuracy() * 100.0,
+            rep.acc_accuracy() * 100.0,
+            rep.time_per_point()
+        );
+    }
+    Ok(())
+}
+
+/// Build the resmlp PJRT argument list: flat input + weights in
+/// sorted-key order (the aot.py parameter convention).
+fn resmlp_inputs(
+    store: &ArtifactStore,
+    img: &d2a::tensor::Tensor,
+) -> anyhow::Result<Vec<PjrtInput>> {
+    let weights = store.weights("resmlp")?;
+    let mut keys: Vec<_> = weights.keys().cloned().collect();
+    keys.sort();
+    let mut inputs = vec![PjrtInput::F32(img.reshape(&[1, 192]))];
+    for k in keys {
+        inputs.push(PjrtInput::F32(weights[&k].clone()));
+    }
+    Ok(inputs)
+}

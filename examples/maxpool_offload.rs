@@ -1,0 +1,56 @@
+//! The §5.1 / Fig. 7 walk: offloading 2-D max pooling with window (4,4)
+//! and stride (2,2) onto FlexASR's fixed (2,1)/(2,1) temporal max pool,
+//! then cancelling the redundant intermediate store/loads.
+//!
+//! Run with: `cargo run --release --example maxpool_offload`
+
+use d2a::codegen::optimize::{pool_chains, transfer_stats};
+use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
+use d2a::ir::{interp, parse::to_sexpr, Op, RecExpr, Target};
+use d2a::rewrites::{rules_for_extended, Matching};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+
+fn main() {
+    // Fig. 7(b): the initial program
+    let mut program = RecExpr::new();
+    let t = program.add(Op::Var("t".into()), vec![]);
+    program.add(Op::MatMaxPool { window: (4, 4), stride: (2, 2) }, vec![t]);
+    println!("initial program (Fig. 7b):\n  {}\n", to_sexpr(&program));
+
+    let shapes: HashMap<String, Vec<usize>> =
+        [("t".to_string(), vec![128usize, 128])].into_iter().collect();
+    let mut eg = EGraph::new(shapes);
+    let root = eg.add_expr(&program);
+    let rules = rules_for_extended(&[Target::FlexAsr], Matching::Flexible);
+    Runner::new(RunnerLimits::default()).run(&mut eg, &rules);
+    let best = Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+
+    // Fig. 7(f): optimized offload
+    println!("optimized offload (Fig. 7f):\n  {}\n", to_sexpr(&best));
+    let stats = transfer_stats(&best);
+    println!(
+        "data movement: {} store, {} load, {} fasr_maxpool stages (chains {:?})",
+        stats.stores,
+        stats.loads,
+        stats.compute,
+        pool_chains(&best)
+    );
+    assert_eq!(stats.stores, 1);
+    assert_eq!(stats.loads, 1);
+    assert_eq!(stats.compute, 4);
+
+    // semantics check against the original program
+    let mut rng = Rng::new(3);
+    let tv = Tensor::randn(&[128, 128], &mut rng, 1.0);
+    let env: HashMap<String, Tensor> = [("t".to_string(), tv)].into_iter().collect();
+    let a = interp::eval(&program, &env).unwrap();
+    let b = interp::eval(&best, &env).unwrap();
+    println!(
+        "\nrewritten program max|diff| vs original: {:.2e} over {:?} output",
+        a.max_abs_diff(&b),
+        a.shape
+    );
+    assert!(a.max_abs_diff(&b) < 1e-6);
+}

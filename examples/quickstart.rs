@@ -1,0 +1,86 @@
+//! Quickstart: the whole D2A flow on one small program.
+//!
+//! 1. write an IR program (a linear layer, Fig. 3a),
+//! 2. compile it with equality saturation (flexible matching),
+//! 3. inspect the rewritten program (accelerator instructions present),
+//! 4. lower the matched operation to a FlexASR ILA fragment (Fig. 5c)
+//!    and its MMIO command stream (Fig. 5d),
+//! 5. execute the stream on the emulated SoC and check the numerics
+//!    against the IR interpreter.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use d2a::accel::{Accelerator, FlexAsr};
+use d2a::codegen::lower_flex_linear;
+use d2a::compiler::compile;
+use d2a::egraph::RunnerLimits;
+use d2a::ir::{parse::to_sexpr, GraphBuilder, Target};
+use d2a::rewrites::Matching;
+use d2a::soc::driver::Driver;
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+
+fn main() -> anyhow::Result<()> {
+    // 1. the compiler-IR program: bias_add(nn_dense(x, w), b)
+    let mut g = GraphBuilder::new();
+    let x = g.var("x");
+    let w = g.weight("w");
+    let b = g.weight("b");
+    g.linear(x, w, b);
+    let program = g.finish();
+    println!("IR program (Fig. 3a):\n  {}\n", to_sexpr(&program));
+
+    // 2. compile for FlexASR
+    let shapes: HashMap<String, Vec<usize>> = [
+        ("x".to_string(), vec![4usize, 16]),
+        ("w".to_string(), vec![8, 16]),
+        ("b".to_string(), vec![8]),
+    ]
+    .into_iter()
+    .collect();
+    let compiled = compile(
+        &program,
+        &shapes,
+        &[Target::FlexAsr],
+        Matching::Flexible,
+        RunnerLimits::default(),
+    );
+    println!(
+        "compiled ({} e-classes explored, {:?}):\n  {}\n",
+        compiled.classes,
+        compiled.stop,
+        to_sexpr(&compiled.expr)
+    );
+    assert_eq!(compiled.invocations(Target::FlexAsr), 1);
+
+    // 3./4. lower the matched fasr_linear to ILA assembly + MMIO commands
+    let dev = FlexAsr::new();
+    let mut rng = Rng::new(42);
+    let xv = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
+    let wv = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
+    let bv = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
+    let inv = lower_flex_linear(&dev, &xv, &wv, &bv);
+    println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);
+    println!("tail of the MMIO stream (Fig. 5d):");
+    for cmd in inv.cmds.iter().rev().take(7).rev() {
+        println!("  {cmd}");
+    }
+
+    // 5. run on the emulated SoC, compare against the IR interpreter
+    let mut driver = Driver::new(d2a::soc::reference_soc());
+    let accel_out = driver.invoke(&inv)?;
+    let host_out = dev
+        .exec_op(&d2a::ir::Op::FlexLinear, &[&xv, &wv, &bv])
+        .unwrap();
+    let f32_ref = d2a::ir::interp::eval_op(&d2a::ir::Op::FlexLinear, &[&xv, &wv, &bv])?;
+    println!(
+        "\nMMIO-vs-ILA-fast-path error: {:.2e} (same semantics, two views)",
+        accel_out.rel_error(&host_out)
+    );
+    println!(
+        "accelerator-vs-f32 error:    {:.2}% (the AdaptivFloat numerics gap)",
+        accel_out.rel_error(&f32_ref) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,200 @@
+"""AOT compile path: run ONCE at build time (`make artifacts`), never on
+the request path.
+
+Produces, under `artifacts/`:
+
+* `dataset_images_{train,test}.bin` / `..._labels.bin` — synthetic image
+  dataset (f32 NCHW / i32), `dataset_tokens_{train,test}.bin` (i32);
+* `weights_<model>.bin` + `manifest_<model>.txt` — trained parameters
+  (flat f32 LE; manifest lines: `name dims... offset_floats`);
+* `golden_<model>.bin` — f32 forward outputs on the first test inputs,
+  so the Rust IR mirror can prove itself equal to the JAX model;
+* `<model>.hlo.txt` — the f32 forward pass lowered to HLO **text** (the
+  interchange the Rust PJRT runtime loads; see /opt/xla-example/README);
+* `af_linear_pallas.hlo.txt` — the Layer-1 Pallas kernel lowered
+  (interpret mode) inside a jitted wrapper, for the runtime kernel demo;
+* `meta.txt` — reference metrics (accuracy / perplexity) measured at
+  train time, echoed by the Table 4 bench as "Reference Result".
+"""
+
+import argparse
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import af_linear as K
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (NOT .serialize(): jax>=0.5
+    emits 64-bit-id protos that xla_extension 0.5.1 rejects)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def save_weights(outdir, name, params):
+    keys = sorted(params.keys())
+    manifest = []
+    flat = []
+    off = 0
+    for k in keys:
+        a = np.asarray(params[k], dtype=np.float32)
+        manifest.append(f"{k} {','.join(str(d) for d in a.shape)} {off}")
+        flat.append(a.reshape(-1))
+        off += a.size
+    np.concatenate(flat).tofile(os.path.join(outdir, f"weights_{name}.bin"))
+    with open(os.path.join(outdir, f"manifest_{name}.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=700)
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    t0 = time.time()
+    meta = {}
+
+    # ---- datasets -----------------------------------------------------
+    xtr, ytr = M.make_images(3000, seed=1)
+    xte, yte = M.make_images(2000, seed=2)
+    xtr.tofile(f"{outdir}/dataset_images_train.bin")
+    ytr.tofile(f"{outdir}/dataset_labels_train.bin")
+    xte.tofile(f"{outdir}/dataset_images_test.bin")
+    yte.tofile(f"{outdir}/dataset_labels_test.bin")
+    toks_tr = M.make_text(20000, seed=3)
+    toks_te = M.make_text(100 * (M.SEQ_LEN + 1), seed=4)
+    toks_tr.tofile(f"{outdir}/dataset_tokens_train.bin")
+    toks_te.tofile(f"{outdir}/dataset_tokens_test.bin")
+    print(f"[aot] datasets written ({time.time()-t0:.1f}s)", flush=True)
+
+    # ---- train the four co-sim models ----------------------------------
+    jobs = [
+        ("resmlp", M.resmlp_init, M.resmlp_forward),
+        ("resnet20", M.resnet_init, M.resnet_forward),
+        ("mobilenet", M.mobilenet_init, M.mobilenet_forward),
+    ]
+    for name, init, fwd in jobs:
+        params = M.train_classifier(init, fwd, xtr, ytr, steps=args.steps)
+        acc = M.accuracy(fwd, params, xte, yte)
+        meta[f"{name}_ref_acc"] = f"{acc:.4f}"
+        save_weights(outdir, name, params)
+        golden = np.asarray(fwd(params, jnp.asarray(xte[:8])), dtype=np.float32)
+        golden.tofile(f"{outdir}/golden_{name}.bin")
+        print(f"[aot] {name}: test acc {acc:.3f} ({time.time()-t0:.1f}s)", flush=True)
+
+    params = M.train_lm(toks_tr, steps=args.steps)
+    ppl = M.perplexity(params, toks_te)
+    meta["lstm_ref_ppl"] = f"{ppl:.2f}"
+    save_weights(outdir, "lstm", params)
+    g_tokens = toks_te[: M.SEQ_LEN + 1]
+    golden = np.asarray(
+        M.lstm_forward(params, jnp.asarray(g_tokens[None, :-1])), dtype=np.float32
+    )
+    golden.tofile(f"{outdir}/golden_lstm.bin")
+    print(f"[aot] lstm: test ppl {ppl:.2f} ({time.time()-t0:.1f}s)", flush=True)
+
+    # ---- lower forward passes to HLO text (weights baked as constants) --
+    lstm_params = params
+    # fetch resmlp params back from disk: one source of truth with rust
+    resmlp_trained = load_weights(outdir, "resmlp")
+    # weights are passed as PARAMETERS (sorted-key order, matching the
+    # manifest): XLA's HLO-text printer elides large constant literals, so
+    # baking weights as constants does NOT survive the text interchange.
+    # The input is flat [1, 192] so every parameter is 1-/2-D with XLA's
+    # default layout.
+    rkeys = sorted(resmlp_trained.keys())
+
+    def resmlp_fn(x, *plist):
+        return M.resmlp_forward(dict(zip(rkeys, plist)), x)
+
+    specs = [jax.ShapeDtypeStruct((1, 192), jnp.float32)] + [
+        jax.ShapeDtypeStruct(resmlp_trained[k].shape, jnp.float32) for k in rkeys
+    ]
+    text = to_hlo_text(jax.jit(resmlp_fn).lower(*specs))
+    with open(f"{outdir}/resmlp.hlo.txt", "w") as f:
+        f.write(text)
+    print(f"[aot] resmlp.hlo.txt ({len(text)} chars)", flush=True)
+
+    lkeys = sorted(lstm_params.keys())
+
+    def lstm_fn(toks, *plist):
+        return M.lstm_forward(dict(zip(lkeys, plist)), toks)
+
+    lspecs = [jax.ShapeDtypeStruct((1, M.SEQ_LEN), jnp.int32)] + [
+        jax.ShapeDtypeStruct(np.asarray(lstm_params[k]).shape, jnp.float32)
+        for k in lkeys
+    ]
+    text = to_hlo_text(jax.jit(lstm_fn).lower(*lspecs))
+    with open(f"{outdir}/lstm.hlo.txt", "w") as f:
+        f.write(text)
+    print(f"[aot] lstm.hlo.txt ({len(text)} chars)", flush=True)
+
+    # ---- lower the Layer-1 Pallas kernel itself ------------------------
+    rng = np.random.default_rng(7)
+    kx = rng.normal(0, 1, (8, 32)).astype(np.float32)
+    kw = rng.normal(0, 0.3, (16, 32)).astype(np.float32)
+    kb = rng.normal(0, 0.1, (16,)).astype(np.float32)
+    # exponent biases are static config (computed here from the concrete
+    # demo operands, exactly like the driver writes CFG_EXP_BIAS)
+    import jax.numpy as _jnp
+    from .kernels import ref as _ref
+    xb = _ref.af_select_bias(float(np.max(np.abs(kx))))
+    wb = _ref.af_select_bias(float(np.max(np.abs(kw))))
+    bb = _ref.af_select_bias(float(np.max(np.abs(kb))))
+    acc0 = np.asarray(_ref.af_quantize(_jnp.asarray(kx), xb)) @ np.asarray(
+        _ref.af_quantize(_jnp.asarray(kw), wb)
+    ).T + np.asarray(_ref.af_quantize(_jnp.asarray(kb), bb))
+    ob = _ref.af_select_bias(float(np.max(np.abs(acc0))))
+    kernel_fn = lambda x, w, b: K.af_linear(x, w, b, biases=(xb, wb, bb, ob))
+    text = to_hlo_text(
+        jax.jit(kernel_fn).lower(
+            jax.ShapeDtypeStruct(kx.shape, jnp.float32),
+            jax.ShapeDtypeStruct(kw.shape, jnp.float32),
+            jax.ShapeDtypeStruct(kb.shape, jnp.float32),
+        )
+    )
+    with open(f"{outdir}/af_linear_pallas.hlo.txt", "w") as f:
+        f.write(text)
+    # golden in/out for the rust runtime test
+    kx.tofile(f"{outdir}/kernel_demo_x.bin")
+    kw.tofile(f"{outdir}/kernel_demo_w.bin")
+    kb.tofile(f"{outdir}/kernel_demo_b.bin")
+    np.asarray(K.af_linear(jnp.asarray(kx), jnp.asarray(kw), jnp.asarray(kb), biases=(xb, wb, bb, ob)),
+               dtype=np.float32).tofile(f"{outdir}/kernel_demo_out.bin")
+    print(f"[aot] af_linear_pallas.hlo.txt ({len(text)} chars)", flush=True)
+
+    with open(f"{outdir}/meta.txt", "w") as f:
+        for k, v in sorted(meta.items()):
+            f.write(f"{k} {v}\n")
+    print(f"[aot] done in {time.time()-t0:.1f}s", flush=True)
+
+
+def load_weights(outdir, name):
+    params = {}
+    flat = np.fromfile(f"{outdir}/weights_{name}.bin", dtype=np.float32)
+    with open(f"{outdir}/manifest_{name}.txt") as f:
+        for line in f:
+            parts = line.split()
+            if not parts:
+                continue
+            key, dims, off = parts[0], parts[1], int(parts[2])
+            shape = tuple(int(d) for d in dims.split(","))
+            n = int(np.prod(shape))
+            params[key] = flat[off : off + n].reshape(shape)
+    return params
+
+
+if __name__ == "__main__":
+    sys.exit(main())

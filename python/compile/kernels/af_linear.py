@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernel: AdaptivFloat-quantized linear layer (the
+FlexASR PE-array hot spot).
+
+TPU-minded structure (DESIGN.md §Hardware-Adaptation): the GEMM is tiled
+with BlockSpecs sized for the MXU (padded-up multiples of (8, 128) lanes;
+full 128x128 tiles for real workloads), the per-tensor exponent biases are
+scalar prefetch-style operands computed once outside the grid, and the
+quantize/dequantize steps are elementwise VPU work fused into the tile
+loop so every tile crosses HBM<->VMEM once.
+
+Runs with `interpret=True` everywhere in this repo: the CPU PJRT client
+cannot execute Mosaic custom-calls, so real-TPU lowering is out of scope
+(perf is *estimated* from the BlockSpec footprint in EXPERIMENTS.md §Perf,
+never measured from interpret-mode wallclock).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _af_quant_block(v, bias, bits=8, exp_bits=3):
+    """In-kernel AdaptivFloat snap (same math as ref.af_quantize)."""
+    return ref.af_quantize(v, bias, bits, exp_bits)
+
+
+def _af_linear_kernel(x_ref, w_ref, b_ref, o_ref, *, xb, wb, bbias, ob):
+    """One (tile_n, tile_m) output tile: quantize operands on the way into
+    the MACs, accumulate in f32, re-quantize on the way out."""
+    xq = _af_quant_block(x_ref[...], xb)
+    wq = _af_quant_block(w_ref[...], wb)
+    bq = _af_quant_block(b_ref[...], bbias)
+    acc = jnp.dot(xq, wq.T, preferred_element_type=jnp.float32) + bq
+    o_ref[...] = _af_quant_block(acc, ob)
+
+
+def af_linear(x, w, b, tile_n=8, tile_m=128, biases=None):
+    """FlexASR linear layer as a Pallas kernel: `AF8(AF8(x) @ AF8(w)^T +
+    AF8(b))` with per-tensor adaptive exponent biases.
+
+    The exponent biases are *static* kernel parameters (the device
+    configures them over MMIO before triggering — see the Rust ILA model);
+    when `biases` is None they are derived from the concrete operands (the
+    device's two-pass range scan). Under `jax.jit` tracing pass `biases`
+    explicitly, since tracers have no concrete max. Tile shapes clamp to
+    the problem size so small correctness shapes stay unpadded.
+    """
+    n, k = x.shape
+    m = w.shape[0]
+    if biases is None:
+        xb = ref.af_select_bias(float(jnp.max(jnp.abs(x))))
+        wb = ref.af_select_bias(float(jnp.max(jnp.abs(w))))
+        bbias = ref.af_select_bias(float(jnp.max(jnp.abs(b))))
+        # device two-pass output-range scan (f32 extremum of the result)
+        xq = ref.af_quantize(x, xb)
+        wq = ref.af_quantize(w, wb)
+        bq = ref.af_quantize(b, bbias)
+        acc = xq @ wq.T + bq
+        ob = ref.af_select_bias(float(jnp.max(jnp.abs(acc))))
+    else:
+        xb, wb, bbias, ob = biases
+
+    tn = min(tile_n, n)
+    tm = min(tile_m, m)
+    # grid over output tiles; K stays resident (fits VMEM for FlexASR's
+    # layer sizes — checked in vmem_footprint_bytes)
+    grid = (pl.cdiv(n, tn), pl.cdiv(m, tm))
+    kernel = functools.partial(_af_linear_kernel, xb=xb, wb=wb, bbias=bbias, ob=ob)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def vmem_footprint_bytes(n, k, m, tile_n=8, tile_m=128):
+    """Static VMEM footprint of one grid step (for the §Perf estimate):
+    x-tile + w-tile + bias-tile + out-tile, f32."""
+    tn, tm = min(tile_n, n), min(tile_m, m)
+    return 4 * (tn * k + tm * k + tm + tn * tm)

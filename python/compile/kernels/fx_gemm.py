@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: fixed-point GEMM (the HLSCNN conv-as-GEMM hot
+spot: convolutions are im2col'd in the Layer-2 graph, then hit this
+kernel).
+
+Same TPU-minded tiling story as af_linear (see that module's docstring);
+the quantization here is HLSCNN's Q(act_bits, act_frac) activations and
+Q(wgt_bits, wgt_frac) weights with a wide accumulator — the weight width
+is the Table 4 co-design knob, threaded through as kernel parameters.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fx_gemm_kernel(x_ref, w_ref, o_ref, *, act_bits, act_frac, wgt_bits, wgt_frac):
+    xq = ref.fx_quantize(x_ref[...], act_bits, act_frac)
+    wq = ref.fx_quantize(w_ref[...], wgt_bits, wgt_frac)
+    acc = jnp.dot(xq, wq.T, preferred_element_type=jnp.float32)
+    o_ref[...] = ref.fx_quantize(acc, act_bits, act_frac)
+
+
+def fx_gemm(
+    x,
+    w,
+    act_bits=16,
+    act_frac=8,
+    wgt_bits=16,
+    wgt_frac=12,
+    tile_n=8,
+    tile_m=128,
+):
+    """`FX(FX(x) @ FX(w)^T)` as a Pallas kernel over output tiles."""
+    n, k = x.shape
+    m = w.shape[0]
+    tn = min(tile_n, n)
+    tm = min(tile_m, m)
+    grid = (pl.cdiv(n, tn), pl.cdiv(m, tm))
+    kernel = functools.partial(
+        _fx_gemm_kernel,
+        act_bits=act_bits,
+        act_frac=act_frac,
+        wgt_bits=wgt_bits,
+        wgt_frac=wgt_frac,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tn, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, tm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def im2col_nchw(x, kh, kw, sh, sw, ph, pw):
+    """Unfold NCHW input into [N*OH*OW, C*KH*KW] patches (matches
+    tensor::ops::im2col in Rust)."""
+    n, c, h, w = x.shape
+    xpad = jnp.pad(x, ((0, 0), (0, 0), (ph, ph), (pw, pw)))
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w + 2 * pw - kw) // sw + 1
+    patches = []
+    for dy in range(kh):
+        for dx in range(kw):
+            patches.append(
+                xpad[:, :, dy : dy + sh * oh : sh, dx : dx + sw * ow : sw]
+            )
+    # [kh*kw, N, C, OH, OW] -> [N, OH, OW, C, kh*kw] -> rows
+    stk = jnp.stack(patches)  # [KHKW, N, C, OH, OW]
+    stk = jnp.transpose(stk, (1, 3, 4, 2, 0))  # [N, OH, OW, C, KHKW]
+    return stk.reshape(n * oh * ow, c * kh * kw), (n, oh, ow)
+
+
+def hlscnn_conv2d(x, w, stride=(1, 1), pad=(1, 1), wgt_bits=16, wgt_frac=12):
+    """HLSCNN 2-D convolution: im2col (L2 graph) + fixed-point Pallas GEMM
+    (L1 kernel), output back in NCHW."""
+    o, _, kh, kw = w.shape
+    patches, (n, oh, ow) = im2col_nchw(x, kh, kw, stride[0], stride[1], pad[0], pad[1])
+    wflat = w.reshape(o, -1)
+    y = fx_gemm(patches, wflat, wgt_bits=wgt_bits, wgt_frac=wgt_frac)
+    return jnp.transpose(y.reshape(n, oh, ow, o), (0, 3, 1, 2))

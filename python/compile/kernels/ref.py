@@ -1,0 +1,120 @@
+"""Pure-jnp reference semantics (the correctness oracle for the Pallas
+kernels, and the build-time mirror of the Rust `numerics` module).
+
+The AdaptivFloat model here matches `rust/src/numerics/adaptivfloat.rs`
+(format <8,3>: 1 sign | 3 exponent | 4 mantissa, per-tensor adaptive
+exponent bias chosen from max-abs). The fixed-point model matches
+`rust/src/numerics/fixed_point.rs`. Rounding-tie behaviour differs between
+numpy (ties-to-even) and Rust f32::round (ties-away) at exact half-ULP
+points; tests use lattice-step tolerances accordingly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+# ----------------------------------------------------------------------
+# AdaptivFloat <bits, exp_bits>
+# ----------------------------------------------------------------------
+
+def af_select_bias(max_abs, exp_bits=3):
+    """Adaptive exponent bias for a tensor with the given max-abs."""
+    e_max = (1 << exp_bits) - 1
+    if max_abs <= 0.0 or not np.isfinite(max_abs):
+        return 0
+    return int(np.floor(np.log2(max_abs))) - e_max
+
+
+def af_quantize(x, bias, bits=8, exp_bits=3):
+    """Quantize a tensor onto the AdaptivFloat lattice (vectorized).
+
+    Mirrors AdaptivFloatFormat::quantize_value in Rust: normals
+    (-1)^s * 2^(E+bias) * (1 + M/2^m), saturation at the top, underflow to
+    zero below half the min normal (snap to min normal above).
+    """
+    m = bits - 1 - exp_bits
+    e_max = (1 << exp_bits) - 1
+    scale = float(1 << m)
+
+    a = jnp.abs(x)
+    sign = jnp.where(x < 0, -1.0, 1.0)
+    nz = a > 0
+    safe_a = jnp.where(nz, a, 1.0)
+    exp = jnp.floor(jnp.log2(safe_a))
+    frac = safe_a / jnp.exp2(exp)
+    mant = jnp.round((frac - 1.0) * scale)
+    overflow = mant >= scale
+    exp = jnp.where(overflow, exp + 1, exp)
+    mant = jnp.where(overflow, 0.0, mant)
+    frac = 1.0 + mant / scale
+
+    e_biased = exp - bias
+    max_mag = jnp.exp2(float(e_max + bias)) * (2.0 - 1.0 / scale)
+    min_normal = jnp.exp2(float(bias))
+
+    q = sign * jnp.exp2(exp) * frac
+    q = jnp.where(e_biased > e_max, sign * max_mag, q)
+    q = jnp.where(
+        e_biased < 0,
+        jnp.where(safe_a < min_normal / 2.0, 0.0, sign * min_normal),
+        q,
+    )
+    return jnp.where(nz, q, 0.0)
+
+
+def af_quantize_tensor(x, bits=8, exp_bits=3):
+    """Per-tensor adaptive quantization (bias from the data)."""
+    max_abs = float(jnp.max(jnp.abs(x)))
+    bias = af_select_bias(max_abs, exp_bits)
+    return af_quantize(x, bias, bits, exp_bits)
+
+
+# ----------------------------------------------------------------------
+# Fixed point Q(bits, frac)
+# ----------------------------------------------------------------------
+
+def fx_quantize(x, bits, frac_bits):
+    """Symmetric saturating fixed-point quantization (ties-to-even)."""
+    step = 2.0 ** (-frac_bits)
+    max_int = float((1 << (bits - 1)) - 1)
+    min_int = float(-(1 << (bits - 1)))
+    scaled = jnp.clip(jnp.round(x / step), min_int, max_int)
+    return scaled * step
+
+
+# ----------------------------------------------------------------------
+# Reference ops (the oracles)
+# ----------------------------------------------------------------------
+
+def ref_af_linear(x, w, b, bits=8, exp_bits=3):
+    """FlexASR linear layer: AF-lattice operands, f32 MAC, AF output.
+
+    Matches FlexAsr::linear in rust/src/accel/flexasr/mod.rs.
+    """
+    xq = af_quantize_tensor(x, bits, exp_bits)
+    wq = af_quantize_tensor(w, bits, exp_bits)
+    bq = af_quantize_tensor(b, bits, exp_bits)
+    acc = xq @ wq.T + bq
+    return af_quantize_tensor(acc, bits, exp_bits)
+
+
+def ref_fx_gemm(x, w, act_bits=16, act_frac=8, wgt_bits=16, wgt_frac=12):
+    """HLSCNN conv-as-GEMM core: fixed-point operands, wide MAC, fixed
+    output (matches Hlscnn::conv2d's arithmetic on im2col'd patches)."""
+    xq = fx_quantize(x, act_bits, act_frac)
+    wq = fx_quantize(w, wgt_bits, wgt_frac)
+    acc = xq @ wq.T
+    return fx_quantize(acc, act_bits, act_frac)
+
+
+def ref_lstm_cell(x, h, c, w_ih, w_hh, b):
+    """One f32 LSTM cell step, PyTorch gate order (i, f, g, o) — matches
+    tensor::ops::lstm_cell in Rust."""
+    gates = x @ w_ih.T + h @ w_hh.T + b
+    H = h.shape[-1]
+    i = jnp.reciprocal(1.0 + jnp.exp(-gates[..., 0 * H : 1 * H]))
+    f = jnp.reciprocal(1.0 + jnp.exp(-gates[..., 1 * H : 2 * H]))
+    g = jnp.tanh(gates[..., 2 * H : 3 * H])
+    o = jnp.reciprocal(1.0 + jnp.exp(-gates[..., 3 * H : 4 * H]))
+    nc = f * c + i * g
+    nh = o * jnp.tanh(nc)
+    return nh, nc

@@ -1,0 +1,325 @@
+"""Layer-2 JAX models: the co-simulated applications of Table 4, plus
+their deterministic synthetic datasets (the WikiText-2 / CIFAR-10
+substitutes — see DESIGN.md substitution ledger).
+
+Four trained-at-build-time models:
+
+* ``resmlp_lite``  — MLP-only residual classifier (ResMLP stand-in);
+  every layer is a linear layer -> FlexASR.
+* ``lstm_wlm_lite`` — word-level LSTM language model (LSTM-WLM stand-in)
+  -> FlexASR LSTM + linear decoder.
+* ``resnet20_lite`` — 21-conv residual CNN (ResNet-20 stand-in)
+  -> HLSCNN convolutions + FlexASR linear head.
+* ``mobilenet_lite`` — depthwise-separable CNN (MobileNet-V2 stand-in);
+  pointwise convs -> HLSCNN, depthwise (grouped) stay on host.
+
+Architectures intentionally mirror the Rust IR graphs in
+``rust/src/apps/cosim_models.rs`` op for op (same layouts: NCHW/OIHW
+convs, ``x @ w.T`` dense, i-f-g-o LSTM gates); `aot.py` exports golden
+forward outputs so the Rust side can prove the mirror exact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+IMG_SHAPE = (3, 8, 8)
+NUM_CLASSES = 4
+VOCAB = 64
+SEQ_LEN = 16
+EMBED = 32
+HIDDEN = 32
+
+# ----------------------------------------------------------------------
+# synthetic datasets (deterministic)
+# ----------------------------------------------------------------------
+
+def make_images(n, seed, template_seed=7, noise=3.0):
+    """4-class synthetic 3x8x8 images: fixed random class templates (the
+    "dataset's structure", shared across splits like `make_text`'s chain)
+    plus heavy Gaussian noise and amplitude jitter. Tuned so small models
+    reach ~90% — near their capacity, like CIFAR-10 for the paper's
+    models — which is what makes application-level accuracy sensitive to
+    accelerator numerics (the Table 4 phenomenon)."""
+    # low-frequency templates (4x4 upsampled to 8x8): spatially smooth
+    # structure that convolutional models can learn as well as MLPs
+    trng = np.random.default_rng(template_seed)
+    coarse = trng.normal(0, 1, size=(NUM_CLASSES, 3, 4, 4))
+    templates = np.repeat(np.repeat(coarse, 2, axis=2), 2, axis=3).astype(np.float32)
+    rng = np.random.default_rng(seed)
+    ys = rng.integers(0, NUM_CLASSES, size=n)
+    xs = np.zeros((n,) + IMG_SHAPE, dtype=np.float32)
+    for i in range(n):
+        amp = rng.uniform(0.7, 1.3)
+        xs[i] = templates[ys[i]] * amp + rng.normal(0, noise, size=IMG_SHAPE)
+    return xs, ys.astype(np.int32)
+
+
+def make_text(n_tokens, seed, chain_seed=42):
+    """Synthetic corpus over VOCAB tokens with strong bigram structure
+    (each token has 4 likely successors), so a trained LSTM reaches
+    perplexity far below uniform (VOCAB). The successor table (the
+    "language") is fixed by `chain_seed` so train and test splits come
+    from the same process; `seed` only varies the sampling."""
+    rng = np.random.default_rng(seed)
+    succ = np.random.default_rng(chain_seed).integers(0, VOCAB, size=(VOCAB, 4))
+    toks = np.zeros(n_tokens, dtype=np.int32)
+    cur = 0
+    for i in range(n_tokens):
+        toks[i] = cur
+        if rng.uniform() < 0.9:
+            cur = int(succ[cur, rng.integers(0, 4)])
+        else:
+            cur = int(rng.integers(0, VOCAB))
+    return toks
+
+
+# ----------------------------------------------------------------------
+# param init helpers
+# ----------------------------------------------------------------------
+
+def _dense_init(rng, m, k):
+    return (rng.normal(0, np.sqrt(2.0 / k), size=(m, k)).astype(np.float32),
+            np.zeros(m, dtype=np.float32))
+
+
+def _conv_init(rng, o, c, kh, kw):
+    fan = c * kh * kw
+    return rng.normal(0, np.sqrt(2.0 / fan), size=(o, c, kh, kw)).astype(np.float32)
+
+
+def conv2d(x, w, stride=(1, 1), pad=(1, 1), groups=1):
+    """NCHW/OIHW conv — identical semantics to tensor::ops::conv2d."""
+    return lax.conv_general_dilated(
+        x, w, window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=groups,
+    )
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608 * (x + 0.044715 * x ** 3)))
+
+
+# ----------------------------------------------------------------------
+# ResMLP-lite
+# ----------------------------------------------------------------------
+
+RESMLP_BLOCKS = 3
+RESMLP_DIM = 96
+
+def resmlp_init(seed=10):
+    rng = np.random.default_rng(seed)
+    p = {}
+    p["l0_w"], p["l0_b"] = _dense_init(rng, RESMLP_DIM, 192)
+    for i in range(RESMLP_BLOCKS):
+        p[f"blk{i}_fc1_w"], p[f"blk{i}_fc1_b"] = _dense_init(rng, RESMLP_DIM, RESMLP_DIM)
+        p[f"blk{i}_fc2_w"], p[f"blk{i}_fc2_b"] = _dense_init(rng, RESMLP_DIM, RESMLP_DIM)
+    p["head_w"], p["head_b"] = _dense_init(rng, NUM_CLASSES, RESMLP_DIM)
+    return p
+
+
+def resmlp_forward(p, x):
+    """x: [N, 3, 8, 8] -> logits [N, 4]."""
+    h = x.reshape(x.shape[0], 192)
+    h = gelu(h @ p["l0_w"].T + p["l0_b"])
+    for i in range(RESMLP_BLOCKS):
+        z = gelu(h @ p[f"blk{i}_fc1_w"].T + p[f"blk{i}_fc1_b"])
+        z = z @ p[f"blk{i}_fc2_w"].T + p[f"blk{i}_fc2_b"]
+        h = h + z
+    return h @ p["head_w"].T + p["head_b"]
+
+
+# ----------------------------------------------------------------------
+# LSTM-WLM-lite
+# ----------------------------------------------------------------------
+
+def lstm_init(seed=11):
+    rng = np.random.default_rng(seed)
+    p = {}
+    p["embed"] = rng.normal(0, 0.1, size=(VOCAB, EMBED)).astype(np.float32)
+    p["w_ih"], _ = _dense_init(rng, 4 * HIDDEN, EMBED)
+    p["w_hh"], _ = _dense_init(rng, 4 * HIDDEN, HIDDEN)
+    p["b"] = np.zeros(4 * HIDDEN, dtype=np.float32)
+    # encourage remembering at init: forget-gate bias 1
+    p["b"][HIDDEN : 2 * HIDDEN] = 1.0
+    p["head_w"], p["head_b"] = _dense_init(rng, VOCAB, HIDDEN)
+    return p
+
+
+def lstm_forward(p, tokens):
+    """tokens: [N, T] int32 -> logits [N, T, VOCAB]. Sequence output only
+    (final h/c dropped — the Appendix B simplification)."""
+    x = p["embed"][tokens]  # [N, T, E]
+    n = x.shape[0]
+    h = jnp.zeros((n, HIDDEN))
+    c = jnp.zeros((n, HIDDEN))
+
+    def step(carry, xt):
+        h, c = carry
+        gates = xt @ p["w_ih"].T + h @ p["w_hh"].T + p["b"]
+        i = jax.nn.sigmoid(gates[:, 0 * HIDDEN : 1 * HIDDEN])
+        f = jax.nn.sigmoid(gates[:, 1 * HIDDEN : 2 * HIDDEN])
+        g = jnp.tanh(gates[:, 2 * HIDDEN : 3 * HIDDEN])
+        o = jax.nn.sigmoid(gates[:, 3 * HIDDEN : 4 * HIDDEN])
+        nc = f * c + i * g
+        nh = o * jnp.tanh(nc)
+        return (nh, nc), nh
+
+    (_, _), hs = lax.scan(step, (h, c), jnp.transpose(x, (1, 0, 2)))
+    hs = jnp.transpose(hs, (1, 0, 2))  # [N, T, H]
+    return hs @ p["head_w"].T + p["head_b"]
+
+
+# ----------------------------------------------------------------------
+# ResNet-20-lite
+# ----------------------------------------------------------------------
+
+RESNET_STAGES = [(8, 1), (16, 2), (32, 2)]  # (channels, first-stride)
+RESNET_BLOCKS = 3
+
+def resnet_init(seed=12):
+    rng = np.random.default_rng(seed)
+    p = {"conv0_w": _conv_init(rng, 8, 3, 3, 3)}
+    cin = 8
+    for s, (ch, _) in enumerate(RESNET_STAGES):
+        for b in range(RESNET_BLOCKS):
+            c1_in = cin if b == 0 else ch
+            p[f"s{s}b{b}_c1_w"] = _conv_init(rng, ch, c1_in, 3, 3)
+            p[f"s{s}b{b}_c2_w"] = _conv_init(rng, ch, ch, 3, 3)
+        if cin != ch:
+            p[f"s{s}_down_w"] = _conv_init(rng, ch, cin, 1, 1)
+        cin = ch
+    p["fc_w"], p["fc_b"] = _dense_init(rng, NUM_CLASSES, 32)
+    return p
+
+
+def resnet_forward(p, x):
+    """x: [N, 3, 8, 8] -> logits [N, 4]. 21 convolutions + 1 linear."""
+    h = jax.nn.relu(conv2d(x, p["conv0_w"]))
+    for s, (ch, stride) in enumerate(RESNET_STAGES):
+        for b in range(RESNET_BLOCKS):
+            st = (stride, stride) if b == 0 else (1, 1)
+            z = jax.nn.relu(conv2d(h, p[f"s{s}b{b}_c1_w"], stride=st))
+            z = conv2d(z, p[f"s{s}b{b}_c2_w"])
+            if b == 0 and f"s{s}_down_w" in p:
+                sc = conv2d(h, p[f"s{s}_down_w"], stride=st, pad=(0, 0))
+            else:
+                sc = h
+            h = jax.nn.relu(z + sc)
+    h = jnp.mean(h, axis=(2, 3))  # global average pool -> [N, 32]
+    return h @ p["fc_w"].T + p["fc_b"]
+
+
+# ----------------------------------------------------------------------
+# MobileNet-lite
+# ----------------------------------------------------------------------
+
+MOBILENET_BLOCKS = [(8, 16), (16, 16), (16, 32), (32, 32)]
+
+def mobilenet_init(seed=13):
+    rng = np.random.default_rng(seed)
+    p = {"conv0_w": _conv_init(rng, 8, 3, 3, 3)}
+    for i, (cin, cout) in enumerate(MOBILENET_BLOCKS):
+        p[f"blk{i}_dw_w"] = _conv_init(rng, cin, 1, 3, 3)  # depthwise
+        p[f"blk{i}_pw_w"] = _conv_init(rng, cout, cin, 1, 1)  # pointwise
+    p["fc_w"], p["fc_b"] = _dense_init(rng, NUM_CLASSES, 32)
+    return p
+
+
+def mobilenet_forward(p, x):
+    """x: [N, 3, 8, 8] -> logits [N, 4]. Depthwise convs are grouped (not
+    HLSCNN-offloadable); pointwise 1x1 are offloadable."""
+    h = jax.nn.relu(conv2d(x, p["conv0_w"]))
+    for i, (cin, _) in enumerate(MOBILENET_BLOCKS):
+        h = jax.nn.relu(conv2d(h, p[f"blk{i}_dw_w"], groups=cin))
+        h = jax.nn.relu(conv2d(h, p[f"blk{i}_pw_w"], pad=(0, 0)))
+    h = jnp.mean(h, axis=(2, 3))
+    return h @ p["fc_w"].T + p["fc_b"]
+
+
+# ----------------------------------------------------------------------
+# training
+# ----------------------------------------------------------------------
+
+def train_classifier(init_fn, fwd, xs, ys, steps=400, batch=32, lr=3e-3, seed=0):
+    """Adam training of a classifier; returns (params, final test acc fn)."""
+    params = init_fn()
+    keys = sorted(params.keys())
+
+    def loss_fn(plist, xb, yb):
+        p = dict(zip(keys, plist))
+        logits = fwd(p, xb)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(logp[jnp.arange(xb.shape[0]), yb])
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    plist = [jnp.asarray(params[k]) for k in keys]
+    m = [jnp.zeros_like(p) for p in plist]
+    v = [jnp.zeros_like(p) for p in plist]
+    rng = np.random.default_rng(seed)
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, xs.shape[0], size=batch)
+        _, grads = grad_fn(plist, jnp.asarray(xs[idx]), jnp.asarray(ys[idx]))
+        for i in range(len(plist)):
+            m[i] = 0.9 * m[i] + 0.1 * grads[i]
+            v[i] = 0.999 * v[i] + 0.001 * grads[i] ** 2
+            mh = m[i] / (1 - 0.9 ** t)
+            vh = v[i] / (1 - 0.999 ** t)
+            plist[i] = plist[i] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    return {k: np.asarray(p) for k, p in zip(keys, plist)}
+
+
+def train_lm(xs_tokens, steps=400, batch=32, lr=3e-3, seed=0):
+    """Train the LSTM LM on next-token prediction over the corpus."""
+    params = lstm_init()
+    keys = sorted(params.keys())
+    ntok = xs_tokens.shape[0]
+
+    def loss_fn(plist, toks):
+        p = dict(zip(keys, plist))
+        logits = lstm_forward(p, toks[:, :-1])
+        logp = jax.nn.log_softmax(logits)
+        tgt = toks[:, 1:]
+        ll = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+    plist = [jnp.asarray(params[k]) for k in keys]
+    m = [jnp.zeros_like(p) for p in plist]
+    v = [jnp.zeros_like(p) for p in plist]
+    rng = np.random.default_rng(seed)
+    for t in range(1, steps + 1):
+        starts = rng.integers(0, ntok - SEQ_LEN - 1, size=batch)
+        toks = np.stack([xs_tokens[s : s + SEQ_LEN + 1] for s in starts])
+        _, grads = grad_fn(plist, jnp.asarray(toks))
+        for i in range(len(plist)):
+            m[i] = 0.9 * m[i] + 0.1 * grads[i]
+            v[i] = 0.999 * v[i] + 0.001 * grads[i] ** 2
+            mh = m[i] / (1 - 0.9 ** t)
+            vh = v[i] / (1 - 0.999 ** t)
+            plist[i] = plist[i] - lr * mh / (jnp.sqrt(vh) + 1e-8)
+    return {k: np.asarray(p) for k, p in zip(keys, plist)}
+
+
+def accuracy(fwd, params, xs, ys, batch=200):
+    correct = 0
+    for i in range(0, xs.shape[0], batch):
+        logits = fwd(params, jnp.asarray(xs[i : i + batch]))
+        correct += int(jnp.sum(jnp.argmax(logits, axis=-1) == ys[i : i + batch]))
+    return correct / xs.shape[0]
+
+
+def perplexity(params, tokens, n_sentences=100):
+    """Mean per-token perplexity over consecutive test sentences."""
+    total_nll, total_cnt = 0.0, 0
+    for s in range(n_sentences):
+        seq = tokens[s * (SEQ_LEN + 1) : (s + 1) * (SEQ_LEN + 1)]
+        logits = lstm_forward(params, jnp.asarray(seq[None, :-1]))
+        logp = jax.nn.log_softmax(logits)[0]
+        nll = -float(jnp.mean(logp[jnp.arange(SEQ_LEN), seq[1:]]))
+        total_nll += nll * SEQ_LEN
+        total_cnt += SEQ_LEN
+    return float(np.exp(total_nll / total_cnt))

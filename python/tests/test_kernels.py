@@ -1,0 +1,125 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes; every property asserts allclose against the
+reference implementation — the CORE correctness signal of the compile
+path (the kernels lower into the same HLO the Rust runtime executes).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import af_linear as KA
+from compile.kernels import fx_gemm as KF
+from compile.kernels import ref
+
+
+dims = st.integers(min_value=1, max_value=24)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=dims, k=dims, m=dims, seed=st.integers(0, 2**31 - 1))
+def test_af_linear_matches_ref(n, k, m, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, k)).astype(np.float32)
+    w = rng.normal(0, 0.3, (m, k)).astype(np.float32)
+    b = rng.normal(0, 0.1, (m,)).astype(np.float32)
+    got = KA.af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.ref_af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=dims, k=dims, m=dims, seed=st.integers(0, 2**31 - 1))
+def test_af_linear_tiled_grid_matches_untiled(n, k, m, seed):
+    """Tiling must be a pure scheduling choice: different tile shapes,
+    identical numerics."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, k)).astype(np.float32)
+    w = rng.normal(0, 0.3, (m, k)).astype(np.float32)
+    b = rng.normal(0, 0.1, (m,)).astype(np.float32)
+    a = KA.af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), tile_n=4, tile_m=4)
+    c = KA.af_linear(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b), tile_n=64, tile_m=256)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=dims, k=dims, m=dims, seed=st.integers(0, 2**31 - 1),
+       wbits=st.sampled_from([(8, 4), (16, 12)]))
+def test_fx_gemm_matches_ref(n, k, m, seed, wbits):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n, k)).astype(np.float32)
+    w = rng.normal(0, 0.2, (m, k)).astype(np.float32)
+    got = KF.fx_gemm(jnp.asarray(x), jnp.asarray(w), wgt_bits=wbits[0], wgt_frac=wbits[1])
+    want = ref.ref_fx_gemm(jnp.asarray(x), jnp.asarray(w),
+                           wgt_bits=wbits[0], wgt_frac=wbits[1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(c=st.integers(1, 4), o=st.integers(1, 6), hw=st.integers(4, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_hlscnn_conv_kernel_matches_direct_conv_in_16bit(c, o, hw, seed):
+    """With wide 16-bit weights the kernel conv tracks the f32 conv to
+    within a couple of activation steps."""
+    from compile.model import conv2d
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (1, c, hw, hw)).astype(np.float32)
+    w = rng.normal(0, 0.2, (o, c, 3, 3)).astype(np.float32)
+    got = KF.hlscnn_conv2d(jnp.asarray(x), jnp.asarray(w))
+    direct = conv2d(jnp.asarray(x), jnp.asarray(w))
+    step = 2.0 ** -8
+    assert np.max(np.abs(np.asarray(got) - np.asarray(direct))) < 16 * step
+
+
+def test_af_quantize_idempotent():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (64,)).astype(np.float32))
+    q1 = ref.af_quantize_tensor(x)
+    q2 = ref.af_quantize_tensor(q1)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+
+
+def test_af_quantize_relative_error_bound():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0.02, 1.0, (1000,)).astype(np.float32))
+    q = ref.af_quantize_tensor(x)
+    nz = np.asarray(q) != 0
+    rel = np.abs(np.asarray(q)[nz] - np.asarray(x)[nz]) / np.asarray(x)[nz]
+    assert rel.max() <= 2.0 ** -5 + 1e-5  # half mantissa ULP at m=4
+
+
+def test_af_quantize_zero_and_saturation():
+    q = ref.af_quantize(jnp.asarray([0.0, 100.0, -100.0, 1e-8]), bias=-7)
+    a = np.asarray(q)
+    assert a[0] == 0.0
+    assert 0 < a[1] < 2.1 and a[2] == -a[1]
+    assert a[3] == 0.0
+
+
+def test_vmem_footprint_under_tpu_budget():
+    """The §Perf structural check: one grid step of the production tile
+    shape must fit VMEM (16 MiB/core) with double buffering."""
+    # FlexASR-sized layer: n=128 tokens, k=1024, m=1024
+    fp = KA.vmem_footprint_bytes(128, 1024, 1024, tile_n=128, tile_m=128)
+    assert 2 * fp < 16 * 1024 * 1024, f"footprint {fp} too large"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_lstm_cell_ref_gates(seed):
+    """ref_lstm_cell sanity: zero weights -> h stays zero; forget-gate
+    saturation keeps c."""
+    rng = np.random.default_rng(seed)
+    H = 8
+    x = jnp.asarray(rng.normal(0, 1, (2, 4)).astype(np.float32))
+    h = jnp.zeros((2, H))
+    c = jnp.asarray(rng.normal(0, 1, (2, H)).astype(np.float32))
+    wz = jnp.zeros((4 * H, 4))
+    uz = jnp.zeros((4 * H, H))
+    b = np.zeros(4 * H, dtype=np.float32)
+    b[H : 2 * H] = 100.0  # forget gate wide open
+    nh, nc = ref.ref_lstm_cell(x, h, c, wz, uz, jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(nc), np.asarray(c), rtol=1e-5)
+    assert np.all(np.abs(np.asarray(nh)) <= 1.0)

@@ -1,0 +1,55 @@
+"""Layer-2 model tests: shapes, trainability, dataset determinism."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+def test_dataset_determinism():
+    x1, y1 = M.make_images(16, seed=5)
+    x2, y2 = M.make_images(16, seed=5)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    t1 = M.make_text(100, seed=6)
+    t2 = M.make_text(100, seed=6)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_forward_shapes():
+    x = jnp.zeros((2, 3, 8, 8))
+    assert M.resmlp_forward(M.resmlp_init(), x).shape == (2, 4)
+    assert M.resnet_forward(M.resnet_init(), x).shape == (2, 4)
+    assert M.mobilenet_forward(M.mobilenet_init(), x).shape == (2, 4)
+    toks = jnp.zeros((2, M.SEQ_LEN), dtype=jnp.int32)
+    assert M.lstm_forward(M.lstm_init(), toks).shape == (2, M.SEQ_LEN, M.VOCAB)
+
+
+def test_resnet_has_21_convs():
+    """The paper's ResNet-20 offloads 21 convolutions (Table 1 row 5)."""
+    p = M.resnet_init()
+    convs = [k for k in p if k.endswith("_w") and p[k].ndim == 4]
+    assert len(convs) == 21, sorted(convs)
+
+
+def test_classifier_learns_above_chance():
+    xs, ys = M.make_images(600, seed=7)
+    params = M.train_classifier(M.resmlp_init, M.resmlp_forward, xs, ys, steps=120)
+    acc = M.accuracy(M.resmlp_forward, params, xs[:200], ys[:200])
+    assert acc > 0.6, f"train acc {acc} barely above chance"
+
+
+def test_lm_perplexity_below_uniform():
+    toks = M.make_text(4000, seed=8)
+    params = M.train_lm(toks, steps=120)
+    ppl = M.perplexity(params, M.make_text(100 * (M.SEQ_LEN + 1), seed=9),
+                       n_sentences=20)
+    assert ppl < M.VOCAB * 0.7, f"ppl {ppl} not better than uniform"
+
+
+def test_mobilenet_depthwise_is_grouped():
+    """Depthwise convs must have singleton input-channel dim (groups=C) —
+    the reason MobileNet's dw convs are NOT HLSCNN-offloadable."""
+    p = M.mobilenet_init()
+    for i, (cin, _) in enumerate(M.MOBILENET_BLOCKS):
+        assert p[f"blk{i}_dw_w"].shape == (cin, 1, 3, 3)

@@ -1,0 +1,68 @@
+//! Micro-benchmarks of the L3 hot paths, for the §Perf optimization pass
+//! (EXPERIMENTS.md §Perf records before/after for each iteration).
+//!
+//! Hot paths, in co-sim/table-bench weight order:
+//!  1. `tensor::ops::conv2d`   — dominates ResNet/MobileNet co-sim;
+//!  2. `tensor::ops::dense`    — dominates ResMLP co-sim + im2col GEMMs;
+//!  3. e-graph saturation      — dominates Table 1;
+//!  4. SAT propagation         — dominates Table 3 (BMC);
+//!  5. FlexASR ILA fast path   — the per-invocation co-sim cost.
+
+use d2a::tensor::{ops, Tensor};
+use d2a::util::Rng;
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, reps: u32, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    println!("=== perf_hotpath: L3 hot-path micro-benchmarks ===");
+    let mut rng = Rng::new(7);
+
+    let x = Tensor::randn(&[1, 16, 8, 8], &mut rng, 1.0);
+    let w = Tensor::randn(&[16, 16, 3, 3], &mut rng, 0.2);
+    time("conv2d 1x16x8x8 * 16x16x3x3", 500, || {
+        let _ = ops::conv2d(&x, &w, (1, 1), (1, 1));
+    });
+
+    let a = Tensor::randn(&[1, 96], &mut rng, 1.0);
+    let b = Tensor::randn(&[96, 96], &mut rng, 0.2);
+    time("dense [1,96]x[96,96]", 5000, || {
+        let _ = ops::dense(&a, &b);
+    });
+    let a2 = Tensor::randn(&[64, 384], &mut rng, 1.0);
+    let b2 = Tensor::randn(&[384, 384], &mut rng, 0.2);
+    time("dense [64,384]x[384,384]", 50, || {
+        let _ = ops::dense(&a2, &b2);
+    });
+
+    let app = d2a::apps::table1::lstm_wlm();
+    time("compile LSTM-WLM (flexible, FlexASR)", 5, || {
+        let _ = d2a::compiler::compile_app(
+            &app,
+            &[d2a::ir::Target::FlexAsr],
+            d2a::rewrites::Matching::Flexible,
+            d2a::egraph::RunnerLimits::default(),
+        );
+    });
+
+    time("BMC miter 4x16 (CDCL)", 3, || {
+        let _ = d2a::verify::verify_bmc(4, 16, std::time::Duration::from_secs(120));
+    });
+
+    let fa = d2a::accel::FlexAsr::new();
+    let lx = fa.quant(&Tensor::randn(&[16, 96], &mut rng, 1.0));
+    let lw = fa.quant(&Tensor::randn(&[96, 96], &mut rng, 0.2));
+    let lb = fa.quant(&Tensor::randn(&[96], &mut rng, 0.1));
+    time("FlexASR linear ILA fast path 16x96x96", 1000, || {
+        let _ = fa.linear(&lx, &lw, &lb);
+    });
+}

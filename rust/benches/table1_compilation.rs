@@ -1,0 +1,60 @@
+//! Regenerates **Table 1** — end-to-end compilation statistics: static
+//! accelerator invocations under exact vs flexible matching for the six
+//! DL applications and three accelerators.
+//!
+//! Paper values are printed alongside for comparison. Absolute `#ops`
+//! differ from the TVM Relay import (importer expansions); the
+//! exact/flexible *invocation counts and their jumps* are the result.
+
+use d2a::apps::table1::all_apps;
+use d2a::compiler::compile_app;
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use std::time::{Duration, Instant};
+
+const PAPER: &[(&str, usize, [&str; 3])] = &[
+    ("EfficientNet", 232, ["0/35", "35/35", "0/35"]),
+    ("LSTM-WLM", 578, ["1/1", "0/0", "36/36"]),
+    ("MobileNet-V2", 757, ["0/41", "40/40", "1/41"]),
+    ("ResMLP", 343, ["0/38", "0/0", "38/38"]),
+    ("ResNet-20", 494, ["2/22", "21/21", "2/22"]),
+    ("Transformer", 872, ["0/66", "0/0", "66/66"]),
+];
+
+fn main() {
+    let limits = RunnerLimits {
+        max_iters: 8,
+        max_nodes: 150_000,
+        time_limit: Duration::from_secs(30),
+    };
+    println!("=== Table 1: end-to-end compilation statistics ===");
+    println!(
+        "{:<14} {:>6} | {:>13} {:>13} {:>13} | paper (F/H/V, #ops)",
+        "application", "#ops", "FlexASR e/f", "HLSCNN e/f", "VTA e/f"
+    );
+    let t0 = Instant::now();
+    for (app, paper) in all_apps().iter().zip(PAPER) {
+        let mut cells = Vec::new();
+        for target in [Target::FlexAsr, Target::Hlscnn, Target::Vta] {
+            let e = compile_app(app, &[target], Matching::Exact, limits.clone())
+                .invocations(target);
+            let f = compile_app(app, &[target], Matching::Flexible, limits.clone())
+                .invocations(target);
+            cells.push(format!("{e}/{f}"));
+        }
+        println!(
+            "{:<14} {:>6} | {:>13} {:>13} {:>13} | {} {} {} ({})",
+            app.name,
+            app.num_ops(),
+            cells[0],
+            cells[1],
+            cells[2],
+            paper.2[0],
+            paper.2[1],
+            paper.2[2],
+            paper.1,
+        );
+    }
+    println!("total compile time: {:.1}s", t0.elapsed().as_secs_f64());
+}

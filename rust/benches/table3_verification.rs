@@ -1,0 +1,57 @@
+//! Regenerates **Table 3** — formal verification of the FlexASR MaxPool
+//! IR-accelerator mapping: BMC (full unroll, one monolithic miter) vs
+//! CHC-style (relational per-tile invariants) runtimes across matrix
+//! sizes, on our from-scratch CDCL/bit-blasting stack (the paper used Z3
+//! on an i7-5500U with a 3-hour timeout; set D2A_VERIFY_TIMEOUT to taste).
+
+use d2a::smt::EquivResult;
+use d2a::verify::{verify_bmc, verify_chc};
+use std::time::Duration;
+
+const PAPER: &[((usize, usize), &str, &str)] = &[
+    ((2, 16), "443", "38"),
+    ((4, 16), "1976", "37"),
+    ((4, 32), "7954", "146"),
+    ((8, 64), "Timeout (>3 hrs)", "1831"),
+    ((16, 64), "Timeout (>3 hrs)", "5177"),
+];
+
+fn fmt(r: &EquivResult, secs: f64, timeout: Duration) -> String {
+    match r {
+        EquivResult::Equivalent => format!("{secs:.1}s"),
+        EquivResult::Timeout => format!("Timeout (>{}s)", timeout.as_secs()),
+        EquivResult::Counterexample(_) => "REFUTED(!)".to_string(),
+    }
+}
+
+fn main() {
+    let timeout = Duration::from_secs(
+        std::env::var("D2A_VERIFY_TIMEOUT")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(120u64),
+    );
+    println!(
+        "=== Table 3: formal verification of the FlexASR MaxPool mapping ===\n\
+         (our solver, timeout {}s; paper: Z3, 3h timeout)",
+        timeout.as_secs()
+    );
+    println!("{:<10} {:>18} {:>18} | paper BMC / CHC (s)", "matrix", "BMC", "CHC");
+    for ((r, c), pb, pc) in PAPER {
+        let bmc = verify_bmc(*r, *c, timeout);
+        let chc = verify_chc(*r, *c, timeout);
+        println!(
+            "{:<10} {:>18} {:>18} | {} / {}",
+            format!("{r} x {c}"),
+            fmt(&bmc.result, bmc.elapsed.as_secs_f64(), timeout),
+            fmt(&chc.result, chc.elapsed.as_secs_f64(), timeout),
+            pb,
+            pc
+        );
+        assert!(
+            !matches!(bmc.result, EquivResult::Counterexample(_)),
+            "mapping must never be refuted"
+        );
+        assert!(!matches!(chc.result, EquivResult::Counterexample(_)));
+    }
+}

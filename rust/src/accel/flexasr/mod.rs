@@ -1,0 +1,343 @@
+//! FlexASR — an accelerator for speech/NLP workloads (Tambe et al.,
+//! ISSCC'21) supporting RNN-family layers with the **AdaptivFloat**
+//! custom numeric type.
+//!
+//! Supported operations (Appendix A + the Table 2 mappings): linear
+//! layer, LSTM layer, layer norm, temporal max pool, temporal mean pool,
+//! attention.
+//!
+//! The ILA instruction set mirrors the paper's Fig. 5/6: `write_v`
+//! (stream data into the global buffer), `pe_cfg_rnn_layer_sizing`,
+//! `pe_cfg_mngr`, `pe_cfg_act_mngr`, `gb_cfg_mmngr`, `gb_cfg_gb_control`,
+//! `cfg_exp_bias`, `fn_start` (trigger), `read_v` / `read_status`.
+//! Tensors cross the interface as AdaptivFloat-8 codes, 16 per 128-bit
+//! MMIO beat, with per-tensor exponent biases in config registers.
+
+pub mod model;
+
+use super::Accelerator;
+use crate::ila::Ila;
+use crate::ir::{Op, Target};
+use crate::numerics::adaptivfloat::AdaptivFloatFormat;
+use crate::numerics::NumericFormat;
+use crate::tensor::{ops, Tensor};
+
+/// FlexASR datapath configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct FlexAsr {
+    /// Activation/weight storage format (AdaptivFloat, 8-bit in silicon).
+    pub af: AdaptivFloatFormat,
+    /// Accumulator / normalization internal format (wider AdaptivFloat —
+    /// the PE accumulators are not 8-bit).
+    pub af_wide: AdaptivFloatFormat,
+}
+
+impl Default for FlexAsr {
+    fn default() -> Self {
+        FlexAsr {
+            af: AdaptivFloatFormat::new(8, 3),
+            af_wide: AdaptivFloatFormat::new(16, 5),
+        }
+    }
+}
+
+impl FlexAsr {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The as-published configuration with the numerics issue the paper's
+    /// application-level validation exposed: the AdaptivFloat exponent
+    /// field is configured too narrow (1 bit), so tensors whose dynamic
+    /// range spans more than two binades lose everything below ~max/4 —
+    /// invisible at the operation level for well-scaled unit tests,
+    /// catastrophic at the application level (Table 4 rows 1-2).
+    pub fn original() -> Self {
+        FlexAsr {
+            af: AdaptivFloatFormat::new(8, 1),
+            af_wide: AdaptivFloatFormat::new(16, 3),
+        }
+    }
+
+    /// The post-report fix: 3 exponent bits (the DAC'20 configuration).
+    pub fn updated() -> Self {
+        Self::default()
+    }
+
+    /// Quantize a tensor to the 8-bit AdaptivFloat lattice.
+    pub fn quant(&self, t: &Tensor) -> Tensor {
+        self.af.quantize(t)
+    }
+
+    /// Quantize to the wide internal lattice.
+    fn quant_wide(&self, t: &Tensor) -> Tensor {
+        self.af_wide.quantize(t)
+    }
+
+    // ----- bit-accurate tensor-level op semantics ---------------------
+
+    /// Linear layer: operands on the AF8 lattice, f32 MAC array, output
+    /// re-encoded to AF8 (the PE writes results back through the
+    /// activation unit's 8-bit port).
+    pub fn linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
+        let xq = self.quant(x);
+        let wq = self.quant(w);
+        let bq = self.quant(b);
+        let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
+        self.quant(&acc)
+    }
+
+    /// LSTM layer: gate pre-activations quantized wide (accumulator
+    /// readout), activations evaluated, h/c re-encoded to AF8 every step —
+    /// so quantization error compounds across timesteps (the Table 2
+    /// LSTM > Linear error ordering).
+    pub fn lstm(&self, x: &Tensor, w_ih: &Tensor, w_hh: &Tensor, b: &Tensor) -> Tensor {
+        let (t, n, i) = (x.shape[0], x.shape[1], x.shape[2]);
+        let hidden = w_hh.shape[1];
+        let xq = self.quant(x);
+        let wiq = self.quant(w_ih);
+        let whq = self.quant(w_hh);
+        let bq = self.quant(b);
+        let mut h = Tensor::zeros(&[n, hidden]);
+        let mut c = Tensor::zeros(&[n, hidden]);
+        let mut out = vec![0.0f32; t * n * hidden];
+        for step in 0..t {
+            let xt = Tensor::new(
+                vec![n, i],
+                xq.data[step * n * i..(step + 1) * n * i].to_vec(),
+            );
+            let gates = ops::bias_add(
+                &ops::add(&ops::dense(&xt, &wiq), &ops::dense(&h, &whq)),
+                &bq,
+            );
+            let gates = self.quant_wide(&gates);
+            let mut nh = vec![0.0f32; n * hidden];
+            let mut nc = vec![0.0f32; n * hidden];
+            for bi in 0..n {
+                for u in 0..hidden {
+                    let gi = gates.data[bi * 4 * hidden + u];
+                    let gf = gates.data[bi * 4 * hidden + hidden + u];
+                    let gg = gates.data[bi * 4 * hidden + 2 * hidden + u];
+                    let go = gates.data[bi * 4 * hidden + 3 * hidden + u];
+                    let ig = 1.0 / (1.0 + (-gi).exp());
+                    let fg = 1.0 / (1.0 + (-gf).exp());
+                    let g = gg.tanh();
+                    let og = 1.0 / (1.0 + (-go).exp());
+                    let cv = fg * c.data[bi * hidden + u] + ig * g;
+                    nc[bi * hidden + u] = cv;
+                    nh[bi * hidden + u] = og * cv.tanh();
+                }
+            }
+            // h and c live in the global buffer between steps: AF8
+            h = self.quant(&Tensor::new(vec![n, hidden], nh));
+            c = self.quant(&Tensor::new(vec![n, hidden], nc));
+            out[step * n * hidden..(step + 1) * n * hidden].copy_from_slice(&h.data);
+        }
+        Tensor::new(vec![t, n, hidden], out)
+    }
+
+    /// Layer norm: statistics in the wide format, output re-encoded AF8.
+    pub fn layer_norm(&self, x: &Tensor) -> Tensor {
+        let xq = self.quant(x);
+        let y = ops::layer_norm(&xq, 1e-5);
+        let y = self.quant_wide(&y);
+        self.quant(&y)
+    }
+
+    /// Temporal max pool: comparisons over lattice values — **exact**
+    /// (max of representable values is representable; Table 2 row 6).
+    pub fn maxpool(&self, x: &Tensor) -> Tensor {
+        let xq = self.quant(x);
+        let (r, c) = (xq.shape[0], xq.shape[1]);
+        let mut out = vec![0.0f32; r / 2 * c];
+        for i in 0..r / 2 {
+            for j in 0..c {
+                out[i * c + j] =
+                    xq.data[2 * i * c + j].max(xq.data[(2 * i + 1) * c + j]);
+            }
+        }
+        Tensor::new(vec![r / 2, c], out)
+    }
+
+    /// Temporal mean pool: the mean of two lattice values is generally
+    /// *not* on the lattice, so each output is re-rounded (Table 2 row 7's
+    /// relatively large error).
+    pub fn meanpool(&self, x: &Tensor) -> Tensor {
+        let xq = self.quant(x);
+        let (r, c) = (xq.shape[0], xq.shape[1]);
+        let mut out = vec![0.0f32; r / 2 * c];
+        for i in 0..r / 2 {
+            for j in 0..c {
+                out[i * c + j] =
+                    (xq.data[2 * i * c + j] + xq.data[(2 * i + 1) * c + j]) / 2.0;
+            }
+        }
+        self.quant(&Tensor::new(vec![r / 2, c], out))
+    }
+
+    /// Attention: scores, probabilities, and the context product each pass
+    /// through the 8-bit lattice — the compounding that makes attention
+    /// the worst row of Table 2.
+    pub fn attention(&self, q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+        let qq = self.quant(q);
+        let kq = self.quant(k);
+        let vq = self.quant(v);
+        let d = qq.shape[1] as f32;
+        let scores = ops::matmul(&qq, &ops::transpose2(&kq)).map(|s| s / d.sqrt());
+        let scores = self.quant(&scores);
+        let probs = self.quant(&ops::softmax(&scores));
+        self.quant(&ops::matmul(&probs, &vq))
+    }
+}
+
+impl Accelerator for FlexAsr {
+    fn name(&self) -> &'static str {
+        "FlexASR"
+    }
+
+    fn target(&self) -> Target {
+        Target::FlexAsr
+    }
+
+    fn build_ila(&self) -> Ila {
+        model::build_ila(*self)
+    }
+
+    fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor> {
+        Some(match op {
+            Op::FlexLinear => self.linear(inputs[0], inputs[1], inputs[2]),
+            Op::FlexLstm { .. } => self.lstm(inputs[0], inputs[1], inputs[2], inputs[3]),
+            Op::FlexLstmFused { .. } => {
+                // split the fused gate matrix w = [w_ih | w_hh]
+                let (x, w, b) = (inputs[0], inputs[1], inputs[2]);
+                let e = x.shape[2];
+                let four_h = w.shape[0];
+                let h = four_h / 4;
+                let mut wih = Vec::with_capacity(four_h * e);
+                let mut whh = Vec::with_capacity(four_h * h);
+                for r in 0..four_h {
+                    wih.extend_from_slice(&w.data[r * (e + h)..r * (e + h) + e]);
+                    whh.extend_from_slice(&w.data[r * (e + h) + e..(r + 1) * (e + h)]);
+                }
+                self.lstm(
+                    x,
+                    &Tensor::new(vec![four_h, e], wih),
+                    &Tensor::new(vec![four_h, h], whh),
+                    b,
+                )
+            }
+            Op::FlexLayerNorm => self.layer_norm(inputs[0]),
+            Op::FlexMaxpool => self.maxpool(inputs[0]),
+            Op::FlexMeanpool => self.meanpool(inputs[0]),
+            Op::FlexAttention => self.attention(inputs[0], inputs[1], inputs[2]),
+            // data movement: values enter/leave the global buffer as AF8
+            Op::FlexMaxpStore | Op::FlexMaxpLoad => self.quant(inputs[0]),
+            _ => return None,
+        })
+    }
+
+    fn supported_ops(&self) -> Vec<&'static str> {
+        vec!["LinearLayer", "LSTM", "LayerNorm", "MaxPool", "MeanPool", "Attention"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn frob_err(acc: &Tensor, reference: &Tensor) -> f32 {
+        acc.rel_error(reference)
+    }
+
+    #[test]
+    fn maxpool_is_exact_on_lattice_inputs() {
+        // Table 2 row 6: 0.00% — inputs on the AF8 lattice, max is exact
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(1);
+        let x = fa.quant(&Tensor::randn(&[16, 64], &mut rng, 1.0));
+        let acc = fa.maxpool(&x);
+        let reference = crate::ir::interp::eval_op(&Op::TempMaxPool, &[&x]).unwrap();
+        assert_eq!(frob_err(&acc, &reference), 0.0);
+    }
+
+    #[test]
+    fn linear_error_small_but_nonzero() {
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(2);
+        let x = fa.quant(&Tensor::randn(&[8, 32], &mut rng, 1.0));
+        let w = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 0.3));
+        let b = fa.quant(&Tensor::randn(&[16], &mut rng, 0.1));
+        let acc = fa.linear(&x, &w, &b);
+        let reference = ops::bias_add(&ops::dense(&x, &w), &b);
+        let e = frob_err(&acc, &reference);
+        assert!(e > 0.0, "output requantization must introduce error");
+        assert!(e < 0.05, "error should be small, got {e}");
+    }
+
+    #[test]
+    fn meanpool_error_exceeds_maxpool() {
+        // the Table 2 ordering: meanpool lossy, maxpool exact
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(3);
+        let x = fa.quant(&Tensor::randn(&[16, 64], &mut rng, 1.0));
+        let acc = fa.meanpool(&x);
+        let reference = crate::ir::interp::eval_op(&Op::TempMeanPool, &[&x]).unwrap();
+        assert!(frob_err(&acc, &reference) > 0.0);
+    }
+
+    #[test]
+    fn attention_error_largest() {
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(4);
+        let q = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 1.0));
+        let k = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 1.0));
+        let v = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 1.0));
+        let acc_att = fa.attention(&q, &k, &v);
+        let ref_att = ops::attention(&q, &k, &v);
+        let e_att = frob_err(&acc_att, &ref_att);
+
+        let x = fa.quant(&Tensor::randn(&[8, 32], &mut rng, 1.0));
+        let w = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 0.3));
+        let b = fa.quant(&Tensor::randn(&[16], &mut rng, 0.1));
+        let acc_lin = fa.linear(&x, &w, &b);
+        let ref_lin = ops::bias_add(&ops::dense(&x, &w), &b);
+        let e_lin = frob_err(&acc_lin, &ref_lin);
+        assert!(
+            e_att > e_lin,
+            "attention ({e_att}) must be lossier than linear ({e_lin})"
+        );
+    }
+
+    #[test]
+    fn lstm_error_compounds_over_steps() {
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(5);
+        let mk = |shape: &[usize], s: f32, rng: &mut Rng| {
+            fa.quant(&Tensor::randn(shape, rng, s))
+        };
+        let wi = mk(&[64, 16], 0.3, &mut rng);
+        let wh = mk(&[64, 16], 0.3, &mut rng);
+        let b = mk(&[64], 0.1, &mut rng);
+        let x2 = mk(&[2, 1, 16], 1.0, &mut rng);
+        let x16 = mk(&[16, 1, 16], 1.0, &mut rng);
+        let e2 = frob_err(
+            &fa.lstm(&x2, &wi, &wh, &b),
+            &ops::lstm_sequence(&x2, &wi, &wh, &b),
+        );
+        let e16 = frob_err(
+            &fa.lstm(&x16, &wi, &wh, &b),
+            &ops::lstm_sequence(&x16, &wi, &wh, &b),
+        );
+        assert!(e16 > 0.0 && e2 > 0.0);
+        assert!(e16 >= e2 * 0.5, "longer sequences should not be *less* lossy");
+    }
+
+    #[test]
+    fn exec_op_dispatch() {
+        let fa = FlexAsr::new();
+        let x = Tensor::ones(&[2, 4]);
+        assert!(fa.exec_op(&Op::FlexMaxpool, &[&x]).is_some());
+        assert!(fa.exec_op(&Op::VtaGemm, &[&x, &x]).is_none());
+    }
+}

@@ -1,0 +1,426 @@
+//! The FlexASR ILA model over its MMIO interface (the Fig. 6 model,
+//! fleshed out): architectural state, address map, and per-instruction
+//! decode/update semantics.
+//!
+//! Tensors cross the interface as **AdaptivFloat-8 byte codes** (16 codes
+//! per 128-bit beat) with per-operand exponent biases in a config
+//! register. The device computes the output tensor's adaptive exponent
+//! bias itself and exposes it in a status register, which the driver reads
+//! back before decoding the output codes.
+
+use super::FlexAsr;
+use crate::ila::{Cmd, Ila, IlaState};
+use crate::numerics::adaptivfloat::AdaptivFloatFormat;
+use crate::tensor::{ops, Tensor};
+
+// ----- address map ----------------------------------------------------
+/// Global buffer (activations in/out): 64 KiB.
+pub const GB_BASE: u64 = 0xA050_0000;
+pub const GB_SIZE: usize = 0x1_0000;
+/// PE weight buffer: 128 KiB.
+pub const PE_WGT_BASE: u64 = 0xA060_0000;
+pub const PE_WGT_SIZE: usize = 0x2_0000;
+/// K (cols, bits 0..16) | M (rows, bits 16..32).
+pub const CFG_LAYER_SIZING: u64 = 0xA040_0010;
+/// bias_base (bits 0..32) | wgt2_base (bits 32..64), offsets into PE wgt.
+pub const CFG_MNGR: u64 = 0xA040_0020;
+/// activation function id: 0 none, 1 sigmoid, 2 tanh.
+pub const CFG_ACT: u64 = 0xA080_0010;
+/// opcode (bits 0..8) | num_rows N (bits 8..32).
+pub const CFG_GB_CONTROL: u64 = 0xA070_0010;
+/// in_base (bits 0..32) | out_base (bits 32..64), offsets into GB.
+pub const CFG_GB_MMNGR: u64 = 0xA070_0020;
+/// k_base (bits 0..32) | v_base (bits 32..64) for attention.
+pub const CFG_GB_MMNGR2: u64 = 0xA070_0030;
+/// exponent biases, one i8 per operand: in | wgt | bias | wgt2.
+pub const CFG_EXP_BIAS: u64 = 0xA030_0010;
+/// read-only: output exponent bias chosen by the device.
+pub const STATUS_OUT_BIAS: u64 = 0xA030_0020;
+/// trigger.
+pub const FN_START: u64 = 0xA000_0010;
+
+// ----- opcodes --------------------------------------------------------
+pub const OP_LINEAR: u64 = 1;
+pub const OP_LSTM: u64 = 2;
+pub const OP_MAXPOOL: u64 = 3;
+pub const OP_MEANPOOL: u64 = 4;
+pub const OP_LAYERNORM: u64 = 5;
+pub const OP_ATTENTION: u64 = 6;
+
+// ----- AdaptivFloat byte codec -----------------------------------------
+// The all-bits pattern `0x80` (negative, E=0, M=0 — the smallest negative
+// normal) is sacrificed as the canonical **zero** code, following
+// AdaptivFloat's "reserve an encoding for zero" rule. A value that would
+// encode to 0x80 is nudged one mantissa step (negligible: the very bottom
+// of the representable range).
+
+/// Encode one value to a byte code under `bias`.
+pub fn encode_byte(fmt: &AdaptivFloatFormat, v: f32, bias: i32) -> u8 {
+    debug_assert_eq!(fmt.bits, 8);
+    match fmt.encode_bits(v, bias) {
+        None => 0x80,
+        Some(0x80) => 0x81,
+        Some(b) => b as u8,
+    }
+}
+
+/// Decode one byte code under `bias`.
+pub fn decode_byte(fmt: &AdaptivFloatFormat, b: u8, bias: i32) -> f32 {
+    if b == 0x80 {
+        return 0.0;
+    }
+    fmt.decode_bits(b as u32, bias)
+}
+
+/// Encode a whole tensor; returns (codes, chosen bias).
+pub fn encode_tensor(fmt: &AdaptivFloatFormat, t: &Tensor) -> (Vec<u8>, i32) {
+    let bias = fmt.select_bias(t.max_abs());
+    (t.data.iter().map(|&v| encode_byte(fmt, v, bias)).collect(), bias)
+}
+
+/// Decode codes into a tensor of the given shape.
+pub fn decode_tensor(
+    fmt: &AdaptivFloatFormat,
+    codes: &[u8],
+    bias: i32,
+    shape: &[usize],
+) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::new(
+        shape.to_vec(),
+        codes[..n].iter().map(|&b| decode_byte(fmt, b, bias)).collect(),
+    )
+}
+
+// ----- config views ----------------------------------------------------
+
+fn sizing(s: &IlaState) -> (usize, usize) {
+    let v = s.reg("cfg_layer_sizing");
+    ((v & 0xFFFF) as usize, ((v >> 16) & 0xFFFF) as usize) // (K, M)
+}
+
+fn mngr(s: &IlaState) -> (usize, usize) {
+    let v = s.reg("cfg_mngr");
+    ((v & 0xFFFF_FFFF) as usize, (v >> 32) as usize) // (bias_base, wgt2_base)
+}
+
+fn control(s: &IlaState) -> (u64, usize) {
+    let v = s.reg("cfg_gb_control");
+    (v & 0xFF, ((v >> 8) & 0xFF_FFFF) as usize) // (opcode, num_rows)
+}
+
+fn mmngr(s: &IlaState) -> (usize, usize) {
+    let v = s.reg("cfg_gb_mmngr");
+    ((v & 0xFFFF_FFFF) as usize, (v >> 32) as usize) // (in_base, out_base)
+}
+
+fn mmngr2(s: &IlaState) -> (usize, usize) {
+    let v = s.reg("cfg_gb_mmngr2");
+    ((v & 0xFFFF_FFFF) as usize, (v >> 32) as usize) // (k_base, v_base)
+}
+
+fn exp_bias(s: &IlaState, idx: u32) -> i32 {
+    ((s.reg("cfg_exp_bias") >> (8 * idx)) & 0xFF) as i8 as i32
+}
+
+fn load_mat(
+    fmt: &AdaptivFloatFormat,
+    mem: &[u8],
+    base: usize,
+    rows: usize,
+    cols: usize,
+    bias: i32,
+) -> Tensor {
+    decode_tensor(fmt, &mem[base..base + rows * cols], bias, &[rows, cols])
+}
+
+fn store_mat(fmt: &AdaptivFloatFormat, mem: &mut [u8], base: usize, t: &Tensor) -> i32 {
+    let bias = fmt.select_bias(t.max_abs());
+    for (i, &v) in t.data.iter().enumerate() {
+        mem[base + i] = encode_byte(fmt, v, bias);
+    }
+    bias
+}
+
+/// Build the FlexASR ILA.
+pub fn build_ila(dev: FlexAsr) -> Ila {
+    let mut st = IlaState::new();
+    st.new_mem("gb_large", GB_SIZE);
+    st.new_mem("pe_weight", PE_WGT_SIZE);
+    st.new_bv("cfg_layer_sizing", 32);
+    st.new_bv("cfg_mngr", 64);
+    st.new_bv("cfg_act", 8);
+    st.new_bv("cfg_gb_control", 32);
+    st.new_bv("cfg_gb_mmngr", 64);
+    st.new_bv("cfg_gb_mmngr2", 64);
+    st.new_bv("cfg_exp_bias", 32);
+    st.new_bv("status_out_bias", 8);
+    st.new_bv("busy", 1);
+    let mut ila = Ila::new("FlexASR_ILA", st);
+
+    // -- data movement ------------------------------------------------
+    ila.instr(
+        "write_v",
+        |c, _| c.is_write && (GB_BASE..GB_BASE + GB_SIZE as u64).contains(&c.addr),
+        |c, s| {
+            let off = (c.addr - GB_BASE) as usize;
+            s.mem_mut("gb_large")[off..off + 16].copy_from_slice(&c.data);
+            Ok(None)
+        },
+    );
+    ila.instr(
+        "read_v",
+        |c, _| !c.is_write && (GB_BASE..GB_BASE + GB_SIZE as u64).contains(&c.addr),
+        |c, s| {
+            let off = (c.addr - GB_BASE) as usize;
+            let mut out = [0u8; 16];
+            out.copy_from_slice(&s.mem("gb_large")[off..off + 16]);
+            Ok(Some(out))
+        },
+    );
+    ila.instr(
+        "write_wgt",
+        |c, _| {
+            c.is_write && (PE_WGT_BASE..PE_WGT_BASE + PE_WGT_SIZE as u64).contains(&c.addr)
+        },
+        |c, s| {
+            let off = (c.addr - PE_WGT_BASE) as usize;
+            s.mem_mut("pe_weight")[off..off + 16].copy_from_slice(&c.data);
+            Ok(None)
+        },
+    );
+
+    // -- configuration (one instruction per register, as in Fig. 6) ----
+    let cfg_regs: &[(&str, u64, &str)] = &[
+        ("pe_cfg_rnn_layer_sizing", CFG_LAYER_SIZING, "cfg_layer_sizing"),
+        ("pe_cfg_mngr", CFG_MNGR, "cfg_mngr"),
+        ("pe_cfg_act_mngr", CFG_ACT, "cfg_act"),
+        ("gb_cfg_gb_control", CFG_GB_CONTROL, "cfg_gb_control"),
+        ("gb_cfg_mmngr_gb_large", CFG_GB_MMNGR, "cfg_gb_mmngr"),
+        ("gb_cfg_mmngr2", CFG_GB_MMNGR2, "cfg_gb_mmngr2"),
+        ("cfg_exp_bias", CFG_EXP_BIAS, "cfg_exp_bias"),
+    ];
+    for &(name, addr, reg) in cfg_regs {
+        let reg = reg.to_string();
+        ila.instr(
+            name,
+            move |c, _| c.is_write && c.addr == addr,
+            move |c, s| {
+                s.set_reg(&reg, c.data_u64());
+                Ok(None)
+            },
+        );
+    }
+    ila.instr(
+        "read_status_out_bias",
+        |c, _| !c.is_write && c.addr == STATUS_OUT_BIAS,
+        |_, s| {
+            let mut out = [0u8; 16];
+            out[0] = s.reg("status_out_bias") as u8;
+            Ok(Some(out))
+        },
+    );
+
+    // -- fn_start: the trigger instruction ------------------------------
+    ila.instr(
+        "fn_start",
+        |c, _| c.is_write && c.addr == FN_START && c.data_u64() == 1,
+        move |_, s| {
+            let (opcode, n) = control(s);
+            let (k, m) = sizing(s);
+            let (in_base, out_base) = mmngr(s);
+            let (bias_base, wgt2_base) = mngr(s);
+            let b_in = exp_bias(s, 0);
+            let b_wgt = exp_bias(s, 1);
+            let b_bias = exp_bias(s, 2);
+            let b_wgt2 = exp_bias(s, 3);
+            let fmt = dev.af;
+
+            let result: Tensor = match opcode {
+                OP_LINEAR => {
+                    let x = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in);
+                    let w = load_mat(&fmt, s.mem("pe_weight"), 0, m, k, b_wgt);
+                    let bv =
+                        load_mat(&fmt, s.mem("pe_weight"), bias_base, 1, m, b_bias)
+                            .reshape(&[m]);
+                    let acc = ops::bias_add(&ops::dense(&x, &w), &bv);
+                    match s.reg("cfg_act") {
+                        1 => ops::sigmoid(&acc),
+                        2 => ops::tanh(&acc),
+                        _ => acc,
+                    }
+                }
+                OP_LSTM => {
+                    // x: n rows of k inputs; w_ih [4H,K] at 0; w_hh [4H,H]
+                    // at wgt2_base; bias [4H] at bias_base. m = 4H.
+                    let h = m / 4;
+                    let x = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in)
+                        .reshape(&[n, 1, k]);
+                    let wi = load_mat(&fmt, s.mem("pe_weight"), 0, m, k, b_wgt);
+                    let wh =
+                        load_mat(&fmt, s.mem("pe_weight"), wgt2_base, m, h, b_wgt2);
+                    let bv =
+                        load_mat(&fmt, s.mem("pe_weight"), bias_base, 1, m, b_bias)
+                            .reshape(&[m]);
+                    dev.lstm(&x, &wi, &wh, &bv).reshape(&[n, h])
+                }
+                OP_MAXPOOL => {
+                    let x = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in);
+                    dev.maxpool(&x)
+                }
+                OP_MEANPOOL => {
+                    let x = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in);
+                    dev.meanpool(&x)
+                }
+                OP_LAYERNORM => {
+                    let x = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in);
+                    dev.layer_norm(&x)
+                }
+                OP_ATTENTION => {
+                    let (k_base, v_base) = mmngr2(s);
+                    let q = load_mat(&fmt, s.mem("gb_large"), in_base, n, k, b_in);
+                    let kk = load_mat(&fmt, s.mem("gb_large"), k_base, n, k, b_wgt);
+                    let v = load_mat(&fmt, s.mem("gb_large"), v_base, n, m, b_wgt2);
+                    dev.attention(&q, &kk, &v)
+                }
+                other => return Err(format!("unknown opcode {other}")),
+            };
+            // outputs pass through the 8-bit port: encode (which also
+            // performs the lattice rounding) and record the chosen bias
+            let out_bias = store_mat(&fmt, s.mem_mut("gb_large"), out_base, &result);
+            s.set_reg("status_out_bias", out_bias as u8 as u64);
+            Ok(None)
+        },
+    );
+    ila
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ila::sim::IlaSim;
+    use crate::util::Rng;
+
+    /// Write a code buffer into device memory via 16-byte MMIO beats.
+    fn stream(sim: &mut IlaSim, base: u64, codes: &[u8]) {
+        for (i, chunk) in codes.chunks(16).enumerate() {
+            let mut data = [0u8; 16];
+            data[..chunk.len()].copy_from_slice(chunk);
+            sim.step(&Cmd::write(base + 16 * i as u64, data)).unwrap();
+        }
+    }
+
+    fn read_back(sim: &mut IlaSim, base: u64, nbytes: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(nbytes);
+        let mut addr = base;
+        while out.len() < nbytes {
+            let d = sim.step(&Cmd::read(addr)).unwrap().unwrap();
+            out.extend_from_slice(&d);
+            addr += 16;
+        }
+        out.truncate(nbytes);
+        out
+    }
+
+    #[test]
+    fn codec_roundtrip_on_lattice() {
+        let fmt = AdaptivFloatFormat::new(8, 3);
+        let mut rng = Rng::new(11);
+        let bias = -4;
+        for _ in 0..500 {
+            let v = fmt.quantize_value(rng.uniform_in(-7.0, 7.0), bias);
+            let b = encode_byte(&fmt, v, bias);
+            let back = decode_byte(&fmt, b, bias);
+            assert!(
+                (back - v).abs() <= 1e-6 * v.abs().max(1e-3),
+                "v={v} back={back}"
+            );
+        }
+        assert_eq!(decode_byte(&fmt, 0x80, bias), 0.0);
+    }
+
+    /// VT3-style consistency: the MMIO-level ILA must compute the same
+    /// linear layer as the tensor-level fast path.
+    #[test]
+    fn mmio_matches_tensor_linear() {
+        let dev = FlexAsr::new();
+        let fmt = dev.af;
+        let mut rng = Rng::new(21);
+        let (n, k, m) = (4usize, 16usize, 8usize);
+        let x = dev.quant(&Tensor::randn(&[n, k], &mut rng, 1.0));
+        let w = dev.quant(&Tensor::randn(&[m, k], &mut rng, 0.3));
+        let b = dev.quant(&Tensor::randn(&[m], &mut rng, 0.1));
+
+        let (xc, xb) = encode_tensor(&fmt, &x);
+        let (wc, wb) = encode_tensor(&fmt, &w);
+        let (bc, bb) = encode_tensor(&fmt, &b);
+        // feed the *codec-roundtripped* values to the fast path so both
+        // sides see bit-identical operands
+        let x2 = decode_tensor(&fmt, &xc, xb, &[n, k]);
+        let w2 = decode_tensor(&fmt, &wc, wb, &[m, k]);
+        let b2 = decode_tensor(&fmt, &bc, bb, &[m]);
+        let expect = dev.linear(&x2, &w2, &b2);
+
+        let mut sim = IlaSim::new(build_ila(dev));
+        stream(&mut sim, GB_BASE, &xc);
+        stream(&mut sim, PE_WGT_BASE, &wc);
+        let bias_base = 4096u64;
+        stream(&mut sim, PE_WGT_BASE + bias_base, &bc);
+        sim.step(&Cmd::write_u64(CFG_LAYER_SIZING, (k as u64) | ((m as u64) << 16)))
+            .unwrap();
+        sim.step(&Cmd::write_u64(CFG_MNGR, bias_base)).unwrap();
+        sim.step(&Cmd::write_u64(CFG_GB_CONTROL, OP_LINEAR | ((n as u64) << 8)))
+            .unwrap();
+        let out_base = 8192u64;
+        sim.step(&Cmd::write_u64(CFG_GB_MMNGR, out_base << 32)).unwrap();
+        let eb = (xb as u8 as u64)
+            | ((wb as u8 as u64) << 8)
+            | ((bb as u8 as u64) << 16);
+        sim.step(&Cmd::write_u64(CFG_EXP_BIAS, eb)).unwrap();
+        sim.step(&Cmd::write_u64(FN_START, 1)).unwrap();
+
+        let ob = sim.step(&Cmd::read(STATUS_OUT_BIAS)).unwrap().unwrap()[0] as i8 as i32;
+        let codes = read_back(&mut sim, GB_BASE + out_base, n * m);
+        let got = decode_tensor(&fmt, &codes, ob, &[n, m]);
+        assert!(
+            got.max_abs_diff(&expect) < 1e-5,
+            "MMIO path diverges from tensor path: {:?} vs {:?}",
+            got.data,
+            expect.data
+        );
+    }
+
+    #[test]
+    fn mmio_matches_tensor_maxpool() {
+        let dev = FlexAsr::new();
+        let fmt = dev.af;
+        let mut rng = Rng::new(23);
+        let (r, c) = (8usize, 32usize);
+        let x = dev.quant(&Tensor::randn(&[r, c], &mut rng, 1.0));
+        let (xc, xb) = encode_tensor(&fmt, &x);
+        let x2 = decode_tensor(&fmt, &xc, xb, &[r, c]);
+        let expect = dev.maxpool(&x2);
+
+        let mut sim = IlaSim::new(build_ila(dev));
+        stream(&mut sim, GB_BASE, &xc);
+        sim.step(&Cmd::write_u64(CFG_LAYER_SIZING, c as u64)).unwrap();
+        sim.step(&Cmd::write_u64(CFG_GB_CONTROL, OP_MAXPOOL | ((r as u64) << 8)))
+            .unwrap();
+        let out_base = 4096u64;
+        sim.step(&Cmd::write_u64(CFG_GB_MMNGR, out_base << 32)).unwrap();
+        sim.step(&Cmd::write_u64(CFG_EXP_BIAS, xb as u8 as u64)).unwrap();
+        sim.step(&Cmd::write_u64(FN_START, 1)).unwrap();
+        let ob = sim.step(&Cmd::read(STATUS_OUT_BIAS)).unwrap().unwrap()[0] as i8 as i32;
+        let codes = read_back(&mut sim, GB_BASE + out_base, r / 2 * c);
+        let got = decode_tensor(&fmt, &codes, ob, &[r / 2, c]);
+        assert!(got.max_abs_diff(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn bad_opcode_is_an_update_error() {
+        let dev = FlexAsr::new();
+        let mut sim = IlaSim::new(build_ila(dev));
+        sim.step(&Cmd::write_u64(CFG_GB_CONTROL, 99)).unwrap();
+        assert!(sim.step(&Cmd::write_u64(FN_START, 1)).is_err());
+    }
+}

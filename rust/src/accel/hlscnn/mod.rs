@@ -1,0 +1,161 @@
+//! HLSCNN — a coarse-grained 2-D convolution accelerator (Whatmough et
+//! al., VLSI'19) operating on **8/16-bit fixed point** data.
+//!
+//! One supported operation (Appendix A): non-grouped 2-D convolution.
+//! Weights are stored in a narrow fixed-point format — **8-bit in the
+//! original design** — while activations use 16-bit fixed point and MACs
+//! accumulate in wide integers. Table 4's co-design case study: the 8-bit
+//! weight store quantizes trained CIFAR conv weights so hard that
+//! application accuracy collapses (91.55% → 29.15% for ResNet-20);
+//! widening the weight store to 16 bits recovers it. Both configurations
+//! are modeled here via [`HlscnnConfig`].
+
+pub mod model;
+
+use super::Accelerator;
+use crate::ila::Ila;
+use crate::ir::{Op, Target};
+use crate::numerics::fixed_point::FixedPointFormat;
+use crate::numerics::NumericFormat;
+use crate::tensor::{ops, Tensor};
+
+/// HLSCNN numerics configuration — the co-design knob of Table 4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HlscnnConfig {
+    /// Weight storage format.
+    pub weight_fmt: FixedPointFormat,
+    /// Activation (feature map) format.
+    pub act_fmt: FixedPointFormat,
+}
+
+impl HlscnnConfig {
+    /// The original silicon: weights share the 8-bit fixed-point format
+    /// that the accumulator path needs for its value range (few fraction
+    /// bits) — which quantizes trained conv weights to a handful of
+    /// coarse steps. This is the Table 4 root cause ("weight data values
+    /// ... heavily quantized by its 8-bit fixed point data type due to a
+    /// narrower value range").
+    pub fn original() -> Self {
+        HlscnnConfig {
+            weight_fmt: FixedPointFormat::new(8, 2),
+            act_fmt: FixedPointFormat::new(16, 8),
+        }
+    }
+
+    /// The developer fix from the Table 4 case study: 16-bit weights.
+    pub fn updated() -> Self {
+        HlscnnConfig {
+            weight_fmt: FixedPointFormat::new(16, 12),
+            act_fmt: FixedPointFormat::new(16, 8),
+        }
+    }
+}
+
+/// The HLSCNN accelerator model.
+#[derive(Debug, Clone, Copy)]
+pub struct Hlscnn {
+    pub cfg: HlscnnConfig,
+}
+
+impl Default for Hlscnn {
+    fn default() -> Self {
+        Hlscnn { cfg: HlscnnConfig::updated() }
+    }
+}
+
+impl Hlscnn {
+    pub fn new(cfg: HlscnnConfig) -> Self {
+        Hlscnn { cfg }
+    }
+
+    /// Bit-accurate 2-D convolution: weights and activations snapped to
+    /// their fixed-point lattices, wide MAC accumulation, output
+    /// requantized to the activation format.
+    pub fn conv2d(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+    ) -> Tensor {
+        let xq = self.cfg.act_fmt.quantize(x);
+        let wq = self.cfg.weight_fmt.quantize(w);
+        // both operand lattices are dyadic, so f32 conv over lattice
+        // values reproduces the integer MAC datapath exactly at these
+        // magnitudes; the lossy step is the output requantization.
+        let acc = ops::conv2d(&xq, &wq, stride, pad);
+        self.cfg.act_fmt.quantize(&acc)
+    }
+}
+
+impl Accelerator for Hlscnn {
+    fn name(&self) -> &'static str {
+        "HLSCNN"
+    }
+
+    fn target(&self) -> Target {
+        Target::Hlscnn
+    }
+
+    fn build_ila(&self) -> Ila {
+        model::build_ila(*self)
+    }
+
+    fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor> {
+        match op {
+            Op::HlscnnConv2d { stride, pad } => {
+                Some(self.conv2d(inputs[0], inputs[1], *stride, *pad))
+            }
+            _ => None,
+        }
+    }
+
+    fn supported_ops(&self) -> Vec<&'static str> {
+        vec!["Conv2D"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn conv_error_nonzero_under_quantization() {
+        let dev = Hlscnn::new(HlscnnConfig::updated());
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[1, 3, 8, 8], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.3);
+        let acc = dev.conv2d(&x, &w, (1, 1), (1, 1));
+        let reference = ops::conv2d(&x, &w, (1, 1), (1, 1));
+        let e = acc.rel_error(&reference);
+        assert!(e > 0.0 && e < 0.05, "e={e}");
+    }
+
+    #[test]
+    fn original_8bit_much_lossier_than_updated_16bit() {
+        // the Table 4 root cause in miniature
+        let mut rng = Rng::new(32);
+        let x = Tensor::randn(&[1, 3, 8, 8], &mut rng, 1.0);
+        // trained conv weights: small typical scale
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.08);
+        let reference = ops::conv2d(&x, &w, (1, 1), (1, 1));
+        let e8 = Hlscnn::new(HlscnnConfig::original())
+            .conv2d(&x, &w, (1, 1), (1, 1))
+            .rel_error(&reference);
+        let e16 = Hlscnn::new(HlscnnConfig::updated())
+            .conv2d(&x, &w, (1, 1), (1, 1))
+            .rel_error(&reference);
+        assert!(
+            e8 > 5.0 * e16,
+            "8-bit ({e8}) must be far lossier than 16-bit ({e16})"
+        );
+    }
+
+    #[test]
+    fn exec_op_rejects_foreign_ops() {
+        let dev = Hlscnn::default();
+        let t = Tensor::ones(&[2, 2]);
+        assert!(dev.exec_op(&Op::FlexMaxpool, &[&t]).is_none());
+    }
+}

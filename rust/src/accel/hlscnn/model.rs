@@ -1,0 +1,290 @@
+//! The HLSCNN ILA model over its MMIO interface.
+//!
+//! Feature maps cross the interface as 16-bit fixed-point codes (8 per
+//! 128-bit beat, little-endian i16); weights as codes in the configured
+//! weight format (i8 or i16 depending on [`HlscnnConfig`]). HLSCNN is
+//! NHWC internally (§4.1); the driver performs the NCHW→NHWC conversion,
+//! and the ILA stores the feature map in NHWC order.
+
+use super::Hlscnn;
+use crate::ila::{Cmd, Ila, IlaState};
+use crate::tensor::Tensor;
+
+// ----- address map ------------------------------------------------------
+/// Activation (feature map) buffer: 128 KiB.
+pub const ACT_BASE: u64 = 0xB010_0000;
+pub const ACT_SIZE: usize = 0x2_0000;
+/// Weight buffer: 128 KiB.
+pub const WGT_BASE: u64 = 0xB020_0000;
+pub const WGT_SIZE: usize = 0x2_0000;
+/// Output buffer: 128 KiB.
+pub const OUT_BASE: u64 = 0xB030_0000;
+pub const OUT_SIZE: usize = 0x2_0000;
+/// in channels C (0..12) | H (12..24) | W (24..36) | out channels O (36..48).
+pub const CFG_SHAPE: u64 = 0xB000_0010;
+/// KH (0..8) | KW (8..16) | SH (16..24) | SW (24..32) | PH (32..40) | PW (40..48).
+pub const CFG_KERNEL: u64 = 0xB000_0020;
+/// trigger.
+pub const CFG_START: u64 = 0xB000_0030;
+
+fn i16_store(mem: &mut [u8], base: usize, vals: impl Iterator<Item = i16>) {
+    for (i, v) in vals.enumerate() {
+        mem[base + 2 * i..base + 2 * i + 2].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn i16_load(mem: &[u8], base: usize, n: usize) -> Vec<i16> {
+    (0..n)
+        .map(|i| i16::from_le_bytes(mem[base + 2 * i..base + 2 * i + 2].try_into().unwrap()))
+        .collect()
+}
+
+/// Encode an NCHW activation tensor into the device's NHWC i16 layout.
+pub fn encode_act_nhwc(dev: &Hlscnn, x: &Tensor) -> Vec<u8> {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let fmt = dev.cfg.act_fmt;
+    let mut out = vec![0u8; n * c * h * w * 2];
+    let mut idx = 0;
+    for b in 0..n {
+        for y in 0..h {
+            for xw in 0..w {
+                for ch in 0..c {
+                    let v = x.data[((b * c + ch) * h + y) * w + xw];
+                    let code = fmt.encode(v) as i16;
+                    out[2 * idx..2 * idx + 2].copy_from_slice(&code.to_le_bytes());
+                    idx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Encode an OIHW weight tensor into the device's weight layout (O-major,
+/// per-filter HWC order), in the configured weight width (always shipped
+/// as i16 codes on the wire; the device re-truncates to its store width).
+pub fn encode_wgt(dev: &Hlscnn, w: &Tensor) -> Vec<u8> {
+    let (o, c, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let fmt = dev.cfg.weight_fmt;
+    let mut out = vec![0u8; o * c * kh * kw * 2];
+    let mut idx = 0;
+    for oc in 0..o {
+        for dy in 0..kh {
+            for dx in 0..kw {
+                for ch in 0..c {
+                    let v = w.data[((oc * c + ch) * kh + dy) * kw + dx];
+                    let code = fmt.encode(v) as i16;
+                    out[2 * idx..2 * idx + 2].copy_from_slice(&code.to_le_bytes());
+                    idx += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decode the device's NHWC i16 output buffer back to an NCHW tensor.
+pub fn decode_out_nchw(dev: &Hlscnn, codes: &[i16], shape: &[usize]) -> Tensor {
+    let (n, o, oh, ow) = (shape[0], shape[1], shape[2], shape[3]);
+    let fmt = dev.cfg.act_fmt;
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    let mut idx = 0;
+    for b in 0..n {
+        for y in 0..oh {
+            for xw in 0..ow {
+                for ch in 0..o {
+                    out[((b * o + ch) * oh + y) * ow + xw] = fmt.decode(codes[idx] as i64);
+                    idx += 1;
+                }
+            }
+        }
+    }
+    Tensor::new(shape.to_vec(), out)
+}
+
+/// Build the HLSCNN ILA (batch-1 device; the driver loops over batch).
+pub fn build_ila(dev: Hlscnn) -> Ila {
+    let mut st = IlaState::new();
+    st.new_mem("act", ACT_SIZE);
+    st.new_mem("wgt", WGT_SIZE);
+    st.new_mem("out", OUT_SIZE);
+    st.new_bv("cfg_shape", 48);
+    st.new_bv("cfg_kernel", 48);
+    let mut ila = Ila::new("HLSCNN_ILA", st);
+
+    for (name, base, size, mem) in [
+        ("wr_act", ACT_BASE, ACT_SIZE as u64, "act"),
+        ("wr_wgt", WGT_BASE, WGT_SIZE as u64, "wgt"),
+    ] {
+        ila.instr(
+            name,
+            move |c, _| c.is_write && (base..base + size).contains(&c.addr),
+            move |c, s| {
+                let off = (c.addr - base) as usize;
+                s.mem_mut(mem)[off..off + 16].copy_from_slice(&c.data);
+                Ok(None)
+            },
+        );
+    }
+    ila.instr(
+        "rd_out",
+        |c, _| !c.is_write && (OUT_BASE..OUT_BASE + OUT_SIZE as u64).contains(&c.addr),
+        |c, s| {
+            let off = (c.addr - OUT_BASE) as usize;
+            let mut out = [0u8; 16];
+            out.copy_from_slice(&s.mem("out")[off..off + 16]);
+            Ok(Some(out))
+        },
+    );
+    for (name, addr, reg) in [
+        ("cfg_conv_shape", CFG_SHAPE, "cfg_shape"),
+        ("cfg_conv_kernel", CFG_KERNEL, "cfg_kernel"),
+    ] {
+        let reg = reg.to_string();
+        ila.instr(
+            name,
+            move |c, _| c.is_write && c.addr == addr,
+            move |c, s| {
+                s.set_reg(&reg, c.data_u64());
+                Ok(None)
+            },
+        );
+    }
+
+    ila.instr(
+        "conv_start",
+        |c, _| c.is_write && c.addr == CFG_START && c.data_u64() == 1,
+        move |_, s| {
+            let shp = s.reg("cfg_shape");
+            let (c_in, h, w, o) = (
+                (shp & 0xFFF) as usize,
+                ((shp >> 12) & 0xFFF) as usize,
+                ((shp >> 24) & 0xFFF) as usize,
+                ((shp >> 36) & 0xFFF) as usize,
+            );
+            let krn = s.reg("cfg_kernel");
+            let (kh, kw, sh, sw, ph, pw) = (
+                (krn & 0xFF) as usize,
+                ((krn >> 8) & 0xFF) as usize,
+                ((krn >> 16) & 0xFF) as usize,
+                ((krn >> 24) & 0xFF) as usize,
+                ((krn >> 32) & 0xFF) as usize,
+                ((krn >> 40) & 0xFF) as usize,
+            );
+            if kh == 0 || kw == 0 || sh == 0 || sw == 0 {
+                return Err("kernel/stride not configured".into());
+            }
+            let oh = (h + 2 * ph).checked_sub(kh).ok_or("kernel too large")? / sh + 1;
+            let ow = (w + 2 * pw).checked_sub(kw).ok_or("kernel too large")? / sw + 1;
+
+            let act_fmt = dev.cfg.act_fmt;
+            let wgt_fmt = dev.cfg.weight_fmt;
+            let acts = i16_load(s.mem("act"), 0, h * w * c_in);
+            let wgts = i16_load(s.mem("wgt"), 0, o * kh * kw * c_in);
+            // integer conv with 64-bit accumulation over NHWC layout; the
+            // device re-truncates weight codes to its store width
+            let mut out_codes = vec![0i16; oh * ow * o];
+            for y in 0..oh {
+                for xw in 0..ow {
+                    for oc in 0..o {
+                        let mut acc: i64 = 0;
+                        for dy in 0..kh {
+                            let iy = (y * sh + dy) as isize - ph as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = (xw * sw + dx) as isize - pw as isize;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                for ch in 0..c_in {
+                                    let a = acts
+                                        [(iy as usize * w + ix as usize) * c_in + ch]
+                                        as i64;
+                                    let wv = wgt_fmt.encode(wgt_fmt.decode(
+                                        wgts[((oc * kh + dy) * kw + dx) * c_in + ch]
+                                            as i64,
+                                    ));
+                                    acc += a * wv;
+                                }
+                            }
+                        }
+                        // acc has act_frac + wgt_frac fractional bits;
+                        // shift back to the activation format, saturating
+                        let val = acc as f64
+                            * 0.5f64.powi(
+                                (act_fmt.frac_bits + wgt_fmt.frac_bits) as i32,
+                            );
+                        out_codes[(y * ow + xw) * o + oc] =
+                            act_fmt.encode(val as f32) as i16;
+                    }
+                }
+            }
+            i16_store(s.mem_mut("out"), 0, out_codes.into_iter());
+            Ok(None)
+        },
+    );
+    ila
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::hlscnn::HlscnnConfig;
+    use crate::ila::sim::IlaSim;
+    use crate::util::Rng;
+
+    fn stream(sim: &mut IlaSim, base: u64, bytes: &[u8]) {
+        for (i, chunk) in bytes.chunks(16).enumerate() {
+            let mut data = [0u8; 16];
+            data[..chunk.len()].copy_from_slice(chunk);
+            sim.step(&Cmd::write(base + 16 * i as u64, data)).unwrap();
+        }
+    }
+
+    /// VT3-style consistency: MMIO model vs tensor-level fast path.
+    #[test]
+    fn mmio_matches_tensor_conv() {
+        let dev = Hlscnn::new(HlscnnConfig::updated());
+        let mut rng = Rng::new(41);
+        let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+        let expect = dev.conv2d(&x, &w, (1, 1), (1, 1));
+
+        let mut sim = IlaSim::new(build_ila(dev));
+        stream(&mut sim, ACT_BASE, &encode_act_nhwc(&dev, &x));
+        stream(&mut sim, WGT_BASE, &encode_wgt(&dev, &w));
+        let shape_reg = 3u64 | (6 << 12) | (6 << 24) | (4 << 36);
+        sim.step(&Cmd::write_u64(CFG_SHAPE, shape_reg)).unwrap();
+        let kern_reg =
+            3u64 | (3 << 8) | (1 << 16) | (1 << 24) | (1 << 32) | (1 << 40);
+        sim.step(&Cmd::write_u64(CFG_KERNEL, kern_reg)).unwrap();
+        sim.step(&Cmd::write_u64(CFG_START, 1)).unwrap();
+
+        let n_out = 4 * 6 * 6;
+        let mut codes = Vec::new();
+        let mut addr = OUT_BASE;
+        while codes.len() < n_out {
+            let d = sim.step(&Cmd::read(addr)).unwrap().unwrap();
+            for pair in d.chunks(2) {
+                codes.push(i16::from_le_bytes(pair.try_into().unwrap()));
+            }
+            addr += 16;
+        }
+        codes.truncate(n_out);
+        let got = decode_out_nchw(&dev, &codes, &[1, 4, 6, 6]);
+        assert!(
+            got.max_abs_diff(&expect) <= dev.cfg.act_fmt.step() + 1e-6,
+            "max diff {}",
+            got.max_abs_diff(&expect)
+        );
+    }
+
+    #[test]
+    fn trigger_without_config_errors() {
+        let dev = Hlscnn::default();
+        let mut sim = IlaSim::new(build_ila(dev));
+        assert!(sim.step(&Cmd::write_u64(CFG_START, 1)).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! Accelerator models: FlexASR, HLSCNN, VTA (§4.1).
+//!
+//! Each accelerator provides two *consistent* views of the same
+//! operational semantics:
+//!
+//! 1. a full **ILA model** over its MMIO interface ([`Accelerator::
+//!    build_ila`]) — config registers, buffers, trigger instructions —
+//!    executed by [`crate::ila::sim::IlaSim`] (used by codegen/SoC
+//!    deployment and the formal/driver-level tests), and
+//! 2. a **tensor-level bit-accurate fast path** ([`Accelerator::exec_op`])
+//!    computing the same custom-numerics results directly over tensors
+//!    (used by the co-simulation inner loop, where 2000-image sweeps make
+//!    byte-level MMIO emulation pointlessly slow).
+//!
+//! Consistency between the two is itself tested (`mmio_matches_tensor_*`),
+//! which is our VT3-style check: the instruction-interface model against a
+//! second implementation of the semantics.
+
+pub mod flexasr;
+pub mod hlscnn;
+pub mod vta;
+
+pub use flexasr::FlexAsr;
+pub use hlscnn::{Hlscnn, HlscnnConfig};
+pub use vta::Vta;
+
+use crate::ila::Ila;
+use crate::ir::{Op, Target};
+use crate::tensor::Tensor;
+
+/// A supported accelerator.
+pub trait Accelerator: Send + Sync {
+    /// Human-readable name.
+    fn name(&self) -> &'static str;
+
+    /// Which [`Target`] this accelerator implements.
+    fn target(&self) -> Target;
+
+    /// Build the full MMIO-level ILA model.
+    fn build_ila(&self) -> Ila;
+
+    /// Execute one accelerator IR op with bit-accurate custom numerics.
+    /// Returns `None` when the op does not belong to this accelerator.
+    fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor>;
+
+    /// Names of the supported operations (Appendix A).
+    fn supported_ops(&self) -> Vec<&'static str>;
+}
+
+/// Look up the accelerator that owns `op` among the given set.
+pub fn accel_for<'a>(
+    accels: &'a [Box<dyn Accelerator>],
+    op: &Op,
+) -> Option<&'a dyn Accelerator> {
+    let t = op.target();
+    accels.iter().map(|a| a.as_ref()).find(|a| a.target() == t)
+}

@@ -1,0 +1,181 @@
+//! Op-for-op IR mirrors of the trained build-time models
+//! (`python/compile/model.py`) for application-level co-simulation
+//! (Table 4). The integration test `integration_runtime` proves each
+//! mirror equal to the JAX original via the exported goldens.
+
+use super::App;
+use crate::ir::shape::Shape;
+use crate::ir::{GraphBuilder, Id};
+use std::collections::HashMap;
+
+const DIM: usize = 96;
+const BLOCKS: usize = 3;
+
+fn sh(env: &mut HashMap<String, Shape>, name: &str, s: &[usize]) {
+    env.insert(name.to_string(), s.to_vec());
+}
+
+/// ResMLP-lite: 8 linear layers, all FlexASR-offloadable.
+pub fn resmlp_lite() -> App {
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("x");
+    sh(&mut env, "x", &[1, 3, 8, 8]);
+    let flat = g.reshape(x, &[1, 192]);
+    let w0 = g.weight("l0_w");
+    sh(&mut env, "l0_w", &[DIM, 192]);
+    let b0 = g.weight("l0_b");
+    sh(&mut env, "l0_b", &[DIM]);
+    let mut h = g.linear(flat, w0, b0);
+    h = g.gelu(h);
+    for i in 0..BLOCKS {
+        let w1 = g.weight(&format!("blk{i}_fc1_w"));
+        sh(&mut env, &format!("blk{i}_fc1_w"), &[DIM, DIM]);
+        let b1 = g.weight(&format!("blk{i}_fc1_b"));
+        sh(&mut env, &format!("blk{i}_fc1_b"), &[DIM]);
+        let mut z = g.linear(h, w1, b1);
+        z = g.gelu(z);
+        let w2 = g.weight(&format!("blk{i}_fc2_w"));
+        sh(&mut env, &format!("blk{i}_fc2_w"), &[DIM, DIM]);
+        let b2 = g.weight(&format!("blk{i}_fc2_b"));
+        sh(&mut env, &format!("blk{i}_fc2_b"), &[DIM]);
+        z = g.linear(z, w2, b2);
+        h = g.add(h, z);
+    }
+    let wh = g.weight("head_w");
+    sh(&mut env, "head_w", &[4, DIM]);
+    let bh = g.weight("head_b");
+    sh(&mut env, "head_b", &[4]);
+    g.linear(h, wh, bh);
+    App { name: "ResMLP", source_dsl: "JAX", expr: g.finish(), shapes: env }
+}
+
+/// LSTM-WLM-lite: pre-embedded input sequence -> fused LSTM op -> decoder
+/// linear. (Embedding lookup happens in the co-sim driver.)
+pub fn lstm_wlm_lite() -> App {
+    let (t, e, h, v) = (16usize, 32usize, 32usize, 64usize);
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("x_seq");
+    sh(&mut env, "x_seq", &[t, 1, e]);
+    let wi = g.weight("w_ih");
+    sh(&mut env, "w_ih", &[4 * h, e]);
+    let wh = g.weight("w_hh");
+    sh(&mut env, "w_hh", &[4 * h, h]);
+    let b = g.weight("b");
+    sh(&mut env, "b", &[4 * h]);
+    let seq = g.lstm(x, wi, wh, b, t); // [T, 1, H]
+    let flat = g.reshape(seq, &[t, h]);
+    let wd = g.weight("head_w");
+    sh(&mut env, "head_w", &[v, h]);
+    let bd = g.weight("head_b");
+    sh(&mut env, "head_b", &[v]);
+    g.linear(flat, wd, bd);
+    App { name: "LSTM-WLM", source_dsl: "JAX", expr: g.finish(), shapes: env }
+}
+
+/// ResNet20-lite: 21 convolutions + linear head (HLSCNN + FlexASR).
+pub fn resnet20_lite() -> App {
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("x");
+    sh(&mut env, "x", &[1, 3, 8, 8]);
+    let w = g.weight("conv0_w");
+    sh(&mut env, "conv0_w", &[8, 3, 3, 3]);
+    let mut h = g.conv2d(x, w, (1, 1), (1, 1), 1);
+    h = g.relu(h);
+    let stages: [(usize, usize); 3] = [(8, 1), (16, 2), (32, 2)];
+    let mut cin = 8usize;
+    for (s, (ch, stride)) in stages.into_iter().enumerate() {
+        for b in 0..3 {
+            let st = if b == 0 { (stride, stride) } else { (1, 1) };
+            let c1_in = if b == 0 { cin } else { ch };
+            let w1 = g.weight(&format!("s{s}b{b}_c1_w"));
+            sh(&mut env, &format!("s{s}b{b}_c1_w"), &[ch, c1_in, 3, 3]);
+            let mut z = g.conv2d(h, w1, st, (1, 1), 1);
+            z = g.relu(z);
+            let w2 = g.weight(&format!("s{s}b{b}_c2_w"));
+            sh(&mut env, &format!("s{s}b{b}_c2_w"), &[ch, ch, 3, 3]);
+            z = g.conv2d(z, w2, (1, 1), (1, 1), 1);
+            let sc: Id = if b == 0 && cin != ch {
+                let wd = g.weight(&format!("s{s}_down_w"));
+                sh(&mut env, &format!("s{s}_down_w"), &[ch, cin, 1, 1]);
+                g.conv2d(h, wd, st, (0, 0), 1)
+            } else {
+                h
+            };
+            let sum = g.add(z, sc);
+            h = g.relu(sum);
+        }
+        cin = ch;
+    }
+    let gap = g.global_avg_pool(h); // [1, 32]
+    let wf = g.weight("fc_w");
+    sh(&mut env, "fc_w", &[4, 32]);
+    let bf = g.weight("fc_b");
+    sh(&mut env, "fc_b", &[4]);
+    g.linear(gap, wf, bf);
+    App { name: "ResNet-20", source_dsl: "JAX", expr: g.finish(), shapes: env }
+}
+
+/// MobileNet-lite: depthwise (grouped, host) + pointwise (HLSCNN) convs
+/// + linear head (FlexASR).
+pub fn mobilenet_lite() -> App {
+    let blocks: [(usize, usize); 4] = [(8, 16), (16, 16), (16, 32), (32, 32)];
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("x");
+    sh(&mut env, "x", &[1, 3, 8, 8]);
+    let w = g.weight("conv0_w");
+    sh(&mut env, "conv0_w", &[8, 3, 3, 3]);
+    let mut h = g.conv2d(x, w, (1, 1), (1, 1), 1);
+    h = g.relu(h);
+    for (i, (cin, cout)) in blocks.into_iter().enumerate() {
+        let wd = g.weight(&format!("blk{i}_dw_w"));
+        sh(&mut env, &format!("blk{i}_dw_w"), &[cin, 1, 3, 3]);
+        h = g.conv2d(h, wd, (1, 1), (1, 1), cin);
+        h = g.relu(h);
+        let wp = g.weight(&format!("blk{i}_pw_w"));
+        sh(&mut env, &format!("blk{i}_pw_w"), &[cout, cin, 1, 1]);
+        h = g.conv2d(h, wp, (1, 1), (0, 0), 1);
+        h = g.relu(h);
+    }
+    let gap = g.global_avg_pool(h); // [1, 32]
+    let wf = g.weight("fc_w");
+    sh(&mut env, "fc_w", &[4, 32]);
+    let bf = g.weight("fc_b");
+    sh(&mut env, "fc_b", &[4]);
+    g.linear(gap, wf, bf);
+    App { name: "MobileNet-V2", source_dsl: "JAX", expr: g.finish(), shapes: env }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::shape::infer;
+
+    #[test]
+    fn cosim_mirrors_shape_check() {
+        for app in [resmlp_lite(), lstm_wlm_lite(), resnet20_lite(), mobilenet_lite()]
+        {
+            let shapes = infer(&app.expr, &app.shapes)
+                .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            let out = shapes.last().unwrap();
+            assert!(
+                out == &vec![1, 4] || out == &vec![16, 64],
+                "{}: unexpected output shape {out:?}",
+                app.name
+            );
+        }
+    }
+
+    #[test]
+    fn resnet_mirror_has_21_convs() {
+        use crate::ir::Op;
+        let app = resnet20_lite();
+        assert_eq!(
+            app.expr.count(|o| matches!(o, Op::Conv2d { .. })),
+            21
+        );
+    }
+}

@@ -1,0 +1,36 @@
+//! Application graphs.
+//!
+//! Two families:
+//!
+//! * [`table1`] — structural replicas of the paper's six DL applications
+//!   (EfficientNet, LSTM-WLM, MobileNet-V2, ResMLP, ResNet-20,
+//!   Transformer) with layer counts matching the real architectures.
+//!   These drive the compilation-statistics experiment (Table 1); they
+//!   carry shapes but no trained weights.
+//! * [`cosim_models`] — op-for-op IR mirrors of the four *trained*
+//!   build-time models from `python/compile/model.py` (ResMLP-lite,
+//!   LSTM-WLM-lite, ResNet20-lite, MobileNet-lite). These drive the
+//!   application-level co-simulation (Table 4); golden outputs exported
+//!   by aot.py prove the mirrors exact.
+
+pub mod cosim_models;
+pub mod table1;
+
+use crate::ir::shape::Shape;
+use crate::ir::RecExpr;
+use std::collections::HashMap;
+
+/// A compilable application: graph + leaf shapes.
+pub struct App {
+    pub name: &'static str,
+    pub source_dsl: &'static str,
+    pub expr: RecExpr,
+    pub shapes: HashMap<String, Shape>,
+}
+
+impl App {
+    /// Number of IR nodes (the "#Relay ops" proxy, Table 1 row 3).
+    pub fn num_ops(&self) -> usize {
+        self.expr.len()
+    }
+}

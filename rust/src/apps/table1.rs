@@ -1,0 +1,427 @@
+//! Structural replicas of the paper's six DL applications (§4.2) for the
+//! Table 1 compilation-statistics experiment.
+//!
+//! Each builder reproduces the *offloadable structure* of the real
+//! network — the number of non-grouped convolutions, bare vs biased
+//! dense layers, the unrolled LSTM recurrence, attention blocks — with
+//! the layer counts of the real architectures, so the exact/flexible
+//! invocation counts track the paper's. Exact node totals differ from
+//! TVM's Relay import (different importer expansions); EXPERIMENTS.md
+//! reports both.
+
+use super::App;
+use crate::ir::shape::Shape;
+use crate::ir::{GraphBuilder, Id, Op};
+use std::collections::HashMap;
+
+fn sh(env: &mut HashMap<String, Shape>, name: &str, s: &[usize]) {
+    env.insert(name.to_string(), s.to_vec());
+}
+
+/// EfficientNet (MxNet): 35 non-grouped convolutions (stem + 16 MBConv
+/// expand/project pairs + head + conv-classifier), 16 depthwise convs,
+/// swish activations. No dense layers at all.
+pub fn efficientnet() -> App {
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("data");
+    sh(&mut env, "data", &[1, 3, 64, 64]);
+
+    let swish = |g: &mut GraphBuilder, h: Id| {
+        let s = g.expr.add(Op::Sigmoid, vec![h]);
+        g.mul(h, s)
+    };
+
+    // stem: conv s2 3->24
+    let w = g.weight("stem_w");
+    sh(&mut env, "stem_w", &[24, 3, 3, 3]);
+    let mut h = g.conv2d(x, w, (2, 2), (1, 1), 1);
+    h = swish(&mut g, h);
+
+    for b in 0..16 {
+        // expand 24 -> 96 (1x1)
+        let we = g.weight(&format!("b{b}_exp_w"));
+        sh(&mut env, &format!("b{b}_exp_w"), &[96, 24, 1, 1]);
+        let mut z = g.conv2d(h, we, (1, 1), (0, 0), 1);
+        z = swish(&mut g, z);
+        // depthwise 96 (groups=96) — not HLSCNN-offloadable
+        let wd = g.weight(&format!("b{b}_dw_w"));
+        sh(&mut env, &format!("b{b}_dw_w"), &[96, 1, 3, 3]);
+        z = g.conv2d(z, wd, (1, 1), (1, 1), 96);
+        z = swish(&mut g, z);
+        // project 96 -> 24 (1x1)
+        let wp = g.weight(&format!("b{b}_prj_w"));
+        sh(&mut env, &format!("b{b}_prj_w"), &[24, 96, 1, 1]);
+        z = g.conv2d(z, wp, (1, 1), (0, 0), 1);
+        h = g.add(h, z); // residual
+    }
+
+    // head conv 24 -> 64, then classifier AS a 1x1 conv (hence zero
+    // dense ops and zero exact VTA/FlexASR matches, as in Table 1)
+    let wh = g.weight("head_w");
+    sh(&mut env, "head_w", &[64, 24, 1, 1]);
+    h = g.conv2d(h, wh, (1, 1), (0, 0), 1);
+    h = swish(&mut g, h);
+    let wc = g.weight("cls_w");
+    sh(&mut env, "cls_w", &[1000, 64, 1, 1]);
+    h = g.conv2d(h, wc, (1, 1), (0, 0), 1);
+    g.global_avg_pool(h);
+
+    App { name: "EfficientNet", source_dsl: "MxNet", expr: g.finish(), shapes: env }
+}
+
+/// LSTM-WLM (PyTorch): the word-language-model — an LSTM unrolled to 35
+/// timesteps exactly as the importer emits it (SliceStep/Concat/Dense/
+/// gate-slice recurrence; ~16 ops per step), plus one vocabulary-sized
+/// decoder linear that exceeds FlexASR's buffer capacity.
+pub fn lstm_wlm() -> App {
+    let steps = 35usize;
+    let embed = 650usize;
+    let hidden = 650usize;
+    let vocab = 33278usize;
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("seq");
+    sh(&mut env, "seq", &[steps, 1, embed]);
+    let w = g.weight("lstm_w");
+    sh(&mut env, "lstm_w", &[4 * hidden, embed + hidden]);
+    let b = g.weight("lstm_b");
+    sh(&mut env, "lstm_b", &[4 * hidden]);
+
+    let h0 = g.expr.add(Op::ZeroTensor(vec![1, hidden]), vec![]);
+    let c0 = g.expr.add(Op::ZeroTensor(vec![1, hidden]), vec![]);
+    let (mut h, mut c) = (h0, c0);
+    let mut chain: Option<Id> = None;
+    for t in 0..steps {
+        let xt = g.expr.add(Op::SliceStep { t }, vec![x]);
+        let cat = g.concat(xt, h);
+        let d = g.dense(cat, w);
+        let gates = g.add(d, b);
+        let gi = g.expr.add(Op::SliceCols { lo: 0, hi: hidden }, vec![gates]);
+        let gi = g.expr.add(Op::Sigmoid, vec![gi]);
+        let gf = g.expr.add(Op::SliceCols { lo: hidden, hi: 2 * hidden }, vec![gates]);
+        let gf = g.expr.add(Op::Sigmoid, vec![gf]);
+        let gg =
+            g.expr.add(Op::SliceCols { lo: 2 * hidden, hi: 3 * hidden }, vec![gates]);
+        let gg = g.expr.add(Op::Tanh, vec![gg]);
+        let go =
+            g.expr.add(Op::SliceCols { lo: 3 * hidden, hi: 4 * hidden }, vec![gates]);
+        let go = g.expr.add(Op::Sigmoid, vec![go]);
+        let fc = g.mul(gf, c);
+        let ig = g.mul(gi, gg);
+        c = g.add(fc, ig);
+        let tc = g.expr.add(Op::Tanh, vec![c]);
+        h = g.mul(go, tc);
+        chain = Some(match chain {
+            None => h,
+            Some(acc) => g.expr.add(Op::ConcatRows, vec![acc, h]),
+        });
+    }
+    // decoder: hidden -> vocab (bare dense + broadcast add; vocab size
+    // 33278 exceeds FlexASR's 4096-dim capacity)
+    let wd = g.weight("dec_w");
+    sh(&mut env, "dec_w", &[vocab, hidden]);
+    let bd = g.weight("dec_b");
+    sh(&mut env, "dec_b", &[vocab]);
+    let dec = g.dense(chain.unwrap(), wd);
+    g.add(dec, bd);
+
+    App { name: "LSTM-WLM", source_dsl: "PyTorch", expr: g.finish(), shapes: env }
+}
+
+/// MobileNet-V2 (PyTorch): 40 non-grouped convolutions (stem + 19
+/// expand/project pairs + head is folded into the pairs) + 19 depthwise
+/// convs + a classifier written as `add(reshape(nn_dense ...), bias)` —
+/// the §2.2.2 pattern that defeats exact matching but not flexible.
+pub fn mobilenet_v2() -> App {
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("data");
+    sh(&mut env, "data", &[1, 3, 32, 32]);
+
+    // stem 3 -> 16
+    let w = g.weight("stem_w");
+    sh(&mut env, "stem_w", &[16, 3, 3, 3]);
+    let mut h = g.conv2d(x, w, (1, 1), (1, 1), 1);
+    h = g.relu(h);
+
+    for b in 0..19 {
+        let we = g.weight(&format!("b{b}_exp_w"));
+        sh(&mut env, &format!("b{b}_exp_w"), &[32, 16, 1, 1]);
+        let mut z = g.conv2d(h, we, (1, 1), (0, 0), 1);
+        z = g.relu(z);
+        let wd = g.weight(&format!("b{b}_dw_w"));
+        sh(&mut env, &format!("b{b}_dw_w"), &[32, 1, 3, 3]);
+        z = g.conv2d(z, wd, (1, 1), (1, 1), 32);
+        z = g.relu(z);
+        let wp = g.weight(&format!("b{b}_prj_w"));
+        sh(&mut env, &format!("b{b}_prj_w"), &[16, 32, 1, 1]);
+        z = g.conv2d(z, wp, (1, 1), (0, 0), 1);
+        h = g.add(h, z);
+    }
+    // head conv 16 -> 32 (the 40th non-grouped convolution)
+    let whd = g.weight("head_w");
+    sh(&mut env, "head_w", &[32, 16, 1, 1]);
+    h = g.conv2d(h, whd, (1, 1), (0, 0), 1);
+    h = g.relu(h);
+    let gap = g.global_avg_pool(h); // [1, 32]
+    let wc = g.weight("cls_w");
+    sh(&mut env, "cls_w", &[1000, 32]);
+    let bc = g.weight("cls_b");
+    sh(&mut env, "cls_b", &[1000]);
+    let d = g.dense(gap, wc);
+    let r = g.reshape(d, &[1, 1000]);
+    g.add(r, bc);
+
+    App { name: "MobileNet-V2", source_dsl: "PyTorch", expr: g.finish(), shapes: env }
+}
+
+/// ResMLP (PyTorch): 38 dense layers (embed + 12 x {cross-patch +
+/// fc1 + fc2} + head), affine transforms instead of bias_add — so zero
+/// exact FlexASR matches, all 38 exposed by flexible matching.
+pub fn resmlp() -> App {
+    let dim = 384usize;
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("data");
+    sh(&mut env, "data", &[16, dim]); // 16 patches x 384 features
+
+    let affine = |g: &mut GraphBuilder,
+                  env: &mut HashMap<String, Shape>,
+                  name: String,
+                  h: Id| {
+        let sc = g.weight(&format!("{name}_scale"));
+        sh(env, &format!("{name}_scale"), &[dim]);
+        let sb = g.weight(&format!("{name}_shift"));
+        sh(env, &format!("{name}_shift"), &[dim]);
+        let m = g.mul(h, sc);
+        g.add(m, sb)
+    };
+
+    let we = g.weight("embed_w");
+    sh(&mut env, "embed_w", &[dim, dim]);
+    let mut h = g.dense(x, we);
+    for l in 0..12 {
+        // cross-patch: transpose, dense over patches, transpose back
+        let a = affine(&mut g, &mut env, format!("l{l}_a1"), h);
+        let t = g.transpose(a);
+        let wx = g.weight(&format!("l{l}_xpatch_w"));
+        sh(&mut env, &format!("l{l}_xpatch_w"), &[16, 16]);
+        let t = g.dense(t, wx);
+        let t = g.transpose(t);
+        h = g.add(h, t);
+        // cross-channel MLP
+        let a = affine(&mut g, &mut env, format!("l{l}_a2"), h);
+        let w1 = g.weight(&format!("l{l}_fc1_w"));
+        sh(&mut env, &format!("l{l}_fc1_w"), &[dim, dim]);
+        let z = g.dense(a, w1);
+        let z = g.gelu(z);
+        let w2 = g.weight(&format!("l{l}_fc2_w"));
+        sh(&mut env, &format!("l{l}_fc2_w"), &[dim, dim]);
+        let z = g.dense(z, w2);
+        h = g.add(h, z);
+    }
+    let wh = g.weight("head_w");
+    sh(&mut env, "head_w", &[10, dim]);
+    g.dense(h, wh);
+
+    App { name: "ResMLP", source_dsl: "PyTorch", expr: g.finish(), shapes: env }
+}
+
+/// ResNet-20 (MxNet): 21 non-grouped convolutions (stem + 9 blocks x 2 +
+/// 2 downsample shortcuts) and two biased linear layers — the only two
+/// exact FlexASR/VTA matches in the row.
+pub fn resnet20() -> App {
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("data");
+    sh(&mut env, "data", &[1, 3, 32, 32]);
+
+    let w = g.weight("conv0_w");
+    sh(&mut env, "conv0_w", &[16, 3, 3, 3]);
+    let mut h = g.conv2d(x, w, (1, 1), (1, 1), 1);
+    h = g.relu(h);
+
+    let stages: [(usize, usize); 3] = [(16, 1), (32, 2), (64, 2)];
+    let mut cin = 16;
+    for (s, (ch, stride)) in stages.into_iter().enumerate() {
+        for b in 0..3 {
+            let st = if b == 0 { (stride, stride) } else { (1, 1) };
+            let w1 = g.weight(&format!("s{s}b{b}_c1_w"));
+            sh(&mut env, &format!("s{s}b{b}_c1_w"), &[ch, if b == 0 { cin } else { ch }, 3, 3]);
+            let mut z = g.conv2d(h, w1, st, (1, 1), 1);
+            z = g.relu(z);
+            let w2 = g.weight(&format!("s{s}b{b}_c2_w"));
+            sh(&mut env, &format!("s{s}b{b}_c2_w"), &[ch, ch, 3, 3]);
+            z = g.conv2d(z, w2, (1, 1), (1, 1), 1);
+            let sc = if b == 0 && cin != ch {
+                let wd = g.weight(&format!("s{s}_down_w"));
+                sh(&mut env, &format!("s{s}_down_w"), &[ch, cin, 1, 1]);
+                g.conv2d(h, wd, st, (0, 0), 1)
+            } else {
+                h
+            };
+            let sum = g.add(z, sc);
+            h = g.relu(sum);
+        }
+        cin = ch;
+    }
+    let gap = g.global_avg_pool(h); // [1, 64]
+    let w1 = g.weight("fc1_w");
+    sh(&mut env, "fc1_w", &[64, 64]);
+    let b1 = g.weight("fc1_b");
+    sh(&mut env, "fc1_b", &[64]);
+    let h2 = g.linear(gap, w1, b1);
+    let h2 = g.relu(h2);
+    let w2 = g.weight("fc2_w");
+    sh(&mut env, "fc2_w", &[10, 64]);
+    let b2 = g.weight("fc2_b");
+    sh(&mut env, "fc2_b", &[10]);
+    g.linear(h2, w2, b2);
+
+    App { name: "ResNet-20", source_dsl: "MxNet", expr: g.finish(), shapes: env }
+}
+
+/// Transformer (PyTorch nn.Transformer, 6+6 layers, 256 features): 66
+/// bare dense layers (enc: 4/layer; dec: 7/layer), attention internals as
+/// `attention` ops (not nn.dense, so VTA never sees them — as in the
+/// paper), layer norms throughout.
+pub fn transformer() -> App {
+    let t = 35usize;
+    let d = 256usize;
+    let mut g = GraphBuilder::new();
+    let mut env = HashMap::new();
+    let x = g.var("src");
+    sh(&mut env, "src", &[t, d]);
+
+    let mut dense_ct = 0usize;
+    let mut mk_dense = |g: &mut GraphBuilder,
+                        env: &mut HashMap<String, Shape>,
+                        h: Id,
+                        m: usize,
+                        k: usize| {
+        let name = format!("w{dense_ct}");
+        dense_ct += 1;
+        let w = g.weight(&name);
+        sh(env, &name, &[m, k]);
+        g.dense(h, w)
+    };
+
+    let self_attn = |g: &mut GraphBuilder,
+                     env: &mut HashMap<String, Shape>,
+                     mk: &mut dyn FnMut(
+        &mut GraphBuilder,
+        &mut HashMap<String, Shape>,
+        Id,
+        usize,
+        usize,
+    ) -> Id,
+                     h: Id| {
+        let qkv = mk(g, env, h, 3 * d, d); // in-proj (one dense)
+        let q = g.expr.add(Op::SliceCols { lo: 0, hi: d }, vec![qkv]);
+        let k = g.expr.add(Op::SliceCols { lo: d, hi: 2 * d }, vec![qkv]);
+        let v = g.expr.add(Op::SliceCols { lo: 2 * d, hi: 3 * d }, vec![qkv]);
+        let a = g.attention(q, k, v);
+        mk(g, env, a, d, d) // out-proj
+    };
+
+    // encoder: 6 layers x (inproj + outproj + 2 ffn) = 24 dense
+    let mut h = x;
+    for _ in 0..6 {
+        let a = self_attn(&mut g, &mut env, &mut mk_dense, h);
+        let r = g.add(h, a);
+        h = g.layer_norm(r);
+        let f = mk_dense(&mut g, &mut env, h, 2 * d, d);
+        let f = g.gelu(f);
+        let f = mk_dense(&mut g, &mut env, f, d, 2 * d);
+        let r = g.add(h, f);
+        h = g.layer_norm(r);
+    }
+    let memory = h;
+
+    // decoder: 6 layers x (self 2 + cross 3 + ffn 2) = 42 dense
+    let tgt = g.var("tgt");
+    sh(&mut env, "tgt", &[t, d]);
+    let mut hd = tgt;
+    for _ in 0..6 {
+        let a = self_attn(&mut g, &mut env, &mut mk_dense, hd);
+        let r = g.add(hd, a);
+        hd = g.layer_norm(r);
+        // cross attention: q from decoder, kv from encoder memory
+        let q = mk_dense(&mut g, &mut env, hd, d, d);
+        let kv = mk_dense(&mut g, &mut env, memory, 2 * d, d);
+        let k = g.expr.add(Op::SliceCols { lo: 0, hi: d }, vec![kv]);
+        let v = g.expr.add(Op::SliceCols { lo: d, hi: 2 * d }, vec![kv]);
+        let a = g.attention(q, k, v);
+        let a = mk_dense(&mut g, &mut env, a, d, d);
+        let r = g.add(hd, a);
+        hd = g.layer_norm(r);
+        let f = mk_dense(&mut g, &mut env, hd, 2 * d, d);
+        let f = g.gelu(f);
+        let f = mk_dense(&mut g, &mut env, f, d, 2 * d);
+        let r = g.add(hd, f);
+        hd = g.layer_norm(r);
+    }
+
+    App { name: "Transformer", source_dsl: "PyTorch", expr: g.finish(), shapes: env }
+}
+
+/// All six applications, in the paper's column order.
+pub fn all_apps() -> Vec<App> {
+    vec![
+        efficientnet(),
+        lstm_wlm(),
+        mobilenet_v2(),
+        resmlp(),
+        resnet20(),
+        transformer(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::shape::infer;
+
+    #[test]
+    fn all_apps_shape_check() {
+        for app in all_apps() {
+            let shapes = infer(&app.expr, &app.shapes)
+                .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            assert!(!shapes.is_empty());
+        }
+    }
+
+    #[test]
+    fn conv_counts_match_paper() {
+        let count_convs = |app: &App| {
+            app.expr.count(|o| matches!(o, Op::Conv2d { groups: 1, .. }))
+        };
+        assert_eq!(count_convs(&efficientnet()), 35);
+        assert_eq!(count_convs(&mobilenet_v2()), 40);
+        assert_eq!(count_convs(&resnet20()), 21);
+    }
+
+    #[test]
+    fn dense_counts_match_paper() {
+        let count = |app: &App| app.expr.count(|o| matches!(o, Op::Dense));
+        assert_eq!(count(&resmlp()), 38);
+        assert_eq!(count(&transformer()), 66);
+        assert_eq!(count(&lstm_wlm()), 36); // 35 gate denses + decoder
+    }
+
+    #[test]
+    fn op_totals_in_relay_ballpark() {
+        // the importer expands ops (batch norm, padding, etc.) that our
+        // builders fold away, so totals differ; require same order of
+        // magnitude
+        for (app, paper) in all_apps().iter().zip([232, 578, 757, 343, 494, 872]) {
+            let n = app.num_ops();
+            assert!(
+                n > paper / 8 && n < paper * 8,
+                "{}: {n} ops vs paper {paper}",
+                app.name
+            );
+        }
+    }
+}

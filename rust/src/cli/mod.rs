@@ -1,0 +1,66 @@
+//! Hand-rolled CLI (clap is not in the offline vendored set).
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `std::env::args()`-style input.
+    pub fn parse(args: impl Iterator<Item = String>) -> Cli {
+        let mut args = args.skip(1);
+        let command = args.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut key: Option<String> = None;
+        for a in args {
+            if let Some(k) = a.strip_prefix("--") {
+                if let Some(prev) = key.take() {
+                    flags.insert(prev, "true".to_string());
+                }
+                key = Some(k.to_string());
+            } else if let Some(k) = key.take() {
+                flags.insert(k, a);
+            }
+        }
+        if let Some(prev) = key.take() {
+            flags.insert(prev, "true".to_string());
+        }
+        Cli { command, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Cli {
+        Cli::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let c = parse("d2a cosim --app resnet20 --limit 100 --verbose");
+        assert_eq!(c.command, "cosim");
+        assert_eq!(c.get("app"), Some("resnet20"));
+        assert_eq!(c.get_usize("limit", 0), 100);
+        assert_eq!(c.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn default_command_is_help() {
+        let c = parse("d2a");
+        assert_eq!(c.command, "help");
+    }
+}

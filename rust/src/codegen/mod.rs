@@ -1,0 +1,447 @@
+//! Code generation: matched accelerator operators → ILA program fragments
+//! → MMIO command streams (the Fig. 3(b)→(d) / Fig. 5 pipeline).
+//!
+//! Each lowering produces a [`LoweredInvocation`]: the raw command stream
+//! that drives the accelerator over its bus interface, plus a
+//! [`ReadPlan`] describing how the driver fetches and decodes the result.
+//! The assembly-level [`Fragment`] view (Fig. 5(c)) is emitted alongside
+//! for inspection and for the VT2 verification path.
+//!
+//! §5.1's data-transfer optimization appears here too:
+//! [`lower_flex_maxpool_chain`] fuses a chain of temporal max pools into
+//! one store → k×trigger → load program, eliminating the intermediate
+//! loads/stores that naive per-op lowering would emit.
+
+pub mod optimize;
+
+use crate::accel::flexasr::{model as fx, FlexAsr};
+use crate::accel::hlscnn::{model as hx, Hlscnn};
+use crate::accel::vta::{model as vx, Vta};
+use crate::ila::asm::Fragment;
+use crate::ila::Cmd;
+use crate::ir::Target;
+use crate::tensor::Tensor;
+
+/// How to retrieve and decode an accelerator result after the command
+/// stream has executed.
+#[derive(Debug, Clone)]
+pub enum ReadPlan {
+    /// FlexASR: read `status_out_bias`, then `len` AF8 codes at `base`.
+    FlexAf8 { base: u64, shape: Vec<usize> },
+    /// HLSCNN: read `len` i16 codes at `base`, NHWC layout.
+    HlscnnI16 { base: u64, shape: Vec<usize> },
+    /// VTA: read `n*m` i32 accumulators at `base`, dequant by `scale`.
+    VtaI32 { base: u64, shape: Vec<usize>, scale: f32 },
+}
+
+/// One lowered accelerator invocation.
+#[derive(Debug, Clone)]
+pub struct LoweredInvocation {
+    pub target: Target,
+    pub asm: Fragment,
+    pub cmds: Vec<Cmd>,
+    pub read: ReadPlan,
+}
+
+impl LoweredInvocation {
+    /// Number of MMIO beats moving tensor data (the §5.1 metric).
+    pub fn data_beats(&self) -> usize {
+        self.cmds
+            .iter()
+            .filter(|c| {
+                let a = c.addr;
+                (fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64).contains(&a)
+                    || (fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64)
+                        .contains(&a)
+                    || (hx::ACT_BASE..hx::ACT_BASE + hx::ACT_SIZE as u64).contains(&a)
+                    || (hx::WGT_BASE..hx::WGT_BASE + hx::WGT_SIZE as u64).contains(&a)
+                    || (vx::INP_BASE..vx::INP_BASE + vx::INP_SIZE as u64).contains(&a)
+                    || (vx::WGT_BASE..vx::WGT_BASE + vx::WGT_SIZE as u64).contains(&a)
+            })
+            .count()
+    }
+}
+
+/// Stream a byte buffer as 16-byte MMIO writes starting at `base`.
+fn stream_bytes(cmds: &mut Vec<Cmd>, base: u64, bytes: &[u8]) {
+    for (i, chunk) in bytes.chunks(16).enumerate() {
+        let mut data = [0u8; 16];
+        data[..chunk.len()].copy_from_slice(chunk);
+        cmds.push(Cmd::write(base + 16 * i as u64, data));
+    }
+}
+
+// ----------------------------------------------------------------------
+// FlexASR lowerings
+// ----------------------------------------------------------------------
+
+/// Lower a FlexASR linear layer (`fasr_linear x w b`) — the Fig. 5
+/// mapping end to end.
+pub fn lower_flex_linear(
+    dev: &FlexAsr,
+    x: &Tensor,
+    w: &Tensor,
+    b: &Tensor,
+) -> LoweredInvocation {
+    let fmt = dev.af;
+    let (n, k) = (x.shape[0], x.shape[1]);
+    let m = w.shape[0];
+    let (xc, xb) = fx::encode_tensor(&fmt, x);
+    let (wc, wb) = fx::encode_tensor(&fmt, w);
+    let (bc, bb) = fx::encode_tensor(&fmt, b);
+    let bias_base = ((m * k + 15) / 16 * 16) as u64;
+    let out_base = ((n * k + 15) / 16 * 16) as u64;
+
+    let mut cmds = Vec::new();
+    stream_bytes(&mut cmds, fx::GB_BASE, &xc);
+    stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wc);
+    stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc);
+    cmds.push(Cmd::write_u64(
+        fx::CFG_LAYER_SIZING,
+        (k as u64) | ((m as u64) << 16),
+    ));
+    cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_base));
+    cmds.push(Cmd::write_u64(fx::CFG_ACT, 0));
+    cmds.push(Cmd::write_u64(
+        fx::CFG_GB_CONTROL,
+        fx::OP_LINEAR | ((n as u64) << 8),
+    ));
+    cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
+    cmds.push(Cmd::write_u64(
+        fx::CFG_EXP_BIAS,
+        (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
+    ));
+    cmds.push(Cmd::write_u64(fx::FN_START, 1));
+
+    let mut asm = Fragment::new();
+    asm.push("FlexASR_ILA.write_v", &["%input"])
+        .push("FlexASR_ILA.write_wgt", &["%weight", "%bias"])
+        .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%k", "%m"])
+        .push("FlexASR_ILA.pe_cfg_mngr", &["%bias_base"])
+        .push("FlexASR_ILA.pe_cfg_act_mngr", &["%act"])
+        .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%n"])
+        .push("FlexASR_ILA.gb_cfg_mmngr_gb_large", &["%in", "%out"])
+        .push("FlexASR_ILA.cfg_exp_bias", &["%biases"])
+        .push("FlexASR_ILA.fn_start", &[])
+        .push("FlexASR_ILA.read_v", &["%output"]);
+
+    LoweredInvocation {
+        target: Target::FlexAsr,
+        asm,
+        cmds,
+        read: ReadPlan::FlexAf8 { base: fx::GB_BASE + out_base, shape: vec![n, m] },
+    }
+}
+
+/// Lower a chain of `stages` FlexASR temporal max pools over `t` with the
+/// §5.1 optimization: ONE store in, `stages` triggers ping-ponging between
+/// two GB regions, ONE load out.
+pub fn lower_flex_maxpool_chain(
+    dev: &FlexAsr,
+    t: &Tensor,
+    stages: usize,
+) -> LoweredInvocation {
+    assert!(stages >= 1);
+    let fmt = dev.af;
+    let (r, c) = (t.shape[0], t.shape[1]);
+    assert!(r % (1 << stages) == 0, "rows must divide by 2^stages");
+    let (tc, tb) = fx::encode_tensor(&fmt, t);
+    let half = (fx::GB_SIZE / 2) as u64;
+
+    let mut cmds = Vec::new();
+    stream_bytes(&mut cmds, fx::GB_BASE, &tc);
+    let mut rows = r;
+    let mut in_base = 0u64;
+    let mut exp_bias = tb;
+    for s in 0..stages {
+        let out_base = if in_base == 0 { half } else { 0 };
+        cmds.push(Cmd::write_u64(fx::CFG_LAYER_SIZING, c as u64));
+        cmds.push(Cmd::write_u64(
+            fx::CFG_GB_CONTROL,
+            fx::OP_MAXPOOL | ((rows as u64) << 8),
+        ));
+        cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, in_base | (out_base << 32)));
+        cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, exp_bias as u8 as u64));
+        cmds.push(Cmd::write_u64(fx::FN_START, 1));
+        // maxpool preserves the exponent bias (max of lattice values);
+        // subsequent stages read the device-chosen output bias, which for
+        // maxpool equals or shrinks the input bias. The driver conservatively
+        // re-reads the status register between stages — modeled by reading
+        // it in the command stream (a status read, not a data beat).
+        cmds.push(Cmd::read(fx::STATUS_OUT_BIAS));
+        rows /= 2;
+        in_base = out_base;
+        exp_bias = tb; // same-lattice: device bias query is advisory here
+        let _ = s;
+    }
+
+    let mut asm = Fragment::new();
+    asm.push("FlexASR_ILA.fasrMaxpStore", &["%t"]);
+    for _ in 0..stages {
+        asm.push("FlexASR_ILA.fasrMaxpool", &[]);
+    }
+    asm.push("FlexASR_ILA.fasrMaxpLoad", &["%out"]);
+
+    LoweredInvocation {
+        target: Target::FlexAsr,
+        asm,
+        cmds,
+        read: ReadPlan::FlexAf8 {
+            base: fx::GB_BASE + in_base,
+            shape: vec![r >> stages, c],
+        },
+    }
+}
+
+/// Naive per-op lowering of the same chain (each stage stores and loads)
+/// — the baseline that Fig. 7 / the fig7 bench compares against.
+pub fn lower_flex_maxpool_chain_naive(
+    dev: &FlexAsr,
+    t: &Tensor,
+    stages: usize,
+) -> Vec<LoweredInvocation> {
+    let mut out = Vec::new();
+    let mut cur = t.clone();
+    for _ in 0..stages {
+        let inv = lower_flex_maxpool_chain(dev, &cur, 1);
+        cur = crate::ir::interp::eval_op(&crate::ir::Op::TempMaxPool, &[&cur]).unwrap();
+        // naive lowering also reads the result back after every stage
+        out.push(inv);
+    }
+    out
+}
+
+// ----------------------------------------------------------------------
+// HLSCNN lowering
+// ----------------------------------------------------------------------
+
+/// Lower `hlscnn_conv2d` (batch 1).
+pub fn lower_hlscnn_conv2d(
+    dev: &Hlscnn,
+    x: &Tensor,
+    w: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> LoweredInvocation {
+    assert_eq!(x.shape[0], 1, "HLSCNN device is batch-1; driver loops batch");
+    let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
+    let (o, kh, kw) = (w.shape[0], w.shape[2], w.shape[3]);
+    let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
+    let ow = (wd + 2 * pad.1 - kw) / stride.1 + 1;
+
+    let mut cmds = Vec::new();
+    stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(dev, x));
+    stream_bytes(&mut cmds, hx::WGT_BASE, &hx::encode_wgt(dev, w));
+    cmds.push(Cmd::write_u64(
+        hx::CFG_SHAPE,
+        (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24) | ((o as u64) << 36),
+    ));
+    cmds.push(Cmd::write_u64(
+        hx::CFG_KERNEL,
+        (kh as u64)
+            | ((kw as u64) << 8)
+            | ((stride.0 as u64) << 16)
+            | ((stride.1 as u64) << 24)
+            | ((pad.0 as u64) << 32)
+            | ((pad.1 as u64) << 40),
+    ));
+    cmds.push(Cmd::write_u64(hx::CFG_START, 1));
+
+    let mut asm = Fragment::new();
+    asm.push("HLSCNN_ILA.wr_act", &["%fmap"])
+        .push("HLSCNN_ILA.wr_wgt", &["%filters"])
+        .push("HLSCNN_ILA.cfg_conv_shape", &["%c", "%h", "%w", "%o"])
+        .push("HLSCNN_ILA.cfg_conv_kernel", &["%k", "%s", "%p"])
+        .push("HLSCNN_ILA.conv_start", &[])
+        .push("HLSCNN_ILA.rd_out", &["%out"]);
+
+    LoweredInvocation {
+        target: Target::Hlscnn,
+        asm,
+        cmds,
+        read: ReadPlan::HlscnnI16 { base: hx::OUT_BASE, shape: vec![1, o, oh, ow] },
+    }
+}
+
+// ----------------------------------------------------------------------
+// VTA lowering
+// ----------------------------------------------------------------------
+
+/// Lower `vta_gemm` (dense semantics).
+pub fn lower_vta_gemm(dev: &Vta, x: &Tensor, w: &Tensor) -> LoweredInvocation {
+    let (n, k) = (x.shape[0], x.shape[1]);
+    let m = w.shape[0];
+    let sx = dev.int8.select_scale(x.max_abs());
+    let sw = dev.int8.select_scale(w.max_abs());
+    let xc: Vec<u8> = x.data.iter().map(|&v| dev.int8.encode(v, sx) as u8).collect();
+    let wc: Vec<u8> = w.data.iter().map(|&v| dev.int8.encode(v, sw) as u8).collect();
+
+    let mut cmds = Vec::new();
+    stream_bytes(&mut cmds, vx::INP_BASE, &xc);
+    stream_bytes(&mut cmds, vx::WGT_BASE, &wc);
+    cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)));
+    cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)));
+
+    let mut asm = Fragment::new();
+    asm.push("VTA_ILA.load_inp", &["%x"])
+        .push("VTA_ILA.load_wgt", &["%w"])
+        .push("VTA_ILA.reset_acc", &[])
+        .push("VTA_ILA.gemm", &["%n", "%k", "%m"])
+        .push("VTA_ILA.store_out", &["%out"]);
+
+    LoweredInvocation {
+        target: Target::Vta,
+        asm,
+        cmds,
+        read: ReadPlan::VtaI32 { base: vx::ACC_BASE, shape: vec![n, m], scale: sx * sw },
+    }
+}
+
+// ----------------------------------------------------------------------
+// Result retrieval
+// ----------------------------------------------------------------------
+
+/// Execute a lowered invocation on a fresh ILA simulator of the right
+/// device and decode the result per its read plan.
+pub fn execute_lowered(
+    inv: &LoweredInvocation,
+    sim: &mut crate::ila::sim::IlaSim,
+) -> anyhow::Result<Tensor> {
+    sim.run(&inv.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+    read_result(inv, sim)
+}
+
+/// Decode a completed invocation's result from device state.
+pub fn read_result(
+    inv: &LoweredInvocation,
+    sim: &mut crate::ila::sim::IlaSim,
+) -> anyhow::Result<Tensor> {
+    let fetch = |sim: &mut crate::ila::sim::IlaSim,
+                 base: u64,
+                 nbytes: usize|
+     -> anyhow::Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(nbytes);
+        let mut addr = base;
+        while out.len() < nbytes {
+            let d = sim
+                .step(&Cmd::read(addr))
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .ok_or_else(|| anyhow::anyhow!("read returned no data"))?;
+            out.extend_from_slice(&d);
+            addr += 16;
+        }
+        out.truncate(nbytes);
+        Ok(out)
+    };
+    match &inv.read {
+        ReadPlan::FlexAf8 { base, shape } => {
+            let fmt = crate::numerics::adaptivfloat::AdaptivFloatFormat::new(8, 3);
+            let ob = sim
+                .step(&Cmd::read(fx::STATUS_OUT_BIAS))
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .unwrap()[0] as i8 as i32;
+            let n: usize = shape.iter().product();
+            let codes = fetch(sim, *base, n)?;
+            Ok(fx::decode_tensor(&fmt, &codes, ob, shape))
+        }
+        ReadPlan::HlscnnI16 { base, shape } => {
+            let n: usize = shape.iter().product();
+            let bytes = fetch(sim, *base, 2 * n)?;
+            let codes: Vec<i16> = bytes
+                .chunks(2)
+                .map(|p| i16::from_le_bytes(p.try_into().unwrap()))
+                .collect();
+            let dev = Hlscnn::default();
+            Ok(hx::decode_out_nchw(&dev, &codes, shape))
+        }
+        ReadPlan::VtaI32 { base, shape, scale } => {
+            let n: usize = shape.iter().product();
+            let bytes = fetch(sim, *base, 4 * n)?;
+            let vals: Vec<f32> = bytes
+                .chunks(4)
+                .map(|q| i32::from_le_bytes(q.try_into().unwrap()) as f32 * scale)
+                .collect();
+            Ok(Tensor::new(shape.clone(), vals))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::Accelerator;
+    use crate::ila::sim::IlaSim;
+    use crate::util::Rng;
+
+    #[test]
+    fn lowered_linear_runs_end_to_end() {
+        let dev = FlexAsr::new();
+        let mut rng = Rng::new(71);
+        let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
+        let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
+        let b = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
+        let inv = lower_flex_linear(&dev, &x, &w, &b);
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_lowered(&inv, &mut sim).unwrap();
+        // the MMIO result equals the tensor-level fast path modulo the
+        // codec roundtrip of operands
+        let expect = dev.linear(&x, &w, &b);
+        assert!(got.rel_error(&expect) < 0.02, "err {}", got.rel_error(&expect));
+        assert!(inv.asm.len() >= 8, "Fig. 5(c)-style fragment emitted");
+    }
+
+    #[test]
+    fn maxpool_chain_optimized_moves_less_data() {
+        let dev = FlexAsr::new();
+        let mut rng = Rng::new(72);
+        let t = dev.quant(&Tensor::randn(&[64, 64], &mut rng, 1.0));
+        let fused = lower_flex_maxpool_chain(&dev, &t, 4);
+        let naive = lower_flex_maxpool_chain_naive(&dev, &t, 4);
+        let naive_beats: usize = naive.iter().map(|i| i.data_beats()).sum();
+        // naive: 256+128+64+32 = 480 store beats (plus ~240 read-back
+        // beats not counted here since reads happen in read_result);
+        // fused: one 256-beat store. Require a clear win on stores alone.
+        assert!(
+            fused.data_beats() * 5 < naive_beats * 3,
+            "fused {} vs naive {naive_beats}",
+            fused.data_beats()
+        );
+
+        // and the fused program computes the right maxpool
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_lowered(&fused, &mut sim).unwrap();
+        let mut expect = t.clone();
+        for _ in 0..4 {
+            expect =
+                crate::ir::interp::eval_op(&crate::ir::Op::TempMaxPool, &[&expect])
+                    .unwrap();
+        }
+        assert!(got.rel_error(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn lowered_hlscnn_conv_end_to_end() {
+        let dev = Hlscnn::default();
+        let mut rng = Rng::new(73);
+        let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+        let inv = lower_hlscnn_conv2d(&dev, &x, &w, (1, 1), (1, 1));
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_lowered(&inv, &mut sim).unwrap();
+        let expect = dev.conv2d(&x, &w, (1, 1), (1, 1));
+        assert!(got.max_abs_diff(&expect) <= dev.cfg.act_fmt.step() + 1e-6);
+    }
+
+    #[test]
+    fn lowered_vta_gemm_end_to_end() {
+        let dev = Vta::new();
+        let mut rng = Rng::new(74);
+        let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
+        let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 1.0));
+        let inv = lower_vta_gemm(&dev, &x, &w);
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_lowered(&inv, &mut sim).unwrap();
+        let expect = dev.gemm(&x, &w);
+        assert_eq!(got.rel_error(&expect), 0.0, "VTA GEMM is exact");
+    }
+}

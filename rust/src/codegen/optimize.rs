@@ -1,0 +1,92 @@
+//! Data-transfer accounting and post-extraction program analysis for the
+//! §5.1 optimization study (Fig. 7 / the fig7 bench).
+//!
+//! The *rewrite-level* store/load cancellation lives in
+//! `rewrites::compiler_ir::data_movement_rules`; this module measures its
+//! effect on an extracted program and derives the fused lowering plan.
+
+use crate::ir::{Op, RecExpr};
+
+/// Data-movement statistics of an extracted program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransferStats {
+    pub stores: usize,
+    pub loads: usize,
+    pub compute: usize,
+}
+
+/// Count FlexASR data-movement ops and compute invocations.
+pub fn transfer_stats(expr: &RecExpr) -> TransferStats {
+    TransferStats {
+        stores: expr.count(|o| matches!(o, Op::FlexMaxpStore)),
+        loads: expr.count(|o| matches!(o, Op::FlexMaxpLoad)),
+        compute: expr.count(|o| matches!(o, Op::FlexMaxpool | Op::FlexMeanpool)),
+    }
+}
+
+/// Find maximal chains `load(pool^k(store(t)))` in a program; returns the
+/// chain lengths. A fully §5.1-optimized program has one chain of length
+/// k; the naive program has k chains of length 1.
+pub fn pool_chains(expr: &RecExpr) -> Vec<usize> {
+    let mut chains = Vec::new();
+    for node in &expr.nodes {
+        if !matches!(node.op, Op::FlexMaxpLoad) {
+            continue;
+        }
+        // walk down through consecutive pools
+        let mut len = 0usize;
+        let mut cur = node.children[0];
+        loop {
+            match &expr.nodes[cur].op {
+                Op::FlexMaxpool | Op::FlexMeanpool => {
+                    len += 1;
+                    cur = expr.nodes[cur].children[0];
+                }
+                Op::FlexMaxpStore => break,
+                _ => {
+                    len = 0;
+                    break;
+                }
+            }
+        }
+        if len > 0 {
+            chains.push(len);
+        }
+    }
+    chains
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parse::parse_sexpr;
+
+    #[test]
+    fn optimized_fig7_program_is_one_chain() {
+        let e = parse_sexpr(
+            "(reshape[63, 63] (fasr_maxp_load (fasr_maxpool (fasr_maxpool \
+             (fasr_maxpool (fasr_maxpool (fasr_maxp_store \
+             (windows_flatten<(4, 4),(2, 2)> %t))))))))",
+        )
+        .unwrap();
+        let st = transfer_stats(&e);
+        assert_eq!(st, TransferStats { stores: 1, loads: 1, compute: 4 });
+        assert_eq!(pool_chains(&e), vec![4]);
+    }
+
+    #[test]
+    fn naive_fig7_program_is_four_chains() {
+        let e = parse_sexpr(
+            "(reshape[63, 63] (fasr_maxp_load (fasr_maxpool (fasr_maxp_store \
+             (fasr_maxp_load (fasr_maxpool (fasr_maxp_store \
+             (fasr_maxp_load (fasr_maxpool (fasr_maxp_store \
+             (fasr_maxp_load (fasr_maxpool (fasr_maxp_store \
+             (windows_flatten<(4, 4),(2, 2)> %t))))))))))))))",
+        )
+        .unwrap();
+        let st = transfer_stats(&e);
+        assert_eq!(st.stores, 4);
+        assert_eq!(st.loads, 4);
+        assert_eq!(pool_chains(&e), vec![1, 1, 1, 1]);
+    }
+}

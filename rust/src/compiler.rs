@@ -1,0 +1,119 @@
+//! The end-to-end D2A compilation driver (Fig. 2): IR program → equality
+//! saturation (exact or flexible matching) → lowest-cost extraction.
+
+use crate::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits, StopReason};
+use crate::ir::shape::Shape;
+use crate::ir::{RecExpr, Target};
+use crate::rewrites::{rules_for, Matching};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// Result of one compilation run.
+#[derive(Debug, Clone)]
+pub struct CompileResult {
+    /// The extracted (rewritten) program.
+    pub expr: RecExpr,
+    /// Why saturation stopped.
+    pub stop: StopReason,
+    /// e-graph size at extraction time.
+    pub classes: usize,
+    pub nodes: usize,
+    /// wall-clock of saturation + extraction.
+    pub elapsed: Duration,
+}
+
+impl CompileResult {
+    /// Static accelerator invocations per target — the Table 1 metric.
+    pub fn invocations(&self, t: Target) -> usize {
+        self.expr.invocations(t)
+    }
+}
+
+/// Compile an [`crate::apps::App`], automatically including app-specific
+/// rules (the unrolled-LSTM mapping for LSTM-WLM, whose pattern is built
+/// for the app's exact step count — Appendix A).
+pub fn compile_app(
+    app: &crate::apps::App,
+    targets: &[Target],
+    mode: Matching,
+    limits: RunnerLimits,
+) -> CompileResult {
+    let mut extra = Vec::new();
+    if app.name == "LSTM-WLM" && targets.contains(&Target::FlexAsr) {
+        extra.push(crate::rewrites::accel::flexasr_unrolled_lstm(35, 650));
+    }
+    compile_with_extra(&app.expr, &app.shapes, targets, mode, limits, extra)
+}
+
+/// Compile `expr` for the given targets under the given matching mode.
+pub fn compile(
+    expr: &RecExpr,
+    shape_env: &HashMap<String, Shape>,
+    targets: &[Target],
+    mode: Matching,
+    limits: RunnerLimits,
+) -> CompileResult {
+    compile_with_extra(expr, shape_env, targets, mode, limits, Vec::new())
+}
+
+/// Compile with additional app-specific rewrite rules.
+pub fn compile_with_extra(
+    expr: &RecExpr,
+    shape_env: &HashMap<String, Shape>,
+    targets: &[Target],
+    mode: Matching,
+    limits: RunnerLimits,
+    extra: Vec<crate::egraph::Rewrite>,
+) -> CompileResult {
+    let start = Instant::now();
+    let mut eg = EGraph::new(shape_env.clone());
+    let root = eg.add_expr(expr);
+    let mut rules = rules_for(targets, mode);
+    rules.extend(extra);
+    let mut runner = Runner::new(limits);
+    let stop = runner.run(&mut eg, &rules);
+    let extractor = Extractor::new(&eg, AccelCost::for_targets(targets));
+    let best = extractor.extract(root);
+    CompileResult {
+        expr: best,
+        stop,
+        classes: eg.num_classes(),
+        nodes: eg.num_nodes(),
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn exact_vs_flexible_on_bare_dense() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        g.dense(x, w);
+        let expr = g.finish();
+        let env: HashMap<String, Shape> =
+            [("x".to_string(), vec![1usize, 8]), ("w".to_string(), vec![4, 8])]
+                .into_iter()
+                .collect();
+        let exact = compile(
+            &expr,
+            &env,
+            &[Target::FlexAsr],
+            Matching::Exact,
+            RunnerLimits::default(),
+        );
+        let flex = compile(
+            &expr,
+            &env,
+            &[Target::FlexAsr],
+            Matching::Flexible,
+            RunnerLimits::default(),
+        );
+        assert_eq!(exact.invocations(Target::FlexAsr), 0);
+        assert_eq!(flex.invocations(Target::FlexAsr), 1);
+    }
+}

@@ -1,0 +1,182 @@
+//! The validation coordinator: a worker-pool job scheduler that fans
+//! application-level co-simulation sweeps (2000 images / 100 sentences,
+//! Table 4) across threads, each worker owning its own accelerator model
+//! instances, and merges the partial reports.
+//!
+//! std::thread + channels (tokio is not in the offline vendored set — see
+//! DESIGN.md); the structure is the same leader/worker shape a
+//! distributed deployment would use.
+
+use crate::accel::{Accelerator, FlexAsr, Hlscnn, HlscnnConfig, Vta};
+use crate::ir::RecExpr;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Which accelerator configuration a sweep runs under (the Table 4
+/// "Original" vs "Updated" columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignRev {
+    /// As-published designs: HLSCNN 8-bit fixed-point weight store.
+    Original,
+    /// Post-co-design fix: HLSCNN 16-bit weights.
+    Updated,
+}
+
+/// Build the accelerator set for a design revision.
+pub fn accelerators(rev: DesignRev) -> Vec<Box<dyn Accelerator>> {
+    let (fa, hl) = match rev {
+        DesignRev::Original => {
+            (FlexAsr::original(), Hlscnn::new(HlscnnConfig::original()))
+        }
+        DesignRev::Updated => {
+            (FlexAsr::updated(), Hlscnn::new(HlscnnConfig::updated()))
+        }
+    };
+    vec![Box::new(fa), Box::new(hl), Box::new(Vta::new())]
+}
+
+/// Merged result of a distributed classification sweep.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub n: usize,
+    pub ref_correct: usize,
+    pub acc_correct: usize,
+    pub elapsed: Duration,
+    pub workers: usize,
+}
+
+impl SweepReport {
+    pub fn ref_accuracy(&self) -> f32 {
+        self.ref_correct as f32 / self.n as f32
+    }
+
+    pub fn acc_accuracy(&self) -> f32 {
+        self.acc_correct as f32 / self.n as f32
+    }
+
+    /// Average simulation time per data point (the Table 4 column).
+    pub fn time_per_point(&self) -> Duration {
+        self.elapsed / self.n.max(1) as u32
+    }
+}
+
+/// Run a classification co-simulation sweep over `images` with `workers`
+/// threads. Each worker instantiates its own accelerator models (they
+/// are stateless between invocations) and processes a strided shard.
+pub fn classify_sweep(
+    expr: &RecExpr,
+    weights: &HashMap<String, Tensor>,
+    images: &[Tensor],
+    labels: &[usize],
+    rev: DesignRev,
+    workers: usize,
+) -> SweepReport {
+    let start = Instant::now();
+    let expr = Arc::new(expr.clone());
+    let weights = Arc::new(weights.clone());
+    let images = Arc::new(images.to_vec());
+    let labels = Arc::new(labels.to_vec());
+    let (tx, rx) = mpsc::channel::<(usize, usize, usize)>();
+
+    let workers = workers.max(1);
+    let mut handles = Vec::new();
+    for wid in 0..workers {
+        let tx = tx.clone();
+        let expr = Arc::clone(&expr);
+        let weights = Arc::clone(&weights);
+        let images = Arc::clone(&images);
+        let labels = Arc::clone(&labels);
+        handles.push(thread::spawn(move || {
+            let accels = accelerators(rev);
+            let mut env = (*weights).clone();
+            let mut ref_c = 0usize;
+            let mut acc_c = 0usize;
+            let mut n = 0usize;
+            let mut idx = wid;
+            while idx < images.len() {
+                env.insert("x".to_string(), images[idx].clone());
+                if let Ok(r) = crate::ir::interp::eval(&expr, &env) {
+                    if r.argmax() == labels[idx] {
+                        ref_c += 1;
+                    }
+                }
+                if let Ok((a, _)) = crate::cosim::run_accelerated(&expr, &env, &accels)
+                {
+                    if a.argmax() == labels[idx] {
+                        acc_c += 1;
+                    }
+                }
+                n += 1;
+                idx += workers;
+            }
+            let _ = tx.send((ref_c, acc_c, n));
+        }));
+    }
+    drop(tx);
+
+    let mut report = SweepReport {
+        n: 0,
+        ref_correct: 0,
+        acc_correct: 0,
+        elapsed: Duration::ZERO,
+        workers,
+    };
+    for (r, a, n) in rx {
+        report.ref_correct += r;
+        report.acc_correct += a;
+        report.n += n;
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    report.elapsed = start.elapsed();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::util::Rng;
+
+    /// Sweep over a toy linear classifier: worker sharding must cover
+    /// every input exactly once and agree with the sequential path.
+    #[test]
+    fn sweep_matches_sequential() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.linear(x, w, b);
+        let expr = g.finish();
+        let mut rng = Rng::new(5);
+        let weights: HashMap<String, Tensor> = [
+            ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.5)),
+            ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let images: Vec<Tensor> =
+            (0..23).map(|_| Tensor::randn(&[1, 8], &mut rng, 1.0)).collect();
+        let labels: Vec<usize> = (0..23).map(|_| rng.below(4)).collect();
+
+        let seq = classify_sweep(&expr, &weights, &images, &labels, DesignRev::Updated, 1);
+        let par = classify_sweep(&expr, &weights, &images, &labels, DesignRev::Updated, 4);
+        assert_eq!(seq.n, 23);
+        assert_eq!(par.n, 23);
+        assert_eq!(seq.ref_correct, par.ref_correct);
+        assert_eq!(seq.acc_correct, par.acc_correct);
+    }
+
+    #[test]
+    fn design_revisions_differ() {
+        let orig = accelerators(DesignRev::Original);
+        let upd = accelerators(DesignRev::Updated);
+        assert_eq!(orig.len(), 3);
+        assert_eq!(upd.len(), 3);
+    }
+}

@@ -1,0 +1,213 @@
+//! Compilation-results validation by simulation (§4.4): operation-level
+//! checking of IR-accelerator mappings (Table 2) and application-level
+//! co-simulation (Table 4).
+//!
+//! The co-sim driver evaluates a *compiled* program (accelerator ops
+//! present after flexible matching) through the f32 interpreter with an
+//! [`AccelHook`] that reroutes every accelerator node to the bit-accurate
+//! ILA fast path — so host regions run IR semantics and offloaded regions
+//! run the accelerator's exact custom numerics, just like the ILAng-based
+//! co-simulation in the paper.
+
+pub mod stats;
+pub mod table2;
+
+use crate::accel::{accel_for, Accelerator};
+use crate::ir::interp::{eval_with_hook, EvalError, EvalHook};
+use crate::ir::{Node, RecExpr};
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Evaluation hook that dispatches accelerator ops to ILA models and
+/// records per-invocation error statistics against the f32 semantics.
+pub struct AccelHook<'a> {
+    pub accels: &'a [Box<dyn Accelerator>],
+    /// number of accelerator invocations executed
+    pub invocations: usize,
+    /// per-invocation relative error vs the f32 op semantics (the
+    /// debugging statistics of §4.4.2)
+    pub inv_errors: Vec<f32>,
+    /// record per-invocation errors (costs an extra f32 evaluation)
+    pub track_errors: bool,
+}
+
+impl<'a> AccelHook<'a> {
+    pub fn new(accels: &'a [Box<dyn Accelerator>]) -> Self {
+        AccelHook { accels, invocations: 0, inv_errors: Vec::new(), track_errors: false }
+    }
+}
+
+impl EvalHook for AccelHook<'_> {
+    fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Option<Tensor> {
+        let accel = accel_for(self.accels, &node.op)?;
+        let out = accel.exec_op(&node.op, ch)?;
+        if node.op.is_accel_invocation() {
+            self.invocations += 1;
+            if self.track_errors {
+                if let Ok(reference) = crate::ir::interp::eval_op(&node.op, ch) {
+                    self.inv_errors.push(out.rel_error(&reference));
+                }
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Evaluate a compiled program with accelerator numerics.
+pub fn run_accelerated(
+    expr: &RecExpr,
+    env: &HashMap<String, Tensor>,
+    accels: &[Box<dyn Accelerator>],
+) -> Result<(Tensor, usize), EvalError> {
+    let mut hook = AccelHook::new(accels);
+    let out = eval_with_hook(expr, env, &mut hook)?;
+    Ok((out, hook.invocations))
+}
+
+/// Classification co-simulation over a dataset slice: returns
+/// (reference accuracy, accelerated accuracy, #invocations/image).
+pub fn cosim_classifier(
+    expr: &RecExpr,
+    weights: &HashMap<String, Tensor>,
+    images: &[Tensor],
+    labels: &[usize],
+    accels: &[Box<dyn Accelerator>],
+) -> Result<ClassifierReport, EvalError> {
+    let mut env = weights.clone();
+    let mut ref_correct = 0usize;
+    let mut acc_correct = 0usize;
+    let mut invocations = 0usize;
+    for (img, &label) in images.iter().zip(labels) {
+        env.insert("x".to_string(), img.clone());
+        let r = crate::ir::interp::eval(expr, &env)?;
+        if r.argmax() == label {
+            ref_correct += 1;
+        }
+        let (a, inv) = run_accelerated(expr, &env, accels)?;
+        if a.argmax() == label {
+            acc_correct += 1;
+        }
+        invocations = inv;
+    }
+    Ok(ClassifierReport {
+        n: images.len(),
+        ref_accuracy: ref_correct as f32 / images.len() as f32,
+        acc_accuracy: acc_correct as f32 / images.len() as f32,
+        invocations_per_input: invocations,
+    })
+}
+
+/// Result of a classification co-simulation.
+#[derive(Debug, Clone)]
+pub struct ClassifierReport {
+    pub n: usize,
+    pub ref_accuracy: f32,
+    pub acc_accuracy: f32,
+    pub invocations_per_input: usize,
+}
+
+/// Language-model co-simulation: per-token perplexity over `n_sentences`
+/// consecutive (SEQ_LEN+1)-token windows, reference vs accelerated.
+pub fn cosim_lm(
+    expr: &RecExpr,
+    weights: &HashMap<String, Tensor>,
+    embed: &Tensor,
+    tokens: &[usize],
+    n_sentences: usize,
+    accels: &[Box<dyn Accelerator>],
+) -> Result<LmReport, EvalError> {
+    let seq_len = 16usize;
+    let e = embed.shape[1];
+    let mut env = weights.clone();
+    let mut nll_ref = 0.0f64;
+    let mut nll_acc = 0.0f64;
+    let mut count = 0usize;
+    for s in 0..n_sentences {
+        let w = &tokens[s * (seq_len + 1)..(s + 1) * (seq_len + 1)];
+        // embedding lookup on the host (as in the paper's runtime)
+        let mut x = vec![0.0f32; seq_len * e];
+        for (t, &tok) in w[..seq_len].iter().enumerate() {
+            x[t * e..(t + 1) * e]
+                .copy_from_slice(&embed.data[tok * e..(tok + 1) * e]);
+        }
+        env.insert("x_seq".to_string(), Tensor::new(vec![seq_len, 1, e], x));
+        let logits_ref = crate::ir::interp::eval(expr, &env)?;
+        let (logits_acc, _) = run_accelerated(expr, &env, accels)?;
+        for t in 0..seq_len {
+            let target = w[t + 1];
+            nll_ref += -log_softmax_at(&logits_ref, t, target) as f64;
+            nll_acc += -log_softmax_at(&logits_acc, t, target) as f64;
+            count += 1;
+        }
+    }
+    Ok(LmReport {
+        sentences: n_sentences,
+        ref_perplexity: (nll_ref / count as f64).exp() as f32,
+        acc_perplexity: (nll_acc / count as f64).exp() as f32,
+    })
+}
+
+/// Result of a language-model co-simulation.
+#[derive(Debug, Clone)]
+pub struct LmReport {
+    pub sentences: usize,
+    pub ref_perplexity: f32,
+    pub acc_perplexity: f32,
+}
+
+fn log_softmax_at(logits: &Tensor, row: usize, idx: usize) -> f32 {
+    let c = *logits.shape.last().unwrap();
+    let r = &logits.data[row * c..(row + 1) * c];
+    let m = r.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let lse = m + r.iter().map(|&v| (v - m).exp()).sum::<f32>().ln();
+    r[idx] - lse
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::{FlexAsr, Hlscnn, Vta};
+    use crate::ir::{GraphBuilder, Op};
+    use crate::util::Rng;
+
+    fn accels() -> Vec<Box<dyn Accelerator>> {
+        vec![
+            Box::new(FlexAsr::new()),
+            Box::new(Hlscnn::default()),
+            Box::new(Vta::new()),
+        ]
+    }
+
+    #[test]
+    fn hook_reroutes_accel_ops_and_counts() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        let lin = g.expr.add(Op::FlexLinear, vec![x, w, b]);
+        let _ = g.expr.add(Op::Relu, vec![lin]);
+        let expr = g.finish();
+        let mut rng = Rng::new(1);
+        let env: HashMap<String, Tensor> = [
+            ("x".to_string(), Tensor::randn(&[2, 8], &mut rng, 1.0)),
+            ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.3)),
+            ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let accels = accels();
+        let (out, inv) = run_accelerated(&expr, &env, &accels).unwrap();
+        assert_eq!(inv, 1);
+        // accelerated result differs from f32 (AdaptivFloat) but not by much
+        let reference = crate::ir::interp::eval(&expr, &env).unwrap();
+        let e = out.rel_error(&reference);
+        assert!(e > 0.0 && e < 0.1, "e={e}");
+    }
+
+    #[test]
+    fn lm_log_softmax_sane() {
+        let t = Tensor::new(vec![1, 3], vec![0.0, 0.0, 0.0]);
+        let l = log_softmax_at(&t, 0, 1);
+        assert!((l - (1.0f32 / 3.0).ln()).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,54 @@
+//! Error statistics for simulation-based validation (Table 2's metric).
+
+/// Mean and standard deviation of a set of relative errors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ErrorStats {
+    pub mean: f32,
+    pub std_dev: f32,
+    pub n: usize,
+}
+
+impl ErrorStats {
+    /// Compute from a sample of relative errors.
+    pub fn from_samples(samples: &[f32]) -> ErrorStats {
+        let n = samples.len();
+        if n == 0 {
+            return ErrorStats { mean: 0.0, std_dev: 0.0, n: 0 };
+        }
+        let mean = samples.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var = samples
+            .iter()
+            .map(|&x| (x as f64 - mean).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        ErrorStats { mean: mean as f32, std_dev: var.sqrt() as f32, n }
+    }
+
+    /// Render as the paper's "x.xx%" format.
+    pub fn pct(&self) -> (String, String) {
+        (
+            format!("{:.2}%", self.mean * 100.0),
+            format!("{:.2}%", self.std_dev * 100.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = ErrorStats::from_samples(&[0.01, 0.03]);
+        assert!((s.mean - 0.02).abs() < 1e-6);
+        assert!((s.std_dev - 0.01).abs() < 1e-6);
+        assert_eq!(s.pct().0, "2.00%");
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let s = ErrorStats::from_samples(&[]);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.n, 0);
+    }
+}

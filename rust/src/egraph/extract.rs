@@ -1,0 +1,256 @@
+//! Cost-based extraction from a saturated e-graph.
+//!
+//! The paper's proof-of-concept cost function "maximizes the number of
+//! accelerator operations" (§3). We realize that as min-cost extraction
+//! where accelerator invocations are near-free and host compute is
+//! expensive in proportion to its arithmetic volume, so any available
+//! offload is always selected and, among host implementations, cheaper
+//! structure wins.
+
+use super::EGraph;
+use crate::ir::{Id, Node, Op, RecExpr, Target};
+use std::collections::HashMap;
+
+/// Operator cost model.
+pub trait CostFn {
+    fn op_cost(&self, op: &Op) -> f64;
+}
+
+/// The accelerator-maximizing cost model used for Table 1.
+///
+/// `enabled` restricts which accelerators are considered available: an op
+/// for a *disabled* accelerator costs infinity so extraction can never
+/// pick it (the paper compiles per-target).
+pub struct AccelCost {
+    pub enabled: Vec<Target>,
+}
+
+impl AccelCost {
+    pub fn for_target(t: Target) -> Self {
+        AccelCost { enabled: vec![t] }
+    }
+
+    pub fn for_targets(ts: &[Target]) -> Self {
+        AccelCost { enabled: ts.to_vec() }
+    }
+}
+
+impl CostFn for AccelCost {
+    fn op_cost(&self, op: &Op) -> f64 {
+        use Op::*;
+        let target = op.target();
+        if target != Target::Host && !self.enabled.contains(&target) {
+            return f64::INFINITY;
+        }
+        match op {
+            // leaves are free
+            Var(_) | Weight(_) | ConstScalar(_) | ZeroTensor(_) => 0.0,
+            // accelerator invocations: near-free so offloads always win
+            FlexLinear | FlexLstm { .. } | FlexLstmFused { .. } | FlexLayerNorm | FlexMaxpool
+            | FlexMeanpool | FlexAttention | HlscnnConv2d { .. } | VtaGemm
+            | VtaAdd => 1.0,
+            // accelerator data movement: cheap but non-zero, so the §5.1
+            // store/load-cancellation rewrite strictly improves cost
+            FlexMaxpStore | FlexMaxpLoad => 0.5,
+            // host compute, scaled by rough arithmetic volume
+            Lstm { steps } => 50_000.0 * *steps as f64,
+            Conv2d { .. } => 100_000.0,
+            Dense => 10_000.0,
+            Attention => 20_000.0,
+            LayerNorm => 2_000.0,
+            MatMaxPool { .. } | MatMeanPool { .. } | MaxPool2d { .. }
+            | AvgPool2d { .. } => 1_500.0,
+            TempMaxPool | TempMeanPool => 1_000.0,
+            Softmax | Gelu | Tanh | Sigmoid | Relu | Mul | Add | BiasAdd => 100.0,
+            GlobalAvgPool => 100.0,
+            // structural ops are cheap
+            Reshape(_) | Transpose | Concat | ConcatRows | SliceStep { .. }
+            | SliceCols { .. } | WindowsFlatten { .. } | Im2col { .. }
+            | FromIm2col { .. } => 10.0,
+        }
+    }
+}
+
+/// Extracts the min-cost representative of each e-class.
+pub struct Extractor<'a, C: CostFn> {
+    eg: &'a EGraph,
+    cost_fn: C,
+    /// best (cost, node) per canonical class
+    best: HashMap<Id, (f64, Node)>,
+}
+
+impl<'a, C: CostFn> Extractor<'a, C> {
+    /// Compute best costs for every class (fixpoint over the possibly
+    /// cyclic e-graph; classes with no finite-cost term stay absent).
+    pub fn new(eg: &'a EGraph, cost_fn: C) -> Self {
+        let mut ex = Extractor { eg, cost_fn, best: HashMap::new() };
+        ex.compute();
+        ex
+    }
+
+    fn node_cost(&self, node: &Node) -> Option<f64> {
+        let mut total = self.cost_fn.op_cost(&node.op);
+        if !total.is_finite() {
+            return None;
+        }
+        for &c in &node.children {
+            let cc = self.eg.find_imm(c);
+            total += self.best.get(&cc)?.0;
+        }
+        total.is_finite().then_some(total)
+    }
+
+    fn compute(&mut self) {
+        loop {
+            let mut changed = false;
+            for (id, class) in self.eg.iter_classes() {
+                for node in &class.nodes {
+                    if let Some(cost) = self.node_cost(node) {
+                        // Tree costs of deeply shared graphs (the unrolled
+                        // LSTM) grow past f64 resolution, where a cheaper
+                        // op no longer registers as strictly better; break
+                        // ties by local op cost so accelerator ops still
+                        // win (relative epsilon, then op-cost tiebreak).
+                        // a self-referential node (e.g. `bias_add(D, 0)`
+                        // living inside class D after dense-zero-add) must
+                        // never win a tie: extracting it would loop.
+                        let self_ref = node
+                            .children
+                            .iter()
+                            .any(|&c| self.eg.find_imm(c) == id);
+                        let better = match self.best.get(&id) {
+                            Some((old, old_node)) => {
+                                let eps = 1e-9 * old.abs().max(1.0);
+                                cost < *old - eps
+                                    || (!self_ref
+                                        && cost <= *old + eps
+                                        && self.cost_fn.op_cost(&node.op) + 1e-9
+                                            < self.cost_fn.op_cost(&old_node.op))
+                            }
+                            None => true,
+                        };
+                        if better {
+                            self.best.insert(id, (cost, node.clone()));
+                            changed = true;
+                        }
+                    }
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+    }
+
+    /// Best cost of a class, if any term is extractable.
+    pub fn cost_of(&self, id: Id) -> Option<f64> {
+        self.best.get(&self.eg.find_imm(id)).map(|(c, _)| *c)
+    }
+
+    /// Extract the min-cost program rooted at `root` as a RecExpr
+    /// (hash-consed, topologically ordered).
+    pub fn extract(&self, root: Id) -> RecExpr {
+        let mut expr = RecExpr::new();
+        let mut memo: HashMap<Id, usize> = HashMap::new();
+        let root = self.eg.find_imm(root);
+        self.extract_rec(root, &mut expr, &mut memo);
+        expr
+    }
+
+    fn extract_rec(
+        &self,
+        id: Id,
+        expr: &mut RecExpr,
+        memo: &mut HashMap<Id, usize>,
+    ) -> usize {
+        if let Some(&i) = memo.get(&id) {
+            return i;
+        }
+        let (_, node) = self
+            .best
+            .get(&id)
+            .unwrap_or_else(|| panic!("class {id} has no extractable term"));
+        let children: Vec<usize> = node
+            .children
+            .iter()
+            .map(|&c| self.extract_rec(self.eg.find_imm(c), expr, memo))
+            .collect();
+        let i = expr.add(node.op.clone(), children);
+        memo.insert(id, i);
+        i
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::pattern::dsl::*;
+    use crate::egraph::Rewrite;
+    use crate::ir::shape::Shape;
+    use std::collections::HashMap as Map;
+
+    fn env() -> Map<String, Shape> {
+        [
+            ("x".to_string(), vec![2usize, 4]),
+            ("w".to_string(), vec![3, 4]),
+            ("b".to_string(), vec![3]),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn extraction_prefers_accelerator() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let b = eg.add(Op::Weight("b".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let root = eg.add(Op::BiasAdd, vec![d, b]);
+        let rw = Rewrite::pure(
+            "linear-to-flexasr",
+            n(Op::BiasAdd, vec![n(Op::Dense, vec![v("x"), v("w")]), v("b")]),
+            n(Op::FlexLinear, vec![v("x"), v("w"), v("b")]),
+        );
+        rw.run(&mut eg);
+        eg.rebuild();
+        let ex = Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr));
+        let best = ex.extract(root);
+        assert_eq!(best.invocations(Target::FlexAsr), 1);
+        assert_eq!(best.count(|o| matches!(o, Op::Dense)), 0);
+    }
+
+    #[test]
+    fn disabled_target_never_extracted() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let g = eg.add(Op::VtaGemm, vec![x, w]);
+        eg.union(d, g);
+        eg.rebuild();
+        // FlexASR-only compilation: VTA op must not be chosen
+        let ex = Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr));
+        let best = ex.extract(d);
+        assert_eq!(best.invocations(Target::Vta), 0);
+        assert_eq!(best.count(|o| matches!(o, Op::Dense)), 1);
+    }
+
+    #[test]
+    fn cyclic_class_extracts_finite_term() {
+        // dense -> bias_add(dense, 0) creates a cycle; extraction must
+        // still terminate with the finite representative.
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let z = eg.add(Op::ZeroTensor(vec![3]), vec![]);
+        let ba = eg.add(Op::BiasAdd, vec![d, z]);
+        eg.union(d, ba);
+        eg.rebuild();
+        let ex = Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr));
+        let best = ex.extract(d);
+        assert!(best.len() >= 3);
+        assert!(ex.cost_of(d).unwrap().is_finite());
+    }
+}

@@ -1,0 +1,299 @@
+//! An egg-style e-graph with equality saturation (Willsey et al., POPL'21),
+//! built from scratch for the D2A flexible-matching pass (§2.2).
+//!
+//! The e-graph compactly represents the exponential space of rewritten
+//! programs; saturation applies compiler-IR rewrites and IR-accelerator
+//! rewrites to a fixed point (or a node/iteration budget); extraction then
+//! picks the representative that maximizes accelerator offloads.
+//!
+//! Each e-class carries a *shape analysis* value (egg's "analysis"
+//! mechanism): the inferred tensor shape, which shape-dependent dynamic
+//! rewrites (dense+zero-add, im2col) consult.
+
+pub mod extract;
+pub mod pattern;
+pub mod rewrite;
+pub mod runner;
+pub mod unionfind;
+
+pub use extract::{AccelCost, CostFn, Extractor};
+pub use pattern::{Pattern, Subst};
+pub use rewrite::{Applier, Rewrite};
+pub use runner::{Runner, RunnerLimits, StopReason};
+
+use crate::ir::shape::{infer_op, Shape};
+use crate::ir::{Id, Node, Op, RecExpr};
+use std::collections::HashMap;
+use unionfind::UnionFind;
+
+/// One equivalence class of e-nodes.
+#[derive(Debug, Clone, Default)]
+pub struct EClass {
+    /// E-nodes in this class (children canonical as of the last rebuild).
+    pub nodes: Vec<Node>,
+    /// Parent e-nodes (and the class they live in) — used for congruence
+    /// repair during rebuild.
+    pub parents: Vec<(Node, Id)>,
+    /// Shape analysis value (None when inference failed / leaves unknown).
+    pub shape: Option<Shape>,
+}
+
+/// The e-graph.
+pub struct EGraph {
+    uf: UnionFind,
+    /// canonical id -> class (non-canonical keys are stale and absent).
+    pub classes: HashMap<Id, EClass>,
+    /// canonicalized node -> class id (the hashcons).
+    memo: HashMap<Node, Id>,
+    /// classes touched by unions since the last rebuild.
+    dirty: Vec<Id>,
+    /// shapes of `Var`/`Weight` leaves for the shape analysis.
+    pub shape_env: HashMap<String, Shape>,
+    /// total e-nodes added (monotonic; the saturation budget metric).
+    pub nodes_added: usize,
+}
+
+impl EGraph {
+    /// Create an empty e-graph with the given leaf-shape environment.
+    pub fn new(shape_env: HashMap<String, Shape>) -> Self {
+        EGraph {
+            uf: UnionFind::new(),
+            classes: HashMap::new(),
+            memo: HashMap::new(),
+            dirty: Vec::new(),
+            shape_env,
+            nodes_added: 0,
+        }
+    }
+
+    /// Canonical id.
+    pub fn find(&mut self, id: Id) -> Id {
+        self.uf.find(id)
+    }
+
+    /// Canonical id without path compression (immutable contexts).
+    pub fn find_imm(&self, id: Id) -> Id {
+        self.uf.find_imm(id)
+    }
+
+    /// Canonicalize a node's children.
+    fn canonicalize(&mut self, node: &Node) -> Node {
+        Node {
+            op: node.op.clone(),
+            children: node.children.iter().map(|&c| self.uf.find(c)).collect(),
+        }
+    }
+
+    fn compute_shape(&self, node: &Node) -> Option<Shape> {
+        let child_shapes: Option<Vec<&Shape>> = node
+            .children
+            .iter()
+            .map(|&c| self.classes.get(&self.find_imm(c)).and_then(|cl| cl.shape.as_ref()))
+            .collect();
+        infer_op(&node.op, &child_shapes?, &self.shape_env).ok()
+    }
+
+    /// Add an e-node; returns its class id (existing class when the node
+    /// is already present — hash-consing).
+    pub fn add(&mut self, op: Op, children: Vec<Id>) -> Id {
+        let node = self.canonicalize(&Node::new(op, children));
+        if let Some(&id) = self.memo.get(&node) {
+            return self.uf.find(id);
+        }
+        let id = self.uf.make_set();
+        let shape = self.compute_shape(&node);
+        let class = EClass { nodes: vec![node.clone()], parents: Vec::new(), shape };
+        self.classes.insert(id, class);
+        self.memo.insert(node.clone(), id);
+        for &c in &node.children {
+            let cc = self.uf.find(c);
+            self.classes.get_mut(&cc).unwrap().parents.push((node.clone(), id));
+        }
+        self.nodes_added += 1;
+        id
+    }
+
+    /// Add a whole RecExpr; returns the class of its root.
+    pub fn add_expr(&mut self, expr: &RecExpr) -> Id {
+        let mut map: Vec<Id> = Vec::with_capacity(expr.len());
+        for node in &expr.nodes {
+            let children = node.children.iter().map(|&c| map[c]).collect();
+            map.push(self.add(node.op.clone(), children));
+        }
+        *map.last().expect("empty expr")
+    }
+
+    /// Assert two classes equal. Returns the canonical id; `changed` is
+    /// false when they were already equal.
+    pub fn union(&mut self, a: Id, b: Id) -> (Id, bool) {
+        let ra = self.uf.find(a);
+        let rb = self.uf.find(b);
+        if ra == rb {
+            return (ra, false);
+        }
+        let (winner, loser) = self.uf.union(ra, rb);
+        let lost = self.classes.remove(&loser).expect("loser class must exist");
+        let win = self.classes.get_mut(&winner).expect("winner class must exist");
+        win.nodes.extend(lost.nodes);
+        win.parents.extend(lost.parents);
+        // merge analysis: shapes must agree when both known (they describe
+        // the same value); keep whichever is known.
+        win.shape = match (win.shape.take(), lost.shape) {
+            (Some(a), Some(b)) => {
+                debug_assert_eq!(a, b, "shape analysis disagrees on merged class");
+                Some(a)
+            }
+            (a, b) => a.or(b),
+        };
+        self.dirty.push(winner);
+        (winner, true)
+    }
+
+    /// Restore the congruence invariant after unions (egg's `rebuild`).
+    pub fn rebuild(&mut self) {
+        while let Some(id) = self.dirty.pop() {
+            let id = self.uf.find(id);
+            let parents = match self.classes.get_mut(&id) {
+                Some(c) => std::mem::take(&mut c.parents),
+                None => continue,
+            };
+            let mut new_parents: Vec<(Node, Id)> = Vec::with_capacity(parents.len());
+            for (pnode, pclass) in parents {
+                let canon = self.canonicalize(&pnode);
+                self.memo.remove(&pnode);
+                let pclass = self.uf.find(pclass);
+                if let Some(&existing) = self.memo.get(&canon) {
+                    // congruence: two parents became identical -> union
+                    let (_, changed) = self.union(existing, pclass);
+                    if changed {
+                        // the union pushed onto dirty; continue
+                    }
+                } else {
+                    self.memo.insert(canon.clone(), pclass);
+                }
+                new_parents.push((canon, self.uf.find(pclass)));
+            }
+            let id = self.uf.find(id);
+            if let Some(c) = self.classes.get_mut(&id) {
+                c.parents.extend(new_parents);
+                // canonicalize and dedup the class's own nodes
+                let mut nodes = std::mem::take(&mut c.nodes);
+                for n in &mut nodes {
+                    for ch in &mut n.children {
+                        *ch = self.uf.find_imm(*ch);
+                    }
+                }
+                nodes.sort_unstable();
+                nodes.dedup();
+                self.classes.get_mut(&id).unwrap().nodes = nodes;
+            }
+        }
+        // refresh shapes where newly computable
+        self.propagate_shapes();
+    }
+
+    /// Propagate shape analysis to classes that gained computable shapes.
+    fn propagate_shapes(&mut self) {
+        loop {
+            let mut updates: Vec<(Id, Shape)> = Vec::new();
+            for (&id, class) in &self.classes {
+                if class.shape.is_some() {
+                    continue;
+                }
+                for node in &class.nodes {
+                    if let Some(s) = self.compute_shape(node) {
+                        updates.push((id, s));
+                        break;
+                    }
+                }
+            }
+            if updates.is_empty() {
+                break;
+            }
+            for (id, s) in updates {
+                self.classes.get_mut(&id).unwrap().shape = Some(s);
+            }
+        }
+    }
+
+    /// Shape of a class, if known.
+    pub fn shape_of(&self, id: Id) -> Option<&Shape> {
+        self.classes.get(&self.find_imm(id)).and_then(|c| c.shape.as_ref())
+    }
+
+    /// Number of canonical e-classes.
+    pub fn num_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Total e-nodes across all classes.
+    pub fn num_nodes(&self) -> usize {
+        self.classes.values().map(|c| c.nodes.len()).sum()
+    }
+
+    /// Iterate canonical (id, class) pairs.
+    pub fn iter_classes(&self) -> impl Iterator<Item = (Id, &EClass)> {
+        self.classes.iter().map(|(&id, c)| (id, c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> HashMap<String, Shape> {
+        [("x".to_string(), vec![2usize, 4]), ("w".to_string(), vec![3, 4])]
+            .into_iter()
+            .collect()
+    }
+
+    #[test]
+    fn hashcons_dedups() {
+        let mut eg = EGraph::new(env());
+        let x1 = eg.add(Op::Var("x".into()), vec![]);
+        let x2 = eg.add(Op::Var("x".into()), vec![]);
+        assert_eq!(x1, x2);
+        assert_eq!(eg.num_classes(), 1);
+    }
+
+    #[test]
+    fn shape_analysis_computed_on_add() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        assert_eq!(eg.shape_of(d), Some(&vec![2, 3]));
+    }
+
+    #[test]
+    fn union_merges_and_rebuild_restores_congruence() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        // two distinct leaves a, b
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let b = eg.add(Op::Var("b".into()), vec![]);
+        let fa = eg.add(Op::Relu, vec![a]);
+        let fb = eg.add(Op::Relu, vec![b]);
+        assert_ne!(eg.find(fa), eg.find(fb));
+        eg.union(a, b);
+        eg.rebuild();
+        // congruence: relu(a) == relu(b) after a == b
+        assert_eq!(eg.find(fa), eg.find(fb));
+        let _ = (x, w);
+    }
+
+    #[test]
+    fn add_expr_roundtrip() {
+        let mut g = crate::ir::GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let d = g.dense(x, w);
+        g.relu(d);
+        let expr = g.finish();
+        let mut eg = EGraph::new(env());
+        let root = eg.add_expr(&expr);
+        assert!(eg.classes.contains_key(&eg.find_imm(root)));
+        assert_eq!(eg.num_classes(), 4);
+    }
+}

@@ -1,0 +1,348 @@
+//! Pattern language and e-matching.
+//!
+//! Patterns are trees of operator nodes and pattern variables (`?x`).
+//! Operator positions may be exact ([`PatternNode::Node`]) or predicated
+//! ([`PatternNode::AnyOp`]) — the latter matches a family of operators
+//! (e.g. `Conv2d` with any stride/pad) and records the concrete operator
+//! in the substitution so dynamic appliers can transfer its parameters to
+//! the right-hand side.
+
+use super::EGraph;
+use crate::ir::{Id, Op};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Shared pattern handle. Patterns are DAGs: repeated subtrees (e.g. the
+/// 4 gate references to the same `gates` subterm in the unrolled-LSTM
+/// pattern) are shared, so cloning is O(1) and deep recurrent patterns
+/// stay linear in size.
+pub type Pat = Arc<PatternNode>;
+
+/// Operator predicate for `AnyOp` pattern positions.
+pub type OpPred = fn(&Op) -> bool;
+
+/// A pattern node (always handled through [`Pat`]).
+#[derive(Clone)]
+pub enum PatternNode {
+    /// Pattern variable `?name`: matches any e-class, binds it.
+    Var(String),
+    /// Exact operator with sub-patterns.
+    Node(Op, Vec<Pat>),
+    /// Predicated operator: matches any op satisfying `pred`; the concrete
+    /// op is bound under `bind` in the substitution.
+    AnyOp { bind: String, pred: OpPred, children: Vec<Pat> },
+}
+
+impl std::fmt::Debug for PatternNode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PatternNode::Var(v) => write!(f, "?{v}"),
+            PatternNode::Node(op, ch) => write!(f, "({} {ch:?})", op.head()),
+            PatternNode::AnyOp { bind, children, .. } => {
+                write!(f, "(<{bind}> {children:?})")
+            }
+        }
+    }
+}
+
+/// A top-level pattern.
+#[derive(Debug, Clone)]
+pub struct Pattern {
+    pub root: Pat,
+}
+
+/// One substitution: pattern-var -> e-class, op-binder -> concrete op.
+#[derive(Debug, Clone, Default)]
+pub struct Subst {
+    pub vars: HashMap<String, Id>,
+    pub ops: HashMap<String, Op>,
+}
+
+impl Subst {
+    /// Bound e-class for `?name` (panics when the rewrite promised it).
+    pub fn class(&self, name: &str) -> Id {
+        *self.vars.get(name).unwrap_or_else(|| panic!("unbound pattern var ?{name}"))
+    }
+
+    /// Bound operator for an `AnyOp` binder.
+    pub fn op(&self, name: &str) -> &Op {
+        self.ops.get(name).unwrap_or_else(|| panic!("unbound op binder <{name}>"))
+    }
+}
+
+/// A match: the e-class the pattern root matched, plus the substitution.
+#[derive(Debug, Clone)]
+pub struct Match {
+    pub class: Id,
+    pub subst: Subst,
+}
+
+impl Pattern {
+    /// Build from a pattern node.
+    pub fn new(root: Pat) -> Self {
+        Pattern { root }
+    }
+
+    /// Search the whole e-graph; returns every (class, substitution) pair.
+    pub fn search(&self, eg: &EGraph) -> Vec<Match> {
+        let mut out = Vec::new();
+        let mut memo = MatchMemo::default();
+        for (id, _) in eg.iter_classes() {
+            self.search_class_memo(eg, id, &mut out, &mut memo);
+        }
+        out
+    }
+
+    /// Search one e-class.
+    pub fn search_class(&self, eg: &EGraph, class: Id, out: &mut Vec<Match>) {
+        let mut memo = MatchMemo::default();
+        self.search_class_memo(eg, class, out, &mut memo);
+    }
+
+    fn search_class_memo(
+        &self,
+        eg: &EGraph,
+        class: Id,
+        out: &mut Vec<Match>,
+        memo: &mut MatchMemo,
+    ) {
+        let mut subst = Subst::default();
+        let mut results = Vec::new();
+        match_node(&self.root, eg, eg.find_imm(class), &mut subst, &mut results, memo);
+        for s in results {
+            out.push(Match { class: eg.find_imm(class), subst: s });
+        }
+    }
+}
+
+/// Memo table for DAG-shaped patterns: (pattern node identity, e-class,
+/// incoming bindings) -> completed substitutions. Without this, matching
+/// a shared recurrent subpattern (the unrolled LSTM) re-expands the DAG
+/// as a tree — exponential time.
+type MemoKey = (usize, Id, Vec<(String, Id)>);
+
+#[derive(Default)]
+pub struct MatchMemo {
+    table: HashMap<MemoKey, Vec<Subst>>,
+}
+
+fn subst_fingerprint(s: &Subst) -> Vec<(String, Id)> {
+    let mut v: Vec<(String, Id)> = s.vars.iter().map(|(k, &i)| (k.clone(), i)).collect();
+    v.sort();
+    v
+}
+
+/// Recursive backtracking e-matching: try to match `pat` against e-class
+/// `class`, extending `subst`; push every completed substitution.
+fn match_node(
+    pat: &Pat,
+    eg: &EGraph,
+    class: Id,
+    subst: &mut Subst,
+    out: &mut Vec<Subst>,
+    memo: &mut MatchMemo,
+) {
+    match pat.as_ref() {
+        PatternNode::Var(name) => {
+            if let Some(&bound) = subst.vars.get(name) {
+                if eg.find_imm(bound) == class {
+                    out.push(subst.clone());
+                }
+            } else {
+                subst.vars.insert(name.clone(), class);
+                out.push(subst.clone());
+                subst.vars.remove(name);
+            }
+        }
+        PatternNode::Node(op, children) => {
+            // memoize only interior nodes with children (leaf ops are
+            // cheap; sharing only pays off for subtrees)
+            let key: MemoKey =
+                (Arc::as_ptr(pat) as usize, class, subst_fingerprint(subst));
+            if let Some(cached) = memo.table.get(&key) {
+                out.extend(cached.iter().cloned());
+                return;
+            }
+            let mut results = Vec::new();
+            match_op_position(eg, class, subst, &mut results, children, &|n| n == op, None, memo);
+            memo.table.insert(key, results.clone());
+            out.extend(results);
+        }
+        PatternNode::AnyOp { bind, pred, children } => match_op_position(
+            eg,
+            class,
+            subst,
+            out,
+            children,
+            &|n| pred(n),
+            Some(bind.as_str()),
+            memo,
+        ),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn match_op_position(
+    eg: &EGraph,
+    class: Id,
+    subst: &mut Subst,
+    out: &mut Vec<Subst>,
+    children: &[Pat],
+    op_ok: &dyn Fn(&Op) -> bool,
+    bind: Option<&str>,
+    memo: &mut MatchMemo,
+) {
+    let Some(eclass) = eg.classes.get(&eg.find_imm(class)) else {
+        return;
+    };
+    for enode in &eclass.nodes {
+        if !op_ok(&enode.op) || enode.children.len() != children.len() {
+            continue;
+        }
+        // match children left-to-right, threading substitutions
+        let mut partials = vec![subst.clone()];
+        for (cp, &cc) in children.iter().zip(&enode.children) {
+            let mut next = Vec::new();
+            for mut p in partials {
+                match_node(cp, eg, eg.find_imm(cc), &mut p, &mut next, memo);
+            }
+            partials = next;
+            if partials.is_empty() {
+                break;
+            }
+        }
+        for mut p in partials {
+            if let Some(b) = bind {
+                p.ops.insert(b.to_string(), enode.op.clone());
+            }
+            out.push(p);
+        }
+    }
+}
+
+/// Instantiate a pattern tree into the e-graph under a substitution
+/// (`AnyOp` positions are not allowed on right-hand sides).
+pub fn instantiate(pat: &Pat, eg: &mut EGraph, subst: &Subst) -> Id {
+    match pat.as_ref() {
+        PatternNode::Var(name) => subst.class(name),
+        PatternNode::Node(op, children) => {
+            let ch: Vec<Id> = children.iter().map(|c| instantiate(c, eg, subst)).collect();
+            eg.add(op.clone(), ch)
+        }
+        PatternNode::AnyOp { .. } => {
+            panic!("AnyOp is a searcher-only construct; use a dynamic applier")
+        }
+    }
+}
+
+/// Terse constructors for building patterns in rewrite definitions.
+pub mod dsl {
+    use super::*;
+
+    /// Pattern variable `?name`.
+    pub fn v(name: &str) -> Pat {
+        Arc::new(PatternNode::Var(name.to_string()))
+    }
+
+    /// Exact operator node.
+    pub fn n(op: Op, children: Vec<Pat>) -> Pat {
+        Arc::new(PatternNode::Node(op, children))
+    }
+
+    /// Predicated operator node.
+    pub fn any(bind: &str, pred: OpPred, children: Vec<Pat>) -> Pat {
+        Arc::new(PatternNode::AnyOp { bind: bind.to_string(), pred, children })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::dsl::*;
+    use super::*;
+    use crate::ir::shape::Shape;
+    use std::collections::HashMap;
+
+    fn env() -> HashMap<String, Shape> {
+        [
+            ("x".to_string(), vec![2usize, 4]),
+            ("w".to_string(), vec![3, 4]),
+            ("b".to_string(), vec![3]),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn matches_linear_pattern() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let b = eg.add(Op::Weight("b".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let lin = eg.add(Op::BiasAdd, vec![d, b]);
+        let pat = Pattern::new(n(
+            Op::BiasAdd,
+            vec![n(Op::Dense, vec![v("x"), v("w")]), v("b")],
+        ));
+        let ms = pat.search(&eg);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(ms[0].class, eg.find_imm(lin));
+        assert_eq!(ms[0].subst.class("x"), x);
+        assert_eq!(ms[0].subst.class("w"), w);
+        assert_eq!(ms[0].subst.class("b"), b);
+    }
+
+    #[test]
+    fn nonlinear_var_must_agree() {
+        // pattern (add ?a ?a) matches add(x, x) but not add(x, w)
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Var("w2".into()), vec![]);
+        let _xx = eg.add(Op::Add, vec![x, x]);
+        let _xw = eg.add(Op::Add, vec![x, w]);
+        let pat = Pattern::new(n(Op::Add, vec![v("a"), v("a")]));
+        let ms = pat.search(&eg);
+        assert_eq!(ms.len(), 1);
+    }
+
+    #[test]
+    fn anyop_captures_parameters() {
+        let mut eg = EGraph::new(HashMap::new());
+        let x = eg.add(Op::Var("img".into()), vec![]);
+        let w = eg.add(Op::Weight("k".into()), vec![]);
+        let _c = eg.add(
+            Op::Conv2d { stride: (2, 2), pad: (1, 1), groups: 1 },
+            vec![x, w],
+        );
+        let pat = Pattern::new(any(
+            "conv",
+            |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![v("x"), v("w")],
+        ));
+        let ms = pat.search(&eg);
+        assert_eq!(ms.len(), 1);
+        assert!(matches!(
+            ms[0].subst.op("conv"),
+            Op::Conv2d { stride: (2, 2), pad: (1, 1), groups: 1 }
+        ));
+    }
+
+    #[test]
+    fn instantiate_builds_rhs() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let b = eg.add(Op::Weight("b".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let _lin = eg.add(Op::BiasAdd, vec![d, b]);
+        let pat = Pattern::new(n(
+            Op::BiasAdd,
+            vec![n(Op::Dense, vec![v("x"), v("w")]), v("b")],
+        ));
+        let ms = pat.search(&eg);
+        let rhs = n(Op::FlexLinear, vec![v("x"), v("w"), v("b")]);
+        let new_id = instantiate(&rhs, &mut eg, &ms[0].subst);
+        assert!(eg.shape_of(new_id).is_some());
+        assert_eq!(eg.shape_of(new_id), Some(&vec![2, 3]));
+    }
+}

@@ -1,0 +1,135 @@
+//! Rewrite rules: searcher pattern + applier.
+//!
+//! Most IR-accelerator rewrites are *pure* (LHS pattern → RHS pattern);
+//! the shape-dependent compiler-IR rewrites (dense+zero-add, im2col,
+//! maxpool decomposition) use *dynamic* appliers that consult the e-class
+//! shape analysis to synthesize parameterized RHS operators.
+
+use super::pattern::{instantiate, Match, Pat, Pattern};
+use super::EGraph;
+use crate::ir::Id;
+
+/// Applies the right-hand side of a rule for one match; returns the id of
+/// the constructed RHS class (or `None` to decline, e.g. when a shape
+/// precondition fails).
+pub trait Applier: Send + Sync {
+    fn apply(&self, eg: &mut EGraph, m: &Match) -> Option<Id>;
+}
+
+/// Pure pattern applier.
+pub struct PatternApplier(pub Pat);
+
+impl Applier for PatternApplier {
+    fn apply(&self, eg: &mut EGraph, m: &Match) -> Option<Id> {
+        Some(instantiate(&self.0, eg, &m.subst))
+    }
+}
+
+/// Closure-based dynamic applier.
+pub struct DynApplier<F>(pub F);
+
+impl<F> Applier for DynApplier<F>
+where
+    F: Fn(&mut EGraph, &Match) -> Option<Id> + Send + Sync,
+{
+    fn apply(&self, eg: &mut EGraph, m: &Match) -> Option<Id> {
+        (self.0)(eg, m)
+    }
+}
+
+/// A named rewrite rule.
+pub struct Rewrite {
+    pub name: String,
+    pub searcher: Pattern,
+    pub applier: Box<dyn Applier>,
+}
+
+impl Rewrite {
+    /// Pure rule: LHS pattern → RHS pattern.
+    pub fn pure(name: &str, lhs: Pat, rhs: Pat) -> Self {
+        Rewrite {
+            name: name.to_string(),
+            searcher: Pattern::new(lhs),
+            applier: Box::new(PatternApplier(rhs)),
+        }
+    }
+
+    /// Dynamic rule with a closure applier.
+    pub fn dynamic<F>(name: &str, lhs: Pat, f: F) -> Self
+    where
+        F: Fn(&mut EGraph, &Match) -> Option<Id> + Send + Sync + 'static,
+    {
+        Rewrite {
+            name: name.to_string(),
+            searcher: Pattern::new(lhs),
+            applier: Box::new(DynApplier(f)),
+        }
+    }
+
+    /// Search + apply everywhere; returns the number of *new* unions made.
+    pub fn run(&self, eg: &mut EGraph) -> usize {
+        let matches = self.searcher.search(eg);
+        let mut changed = 0;
+        for m in matches {
+            if let Some(rhs) = self.applier.apply(eg, &m) {
+                let (_, did) = eg.union(m.class, rhs);
+                if did {
+                    changed += 1;
+                }
+            }
+        }
+        changed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::pattern::dsl::*;
+    use crate::ir::shape::Shape;
+    use crate::ir::Op;
+    use std::collections::HashMap;
+
+    fn env() -> HashMap<String, Shape> {
+        [
+            ("x".to_string(), vec![2usize, 4]),
+            ("w".to_string(), vec![3, 4]),
+            ("b".to_string(), vec![3]),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn pure_rewrite_unions_lhs_and_rhs() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let b = eg.add(Op::Weight("b".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let lin = eg.add(Op::BiasAdd, vec![d, b]);
+
+        let rw = Rewrite::pure(
+            "linear-to-flexasr",
+            n(Op::BiasAdd, vec![n(Op::Dense, vec![v("x"), v("w")]), v("b")]),
+            n(Op::FlexLinear, vec![v("x"), v("w"), v("b")]),
+        );
+        let changed = rw.run(&mut eg);
+        eg.rebuild();
+        assert_eq!(changed, 1);
+        // the FlexLinear node must now be in the same class as bias_add
+        let flex = eg.add(Op::FlexLinear, vec![x, w, b]);
+        assert_eq!(eg.find(flex), eg.find(lin));
+        // idempotent: second run makes no new unions
+        assert_eq!(rw.run(&mut eg), 0);
+    }
+
+    #[test]
+    fn dynamic_rewrite_can_decline() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![x]);
+        let rw = Rewrite::dynamic("never", n(Op::Relu, vec![v("a")]), |_, _| None);
+        assert_eq!(rw.run(&mut eg), 0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Equality-saturation runner: applies a rule set to fixpoint under
+//! node/iteration/time budgets (egg's `Runner`).
+
+use super::rewrite::Rewrite;
+use super::EGraph;
+use std::time::{Duration, Instant};
+
+/// Saturation budgets.
+#[derive(Debug, Clone)]
+pub struct RunnerLimits {
+    pub max_iters: usize,
+    pub max_nodes: usize,
+    pub time_limit: Duration,
+}
+
+impl Default for RunnerLimits {
+    fn default() -> Self {
+        RunnerLimits {
+            max_iters: 30,
+            max_nodes: 200_000,
+            time_limit: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Why saturation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// No rule produced a new union — a true fixed point.
+    Saturated,
+    IterLimit,
+    NodeLimit,
+    TimeLimit,
+}
+
+/// Per-iteration statistics (for the metrics module and EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct IterStats {
+    pub unions: usize,
+    pub classes: usize,
+    pub nodes: usize,
+}
+
+/// Saturation driver.
+pub struct Runner {
+    pub limits: RunnerLimits,
+    pub iterations: Vec<IterStats>,
+    pub stop_reason: Option<StopReason>,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new(RunnerLimits::default())
+    }
+}
+
+impl Runner {
+    pub fn new(limits: RunnerLimits) -> Self {
+        Runner { limits, iterations: Vec::new(), stop_reason: None }
+    }
+
+    /// Run `rules` on `eg` until fixpoint or a budget trips.
+    pub fn run(&mut self, eg: &mut EGraph, rules: &[Rewrite]) -> StopReason {
+        let start = Instant::now();
+        let reason = loop {
+            if self.iterations.len() >= self.limits.max_iters {
+                break StopReason::IterLimit;
+            }
+            if start.elapsed() > self.limits.time_limit {
+                break StopReason::TimeLimit;
+            }
+            let mut unions = 0;
+            for rule in rules {
+                unions += rule.run(eg);
+                if eg.nodes_added > self.limits.max_nodes {
+                    break;
+                }
+            }
+            eg.rebuild();
+            self.iterations.push(IterStats {
+                unions,
+                classes: eg.num_classes(),
+                nodes: eg.num_nodes(),
+            });
+            if eg.nodes_added > self.limits.max_nodes {
+                break StopReason::NodeLimit;
+            }
+            if unions == 0 {
+                break StopReason::Saturated;
+            }
+        };
+        self.stop_reason = Some(reason);
+        reason
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::pattern::dsl::*;
+    use crate::ir::Op;
+    use std::collections::HashMap;
+
+    #[test]
+    fn saturates_on_commutativity() {
+        // add is commutative: (add ?a ?b) -> (add ?b ?a); a tiny graph
+        // saturates quickly instead of looping forever.
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let b = eg.add(Op::Var("b".into()), vec![]);
+        let ab = eg.add(Op::Add, vec![a, b]);
+        let rules = vec![crate::egraph::Rewrite::pure(
+            "add-comm",
+            n(Op::Add, vec![v("x"), v("y")]),
+            n(Op::Add, vec![v("y"), v("x")]),
+        )];
+        let mut runner = Runner::default();
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::Saturated);
+        // (add b a) is now in the same class
+        let ba = eg.add(Op::Add, vec![b, a]);
+        assert_eq!(eg.find(ba), eg.find(ab));
+    }
+
+    #[test]
+    fn self_referential_rule_still_saturates() {
+        // relu(x) -> relu(relu(x)) folds into a cyclic class: the e-graph
+        // represents the infinite unrolling finitely and saturates.
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![a]);
+        let rules = vec![crate::egraph::Rewrite::pure(
+            "relu-grow",
+            n(Op::Relu, vec![v("x")]),
+            n(Op::Relu, vec![n(Op::Relu, vec![v("x")])]),
+        )];
+        let mut runner = Runner::default();
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::Saturated);
+    }
+
+    #[test]
+    fn node_limit_trips() {
+        // a genuinely exploding dynamic rule: every application introduces
+        // a fresh leaf, so the graph grows without bound.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![a]);
+        let rules = vec![crate::egraph::Rewrite::dynamic(
+            "fresh-leaf-grow",
+            n(Op::Relu, vec![v("x")]),
+            move |eg, m| {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                let fresh = eg.add(Op::Var(format!("fresh{i}")), vec![]);
+                let x = m.subst.class("x");
+                let sum = eg.add(Op::Add, vec![x, fresh]);
+                Some(eg.add(Op::Relu, vec![sum]))
+            },
+        )];
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 1000,
+            max_nodes: 50,
+            time_limit: Duration::from_secs(5),
+        });
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::NodeLimit);
+    }
+}

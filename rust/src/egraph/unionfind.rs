@@ -1,0 +1,93 @@
+//! Union-find over e-class ids (path-halving find, union-by-size).
+
+use crate::ir::Id;
+
+/// Disjoint-set forest.
+#[derive(Debug, Clone, Default)]
+pub struct UnionFind {
+    parent: Vec<Id>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new() -> Self {
+        UnionFind { parent: Vec::new(), size: Vec::new() }
+    }
+
+    /// Create a fresh singleton set; returns its id.
+    pub fn make_set(&mut self) -> Id {
+        let id = self.parent.len();
+        self.parent.push(id);
+        self.size.push(1);
+        id
+    }
+
+    /// Number of ids ever created.
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// True when no sets exist.
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Canonical representative (with path halving).
+    pub fn find(&mut self, mut x: Id) -> Id {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+
+    /// Non-mutating find (no compression) — for read-only contexts.
+    pub fn find_imm(&self, mut x: Id) -> Id {
+        while self.parent[x] != x {
+            x = self.parent[x];
+        }
+        x
+    }
+
+    /// Union two sets; returns the surviving root (larger set wins so
+    /// e-class data migration is minimized).
+    pub fn union(&mut self, a: Id, b: Id) -> (Id, Id) {
+        let ra = self.find(a);
+        let rb = self.find(b);
+        if ra == rb {
+            return (ra, rb);
+        }
+        let (winner, loser) = if self.size[ra] >= self.size[rb] { (ra, rb) } else { (rb, ra) };
+        self.parent[loser] = winner;
+        self.size[winner] += self.size[loser];
+        (winner, loser)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new();
+        let ids: Vec<_> = (0..8).map(|_| uf.make_set()).collect();
+        assert_eq!(uf.find(ids[3]), ids[3]);
+        uf.union(ids[0], ids[1]);
+        uf.union(ids[1], ids[2]);
+        assert_eq!(uf.find(ids[0]), uf.find(ids[2]));
+        assert_ne!(uf.find(ids[0]), uf.find(ids[3]));
+    }
+
+    #[test]
+    fn union_returns_winner_loser() {
+        let mut uf = UnionFind::new();
+        let a = uf.make_set();
+        let b = uf.make_set();
+        let c = uf.make_set();
+        uf.union(a, b); // a's set has size 2
+        let (w, l) = uf.union(a, c);
+        assert_eq!(w, uf.find(a));
+        assert_eq!(l, c);
+    }
+}

@@ -1,0 +1,89 @@
+//! ILA program fragments in assembly form — the Fig. 3(c)/Fig. 5(c)
+//! representation sitting between compiler-IR fragments and raw MMIO
+//! command streams.
+//!
+//! Each [`AsmInstr`] names an ILA instruction with symbolic operands; an
+//! [`Fragment`] is the sequence for one accelerator operation. Fragments
+//! are what VT2 (fragment-to-fragment equivalence) ranges over, and what
+//! the code generator lowers 1:1 into MMIO commands (Fig. 5(c) → 5(d)).
+
+use std::fmt;
+
+/// One assembly-level ILA instruction with symbolic operand fields.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmInstr {
+    /// e.g. "FlexASR_ILA.pe_cfg_rnn_layer_sizing"
+    pub name: String,
+    /// symbolic operands, e.g. ["%dim1", "%dim2"]
+    pub operands: Vec<String>,
+}
+
+impl AsmInstr {
+    pub fn new(name: &str, operands: &[&str]) -> Self {
+        AsmInstr {
+            name: name.to_string(),
+            operands: operands.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+impl fmt::Display for AsmInstr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name)?;
+        for op in &self.operands {
+            write!(f, " {op}")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ILA program fragment: the accelerator side of one IR-accelerator
+/// mapping.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Fragment {
+    pub instrs: Vec<AsmInstr>,
+}
+
+impl Fragment {
+    pub fn new() -> Self {
+        Fragment { instrs: Vec::new() }
+    }
+
+    pub fn push(&mut self, name: &str, operands: &[&str]) -> &mut Self {
+        self.instrs.push(AsmInstr::new(name, operands));
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+}
+
+impl fmt::Display for Fragment {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for i in &self.instrs {
+            writeln!(f, "{i}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fragment_renders_like_fig5() {
+        let mut frag = Fragment::new();
+        frag.push("FlexASR_ILA.write_v", &["%addr", "%data"])
+            .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%dim1", "%dim2"])
+            .push("FlexASR_ILA.fn_start", &[]);
+        let s = frag.to_string();
+        assert!(s.contains("FlexASR_ILA.write_v %addr %data"));
+        assert!(s.lines().count() == 3);
+    }
+}

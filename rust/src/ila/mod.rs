@@ -1,0 +1,293 @@
+//! The Instruction-Level Abstraction (ILA) framework — the formal
+//! software/hardware interface at the heart of D2A (Huang et al., TODAES
+//! 2018; the ILAng platform, TACAS 2019).
+//!
+//! An ILA models an accelerator as a set of **instructions**, each
+//! corresponding to one command at the accelerator's MMIO interface. Every
+//! instruction has a *decode* condition (which interface command triggers
+//! it) and *update* functions over the **architectural state** (config
+//! registers + software-visible buffers). This is exactly the structure of
+//! the ILAng snippet in Fig. 6 of the paper, transliterated to Rust:
+//! `SetDecode` becomes [`Instr::decode`], `SetUpdate` becomes
+//! [`Instr::update`].
+//!
+//! The simulator in [`sim`] executes programs of interface commands
+//! against a model — the Rust analogue of ILAng's generated C++/SystemC
+//! simulators used for Tables 2 and 4.
+
+pub mod asm;
+pub mod sim;
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::Arc;
+
+/// One command at the accelerator interface: an MMIO read or write of a
+/// 128-bit word (the FlexASR interface width; narrower devices ignore the
+/// upper bytes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cmd {
+    pub is_write: bool,
+    pub addr: u64,
+    pub data: [u8; 16],
+}
+
+impl Cmd {
+    /// An MMIO write.
+    pub fn write(addr: u64, data: [u8; 16]) -> Self {
+        Cmd { is_write: true, addr, data }
+    }
+
+    /// An MMIO write of a u64 value (upper bytes zero).
+    pub fn write_u64(addr: u64, v: u64) -> Self {
+        let mut data = [0u8; 16];
+        data[..8].copy_from_slice(&v.to_le_bytes());
+        Cmd { is_write: true, addr, data }
+    }
+
+    /// An MMIO read.
+    pub fn read(addr: u64) -> Self {
+        Cmd { is_write: false, addr, data: [0u8; 16] }
+    }
+
+    /// Low 8 bytes as u64.
+    pub fn data_u64(&self) -> u64 {
+        u64::from_le_bytes(self.data[..8].try_into().unwrap())
+    }
+}
+
+impl fmt::Display for Cmd {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let hi = u64::from_le_bytes(self.data[8..].try_into().unwrap());
+        let lo = u64::from_le_bytes(self.data[..8].try_into().unwrap());
+        if self.is_write {
+            write!(f, "WR 0x{:08X}, 0x{:016X}{:016X}", self.addr, hi, lo)
+        } else {
+            write!(f, "RD 0x{:08X}", self.addr)
+        }
+    }
+}
+
+/// Architectural state of an ILA model: named registers (bit-vectors up
+/// to 64 bits) and named byte-addressable memories.
+#[derive(Debug, Clone, Default)]
+pub struct IlaState {
+    regs: BTreeMap<String, (u64, u32)>,
+    mems: BTreeMap<String, Vec<u8>>,
+}
+
+impl IlaState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a register of `width` bits (like `NewBvState` in ILAng).
+    pub fn new_bv(&mut self, name: &str, width: u32) {
+        assert!(width <= 64, "registers are modeled up to 64 bits");
+        self.regs.insert(name.to_string(), (0, width));
+    }
+
+    /// Declare a byte-addressable memory of `size` bytes (`NewMemState`).
+    pub fn new_mem(&mut self, name: &str, size: usize) {
+        self.mems.insert(name.to_string(), vec![0u8; size]);
+    }
+
+    /// Read a register.
+    pub fn reg(&self, name: &str) -> u64 {
+        self.regs
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown ILA register `{name}`"))
+            .0
+    }
+
+    /// Write a register (masked to its declared width).
+    pub fn set_reg(&mut self, name: &str, value: u64) {
+        let entry = self
+            .regs
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown ILA register `{name}`"));
+        let mask = if entry.1 == 64 { u64::MAX } else { (1u64 << entry.1) - 1 };
+        entry.0 = value & mask;
+    }
+
+    /// Borrow a memory.
+    pub fn mem(&self, name: &str) -> &[u8] {
+        self.mems
+            .get(name)
+            .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"))
+    }
+
+    /// Borrow a memory mutably.
+    pub fn mem_mut(&mut self, name: &str) -> &mut Vec<u8> {
+        self.mems
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"))
+    }
+
+    /// Register names (for state dumps / debugging).
+    pub fn reg_names(&self) -> impl Iterator<Item = &str> {
+        self.regs.keys().map(|s| s.as_str())
+    }
+}
+
+/// Errors from stepping an ILA model.
+#[derive(Debug, thiserror::Error)]
+pub enum IlaError {
+    #[error("no instruction of `{model}` decodes command {cmd}")]
+    NoDecode { model: String, cmd: String },
+    #[error("instructions `{a}` and `{b}` of `{model}` both decode {cmd} — ILA determinism violated")]
+    Ambiguous { model: String, a: String, b: String, cmd: String },
+    #[error("instruction `{instr}` failed: {msg}")]
+    Update { instr: String, msg: String },
+}
+
+/// Decode predicate: does this interface command trigger this instruction?
+pub type DecodeFn = Arc<dyn Fn(&Cmd, &IlaState) -> bool + Send + Sync>;
+/// State update function; may return read-back data (for RD commands).
+pub type UpdateFn =
+    Arc<dyn Fn(&Cmd, &mut IlaState) -> Result<Option<[u8; 16]>, String> + Send + Sync>;
+
+/// One ILA instruction.
+#[derive(Clone)]
+pub struct Instr {
+    pub name: String,
+    pub decode: DecodeFn,
+    pub update: UpdateFn,
+}
+
+impl fmt::Debug for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Instr({})", self.name)
+    }
+}
+
+/// An ILA model: a named set of instructions plus initial state.
+#[derive(Clone)]
+pub struct Ila {
+    pub name: String,
+    pub instrs: Vec<Instr>,
+    pub init_state: IlaState,
+}
+
+impl Ila {
+    pub fn new(name: &str, init_state: IlaState) -> Self {
+        Ila { name: name.to_string(), instrs: Vec::new(), init_state }
+    }
+
+    /// Add an instruction (builder style, mirroring ILAng's `NewInstr`).
+    pub fn instr(
+        &mut self,
+        name: &str,
+        decode: impl Fn(&Cmd, &IlaState) -> bool + Send + Sync + 'static,
+        update: impl Fn(&Cmd, &mut IlaState) -> Result<Option<[u8; 16]>, String>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        self.instrs.push(Instr {
+            name: name.to_string(),
+            decode: Arc::new(decode),
+            update: Arc::new(update),
+        });
+    }
+
+    /// Which instruction (if any) decodes `cmd` in `state`; errors when
+    /// more than one does (ILA instructions must be deterministic).
+    pub fn decode(&self, cmd: &Cmd, state: &IlaState) -> Result<&Instr, IlaError> {
+        let mut hit: Option<&Instr> = None;
+        for ins in &self.instrs {
+            if (ins.decode)(cmd, state) {
+                if let Some(prev) = hit {
+                    return Err(IlaError::Ambiguous {
+                        model: self.name.clone(),
+                        a: prev.name.clone(),
+                        b: ins.name.clone(),
+                        cmd: cmd.to_string(),
+                    });
+                }
+                hit = Some(ins);
+            }
+        }
+        hit.ok_or_else(|| IlaError::NoDecode {
+            model: self.name.clone(),
+            cmd: cmd.to_string(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_ila() -> Ila {
+        // two registers and one memory; three instructions
+        let mut st = IlaState::new();
+        st.new_bv("cfg", 16);
+        st.new_bv("busy", 1);
+        st.new_mem("buf", 64);
+        let mut ila = Ila::new("toy", st);
+        ila.instr(
+            "set_cfg",
+            |c, _| c.is_write && c.addr == 0x10,
+            |c, s| {
+                s.set_reg("cfg", c.data_u64());
+                Ok(None)
+            },
+        );
+        ila.instr(
+            "write_buf",
+            |c, _| c.is_write && (0x100..0x140).contains(&c.addr),
+            |c, s| {
+                let off = (c.addr - 0x100) as usize;
+                s.mem_mut("buf")[off..off + 16].copy_from_slice(&c.data);
+                Ok(None)
+            },
+        );
+        ila.instr(
+            "read_buf",
+            |c, _| !c.is_write && (0x100..0x140).contains(&c.addr),
+            |c, s| {
+                let off = (c.addr - 0x100) as usize;
+                let mut out = [0u8; 16];
+                out.copy_from_slice(&s.mem("buf")[off..off + 16]);
+                Ok(Some(out))
+            },
+        );
+        ila
+    }
+
+    #[test]
+    fn decode_selects_unique_instruction() {
+        let ila = toy_ila();
+        let st = ila.init_state.clone();
+        let i = ila.decode(&Cmd::write_u64(0x10, 7), &st).unwrap();
+        assert_eq!(i.name, "set_cfg");
+        let i = ila.decode(&Cmd::read(0x100), &st).unwrap();
+        assert_eq!(i.name, "read_buf");
+    }
+
+    #[test]
+    fn decode_rejects_unknown_address() {
+        let ila = toy_ila();
+        let st = ila.init_state.clone();
+        assert!(matches!(
+            ila.decode(&Cmd::write_u64(0xDEAD, 0), &st),
+            Err(IlaError::NoDecode { .. })
+        ));
+    }
+
+    #[test]
+    fn register_width_masking() {
+        let mut st = IlaState::new();
+        st.new_bv("r4", 4);
+        st.set_reg("r4", 0xFF);
+        assert_eq!(st.reg("r4"), 0xF);
+    }
+
+    #[test]
+    fn cmd_display_matches_paper_trace_format() {
+        let c = Cmd::write_u64(0xA0400010, 0x0010101000001);
+        let s = c.to_string();
+        assert!(s.starts_with("WR 0xA0400010, 0x"), "{s}");
+    }
+}

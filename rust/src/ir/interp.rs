@@ -1,0 +1,422 @@
+//! The f32 IR interpreter — the *reference semantics* of the compiler IR.
+//!
+//! §4.4: "we use an IR interpreter as the reference when running
+//! simulation". Every op, including the accelerator ops, is given its
+//! exact f32 meaning here; the custom-numerics behaviour of accelerator
+//! ops is layered on by the co-simulation driver, which intercepts
+//! accelerator nodes and routes them to the ILA simulators instead.
+
+use super::{Node, Op, RecExpr};
+use crate::tensor::{ops, Tensor};
+use std::collections::HashMap;
+
+/// Interpretation failure.
+#[derive(Debug, thiserror::Error)]
+pub enum EvalError {
+    #[error("unbound input `{0}`")]
+    Unbound(String),
+    #[error("evaluation of {0} failed: {1}")]
+    Op(String, String),
+}
+
+/// Hook consulted for every node *before* default evaluation; returning
+/// `Some(tensor)` overrides the f32 semantics. The co-sim driver uses this
+/// to swap in ILA-simulated accelerator execution.
+pub trait EvalHook {
+    /// Override evaluation of `node` given already-evaluated children.
+    fn intercept(&mut self, node: &Node, children: &[&Tensor]) -> Option<Tensor>;
+}
+
+/// No-op hook: pure f32 reference execution.
+pub struct NoHook;
+
+impl EvalHook for NoHook {
+    fn intercept(&mut self, _: &Node, _: &[&Tensor]) -> Option<Tensor> {
+        None
+    }
+}
+
+/// Evaluate one operator with f32 semantics.
+pub fn eval_op(op: &Op, ch: &[&Tensor]) -> Result<Tensor, EvalError> {
+    use Op::*;
+    let t = |i: usize| -> &Tensor { ch[i] };
+    let out = match op {
+        Var(n) | Weight(n) => return Err(EvalError::Unbound(n.clone())),
+        ConstScalar(bits) => Tensor::scalar(f32::from_bits(*bits)),
+        ZeroTensor(shape) => Tensor::zeros(shape),
+        Dense | VtaGemm => ops::dense(t(0), t(1)),
+        BiasAdd => ops::bias_add(t(0), t(1)),
+        Add | VtaAdd => ops::add(t(0), t(1)),
+        Mul => ops::mul(t(0), t(1)),
+        Relu => ops::relu(t(0)),
+        Sigmoid => ops::sigmoid(t(0)),
+        Tanh => ops::tanh(t(0)),
+        Gelu => ops::gelu(t(0)),
+        Softmax => ops::softmax(t(0)),
+        LayerNorm | FlexLayerNorm => ops::layer_norm(t(0), 1e-5),
+        Reshape(shape) => t(0).reshape(shape),
+        Transpose => ops::transpose2(t(0)),
+        Concat => ops::concat_cols(&[t(0), t(1)]),
+        Conv2d { stride, pad, groups } => {
+            if *groups == 1 {
+                ops::conv2d(t(0), t(1), *stride, *pad)
+            } else {
+                grouped_conv2d(t(0), t(1), *stride, *pad, *groups)
+            }
+        }
+        HlscnnConv2d { stride, pad } => ops::conv2d(t(0), t(1), *stride, *pad),
+        MaxPool2d { window, stride } => ops::max_pool2d(t(0), *window, *stride),
+        AvgPool2d { window, stride } => ops::avg_pool2d(t(0), *window, *stride),
+        GlobalAvgPool => global_avg_pool(t(0)),
+        MatMaxPool { window, stride } => ops::matrix_max_pool(t(0), *window, *stride),
+        MatMeanPool { window, stride } => matrix_mean_pool(t(0), *window, *stride),
+        WindowsFlatten { window, stride } => windows_flatten(t(0), *window, *stride),
+        TempMaxPool | FlexMaxpool => temp_pool(t(0), |a, b| a.max(b)),
+        TempMeanPool | FlexMeanpool => temp_pool(t(0), |a, b| (a + b) / 2.0),
+        Im2col { kernel, stride, pad } => ops::im2col(t(0), *kernel, *stride, *pad),
+        FromIm2col { n, oh, ow } => from_im2col(t(0), *n, *oh, *ow),
+        Lstm { .. } | FlexLstm { .. } => ops::lstm_sequence(t(0), t(1), t(2), t(3)),
+        SliceStep { t: step } => {
+            let x = t(0);
+            let (n, e) = (x.shape[1], x.shape[2]);
+            Tensor::new(vec![n, e], x.data[step * n * e..(step + 1) * n * e].to_vec())
+        }
+        SliceCols { lo, hi } => {
+            let x = t(0);
+            let (r, c) = (x.shape[0], x.shape[1]);
+            let mut out = Vec::with_capacity(r * (hi - lo));
+            for i in 0..r {
+                out.extend_from_slice(&x.data[i * c + lo..i * c + hi]);
+            }
+            Tensor::new(vec![r, hi - lo], out)
+        }
+        ConcatRows => {
+            let (a, b) = (t(0), t(1));
+            let mut data = a.data.clone();
+            data.extend_from_slice(&b.data);
+            Tensor::new(vec![a.shape[0] + b.shape[0], a.shape[1]], data)
+        }
+        FlexLstmFused { .. } => {
+            // split the fused gate matrix w = [w_ih | w_hh]
+            let (x, w, b) = (t(0), t(1), t(2));
+            let e = x.shape[2];
+            let four_h = w.shape[0];
+            let h = four_h / 4;
+            let mut wih = Vec::with_capacity(four_h * e);
+            let mut whh = Vec::with_capacity(four_h * h);
+            for r in 0..four_h {
+                wih.extend_from_slice(&w.data[r * (e + h)..r * (e + h) + e]);
+                whh.extend_from_slice(&w.data[r * (e + h) + e..(r + 1) * (e + h)]);
+            }
+            ops::lstm_sequence(
+                x,
+                &Tensor::new(vec![four_h, e], wih),
+                &Tensor::new(vec![four_h, h], whh),
+                b,
+            )
+        }
+        Attention | FlexAttention => ops::attention(t(0), t(1), t(2)),
+        FlexLinear => ops::bias_add(&ops::dense(t(0), t(1)), t(2)),
+        FlexMaxpStore | FlexMaxpLoad => t(0).clone(),
+    };
+    Ok(out)
+}
+
+/// Evaluate a whole program under `env`, with an interception hook.
+pub fn eval_with_hook(
+    expr: &RecExpr,
+    env: &HashMap<String, Tensor>,
+    hook: &mut dyn EvalHook,
+) -> Result<Tensor, EvalError> {
+    let mut values: Vec<Tensor> = Vec::with_capacity(expr.len());
+    for node in &expr.nodes {
+        let ch: Vec<&Tensor> = node.children.iter().map(|&c| &values[c]).collect();
+        let v = match &node.op {
+            Op::Var(n) | Op::Weight(n) => {
+                env.get(n).cloned().ok_or_else(|| EvalError::Unbound(n.clone()))?
+            }
+            op => match hook.intercept(node, &ch) {
+                Some(t) => t,
+                None => eval_op(op, &ch)?,
+            },
+        };
+        values.push(v);
+    }
+    Ok(values.pop().expect("empty program"))
+}
+
+/// Pure f32 reference evaluation.
+pub fn eval(expr: &RecExpr, env: &HashMap<String, Tensor>) -> Result<Tensor, EvalError> {
+    eval_with_hook(expr, env, &mut NoHook)
+}
+
+fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0.0f32; n * c];
+    for b in 0..n {
+        for ch in 0..c {
+            let base = (b * c + ch) * h * w;
+            out[b * c + ch] =
+                x.data[base..base + h * w].iter().sum::<f32>() / (h * w) as f32;
+        }
+    }
+    Tensor::new(vec![n, c], out)
+}
+
+fn matrix_mean_pool(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> Tensor {
+    let (r, c) = (x.shape[0], x.shape[1]);
+    let (wh, ww) = window;
+    let (sh, sw) = stride;
+    let or = (r - wh) / sh + 1;
+    let oc = (c - ww) / sw + 1;
+    let mut out = vec![0.0f32; or * oc];
+    for i in 0..or {
+        for j in 0..oc {
+            let mut acc = 0.0f32;
+            for di in 0..wh {
+                for dj in 0..ww {
+                    acc += x.data[(i * sh + di) * c + j * sw + dj];
+                }
+            }
+            out[i * oc + j] = acc / (wh * ww) as f32;
+        }
+    }
+    Tensor::new(vec![or, oc], out)
+}
+
+/// `[R, C] -> [wh*ww, OR*OC]`: column `w` is window `w` (row-major over
+/// the output grid); row `p` is within-window position `p = dy*ww + dx`.
+fn windows_flatten(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> Tensor {
+    let (r, c) = (x.shape[0], x.shape[1]);
+    let (wh, ww) = window;
+    let (sh, sw) = stride;
+    let or = (r - wh) / sh + 1;
+    let oc = (c - ww) / sw + 1;
+    let nwin = or * oc;
+    let mut out = vec![0.0f32; wh * ww * nwin];
+    for i in 0..or {
+        for j in 0..oc {
+            let wi = i * oc + j;
+            for dy in 0..wh {
+                for dx in 0..ww {
+                    out[(dy * ww + dx) * nwin + wi] =
+                        x.data[(i * sh + dy) * c + j * sw + dx];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![wh * ww, nwin], out)
+}
+
+/// Pairwise reduction of adjacent rows: `[2k, C] -> [k, C]`.
+fn temp_pool(x: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    let (r, c) = (x.shape[0], x.shape[1]);
+    assert!(r % 2 == 0, "temp pool needs even rows, got {r}");
+    let mut out = vec![0.0f32; r / 2 * c];
+    for i in 0..r / 2 {
+        for j in 0..c {
+            out[i * c + j] = f(x.data[2 * i * c + j], x.data[(2 * i + 1) * c + j]);
+        }
+    }
+    Tensor::new(vec![r / 2, c], out)
+}
+
+fn from_im2col(x: &Tensor, n: usize, oh: usize, ow: usize) -> Tensor {
+    let o = x.shape[1];
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    for b in 0..n {
+        for y in 0..oh {
+            for xw in 0..ow {
+                for oc in 0..o {
+                    out[((b * o + oc) * oh + y) * ow + xw] =
+                        x.data[((b * oh + y) * ow + xw) * o + oc];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], out)
+}
+
+fn grouped_conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+    groups: usize,
+) -> Tensor {
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let o = w.shape[0];
+    let cg = c / groups;
+    let og = o / groups;
+    let mut parts: Vec<Tensor> = Vec::with_capacity(groups);
+    for g in 0..groups {
+        // slice channels [g*cg, (g+1)*cg) of x and filters [g*og, (g+1)*og)
+        let mut xg = Tensor::zeros(&[n, cg, h, wd]);
+        for b in 0..n {
+            for ic in 0..cg {
+                let src = ((b * c + g * cg + ic) * h) * wd;
+                let dst = ((b * cg + ic) * h) * wd;
+                xg.data[dst..dst + h * wd].copy_from_slice(&x.data[src..src + h * wd]);
+            }
+        }
+        let ksz = w.shape[2] * w.shape[3] * cg;
+        let wg = Tensor::new(
+            vec![og, cg, w.shape[2], w.shape[3]],
+            w.data[g * og * ksz..(g + 1) * og * ksz].to_vec(),
+        );
+        parts.push(ops::conv2d(&xg, &wg, stride, pad));
+    }
+    // concat along channel axis
+    let oh = parts[0].shape[2];
+    let ow = parts[0].shape[3];
+    let mut out = Tensor::zeros(&[n, o, oh, ow]);
+    for (g, p) in parts.iter().enumerate() {
+        for b in 0..n {
+            for oc in 0..og {
+                let src = ((b * og + oc) * oh) * ow;
+                let dst = ((b * o + g * og + oc) * oh) * ow;
+                out.data[dst..dst + oh * ow].copy_from_slice(&p.data[src..src + oh * ow]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{GraphBuilder, Op, RecExpr};
+    use crate::util::Rng;
+
+    fn tenv(pairs: Vec<(&str, Tensor)>) -> HashMap<String, Tensor> {
+        pairs.into_iter().map(|(n, t)| (n.to_string(), t)).collect()
+    }
+
+    #[test]
+    fn linear_program_evaluates() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.linear(x, w, b);
+        let env = tenv(vec![
+            ("x", Tensor::new(vec![1, 2], vec![1.0, 2.0])),
+            ("w", Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0])),
+            ("b", Tensor::new(vec![2], vec![10.0, 20.0])),
+        ]);
+        let y = eval(&g.finish(), &env).unwrap();
+        assert_eq!(y.data, vec![11.0, 22.0]);
+    }
+
+    #[test]
+    fn accel_ops_match_ir_ops_in_f32() {
+        // FlexLinear's f32 semantics == bias_add(dense(x, w), b)
+        let mut rng = Rng::new(42);
+        let x = Tensor::randn(&[3, 8], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 8], &mut rng, 1.0);
+        let b = Tensor::randn(&[4], &mut rng, 1.0);
+        let flex = eval_op(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        let d = eval_op(&Op::Dense, &[&x, &w]).unwrap();
+        let reference = eval_op(&Op::BiasAdd, &[&d, &b]).unwrap();
+        assert!(flex.max_abs_diff(&reference) < 1e-6);
+    }
+
+    #[test]
+    fn maxpool_decomposition_is_semantics_preserving() {
+        // the Fig. 7 rewrite: mat_maxpool (4,4)(2,2) ==
+        // reshape . tempmax^4 . windows_flatten (4,4)(2,2)
+        let mut rng = Rng::new(7);
+        let t = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let direct = eval_op(
+            &Op::MatMaxPool { window: (4, 4), stride: (2, 2) },
+            &[&t],
+        )
+        .unwrap();
+
+        let mut e = RecExpr::new();
+        let x = e.add(Op::Var("t".into()), vec![]);
+        let wf = e.add(Op::WindowsFlatten { window: (4, 4), stride: (2, 2) }, vec![x]);
+        let m1 = e.add(Op::TempMaxPool, vec![wf]);
+        let m2 = e.add(Op::TempMaxPool, vec![m1]);
+        let m3 = e.add(Op::TempMaxPool, vec![m2]);
+        let m4 = e.add(Op::TempMaxPool, vec![m3]);
+        e.add(Op::Reshape(vec![7, 7]), vec![m4]);
+        let staged = eval(&e, &tenv(vec![("t", t)])).unwrap();
+        assert_eq!(staged.shape, direct.shape);
+        assert!(staged.max_abs_diff(&direct) < 1e-6);
+    }
+
+    #[test]
+    fn im2col_pipeline_equals_conv() {
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[1, 3, 8, 8], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.5);
+        let direct = eval_op(
+            &Op::Conv2d { stride: (1, 1), pad: (1, 1), groups: 1 },
+            &[&x, &w],
+        )
+        .unwrap();
+
+        let mut e = RecExpr::new();
+        let xv = e.add(Op::Var("x".into()), vec![]);
+        let wv = e.add(Op::Weight("w".into()), vec![]);
+        let patches = e.add(
+            Op::Im2col { kernel: (3, 3), stride: (1, 1), pad: (1, 1) },
+            vec![xv],
+        );
+        let wflat = e.add(Op::Reshape(vec![4, 27]), vec![wv]);
+        let gemm = e.add(Op::Dense, vec![patches, wflat]);
+        e.add(Op::FromIm2col { n: 1, oh: 8, ow: 8 }, vec![gemm]);
+        let staged = eval(&e, &tenv(vec![("x", x), ("w", w)])).unwrap();
+        assert!(staged.max_abs_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn grouped_conv_matches_manual_split() {
+        let mut rng = Rng::new(13);
+        let x = Tensor::randn(&[1, 4, 6, 6], &mut rng, 1.0);
+        let w = Tensor::randn(&[8, 2, 3, 3], &mut rng, 0.5); // groups=2
+        let y = eval_op(
+            &Op::Conv2d { stride: (1, 1), pad: (1, 1), groups: 2 },
+            &[&x, &w],
+        )
+        .unwrap();
+        assert_eq!(y.shape, vec![1, 8, 6, 6]);
+        // group 0 output channel 0 must equal plain conv over channels 0..2
+        let mut x0 = Tensor::zeros(&[1, 2, 6, 6]);
+        x0.data.copy_from_slice(&x.data[0..72]);
+        let w0 = Tensor::new(vec![4, 2, 3, 3], w.data[0..72].to_vec());
+        let y0 = crate::tensor::ops::conv2d(&x0, &w0, (1, 1), (1, 1));
+        assert!((y.data[0] - y0.data[0]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hook_intercepts_accelerator_nodes() {
+        struct CountHook(usize);
+        impl EvalHook for CountHook {
+            fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Option<Tensor> {
+                if matches!(node.op, Op::FlexLinear) {
+                    self.0 += 1;
+                    // deliberately perturb so we can observe the override
+                    let t = eval_op(&node.op, ch).unwrap();
+                    return Some(t.map(|v| v + 1000.0));
+                }
+                None
+            }
+        }
+        let mut e = RecExpr::new();
+        let x = e.add(Op::Var("x".into()), vec![]);
+        let w = e.add(Op::Weight("w".into()), vec![]);
+        let b = e.add(Op::Weight("b".into()), vec![]);
+        e.add(Op::FlexLinear, vec![x, w, b]);
+        let env = tenv(vec![
+            ("x", Tensor::ones(&[1, 2])),
+            ("w", Tensor::ones(&[1, 2])),
+            ("b", Tensor::zeros(&[1])),
+        ]);
+        let mut hook = CountHook(0);
+        let y = eval_with_hook(&e, &env, &mut hook).unwrap();
+        assert_eq!(hook.0, 1);
+        assert!((y.data[0] - 1002.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,481 @@
+//! The compiler IR — a pure (side-effect-free) tensor program
+//! representation in the spirit of Relay/Glenside.
+//!
+//! Programs are *RecExprs*: arrays of operator nodes whose children are
+//! indices into the same array (a DAG in term form). The same [`Op`]
+//! vocabulary is shared by the e-graph (`crate::egraph`), the f32
+//! interpreter ([`interp`], the "IR interpreter" reference of §4.4), and
+//! code generation. Accelerator operators (`Flex*`, `Hlscnn*`, `Vta*`) are
+//! first-class IR nodes — the product of IR-accelerator rewrites — whose
+//! *f32 semantics* equal their IR counterparts; their *numeric* semantics
+//! (AdaptivFloat / fixed-point / int8) live in the ILA models and take over
+//! during co-simulation.
+
+pub mod interp;
+pub mod parse;
+pub mod shape;
+
+use std::fmt;
+
+/// Index of a node within a [`RecExpr`] (or an e-class id inside the
+/// e-graph — the two spaces are kept deliberately interchangeable).
+pub type Id = usize;
+
+/// Which accelerator an operator belongs to (for invocation counting and
+/// codegen dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    Host,
+    FlexAsr,
+    Hlscnn,
+    Vta,
+}
+
+impl fmt::Display for Target {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Target::Host => write!(f, "host"),
+            Target::FlexAsr => write!(f, "FlexASR"),
+            Target::Hlscnn => write!(f, "HLSCNN"),
+            Target::Vta => write!(f, "VTA"),
+        }
+    }
+}
+
+/// Operator vocabulary. Parameters (shapes, windows, strides) are part of
+/// the operator label, never of the child list, so the e-graph can hash
+/// and unify nodes structurally.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Op {
+    // ----- leaves ---------------------------------------------------
+    /// Named input tensor (activations).
+    Var(String),
+    /// Named parameter tensor (weights); distinguished from `Var` so cost
+    /// functions and codegen can treat constants specially.
+    Weight(String),
+    /// Scalar constant (f32 bits, for Eq/Hash).
+    ConstScalar(u32),
+    /// All-zero tensor of a known shape (introduced by the `dense ->
+    /// dense + 0` flexible-matching rewrite).
+    ZeroTensor(Vec<usize>),
+
+    // ----- generic tensor ops ---------------------------------------
+    /// `dense(x, w) = x @ w^T` — Relay `nn.dense`.
+    Dense,
+    /// `bias_add(x, b)` — broadcast add along the trailing axis.
+    BiasAdd,
+    /// Elementwise/broadcast addition.
+    Add,
+    /// Elementwise/broadcast multiplication.
+    Mul,
+    Relu,
+    Sigmoid,
+    Tanh,
+    Gelu,
+    /// Softmax over the trailing axis.
+    Softmax,
+    /// LayerNorm over the trailing axis (eps folded into semantics).
+    LayerNorm,
+    /// Reshape to an explicit shape.
+    Reshape(Vec<usize>),
+    /// 2-D matrix transpose.
+    Transpose,
+    /// Concatenate two matrices along axis 1.
+    Concat,
+    /// NCHW convolution, OIHW weights.
+    Conv2d { stride: (usize, usize), pad: (usize, usize), groups: usize },
+    /// NCHW max pooling.
+    MaxPool2d { window: (usize, usize), stride: (usize, usize) },
+    /// NCHW average pooling.
+    AvgPool2d { window: (usize, usize), stride: (usize, usize) },
+    /// Global average pooling over H, W: [N, C, H, W] -> [N, C].
+    GlobalAvgPool,
+    /// Matrix (2-D) max pooling — the Glenside
+    /// `map reduceMax (windows ...)` form of §5.1.
+    MatMaxPool { window: (usize, usize), stride: (usize, usize) },
+    /// Matrix (2-D) mean pooling.
+    MatMeanPool { window: (usize, usize), stride: (usize, usize) },
+    /// Unfold a matrix into flattened windows: `[R, C] ->
+    /// [wh*ww, n_windows]`; each *column* is one window, rows are the
+    /// within-window positions (so pairwise-row-max reduces windows).
+    WindowsFlatten { window: (usize, usize), stride: (usize, usize) },
+    /// Temporal max pool: pairwise max of adjacent rows,
+    /// `[2k, C] -> [k, C]` — exactly FlexASR's supported maxpool.
+    TempMaxPool,
+    /// Temporal mean pool: pairwise mean of adjacent rows.
+    TempMeanPool,
+    /// im2col patch extraction (kernel/stride/pad recorded).
+    Im2col { kernel: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
+    /// Rearrange a GEMM result `[N*OH*OW, O]` back to NCHW.
+    FromIm2col { n: usize, oh: usize, ow: usize },
+    /// Unrolled LSTM over `[T, N, I]` (sequence output only; Appendix B).
+    Lstm { steps: usize },
+    /// Single-head scaled dot-product attention (q, k, v).
+    Attention,
+    /// Take timestep `t` of a `[T, N, E]` sequence -> `[N, E]` (the
+    /// importer's per-step `take` in the unrolled LSTM).
+    SliceStep { t: usize },
+    /// Column slice `[.., lo..hi)` of a matrix (gate extraction in the
+    /// unrolled LSTM).
+    SliceCols { lo: usize, hi: usize },
+    /// Concatenate two matrices along axis 0 (rows).
+    ConcatRows,
+
+    // ----- FlexASR accelerator ops ----------------------------------
+    /// Linear layer `x @ w^T + b` on the FlexASR PE array (AdaptivFloat).
+    FlexLinear,
+    /// Full LSTM layer — one ILA instruction regardless of step count
+    /// (the dramatic granularity mismatch of Table 1).
+    FlexLstm { steps: usize },
+    /// LSTM layer with the fused gate matrix `w = [w_ih | w_hh]` (the
+    /// concat formulation the unrolled-LSTM rewrite produces):
+    /// children (x, w, b).
+    FlexLstmFused { steps: usize },
+    FlexLayerNorm,
+    /// Temporal max pooling on FlexASR.
+    FlexMaxpool,
+    FlexMeanpool,
+    FlexAttention,
+    /// Explicit data movement into FlexASR's global buffer (§5.1).
+    FlexMaxpStore,
+    /// Explicit data movement out of FlexASR's global buffer (§5.1).
+    FlexMaxpLoad,
+
+    // ----- HLSCNN accelerator ops -----------------------------------
+    /// Non-grouped 2-D convolution on HLSCNN (8/16-bit fixed point).
+    HlscnnConv2d { stride: (usize, usize), pad: (usize, usize) },
+
+    // ----- VTA accelerator ops --------------------------------------
+    /// GEMM on VTA's int8 matrix core (dense semantics: x @ w^T).
+    VtaGemm,
+    /// Elementwise add on VTA's ALU.
+    VtaAdd,
+}
+
+impl Op {
+    /// Number of children each operator expects.
+    pub fn arity(&self) -> usize {
+        use Op::*;
+        match self {
+            Var(_) | Weight(_) | ConstScalar(_) | ZeroTensor(_) => 0,
+            Relu | Sigmoid | Tanh | Gelu | Softmax | LayerNorm | Reshape(_)
+            | Transpose | MaxPool2d { .. } | AvgPool2d { .. } | GlobalAvgPool
+            | MatMaxPool { .. } | MatMeanPool { .. } | WindowsFlatten { .. }
+            | TempMaxPool | TempMeanPool | Im2col { .. } | FromIm2col { .. }
+            | SliceStep { .. } | SliceCols { .. }
+            | FlexLayerNorm | FlexMaxpool | FlexMeanpool | FlexMaxpStore
+            | FlexMaxpLoad => 1,
+            Dense | BiasAdd | Add | Mul | Concat | ConcatRows | Conv2d { .. }
+            | HlscnnConv2d { .. } | VtaGemm | VtaAdd => 2,
+            FlexLinear | Attention | FlexAttention | FlexLstmFused { .. } => 3,
+            Lstm { .. } | FlexLstm { .. } => 4,
+        }
+    }
+
+    /// Which platform executes this operator.
+    pub fn target(&self) -> Target {
+        use Op::*;
+        match self {
+            FlexLinear | FlexLstm { .. } | FlexLstmFused { .. } | FlexLayerNorm | FlexMaxpool
+            | FlexMeanpool | FlexAttention | FlexMaxpStore | FlexMaxpLoad => {
+                Target::FlexAsr
+            }
+            HlscnnConv2d { .. } => Target::Hlscnn,
+            VtaGemm | VtaAdd => Target::Vta,
+            _ => Target::Host,
+        }
+    }
+
+    /// True for accelerator *compute* invocations (data movement ops are
+    /// not counted as invocations in Table 1).
+    pub fn is_accel_invocation(&self) -> bool {
+        self.target() != Target::Host
+            && !matches!(self, Op::FlexMaxpStore | Op::FlexMaxpLoad)
+    }
+
+    /// S-expression head symbol.
+    pub fn head(&self) -> String {
+        use Op::*;
+        match self {
+            Var(s) => format!("%{s}"),
+            Weight(s) => format!("${s}"),
+            ConstScalar(b) => format!("{}", f32::from_bits(*b)),
+            ZeroTensor(s) => format!("zeros{s:?}"),
+            Dense => "nn_dense".into(),
+            BiasAdd => "bias_add".into(),
+            Add => "add".into(),
+            Mul => "mul".into(),
+            Relu => "relu".into(),
+            Sigmoid => "sigmoid".into(),
+            Tanh => "tanh".into(),
+            Gelu => "gelu".into(),
+            Softmax => "softmax".into(),
+            LayerNorm => "layer_norm".into(),
+            Reshape(s) => format!("reshape{s:?}"),
+            Transpose => "transpose".into(),
+            Concat => "concat".into(),
+            Conv2d { stride, pad, groups } => {
+                format!("nn_conv2d<s{stride:?},p{pad:?},g{groups}>")
+            }
+            MaxPool2d { window, stride } => format!("max_pool2d<{window:?},{stride:?}>"),
+            AvgPool2d { window, stride } => format!("avg_pool2d<{window:?},{stride:?}>"),
+            GlobalAvgPool => "global_avg_pool".into(),
+            MatMaxPool { window, stride } => format!("mat_maxpool<{window:?},{stride:?}>"),
+            MatMeanPool { window, stride } => {
+                format!("mat_meanpool<{window:?},{stride:?}>")
+            }
+            WindowsFlatten { window, stride } => {
+                format!("windows_flatten<{window:?},{stride:?}>")
+            }
+            TempMaxPool => "temp_maxpool".into(),
+            TempMeanPool => "temp_meanpool".into(),
+            Im2col { kernel, stride, pad } => {
+                format!("im2col<{kernel:?},{stride:?},{pad:?}>")
+            }
+            FromIm2col { n, oh, ow } => format!("from_im2col<{n},{oh},{ow}>"),
+            Lstm { steps } => format!("nn_lstm<{steps}>"),
+            Attention => "attention".into(),
+            SliceStep { t } => format!("slice_step<{t}>"),
+            SliceCols { lo, hi } => format!("slice_cols<{lo},{hi}>"),
+            ConcatRows => "concat_rows".into(),
+            FlexLinear => "fasr_linear".into(),
+            FlexLstm { steps } => format!("fasr_lstm<{steps}>"),
+            FlexLstmFused { steps } => format!("fasr_lstm_fused<{steps}>"),
+            FlexLayerNorm => "fasr_layernorm".into(),
+            FlexMaxpool => "fasr_maxpool".into(),
+            FlexMeanpool => "fasr_meanpool".into(),
+            FlexAttention => "fasr_attention".into(),
+            FlexMaxpStore => "fasr_maxp_store".into(),
+            FlexMaxpLoad => "fasr_maxp_load".into(),
+            HlscnnConv2d { stride, pad } => format!("hlscnn_conv2d<s{stride:?},p{pad:?}>"),
+            VtaGemm => "vta_gemm".into(),
+            VtaAdd => "vta_add".into(),
+        }
+    }
+}
+
+/// One node: operator + children.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Node {
+    pub op: Op,
+    pub children: Vec<Id>,
+}
+
+impl Node {
+    /// Construct a node, checking arity.
+    pub fn new(op: Op, children: Vec<Id>) -> Self {
+        debug_assert_eq!(
+            op.arity(),
+            children.len(),
+            "arity mismatch for {:?}",
+            op
+        );
+        Node { op, children }
+    }
+}
+
+/// A term-DAG program: nodes in topological order (children precede
+/// parents); the last node is the root.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RecExpr {
+    pub nodes: Vec<Node>,
+}
+
+impl RecExpr {
+    /// Empty program.
+    pub fn new() -> Self {
+        RecExpr { nodes: Vec::new() }
+    }
+
+    /// Append a node; children must already be present.
+    pub fn add(&mut self, op: Op, children: Vec<Id>) -> Id {
+        for &c in &children {
+            assert!(c < self.nodes.len(), "child {c} out of range");
+        }
+        self.nodes.push(Node::new(op, children));
+        self.nodes.len() - 1
+    }
+
+    /// Root node id (the last node).
+    pub fn root(&self) -> Id {
+        assert!(!self.nodes.is_empty(), "empty RecExpr has no root");
+        self.nodes.len() - 1
+    }
+
+    /// Total number of nodes (the "#Relay ops" proxy of Table 1 Row 3).
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the program has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Count operator nodes matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.nodes.iter().filter(|n| pred(&n.op)).count()
+    }
+
+    /// Count accelerator invocations per target — the Table 1 metric.
+    pub fn invocations(&self, target: Target) -> usize {
+        self.count(|op| op.target() == target && op.is_accel_invocation())
+    }
+
+    /// Names of all `Var` leaves.
+    pub fn var_names(&self) -> Vec<String> {
+        self.nodes
+            .iter()
+            .filter_map(|n| match &n.op {
+                Op::Var(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// Convenience builder for writing application graphs by hand.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    pub expr: RecExpr,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        GraphBuilder { expr: RecExpr::new() }
+    }
+
+    pub fn var(&mut self, name: &str) -> Id {
+        self.expr.add(Op::Var(name.to_string()), vec![])
+    }
+
+    pub fn weight(&mut self, name: &str) -> Id {
+        self.expr.add(Op::Weight(name.to_string()), vec![])
+    }
+
+    pub fn dense(&mut self, x: Id, w: Id) -> Id {
+        self.expr.add(Op::Dense, vec![x, w])
+    }
+
+    pub fn bias_add(&mut self, x: Id, b: Id) -> Id {
+        self.expr.add(Op::BiasAdd, vec![x, b])
+    }
+
+    /// `linear = bias_add(dense(x, w), b)` — the Fig. 3 compiler-IR
+    /// pattern.
+    pub fn linear(&mut self, x: Id, w: Id, b: Id) -> Id {
+        let d = self.dense(x, w);
+        self.bias_add(d, b)
+    }
+
+    pub fn add(&mut self, a: Id, b: Id) -> Id {
+        self.expr.add(Op::Add, vec![a, b])
+    }
+
+    pub fn mul(&mut self, a: Id, b: Id) -> Id {
+        self.expr.add(Op::Mul, vec![a, b])
+    }
+
+    pub fn relu(&mut self, x: Id) -> Id {
+        self.expr.add(Op::Relu, vec![x])
+    }
+
+    pub fn gelu(&mut self, x: Id) -> Id {
+        self.expr.add(Op::Gelu, vec![x])
+    }
+
+    pub fn softmax(&mut self, x: Id) -> Id {
+        self.expr.add(Op::Softmax, vec![x])
+    }
+
+    pub fn layer_norm(&mut self, x: Id) -> Id {
+        self.expr.add(Op::LayerNorm, vec![x])
+    }
+
+    pub fn reshape(&mut self, x: Id, shape: &[usize]) -> Id {
+        self.expr.add(Op::Reshape(shape.to_vec()), vec![x])
+    }
+
+    pub fn transpose(&mut self, x: Id) -> Id {
+        self.expr.add(Op::Transpose, vec![x])
+    }
+
+    pub fn concat(&mut self, a: Id, b: Id) -> Id {
+        self.expr.add(Op::Concat, vec![a, b])
+    }
+
+    pub fn conv2d(
+        &mut self,
+        x: Id,
+        w: Id,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        groups: usize,
+    ) -> Id {
+        self.expr.add(Op::Conv2d { stride, pad, groups }, vec![x, w])
+    }
+
+    pub fn max_pool2d(&mut self, x: Id, window: (usize, usize), stride: (usize, usize)) -> Id {
+        self.expr.add(Op::MaxPool2d { window, stride }, vec![x])
+    }
+
+    pub fn global_avg_pool(&mut self, x: Id) -> Id {
+        self.expr.add(Op::GlobalAvgPool, vec![x])
+    }
+
+    pub fn lstm(&mut self, x: Id, w_ih: Id, w_hh: Id, b: Id, steps: usize) -> Id {
+        self.expr.add(Op::Lstm { steps }, vec![x, w_ih, w_hh, b])
+    }
+
+    pub fn attention(&mut self, q: Id, k: Id, v: Id) -> Id {
+        self.expr.add(Op::Attention, vec![q, k, v])
+    }
+
+    pub fn finish(self) -> RecExpr {
+        self.expr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_constructs_linear_pattern() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        let _y = g.linear(x, w, b);
+        let e = g.finish();
+        assert_eq!(e.len(), 5);
+        assert_eq!(e.nodes[e.root()].op, Op::BiasAdd);
+    }
+
+    #[test]
+    fn invocation_counting() {
+        let mut e = RecExpr::new();
+        let x = e.add(Op::Var("x".into()), vec![]);
+        let w = e.add(Op::Weight("w".into()), vec![]);
+        let b = e.add(Op::Weight("b".into()), vec![]);
+        let lin = e.add(Op::FlexLinear, vec![x, w, b]);
+        let _ = e.add(Op::FlexMaxpStore, vec![lin]);
+        assert_eq!(e.invocations(Target::FlexAsr), 1, "store is not an invocation");
+        assert_eq!(e.invocations(Target::Vta), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_rejects_forward_reference() {
+        let mut e = RecExpr::new();
+        e.add(Op::Relu, vec![3]);
+    }
+
+    #[test]
+    fn arity_table_consistent() {
+        assert_eq!(Op::Dense.arity(), 2);
+        assert_eq!(Op::FlexLinear.arity(), 3);
+        assert_eq!(Op::Lstm { steps: 3 }.arity(), 4);
+        assert_eq!(Op::Var("a".into()).arity(), 0);
+    }
+}

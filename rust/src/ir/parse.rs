@@ -1,0 +1,348 @@
+//! S-expression printing and parsing for IR programs.
+//!
+//! The textual form mirrors the paper's listings, e.g.
+//! `(bias_add (nn_dense %a $w) $b)`. Printing expands the term DAG into a
+//! tree (fine for the fragment-sized terms in docs, tests, and the
+//! examples); parsing rebuilds a RecExpr with hash-consing so shared
+//! subterms collapse back into one node.
+
+use super::{Id, Op, RecExpr};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Render a program as an s-expression (tree-expanded).
+pub fn to_sexpr(expr: &RecExpr) -> String {
+    fn go(expr: &RecExpr, id: Id, out: &mut String) {
+        let node = &expr.nodes[id];
+        if node.children.is_empty() {
+            let _ = write!(out, "{}", node.op.head());
+            return;
+        }
+        let _ = write!(out, "({}", node.op.head());
+        for &c in &node.children {
+            out.push(' ');
+            go(expr, c, out);
+        }
+        out.push(')');
+    }
+    let mut s = String::new();
+    go(expr, expr.root(), &mut s);
+    s
+}
+
+/// Parse failure.
+#[derive(Debug, thiserror::Error)]
+pub enum ParseError {
+    #[error("unexpected end of input")]
+    Eof,
+    #[error("unexpected token `{0}`")]
+    Unexpected(String),
+    #[error("unknown operator `{0}`")]
+    UnknownOp(String),
+    #[error("operator `{0}` expects {1} children, got {2}")]
+    Arity(String, usize, usize),
+}
+
+/// Parse an s-expression back into a RecExpr (hash-consed).
+pub fn parse_sexpr(src: &str) -> Result<RecExpr, ParseError> {
+    let tokens = tokenize(src);
+    let mut pos = 0usize;
+    let mut expr = RecExpr::new();
+    let mut memo: HashMap<(Op, Vec<Id>), Id> = HashMap::new();
+    let root = parse_term(&tokens, &mut pos, &mut expr, &mut memo)?;
+    if pos != tokens.len() {
+        return Err(ParseError::Unexpected(tokens[pos].clone()));
+    }
+    // ensure root is last
+    if root != expr.root() {
+        // re-add a copy of the root node at the end
+        let node = expr.nodes[root].clone();
+        expr.nodes.push(node);
+    }
+    Ok(expr)
+}
+
+fn tokenize(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    // inside <...> or [...] head parameters, whitespace and parens are
+    // part of the token
+    let mut depth_angle = 0i32;
+    for ch in src.chars() {
+        match ch {
+            '<' | '[' => {
+                depth_angle += 1;
+                cur.push(ch);
+            }
+            '>' | ']' => {
+                depth_angle -= 1;
+                cur.push(ch);
+            }
+            '(' | ')' if depth_angle == 0 => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+                out.push(ch.to_string());
+            }
+            c if c.is_whitespace() && depth_angle == 0 => {
+                if !cur.is_empty() {
+                    out.push(std::mem::take(&mut cur));
+                }
+            }
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn parse_term(
+    tokens: &[String],
+    pos: &mut usize,
+    expr: &mut RecExpr,
+    memo: &mut HashMap<(Op, Vec<Id>), Id>,
+) -> Result<Id, ParseError> {
+    let tok = tokens.get(*pos).ok_or(ParseError::Eof)?.clone();
+    *pos += 1;
+    if tok == "(" {
+        let head = tokens.get(*pos).ok_or(ParseError::Eof)?.clone();
+        *pos += 1;
+        let op = op_from_head(&head)?;
+        let mut children = Vec::new();
+        while tokens.get(*pos).map(|t| t.as_str()) != Some(")") {
+            children.push(parse_term(tokens, pos, expr, memo)?);
+        }
+        *pos += 1; // consume ')'
+        if children.len() != op.arity() {
+            return Err(ParseError::Arity(head, op.arity(), children.len()));
+        }
+        Ok(intern(expr, memo, op, children))
+    } else if tok == ")" {
+        Err(ParseError::Unexpected(tok))
+    } else {
+        let op = op_from_head(&tok)?;
+        if op.arity() != 0 {
+            return Err(ParseError::Arity(tok, op.arity(), 0));
+        }
+        Ok(intern(expr, memo, op, vec![]))
+    }
+}
+
+fn intern(
+    expr: &mut RecExpr,
+    memo: &mut HashMap<(Op, Vec<Id>), Id>,
+    op: Op,
+    children: Vec<Id>,
+) -> Id {
+    if let Some(&id) = memo.get(&(op.clone(), children.clone())) {
+        return id;
+    }
+    let id = expr.add(op.clone(), children.clone());
+    memo.insert((op, children), id);
+    id
+}
+
+/// Parse a `(a, b)` pair of usizes from a head-parameter substring.
+fn parse_pair(s: &str) -> Option<(usize, usize)> {
+    let s = s.trim().trim_start_matches('(').trim_end_matches(')');
+    let mut it = s.split(',').map(|p| p.trim().parse::<usize>().ok());
+    Some((it.next()??, it.next()??))
+}
+
+/// Split `head<params>` into (name, params).
+fn split_params(head: &str) -> (&str, Option<&str>) {
+    match head.find('<') {
+        Some(i) if head.ends_with('>') => (&head[..i], Some(&head[i + 1..head.len() - 1])),
+        _ => (head, None),
+    }
+}
+
+/// Split a params string on top-level commas (commas inside parens stay).
+fn top_level_split(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 => out.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn op_from_head(head: &str) -> Result<Op, ParseError> {
+    if let Some(name) = head.strip_prefix('%') {
+        return Ok(Op::Var(name.to_string()));
+    }
+    if let Some(name) = head.strip_prefix('$') {
+        return Ok(Op::Weight(name.to_string()));
+    }
+    if let Ok(v) = head.parse::<f32>() {
+        return Ok(Op::ConstScalar(v.to_bits()));
+    }
+    let (name, params) = split_params(head);
+    let two_pairs = || -> Option<((usize, usize), (usize, usize))> {
+        let parts = top_level_split(params?);
+        Some((parse_pair(parts.first()?)?, parse_pair(parts.get(1)?)?))
+    };
+    let op = match name {
+        "nn_dense" => Op::Dense,
+        "bias_add" => Op::BiasAdd,
+        "add" => Op::Add,
+        "mul" => Op::Mul,
+        "relu" => Op::Relu,
+        "sigmoid" => Op::Sigmoid,
+        "tanh" => Op::Tanh,
+        "gelu" => Op::Gelu,
+        "softmax" => Op::Softmax,
+        "layer_norm" => Op::LayerNorm,
+        "transpose" => Op::Transpose,
+        "concat" => Op::Concat,
+        "global_avg_pool" => Op::GlobalAvgPool,
+        "temp_maxpool" => Op::TempMaxPool,
+        "temp_meanpool" => Op::TempMeanPool,
+        "attention" => Op::Attention,
+        "fasr_linear" => Op::FlexLinear,
+        "fasr_layernorm" => Op::FlexLayerNorm,
+        "fasr_maxpool" => Op::FlexMaxpool,
+        "fasr_meanpool" => Op::FlexMeanpool,
+        "fasr_attention" => Op::FlexAttention,
+        "fasr_maxp_store" => Op::FlexMaxpStore,
+        "fasr_maxp_load" => Op::FlexMaxpLoad,
+        "vta_gemm" => Op::VtaGemm,
+        "vta_add" => Op::VtaAdd,
+        "mat_maxpool" => {
+            let (w, s) = two_pairs().ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::MatMaxPool { window: w, stride: s }
+        }
+        "mat_meanpool" => {
+            let (w, s) = two_pairs().ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::MatMeanPool { window: w, stride: s }
+        }
+        "windows_flatten" => {
+            let (w, s) = two_pairs().ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::WindowsFlatten { window: w, stride: s }
+        }
+        "max_pool2d" => {
+            let (w, s) = two_pairs().ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::MaxPool2d { window: w, stride: s }
+        }
+        "avg_pool2d" => {
+            let (w, s) = two_pairs().ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::AvgPool2d { window: w, stride: s }
+        }
+        "nn_lstm" => {
+            let steps = params
+                .and_then(|p| p.trim().parse::<usize>().ok())
+                .ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::Lstm { steps }
+        }
+        "fasr_lstm" => {
+            let steps = params
+                .and_then(|p| p.trim().parse::<usize>().ok())
+                .ok_or_else(|| ParseError::UnknownOp(head.into()))?;
+            Op::FlexLstm { steps }
+        }
+        _ => {
+            // reshape[2, 3] / zeros[2, 3]
+            if let Some(rest) = head.strip_prefix("reshape[") {
+                let dims = parse_dims(rest)?;
+                return Ok(Op::Reshape(dims));
+            }
+            if let Some(rest) = head.strip_prefix("zeros[") {
+                let dims = parse_dims(rest)?;
+                return Ok(Op::ZeroTensor(dims));
+            }
+            return Err(ParseError::UnknownOp(head.to_string()));
+        }
+    };
+    Ok(op)
+}
+
+fn parse_dims(rest: &str) -> Result<Vec<usize>, ParseError> {
+    let inner = rest.trim_end_matches(']');
+    if inner.trim().is_empty() {
+        return Ok(vec![]);
+    }
+    inner
+        .split(',')
+        .map(|d| {
+            d.trim()
+                .parse::<usize>()
+                .map_err(|_| ParseError::UnknownOp(format!("[{inner}]")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    #[test]
+    fn roundtrip_linear() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("a");
+        let w = g.weight("w0");
+        let b = g.weight("b0");
+        g.linear(x, w, b);
+        let e = g.finish();
+        let s = to_sexpr(&e);
+        assert_eq!(s, "(bias_add (nn_dense %a $w0) $b0)");
+        let back = parse_sexpr(&s).unwrap();
+        assert_eq!(to_sexpr(&back), s);
+    }
+
+    #[test]
+    fn roundtrip_parameterized_heads() {
+        let cases = [
+            "(mat_maxpool<(4, 4),(2, 2)> %t)",
+            "(windows_flatten<(2, 1),(2, 1)> %t)",
+            "(fasr_maxp_load (fasr_maxpool (fasr_maxp_store %t)))",
+            "(reshape[63, 63] (temp_maxpool %t))",
+            "(fasr_lstm<35> %x $wi $wh $b)",
+        ];
+        for c in cases {
+            let e = parse_sexpr(c).unwrap();
+            assert_eq!(to_sexpr(&e), c, "roundtrip failed for {c}");
+        }
+    }
+
+    #[test]
+    fn sharing_is_hash_consed() {
+        // (add (nn_dense %a $w) (nn_dense %a $w)) — dense appears once
+        let e = parse_sexpr("(add (nn_dense %a $w) (nn_dense %a $w))").unwrap();
+        let denses = e.count(|op| matches!(op, Op::Dense));
+        assert_eq!(denses, 1, "shared subterm must be interned once");
+    }
+
+    #[test]
+    fn arity_errors() {
+        assert!(matches!(
+            parse_sexpr("(nn_dense %a)"),
+            Err(ParseError::Arity(_, 2, 1))
+        ));
+    }
+
+    #[test]
+    fn unknown_op_errors() {
+        assert!(matches!(
+            parse_sexpr("(frobnicate %a)"),
+            Err(ParseError::UnknownOp(_))
+        ));
+    }
+}

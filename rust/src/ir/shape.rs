@@ -1,0 +1,388 @@
+//! Shape inference over the IR.
+//!
+//! Used three ways: validating hand-built application graphs, powering the
+//! e-graph's per-eclass shape analysis (which the shape-dependent rewrites
+//! — dense+zero-add, im2col — consult), and sizing buffers in codegen.
+
+use super::{Op, RecExpr};
+use std::collections::HashMap;
+
+/// Tensor shape.
+pub type Shape = Vec<usize>;
+
+/// Shape-inference failure.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum ShapeError {
+    #[error("unknown input `{0}` (no shape provided)")]
+    UnknownInput(String),
+    #[error("rank mismatch at {op}: expected {expected}, got {got:?}")]
+    Rank { op: String, expected: usize, got: Shape },
+    #[error("dimension mismatch at {op}: {detail}")]
+    Dim { op: String, detail: String },
+}
+
+fn rank_err(op: &Op, expected: usize, got: &[usize]) -> ShapeError {
+    ShapeError::Rank { op: op.head(), expected, got: got.to_vec() }
+}
+
+fn dim_err(op: &Op, detail: impl Into<String>) -> ShapeError {
+    ShapeError::Dim { op: op.head(), detail: detail.into() }
+}
+
+fn pool_out(op: &Op, dim: usize, w: usize, s: usize) -> Result<usize, ShapeError> {
+    if dim < w {
+        return Err(dim_err(op, format!("window {w} larger than dim {dim}")));
+    }
+    Ok((dim - w) / s + 1)
+}
+
+/// Infer the output shape of one operator from its children's shapes.
+/// Leaves (`Var`/`Weight`) must be resolved by the caller via `env`.
+pub fn infer_op(
+    op: &Op,
+    ch: &[&Shape],
+    env: &HashMap<String, Shape>,
+) -> Result<Shape, ShapeError> {
+    use Op::*;
+    let s = |i: usize| -> &Shape { ch[i] };
+    match op {
+        Var(name) | Weight(name) => env
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ShapeError::UnknownInput(name.clone())),
+        ConstScalar(_) => Ok(vec![]),
+        ZeroTensor(shape) => Ok(shape.clone()),
+
+        Dense | VtaGemm => {
+            let (x, w) = (s(0), s(1));
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            if w.len() != 2 {
+                return Err(rank_err(op, 2, w));
+            }
+            if x[1] != w[1] {
+                return Err(dim_err(op, format!("inner dims {} vs {}", x[1], w[1])));
+            }
+            Ok(vec![x[0], w[0]])
+        }
+        BiasAdd | Add | Mul | VtaAdd => {
+            let (x, y) = (s(0), s(1));
+            let ok = x == y
+                || y.is_empty()
+                || (y.len() == 1 && !x.is_empty() && *x.last().unwrap() == y[0]);
+            if !ok {
+                return Err(dim_err(op, format!("broadcast {x:?} vs {y:?}")));
+            }
+            Ok(x.clone())
+        }
+        Relu | Sigmoid | Tanh | Gelu | Softmax | LayerNorm | FlexLayerNorm
+        | FlexMaxpStore | FlexMaxpLoad => Ok(s(0).clone()),
+
+        Reshape(shape) => {
+            let n: usize = s(0).iter().product();
+            let m: usize = shape.iter().product();
+            if n != m {
+                return Err(dim_err(op, format!("{:?} -> {shape:?}", s(0))));
+            }
+            Ok(shape.clone())
+        }
+        Transpose => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            Ok(vec![x[1], x[0]])
+        }
+        Concat => {
+            let (x, y) = (s(0), s(1));
+            if x.len() != 2 || y.len() != 2 || x[0] != y[0] {
+                return Err(dim_err(op, format!("{x:?} ++ {y:?}")));
+            }
+            Ok(vec![x[0], x[1] + y[1]])
+        }
+        Conv2d { stride, pad, groups } => {
+            let (x, w) = (s(0), s(1));
+            if x.len() != 4 {
+                return Err(rank_err(op, 4, x));
+            }
+            if w.len() != 4 {
+                return Err(rank_err(op, 4, w));
+            }
+            if x[1] != w[1] * groups {
+                return Err(dim_err(
+                    op,
+                    format!("channels {} vs {}*{groups}", x[1], w[1]),
+                ));
+            }
+            let oh = (x[2] + 2 * pad.0).checked_sub(w[2]).map(|d| d / stride.0 + 1);
+            let ow = (x[3] + 2 * pad.1).checked_sub(w[3]).map(|d| d / stride.1 + 1);
+            match (oh, ow) {
+                (Some(oh), Some(ow)) => Ok(vec![x[0], w[0], oh, ow]),
+                _ => Err(dim_err(op, "kernel larger than padded input")),
+            }
+        }
+        HlscnnConv2d { stride, pad } => infer_op(
+            &Conv2d { stride: *stride, pad: *pad, groups: 1 },
+            ch,
+            env,
+        ),
+        MaxPool2d { window, stride } | AvgPool2d { window, stride } => {
+            let x = s(0);
+            if x.len() != 4 {
+                return Err(rank_err(op, 4, x));
+            }
+            Ok(vec![
+                x[0],
+                x[1],
+                pool_out(op, x[2], window.0, stride.0)?,
+                pool_out(op, x[3], window.1, stride.1)?,
+            ])
+        }
+        GlobalAvgPool => {
+            let x = s(0);
+            if x.len() != 4 {
+                return Err(rank_err(op, 4, x));
+            }
+            Ok(vec![x[0], x[1]])
+        }
+        MatMaxPool { window, stride } | MatMeanPool { window, stride } => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            Ok(vec![
+                pool_out(op, x[0], window.0, stride.0)?,
+                pool_out(op, x[1], window.1, stride.1)?,
+            ])
+        }
+        WindowsFlatten { window, stride } => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            let or = pool_out(op, x[0], window.0, stride.0)?;
+            let oc = pool_out(op, x[1], window.1, stride.1)?;
+            Ok(vec![window.0 * window.1, or * oc])
+        }
+        TempMaxPool | TempMeanPool | FlexMaxpool | FlexMeanpool => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            if x[0] % 2 != 0 {
+                return Err(dim_err(op, format!("odd row count {}", x[0])));
+            }
+            Ok(vec![x[0] / 2, x[1]])
+        }
+        Im2col { kernel, stride, pad } => {
+            let x = s(0);
+            if x.len() != 4 {
+                return Err(rank_err(op, 4, x));
+            }
+            let oh = pool_out(op, x[2] + 2 * pad.0, kernel.0, stride.0)?;
+            let ow = pool_out(op, x[3] + 2 * pad.1, kernel.1, stride.1)?;
+            Ok(vec![x[0] * oh * ow, x[1] * kernel.0 * kernel.1])
+        }
+        FromIm2col { n, oh, ow } => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            if x[0] != n * oh * ow {
+                return Err(dim_err(op, format!("rows {} != {n}*{oh}*{ow}", x[0])));
+            }
+            Ok(vec![*n, x[1], *oh, *ow])
+        }
+        SliceStep { t } => {
+            let x = s(0);
+            if x.len() != 3 {
+                return Err(rank_err(op, 3, x));
+            }
+            if *t >= x[0] {
+                return Err(dim_err(op, format!("step {t} out of {} steps", x[0])));
+            }
+            Ok(vec![x[1], x[2]])
+        }
+        SliceCols { lo, hi } => {
+            let x = s(0);
+            if x.len() != 2 {
+                return Err(rank_err(op, 2, x));
+            }
+            if *lo >= *hi || *hi > x[1] {
+                return Err(dim_err(op, format!("cols {lo}..{hi} of {}", x[1])));
+            }
+            Ok(vec![x[0], hi - lo])
+        }
+        ConcatRows => {
+            let (x, y) = (s(0), s(1));
+            if x.len() != 2 || y.len() != 2 || x[1] != y[1] {
+                return Err(dim_err(op, format!("{x:?} vcat {y:?}")));
+            }
+            Ok(vec![x[0] + y[0], x[1]])
+        }
+        FlexLstmFused { steps } => {
+            let (x, w, b) = (s(0), s(1), s(2));
+            if x.len() != 3 || w.len() != 2 || b.len() != 1 {
+                return Err(dim_err(op, "fused-lstm operand ranks"));
+            }
+            if x[0] != *steps {
+                return Err(dim_err(op, "T != steps"));
+            }
+            let four_h = w[0];
+            if four_h % 4 != 0 || b[0] != four_h {
+                return Err(dim_err(op, "gate dims"));
+            }
+            let h = four_h / 4;
+            if w[1] != x[2] + h {
+                return Err(dim_err(op, "fused K must be E + H"));
+            }
+            Ok(vec![x[0], x[1], h])
+        }
+        Lstm { steps } | FlexLstm { steps } => {
+            let (x, w_ih, w_hh, b) = (s(0), s(1), s(2), s(3));
+            if x.len() != 3 {
+                return Err(rank_err(op, 3, x));
+            }
+            if x[0] != *steps {
+                return Err(dim_err(op, format!("T {} != steps {steps}", x[0])));
+            }
+            let h = w_hh[1];
+            if w_ih.len() != 2 || w_hh.len() != 2 || b.len() != 1 {
+                return Err(dim_err(op, "weight ranks"));
+            }
+            if w_ih[0] != 4 * h || w_hh[0] != 4 * h || b[0] != 4 * h {
+                return Err(dim_err(op, "gate dims must be 4*hidden"));
+            }
+            if w_ih[1] != x[2] {
+                return Err(dim_err(op, "input dim mismatch"));
+            }
+            Ok(vec![x[0], x[1], h])
+        }
+        Attention | FlexAttention => {
+            let (q, k, v) = (s(0), s(1), s(2));
+            if q.len() != 2 || k.len() != 2 || v.len() != 2 {
+                return Err(dim_err(op, "attention operands must be 2-D"));
+            }
+            if q[1] != k[1] || k[0] != v[0] {
+                return Err(dim_err(op, format!("q{q:?} k{k:?} v{v:?}")));
+            }
+            Ok(vec![q[0], v[1]])
+        }
+        FlexLinear => {
+            let (x, w, b) = (s(0), s(1), s(2));
+            if x.len() != 2 || w.len() != 2 || b.len() != 1 {
+                return Err(dim_err(op, "linear operand ranks"));
+            }
+            if x[1] != w[1] || b[0] != w[0] {
+                return Err(dim_err(op, format!("x{x:?} w{w:?} b{b:?}")));
+            }
+            Ok(vec![x[0], w[0]])
+        }
+    }
+}
+
+/// Infer shapes for every node of a program. `env` maps `Var`/`Weight`
+/// names to their shapes.
+pub fn infer(
+    expr: &RecExpr,
+    env: &HashMap<String, Shape>,
+) -> Result<Vec<Shape>, ShapeError> {
+    let mut out: Vec<Shape> = Vec::with_capacity(expr.len());
+    for node in &expr.nodes {
+        let ch: Vec<&Shape> = node.children.iter().map(|&c| &out[c]).collect();
+        out.push(infer_op(&node.op, &ch, env)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn env(pairs: &[(&str, &[usize])]) -> HashMap<String, Shape> {
+        pairs.iter().map(|(n, s)| (n.to_string(), s.to_vec())).collect()
+    }
+
+    #[test]
+    fn linear_shapes() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.linear(x, w, b);
+        let shapes = infer(
+            &g.finish(),
+            &env(&[("x", &[4, 16]), ("w", &[8, 16]), ("b", &[8])]),
+        )
+        .unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![4, 8]);
+    }
+
+    #[test]
+    fn conv_shapes_with_padding() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        g.conv2d(x, w, (2, 2), (1, 1), 1);
+        let shapes = infer(
+            &g.finish(),
+            &env(&[("x", &[1, 3, 32, 32]), ("w", &[16, 3, 3, 3])]),
+        )
+        .unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![1, 16, 16, 16]);
+    }
+
+    #[test]
+    fn windows_flatten_then_tempmax_reduces() {
+        use crate::ir::{Op, RecExpr};
+        let mut e = RecExpr::new();
+        let x = e.add(Op::Var("t".into()), vec![]);
+        let wf = e.add(
+            Op::WindowsFlatten { window: (4, 4), stride: (2, 2) },
+            vec![x],
+        );
+        let m1 = e.add(Op::TempMaxPool, vec![wf]);
+        let m2 = e.add(Op::TempMaxPool, vec![m1]);
+        let m3 = e.add(Op::TempMaxPool, vec![m2]);
+        let m4 = e.add(Op::TempMaxPool, vec![m3]);
+        let _r = e.add(Op::Reshape(vec![63, 63]), vec![m4]);
+        let shapes = infer(&e, &env(&[("t", &[128, 128])])).unwrap();
+        assert_eq!(shapes[wf], vec![16, 63 * 63]);
+        assert_eq!(shapes[m4], vec![1, 63 * 63]);
+        assert_eq!(shapes.last().unwrap(), &vec![63, 63]);
+    }
+
+    #[test]
+    fn mismatch_reported() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        g.dense(x, w);
+        let err =
+            infer(&g.finish(), &env(&[("x", &[4, 16]), ("w", &[8, 17])])).unwrap_err();
+        assert!(matches!(err, ShapeError::Dim { .. }));
+    }
+
+    #[test]
+    fn lstm_shape() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let wi = g.weight("wi");
+        let wh = g.weight("wh");
+        let b = g.weight("b");
+        g.lstm(x, wi, wh, b, 35);
+        let shapes = infer(
+            &g.finish(),
+            &env(&[
+                ("x", &[35, 1, 64]),
+                ("wi", &[256, 64]),
+                ("wh", &[256, 64]),
+                ("b", &[256]),
+            ]),
+        )
+        .unwrap();
+        assert_eq!(shapes.last().unwrap(), &vec![35, 1, 64]);
+    }
+}

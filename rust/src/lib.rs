@@ -1,0 +1,30 @@
+//! # d2a — Application-Level Validation of Accelerator Designs Using a
+//! # Formal Software/Hardware Interface
+//!
+//! Rust + JAX + Pallas reproduction of the D2A/3LA system: an ILA-based
+//! compiler flow (equality-saturation instruction selection over a pure
+//! tensor IR), bit-accurate accelerator models with custom numerics, and
+//! compilation-results validation at the operation level (simulation +
+//! formal) and at the application level (co-simulation).
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index.
+
+pub mod accel;
+pub mod apps;
+pub mod cli;
+pub mod codegen;
+pub mod compiler;
+pub mod coordinator;
+pub mod cosim;
+pub mod egraph;
+pub mod ila;
+pub mod ir;
+pub mod numerics;
+pub mod rewrites;
+pub mod rtl;
+pub mod runtime;
+pub mod smt;
+pub mod soc;
+pub mod tensor;
+pub mod util;
+pub mod verify;

@@ -1,0 +1,224 @@
+//! `d2a` — the leader binary: compile applications to accelerators,
+//! validate mappings, run application-level co-simulation, verify the
+//! maxpool mapping formally, and demo the SoC deployment.
+
+use d2a::apps::table1::all_apps;
+use d2a::cli::Cli;
+use d2a::coordinator::{accelerators, classify_sweep, DesignRev};
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use d2a::runtime::ArtifactStore;
+use std::time::Duration;
+
+const HELP: &str = "\
+d2a — Application-Level Validation of Accelerator Designs Using a Formal
+Software/Hardware Interface (D2A/3LA reproduction)
+
+USAGE: d2a <command> [flags]
+
+COMMANDS:
+  table1                 compilation statistics (exact vs flexible), 6 apps
+  table2 [--inputs N]    simulation-based mapping validation (default 100)
+  verify [--rows R --cols C --timeout SECS]
+                         BMC + CHC verification of the FlexASR MaxPool mapping
+  cosim  --app NAME [--rev original|updated] [--limit N] [--workers W]
+                         application-level co-simulation (resmlp | resnet20 |
+                         mobilenet | lstm)
+  soc-demo               run a D2A-lowered program on the emulated SoC
+  help                   this text
+";
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::parse(std::env::args());
+    match cli.command.as_str() {
+        "table1" => cmd_table1(),
+        "table2" => cmd_table2(cli.get_usize("inputs", 100)),
+        "verify" => cmd_verify(
+            cli.get_usize("rows", 4),
+            cli.get_usize("cols", 32),
+            cli.get_usize("timeout", 120),
+        ),
+        "cosim" => cmd_cosim(&cli),
+        "soc-demo" => cmd_soc_demo(),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_table1() -> anyhow::Result<()> {
+    println!("Table 1 — static accelerator invocations (exact/flexible)");
+    println!(
+        "{:<14} {:>9} {:>12} {:>12} {:>12}",
+        "app", "#ops", "FlexASR", "HLSCNN", "VTA"
+    );
+    for app in all_apps() {
+        let mut cells = Vec::new();
+        for target in [Target::FlexAsr, Target::Hlscnn, Target::Vta] {
+            let mut counts = Vec::new();
+            for mode in [Matching::Exact, Matching::Flexible] {
+                let res = d2a::compiler::compile_app(&app, &[target], mode, limits());
+                counts.push(res.invocations(target).to_string());
+            }
+            cells.push(counts.join("/"));
+        }
+        println!(
+            "{:<14} {:>9} {:>12} {:>12} {:>12}",
+            app.name,
+            app.num_ops(),
+            cells[0],
+            cells[1],
+            cells[2]
+        );
+    }
+    Ok(())
+}
+
+fn limits() -> RunnerLimits {
+    RunnerLimits { max_iters: 8, max_nodes: 150_000, time_limit: Duration::from_secs(30) }
+}
+
+fn cmd_table2(n: usize) -> anyhow::Result<()> {
+    println!("Table 2 — simulation-based mapping validation ({n} inputs)");
+    println!("{:<10} {:<12} {:>10} {:>10}", "accel", "operation", "avg err", "std dev");
+    for row in d2a::cosim::table2::validate_all(n, 2022) {
+        let (m, s) = row.stats.pct();
+        println!("{:<10} {:<12} {:>10} {:>10}", row.accelerator, row.operation, m, s);
+    }
+    Ok(())
+}
+
+fn cmd_verify(rows: usize, cols: usize, timeout: usize) -> anyhow::Result<()> {
+    let t = Duration::from_secs(timeout as u64);
+    println!("FlexASR MaxPool mapping, {rows}x{cols}, timeout {timeout}s");
+    let bmc = d2a::verify::verify_bmc(rows, cols, t);
+    println!(
+        "  BMC: {:?} in {:.2}s ({} vars, {} conflicts)",
+        bmc.result,
+        bmc.elapsed.as_secs_f64(),
+        bmc.vars,
+        bmc.conflicts
+    );
+    let chc = d2a::verify::verify_chc(rows, cols, t);
+    println!(
+        "  CHC: {:?} in {:.2}s ({} queries, {} conflicts)",
+        chc.result,
+        chc.elapsed.as_secs_f64(),
+        chc.queries,
+        chc.conflicts
+    );
+    Ok(())
+}
+
+fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
+    let store = ArtifactStore::open(None)?;
+    let app_name = cli.get("app").unwrap_or("resmlp");
+    let rev = match cli.get("rev") {
+        Some("original") => DesignRev::Original,
+        _ => DesignRev::Updated,
+    };
+    let limit = cli.get_usize("limit", 400);
+    let workers = cli.get_usize("workers", 1);
+
+    if app_name == "lstm" {
+        let app = d2a::apps::cosim_models::lstm_wlm_lite();
+        let compiled = d2a::compiler::compile_app(
+            &app,
+            &[Target::FlexAsr],
+            Matching::Flexible,
+            limits(),
+        );
+        let mut weights = store.weights("lstm")?;
+        let embed = weights.remove("embed").expect("embed table");
+        let tokens = store.test_tokens()?;
+        let n_sent = limit.min(100);
+        let accels = accelerators(rev);
+        let rep = d2a::cosim::cosim_lm(
+            &compiled.expr,
+            &weights,
+            &embed,
+            &tokens,
+            n_sent,
+            &accels,
+        )?;
+        println!(
+            "LSTM-WLM ({n_sent} sentences): reference ppl {:.2}, accelerated ppl {:.2}",
+            rep.ref_perplexity, rep.acc_perplexity
+        );
+        return Ok(());
+    }
+
+    let (app, model) = match app_name {
+        "resmlp" => (d2a::apps::cosim_models::resmlp_lite(), "resmlp"),
+        "resnet20" => (d2a::apps::cosim_models::resnet20_lite(), "resnet20"),
+        "mobilenet" => (d2a::apps::cosim_models::mobilenet_lite(), "mobilenet"),
+        other => anyhow::bail!("unknown app `{other}`"),
+    };
+    let targets: &[Target] = if model == "resmlp" {
+        &[Target::FlexAsr]
+    } else {
+        &[Target::FlexAsr, Target::Hlscnn]
+    };
+    let compiled =
+        d2a::compiler::compile_app(&app, targets, Matching::Flexible, limits());
+    println!(
+        "{}: compiled with {} FlexASR + {} HLSCNN invocations",
+        app.name,
+        compiled.invocations(Target::FlexAsr),
+        compiled.invocations(Target::Hlscnn)
+    );
+    let weights = store.weights(model)?;
+    let (images, labels) = store.test_images()?;
+    let n = limit.min(images.len());
+    let rep = classify_sweep(
+        &compiled.expr,
+        &weights,
+        &images[..n],
+        &labels[..n],
+        rev,
+        workers,
+    );
+    println!(
+        "{} [{:?}] over {} images: reference {:.2}%, accelerated {:.2}%  ({:.1?}/image)",
+        app.name,
+        rev,
+        rep.n,
+        rep.ref_accuracy() * 100.0,
+        rep.acc_accuracy() * 100.0,
+        rep.time_per_point()
+    );
+    Ok(())
+}
+
+fn cmd_soc_demo() -> anyhow::Result<()> {
+    use d2a::accel::{FlexAsr, Vta};
+    use d2a::codegen::{lower_flex_linear, lower_vta_gemm};
+    use d2a::soc::driver::Driver;
+    use d2a::tensor::Tensor;
+    use d2a::util::Rng;
+    let mut drv = Driver::new(d2a::soc::reference_soc());
+    let fa = FlexAsr::new();
+    let vta = Vta::new();
+    let mut rng = Rng::new(1);
+    let x = fa.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
+    let w = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
+    let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
+    let inv = lower_flex_linear(&fa, &x, &w, &b);
+    println!("FlexASR linear fragment (Fig. 5c):\n{}", inv.asm);
+    println!("final MMIO commands (Fig. 5d):");
+    for c in inv.cmds.iter().rev().take(7).rev() {
+        println!("  {c}");
+    }
+    let y = drv.invoke(&inv)?;
+    println!("result shape {:?}; now chaining into VTA GEMM...", y.shape);
+    let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
+    let y2 = drv.invoke(&lower_vta_gemm(&vta, &vta.quant(&y), &w2))?;
+    println!(
+        "VTA GEMM result shape {:?}; bus handled {} MMIO commands total",
+        y2.shape,
+        drv.bus.total_steps()
+    );
+    Ok(())
+}

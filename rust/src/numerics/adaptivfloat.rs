@@ -1,0 +1,219 @@
+//! AdaptivFloat (Tambe et al., DAC'20) — FlexASR's custom numeric type.
+//!
+//! An n-bit floating-point format `1 sign | e exponent | m = n-1-e
+//! mantissa` whose **exponent bias adapts per tensor**: the bias is chosen
+//! so that the largest representable magnitude just covers the tensor's
+//! max-abs value. This keeps quantized DNN tensors (whose dynamic range
+//! varies wildly layer to layer) inside the representable range, boosting
+//! accuracy relative to a fixed-bias mini-float.
+//!
+//! Encoding used here (following the DAC'20 description):
+//! * normal values: `(-1)^s * 2^(E + bias) * (1 + M / 2^m)` for biased
+//!   exponent `E in [0, 2^e - 1]`;
+//! * a reserved zero encoding (AdaptivFloat sacrifices denormals for a
+//!   clean zero);
+//! * values below half the smallest normal underflow to zero, values above
+//!   the max saturate.
+
+use super::NumericFormat;
+use crate::tensor::Tensor;
+
+/// Per-tensor AdaptivFloat format descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptivFloatFormat {
+    /// Total bits (sign + exponent + mantissa).
+    pub bits: u32,
+    /// Exponent bits.
+    pub exp_bits: u32,
+}
+
+impl AdaptivFloatFormat {
+    /// Construct a format; `bits` must leave at least one mantissa bit.
+    pub fn new(bits: u32, exp_bits: u32) -> Self {
+        assert!(bits >= exp_bits + 2, "need at least 1 mantissa bit");
+        assert!(exp_bits >= 1);
+        AdaptivFloatFormat { bits, exp_bits }
+    }
+
+    /// Mantissa bits.
+    pub fn mant_bits(&self) -> u32 {
+        self.bits - 1 - self.exp_bits
+    }
+
+    /// Choose the adaptive exponent bias for a tensor with the given
+    /// max-abs value. Returns the bias such that the format's largest
+    /// magnitude `2^(Emax + bias) * (2 - 2^-m)` covers `max_abs`.
+    pub fn select_bias(&self, max_abs: f32) -> i32 {
+        if max_abs <= 0.0 || !max_abs.is_finite() {
+            return 0;
+        }
+        let e_max = (1i32 << self.exp_bits) - 1;
+        // exponent of max_abs in normalized form
+        let exp = max_abs.log2().floor() as i32;
+        exp - e_max
+    }
+
+    /// Quantize one value with the given bias. Bit-exact model of the
+    /// FlexASR datapath's storage format.
+    pub fn quantize_value(&self, x: f32, bias: i32) -> f32 {
+        if x == 0.0 || !x.is_finite() {
+            return 0.0;
+        }
+        let m = self.mant_bits();
+        let e_max = (1i32 << self.exp_bits) - 1;
+        let sign = if x < 0.0 { -1.0f32 } else { 1.0f32 };
+        let a = x.abs();
+        // unbiased exponent of the value
+        let mut exp = a.log2().floor() as i32;
+        let mut frac = a / (exp as f32).exp2(); // in [1, 2)
+        // round mantissa to m bits
+        let scale = (1u32 << m) as f32;
+        let mut mant = ((frac - 1.0) * scale).round();
+        if mant >= scale {
+            mant = 0.0;
+            exp += 1;
+        }
+        frac = 1.0 + mant / scale;
+        let e_biased = exp - bias;
+        if e_biased > e_max {
+            // saturate to the max representable magnitude
+            let max_mag = ((e_max + bias) as f32).exp2() * (2.0 - 1.0 / scale);
+            return sign * max_mag;
+        }
+        if e_biased < 0 {
+            // underflow handling: snap to zero or the smallest normal,
+            // whichever is nearer.
+            let min_normal = (bias as f32).exp2();
+            return if a < min_normal / 2.0 { 0.0 } else { sign * min_normal };
+        }
+        sign * (exp as f32).exp2() * frac
+    }
+
+    /// Encode to the raw bit pattern (sign | exp | mantissa); `None` when
+    /// the value quantizes to zero. Used by the bit-accuracy tests and by
+    /// the RTL-proxy datapath.
+    pub fn encode_bits(&self, x: f32, bias: i32) -> Option<u32> {
+        let q = self.quantize_value(x, bias);
+        if q == 0.0 {
+            return None;
+        }
+        let m = self.mant_bits();
+        let a = q.abs();
+        let exp = a.log2().floor() as i32;
+        let frac = a / (exp as f32).exp2();
+        let mant = ((frac - 1.0) * (1u32 << m) as f32).round() as u32;
+        let e_biased = (exp - bias) as u32;
+        let sign = if q < 0.0 { 1u32 } else { 0u32 };
+        Some((sign << (self.bits - 1)) | (e_biased << m) | (mant & ((1 << m) - 1)))
+    }
+
+    /// Decode a raw bit pattern back to f32.
+    pub fn decode_bits(&self, bits: u32, bias: i32) -> f32 {
+        let m = self.mant_bits();
+        let sign = if (bits >> (self.bits - 1)) & 1 == 1 { -1.0 } else { 1.0 };
+        let e_biased = ((bits >> m) & ((1 << self.exp_bits) - 1)) as i32;
+        let mant = (bits & ((1 << m) - 1)) as f32;
+        sign * ((e_biased + bias) as f32).exp2() * (1.0 + mant / (1u32 << m) as f32)
+    }
+}
+
+impl NumericFormat for AdaptivFloatFormat {
+    fn name(&self) -> String {
+        format!("adaptivfloat<{},{}>", self.bits, self.exp_bits)
+    }
+
+    fn quantize(&self, t: &Tensor) -> Tensor {
+        let bias = self.select_bias(t.max_abs());
+        t.map(|x| self.quantize_value(x, bias))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        assert_eq!(f.quantize_value(0.0, -5), 0.0);
+    }
+
+    #[test]
+    fn max_value_representable() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        let max_abs = 3.7f32;
+        let bias = f.select_bias(max_abs);
+        let q = f.quantize_value(max_abs, bias);
+        // must not saturate far below the true max
+        assert!((q - max_abs).abs() / max_abs < 0.1, "q={q}");
+    }
+
+    #[test]
+    fn relative_error_bounded_by_mantissa() {
+        // for values inside the normal range, relative error <= 2^-(m+1)
+        let f = AdaptivFloatFormat::new(8, 3);
+        let mut rng = Rng::new(77);
+        let bias = f.select_bias(1.0);
+        let tol = 0.5f32.powi(f.mant_bits() as i32) / 2.0 + 1e-6;
+        for _ in 0..1000 {
+            let x = rng.uniform_in(0.01, 1.0);
+            let q = f.quantize_value(x, bias);
+            if q == 0.0 {
+                continue;
+            }
+            let rel = (q - x).abs() / x;
+            assert!(rel <= tol * 1.01, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn bits_roundtrip() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        let bias = f.select_bias(2.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let x = rng.uniform_in(-2.0, 2.0);
+            let q = f.quantize_value(x, bias);
+            if q == 0.0 {
+                continue;
+            }
+            let bits = f.encode_bits(x, bias).unwrap();
+            assert!(bits < (1 << f.bits), "encoding exceeds width");
+            let back = f.decode_bits(bits, bias);
+            assert!(
+                (back - q).abs() < 1e-6 * q.abs().max(1e-6),
+                "x={x} q={q} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturates_above_max() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        let bias = f.select_bias(1.0);
+        let q = f.quantize_value(100.0, bias);
+        assert!(q < 2.1, "should saturate near the format max, got {q}");
+        assert!(q > 1.5);
+    }
+
+    #[test]
+    fn small_values_underflow_to_zero() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        let bias = f.select_bias(1.0); // min normal = 2^bias = 2^-7
+        let q = f.quantize_value(1e-6, bias);
+        assert_eq!(q, 0.0);
+    }
+
+    #[test]
+    fn adaptive_bias_tracks_range() {
+        let f = AdaptivFloatFormat::new(8, 3);
+        // tensors with very different ranges both get useful resolution
+        for scale in [0.01f32, 1.0, 100.0] {
+            let bias = f.select_bias(scale);
+            let q = f.quantize_value(scale * 0.7, bias);
+            let rel = (q - scale * 0.7).abs() / (scale * 0.7);
+            assert!(rel < 0.05, "scale={scale} rel={rel}");
+        }
+    }
+}

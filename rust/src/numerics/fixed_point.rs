@@ -1,0 +1,152 @@
+//! Fixed-point arithmetic — HLSCNN's datapath format.
+//!
+//! `Q(total_bits, frac_bits)`: signed two's-complement with `frac_bits`
+//! fractional bits, saturating at the rails. HLSCNN as published stored
+//! conv weights in **8-bit** fixed point; the Table 4 case study found
+//! that this clips the weight range of trained CIFAR models badly enough
+//! to collapse application accuracy, and widening the weight store to
+//! **16-bit** recovers it. Both widths are modeled here.
+
+use super::NumericFormat;
+use crate::tensor::Tensor;
+
+/// A fixed-point format descriptor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPointFormat {
+    /// Total bits including sign.
+    pub bits: u32,
+    /// Fractional bits.
+    pub frac_bits: u32,
+}
+
+impl FixedPointFormat {
+    /// Construct a format. `frac_bits` may equal `bits - 1` (all
+    /// fractional).
+    pub fn new(bits: u32, frac_bits: u32) -> Self {
+        assert!(bits >= 2 && bits <= 32);
+        assert!(frac_bits < bits);
+        FixedPointFormat { bits, frac_bits }
+    }
+
+    /// Smallest representable step.
+    pub fn step(&self) -> f32 {
+        0.5f32.powi(self.frac_bits as i32)
+    }
+
+    /// Largest representable value.
+    pub fn max_value(&self) -> f32 {
+        let max_int = (1i64 << (self.bits - 1)) - 1;
+        max_int as f32 * self.step()
+    }
+
+    /// Smallest (most negative) representable value.
+    pub fn min_value(&self) -> f32 {
+        let min_int = -(1i64 << (self.bits - 1));
+        min_int as f32 * self.step()
+    }
+
+    /// Quantize one value: scale, round-to-nearest-even, saturate.
+    pub fn quantize_value(&self, x: f32) -> f32 {
+        if !x.is_finite() {
+            return if x > 0.0 { self.max_value() } else { self.min_value() };
+        }
+        let scaled = (x / self.step()).round_ties_even();
+        let max_int = ((1i64 << (self.bits - 1)) - 1) as f32;
+        let min_int = (-(1i64 << (self.bits - 1))) as f32;
+        scaled.clamp(min_int, max_int) * self.step()
+    }
+
+    /// Raw integer encoding (two's complement value as i64).
+    pub fn encode(&self, x: f32) -> i64 {
+        let q = self.quantize_value(x);
+        (q / self.step()).round() as i64
+    }
+
+    /// Decode a raw integer.
+    pub fn decode(&self, raw: i64) -> f32 {
+        raw as f32 * self.step()
+    }
+
+    /// Fixed-point multiply with a wider accumulator, then requantize —
+    /// models HLSCNN's MAC datapath (products accumulate in 32 bits).
+    pub fn mac(&self, acc: i64, a: i64, b: i64) -> i64 {
+        // product has 2*frac_bits fractional bits; keep full precision in
+        // the accumulator, shift at readout.
+        acc + a * b
+    }
+
+    /// Convert a full-precision accumulator (2*frac_bits fractional bits)
+    /// back to this format's lattice, saturating.
+    pub fn requantize_acc(&self, acc: i64) -> f32 {
+        let v = acc as f64 * (0.5f64.powi(2 * self.frac_bits as i32));
+        self.quantize_value(v as f32)
+    }
+}
+
+impl NumericFormat for FixedPointFormat {
+    fn name(&self) -> String {
+        format!("fixed<{},{}>", self.bits, self.frac_bits)
+    }
+
+    fn quantize(&self, t: &Tensor) -> Tensor {
+        t.map(|x| self.quantize_value(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn rails() {
+        let f = FixedPointFormat::new(8, 6);
+        assert!((f.max_value() - 127.0 / 64.0).abs() < 1e-6);
+        assert!((f.min_value() + 2.0).abs() < 1e-6);
+        assert_eq!(f.quantize_value(100.0), f.max_value());
+        assert_eq!(f.quantize_value(-100.0), f.min_value());
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        let f = FixedPointFormat::new(16, 10);
+        let mut rng = Rng::new(21);
+        for _ in 0..1000 {
+            let x = rng.uniform_in(f.min_value(), f.max_value());
+            let q = f.quantize_value(x);
+            assert!((q - x).abs() <= f.step() / 2.0 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let f = FixedPointFormat::new(8, 4);
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let x = rng.uniform_in(-7.9, 7.9);
+            let q = f.quantize_value(x);
+            assert!((f.decode(f.encode(x)) - q).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn the_8bit_clipping_phenomenon() {
+        // The Table 4 root cause: weights with range beyond +-2 get
+        // destroyed in fixed<8,6>, preserved in fixed<16,10>.
+        let w8 = FixedPointFormat::new(8, 6);
+        let w16 = FixedPointFormat::new(16, 10);
+        let x = 5.3f32; // a plausible outlier conv weight after training
+        assert!((w8.quantize_value(x) - x).abs() > 3.0, "8-bit must clip");
+        assert!((w16.quantize_value(x) - x).abs() < 0.01, "16-bit must hold");
+    }
+
+    #[test]
+    fn mac_requantize_matches_float() {
+        let f = FixedPointFormat::new(16, 8);
+        let a = 1.25f32;
+        let b = -0.5f32;
+        let acc = f.mac(0, f.encode(a), f.encode(b));
+        let out = f.requantize_acc(acc);
+        assert!((out - a * b).abs() < f.step());
+    }
+}

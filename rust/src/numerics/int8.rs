@@ -1,0 +1,126 @@
+//! VTA's 8-bit integer arithmetic.
+//!
+//! VTA's GEMM core consumes int8 operands and accumulates in int32. The
+//! compiler quantizes f32 tensors symmetrically with a per-tensor
+//! power-of-two scale; when the *reference* interpreter also runs on the
+//! same int8 inputs (the Table 2 protocol: "for the IR interpreter ... we
+//! use 8-bit integer ... when checking operations of VTA"), GEMM is exact
+//! and the measured relative error is 0.00% — precisely Row 1 of Table 2.
+
+use super::NumericFormat;
+use crate::tensor::Tensor;
+
+/// Symmetric int8 with power-of-two per-tensor scaling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Int8Format;
+
+impl Int8Format {
+    /// Construct the (parameterless) format.
+    pub fn new() -> Self {
+        Int8Format
+    }
+
+    /// Pick the power-of-two scale that maps `max_abs` onto [-127, 127].
+    pub fn select_scale(&self, max_abs: f32) -> f32 {
+        if max_abs <= 0.0 || !max_abs.is_finite() {
+            return 1.0;
+        }
+        // smallest power of two >= max_abs / 127
+        let raw = max_abs / 127.0;
+        (raw.log2().ceil()).exp2()
+    }
+
+    /// Quantize one value with a given scale.
+    pub fn quantize_value(&self, x: f32, scale: f32) -> f32 {
+        let q = (x / scale).round().clamp(-127.0, 127.0);
+        q * scale
+    }
+
+    /// Integer encoding in [-127, 127].
+    pub fn encode(&self, x: f32, scale: f32) -> i8 {
+        (x / scale).round().clamp(-127.0, 127.0) as i8
+    }
+
+    /// Decode an integer code.
+    pub fn decode(&self, code: i8, scale: f32) -> f32 {
+        code as f32 * scale
+    }
+}
+
+impl NumericFormat for Int8Format {
+    fn name(&self) -> String {
+        "int8".to_string()
+    }
+
+    fn quantize(&self, t: &Tensor) -> Tensor {
+        let scale = self.select_scale(t.max_abs());
+        t.map(|x| self.quantize_value(x, scale))
+    }
+}
+
+/// Exact int8 GEMM with int32 accumulation: `x: [N, K]` (codes),
+/// `w: [M, K]` (codes) -> int32 accumulators `[N, M]`. This is the VTA
+/// GEMM core semantics the ILA model wraps.
+pub fn int8_gemm_acc(x: &[i8], w: &[i8], n: usize, k: usize, m: usize) -> Vec<i32> {
+    assert_eq!(x.len(), n * k);
+    assert_eq!(w.len(), m * k);
+    let mut out = vec![0i32; n * m];
+    for i in 0..n {
+        for j in 0..m {
+            let mut acc = 0i32;
+            for t in 0..k {
+                acc += x[i * k + t] as i32 * w[j * k + t] as i32;
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn scale_covers_range() {
+        let f = Int8Format::new();
+        for max in [0.1f32, 1.0, 13.7, 400.0] {
+            let s = f.select_scale(max);
+            assert!(127.0 * s >= max, "scale {s} too small for {max}");
+            assert!(127.0 * s < max * 2.01, "scale {s} too coarse for {max}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_on_lattice() {
+        let f = Int8Format::new();
+        let s = 0.25f32;
+        for code in -127i8..=127 {
+            let x = f.decode(code, s);
+            assert_eq!(f.encode(x, s), code);
+        }
+    }
+
+    #[test]
+    fn int8_gemm_exactness() {
+        // the Table 2 Row 1 phenomenon: int8 GEMM vs int8 reference is
+        // bit-exact because both run the same integer arithmetic.
+        let mut rng = Rng::new(99);
+        let (n, k, m) = (4, 8, 3);
+        let x: Vec<i8> = (0..n * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let w: Vec<i8> = (0..m * k).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+        let acc = int8_gemm_acc(&x, &w, n, k, m);
+        // reference: f32 arithmetic over the same codes is exact for these
+        // magnitudes (int8*int8 sums fit in f32's 24-bit mantissa here).
+        for i in 0..n {
+            for j in 0..m {
+                let mut f = 0.0f32;
+                for t in 0..k {
+                    f += x[i * k + t] as f32 * w[j * k + t] as f32;
+                }
+                assert_eq!(f as i32, acc[i * m + j]);
+            }
+        }
+    }
+}

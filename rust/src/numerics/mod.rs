@@ -1,0 +1,65 @@
+//! Custom numeric datatypes used by the target accelerators (§4.1):
+//!
+//! * [`adaptivfloat`] — FlexASR's *AdaptivFloat* (Tambe et al., DAC'20): an
+//!   n-bit float whose exponent bias adapts per tensor to the dynamic range
+//!   of the data.
+//! * [`fixed_point`] — HLSCNN's 8/16-bit fixed point. The Table 4
+//!   co-design case study hinges on the original 8-bit weight
+//!   representation clipping the weight range and the 16-bit fix
+//!   recovering application accuracy.
+//! * [`int8`] — VTA's 8-bit integer with per-tensor power-of-two scaling.
+//!
+//! Every type provides *bit-accurate* encode/decode (what the ILA
+//! simulators run) plus a convenience fake-quant (`quantize_f32`) used when
+//! only the value lattice matters.
+
+pub mod adaptivfloat;
+pub mod fixed_point;
+pub mod int8;
+
+pub use adaptivfloat::AdaptivFloatFormat;
+pub use fixed_point::FixedPointFormat;
+pub use int8::Int8Format;
+
+use crate::tensor::Tensor;
+
+/// A numeric format that can round-trip a tensor through its value lattice.
+/// This is the hook the ILA simulators use: every tensor entering or
+/// produced by an accelerator op is snapped onto the accelerator's lattice.
+pub trait NumericFormat: Send + Sync {
+    /// Human-readable name ("adaptivfloat<8,3>", "fixed<8,6>", "int8").
+    fn name(&self) -> String;
+
+    /// Quantize a full tensor (per-tensor parameters are derived from the
+    /// tensor itself, as the accelerators do).
+    fn quantize(&self, t: &Tensor) -> Tensor;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Quantization must be idempotent for every format: values already on
+    /// the lattice stay put.
+    #[test]
+    fn quantization_idempotent() {
+        let mut rng = Rng::new(123);
+        let t = Tensor::randn(&[16, 16], &mut rng, 1.0);
+        let formats: Vec<Box<dyn NumericFormat>> = vec![
+            Box::new(AdaptivFloatFormat::new(8, 3)),
+            Box::new(FixedPointFormat::new(8, 6)),
+            Box::new(FixedPointFormat::new(16, 10)),
+            Box::new(Int8Format::new()),
+        ];
+        for f in &formats {
+            let q1 = f.quantize(&t);
+            let q2 = f.quantize(&q1);
+            assert!(
+                q1.max_abs_diff(&q2) < 1e-6,
+                "{} not idempotent",
+                f.name()
+            );
+        }
+    }
+}

@@ -1,0 +1,293 @@
+//! IR-accelerator rewrites — one per supported accelerator operation
+//! (Appendix A), derived from the verified IR-accelerator mappings.
+
+use crate::egraph::pattern::dsl::*;
+use crate::egraph::pattern::Pat;
+use crate::egraph::Rewrite;
+use crate::ir::Op;
+
+/// FlexASR buffer capacity in elements per matrix dimension (the mapping
+/// precondition for linear layers).
+pub const FLEXASR_MAX_DIM: usize = 4096;
+
+/// Build the unrolled-LSTM IR-accelerator rewrite for a fixed step count
+/// and hidden size — "the pattern we match for the LSTM layer in exact
+/// matching is precisely the formulation of an LSTM produced by TVM's
+/// PyTorch importer, unrolled to the correct number of timesteps"
+/// (Appendix A). The LHS is the full `steps`-deep gate recurrence
+/// (16 ops per step); the RHS is ONE `fasr_lstm_fused` instruction —
+/// Table 1's 566-Relay-ops-to-1 granularity collapse.
+pub fn flexasr_unrolled_lstm(steps: usize, hidden: usize) -> Rewrite {
+    let h = hidden;
+    let h0: Pat = n(Op::ZeroTensor(vec![1, h]), vec![]);
+    let c0: Pat = n(Op::ZeroTensor(vec![1, h]), vec![]);
+    let mut hprev = h0;
+    let mut cprev = c0;
+    let mut chain: Option<Pat> = None;
+    for t in 0..steps {
+        let xt = n(Op::SliceStep { t }, vec![v("x")]);
+        let cat = n(Op::Concat, vec![xt, hprev.clone()]);
+        let gates = n(
+            Op::Add,
+            vec![n(Op::Dense, vec![cat, v("w")]), v("b")],
+        );
+        let gi = n(Op::Sigmoid, vec![n(Op::SliceCols { lo: 0, hi: h }, vec![gates.clone()])]);
+        let gf = n(
+            Op::Sigmoid,
+            vec![n(Op::SliceCols { lo: h, hi: 2 * h }, vec![gates.clone()])],
+        );
+        let gg = n(
+            Op::Tanh,
+            vec![n(Op::SliceCols { lo: 2 * h, hi: 3 * h }, vec![gates.clone()])],
+        );
+        let go = n(
+            Op::Sigmoid,
+            vec![n(Op::SliceCols { lo: 3 * h, hi: 4 * h }, vec![gates])],
+        );
+        let ct = n(
+            Op::Add,
+            vec![n(Op::Mul, vec![gf, cprev.clone()]), n(Op::Mul, vec![gi, gg])],
+        );
+        let ht = n(Op::Mul, vec![go, n(Op::Tanh, vec![ct.clone()])]);
+        chain = Some(match chain {
+            None => ht.clone(),
+            Some(acc) => n(Op::ConcatRows, vec![acc, ht.clone()]),
+        });
+        hprev = ht;
+        cprev = ct;
+    }
+    let lhs = chain.expect("steps >= 1");
+    Rewrite::dynamic(
+        &format!("flexasr-unrolled-lstm-{steps}"),
+        lhs,
+        move |eg, m| {
+            let fused = eg.add(
+                Op::FlexLstmFused { steps },
+                vec![m.subst.class("x"), m.subst.class("w"), m.subst.class("b")],
+            );
+            Some(eg.add(Op::Reshape(vec![steps, h]), vec![fused]))
+        },
+    )
+}
+
+/// FlexASR (Appendix A: linear layer, LSTM layer; plus the §4.4 mappings
+/// for layer norm, temporal max/mean pool, and attention).
+pub fn flexasr_rules() -> Vec<Rewrite> {
+    vec![
+        // Fig. 3 / Fig. 5: (bias_add (nn_dense x w) b) -> fasr_linear.
+        // Capacity precondition: the operands must fit FlexASR's global
+        // buffer / PE weight store (this is why e.g. the LSTM-WLM
+        // vocabulary-sized decoder stays off FlexASR in Table 1).
+        Rewrite::dynamic(
+            "flexasr-linear",
+            n(Op::BiasAdd, vec![n(Op::Dense, vec![v("x"), v("w")]), v("b")]),
+            |eg, m| {
+                let w = m.subst.class("w");
+                let ws = eg.shape_of(w)?.clone();
+                if ws.len() != 2 || ws[0] > FLEXASR_MAX_DIM || ws[1] > FLEXASR_MAX_DIM
+                {
+                    return None;
+                }
+                let d = eg.add(Op::Dense, vec![m.subst.class("x"), w]);
+                let b = m.subst.class("b");
+                let _ = d;
+                Some(eg.add(
+                    Op::FlexLinear,
+                    vec![m.subst.class("x"), w, b],
+                ))
+            },
+        ),
+        // the whole unrolled LSTM maps to ONE FlexASR instruction —
+        // Table 1's dramatic granularity mismatch (566 Relay ops -> 1).
+        Rewrite::dynamic(
+            "flexasr-lstm",
+            any(
+                "lstm",
+                |op| matches!(op, Op::Lstm { .. }),
+                vec![v("x"), v("wi"), v("wh"), v("b")],
+            ),
+            |eg, m| {
+                let Op::Lstm { steps } = *m.subst.op("lstm") else { return None };
+                let ch = vec![
+                    m.subst.class("x"),
+                    m.subst.class("wi"),
+                    m.subst.class("wh"),
+                    m.subst.class("b"),
+                ];
+                Some(eg.add(Op::FlexLstm { steps }, ch))
+            },
+        ),
+    ]
+}
+
+/// FlexASR mappings that are *validated* (Table 2) but not wired into the
+/// end-to-end compiler — mirroring Appendix A: "The compiler supports two
+/// of FlexASR's operations: linear layers and LSTM layers." These extra
+/// rules power the §5.1 maxpool study and the fig7 bench.
+pub fn flexasr_extended_rules() -> Vec<Rewrite> {
+    vec![
+        Rewrite::pure(
+            "flexasr-layernorm",
+            n(Op::LayerNorm, vec![v("x")]),
+            n(Op::FlexLayerNorm, vec![v("x")]),
+        ),
+        // §5.1: temporal max pooling with explicit store/compute/load
+        Rewrite::pure(
+            "flexasr-temp-maxpool",
+            n(Op::TempMaxPool, vec![v("t")]),
+            n(
+                Op::FlexMaxpLoad,
+                vec![n(Op::FlexMaxpool, vec![n(Op::FlexMaxpStore, vec![v("t")])])],
+            ),
+        ),
+        Rewrite::pure(
+            "flexasr-temp-meanpool",
+            n(Op::TempMeanPool, vec![v("t")]),
+            n(
+                Op::FlexMaxpLoad,
+                vec![n(Op::FlexMeanpool, vec![n(Op::FlexMaxpStore, vec![v("t")])])],
+            ),
+        ),
+        Rewrite::pure(
+            "flexasr-attention",
+            n(Op::Attention, vec![v("q"), v("k"), v("v")]),
+            n(Op::FlexAttention, vec![v("q"), v("k"), v("v")]),
+        ),
+    ]
+}
+
+/// HLSCNN (Appendix A: one operation — non-grouped 2-D convolution).
+pub fn hlscnn_rules() -> Vec<Rewrite> {
+    vec![Rewrite::dynamic(
+        "hlscnn-conv2d",
+        any(
+            "conv",
+            |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![v("x"), v("w")],
+        ),
+        |eg, m| {
+            let Op::Conv2d { stride, pad, .. } = *m.subst.op("conv") else {
+                return None;
+            };
+            Some(eg.add(
+                Op::HlscnnConv2d { stride, pad },
+                vec![m.subst.class("x"), m.subst.class("w")],
+            ))
+        },
+    )]
+}
+
+/// VTA (Appendix A: matrix multiplication and addition as fixed VTA
+/// instruction sequences; `nn.dense` is the invocation-counted GEMM).
+pub fn vta_rules() -> Vec<Rewrite> {
+    vec![Rewrite::pure(
+        "vta-gemm",
+        n(Op::Dense, vec![v("x"), v("w")]),
+        n(Op::VtaGemm, vec![v("x"), v("w")]),
+    )]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{AccelCost, EGraph, Extractor, Runner};
+    use crate::ir::shape::Shape;
+    use crate::ir::{GraphBuilder, Op, Target};
+    use std::collections::HashMap;
+
+    fn env() -> HashMap<String, Shape> {
+        [
+            ("x".to_string(), vec![2usize, 4]),
+            ("w".to_string(), vec![3, 4]),
+            ("b".to_string(), vec![3]),
+        ]
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn exact_matching_offloads_linear_to_flexasr() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.linear(x, w, b);
+        let expr = g.finish();
+        let mut eg = EGraph::new(env());
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &flexasr_rules());
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+        assert_eq!(best.invocations(Target::FlexAsr), 1);
+    }
+
+    #[test]
+    fn lstm_collapses_to_one_invocation() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("seq");
+        let wi = g.weight("wi");
+        let wh = g.weight("wh");
+        let b = g.weight("b");
+        g.lstm(x, wi, wh, b, 35);
+        let expr = g.finish();
+        let shapes: HashMap<String, Shape> = [
+            ("seq".to_string(), vec![35usize, 1, 8]),
+            ("wi".to_string(), vec![32, 8]),
+            ("wh".to_string(), vec![32, 8]),
+            ("b".to_string(), vec![32]),
+        ]
+        .into_iter()
+        .collect();
+        let mut eg = EGraph::new(shapes);
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &flexasr_rules());
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+        assert_eq!(best.invocations(Target::FlexAsr), 1);
+        assert_eq!(best.count(|o| matches!(o, Op::FlexLstm { steps: 35 })), 1);
+    }
+
+    #[test]
+    fn conv_param_transfer_to_hlscnn() {
+        let mut g = GraphBuilder::new();
+        let x = g.var("img");
+        let w = g.weight("k");
+        g.conv2d(x, w, (2, 2), (1, 1), 1);
+        let expr = g.finish();
+        let shapes: HashMap<String, Shape> = [
+            ("img".to_string(), vec![1usize, 3, 8, 8]),
+            ("k".to_string(), vec![4, 3, 3, 3]),
+        ]
+        .into_iter()
+        .collect();
+        let mut eg = EGraph::new(shapes);
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &hlscnn_rules());
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::Hlscnn)).extract(root);
+        assert_eq!(best.invocations(Target::Hlscnn), 1);
+        assert_eq!(
+            best.count(|o| matches!(
+                o,
+                Op::HlscnnConv2d { stride: (2, 2), pad: (1, 1) }
+            )),
+            1
+        );
+    }
+
+    #[test]
+    fn grouped_conv_not_offloaded() {
+        // HLSCNN supports only non-grouped convolution (Appendix A)
+        let mut g = GraphBuilder::new();
+        let x = g.var("img");
+        let w = g.weight("k");
+        g.conv2d(x, w, (1, 1), (1, 1), 4);
+        let expr = g.finish();
+        let mut eg = EGraph::new(HashMap::new());
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &hlscnn_rules());
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::Hlscnn)).extract(root);
+        assert_eq!(best.invocations(Target::Hlscnn), 0);
+    }
+}

@@ -1,0 +1,342 @@
+//! Compiler-IR rewrites — accelerator-independent, input-program-
+//! independent rules that expose more IR-accelerator matches (§2.2.2).
+//!
+//! These are the source of the paper's *emergent effects*: im2col turns
+//! 2-D convolutions into `nn.dense`, which the VTA GEMM rule then offloads
+//! even though no conv-on-VTA rule exists; `dense -> dense + 0` exposes
+//! FlexASR's linear layer for bare matmuls (the MobileNet-V2 observation
+//! in §4.3.1).
+
+use crate::egraph::pattern::dsl::*;
+use crate::egraph::Rewrite;
+use crate::ir::Op;
+
+/// All general-purpose compiler-IR rewrites.
+pub fn rules() -> Vec<Rewrite> {
+    let mut rs = vec![
+        linear_exposure_reshape(),
+        linear_exposure_add(),
+        dense_zero_add(),
+        conv2d_im2col(),
+        maxpool_decompose(),
+        meanpool_decompose(),
+    ];
+    rs.extend(std::iter::empty::<Rewrite>());
+    rs
+}
+
+/// §5.1 data-movement optimization: loading data out of the accelerator
+/// only to store it back is a no-op.
+pub fn data_movement_rules() -> Vec<Rewrite> {
+    vec![Rewrite::dynamic(
+        "fasr-store-load-cancel",
+        n(Op::FlexMaxpStore, vec![n(Op::FlexMaxpLoad, vec![v("t")])]),
+        |_, m| Some(m.subst.class("t")),
+    )]
+}
+
+/// `(add (reshape (nn_dense x w) s) c)` → `(bias_add (nn_dense x w) c)`
+/// when the reshape is shape-preserving in 2-D and `c` is a vector — the
+/// §2.2.2 linear-layer example.
+fn linear_exposure_reshape() -> Rewrite {
+    Rewrite::dynamic(
+        "linear-exposure-reshape",
+        n(
+            Op::Add,
+            vec![
+                any(
+                    "rs",
+                    |op| matches!(op, Op::Reshape(_)),
+                    vec![n(Op::Dense, vec![v("x"), v("w")])],
+                ),
+                v("c"),
+            ],
+        ),
+        |eg, m| {
+            // precondition: c is rank-1 and reshape target is 2-D with the
+            // same trailing dim
+            let c = m.subst.class("c");
+            let c_shape = eg.shape_of(c)?.clone();
+            if c_shape.len() != 1 {
+                return None;
+            }
+            let Op::Reshape(target) = m.subst.op("rs") else { return None };
+            if target.len() != 2 || target[1] != c_shape[0] {
+                return None;
+            }
+            let d = eg.add(Op::Dense, vec![m.subst.class("x"), m.subst.class("w")]);
+            if eg.shape_of(d) != Some(&target.clone()) {
+                return None;
+            }
+            Some(eg.add(Op::BiasAdd, vec![d, c]))
+        },
+    )
+}
+
+/// `(add (nn_dense x w) c)` → `(bias_add (nn_dense x w) c)` when `c` is a
+/// vector (plain `add` with broadcast is semantically bias_add here).
+fn linear_exposure_add() -> Rewrite {
+    Rewrite::dynamic(
+        "linear-exposure-add",
+        n(Op::Add, vec![n(Op::Dense, vec![v("x"), v("w")]), v("c")]),
+        |eg, m| {
+            let c = m.subst.class("c");
+            if eg.shape_of(c)?.len() != 1 {
+                return None;
+            }
+            let d = eg.add(Op::Dense, vec![m.subst.class("x"), m.subst.class("w")]);
+            Some(eg.add(Op::BiasAdd, vec![d, c]))
+        },
+    )
+}
+
+/// `(nn_dense x w)` → `(bias_add (nn_dense x w) 0)` — exposes FlexASR's
+/// linear layer for bias-free matmuls ("rewriting nn.dense to nn.dense
+/// followed by an add of a zero tensor", §4.3.1).
+fn dense_zero_add() -> Rewrite {
+    Rewrite::dynamic(
+        "dense-zero-add",
+        n(Op::Dense, vec![v("x"), v("w")]),
+        |eg, m| {
+            let out_shape = eg.shape_of(m.class)?.clone();
+            if out_shape.len() != 2 {
+                return None;
+            }
+            let zero = eg.add(Op::ZeroTensor(vec![out_shape[1]]), vec![]);
+            let d = eg.add(Op::Dense, vec![m.subst.class("x"), m.subst.class("w")]);
+            Some(eg.add(Op::BiasAdd, vec![d, zero]))
+        },
+    )
+}
+
+/// `(conv2d<s,p,1> x w)` → `(from_im2col (nn_dense (im2col x) (reshape w)))`
+/// — the Glenside im2col rewrite [13] behind Table 1's conv-on-VTA counts.
+fn conv2d_im2col() -> Rewrite {
+    Rewrite::dynamic(
+        "conv2d-im2col",
+        any(
+            "conv",
+            |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![v("x"), v("w")],
+        ),
+        |eg, m| {
+            let Op::Conv2d { stride, pad, .. } = *m.subst.op("conv") else {
+                return None;
+            };
+            let x = m.subst.class("x");
+            let w = m.subst.class("w");
+            let xs = eg.shape_of(x)?.clone();
+            let ws = eg.shape_of(w)?.clone();
+            if xs.len() != 4 || ws.len() != 4 {
+                return None;
+            }
+            let (n, _c, h, wd) = (xs[0], xs[1], xs[2], xs[3]);
+            let (o, ci, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+            let oh = (h + 2 * pad.0).checked_sub(kh)? / stride.0 + 1;
+            let ow = (wd + 2 * pad.1).checked_sub(kw)? / stride.1 + 1;
+            let patches =
+                eg.add(Op::Im2col { kernel: (kh, kw), stride, pad }, vec![x]);
+            let wflat = eg.add(Op::Reshape(vec![o, ci * kh * kw]), vec![w]);
+            let gemm = eg.add(Op::Dense, vec![patches, wflat]);
+            Some(eg.add(Op::FromIm2col { n, oh, ow }, vec![gemm]))
+        },
+    )
+}
+
+/// Decompose matrix max pooling with a power-of-two window into
+/// `reshape . temp_maxpool^k . windows_flatten` — the Fig. 7(c) rewrite
+/// that exposes FlexASR's fixed (2,1)/(2,1) temporal max pool.
+fn maxpool_decompose() -> Rewrite {
+    pool_decompose(
+        "maxpool-decompose",
+        |op| matches!(op, Op::MatMaxPool { .. }),
+        |op| {
+            let Op::MatMaxPool { window, stride } = *op else { unreachable!() };
+            (window, stride)
+        },
+        Op::TempMaxPool,
+    )
+}
+
+/// The mean-pool analogue (valid because the window size is a power of
+/// two, so the mean of pairwise means equals the overall mean).
+fn meanpool_decompose() -> Rewrite {
+    pool_decompose(
+        "meanpool-decompose",
+        |op| matches!(op, Op::MatMeanPool { .. }),
+        |op| {
+            let Op::MatMeanPool { window, stride } = *op else { unreachable!() };
+            (window, stride)
+        },
+        Op::TempMeanPool,
+    )
+}
+
+fn pool_decompose(
+    name: &str,
+    pred: fn(&Op) -> bool,
+    params: fn(&Op) -> ((usize, usize), (usize, usize)),
+    stage_op: Op,
+) -> Rewrite {
+    Rewrite::dynamic(name, any("pool", pred, vec![v("t")]), move |eg, m| {
+        let (window, stride) = params(m.subst.op("pool"));
+        let wsize = window.0 * window.1;
+        if wsize < 2 || !wsize.is_power_of_two() {
+            return None;
+        }
+        let out_shape = eg.shape_of(m.class)?.clone();
+        if out_shape.len() != 2 {
+            return None;
+        }
+        let t = m.subst.class("t");
+        let mut cur = eg.add(Op::WindowsFlatten { window, stride }, vec![t]);
+        for _ in 0..wsize.trailing_zeros() {
+            cur = eg.add(stage_op.clone(), vec![cur]);
+        }
+        Some(eg.add(Op::Reshape(out_shape), vec![cur]))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::egraph::{AccelCost, EGraph, Extractor, Runner};
+    use crate::ir::shape::Shape;
+    use crate::ir::{interp, GraphBuilder, Op, RecExpr, Target};
+    use crate::rewrites::{rules_for, Matching};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    fn shapes(pairs: &[(&str, &[usize])]) -> HashMap<String, Shape> {
+        pairs.iter().map(|(n, s)| (n.to_string(), s.to_vec())).collect()
+    }
+
+    #[test]
+    fn bare_dense_reaches_flexasr_via_zero_add() {
+        // the §4.3.1 MobileNet observation
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        g.dense(x, w);
+        let expr = g.finish();
+        let mut eg = EGraph::new(shapes(&[("x", &[2, 4]), ("w", &[3, 4])]));
+        let root = eg.add_expr(&expr);
+
+        // exact matching: no offload
+        let mut eg2 = EGraph::new(shapes(&[("x", &[2, 4]), ("w", &[3, 4])]));
+        let root2 = eg2.add_expr(&expr);
+        Runner::default()
+            .run(&mut eg2, &rules_for(&[Target::FlexAsr], Matching::Exact));
+        let exact = Extractor::new(&eg2, AccelCost::for_target(Target::FlexAsr))
+            .extract(root2);
+        assert_eq!(exact.invocations(Target::FlexAsr), 0);
+
+        // flexible matching: dense + 0 -> fasr_linear
+        Runner::default()
+            .run(&mut eg, &rules_for(&[Target::FlexAsr], Matching::Flexible));
+        let flex =
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+        assert_eq!(flex.invocations(Target::FlexAsr), 1);
+    }
+
+    #[test]
+    fn conv_reaches_vta_via_im2col_emergence() {
+        // emergent effect: no conv-on-VTA rule exists, yet conv offloads
+        let mut g = GraphBuilder::new();
+        let x = g.var("img");
+        let w = g.weight("k");
+        g.conv2d(x, w, (1, 1), (1, 1), 1);
+        let expr = g.finish();
+        let env = shapes(&[("img", &[1, 3, 8, 8]), ("k", &[4, 3, 3, 3])]);
+        let mut eg = EGraph::new(env);
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &rules_for(&[Target::Vta], Matching::Flexible));
+        let flex =
+            Extractor::new(&eg, AccelCost::for_target(Target::Vta)).extract(root);
+        assert_eq!(flex.invocations(Target::Vta), 1);
+        assert_eq!(flex.count(|o| matches!(o, Op::Conv2d { .. })), 0);
+    }
+
+    #[test]
+    fn rewritten_conv_is_semantics_preserving() {
+        // evaluate original vs extracted program — must agree in f32
+        let mut g = GraphBuilder::new();
+        let x = g.var("img");
+        let w = g.weight("k");
+        g.conv2d(x, w, (2, 2), (1, 1), 1);
+        let expr = g.finish();
+        let env = shapes(&[("img", &[1, 3, 8, 8]), ("k", &[4, 3, 3, 3])]);
+        let mut eg = EGraph::new(env);
+        let root = eg.add_expr(&expr);
+        Runner::default().run(&mut eg, &rules_for(&[Target::Vta], Matching::Flexible));
+        let flex: RecExpr =
+            Extractor::new(&eg, AccelCost::for_target(Target::Vta)).extract(root);
+
+        let mut rng = Rng::new(31);
+        let tenv: HashMap<String, Tensor> = [
+            ("img".to_string(), Tensor::randn(&[1, 3, 8, 8], &mut rng, 1.0)),
+            ("k".to_string(), Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.5)),
+        ]
+        .into_iter()
+        .collect();
+        let a = interp::eval(&expr, &tenv).unwrap();
+        let b = interp::eval(&flex, &tenv).unwrap();
+        assert_eq!(a.shape, b.shape);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn fig7_maxpool_pipeline_with_cancellation() {
+        // (mat_maxpool<(4,4),(2,2)> T) must become a single
+        // store -> 4x fasr_maxpool -> load chain after flexible matching
+        // with the store/load-cancellation rule.
+        let mut e = RecExpr::new();
+        let t = e.add(Op::Var("t".into()), vec![]);
+        e.add(Op::MatMaxPool { window: (4, 4), stride: (2, 2) }, vec![t]);
+        let env = shapes(&[("t", &[128, 128])]);
+        let mut eg = EGraph::new(env);
+        let root = eg.add_expr(&e);
+        let rules = crate::rewrites::rules_for_extended(&[Target::FlexAsr], Matching::Flexible);
+        Runner::default().run(&mut eg, &rules);
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+        let stores = best.count(|o| matches!(o, Op::FlexMaxpStore));
+        let loads = best.count(|o| matches!(o, Op::FlexMaxpLoad));
+        let pools = best.count(|o| matches!(o, Op::FlexMaxpool));
+        assert_eq!(pools, 4, "four temporal maxpool stages: {}", crate::ir::parse::to_sexpr(&best));
+        assert_eq!(stores, 1, "intermediate stores cancelled");
+        assert_eq!(loads, 1, "intermediate loads cancelled");
+
+        // and the result still computes the right thing
+        let mut rng = Rng::new(7);
+        let tenv: HashMap<String, Tensor> =
+            [("t".to_string(), Tensor::randn(&[128, 128], &mut rng, 1.0))]
+                .into_iter()
+                .collect();
+        let a = interp::eval(&e, &tenv).unwrap();
+        let b = interp::eval(&best, &tenv).unwrap();
+        assert_eq!(a.shape, vec![63, 63]);
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+
+    #[test]
+    fn reshape_linear_exposure() {
+        // (add (reshape (dense x w)) c) with vector c becomes fasr_linear
+        let mut e = RecExpr::new();
+        let x = e.add(Op::Var("x".into()), vec![]);
+        let w = e.add(Op::Weight("w".into()), vec![]);
+        let c = e.add(Op::Weight("c".into()), vec![]);
+        let d = e.add(Op::Dense, vec![x, w]);
+        let r = e.add(Op::Reshape(vec![2, 3]), vec![d]);
+        e.add(Op::Add, vec![r, c]);
+        let env = shapes(&[("x", &[2, 4]), ("w", &[3, 4]), ("c", &[3])]);
+        let mut eg = EGraph::new(env);
+        let root = eg.add_expr(&e);
+        Runner::default()
+            .run(&mut eg, &rules_for(&[Target::FlexAsr], Matching::Flexible));
+        let best =
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+        assert_eq!(best.invocations(Target::FlexAsr), 1);
+    }
+}

@@ -1,0 +1,66 @@
+//! The D2A rewrite-rule library.
+//!
+//! Two families (§2.2):
+//!
+//! * **IR-accelerator rewrites** ([`accel`]) — derived from the
+//!   IR-accelerator mappings; LHS is a compiler-IR pattern, RHS the
+//!   corresponding accelerator operator. Applying only these is *exact
+//!   matching*.
+//! * **Compiler-IR rewrites** ([`compiler_ir`]) — accelerator-independent
+//!   IR-to-IR rules (linear-layer exposure, dense+zero-add, im2col,
+//!   maxpool decomposition, store/load cancellation) that expose more
+//!   matches. Adding these on top is *flexible matching*.
+
+pub mod accel;
+pub mod compiler_ir;
+
+use crate::egraph::Rewrite;
+use crate::ir::Target;
+
+/// Matching mode for a compilation run (the two columns of Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Matching {
+    Exact,
+    Flexible,
+}
+
+impl std::fmt::Display for Matching {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Matching::Exact => write!(f, "exact"),
+            Matching::Flexible => write!(f, "flexible"),
+        }
+    }
+}
+
+/// Assemble the rule set for compiling to `targets` under `mode`.
+/// Like [`rules_for`] but with the extended (validated-but-not-compiled)
+/// FlexASR mappings included — used by the §5.1 data-movement study.
+pub fn rules_for_extended(targets: &[Target], mode: Matching) -> Vec<Rewrite> {
+    let mut rules = rules_for(targets, mode);
+    if targets.contains(&Target::FlexAsr) {
+        rules.extend(accel::flexasr_extended_rules());
+    }
+    rules
+}
+
+pub fn rules_for(targets: &[Target], mode: Matching) -> Vec<Rewrite> {
+    let mut rules = Vec::new();
+    for &t in targets {
+        match t {
+            Target::FlexAsr => rules.extend(accel::flexasr_rules()),
+            Target::Hlscnn => rules.extend(accel::hlscnn_rules()),
+            Target::Vta => rules.extend(accel::vta_rules()),
+            Target::Host => {}
+        }
+    }
+    if mode == Matching::Flexible {
+        rules.extend(compiler_ir::rules());
+        // the store/load cancellation (§5.1) is only meaningful when
+        // FlexASR data-movement ops can appear
+        if targets.contains(&Target::FlexAsr) {
+            rules.extend(compiler_ir::data_movement_rules());
+        }
+    }
+    rules
+}

@@ -1,0 +1,14 @@
+//! Cycle-level FlexASR datapath model — the RTL-simulation stand-in for
+//! the paper's "30× speedup of ILA simulation over RTL simulation with a
+//! commercial Verilog simulator" claim (§4.4.2) and for VT3-style
+//! checking (ILA vs implementation).
+//!
+//! The model simulates the PE array the way an RTL simulator would: cycle
+//! by cycle, evaluating every lane's decode/multiply/accumulate datapath
+//! at the bit level and clocking a register file each cycle. The ILA
+//! model computes the same result per *instruction* (whole-operation
+//! update), which is exactly why ILA simulation is fast.
+
+pub mod flexasr_rtl;
+
+pub use flexasr_rtl::RtlFlexAsr;

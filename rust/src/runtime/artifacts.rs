@@ -1,0 +1,127 @@
+//! Artifact bundle reader (the `make artifacts` outputs).
+
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Handle to the artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Open `dir` (defaults to `$D2A_ARTIFACTS` or `artifacts/`).
+    pub fn open(dir: Option<&Path>) -> Result<Self> {
+        let dir = match dir {
+            Some(d) => d.to_path_buf(),
+            None => std::env::var("D2A_ARTIFACTS")
+                .map(PathBuf::from)
+                .unwrap_or_else(|_| PathBuf::from("artifacts")),
+        };
+        // fall back to the repo root when invoked from a subdirectory
+        let dir = if dir.join("meta.txt").exists() {
+            dir
+        } else if Path::new("../artifacts/meta.txt").exists() {
+            PathBuf::from("../artifacts")
+        } else {
+            dir
+        };
+        if !dir.join("meta.txt").exists() {
+            bail!(
+                "artifacts not built at {} — run `make artifacts` first",
+                dir.display()
+            );
+        }
+        Ok(ArtifactStore { dir })
+    }
+
+    /// Raw f32 little-endian binary.
+    pub fn read_f32(&self, name: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(name))
+            .with_context(|| format!("reading {name}"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Raw i32 little-endian binary.
+    pub fn read_i32(&self, name: &str) -> Result<Vec<i32>> {
+        let bytes = std::fs::read(self.dir.join(name))
+            .with_context(|| format!("reading {name}"))?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Trained weights of one model: manifest lines `name dims offset`.
+    pub fn weights(&self, model: &str) -> Result<HashMap<String, Tensor>> {
+        let flat = self.read_f32(&format!("weights_{model}.bin"))?;
+        let manifest = std::fs::read_to_string(
+            self.dir.join(format!("manifest_{model}.txt")),
+        )?;
+        let mut out = HashMap::new();
+        for line in manifest.lines() {
+            let mut parts = line.split_whitespace();
+            let (Some(name), Some(dims), Some(off)) =
+                (parts.next(), parts.next(), parts.next())
+            else {
+                continue;
+            };
+            let shape: Vec<usize> =
+                dims.split(',').map(|d| d.parse().unwrap()).collect();
+            let off: usize = off.parse()?;
+            let n: usize = shape.iter().product();
+            out.insert(
+                name.to_string(),
+                Tensor::new(shape, flat[off..off + n].to_vec()),
+            );
+        }
+        Ok(out)
+    }
+
+    /// The synthetic image test set: (images [N,3,8,8], labels).
+    pub fn test_images(&self) -> Result<(Vec<Tensor>, Vec<usize>)> {
+        let data = self.read_f32("dataset_images_test.bin")?;
+        let labels = self.read_i32("dataset_labels_test.bin")?;
+        let per = 3 * 8 * 8;
+        let n = data.len() / per;
+        let imgs = (0..n)
+            .map(|i| {
+                Tensor::new(vec![1, 3, 8, 8], data[i * per..(i + 1) * per].to_vec())
+            })
+            .collect();
+        Ok((imgs, labels.into_iter().map(|l| l as usize).collect()))
+    }
+
+    /// The synthetic token test stream.
+    pub fn test_tokens(&self) -> Result<Vec<usize>> {
+        Ok(self.read_i32("dataset_tokens_test.bin")?.into_iter().map(|t| t as usize).collect())
+    }
+
+    /// Reference metrics recorded at train time (meta.txt).
+    pub fn meta(&self) -> Result<HashMap<String, String>> {
+        let text = std::fs::read_to_string(self.dir.join("meta.txt"))?;
+        Ok(text
+            .lines()
+            .filter_map(|l| {
+                let mut p = l.split_whitespace();
+                Some((p.next()?.to_string(), p.next()?.to_string()))
+            })
+            .collect())
+    }
+
+    /// Golden forward outputs exported by aot.py.
+    pub fn golden(&self, model: &str, shape: &[usize]) -> Result<Tensor> {
+        let data = self.read_f32(&format!("golden_{model}.bin"))?;
+        Ok(Tensor::new(shape.to_vec(), data))
+    }
+
+    /// Path to an HLO-text module.
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+}

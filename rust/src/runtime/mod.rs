@@ -1,0 +1,14 @@
+//! Runtime: artifact loading and PJRT execution of the AOT-compiled L2
+//! computations.
+//!
+//! Python runs once (`make artifacts`); afterwards the rust binary is
+//! self-contained: [`artifacts`] reads the weight/dataset/golden bundles,
+//! [`pjrt`] loads the HLO-text modules via the `xla` crate's PJRT CPU
+//! client and executes them on the host — the reference-execution path of
+//! the co-simulation (never Python on the request path).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactStore;
+pub use pjrt::PjrtRunner;

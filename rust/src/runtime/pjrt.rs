@@ -1,0 +1,93 @@
+//! PJRT execution of HLO-text artifacts via the `xla` crate.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Modules are compiled once and cached;
+//! execution takes/returns [`Tensor`]s.
+
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Input literal for a PJRT call.
+pub enum PjrtInput {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+/// A PJRT CPU client with a cache of compiled executables.
+pub struct PjrtRunner {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRunner {
+    /// Create the CPU client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(PjrtRunner { client, cache: HashMap::new() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text module (cached by name).
+    pub fn load(&mut self, name: &str, path: &Path) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("{e:?}"))
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("{e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded module. The module must return a 1-tuple (aot.py
+    /// lowers with `return_tuple=True`); `out_shape` shapes the result.
+    pub fn run(
+        &mut self,
+        name: &str,
+        inputs: &[PjrtInput],
+        out_shape: &[usize],
+    ) -> Result<Tensor> {
+        let exe = self
+            .cache
+            .get(name)
+            .ok_or_else(|| anyhow!("module `{name}` not loaded"))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|inp| -> Result<xla::Literal> {
+                match inp {
+                    PjrtInput::F32(t) => {
+                        let dims: Vec<i64> =
+                            t.shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(&t.data)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("{e:?}"))
+                    }
+                    PjrtInput::I32(v, shape) => {
+                        let dims: Vec<i64> =
+                            shape.iter().map(|&d| d as i64).collect();
+                        xla::Literal::vec1(v)
+                            .reshape(&dims)
+                            .map_err(|e| anyhow!("{e:?}"))
+                    }
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("{e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+        let values = out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Tensor::new(out_shape.to_vec(), values))
+    }
+}

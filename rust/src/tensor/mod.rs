@@ -1,0 +1,264 @@
+//! Dense f32 tensors and the reference compute kernels.
+//!
+//! This is the numeric substrate under both the IR interpreter (the f32
+//! "host" reference of §4.4) and the ILA simulators (which re-run the same
+//! shapes through custom-numerics arithmetic). Layout is row-major
+//! (C-contiguous); convolutions use NCHW at the IR level (HLSCNN converts
+//! to its NHWC-tiled internal layout inside its ILA model).
+
+pub mod ops;
+
+use crate::util::Rng;
+use std::fmt;
+
+/// Shape of a tensor (row-major).
+pub type Shape = Vec<usize>;
+
+/// A dense, row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    /// Construct from shape and data; panics when they disagree.
+    pub fn new(shape: Shape, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// All-ones tensor.
+    pub fn ones(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// Filled from a generator over the linear index.
+    pub fn from_fn(shape: &[usize], f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: (0..n).map(f).collect() }
+    }
+
+    /// Standard-normal random tensor scaled by `scale`.
+    pub fn randn(shape: &[usize], rng: &mut Rng, scale: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.normal_vec(n, scale) }
+    }
+
+    /// Uniform random tensor in [lo, hi).
+    pub fn rand_uniform(shape: &[usize], rng: &mut Rng, lo: f32, hi: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: rng.uniform_vec(n, lo, hi) }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Linear index from a multi-index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Reshape to a new shape with the same element count.
+    pub fn reshape(&self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?} changes element count",
+            self.shape
+        );
+        Tensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// Largest absolute value (0 for empty tensors).
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f32 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary op with broadcasting limited to the cases the IR
+    /// uses: identical shapes, or `other` broadcast along the trailing axis
+    /// (bias vectors) or scalar.
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        if self.shape == other.shape {
+            let data =
+                self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+            return Tensor { shape: self.shape.clone(), data };
+        }
+        if other.data.len() == 1 {
+            return self.map(|x| f(x, other.data[0]));
+        }
+        // trailing-axis broadcast: other is [C], self is [..., C]
+        let c = *self.shape.last().expect("zip on scalar lhs");
+        assert_eq!(
+            other.data.len(),
+            c,
+            "broadcast mismatch {:?} vs {:?}",
+            self.shape,
+            other.shape
+        );
+        let data = self
+            .data
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| f(a, other.data[i % c]))
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// Relative Frobenius error `||self - other||_F / ||other||_F`
+    /// (`other` is the reference), the metric of Table 2.
+    pub fn rel_error(&self, reference: &Tensor) -> f32 {
+        assert_eq!(self.shape, reference.shape, "rel_error shape mismatch");
+        let diff: f64 = self
+            .data
+            .iter()
+            .zip(&reference.data)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let norm: f64 = reference.data.iter().map(|&b| (b as f64).powi(2)).sum();
+        if norm == 0.0 {
+            return if diff == 0.0 { 0.0 } else { f32::INFINITY };
+        }
+        (diff.sqrt() / norm.sqrt()) as f32
+    }
+
+    /// Maximum elementwise absolute difference.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()))
+    }
+
+    /// Index of the maximum element (argmax over the flattened tensor).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_offsets() {
+        let t = Tensor::from_fn(&[2, 3, 4], |i| i as f32);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_fn(&[2, 6], |i| i as f32);
+        let r = t.reshape(&[3, 4]);
+        assert_eq!(r.shape, vec![3, 4]);
+        assert_eq!(r.data, t.data);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_wrong_count_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(&[4, 4], &mut rng, 1.0);
+        assert_eq!(t.rel_error(&t), 0.0);
+    }
+
+    #[test]
+    fn rel_error_scales() {
+        let a = Tensor::new(vec![2], vec![1.0, 0.0]);
+        let b = Tensor::new(vec![2], vec![0.0, 0.0]);
+        assert!(a.rel_error(&a).abs() < 1e-9);
+        assert!(b.rel_error(&a) - 1.0 < 1e-6);
+    }
+
+    #[test]
+    fn zip_broadcast_bias() {
+        let x = Tensor::from_fn(&[2, 3], |i| i as f32);
+        let b = Tensor::new(vec![3], vec![10.0, 20.0, 30.0]);
+        let y = x.zip(&b, |a, b| a + b);
+        assert_eq!(y.data, vec![10.0, 21.0, 32.0, 13.0, 24.0, 35.0]);
+    }
+
+    #[test]
+    fn argmax_picks_peak() {
+        let t = Tensor::new(vec![4], vec![0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(t.argmax(), 1);
+    }
+}

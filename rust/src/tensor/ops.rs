@@ -1,0 +1,543 @@
+//! Reference compute kernels over [`Tensor`].
+//!
+//! These are the semantics of the compiler-IR intrinsics: the f32 "IR
+//! interpreter" of §4.4 evaluates every IR op through these functions, and
+//! Table 2's simulation-based validation compares each accelerator ILA
+//! simulator against them. Clarity over speed here — the co-sim hot path
+//! has its own optimized routines where profiling demanded it.
+
+use super::Tensor;
+
+/// `y = x @ w^T` — Relay `nn.dense` semantics: `x: [N, K]`, `w: [M, K]`,
+/// result `[N, M]`.
+pub fn dense(x: &Tensor, w: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2, "dense lhs must be 2-D, got {:?}", x.shape);
+    assert_eq!(w.rank(), 2, "dense rhs must be 2-D, got {:?}", w.shape);
+    let (n, k) = (x.shape[0], x.shape[1]);
+    let (m, k2) = (w.shape[0], w.shape[1]);
+    assert_eq!(k, k2, "dense inner-dim mismatch {k} vs {k2}");
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        let xrow = &x.data[i * k..(i + 1) * k];
+        for j in 0..m {
+            let wrow = &w.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += xrow[t] * wrow[t];
+            }
+            out[i * m + j] = acc;
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// Plain matrix multiplication `x: [N, K] @ y: [K, M] -> [N, M]`.
+pub fn matmul(x: &Tensor, y: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    assert_eq!(y.rank(), 2);
+    let (n, k) = (x.shape[0], x.shape[1]);
+    let (k2, m) = (y.shape[0], y.shape[1]);
+    assert_eq!(k, k2, "matmul inner-dim mismatch");
+    let mut out = vec![0.0f32; n * m];
+    for i in 0..n {
+        for t in 0..k {
+            let a = x.data[i * k + t];
+            if a == 0.0 {
+                continue;
+            }
+            let yrow = &y.data[t * m..(t + 1) * m];
+            let orow = &mut out[i * m..(i + 1) * m];
+            for j in 0..m {
+                orow[j] += a * yrow[j];
+            }
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// `bias_add(x, b)` — broadcast `b: [C]` along the trailing axis of `x`.
+pub fn bias_add(x: &Tensor, b: &Tensor) -> Tensor {
+    x.zip(b, |a, b| a + b)
+}
+
+/// Elementwise addition with trailing-axis / scalar broadcast.
+pub fn add(x: &Tensor, y: &Tensor) -> Tensor {
+    x.zip(y, |a, b| a + b)
+}
+
+/// Elementwise multiplication with trailing-axis / scalar broadcast.
+pub fn mul(x: &Tensor, y: &Tensor) -> Tensor {
+    x.zip(y, |a, b| a * b)
+}
+
+/// ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    x.map(|v| 1.0 / (1.0 + (-v).exp()))
+}
+
+/// Hyperbolic tangent.
+pub fn tanh(x: &Tensor) -> Tensor {
+    x.map(|v| v.tanh())
+}
+
+/// GELU (tanh approximation), used by the Transformer app graph.
+pub fn gelu(x: &Tensor) -> Tensor {
+    x.map(|v| {
+        0.5 * v * (1.0 + (0.7978845608 * (v + 0.044715 * v * v * v)).tanh())
+    })
+}
+
+/// Softmax over the trailing axis.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let c = *x.shape.last().expect("softmax needs rank >= 1");
+    let mut out = x.data.clone();
+    for row in out.chunks_mut(c) {
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// Layer normalization over the trailing axis (no learned affine; the IR
+/// composes scale/shift separately when present).
+pub fn layer_norm(x: &Tensor, eps: f32) -> Tensor {
+    let c = *x.shape.last().expect("layer_norm needs rank >= 1");
+    let mut out = x.data.clone();
+    for row in out.chunks_mut(c) {
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// 2-D convolution, NCHW activations and OIHW weights, no groups.
+/// `x: [N, C, H, W]`, `w: [O, C, KH, KW]` -> `[N, O, OH, OW]`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input must be NCHW");
+    assert_eq!(w.rank(), 4, "conv2d weight must be OIHW");
+    let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (o, c2, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(c, c2, "conv2d channel mismatch");
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (wd + 2 * pw - kw) / sw + 1;
+    let mut out = vec![0.0f32; n * o * oh * ow];
+    for b in 0..n {
+        for oc in 0..o {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..c {
+                        for dy in 0..kh {
+                            let iy = (y * sh + dy) as isize - ph as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for dx in 0..kw {
+                                let ix = (xw * sw + dx) as isize - pw as isize;
+                                if ix < 0 || ix >= wd as isize {
+                                    continue;
+                                }
+                                let xi = ((b * c + ic) * h + iy as usize) * wd
+                                    + ix as usize;
+                                let wi = ((oc * c + ic) * kh + dy) * kw + dx;
+                                acc += x.data[xi] * w.data[wi];
+                            }
+                        }
+                    }
+                    out[((b * o + oc) * oh + y) * ow + xw] = acc;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, o, oh, ow], out)
+}
+
+/// im2col: unfold NCHW input into a `[N*OH*OW, C*KH*KW]` patch matrix so
+/// conv2d becomes `patches @ w_flat^T` — the Glenside rewrite exploited in
+/// Table 1 to run 2-D convolutions on VTA's GEMM unit.
+pub fn im2col(
+    x: &Tensor,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let (ph, pw) = pad;
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+    let cols = c * kh * kw;
+    let rows = n * oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    for b in 0..n {
+        for y in 0..oh {
+            for xw in 0..ow {
+                let row = (b * oh + y) * ow + xw;
+                for ic in 0..c {
+                    for dy in 0..kh {
+                        let iy = (y * sh + dy) as isize - ph as isize;
+                        for dx in 0..kw {
+                            let ix = (xw * sw + dx) as isize - pw as isize;
+                            let col = (ic * kh + dy) * kw + dx;
+                            let v = if iy < 0
+                                || iy >= h as isize
+                                || ix < 0
+                                || ix >= w as isize
+                            {
+                                0.0
+                            } else {
+                                x.data[((b * c + ic) * h + iy as usize) * w
+                                    + ix as usize]
+                            };
+                            out[row * cols + col] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// 2-D max pooling over NCHW input.
+pub fn max_pool2d(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> Tensor {
+    pool2d(x, window, stride, f32::NEG_INFINITY, |a, b| a.max(b), |acc, _| acc)
+}
+
+/// 2-D mean pooling over NCHW input.
+pub fn avg_pool2d(x: &Tensor, window: (usize, usize), stride: (usize, usize)) -> Tensor {
+    pool2d(x, window, stride, 0.0, |a, b| a + b, |acc, cnt| acc / cnt as f32)
+}
+
+fn pool2d(
+    x: &Tensor,
+    window: (usize, usize),
+    stride: (usize, usize),
+    init: f32,
+    fold: impl Fn(f32, f32) -> f32,
+    finish: impl Fn(f32, usize) -> f32,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "pool2d input must be NCHW");
+    let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (wh, ww) = window;
+    let (sh, sw) = stride;
+    let oh = (h - wh) / sh + 1;
+    let ow = (w - ww) / sw + 1;
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for b in 0..n {
+        for ch in 0..c {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    let mut acc = init;
+                    for dy in 0..wh {
+                        for dx in 0..ww {
+                            let v = x.data[((b * c + ch) * h + y * sh + dy) * w
+                                + xw * sw
+                                + dx];
+                            acc = fold(acc, v);
+                        }
+                    }
+                    out[((b * c + ch) * oh + y) * ow + xw] = finish(acc, wh * ww);
+                }
+            }
+        }
+    }
+    Tensor::new(vec![n, c, oh, ow], out)
+}
+
+/// 2-D max pooling over a plain matrix `[R, C]` (the Glenside
+/// `map reduceMax (windows ...)` form of §5.1 / Fig. 7).
+pub fn matrix_max_pool(
+    x: &Tensor,
+    window: (usize, usize),
+    stride: (usize, usize),
+) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (r, c) = (x.shape[0], x.shape[1]);
+    let (wh, ww) = window;
+    let (sh, sw) = stride;
+    let or = (r - wh) / sh + 1;
+    let oc = (c - ww) / sw + 1;
+    let mut out = vec![f32::NEG_INFINITY; or * oc];
+    for i in 0..or {
+        for j in 0..oc {
+            for di in 0..wh {
+                for dj in 0..ww {
+                    let v = x.data[(i * sh + di) * c + j * sw + dj];
+                    if v > out[i * oc + j] {
+                        out[i * oc + j] = v;
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![or, oc], out)
+}
+
+/// Transpose a 2-D matrix.
+pub fn transpose2(x: &Tensor) -> Tensor {
+    assert_eq!(x.rank(), 2);
+    let (r, c) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = x.data[i * c + j];
+        }
+    }
+    Tensor::new(vec![c, r], out)
+}
+
+/// Concatenate 2-D matrices along axis 1 (columns).
+pub fn concat_cols(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty());
+    let r = xs[0].shape[0];
+    let total_c: usize = xs.iter().map(|t| t.shape[1]).sum();
+    let mut out = vec![0.0f32; r * total_c];
+    for i in 0..r {
+        let mut off = 0;
+        for t in xs {
+            let c = t.shape[1];
+            out[i * total_c + off..i * total_c + off + c]
+                .copy_from_slice(&t.data[i * c..(i + 1) * c]);
+            off += c;
+        }
+    }
+    Tensor::new(vec![r, total_c], out)
+}
+
+/// One LSTM cell step.
+/// `x: [N, I]`, `h: [N, H]`, `c: [N, H]`,
+/// `w_ih: [4H, I]`, `w_hh: [4H, H]`, `b: [4H]` (gate order i, f, g, o —
+/// PyTorch convention, which the FlexASR code generator also follows).
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_cell(
+    x: &Tensor,
+    h: &Tensor,
+    c: &Tensor,
+    w_ih: &Tensor,
+    w_hh: &Tensor,
+    b: &Tensor,
+) -> (Tensor, Tensor) {
+    let n = x.shape[0];
+    let hidden = h.shape[1];
+    let gates = bias_add(&add(&dense(x, w_ih), &dense(h, w_hh)), b);
+    let mut new_h = vec![0.0f32; n * hidden];
+    let mut new_c = vec![0.0f32; n * hidden];
+    for bi in 0..n {
+        for u in 0..hidden {
+            let gi = gates.data[bi * 4 * hidden + u];
+            let gf = gates.data[bi * 4 * hidden + hidden + u];
+            let gg = gates.data[bi * 4 * hidden + 2 * hidden + u];
+            let go = gates.data[bi * 4 * hidden + 3 * hidden + u];
+            let i = 1.0 / (1.0 + (-gi).exp());
+            let f = 1.0 / (1.0 + (-gf).exp());
+            let g = gg.tanh();
+            let o = 1.0 / (1.0 + (-go).exp());
+            let cv = f * c.data[bi * hidden + u] + i * g;
+            new_c[bi * hidden + u] = cv;
+            new_h[bi * hidden + u] = o * cv.tanh();
+        }
+    }
+    (Tensor::new(vec![n, hidden], new_h), Tensor::new(vec![n, hidden], new_c))
+}
+
+/// Full unrolled LSTM over `x: [T, N, I]`; returns the `[T, N, H]` output
+/// sequence (final hidden/cell states are dropped — the same simplification
+/// the paper's FlexASR code generator makes, Appendix B).
+pub fn lstm_sequence(
+    x: &Tensor,
+    w_ih: &Tensor,
+    w_hh: &Tensor,
+    b: &Tensor,
+) -> Tensor {
+    assert_eq!(x.rank(), 3, "lstm input must be [T, N, I]");
+    let (t, n, i) = (x.shape[0], x.shape[1], x.shape[2]);
+    let hidden = w_hh.shape[1];
+    let mut h = Tensor::zeros(&[n, hidden]);
+    let mut c = Tensor::zeros(&[n, hidden]);
+    let mut out = vec![0.0f32; t * n * hidden];
+    for step in 0..t {
+        let xt = Tensor::new(
+            vec![n, i],
+            x.data[step * n * i..(step + 1) * n * i].to_vec(),
+        );
+        let (nh, nc) = lstm_cell(&xt, &h, &c, w_ih, w_hh, b);
+        out[step * n * hidden..(step + 1) * n * hidden].copy_from_slice(&nh.data);
+        h = nh;
+        c = nc;
+    }
+    Tensor::new(vec![t, n, hidden], out)
+}
+
+/// Single-head scaled dot-product attention over `q, k, v: [T, D]`.
+pub fn attention(q: &Tensor, k: &Tensor, v: &Tensor) -> Tensor {
+    assert_eq!(q.rank(), 2);
+    let d = q.shape[1] as f32;
+    let scores = matmul(q, &transpose2(k)).map(|s| s / d.sqrt());
+    let probs = softmax(&scores);
+    matmul(&probs, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_small() {
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![3, 2], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let y = dense(&x, &w);
+        assert_eq!(y.shape, vec![1, 3]);
+        assert_eq!(y.data, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_matches_dense_via_transpose() {
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&[3, 5], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 5], &mut rng, 1.0);
+        let a = dense(&x, &w);
+        let b = matmul(&x, &transpose2(&w));
+        assert!(a.max_abs_diff(&b) < 1e-5);
+    }
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        let x = Tensor::from_fn(&[1, 1, 3, 3], |i| i as f32);
+        let w = Tensor::new(vec![1, 1, 1, 1], vec![1.0]);
+        let y = conv2d(&x, &w, (1, 1), (0, 0));
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn conv2d_known_sum() {
+        // 2x2 all-ones kernel over a 3x3 ramp = sum of each 2x2 patch.
+        let x = Tensor::from_fn(&[1, 1, 3, 3], |i| i as f32);
+        let w = Tensor::ones(&[1, 1, 2, 2]);
+        let y = conv2d(&x, &w, (1, 1), (0, 0));
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![8.0, 12.0, 20.0, 24.0]);
+    }
+
+    #[test]
+    fn conv2d_padding_shape() {
+        let x = Tensor::zeros(&[1, 3, 8, 8]);
+        let w = Tensor::zeros(&[4, 3, 3, 3]);
+        let y = conv2d(&x, &w, (1, 1), (1, 1));
+        assert_eq!(y.shape, vec![1, 4, 8, 8]);
+    }
+
+    #[test]
+    fn im2col_matmul_equals_conv2d() {
+        let mut rng = Rng::new(5);
+        let x = Tensor::randn(&[2, 3, 6, 6], &mut rng, 1.0);
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.5);
+        let direct = conv2d(&x, &w, (1, 1), (1, 1));
+        let patches = im2col(&x, (3, 3), (1, 1), (1, 1));
+        let wflat = w.reshape(&[4, 27]);
+        let gemm = dense(&patches, &wflat); // [N*OH*OW, O]
+        // rearrange [N*OH*OW, O] -> [N, O, OH, OW]
+        let (n, o, oh, ow) = (2usize, 4usize, 6usize, 6usize);
+        let mut re = vec![0.0f32; n * o * oh * ow];
+        for b in 0..n {
+            for y in 0..oh {
+                for xw in 0..ow {
+                    for oc in 0..o {
+                        re[((b * o + oc) * oh + y) * ow + xw] =
+                            gemm.data[((b * oh + y) * ow + xw) * o + oc];
+                    }
+                }
+            }
+        }
+        let re = Tensor::new(vec![n, o, oh, ow], re);
+        assert!(re.max_abs_diff(&direct) < 1e-4);
+    }
+
+    #[test]
+    fn maxpool_matrix_matches_nchw() {
+        let mut rng = Rng::new(8);
+        let m = Tensor::randn(&[8, 8], &mut rng, 1.0);
+        let as4 = m.reshape(&[1, 1, 8, 8]);
+        let a = matrix_max_pool(&m, (2, 2), (2, 2));
+        let b = max_pool2d(&as4, (2, 2), (2, 2));
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&[5, 7], &mut rng, 3.0);
+        let s = softmax(&x);
+        for row in s.data.chunks(7) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layer_norm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&[3, 16], &mut rng, 2.0);
+        let y = layer_norm(&x, 1e-5);
+        for row in y.data.chunks(16) {
+            let mean: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 16.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn lstm_zero_input_stays_near_zero() {
+        let x = Tensor::zeros(&[3, 1, 4]);
+        let w_ih = Tensor::zeros(&[16, 4]);
+        let w_hh = Tensor::zeros(&[16, 4]);
+        let b = Tensor::zeros(&[16]);
+        let y = lstm_sequence(&x, &w_ih, &w_hh, &b);
+        // gates = 0 -> i=f=o=0.5, g=0 -> c=0, h=0
+        assert!(y.max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn attention_uniform_when_scores_equal() {
+        let q = Tensor::zeros(&[2, 4]);
+        let k = Tensor::zeros(&[2, 4]);
+        let v = Tensor::new(vec![2, 1], vec![1.0, 3.0]);
+        let y = attention(&q, &k, &v);
+        assert!((y.data[0] - 2.0).abs() < 1e-6);
+        assert!((y.data[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn avg_pool_means() {
+        let x = Tensor::from_fn(&[1, 1, 2, 2], |i| i as f32);
+        let y = avg_pool2d(&x, (2, 2), (2, 2));
+        assert_eq!(y.data, vec![1.5]);
+    }
+}

@@ -1,0 +1,238 @@
+//! The FlexASR MaxPool mapping verification (Table 3).
+
+use crate::smt::bv::{BitBlaster, BvTerm, EquivResult};
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+/// FlexASR global-buffer bank count (the tiling width).
+pub const BANKS: usize = 16;
+
+/// Verification outcome with timing and query statistics.
+#[derive(Debug, Clone)]
+pub struct VerifyOutcome {
+    pub result: EquivResult,
+    pub elapsed: Duration,
+    /// number of SAT queries discharged (1 for BMC; tiles for CHC)
+    pub queries: usize,
+    /// total SAT conflicts across queries (proof effort)
+    pub conflicts: u64,
+    /// total CNF variables created
+    pub vars: usize,
+}
+
+/// Symbolic input element `x[i][j]`.
+fn xin(i: usize, j: usize) -> Rc<BvTerm> {
+    BvTerm::var(format!("x_{i}_{j}"))
+}
+
+/// Compiler-IR fragment, fully symbolic: `out[i][j] = max(x[2i][j],
+/// x[2i+1][j])` — the unrolled `map reduceMax (windows (2,1)(2,1))`.
+pub fn spec_grid(r: usize, c: usize) -> Vec<Vec<Rc<BvTerm>>> {
+    assert!(r % 2 == 0);
+    (0..r / 2)
+        .map(|i| (0..c).map(|j| BvTerm::max(xin(2 * i, j), xin(2 * i + 1, j))).collect())
+        .collect()
+}
+
+/// FlexASR fragment: symbolic execution of the tiled implementation.
+///
+/// The driver stores column `j` of the matrix into bank `j % 16` at line
+/// `i * ceil(c/16) + j / 16`; each bank's reduction lane computes row-pair
+/// maxima **with the hardware operand order (odd row first)** into a tile
+/// buffer, and readout re-interleaves banks into the output layout. The
+/// net data flow reaches the same input elements through a different loop
+/// nest and operand order — which is precisely what the prover must see
+/// through.
+pub fn flexasr_grid(r: usize, c: usize) -> Vec<Vec<Rc<BvTerm>>> {
+    assert!(r % 2 == 0);
+    let lines = c.div_ceil(BANKS);
+    // store phase: bank[b][line] = x[i][j] for j%16==b, line = i*lines + j/16
+    let mut bank: Vec<HashMap<usize, Rc<BvTerm>>> =
+        (0..BANKS).map(|_| HashMap::new()).collect();
+    for i in 0..r {
+        for j in 0..c {
+            bank[j % BANKS].insert(i * lines + j / BANKS, xin(i, j));
+        }
+    }
+    // compute phase: per bank, per line-column, reduce row pairs
+    // (hardware operand order: odd row enters the comparator first)
+    let mut tile: Vec<HashMap<usize, Rc<BvTerm>>> =
+        (0..BANKS).map(|_| HashMap::new()).collect();
+    for (b, bank_mem) in bank.iter().enumerate() {
+        for i in 0..r / 2 {
+            for l in 0..lines {
+                if let (Some(a0), Some(a1)) = (
+                    bank_mem.get(&((2 * i + 1) * lines + l)),
+                    bank_mem.get(&(2 * i * lines + l)),
+                ) {
+                    tile[b].insert(i * lines + l, BvTerm::max(a0.clone(), a1.clone()));
+                }
+            }
+        }
+    }
+    // readout phase: re-interleave
+    (0..r / 2)
+        .map(|i| {
+            (0..c)
+                .map(|j| tile[j % BANKS][&(i * lines + j / BANKS)].clone())
+                .collect()
+        })
+        .collect()
+}
+
+fn pairs_for_columns(
+    spec: &[Vec<Rc<BvTerm>>],
+    impl_: &[Vec<Rc<BvTerm>>],
+    cols: std::ops::Range<usize>,
+) -> Vec<(Rc<BvTerm>, Rc<BvTerm>)> {
+    let mut pairs = Vec::new();
+    for (srow, irow) in spec.iter().zip(impl_) {
+        for j in cols.clone() {
+            pairs.push((srow[j].clone(), irow[j].clone()));
+        }
+    }
+    pairs
+}
+
+/// Bounded model checking: unroll everything, one monolithic miter.
+pub fn verify_bmc(r: usize, c: usize, timeout: Duration) -> VerifyOutcome {
+    let start = Instant::now();
+    let spec = spec_grid(r, c);
+    let impl_ = flexasr_grid(r, c);
+    let pairs = pairs_for_columns(&spec, &impl_, 0..c);
+    let mut bb = BitBlaster::new(8);
+    let result = bb.prove_all_equal(&pairs, timeout);
+    VerifyOutcome {
+        result,
+        elapsed: start.elapsed(),
+        queries: 1,
+        conflicts: bb.solver.stats_conflicts,
+        vars: bb.solver.num_vars(),
+    }
+}
+
+/// CHC-style verification with the supplied relational invariant: the
+/// inductive step for tile `t` proves columns `[16t, 16(t+1))` equal,
+/// assuming nothing about other tiles (the fragments are tile-local, so
+/// the invariant is inductive by construction — the paper's "relational
+/// invariants that capture the customized tiling of FlexASR").
+pub fn verify_chc(r: usize, c: usize, timeout: Duration) -> VerifyOutcome {
+    let start = Instant::now();
+    let spec = spec_grid(r, c);
+    let impl_ = flexasr_grid(r, c);
+    let tiles = c.div_ceil(BANKS);
+    let mut conflicts = 0u64;
+    let mut vars = 0usize;
+    for t in 0..tiles {
+        if start.elapsed() > timeout {
+            return VerifyOutcome {
+                result: EquivResult::Timeout,
+                elapsed: start.elapsed(),
+                queries: t,
+                conflicts,
+                vars,
+            };
+        }
+        let lo = t * BANKS;
+        let hi = ((t + 1) * BANKS).min(c);
+        let pairs = pairs_for_columns(&spec, &impl_, lo..hi);
+        let mut bb = BitBlaster::new(8);
+        let remaining = timeout.saturating_sub(start.elapsed());
+        let res = bb.prove_all_equal(&pairs, remaining);
+        conflicts += bb.solver.stats_conflicts;
+        vars += bb.solver.num_vars();
+        if res != EquivResult::Equivalent {
+            return VerifyOutcome {
+                result: res,
+                elapsed: start.elapsed(),
+                queries: t + 1,
+                conflicts,
+                vars,
+            };
+        }
+    }
+    VerifyOutcome {
+        result: EquivResult::Equivalent,
+        elapsed: start.elapsed(),
+        queries: tiles,
+        conflicts,
+        vars,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    const T: Duration = Duration::from_secs(60);
+
+    /// Concrete differential check: both grids compute matrix maxpool.
+    #[test]
+    fn grids_agree_concretely() {
+        let (r, c) = (4usize, 32usize);
+        let spec = spec_grid(r, c);
+        let impl_ = flexasr_grid(r, c);
+        let mut rng = Rng::new(101);
+        let mut env = HashMap::new();
+        for i in 0..r {
+            for j in 0..c {
+                env.insert(format!("x_{i}_{j}"), rng.below(256) as u64);
+            }
+        }
+        for i in 0..r / 2 {
+            for j in 0..c {
+                assert_eq!(spec[i][j].eval(&env), impl_[i][j].eval(&env));
+            }
+        }
+    }
+
+    #[test]
+    fn bmc_proves_small_instance() {
+        let out = verify_bmc(2, 16, T);
+        assert_eq!(out.result, EquivResult::Equivalent);
+        assert_eq!(out.queries, 1);
+    }
+
+    #[test]
+    fn chc_proves_small_instance_with_tile_queries() {
+        let out = verify_chc(4, 32, T);
+        assert_eq!(out.result, EquivResult::Equivalent);
+        assert_eq!(out.queries, 2, "one inductive step per 16-column tile");
+    }
+
+    #[test]
+    fn chc_scales_better_than_bmc() {
+        // the Table 3 shape on a size where both finish quickly
+        let bmc = verify_bmc(4, 32, T);
+        let chc = verify_chc(4, 32, T);
+        assert_eq!(bmc.result, EquivResult::Equivalent);
+        assert_eq!(chc.result, EquivResult::Equivalent);
+        assert!(
+            bmc.vars > chc.vars / chc.queries * (chc.queries + 1) / 2,
+            "BMC formula must be larger than a single CHC step: {} vs {}",
+            bmc.vars,
+            chc.vars / chc.queries
+        );
+    }
+
+    #[test]
+    fn buggy_implementation_is_refuted() {
+        // swap max for min in one cone: the prover must find it
+        let (r, c) = (2usize, 16usize);
+        let spec = spec_grid(r, c);
+        let mut impl_ = flexasr_grid(r, c);
+        impl_[0][3] = BvTerm::min(xin(0, 3), xin(1, 3));
+        let pairs = pairs_for_columns(&spec, &impl_, 0..c);
+        let mut bb = BitBlaster::new(8);
+        match bb.prove_all_equal(&pairs, T) {
+            EquivResult::Counterexample(m) => {
+                let a = m.get("x_0_3").copied().unwrap_or(0);
+                let b = m.get("x_1_3").copied().unwrap_or(0);
+                assert_ne!(a.max(b), a.min(b), "witness must distinguish");
+            }
+            other => panic!("expected refutation, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Proof-based formal verification of IR-accelerator mappings (§4.4.1).
+//!
+//! The case study mirrors the paper's: the **FlexASR MaxPool mapping**,
+//! verified as equivalence of two program fragments over fixed-size
+//! tensors with *symbolic 8-bit data*:
+//!
+//! * the compiler-IR fragment — `map reduceMax (windows (2,1) (2,1) T)`;
+//! * the FlexASR fragment — the same reduction expressed through the
+//!   accelerator's customized tiling: the matrix is striped across the
+//!   16 banks of the global buffer, each bank's lane reduces its own
+//!   row-pairs (with the hardware's operand order), and the results are
+//!   re-interleaved on readout.
+//!
+//! Two methods, as in Table 3:
+//!
+//! * **BMC** ([`maxpool::verify_bmc`]): unroll *all* loops on both sides
+//!   and discharge one monolithic miter. Simple, but the formula grows
+//!   with the full tensor and the solver's effort grows superlinearly.
+//! * **CHC-style** ([`maxpool::verify_chc`]): a product program of the two
+//!   fragments with a supplied **relational loop invariant** — "after `t`
+//!   tile iterations, the first `16t` output columns of the two sides
+//!   agree" — whose inductive step only quantifies over one tile. Each
+//!   step is a small miter; the number of steps is linear in the tile
+//!   count. (The paper likewise supplies the relational invariants by
+//!   hand and leaves inference to future work.)
+
+pub mod maxpool;
+
+pub use maxpool::{verify_bmc, verify_chc, VerifyOutcome};

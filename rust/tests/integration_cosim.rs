@@ -1,0 +1,131 @@
+//! Integration: co-simulation pipeline over the trained cosim mirrors
+//! (requires `make artifacts`; tests are skipped when artifacts are
+//! absent so `cargo test` works on a fresh checkout).
+
+use d2a::compiler::compile_app;
+use d2a::coordinator::{accelerators, classify_sweep, DesignRev};
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use d2a::runtime::ArtifactStore;
+
+fn store() -> Option<ArtifactStore> {
+    ArtifactStore::open(None).ok()
+}
+
+#[test]
+fn resmlp_cosim_updated_close_to_reference() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let app = d2a::apps::cosim_models::resmlp_lite();
+    let compiled =
+        compile_app(&app, &[Target::FlexAsr], Matching::Flexible, RunnerLimits::default());
+    assert_eq!(compiled.invocations(Target::FlexAsr), 8, "8 linear layers offload");
+    let weights = store.weights("resmlp").unwrap();
+    let (images, labels) = store.test_images().unwrap();
+    let rep = classify_sweep(
+        &compiled.expr,
+        &weights,
+        &images[..120],
+        &labels[..120],
+        DesignRev::Updated,
+        1,
+    );
+    assert!(rep.ref_accuracy() > 0.75, "reference degraded: {}", rep.ref_accuracy());
+    assert!(
+        (rep.ref_accuracy() - rep.acc_accuracy()).abs() < 0.1,
+        "updated design should track reference: {} vs {}",
+        rep.ref_accuracy(),
+        rep.acc_accuracy()
+    );
+}
+
+#[test]
+fn resnet_original_design_degrades_then_recovers() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let app = d2a::apps::cosim_models::resnet20_lite();
+    let compiled = compile_app(
+        &app,
+        &[Target::FlexAsr, Target::Hlscnn],
+        Matching::Flexible,
+        RunnerLimits::default(),
+    );
+    let weights = store.weights("resnet20").unwrap();
+    let (images, labels) = store.test_images().unwrap();
+    let orig = classify_sweep(
+        &compiled.expr,
+        &weights,
+        &images[..120],
+        &labels[..120],
+        DesignRev::Original,
+        1,
+    );
+    let upd = classify_sweep(
+        &compiled.expr,
+        &weights,
+        &images[..120],
+        &labels[..120],
+        DesignRev::Updated,
+        1,
+    );
+    // the Table 4 phenomenon: original collapses, updated recovers
+    assert!(
+        orig.acc_accuracy() + 0.15 < orig.ref_accuracy(),
+        "original design must degrade: {} vs ref {}",
+        orig.acc_accuracy(),
+        orig.ref_accuracy()
+    );
+    assert!(
+        upd.acc_accuracy() + 0.05 > upd.ref_accuracy(),
+        "updated design must recover: {} vs ref {}",
+        upd.acc_accuracy(),
+        upd.ref_accuracy()
+    );
+}
+
+#[test]
+fn lstm_cosim_perplexity_orders() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let app = d2a::apps::cosim_models::lstm_wlm_lite();
+    let compiled =
+        compile_app(&app, &[Target::FlexAsr], Matching::Flexible, RunnerLimits::default());
+    assert!(compiled.invocations(Target::FlexAsr) >= 2, "LSTM + decoder offload");
+    let mut weights = store.weights("lstm").unwrap();
+    let embed = weights.remove("embed").unwrap();
+    let tokens = store.test_tokens().unwrap();
+    let orig = d2a::cosim::cosim_lm(
+        &compiled.expr,
+        &weights,
+        &embed,
+        &tokens,
+        30,
+        &accelerators(DesignRev::Original),
+    )
+    .unwrap();
+    let upd = d2a::cosim::cosim_lm(
+        &compiled.expr,
+        &weights,
+        &embed,
+        &tokens,
+        30,
+        &accelerators(DesignRev::Updated),
+    )
+    .unwrap();
+    assert!(orig.ref_perplexity < 20.0, "reference LM must be good");
+    assert!(
+        orig.acc_perplexity > orig.ref_perplexity,
+        "original numerics must cost perplexity"
+    );
+    assert!(
+        upd.acc_perplexity < orig.acc_perplexity,
+        "updated numerics must improve on original"
+    );
+}

@@ -1,0 +1,141 @@
+//! Integration: PJRT runtime + cross-language goldens (requires
+//! `make artifacts`; skipped otherwise).
+//!
+//! Proves the three-layer composition: JAX/Pallas artifacts execute from
+//! Rust via the PJRT CPU client, and the Rust IR mirrors reproduce the
+//! JAX models' forward passes bit-closely.
+
+use d2a::ir::interp;
+use d2a::runtime::{pjrt::PjrtInput, ArtifactStore, PjrtRunner};
+use d2a::tensor::Tensor;
+
+fn store() -> Option<ArtifactStore> {
+    ArtifactStore::open(None).ok()
+}
+
+/// The Pallas AF-linear kernel artifact, executed via PJRT, matches the
+/// python golden outputs exactly.
+#[test]
+fn pallas_kernel_artifact_matches_golden() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut runner = PjrtRunner::new().unwrap();
+    runner.load("af_linear", &store.hlo_path("af_linear_pallas")).unwrap();
+    let kx = Tensor::new(vec![8, 32], store.read_f32("kernel_demo_x.bin").unwrap());
+    let kw = Tensor::new(vec![16, 32], store.read_f32("kernel_demo_w.bin").unwrap());
+    let kb = Tensor::new(vec![16], store.read_f32("kernel_demo_b.bin").unwrap());
+    let want = Tensor::new(vec![8, 16], store.read_f32("kernel_demo_out.bin").unwrap());
+    let got = runner
+        .run(
+            "af_linear",
+            &[PjrtInput::F32(kx), PjrtInput::F32(kw), PjrtInput::F32(kb)],
+            &[8, 16],
+        )
+        .unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-5, "diff {}", got.max_abs_diff(&want));
+}
+
+/// The Rust IR mirror of each classifier reproduces the JAX forward pass
+/// on the golden inputs (the Layer-2/Layer-3 contract).
+#[test]
+fn rust_mirrors_match_jax_goldens() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let (images, _) = store.test_images().unwrap();
+    for (app, model) in [
+        (d2a::apps::cosim_models::resmlp_lite(), "resmlp"),
+        (d2a::apps::cosim_models::resnet20_lite(), "resnet20"),
+        (d2a::apps::cosim_models::mobilenet_lite(), "mobilenet"),
+    ] {
+        let weights = store.weights(model).unwrap();
+        let golden = store.golden(model, &[8, 4]).unwrap();
+        let mut env = weights.clone();
+        for i in 0..8 {
+            env.insert("x".to_string(), images[i].clone());
+            let out = interp::eval(&app.expr, &env).unwrap();
+            for j in 0..4 {
+                let diff = (out.data[j] - golden.data[i * 4 + j]).abs();
+                assert!(
+                    diff < 2e-3,
+                    "{model} golden mismatch at image {i} logit {j}: {diff}"
+                );
+            }
+        }
+    }
+}
+
+/// The LSTM mirror matches the JAX scan implementation.
+#[test]
+fn lstm_mirror_matches_jax_golden() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let app = d2a::apps::cosim_models::lstm_wlm_lite();
+    let mut weights = store.weights("lstm").unwrap();
+    let embed = weights.remove("embed").unwrap();
+    let tokens = store.test_tokens().unwrap();
+    let golden = store.golden("lstm", &[16, 64]).unwrap();
+    let e = embed.shape[1];
+    let mut x = vec![0.0f32; 16 * e];
+    for (t, &tok) in tokens[..16].iter().enumerate() {
+        x[t * e..(t + 1) * e].copy_from_slice(&embed.data[tok * e..(tok + 1) * e]);
+    }
+    let mut env = weights.clone();
+    env.insert("x_seq".to_string(), Tensor::new(vec![16, 1, e], x));
+    let out = interp::eval(&app.expr, &env).unwrap();
+    assert_eq!(out.shape, vec![16, 64]);
+    assert!(
+        out.max_abs_diff(&golden) < 2e-3,
+        "lstm golden mismatch: {}",
+        out.max_abs_diff(&golden)
+    );
+}
+
+/// The AOT-lowered ResMLP forward pass runs via PJRT and agrees with the
+/// Rust mirror's f32 interpretation.
+#[test]
+fn pjrt_resmlp_matches_rust_mirror() {
+    let Some(store) = store() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut runner = PjrtRunner::new().unwrap();
+    runner.load("resmlp", &store.hlo_path("resmlp")).unwrap();
+    let app = d2a::apps::cosim_models::resmlp_lite();
+    let weights = store.weights("resmlp").unwrap();
+    let (images, _) = store.test_images().unwrap();
+    let mut env = weights.clone();
+    for img in images.iter().take(4) {
+        let pjrt_out = runner
+            .run("resmlp", &resmlp_inputs(&store, img).unwrap(), &[1, 4])
+            .unwrap();
+        env.insert("x".to_string(), img.clone());
+        let mirror_out = interp::eval(&app.expr, &env).unwrap();
+        assert!(
+            pjrt_out.max_abs_diff(&mirror_out) < 2e-3,
+            "PJRT vs mirror: {}",
+            pjrt_out.max_abs_diff(&mirror_out)
+        );
+    }
+}
+
+/// Build the resmlp PJRT argument list: flat input + weights in
+/// sorted-key order (the aot.py parameter convention).
+fn resmlp_inputs(
+    store: &ArtifactStore,
+    img: &d2a::tensor::Tensor,
+) -> anyhow::Result<Vec<PjrtInput>> {
+    let weights = store.weights("resmlp")?;
+    let mut keys: Vec<_> = weights.keys().cloned().collect();
+    keys.sort();
+    let mut inputs = vec![PjrtInput::F32(img.reshape(&[1, 192]))];
+    for k in keys {
+        inputs.push(PjrtInput::F32(weights[&k].clone()));
+    }
+    Ok(inputs)
+}

@@ -1,0 +1,82 @@
+//! Integration: the emulated SoC deployment path (§4.3.2) — generated
+//! MMIO command streams through the bus/driver against all three
+//! accelerator ILAs, with fault handling.
+
+use d2a::accel::{Accelerator, FlexAsr, Hlscnn, Vta};
+use d2a::codegen::{
+    lower_flex_linear, lower_flex_maxpool_chain, lower_hlscnn_conv2d, lower_vta_gemm,
+};
+use d2a::ila::Cmd;
+use d2a::soc::driver::Driver;
+use d2a::soc::{reference_soc, BusError};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+
+#[test]
+fn full_pipeline_over_three_devices() {
+    let mut drv = Driver::new(reference_soc());
+    let fa = FlexAsr::new();
+    let hl = Hlscnn::default();
+    let vta = Vta::new();
+    let mut rng = Rng::new(77);
+
+    // HLSCNN conv
+    let img = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
+    let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+    let conv = drv.invoke(&lower_hlscnn_conv2d(&hl, &img, &k, (1, 1), (1, 1))).unwrap();
+    assert_eq!(conv.shape, vec![1, 4, 6, 6]);
+    assert!(conv.max_abs_diff(&hl.conv2d(&img, &k, (1, 1), (1, 1))) <= hl.cfg.act_fmt.step() + 1e-6);
+
+    // FlexASR linear over the pooled features
+    let feat = fa.quant(&conv.reshape(&[4, 36]));
+    let w = fa.quant(&Tensor::randn(&[8, 36], &mut rng, 0.3));
+    let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
+    let lin = drv.invoke(&lower_flex_linear(&fa, &feat, &w, &b)).unwrap();
+    assert!(lin.rel_error(&fa.linear(&feat, &w, &b)) < 0.02);
+
+    // VTA GEMM, exact
+    let q = vta.quant(&lin);
+    let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
+    let g = drv.invoke(&lower_vta_gemm(&vta, &q, &w2)).unwrap();
+    assert_eq!(g.rel_error(&vta.gemm(&q, &w2)), 0.0);
+}
+
+#[test]
+fn fused_maxpool_chain_on_the_bus() {
+    let mut drv = Driver::new(reference_soc());
+    let fa = FlexAsr::new();
+    let mut rng = Rng::new(78);
+    let t = fa.quant(&Tensor::randn(&[32, 32], &mut rng, 1.0));
+    let inv = lower_flex_maxpool_chain(&fa, &t, 3);
+    let out = drv.invoke(&inv).unwrap();
+    assert_eq!(out.shape, vec![4, 32]);
+    let mut expect = t;
+    for _ in 0..3 {
+        expect = d2a::ir::interp::eval_op(&d2a::ir::Op::TempMaxPool, &[&expect]).unwrap();
+    }
+    assert!(out.rel_error(&expect) < 1e-5);
+}
+
+#[test]
+fn bus_fault_injection() {
+    let mut drv = Driver::new(reference_soc());
+    // unmapped address -> bus abort
+    let err = drv.bus.issue(&Cmd::write_u64(0xDEAD_BEEF, 1)).unwrap_err();
+    assert!(matches!(err, BusError::NoDevice(_)));
+    // device fault: FlexASR trigger with a bogus opcode
+    drv.bus
+        .issue(&Cmd::write_u64(d2a::accel::flexasr::model::CFG_GB_CONTROL, 0x7F))
+        .unwrap();
+    let err = drv
+        .bus
+        .issue(&Cmd::write_u64(d2a::accel::flexasr::model::FN_START, 1))
+        .unwrap_err();
+    assert!(matches!(err, BusError::Device { .. }));
+    // the bus (and other devices) stay usable after a device fault
+    let vta = Vta::new();
+    let mut rng = Rng::new(79);
+    let x = vta.quant(&Tensor::randn(&[2, 8], &mut rng, 1.0));
+    let w = vta.quant(&Tensor::randn(&[2, 8], &mut rng, 1.0));
+    let g = drv.invoke(&lower_vta_gemm(&vta, &x, &w)).unwrap();
+    assert_eq!(g.shape, vec![2, 2]);
+}

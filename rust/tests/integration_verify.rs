@@ -1,0 +1,63 @@
+//! Integration: the three verification tasks of Fig. 3 end to end.
+//!
+//! * VT1 — compiler IR ILA vs compiler implementation: our per-op f32
+//!   interpreter vs the tensor kernels (modular, per-instruction).
+//! * VT2 — program-fragment equivalence: the FlexASR MaxPool mapping via
+//!   BMC and CHC on symbolic data.
+//! * VT3 — accelerator ILA vs implementation: the MMIO-level ILA model
+//!   vs the cycle-level RTL proxy.
+
+use d2a::ir::{interp, Op};
+use d2a::smt::EquivResult;
+use d2a::tensor::{ops, Tensor};
+use d2a::util::Rng;
+use std::time::Duration;
+
+/// VT1: each compiler-IR ILA instruction (eval_op) agrees with the
+/// "compiler implementation" (direct tensor kernels), per instruction.
+#[test]
+fn vt1_ir_ila_matches_implementation() {
+    let mut rng = Rng::new(42);
+    let x = Tensor::randn(&[4, 8], &mut rng, 1.0);
+    let w = Tensor::randn(&[6, 8], &mut rng, 0.5);
+    let b = Tensor::randn(&[6], &mut rng, 0.1);
+    assert_eq!(interp::eval_op(&Op::Dense, &[&x, &w]).unwrap().data, ops::dense(&x, &w).data);
+    assert_eq!(
+        interp::eval_op(&Op::BiasAdd, &[&ops::dense(&x, &w), &b]).unwrap().data,
+        ops::bias_add(&ops::dense(&x, &w), &b).data
+    );
+    let img = Tensor::randn(&[1, 3, 8, 8], &mut rng, 1.0);
+    let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.3);
+    assert_eq!(
+        interp::eval_op(&Op::Conv2d { stride: (1, 1), pad: (1, 1), groups: 1 }, &[&img, &k])
+            .unwrap()
+            .data,
+        ops::conv2d(&img, &k, (1, 1), (1, 1)).data
+    );
+}
+
+/// VT2: the FlexASR MaxPool fragment equivalence, both proof methods.
+#[test]
+fn vt2_fragment_equivalence_both_methods() {
+    let t = Duration::from_secs(120);
+    let bmc = d2a::verify::verify_bmc(2, 16, t);
+    assert_eq!(bmc.result, EquivResult::Equivalent);
+    let chc = d2a::verify::verify_chc(4, 32, t);
+    assert_eq!(chc.result, EquivResult::Equivalent);
+    assert_eq!(chc.queries, 2);
+}
+
+/// VT3: ILA specification vs RTL-level implementation on the linear
+/// layer (bit-level lattice operands).
+#[test]
+fn vt3_ila_vs_rtl() {
+    let dev = d2a::accel::FlexAsr::new();
+    let mut rtl = d2a::rtl::RtlFlexAsr::new();
+    let mut rng = Rng::new(9);
+    let x = dev.quant(&Tensor::randn(&[8, 48], &mut rng, 1.0));
+    let w = dev.quant(&Tensor::randn(&[32, 48], &mut rng, 0.3));
+    let b = dev.quant(&Tensor::randn(&[32], &mut rng, 0.1));
+    let spec = dev.linear(&x, &w, &b);
+    let imp = rtl.linear(&x, &w, &b);
+    assert!(imp.rel_error(&spec) < 0.01, "VT3 refinement gap: {}", imp.rel_error(&spec));
+}

@@ -1,0 +1,208 @@
+//! Property-based tests over system invariants (hand-rolled generators —
+//! proptest is absent from the offline vendored set; see DESIGN.md).
+//!
+//! Each property runs against many seeded random cases; failures print
+//! the seed for reproduction.
+
+use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
+use d2a::ir::{interp, GraphBuilder, Op, RecExpr, Target};
+use d2a::numerics::adaptivfloat::AdaptivFloatFormat;
+use d2a::numerics::fixed_point::FixedPointFormat;
+use d2a::numerics::NumericFormat;
+use d2a::rewrites::{rules_for, Matching};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+
+/// Generate a random small MLP-ish program: chain of dense / bias_add /
+/// relu / add-residual ops with consistent shapes.
+fn random_program(rng: &mut Rng) -> (RecExpr, HashMap<String, Vec<usize>>, HashMap<String, Tensor>) {
+    let mut g = GraphBuilder::new();
+    let mut shapes = HashMap::new();
+    let mut tensors = HashMap::new();
+    let n = 1 + rng.below(4);
+    let mut dim = 4 + rng.below(12);
+    shapes.insert("x".to_string(), vec![n, dim]);
+    tensors.insert("x".to_string(), Tensor::randn(&[n, dim], rng, 1.0));
+    let mut h = g.var("x");
+    let layers = 1 + rng.below(4);
+    for l in 0..layers {
+        let out_dim = 4 + rng.below(12);
+        let wname = format!("w{l}");
+        shapes.insert(wname.clone(), vec![out_dim, dim]);
+        tensors.insert(wname.clone(), Tensor::randn(&[out_dim, dim], rng, 0.4));
+        let w = g.weight(&wname);
+        let d = g.dense(h, w);
+        h = match rng.below(3) {
+            0 => d,
+            1 => {
+                let bname = format!("b{l}");
+                shapes.insert(bname.clone(), vec![out_dim]);
+                tensors.insert(bname.clone(), Tensor::randn(&[out_dim], rng, 0.1));
+                let b = g.weight(&bname);
+                g.bias_add(d, b)
+            }
+            _ => g.relu(d),
+        };
+        dim = out_dim;
+    }
+    (g.finish(), shapes, tensors)
+}
+
+/// INVARIANT: equality-saturation rewriting preserves f32 semantics on
+/// random programs (correct-by-construction term rewriting, §2.2).
+#[test]
+fn prop_rewriting_preserves_semantics() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let (expr, shapes, tensors) = random_program(&mut rng);
+        let mut eg = EGraph::new(shapes);
+        let root = eg.add_expr(&expr);
+        let rules = rules_for(&[Target::FlexAsr, Target::Vta], Matching::Flexible);
+        Runner::new(RunnerLimits::default()).run(&mut eg, &rules);
+        let best = Extractor::new(
+            &eg,
+            AccelCost::for_targets(&[Target::FlexAsr, Target::Vta]),
+        )
+        .extract(root);
+        let a = interp::eval(&expr, &tensors).unwrap();
+        let b = interp::eval(&best, &tensors).unwrap();
+        assert_eq!(a.shape, b.shape, "seed {seed}");
+        assert!(
+            a.max_abs_diff(&b) < 1e-4 * (1.0 + a.max_abs()),
+            "seed {seed}: semantics drift {}",
+            a.max_abs_diff(&b)
+        );
+    }
+}
+
+/// INVARIANT: extraction cost never increases when more rewrites run
+/// (the e-graph only grows the space of equivalents).
+#[test]
+fn prop_more_rewrites_never_worse() {
+    for seed in 100..120u64 {
+        let mut rng = Rng::new(seed);
+        let (expr, shapes, _) = random_program(&mut rng);
+        let cost_of = |mode: Matching| {
+            let mut eg = EGraph::new(shapes.clone());
+            let root = eg.add_expr(&expr);
+            Runner::new(RunnerLimits::default())
+                .run(&mut eg, &rules_for(&[Target::FlexAsr], mode));
+            Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr))
+                .cost_of(root)
+                .unwrap()
+        };
+        let exact = cost_of(Matching::Exact);
+        let flexible = cost_of(Matching::Flexible);
+        assert!(
+            flexible <= exact + 1e-6,
+            "seed {seed}: flexible cost {flexible} > exact {exact}"
+        );
+    }
+}
+
+/// INVARIANT: quantization is idempotent, and round-to-nearest expands
+/// the value range by at most one quantization step / mantissa ULP.
+#[test]
+fn prop_quantization_idempotent_contractive() {
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let scale = (rng.uniform() * 4.0).exp();
+        let t = Tensor::randn(&[5, 7], &mut rng, scale);
+        let fmts: Vec<Box<dyn NumericFormat>> = vec![
+            Box::new(AdaptivFloatFormat::new(8, 1 + (rng.below(4) as u32))),
+            Box::new(FixedPointFormat::new(
+                8 + (rng.below(9) as u32),
+                1 + (rng.below(6) as u32),
+            )),
+        ];
+        for f in fmts {
+            let q1 = f.quantize(&t);
+            let q2 = f.quantize(&q1);
+            assert!(q1.max_abs_diff(&q2) < 1e-6, "{} not idempotent", f.name());
+            assert!(
+                q1.max_abs() <= t.max_abs() * 1.05 + 0.5,
+                "{} expanded the range: {} -> {}",
+                f.name(),
+                t.max_abs(),
+                q1.max_abs()
+            );
+        }
+    }
+}
+
+/// INVARIANT: the e-graph's congruence closure — after any interleaving
+/// of adds and unions plus rebuild, congruent nodes share classes.
+#[test]
+fn prop_congruence_closure() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let mut eg = EGraph::new(HashMap::new());
+        let leaves: Vec<_> =
+            (0..4).map(|i| eg.add(Op::Var(format!("v{i}")), vec![])).collect();
+        let mut nodes = leaves.clone();
+        for _ in 0..20 {
+            let a = nodes[rng.below(nodes.len())];
+            let b = nodes[rng.below(nodes.len())];
+            nodes.push(eg.add(Op::Add, vec![a, b]));
+        }
+        // randomly union some leaves, rebuild
+        let x = leaves[rng.below(4)];
+        let y = leaves[rng.below(4)];
+        eg.union(x, y);
+        eg.rebuild();
+        // congruence check: rebuilding again changes nothing and any two
+        // Add nodes with identical canonical children are in one class
+        let mut seen: HashMap<Vec<usize>, usize> = HashMap::new();
+        let mut cls: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (id, class) in eg.iter_classes() {
+            for node in &class.nodes {
+                if matches!(node.op, Op::Add) {
+                    let ch: Vec<usize> =
+                        node.children.iter().map(|&c| eg.find_imm(c)).collect();
+                    cls.push((id, ch));
+                }
+            }
+        }
+        for (id, ch) in cls {
+            if let Some(&prev) = seen.get(&ch) {
+                assert_eq!(
+                    eg.find_imm(prev),
+                    eg.find_imm(id),
+                    "seed {seed}: congruent adds in different classes"
+                );
+            } else {
+                seen.insert(ch, id);
+            }
+        }
+    }
+}
+
+/// INVARIANT: FlexASR maxpool over lattice inputs is always exact; the
+/// SoC bus routes every generated command (no aborts) for random shapes.
+#[test]
+fn prop_maxpool_exact_and_codegen_routable() {
+    let fa = d2a::accel::FlexAsr::new();
+    let mut rng = Rng::new(11);
+    for _ in 0..20 {
+        let r = 2 * (1 + rng.below(12));
+        let c = 1 + rng.below(48);
+        let x = fa.quant(&Tensor::randn(&[r, c], &mut rng, 1.0));
+        let acc = fa.maxpool(&x);
+        let reference = interp::eval_op(&Op::TempMaxPool, &[&x]).unwrap();
+        assert_eq!(acc.rel_error(&reference), 0.0);
+    }
+    // random linear shapes drive cleanly through the bus
+    let mut drv = d2a::soc::driver::Driver::new(d2a::soc::reference_soc());
+    for _ in 0..10 {
+        let n = 1 + rng.below(8);
+        let k = 1 + rng.below(48);
+        let m = 1 + rng.below(32);
+        let x = fa.quant(&Tensor::randn(&[n, k], &mut rng, 1.0));
+        let w = fa.quant(&Tensor::randn(&[m, k], &mut rng, 0.3));
+        let b = fa.quant(&Tensor::randn(&[m], &mut rng, 0.1));
+        let inv = d2a::codegen::lower_flex_linear(&fa, &x, &w, &b);
+        let out = drv.invoke(&inv).unwrap();
+        assert_eq!(out.shape, vec![n, m]);
+    }
+}
