@@ -11,48 +11,46 @@
 //! Requires `make artifacts`. Run with:
 //! `cargo run --release --example codesign_loop`
 
-use d2a::compiler::compile_app;
-use d2a::coordinator::{accelerators, DesignRev};
-use d2a::cosim::AccelHook;
-use d2a::egraph::RunnerLimits;
-use d2a::ir::interp::eval_with_hook;
 use d2a::ir::Target;
-use d2a::rewrites::Matching;
 use d2a::runtime::ArtifactStore;
+use d2a::session::{Bindings, DesignRev, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let store = ArtifactStore::open(None)?;
     let app = d2a::apps::cosim_models::resnet20_lite();
-    let compiled = compile_app(
-        &app,
-        &[Target::FlexAsr, Target::Hlscnn],
-        Matching::Flexible,
-        RunnerLimits::default(),
-    );
+    let weights = store.weights("resnet20")?;
+    let (images, labels) = store.test_images()?;
+    let n = 120usize;
+
+    // compile once — the extracted program is revision-independent; only
+    // the accelerator numerics change between the two sweeps below
+    let compile_session =
+        SessionBuilder::new().targets(&[Target::FlexAsr, Target::Hlscnn]).build();
+    let compiled = compile_session.compile(&app);
     println!(
         "ResNet-20 compiled: {} HLSCNN convs + {} FlexASR linears offloaded\n",
         compiled.invocations(Target::Hlscnn),
         compiled.invocations(Target::FlexAsr)
     );
 
-    let weights = store.weights("resnet20")?;
-    let (images, labels) = store.test_images()?;
-    let n = 120usize;
-
     for rev in [DesignRev::Original, DesignRev::Updated] {
-        let accels = accelerators(rev);
-        let mut env = weights.clone();
+        // per-invocation error tracking is an opt-in of the session
+        let session = SessionBuilder::new()
+            .targets(&[Target::FlexAsr, Target::Hlscnn])
+            .design_rev(rev)
+            .track_errors(true)
+            .build();
+        let program = session.attach(compiled.expr().clone());
+        let mut bindings = Bindings::from_env(weights.clone());
         let mut correct = 0usize;
         let mut errors: Vec<f32> = Vec::new();
         for (img, &label) in images[..n].iter().zip(&labels[..n]) {
-            env.insert("x".to_string(), img.clone());
-            let mut hook = AccelHook::new(&accels);
-            hook.track_errors = true;
-            let out = eval_with_hook(&compiled.expr, &env, &mut hook)?;
-            if out.argmax() == label {
+            bindings.set("x", img.clone());
+            let trace = program.run_traced(&bindings)?;
+            if trace.output.argmax() == label {
                 correct += 1;
             }
-            errors.extend(hook.inv_errors);
+            errors.extend(trace.inv_errors);
         }
         let stats = d2a::cosim::stats::ErrorStats::from_samples(&errors);
         println!(

@@ -13,12 +13,9 @@
 //! Run with: `cargo run --release --example e2e_cosim` (after
 //! `make artifacts`). Set D2A_COSIM_N to change the sweep size.
 
-use d2a::compiler::compile_app;
-use d2a::coordinator::{classify_sweep, DesignRev};
-use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
-use d2a::rewrites::Matching;
 use d2a::runtime::{pjrt::PjrtInput, ArtifactStore, PjrtRunner};
+use d2a::session::{DesignRev, SessionBuilder, SweepSpec};
 use d2a::tensor::Tensor;
 
 fn main() -> anyhow::Result<()> {
@@ -59,31 +56,30 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. D2A-compile the IR mirror and co-simulate the sweep -------
     let app = d2a::apps::cosim_models::resmlp_lite();
-    let compiled = compile_app(
-        &app,
-        &[Target::FlexAsr],
-        Matching::Flexible,
-        RunnerLimits::default(),
-    );
-    println!(
-        "L3 compiled ResMLP: {} FlexASR invocations per image",
-        compiled.invocations(Target::FlexAsr)
-    );
     let weights = store.weights("resmlp")?;
     let n: usize = std::env::var("D2A_COSIM_N")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(2000)
         .min(images.len());
+    // compile once; the extracted program is revision-independent
+    let compiled = SessionBuilder::new().targets(&[Target::FlexAsr]).build().compile(&app);
+    println!(
+        "L3 compiled ResMLP: {} FlexASR invocations per image",
+        compiled.invocations(Target::FlexAsr)
+    );
     for rev in [DesignRev::Original, DesignRev::Updated] {
-        let rep = classify_sweep(
-            &compiled.expr,
-            &weights,
-            &images[..n],
-            &labels[..n],
-            rev,
-            1,
-        );
+        // one session per design revision: the accelerator models are
+        // instantiated once and Arc-shared by every sweep worker
+        let session =
+            SessionBuilder::new().targets(&[Target::FlexAsr]).design_rev(rev).build();
+        let program = session.attach(compiled.expr().clone());
+        let rep = program.classify_sweep(&SweepSpec {
+            input_var: "x",
+            weights: &weights,
+            inputs: &images[..n],
+            labels: &labels[..n],
+        });
         println!(
             "co-sim {rev:?}: {} images, reference {:.2}%, accelerated {:.2}% \
              ({:.1?}/image)",

@@ -1,21 +1,23 @@
-//! Quickstart: the whole D2A flow on one small program.
+//! Quickstart: the whole D2A flow on one small program, through the
+//! unified session API.
 //!
 //! 1. write an IR program (a linear layer, Fig. 3a),
-//! 2. compile it with equality saturation (flexible matching),
-//! 3. inspect the rewritten program (accelerator instructions present),
+//! 2. build a [`Session`] and compile the program with equality
+//!    saturation (flexible matching) into a [`CompiledProgram`] handle,
+//! 3. inspect the rewritten program (accelerator instructions present)
+//!    and co-simulate it — reference f32 vs accelerator numerics —
+//!    straight from the handle,
 //! 4. lower the matched operation to a FlexASR ILA fragment (Fig. 5c)
 //!    and its MMIO command stream (Fig. 5d),
 //! 5. execute the stream on the emulated SoC and check the numerics
-//!    against the IR interpreter.
+//!    against the ILA tensor fast path.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
 use d2a::accel::{Accelerator, FlexAsr};
 use d2a::codegen::lower_flex_linear;
-use d2a::compiler::compile;
-use d2a::egraph::RunnerLimits;
 use d2a::ir::{parse::to_sexpr, GraphBuilder, Target};
-use d2a::rewrites::Matching;
+use d2a::session::{Bindings, Session};
 use d2a::soc::driver::Driver;
 use d2a::tensor::Tensor;
 use d2a::util::Rng;
@@ -31,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     let program = g.finish();
     println!("IR program (Fig. 3a):\n  {}\n", to_sexpr(&program));
 
-    // 2. compile for FlexASR
+    // 2. one session = targets + matching mode + accelerator models
     let shapes: HashMap<String, Vec<usize>> = [
         ("x".to_string(), vec![4usize, 16]),
         ("w".to_string(), vec![8, 16]),
@@ -39,27 +41,37 @@ fn main() -> anyhow::Result<()> {
     ]
     .into_iter()
     .collect();
-    let compiled = compile(
-        &program,
-        &shapes,
-        &[Target::FlexAsr],
-        Matching::Flexible,
-        RunnerLimits::default(),
-    );
+    let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    let compiled = session.compile_expr(&program, &shapes);
+    let stats = compiled.stats().expect("freshly compiled");
     println!(
         "compiled ({} e-classes explored, {:?}):\n  {}\n",
-        compiled.classes,
-        compiled.stop,
-        to_sexpr(&compiled.expr)
+        stats.classes,
+        stats.stop,
+        to_sexpr(compiled.expr())
     );
     assert_eq!(compiled.invocations(Target::FlexAsr), 1);
 
-    // 3./4. lower the matched fasr_linear to ILA assembly + MMIO commands
+    // 3. co-simulate straight from the handle: f32 reference vs the
+    //    bit-accurate AdaptivFloat fast path, one call
     let dev = FlexAsr::new();
     let mut rng = Rng::new(42);
     let xv = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
     let wv = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let bv = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
+    let bindings = Bindings::new()
+        .with("x", xv.clone())
+        .with("w", wv.clone())
+        .with("b", bv.clone());
+    let rep = compiled.cosim(&bindings)?;
+    println!(
+        "co-sim: {} accelerator invocation(s), accelerator-vs-f32 error {:.2}% \
+         (the AdaptivFloat numerics gap)\n",
+        rep.invocations,
+        rep.rel_error * 100.0
+    );
+
+    // 4. lower the matched fasr_linear to ILA assembly + MMIO commands
     let inv = lower_flex_linear(&dev, &xv, &wv, &bv);
     println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);
     println!("tail of the MMIO stream (Fig. 5d):");
@@ -67,20 +79,21 @@ fn main() -> anyhow::Result<()> {
         println!("  {cmd}");
     }
 
-    // 5. run on the emulated SoC, compare against the IR interpreter
+    // 5. run on the emulated SoC, compare against the ILA fast path and
+    //    the session's accelerated result
     let mut driver = Driver::new(d2a::soc::reference_soc());
     let accel_out = driver.invoke(&inv)?;
     let host_out = dev
         .exec_op(&d2a::ir::Op::FlexLinear, &[&xv, &wv, &bv])
         .unwrap();
-    let f32_ref = d2a::ir::interp::eval_op(&d2a::ir::Op::FlexLinear, &[&xv, &wv, &bv])?;
     println!(
         "\nMMIO-vs-ILA-fast-path error: {:.2e} (same semantics, two views)",
         accel_out.rel_error(&host_out)
     );
     println!(
-        "accelerator-vs-f32 error:    {:.2}% (the AdaptivFloat numerics gap)",
-        accel_out.rel_error(&f32_ref) * 100.0
+        "MMIO-vs-session-run error:   {:.2e} (the handle dispatches to the \
+         same models)",
+        accel_out.rel_error(&rep.accelerated)
     );
     Ok(())
 }

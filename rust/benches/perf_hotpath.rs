@@ -6,10 +6,14 @@
 //!  2. `tensor::ops::dense`    — dominates ResMLP co-sim + im2col GEMMs;
 //!  3. e-graph saturation      — dominates Table 1;
 //!  4. SAT propagation         — dominates Table 3 (BMC);
-//!  5. FlexASR ILA fast path   — the per-invocation co-sim cost.
+//!  5. FlexASR ILA fast path   — the per-invocation co-sim cost;
+//!  6. accelerator dispatch    — registry O(1) lookup vs the seed-era
+//!     linear scan, and the plan-driven session run vs the hook path.
 
+use d2a::session::{AcceleratorRegistry, Bindings, DesignRev, Session};
 use d2a::tensor::{ops, Tensor};
 use d2a::util::Rng;
+use std::hint::black_box;
 use std::time::Instant;
 
 fn time<F: FnMut()>(name: &str, reps: u32, mut f: F) -> f64 {
@@ -64,5 +68,69 @@ fn main() {
     let lb = fa.quant(&Tensor::randn(&[96], &mut rng, 0.1));
     time("FlexASR linear ILA fast path 16x96x96", 1000, || {
         let _ = fa.linear(&lx, &lw, &lb);
+    });
+
+    dispatch_benches(&mut rng);
+}
+
+/// Per-node accelerator dispatch: the co-sim hot loop resolves an
+/// accelerator for every accelerator node of every input. The registry's
+/// target-indexed lookup must be no slower than the old linear scan
+/// (`accel_for`), and the plan-driven `CompiledProgram::run` must be no
+/// slower than the hook-interception path it replaces.
+#[allow(deprecated)] // benches the deprecated scan against the registry
+fn dispatch_benches(rng: &mut Rng) {
+    use d2a::ir::{GraphBuilder, Op, Target};
+
+    let registry = AcceleratorRegistry::for_rev(DesignRev::Updated);
+    let accels = d2a::coordinator::accelerators(DesignRev::Updated);
+    let probe = [
+        Op::FlexLinear,
+        Op::VtaGemm,
+        Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) },
+        Op::Relu,
+    ];
+    time("dispatch: registry for_op, 4 ops x 10k", 200, || {
+        for _ in 0..10_000 {
+            for op in &probe {
+                black_box(registry.for_op(black_box(op)).map(|a| a.name()));
+            }
+        }
+    });
+    time("dispatch: linear-scan accel_for, 4 ops x 10k", 200, || {
+        for _ in 0..10_000 {
+            for op in &probe {
+                black_box(d2a::accel::accel_for(&accels, black_box(op)).map(|a| a.name()));
+            }
+        }
+    });
+
+    let mut g = GraphBuilder::new();
+    let x = g.var("x");
+    let w = g.weight("w");
+    let b = g.weight("b");
+    g.linear(x, w, b);
+    let expr = g.finish();
+    let shapes: std::collections::HashMap<String, Vec<usize>> = [
+        ("x".to_string(), vec![16usize, 96]),
+        ("w".to_string(), vec![96, 96]),
+        ("b".to_string(), vec![96]),
+    ]
+    .into_iter()
+    .collect();
+    let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    let program = session.compile_expr(&expr, &shapes);
+    assert_eq!(program.invocations(Target::FlexAsr), 1);
+    let bindings = Bindings::new()
+        .with("x", Tensor::randn(&[16, 96], rng, 1.0))
+        .with("w", Tensor::randn(&[96, 96], rng, 0.2))
+        .with("b", Tensor::randn(&[96], rng, 0.1));
+    time("cosim step: plan-driven CompiledProgram::run", 1000, || {
+        let _ = program.run(&bindings).unwrap();
+    });
+    time("cosim step: AccelHook eval_with_hook", 1000, || {
+        let _ =
+            d2a::cosim::run_accelerated(program.expr(), bindings.env(), &registry)
+                .unwrap();
     });
 }

@@ -7,12 +7,10 @@
 //! Requires `make artifacts`. D2A_COSIM_N bounds the image count
 //! (default 400; the paper evaluates 2000 images / 100 sentences).
 
-use d2a::compiler::compile_app;
-use d2a::coordinator::{accelerators, classify_sweep, DesignRev};
 use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
-use d2a::rewrites::Matching;
 use d2a::runtime::ArtifactStore;
+use d2a::session::{DesignRev, SessionBuilder, SweepSpec};
 use std::time::Duration;
 
 const PAPER: &[(&str, &str, &str, &str, &str)] = &[
@@ -42,19 +40,17 @@ fn main() -> anyhow::Result<()> {
     // ---- LSTM-WLM on FlexASR ------------------------------------------
     {
         let app = d2a::apps::cosim_models::lstm_wlm_lite();
-        let compiled = compile_app(&app, &[Target::FlexAsr], Matching::Flexible, limits());
+        let session = SessionBuilder::new()
+            .targets(&[Target::FlexAsr])
+            .limits(limits())
+            .design_rev(DesignRev::Original)
+            .build();
+        let program = session.compile(&app);
         let mut weights = store.weights("lstm")?;
         let embed = weights.remove("embed").unwrap();
         let tokens = store.test_tokens()?;
         let t0 = std::time::Instant::now();
-        let rep = d2a::cosim::cosim_lm(
-            &compiled.expr,
-            &weights,
-            &embed,
-            &tokens,
-            100,
-            &accelerators(DesignRev::Original),
-        )?;
+        let rep = program.lm_sweep(&weights, &embed, &tokens, 100)?;
         let per = t0.elapsed() / 100;
         println!(
             "{:<13} {:<18} {:>10} {:>10} {:>10} {:>10} | {} / {} / {}",
@@ -85,24 +81,24 @@ fn main() -> anyhow::Result<()> {
             "resnet20" => d2a::apps::cosim_models::resnet20_lite(),
             _ => d2a::apps::cosim_models::mobilenet_lite(),
         };
-        let compiled = compile_app(&app, targets, Matching::Flexible, limits());
         let weights = store.weights(model)?;
-        let orig = classify_sweep(
-            &compiled.expr,
-            &weights,
-            &images[..n],
-            &labels[..n],
-            DesignRev::Original,
-            1,
-        );
-        let upd = classify_sweep(
-            &compiled.expr,
-            &weights,
-            &images[..n],
-            &labels[..n],
-            DesignRev::Updated,
-            1,
-        );
+        // compile once; the extracted program is revision-independent
+        let compiled = SessionBuilder::new()
+            .targets(targets)
+            .limits(limits())
+            .build()
+            .compile(&app);
+        let run = |rev: DesignRev| {
+            let session = SessionBuilder::new().targets(targets).design_rev(rev).build();
+            session.attach(compiled.expr().clone()).classify_sweep(&SweepSpec {
+                input_var: "x",
+                weights: &weights,
+                inputs: &images[..n],
+                labels: &labels[..n],
+            })
+        };
+        let orig = run(DesignRev::Original);
+        let upd = run(DesignRev::Updated);
         let platform = if targets.len() == 1 { "FlexASR" } else { "FlexASR & HLSCNN" };
         println!(
             "{:<13} {:<18} {:>10} {:>10} {:>10} {:>10} | {} / {} / {}",

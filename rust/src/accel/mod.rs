@@ -47,7 +47,12 @@ pub trait Accelerator: Send + Sync {
     fn supported_ops(&self) -> Vec<&'static str>;
 }
 
-/// Look up the accelerator that owns `op` among the given set.
+/// Look up the accelerator that owns `op` among the given set by linear
+/// scan.
+#[deprecated(
+    note = "use session::AcceleratorRegistry::for_op — an O(1) \
+            target-indexed lookup"
+)]
 pub fn accel_for<'a>(
     accels: &'a [Box<dyn Accelerator>],
     op: &Op,

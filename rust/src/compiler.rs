@@ -1,5 +1,10 @@
 //! The end-to-end D2A compilation driver (Fig. 2): IR program → equality
 //! saturation (exact or flexible matching) → lowest-cost extraction.
+//!
+//! This is the low-level core; most callers should go through
+//! [`crate::session::Session::compile`], which wraps the result in a
+//! [`crate::session::CompiledProgram`] handle with a precomputed
+//! accelerator dispatch plan.
 
 use crate::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits, StopReason};
 use crate::ir::shape::Shape;

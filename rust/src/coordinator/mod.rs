@@ -1,72 +1,37 @@
-//! The validation coordinator: a worker-pool job scheduler that fans
-//! application-level co-simulation sweeps (2000 images / 100 sentences,
-//! Table 4) across threads, each worker owning its own accelerator model
-//! instances, and merges the partial reports.
+//! Deprecated coordinator shims.
 //!
-//! std::thread + channels (tokio is not in the offline vendored set — see
-//! DESIGN.md); the structure is the same leader/worker shape a
-//! distributed deployment would use.
+//! The worker-pool sweep scheduler that lived here moved into the
+//! session layer: [`crate::session::CompiledProgram::classify_sweep`]
+//! shards a labelled dataset over the session's worker threads against
+//! one `Arc`-shared [`crate::session::AcceleratorRegistry`] (the seed
+//! version re-instantiated every accelerator model per worker and
+//! hardcoded the input variable to `"x"`). The free functions below keep
+//! the old signatures compiling; new code should build a
+//! [`crate::session::Session`].
 
-use crate::accel::{Accelerator, FlexAsr, Hlscnn, HlscnnConfig, Vta};
+use crate::accel::Accelerator;
 use crate::ir::RecExpr;
+use crate::session::{SessionBuilder, SweepSpec};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::thread;
-use std::time::{Duration, Instant};
 
-/// Which accelerator configuration a sweep runs under (the Table 4
-/// "Original" vs "Updated" columns).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum DesignRev {
-    /// As-published designs: HLSCNN 8-bit fixed-point weight store.
-    Original,
-    /// Post-co-design fix: HLSCNN 16-bit weights.
-    Updated,
-}
+pub use crate::session::{DesignRev, SweepReport};
 
 /// Build the accelerator set for a design revision.
+#[deprecated(
+    note = "use session::AcceleratorRegistry::for_rev, which adds O(1) \
+            target-indexed dispatch"
+)]
 pub fn accelerators(rev: DesignRev) -> Vec<Box<dyn Accelerator>> {
-    let (fa, hl) = match rev {
-        DesignRev::Original => {
-            (FlexAsr::original(), Hlscnn::new(HlscnnConfig::original()))
-        }
-        DesignRev::Updated => {
-            (FlexAsr::updated(), Hlscnn::new(HlscnnConfig::updated()))
-        }
-    };
-    vec![Box::new(fa), Box::new(hl), Box::new(Vta::new())]
-}
-
-/// Merged result of a distributed classification sweep.
-#[derive(Debug, Clone)]
-pub struct SweepReport {
-    pub n: usize,
-    pub ref_correct: usize,
-    pub acc_correct: usize,
-    pub elapsed: Duration,
-    pub workers: usize,
-}
-
-impl SweepReport {
-    pub fn ref_accuracy(&self) -> f32 {
-        self.ref_correct as f32 / self.n as f32
-    }
-
-    pub fn acc_accuracy(&self) -> f32 {
-        self.acc_correct as f32 / self.n as f32
-    }
-
-    /// Average simulation time per data point (the Table 4 column).
-    pub fn time_per_point(&self) -> Duration {
-        self.elapsed / self.n.max(1) as u32
-    }
+    crate::session::registry::models(rev)
 }
 
 /// Run a classification co-simulation sweep over `images` with `workers`
-/// threads. Each worker instantiates its own accelerator models (they
-/// are stateless between invocations) and processes a strided shard.
+/// threads, assuming the per-image input variable is named `"x"`.
+#[deprecated(
+    note = "use Session::compile + CompiledProgram::classify_sweep with an \
+            explicit SweepSpec::input_var"
+)]
 pub fn classify_sweep(
     expr: &RecExpr,
     weights: &HashMap<String, Tensor>,
@@ -75,66 +40,14 @@ pub fn classify_sweep(
     rev: DesignRev,
     workers: usize,
 ) -> SweepReport {
-    let start = Instant::now();
-    let expr = Arc::new(expr.clone());
-    let weights = Arc::new(weights.clone());
-    let images = Arc::new(images.to_vec());
-    let labels = Arc::new(labels.to_vec());
-    let (tx, rx) = mpsc::channel::<(usize, usize, usize)>();
-
-    let workers = workers.max(1);
-    let mut handles = Vec::new();
-    for wid in 0..workers {
-        let tx = tx.clone();
-        let expr = Arc::clone(&expr);
-        let weights = Arc::clone(&weights);
-        let images = Arc::clone(&images);
-        let labels = Arc::clone(&labels);
-        handles.push(thread::spawn(move || {
-            let accels = accelerators(rev);
-            let mut env = (*weights).clone();
-            let mut ref_c = 0usize;
-            let mut acc_c = 0usize;
-            let mut n = 0usize;
-            let mut idx = wid;
-            while idx < images.len() {
-                env.insert("x".to_string(), images[idx].clone());
-                if let Ok(r) = crate::ir::interp::eval(&expr, &env) {
-                    if r.argmax() == labels[idx] {
-                        ref_c += 1;
-                    }
-                }
-                if let Ok((a, _)) = crate::cosim::run_accelerated(&expr, &env, &accels)
-                {
-                    if a.argmax() == labels[idx] {
-                        acc_c += 1;
-                    }
-                }
-                n += 1;
-                idx += workers;
-            }
-            let _ = tx.send((ref_c, acc_c, n));
-        }));
-    }
-    drop(tx);
-
-    let mut report = SweepReport {
-        n: 0,
-        ref_correct: 0,
-        acc_correct: 0,
-        elapsed: Duration::ZERO,
-        workers,
-    };
-    for (r, a, n) in rx {
-        report.ref_correct += r;
-        report.acc_correct += a;
-        report.n += n;
-    }
-    for h in handles {
-        let _ = h.join();
-    }
-    report.elapsed = start.elapsed();
-    report
+    let session = SessionBuilder::new().design_rev(rev).workers(workers).build();
+    let program = session.attach(expr.clone());
+    program.classify_sweep(&SweepSpec {
+        input_var: "x",
+        weights,
+        inputs: images,
+        labels,
+    })
 }
 
 #[cfg(test)]
@@ -143,10 +56,8 @@ mod tests {
     use crate::ir::GraphBuilder;
     use crate::util::Rng;
 
-    /// Sweep over a toy linear classifier: worker sharding must cover
-    /// every input exactly once and agree with the sequential path.
-    #[test]
-    fn sweep_matches_sequential() {
+    fn toy_classifier() -> (RecExpr, HashMap<String, Tensor>, Vec<Tensor>, Vec<usize>)
+    {
         let mut g = GraphBuilder::new();
         let x = g.var("x");
         let w = g.weight("w");
@@ -163,16 +74,33 @@ mod tests {
         let images: Vec<Tensor> =
             (0..23).map(|_| Tensor::randn(&[1, 8], &mut rng, 1.0)).collect();
         let labels: Vec<usize> = (0..23).map(|_| rng.below(4)).collect();
+        (expr, weights, images, labels)
+    }
 
-        let seq = classify_sweep(&expr, &weights, &images, &labels, DesignRev::Updated, 1);
-        let par = classify_sweep(&expr, &weights, &images, &labels, DesignRev::Updated, 4);
-        assert_eq!(seq.n, 23);
-        assert_eq!(par.n, 23);
-        assert_eq!(seq.ref_correct, par.ref_correct);
-        assert_eq!(seq.acc_correct, par.acc_correct);
+    /// The deprecated shim must agree with the session path it wraps.
+    #[test]
+    #[allow(deprecated)]
+    fn shim_matches_session_sweep() {
+        let (expr, weights, images, labels) = toy_classifier();
+        let old = classify_sweep(&expr, &weights, &images, &labels, DesignRev::Updated, 4);
+        let session = SessionBuilder::new()
+            .design_rev(DesignRev::Updated)
+            .workers(4)
+            .build();
+        let new = session.attach(expr).classify_sweep(&SweepSpec {
+            input_var: "x",
+            weights: &weights,
+            inputs: &images,
+            labels: &labels,
+        });
+        assert_eq!(old.n, 23);
+        assert_eq!(old.n, new.n);
+        assert_eq!(old.ref_correct, new.ref_correct);
+        assert_eq!(old.acc_correct, new.acc_correct);
     }
 
     #[test]
+    #[allow(deprecated)]
     fn design_revisions_differ() {
         let orig = accelerators(DesignRev::Original);
         let upd = accelerators(DesignRev::Updated);

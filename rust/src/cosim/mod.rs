@@ -8,20 +8,28 @@
 //! ILA fast path — so host regions run IR semantics and offloaded regions
 //! run the accelerator's exact custom numerics, just like the ILAng-based
 //! co-simulation in the paper.
+//!
+//! Dispatch goes through the session-layer
+//! [`AcceleratorRegistry`](crate::session::AcceleratorRegistry): each
+//! intercepted node costs one O(1) table read instead of the seed-era
+//! linear scan over all accelerator models. Prefer driving co-simulation
+//! through [`crate::session::CompiledProgram::cosim`], which adds a
+//! precomputed per-node dispatch plan on top.
 
 pub mod stats;
 pub mod table2;
 
-use crate::accel::{accel_for, Accelerator};
 use crate::ir::interp::{eval_with_hook, EvalError, EvalHook};
 use crate::ir::{Node, RecExpr};
+use crate::session::AcceleratorRegistry;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
-/// Evaluation hook that dispatches accelerator ops to ILA models and
-/// records per-invocation error statistics against the f32 semantics.
+/// Evaluation hook that dispatches accelerator ops to ILA models through
+/// a target-indexed registry and records per-invocation error statistics
+/// against the f32 semantics.
 pub struct AccelHook<'a> {
-    pub accels: &'a [Box<dyn Accelerator>],
+    registry: &'a AcceleratorRegistry,
     /// number of accelerator invocations executed
     pub invocations: usize,
     /// per-invocation relative error vs the f32 op semantics (the
@@ -32,14 +40,19 @@ pub struct AccelHook<'a> {
 }
 
 impl<'a> AccelHook<'a> {
-    pub fn new(accels: &'a [Box<dyn Accelerator>]) -> Self {
-        AccelHook { accels, invocations: 0, inv_errors: Vec::new(), track_errors: false }
+    pub fn new(registry: &'a AcceleratorRegistry) -> Self {
+        AccelHook {
+            registry,
+            invocations: 0,
+            inv_errors: Vec::new(),
+            track_errors: false,
+        }
     }
 }
 
 impl EvalHook for AccelHook<'_> {
     fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Option<Tensor> {
-        let accel = accel_for(self.accels, &node.op)?;
+        let accel = self.registry.for_op(&node.op)?;
         let out = accel.exec_op(&node.op, ch)?;
         if node.op.is_accel_invocation() {
             self.invocations += 1;
@@ -57,53 +70,11 @@ impl EvalHook for AccelHook<'_> {
 pub fn run_accelerated(
     expr: &RecExpr,
     env: &HashMap<String, Tensor>,
-    accels: &[Box<dyn Accelerator>],
+    registry: &AcceleratorRegistry,
 ) -> Result<(Tensor, usize), EvalError> {
-    let mut hook = AccelHook::new(accels);
+    let mut hook = AccelHook::new(registry);
     let out = eval_with_hook(expr, env, &mut hook)?;
     Ok((out, hook.invocations))
-}
-
-/// Classification co-simulation over a dataset slice: returns
-/// (reference accuracy, accelerated accuracy, #invocations/image).
-pub fn cosim_classifier(
-    expr: &RecExpr,
-    weights: &HashMap<String, Tensor>,
-    images: &[Tensor],
-    labels: &[usize],
-    accels: &[Box<dyn Accelerator>],
-) -> Result<ClassifierReport, EvalError> {
-    let mut env = weights.clone();
-    let mut ref_correct = 0usize;
-    let mut acc_correct = 0usize;
-    let mut invocations = 0usize;
-    for (img, &label) in images.iter().zip(labels) {
-        env.insert("x".to_string(), img.clone());
-        let r = crate::ir::interp::eval(expr, &env)?;
-        if r.argmax() == label {
-            ref_correct += 1;
-        }
-        let (a, inv) = run_accelerated(expr, &env, accels)?;
-        if a.argmax() == label {
-            acc_correct += 1;
-        }
-        invocations = inv;
-    }
-    Ok(ClassifierReport {
-        n: images.len(),
-        ref_accuracy: ref_correct as f32 / images.len() as f32,
-        acc_accuracy: acc_correct as f32 / images.len() as f32,
-        invocations_per_input: invocations,
-    })
-}
-
-/// Result of a classification co-simulation.
-#[derive(Debug, Clone)]
-pub struct ClassifierReport {
-    pub n: usize,
-    pub ref_accuracy: f32,
-    pub acc_accuracy: f32,
-    pub invocations_per_input: usize,
 }
 
 /// Language-model co-simulation: per-token perplexity over `n_sentences`
@@ -114,7 +85,7 @@ pub fn cosim_lm(
     embed: &Tensor,
     tokens: &[usize],
     n_sentences: usize,
-    accels: &[Box<dyn Accelerator>],
+    registry: &AcceleratorRegistry,
 ) -> Result<LmReport, EvalError> {
     let seq_len = 16usize;
     let e = embed.shape[1];
@@ -132,7 +103,7 @@ pub fn cosim_lm(
         }
         env.insert("x_seq".to_string(), Tensor::new(vec![seq_len, 1, e], x));
         let logits_ref = crate::ir::interp::eval(expr, &env)?;
-        let (logits_acc, _) = run_accelerated(expr, &env, accels)?;
+        let (logits_acc, _) = run_accelerated(expr, &env, registry)?;
         for t in 0..seq_len {
             let target = w[t + 1];
             nll_ref += -log_softmax_at(&logits_ref, t, target) as f64;
@@ -166,16 +137,12 @@ fn log_softmax_at(logits: &Tensor, row: usize, idx: usize) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::{FlexAsr, Hlscnn, Vta};
     use crate::ir::{GraphBuilder, Op};
+    use crate::session::DesignRev;
     use crate::util::Rng;
 
-    fn accels() -> Vec<Box<dyn Accelerator>> {
-        vec![
-            Box::new(FlexAsr::new()),
-            Box::new(Hlscnn::default()),
-            Box::new(Vta::new()),
-        ]
+    fn registry() -> AcceleratorRegistry {
+        AcceleratorRegistry::for_rev(DesignRev::Updated)
     }
 
     #[test]
@@ -195,13 +162,40 @@ mod tests {
         ]
         .into_iter()
         .collect();
-        let accels = accels();
-        let (out, inv) = run_accelerated(&expr, &env, &accels).unwrap();
+        let reg = registry();
+        let (out, inv) = run_accelerated(&expr, &env, &reg).unwrap();
         assert_eq!(inv, 1);
         // accelerated result differs from f32 (AdaptivFloat) but not by much
         let reference = crate::ir::interp::eval(&expr, &env).unwrap();
         let e = out.rel_error(&reference);
         assert!(e > 0.0 && e < 0.1, "e={e}");
+    }
+
+    #[test]
+    fn hook_and_plan_paths_agree() {
+        // the AccelHook path and the session's plan-driven path must
+        // produce identical tensors (same models, same dispatch)
+        let mut g = GraphBuilder::new();
+        let x = g.var("x");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        let lin = g.expr.add(Op::FlexLinear, vec![x, w, b]);
+        let _ = g.expr.add(Op::Relu, vec![lin]);
+        let expr = g.finish();
+        let mut rng = Rng::new(2);
+        let env: HashMap<String, Tensor> = [
+            ("x".to_string(), Tensor::randn(&[2, 8], &mut rng, 1.0)),
+            ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.3)),
+            ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let (hook_out, _) = run_accelerated(&expr, &env, &registry()).unwrap();
+        let session = crate::session::Session::builder().build();
+        let program = session.attach(expr);
+        let plan_out =
+            program.run(&crate::session::Bindings::from_env(env)).unwrap();
+        assert_eq!(hook_out, plan_out);
     }
 
     #[test]

@@ -31,6 +31,22 @@ pub enum Target {
     Vta,
 }
 
+impl Target {
+    /// Number of `Target` variants — the size of dense target-indexed
+    /// tables (see `session::AcceleratorRegistry`).
+    pub const COUNT: usize = 4;
+
+    /// Dense index of this target, for O(1) dispatch tables.
+    pub fn index(self) -> usize {
+        match self {
+            Target::Host => 0,
+            Target::FlexAsr => 1,
+            Target::Hlscnn => 2,
+            Target::Vta => 3,
+        }
+    }
+}
+
 impl fmt::Display for Target {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -7,6 +7,12 @@
 //! compilation-results validation at the operation level (simulation +
 //! formal) and at the application level (co-simulation).
 //!
+//! The public entry point is the [`session`] module: build a [`Session`]
+//! with [`SessionBuilder`], compile applications into [`CompiledProgram`]
+//! handles, and run/co-simulate/sweep through them. The older free
+//! functions in [`compiler`], [`cosim`] and [`coordinator`] remain as the
+//! low-level core plus deprecated shims.
+//!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
 pub mod accel;
@@ -23,8 +29,11 @@ pub mod numerics;
 pub mod rewrites;
 pub mod rtl;
 pub mod runtime;
+pub mod session;
 pub mod smt;
 pub mod soc;
 pub mod tensor;
 pub mod util;
 pub mod verify;
+
+pub use session::{Bindings, CompiledProgram, Session, SessionBuilder};

@@ -4,11 +4,11 @@
 
 use d2a::apps::table1::all_apps;
 use d2a::cli::Cli;
-use d2a::coordinator::{accelerators, classify_sweep, DesignRev};
 use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
 use d2a::rewrites::Matching;
 use d2a::runtime::ArtifactStore;
+use d2a::session::{DesignRev, SessionBuilder, SweepSpec};
 use std::time::Duration;
 
 const HELP: &str = "\
@@ -23,6 +23,7 @@ COMMANDS:
   verify [--rows R --cols C --timeout SECS]
                          BMC + CHC verification of the FlexASR MaxPool mapping
   cosim  --app NAME [--rev original|updated] [--limit N] [--workers W]
+         [--input-var NAME]
                          application-level co-simulation (resmlp | resnet20 |
                          mobilenet | lstm)
   soc-demo               run a D2A-lowered program on the emulated SoC
@@ -124,25 +125,18 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
 
     if app_name == "lstm" {
         let app = d2a::apps::cosim_models::lstm_wlm_lite();
-        let compiled = d2a::compiler::compile_app(
-            &app,
-            &[Target::FlexAsr],
-            Matching::Flexible,
-            limits(),
-        );
+        let session = SessionBuilder::new()
+            .targets(&[Target::FlexAsr])
+            .matching(Matching::Flexible)
+            .limits(limits())
+            .design_rev(rev)
+            .build();
+        let program = session.compile(&app);
         let mut weights = store.weights("lstm")?;
         let embed = weights.remove("embed").expect("embed table");
         let tokens = store.test_tokens()?;
         let n_sent = limit.min(100);
-        let accels = accelerators(rev);
-        let rep = d2a::cosim::cosim_lm(
-            &compiled.expr,
-            &weights,
-            &embed,
-            &tokens,
-            n_sent,
-            &accels,
-        )?;
+        let rep = program.lm_sweep(&weights, &embed, &tokens, n_sent)?;
         println!(
             "LSTM-WLM ({n_sent} sentences): reference ppl {:.2}, accelerated ppl {:.2}",
             rep.ref_perplexity, rep.acc_perplexity
@@ -161,25 +155,29 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
     } else {
         &[Target::FlexAsr, Target::Hlscnn]
     };
-    let compiled =
-        d2a::compiler::compile_app(&app, targets, Matching::Flexible, limits());
+    let session = SessionBuilder::new()
+        .targets(targets)
+        .matching(Matching::Flexible)
+        .limits(limits())
+        .design_rev(rev)
+        .workers(workers)
+        .build();
+    let program = session.compile(&app);
     println!(
         "{}: compiled with {} FlexASR + {} HLSCNN invocations",
         app.name,
-        compiled.invocations(Target::FlexAsr),
-        compiled.invocations(Target::Hlscnn)
+        program.invocations(Target::FlexAsr),
+        program.invocations(Target::Hlscnn)
     );
     let weights = store.weights(model)?;
     let (images, labels) = store.test_images()?;
     let n = limit.min(images.len());
-    let rep = classify_sweep(
-        &compiled.expr,
-        &weights,
-        &images[..n],
-        &labels[..n],
-        rev,
-        workers,
-    );
+    let rep = program.classify_sweep(&SweepSpec {
+        input_var: cli.get("input-var").unwrap_or("x"),
+        weights: &weights,
+        inputs: &images[..n],
+        labels: &labels[..n],
+    });
     println!(
         "{} [{:?}] over {} images: reference {:.2}%, accelerated {:.2}%  ({:.1?}/image)",
         app.name,

@@ -8,7 +8,9 @@
 //! the co-simulation (never Python on the request path).
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use artifacts::ArtifactStore;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtRunner;

@@ -1,0 +1,90 @@
+//! Named input bindings for program execution.
+//!
+//! A [`Bindings`] maps IR leaf names (`Var`/`Weight`) to tensors. It
+//! replaces the raw `HashMap<String, Tensor>` environments of the seed
+//! API — and, crucially, makes the *input* variable of a sweep an
+//! explicit parameter instead of the hardcoded `"x"` the old
+//! `coordinator::classify_sweep` assumed.
+
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+
+/// Named tensor bindings for one evaluation of a compiled program.
+#[derive(Debug, Clone, Default)]
+pub struct Bindings {
+    env: HashMap<String, Tensor>,
+}
+
+impl Bindings {
+    /// Empty bindings.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Wrap an existing environment map (e.g. an artifact-store weight
+    /// bundle) without copying.
+    pub fn from_env(env: HashMap<String, Tensor>) -> Self {
+        Bindings { env }
+    }
+
+    /// Builder-style insert.
+    pub fn with(mut self, name: &str, value: Tensor) -> Self {
+        self.set(name, value);
+        self
+    }
+
+    /// Bind `name` to `value`, replacing any previous binding.
+    pub fn set(&mut self, name: &str, value: Tensor) {
+        self.env.insert(name.to_string(), value);
+    }
+
+    /// Look up a binding.
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.env.get(name)
+    }
+
+    /// The underlying environment map (what the interpreter consumes).
+    pub fn env(&self) -> &HashMap<String, Tensor> {
+        &self.env
+    }
+
+    /// Number of bound names.
+    pub fn len(&self) -> usize {
+        self.env.len()
+    }
+
+    /// True when nothing is bound.
+    pub fn is_empty(&self) -> bool {
+        self.env.is_empty()
+    }
+}
+
+impl From<HashMap<String, Tensor>> for Bindings {
+    fn from(env: HashMap<String, Tensor>) -> Self {
+        Bindings { env }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_style_binding() {
+        let b = Bindings::new()
+            .with("x", Tensor::ones(&[2, 2]))
+            .with("w", Tensor::zeros(&[2]));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.get("x").unwrap().shape, vec![2, 2]);
+        assert!(b.get("y").is_none());
+    }
+
+    #[test]
+    fn set_replaces() {
+        let mut b = Bindings::new();
+        b.set("x", Tensor::zeros(&[1]));
+        b.set("x", Tensor::ones(&[3]));
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.get("x").unwrap().shape, vec![3]);
+    }
+}

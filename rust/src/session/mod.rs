@@ -1,0 +1,701 @@
+//! The unified session API: one handle-based entry point for
+//! compile → co-simulate → sweep.
+//!
+//! The seed API scattered the D2A flow across free functions
+//! (`compiler::compile`, `cosim::run_accelerated`,
+//! `coordinator::classify_sweep`) that each took 5–6 positional
+//! arguments, re-instantiated accelerator models per worker thread, and
+//! hardcoded the sweep input variable to `"x"`. Following the ISA-like
+//! interface discipline of the ILA papers, this module concentrates the
+//! whole flow behind three types:
+//!
+//! * [`AcceleratorRegistry`] — an `Arc`-shared, `Target`-indexed dispatch
+//!   table over the bit-accurate accelerator models;
+//! * [`Session`] (built by [`SessionBuilder`]) — owns the registry plus
+//!   the compilation policy (targets, matching mode, saturation limits,
+//!   design revision, worker count) and exposes [`Session::compile`];
+//! * [`CompiledProgram`] — a reusable handle caching the extracted
+//!   [`RecExpr`] *and* a precomputed per-node [`DispatchPlan`], with
+//!   [`CompiledProgram::run`], [`CompiledProgram::run_batch`],
+//!   [`CompiledProgram::cosim`] and [`CompiledProgram::classify_sweep`].
+//!
+//! ```text
+//! SessionBuilder ──build()──▶ Session ──compile(&App)──▶ CompiledProgram
+//!                              │  Arc<AcceleratorRegistry>     │ plan: per-node slot
+//!                              └────────────┬──────────────────┘
+//!                                           ▼
+//!                          ILA tensor fast path (exec_op)
+//! ```
+
+pub mod bindings;
+pub mod registry;
+
+pub use bindings::Bindings;
+pub use registry::AcceleratorRegistry;
+
+use crate::apps::App;
+use crate::compiler;
+use crate::egraph::{RunnerLimits, StopReason};
+use crate::ir::interp::{self, EvalError};
+use crate::ir::shape::Shape;
+use crate::ir::{Op, RecExpr, Target};
+use crate::rewrites::Matching;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Which accelerator configuration a session runs under (the Table 4
+/// "Original" vs "Updated" columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesignRev {
+    /// As-published designs: HLSCNN 8-bit fixed-point weight store.
+    Original,
+    /// Post-co-design fix: HLSCNN 16-bit weights.
+    Updated,
+}
+
+/// Configuration builder for a [`Session`].
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    targets: Vec<Target>,
+    mode: Matching,
+    limits: RunnerLimits,
+    rev: DesignRev,
+    workers: usize,
+    track_errors: bool,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionBuilder {
+    /// Defaults: all three accelerators, flexible matching, default
+    /// saturation limits, updated designs, one worker, no per-invocation
+    /// error tracking.
+    pub fn new() -> Self {
+        SessionBuilder {
+            targets: vec![Target::FlexAsr, Target::Hlscnn, Target::Vta],
+            mode: Matching::Flexible,
+            limits: RunnerLimits::default(),
+            rev: DesignRev::Updated,
+            workers: 1,
+            track_errors: false,
+        }
+    }
+
+    /// Restrict compilation to the given targets.
+    pub fn targets(mut self, targets: &[Target]) -> Self {
+        self.targets = targets.to_vec();
+        self
+    }
+
+    /// Exact or flexible matching (the two columns of Table 1).
+    pub fn matching(mut self, mode: Matching) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Equality-saturation budgets.
+    pub fn limits(mut self, limits: RunnerLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
+    /// Accelerator design revision (original vs updated numerics).
+    pub fn design_rev(mut self, rev: DesignRev) -> Self {
+        self.rev = rev;
+        self
+    }
+
+    /// Worker threads for batched execution and sweeps.
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// Record per-invocation relative errors during co-simulation (the
+    /// §4.4.2 debugging statistics; costs an extra f32 evaluation per
+    /// accelerator invocation).
+    pub fn track_errors(mut self, on: bool) -> Self {
+        self.track_errors = on;
+        self
+    }
+
+    /// Instantiate the accelerator models once and freeze the session.
+    pub fn build(self) -> Session {
+        Session {
+            registry: Arc::new(AcceleratorRegistry::for_rev(self.rev)),
+            targets: self.targets,
+            mode: self.mode,
+            limits: self.limits,
+            rev: self.rev,
+            workers: self.workers,
+            track_errors: self.track_errors,
+        }
+    }
+}
+
+/// A configured compile/validate session: owns the accelerator registry
+/// and the compilation policy.
+pub struct Session {
+    registry: Arc<AcceleratorRegistry>,
+    targets: Vec<Target>,
+    mode: Matching,
+    limits: RunnerLimits,
+    rev: DesignRev,
+    workers: usize,
+    track_errors: bool,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// The shared accelerator registry.
+    pub fn registry(&self) -> &Arc<AcceleratorRegistry> {
+        &self.registry
+    }
+
+    /// The session's design revision.
+    pub fn design_rev(&self) -> DesignRev {
+        self.rev
+    }
+
+    /// The session's matching mode.
+    pub fn matching(&self) -> Matching {
+        self.mode
+    }
+
+    /// The session's compilation targets.
+    pub fn targets(&self) -> &[Target] {
+        &self.targets
+    }
+
+    /// The session's worker-thread count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Compile an application (including app-specific rewrite rules) into
+    /// a reusable handle.
+    pub fn compile(&self, app: &App) -> CompiledProgram {
+        let res = compiler::compile_app(app, &self.targets, self.mode, self.limits.clone());
+        self.finish(res)
+    }
+
+    /// Compile a bare IR expression under the session policy.
+    pub fn compile_expr(
+        &self,
+        expr: &RecExpr,
+        shapes: &HashMap<String, Shape>,
+    ) -> CompiledProgram {
+        let res = compiler::compile(expr, shapes, &self.targets, self.mode, self.limits.clone());
+        self.finish(res)
+    }
+
+    /// Wrap an already-compiled expression in a handle (precomputing its
+    /// dispatch plan) without running saturation again.
+    pub fn attach(&self, expr: RecExpr) -> CompiledProgram {
+        self.handle(expr, None)
+    }
+
+    fn finish(&self, res: compiler::CompileResult) -> CompiledProgram {
+        let stats = CompileStats {
+            stop: res.stop,
+            classes: res.classes,
+            nodes: res.nodes,
+            elapsed: res.elapsed,
+        };
+        self.handle(res.expr, Some(stats))
+    }
+
+    fn handle(&self, expr: RecExpr, stats: Option<CompileStats>) -> CompiledProgram {
+        let plan = DispatchPlan::new(&expr, &self.registry);
+        CompiledProgram {
+            expr,
+            stats,
+            plan,
+            registry: Arc::clone(&self.registry),
+            workers: self.workers,
+            track_errors: self.track_errors,
+        }
+    }
+}
+
+/// Compilation statistics carried by a [`CompiledProgram`] (absent for
+/// handles created via [`Session::attach`]).
+#[derive(Debug, Clone)]
+pub struct CompileStats {
+    /// Why saturation stopped.
+    pub stop: StopReason,
+    /// e-graph classes at extraction time.
+    pub classes: usize,
+    /// e-graph nodes at extraction time.
+    pub nodes: usize,
+    /// Wall-clock of saturation + extraction.
+    pub elapsed: Duration,
+}
+
+/// One per-node dispatch decision, precomputed at compile time.
+#[derive(Debug, Clone, Copy)]
+enum Step {
+    /// Host-evaluated op (or a leaf bound from the environment).
+    Host,
+    /// Route to the registry model in `slot`; `invocation` marks
+    /// accelerator *compute* (data-movement ops are not invocations).
+    Accel { slot: usize, invocation: bool },
+}
+
+/// Precomputed per-node dispatch decisions for one compiled expression —
+/// the hot loop reads an array instead of matching op targets and
+/// scanning accelerator lists per node per input.
+#[derive(Debug, Clone)]
+pub struct DispatchPlan {
+    steps: Vec<Step>,
+    offloaded: usize,
+}
+
+impl DispatchPlan {
+    fn new(expr: &RecExpr, registry: &AcceleratorRegistry) -> Self {
+        let mut steps = Vec::with_capacity(expr.len());
+        let mut offloaded = 0usize;
+        for node in &expr.nodes {
+            let t = node.op.target();
+            let step = if t == Target::Host {
+                Step::Host
+            } else {
+                match registry.slot_for(t) {
+                    Some(slot) => {
+                        let invocation = node.op.is_accel_invocation();
+                        if invocation {
+                            offloaded += 1;
+                        }
+                        Step::Accel { slot, invocation }
+                    }
+                    // target compiled for but no model registered: fall
+                    // back to the op's f32 semantics
+                    None => Step::Host,
+                }
+            };
+            steps.push(step);
+        }
+        DispatchPlan { steps, offloaded }
+    }
+
+    /// Number of accelerator invocations the plan routes per evaluation.
+    pub fn offloaded(&self) -> usize {
+        self.offloaded
+    }
+}
+
+/// Result of one traced accelerated evaluation
+/// ([`CompiledProgram::run_traced`]): the output plus the invocation
+/// statistics, without the reference pass [`CompiledProgram::cosim`]
+/// adds.
+#[derive(Debug, Clone)]
+pub struct RunTrace {
+    /// Output with accelerator numerics on the offloaded regions.
+    pub output: Tensor,
+    /// Accelerator invocations executed.
+    pub invocations: usize,
+    /// Per-invocation relative errors (§4.4.2 debugging statistics);
+    /// empty unless the session enabled
+    /// [`SessionBuilder::track_errors`].
+    pub inv_errors: Vec<f32>,
+}
+
+/// Result of one co-simulated evaluation ([`CompiledProgram::cosim`]).
+#[derive(Debug, Clone)]
+pub struct CosimReport {
+    /// Pure f32 reference output (IR interpreter).
+    pub reference: Tensor,
+    /// Output with accelerator numerics on the offloaded regions.
+    pub accelerated: Tensor,
+    /// Accelerator invocations executed.
+    pub invocations: usize,
+    /// Relative (Frobenius) error of `accelerated` vs `reference`.
+    pub rel_error: f32,
+    /// Per-invocation relative errors (§4.4.2 debugging statistics);
+    /// empty unless the session enabled
+    /// [`SessionBuilder::track_errors`].
+    pub inv_errors: Vec<f32>,
+}
+
+/// A classification sweep over a dataset: which bindings are shared
+/// (weights), which variable carries the per-datapoint input — explicit,
+/// where the seed API hardcoded `"x"` — and the labelled data.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepSpec<'a> {
+    /// Name of the per-datapoint input variable.
+    pub input_var: &'a str,
+    /// Bindings shared by every datapoint (weights, constants).
+    pub weights: &'a HashMap<String, Tensor>,
+    /// One tensor per datapoint, bound to `input_var`.
+    pub inputs: &'a [Tensor],
+    /// Ground-truth class per datapoint.
+    pub labels: &'a [usize],
+}
+
+/// Merged result of a (possibly multi-worker) classification sweep.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub n: usize,
+    pub ref_correct: usize,
+    pub acc_correct: usize,
+    pub elapsed: Duration,
+    pub workers: usize,
+}
+
+impl SweepReport {
+    pub fn ref_accuracy(&self) -> f32 {
+        self.ref_correct as f32 / self.n as f32
+    }
+
+    pub fn acc_accuracy(&self) -> f32 {
+        self.acc_correct as f32 / self.n as f32
+    }
+
+    /// Average simulation time per data point (the Table 4 column).
+    pub fn time_per_point(&self) -> Duration {
+        self.elapsed / self.n.max(1) as u32
+    }
+}
+
+/// A compiled program handle: the extracted expression, its compilation
+/// statistics, and a precomputed dispatch plan bound to the session's
+/// shared registry. Handles are cheap to reuse across batches and are
+/// `Sync` — one handle can serve many worker threads.
+pub struct CompiledProgram {
+    expr: RecExpr,
+    stats: Option<CompileStats>,
+    plan: DispatchPlan,
+    registry: Arc<AcceleratorRegistry>,
+    workers: usize,
+    track_errors: bool,
+}
+
+impl CompiledProgram {
+    /// The extracted (rewritten) program.
+    pub fn expr(&self) -> &RecExpr {
+        &self.expr
+    }
+
+    /// Compilation statistics (None for [`Session::attach`] handles).
+    pub fn stats(&self) -> Option<&CompileStats> {
+        self.stats.as_ref()
+    }
+
+    /// The registry this handle dispatches to.
+    pub fn registry(&self) -> &Arc<AcceleratorRegistry> {
+        &self.registry
+    }
+
+    /// The precomputed dispatch plan.
+    pub fn plan(&self) -> &DispatchPlan {
+        &self.plan
+    }
+
+    /// Static accelerator invocations per target — the Table 1 metric.
+    pub fn invocations(&self, target: Target) -> usize {
+        self.expr.invocations(target)
+    }
+
+    /// Pure f32 reference evaluation (no accelerator numerics).
+    pub fn run_ref(&self, bindings: &Bindings) -> Result<Tensor, EvalError> {
+        interp::eval(&self.expr, bindings.env())
+    }
+
+    /// Evaluate with accelerator numerics on the offloaded regions.
+    pub fn run(&self, bindings: &Bindings) -> Result<Tensor, EvalError> {
+        self.exec(bindings.env(), None).map(|(t, _)| t)
+    }
+
+    /// Evaluate with accelerator numerics, returning the invocation
+    /// count and (when the session opted in) per-invocation errors —
+    /// half the cost of [`Self::cosim`] when the f32 reference output
+    /// is not needed.
+    pub fn run_traced(&self, bindings: &Bindings) -> Result<RunTrace, EvalError> {
+        let mut inv_errors = Vec::new();
+        let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
+        let (output, invocations) = self.exec(bindings.env(), errors)?;
+        Ok(RunTrace { output, invocations, inv_errors })
+    }
+
+    /// Evaluate a batch, sharded over the session's worker threads.
+    /// Output order matches input order and results are independent of
+    /// the worker count.
+    pub fn run_batch(&self, batch: &[Bindings]) -> Vec<Result<Tensor, EvalError>> {
+        let workers = self.workers.max(1).min(batch.len().max(1));
+        if workers <= 1 {
+            return batch.iter().map(|b| self.run(b)).collect();
+        }
+        let chunk = batch.len().div_ceil(workers);
+        let mut out = Vec::with_capacity(batch.len());
+        thread::scope(|s| {
+            let handles: Vec<_> = batch
+                .chunks(chunk)
+                .map(|shard| {
+                    s.spawn(move || {
+                        shard.iter().map(|b| self.run(b)).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("batch worker panicked"));
+            }
+        });
+        out
+    }
+
+    /// Co-simulate one evaluation: reference f32 vs accelerator
+    /// numerics, with per-invocation error tracking when the session
+    /// opted in.
+    pub fn cosim(&self, bindings: &Bindings) -> Result<CosimReport, EvalError> {
+        let reference = interp::eval(&self.expr, bindings.env())?;
+        let mut inv_errors = Vec::new();
+        let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
+        let (accelerated, invocations) = self.exec(bindings.env(), errors)?;
+        let rel_error = accelerated.rel_error(&reference);
+        Ok(CosimReport { reference, accelerated, invocations, rel_error, inv_errors })
+    }
+
+    /// Application-level classification sweep (Table 4): reference and
+    /// accelerated accuracy over a labelled dataset, sharded over the
+    /// session's worker threads. Replaces `coordinator::classify_sweep`;
+    /// the input variable is explicit in the [`SweepSpec`].
+    pub fn classify_sweep(&self, spec: &SweepSpec<'_>) -> SweepReport {
+        assert_eq!(
+            spec.inputs.len(),
+            spec.labels.len(),
+            "sweep inputs/labels length mismatch"
+        );
+        let start = Instant::now();
+        let workers = self.workers.max(1);
+        let mut totals = (0usize, 0usize, 0usize); // (ref, acc, n)
+        thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|wid| {
+                    s.spawn(move || {
+                        let mut env = spec.weights.clone();
+                        let (mut ref_c, mut acc_c, mut n) = (0usize, 0usize, 0usize);
+                        let mut idx = wid;
+                        while idx < spec.inputs.len() {
+                            env.insert(
+                                spec.input_var.to_string(),
+                                spec.inputs[idx].clone(),
+                            );
+                            if let Ok(r) = interp::eval(&self.expr, &env) {
+                                if r.argmax() == spec.labels[idx] {
+                                    ref_c += 1;
+                                }
+                            }
+                            if let Ok((a, _)) = self.exec(&env, None) {
+                                if a.argmax() == spec.labels[idx] {
+                                    acc_c += 1;
+                                }
+                            }
+                            n += 1;
+                            idx += workers;
+                        }
+                        (ref_c, acc_c, n)
+                    })
+                })
+                .collect();
+            for h in handles {
+                let (r, a, n) = h.join().expect("sweep worker panicked");
+                totals.0 += r;
+                totals.1 += a;
+                totals.2 += n;
+            }
+        });
+        SweepReport {
+            n: totals.2,
+            ref_correct: totals.0,
+            acc_correct: totals.1,
+            elapsed: start.elapsed(),
+            workers,
+        }
+    }
+
+    /// Language-model co-simulation sweep (the Table 4 LSTM-WLM row):
+    /// per-token perplexity, reference vs accelerated.
+    pub fn lm_sweep(
+        &self,
+        weights: &HashMap<String, Tensor>,
+        embed: &Tensor,
+        tokens: &[usize],
+        n_sentences: usize,
+    ) -> Result<crate::cosim::LmReport, EvalError> {
+        crate::cosim::cosim_lm(
+            &self.expr,
+            weights,
+            embed,
+            tokens,
+            n_sentences,
+            &self.registry,
+        )
+    }
+
+    /// The plan-driven interpreter loop: host ops run f32 semantics,
+    /// accelerator ops dispatch through the precomputed slot table
+    /// (no per-node target match, no accelerator scan).
+    fn exec(
+        &self,
+        env: &HashMap<String, Tensor>,
+        mut errors: Option<&mut Vec<f32>>,
+    ) -> Result<(Tensor, usize), EvalError> {
+        let mut values: Vec<Tensor> = Vec::with_capacity(self.expr.len());
+        let mut invocations = 0usize;
+        for (node, step) in self.expr.nodes.iter().zip(&self.plan.steps) {
+            let ch: Vec<&Tensor> = node.children.iter().map(|&c| &values[c]).collect();
+            let v = match &node.op {
+                Op::Var(n) | Op::Weight(n) => {
+                    env.get(n).cloned().ok_or_else(|| EvalError::Unbound(n.clone()))?
+                }
+                op => match *step {
+                    Step::Accel { slot, invocation } => {
+                        match self.registry.by_slot(slot).exec_op(op, &ch) {
+                            Some(out) => {
+                                if invocation {
+                                    invocations += 1;
+                                    if let Some(errs) = errors.as_mut() {
+                                        if let Ok(r) = interp::eval_op(op, &ch) {
+                                            errs.push(out.rel_error(&r));
+                                        }
+                                    }
+                                }
+                                out
+                            }
+                            None => interp::eval_op(op, &ch)?,
+                        }
+                    }
+                    Step::Host => interp::eval_op(op, &ch)?,
+                },
+            };
+            values.push(v);
+        }
+        Ok((values.pop().expect("empty program"), invocations))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::util::Rng;
+
+    fn linear_app() -> (RecExpr, HashMap<String, Shape>) {
+        let mut g = GraphBuilder::new();
+        let x = g.var("input");
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.linear(x, w, b);
+        let shapes: HashMap<String, Shape> = [
+            ("input".to_string(), vec![1usize, 8]),
+            ("w".to_string(), vec![4, 8]),
+            ("b".to_string(), vec![4]),
+        ]
+        .into_iter()
+        .collect();
+        (g.finish(), shapes)
+    }
+
+    fn linear_bindings(rng: &mut Rng) -> Bindings {
+        Bindings::new()
+            .with("input", Tensor::randn(&[1, 8], rng, 1.0))
+            .with("w", Tensor::randn(&[4, 8], rng, 0.3))
+            .with("b", Tensor::randn(&[4], rng, 0.1))
+    }
+
+    #[test]
+    fn compile_produces_offloading_plan() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder().targets(&[Target::FlexAsr]).build();
+        let program = session.compile_expr(&expr, &shapes);
+        assert_eq!(program.invocations(Target::FlexAsr), 1);
+        assert_eq!(program.plan().offloaded(), 1);
+        assert!(program.stats().is_some());
+    }
+
+    #[test]
+    fn run_applies_accelerator_numerics() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder().targets(&[Target::FlexAsr]).build();
+        let program = session.compile_expr(&expr, &shapes);
+        let mut rng = Rng::new(3);
+        let b = linear_bindings(&mut rng);
+        let acc = program.run(&b).unwrap();
+        let reference = program.run_ref(&b).unwrap();
+        let e = acc.rel_error(&reference);
+        assert!(e > 0.0 && e < 0.1, "AdaptivFloat gap out of range: {e}");
+    }
+
+    #[test]
+    fn cosim_reports_invocations_and_errors_when_tracking() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .track_errors(true)
+            .build();
+        let program = session.compile_expr(&expr, &shapes);
+        let mut rng = Rng::new(4);
+        let rep = program.cosim(&linear_bindings(&mut rng)).unwrap();
+        assert_eq!(rep.invocations, 1);
+        assert_eq!(rep.inv_errors.len(), 1);
+        assert!(rep.rel_error < 0.1);
+    }
+
+    #[test]
+    fn cosim_errors_empty_without_opt_in() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder().targets(&[Target::FlexAsr]).build();
+        let program = session.compile_expr(&expr, &shapes);
+        let mut rng = Rng::new(5);
+        let rep = program.cosim(&linear_bindings(&mut rng)).unwrap();
+        assert_eq!(rep.invocations, 1);
+        assert!(rep.inv_errors.is_empty());
+    }
+
+    #[test]
+    fn attach_skips_compilation_but_plans_dispatch() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder().targets(&[Target::FlexAsr]).build();
+        let compiled = session.compile_expr(&expr, &shapes);
+        let attached = session.attach(compiled.expr().clone());
+        assert!(attached.stats().is_none());
+        assert_eq!(attached.plan().offloaded(), compiled.plan().offloaded());
+        let mut rng = Rng::new(6);
+        let b = linear_bindings(&mut rng);
+        assert_eq!(attached.run(&b).unwrap(), compiled.run(&b).unwrap());
+    }
+
+    #[test]
+    fn handles_share_one_registry() {
+        let session = Session::builder().build();
+        let (expr, shapes) = linear_app();
+        let p1 = session.compile_expr(&expr, &shapes);
+        let p2 = session.attach(p1.expr().clone());
+        assert!(Arc::ptr_eq(p1.registry(), p2.registry()));
+        assert!(Arc::ptr_eq(p1.registry(), session.registry()));
+    }
+
+    #[test]
+    fn run_batch_empty_and_single() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder().targets(&[Target::FlexAsr]).workers(4).build();
+        let program = session.compile_expr(&expr, &shapes);
+        assert!(program.run_batch(&[]).is_empty());
+        let mut rng = Rng::new(7);
+        let b = linear_bindings(&mut rng);
+        let out = program.run_batch(std::slice::from_ref(&b));
+        assert_eq!(out.len(), 1);
+        assert_eq!(*out[0].as_ref().unwrap(), program.run(&b).unwrap());
+    }
+}

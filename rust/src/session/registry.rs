@@ -1,0 +1,152 @@
+//! The accelerator registry: an owned, `Target`-indexed dispatch table.
+//!
+//! The registry replaces two seed-era patterns:
+//!
+//! * the O(n) [`crate::accel::accel_for`] linear scan on every
+//!   intercepted node of the co-simulation hot loop, and
+//! * the per-worker `coordinator::accelerators(rev)` re-instantiation,
+//!   which rebuilt every accelerator model for each sweep thread.
+//!
+//! A registry is built once per [`super::Session`], wrapped in an `Arc`,
+//! and shared by every [`super::CompiledProgram`] handle and worker
+//! thread. Lookups index a fixed `[Option<usize>; Target::COUNT]` table,
+//! so per-node dispatch is a single array read.
+
+use super::DesignRev;
+use crate::accel::{Accelerator, FlexAsr, Hlscnn, HlscnnConfig, Vta};
+use crate::ir::{Op, Target};
+
+/// Instantiate the accelerator models for a design revision. This is the
+/// single place in the codebase that constructs the boxed model set;
+/// everything else goes through an [`AcceleratorRegistry`].
+pub fn models(rev: DesignRev) -> Vec<Box<dyn Accelerator>> {
+    let (fa, hl) = match rev {
+        DesignRev::Original => {
+            (FlexAsr::original(), Hlscnn::new(HlscnnConfig::original()))
+        }
+        DesignRev::Updated => {
+            (FlexAsr::updated(), Hlscnn::new(HlscnnConfig::updated()))
+        }
+    };
+    vec![Box::new(fa), Box::new(hl), Box::new(Vta::new())]
+}
+
+/// An owned set of accelerator models with an O(1) target-indexed
+/// dispatch table.
+pub struct AcceleratorRegistry {
+    accels: Vec<Box<dyn Accelerator>>,
+    by_target: [Option<usize>; Target::COUNT],
+}
+
+impl AcceleratorRegistry {
+    /// Build a registry from an explicit model set. When two models claim
+    /// the same target, the first registration wins (matching the old
+    /// linear-scan semantics).
+    pub fn new(accels: Vec<Box<dyn Accelerator>>) -> Self {
+        let mut by_target = [None; Target::COUNT];
+        for (i, a) in accels.iter().enumerate() {
+            let slot = &mut by_target[a.target().index()];
+            if slot.is_none() {
+                *slot = Some(i);
+            }
+        }
+        AcceleratorRegistry { accels, by_target }
+    }
+
+    /// The standard three-accelerator set for a design revision (the
+    /// Table 4 "Original" vs "Updated" columns).
+    pub fn for_rev(rev: DesignRev) -> Self {
+        Self::new(models(rev))
+    }
+
+    /// O(1) lookup of the accelerator registered for a target.
+    pub fn lookup(&self, target: Target) -> Option<&dyn Accelerator> {
+        self.by_target[target.index()].map(|i| self.accels[i].as_ref())
+    }
+
+    /// O(1) lookup of the accelerator that owns `op` (None for host ops
+    /// and for targets with no registered model).
+    pub fn for_op(&self, op: &Op) -> Option<&dyn Accelerator> {
+        self.lookup(op.target())
+    }
+
+    /// Registry slot index for a target — used by precomputed dispatch
+    /// plans so the hot loop skips even the target match.
+    pub fn slot_for(&self, target: Target) -> Option<usize> {
+        self.by_target[target.index()]
+    }
+
+    /// Resolve a slot index obtained from [`Self::slot_for`].
+    pub fn by_slot(&self, slot: usize) -> &dyn Accelerator {
+        self.accels[slot].as_ref()
+    }
+
+    /// The registered models, in registration order.
+    pub fn accels(&self) -> &[Box<dyn Accelerator>] {
+        &self.accels
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.accels.len()
+    }
+
+    /// True when no model is registered.
+    pub fn is_empty(&self) -> bool {
+        self.accels.is_empty()
+    }
+
+    /// Targets with a registered model, in registration order.
+    pub fn targets(&self) -> Vec<Target> {
+        self.accels.iter().map(|a| a.target()).collect()
+    }
+}
+
+impl std::fmt::Debug for AcceleratorRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AcceleratorRegistry")
+            .field("targets", &self.targets())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn target_indexed_lookup() {
+        let reg = AcceleratorRegistry::for_rev(DesignRev::Updated);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.lookup(Target::FlexAsr).unwrap().name(), "FlexASR");
+        assert_eq!(reg.lookup(Target::Hlscnn).unwrap().name(), "HLSCNN");
+        assert_eq!(reg.lookup(Target::Vta).unwrap().name(), "VTA");
+        assert!(reg.lookup(Target::Host).is_none());
+    }
+
+    #[test]
+    fn for_op_dispatches_by_op_target() {
+        let reg = AcceleratorRegistry::for_rev(DesignRev::Original);
+        assert_eq!(reg.for_op(&Op::FlexLinear).unwrap().name(), "FlexASR");
+        assert_eq!(reg.for_op(&Op::VtaGemm).unwrap().name(), "VTA");
+        assert!(reg.for_op(&Op::Dense).is_none());
+    }
+
+    #[test]
+    fn first_registration_wins() {
+        let reg = AcceleratorRegistry::new(vec![
+            Box::new(FlexAsr::original()),
+            Box::new(FlexAsr::updated()),
+        ]);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.slot_for(Target::FlexAsr), Some(0));
+    }
+
+    #[test]
+    fn partial_registry_has_gaps() {
+        let reg = AcceleratorRegistry::new(vec![Box::new(Vta::new())]);
+        assert!(reg.lookup(Target::FlexAsr).is_none());
+        assert_eq!(reg.lookup(Target::Vta).unwrap().name(), "VTA");
+        assert_eq!(reg.targets(), vec![Target::Vta]);
+    }
+}

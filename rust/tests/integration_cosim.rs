@@ -1,16 +1,18 @@
-//! Integration: co-simulation pipeline over the trained cosim mirrors
-//! (requires `make artifacts`; tests are skipped when artifacts are
-//! absent so `cargo test` works on a fresh checkout).
+//! Integration: co-simulation pipeline over the trained cosim mirrors,
+//! driven through the session API (requires `make artifacts`; tests are
+//! skipped when artifacts are absent so `cargo test` works on a fresh
+//! checkout).
 
-use d2a::compiler::compile_app;
-use d2a::coordinator::{accelerators, classify_sweep, DesignRev};
-use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
-use d2a::rewrites::Matching;
 use d2a::runtime::ArtifactStore;
+use d2a::session::{DesignRev, SessionBuilder, SweepSpec};
 
 fn store() -> Option<ArtifactStore> {
     ArtifactStore::open(None).ok()
+}
+
+fn session(targets: &[Target], rev: DesignRev) -> d2a::session::Session {
+    SessionBuilder::new().targets(targets).design_rev(rev).build()
 }
 
 #[test]
@@ -20,19 +22,17 @@ fn resmlp_cosim_updated_close_to_reference() {
         return;
     };
     let app = d2a::apps::cosim_models::resmlp_lite();
-    let compiled =
-        compile_app(&app, &[Target::FlexAsr], Matching::Flexible, RunnerLimits::default());
-    assert_eq!(compiled.invocations(Target::FlexAsr), 8, "8 linear layers offload");
+    let sess = session(&[Target::FlexAsr], DesignRev::Updated);
+    let program = sess.compile(&app);
+    assert_eq!(program.invocations(Target::FlexAsr), 8, "8 linear layers offload");
     let weights = store.weights("resmlp").unwrap();
     let (images, labels) = store.test_images().unwrap();
-    let rep = classify_sweep(
-        &compiled.expr,
-        &weights,
-        &images[..120],
-        &labels[..120],
-        DesignRev::Updated,
-        1,
-    );
+    let rep = program.classify_sweep(&SweepSpec {
+        input_var: "x",
+        weights: &weights,
+        inputs: &images[..120],
+        labels: &labels[..120],
+    });
     assert!(rep.ref_accuracy() > 0.75, "reference degraded: {}", rep.ref_accuracy());
     assert!(
         (rep.ref_accuracy() - rep.acc_accuracy()).abs() < 0.1,
@@ -49,30 +49,23 @@ fn resnet_original_design_degrades_then_recovers() {
         return;
     };
     let app = d2a::apps::cosim_models::resnet20_lite();
-    let compiled = compile_app(
-        &app,
-        &[Target::FlexAsr, Target::Hlscnn],
-        Matching::Flexible,
-        RunnerLimits::default(),
-    );
     let weights = store.weights("resnet20").unwrap();
     let (images, labels) = store.test_images().unwrap();
-    let orig = classify_sweep(
-        &compiled.expr,
-        &weights,
-        &images[..120],
-        &labels[..120],
-        DesignRev::Original,
-        1,
-    );
-    let upd = classify_sweep(
-        &compiled.expr,
-        &weights,
-        &images[..120],
-        &labels[..120],
-        DesignRev::Updated,
-        1,
-    );
+    // compile once; only the accelerator numerics differ between revs
+    let compiled =
+        session(&[Target::FlexAsr, Target::Hlscnn], DesignRev::Updated).compile(&app);
+    let sweep = |rev: DesignRev| {
+        let sess = session(&[Target::FlexAsr, Target::Hlscnn], rev);
+        let program = sess.attach(compiled.expr().clone());
+        program.classify_sweep(&SweepSpec {
+            input_var: "x",
+            weights: &weights,
+            inputs: &images[..120],
+            labels: &labels[..120],
+        })
+    };
+    let orig = sweep(DesignRev::Original);
+    let upd = sweep(DesignRev::Updated);
     // the Table 4 phenomenon: original collapses, updated recovers
     assert!(
         orig.acc_accuracy() + 0.15 < orig.ref_accuracy(),
@@ -95,30 +88,19 @@ fn lstm_cosim_perplexity_orders() {
         return;
     };
     let app = d2a::apps::cosim_models::lstm_wlm_lite();
-    let compiled =
-        compile_app(&app, &[Target::FlexAsr], Matching::Flexible, RunnerLimits::default());
-    assert!(compiled.invocations(Target::FlexAsr) >= 2, "LSTM + decoder offload");
     let mut weights = store.weights("lstm").unwrap();
     let embed = weights.remove("embed").unwrap();
     let tokens = store.test_tokens().unwrap();
-    let orig = d2a::cosim::cosim_lm(
-        &compiled.expr,
-        &weights,
-        &embed,
-        &tokens,
-        30,
-        &accelerators(DesignRev::Original),
-    )
-    .unwrap();
-    let upd = d2a::cosim::cosim_lm(
-        &compiled.expr,
-        &weights,
-        &embed,
-        &tokens,
-        30,
-        &accelerators(DesignRev::Updated),
-    )
-    .unwrap();
+    // compile once; only the accelerator numerics differ between revs
+    let compiled = session(&[Target::FlexAsr], DesignRev::Updated).compile(&app);
+    assert!(compiled.invocations(Target::FlexAsr) >= 2, "LSTM + decoder offload");
+    let lm = |rev: DesignRev| {
+        let sess = session(&[Target::FlexAsr], rev);
+        let program = sess.attach(compiled.expr().clone());
+        program.lm_sweep(&weights, &embed, &tokens, 30).unwrap()
+    };
+    let orig = lm(DesignRev::Original);
+    let upd = lm(DesignRev::Updated);
     assert!(orig.ref_perplexity < 20.0, "reference LM must be good");
     assert!(
         orig.acc_perplexity > orig.ref_perplexity,

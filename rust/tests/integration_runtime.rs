@@ -1,9 +1,12 @@
 //! Integration: PJRT runtime + cross-language goldens (requires
-//! `make artifacts`; skipped otherwise).
+//! `make artifacts` and the `pjrt` feature; skipped otherwise).
 //!
 //! Proves the three-layer composition: JAX/Pallas artifacts execute from
 //! Rust via the PJRT CPU client, and the Rust IR mirrors reproduce the
-//! JAX models' forward passes bit-closely.
+//! JAX models' forward passes bit-closely. The mirror-only checks (no
+//! PJRT needed) live in `integration_mirrors.rs`.
+
+#![cfg(feature = "pjrt")]
 
 use d2a::ir::interp;
 use d2a::runtime::{pjrt::PjrtInput, ArtifactStore, PjrtRunner};
@@ -34,66 +37,7 @@ fn pallas_kernel_artifact_matches_golden() {
             &[8, 16],
         )
         .unwrap();
-    assert!(got.max_abs_diff(&want) < 1e-5, "diff {}", got.max_abs_diff(&want));
-}
-
-/// The Rust IR mirror of each classifier reproduces the JAX forward pass
-/// on the golden inputs (the Layer-2/Layer-3 contract).
-#[test]
-fn rust_mirrors_match_jax_goldens() {
-    let Some(store) = store() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
-    let (images, _) = store.test_images().unwrap();
-    for (app, model) in [
-        (d2a::apps::cosim_models::resmlp_lite(), "resmlp"),
-        (d2a::apps::cosim_models::resnet20_lite(), "resnet20"),
-        (d2a::apps::cosim_models::mobilenet_lite(), "mobilenet"),
-    ] {
-        let weights = store.weights(model).unwrap();
-        let golden = store.golden(model, &[8, 4]).unwrap();
-        let mut env = weights.clone();
-        for i in 0..8 {
-            env.insert("x".to_string(), images[i].clone());
-            let out = interp::eval(&app.expr, &env).unwrap();
-            for j in 0..4 {
-                let diff = (out.data[j] - golden.data[i * 4 + j]).abs();
-                assert!(
-                    diff < 2e-3,
-                    "{model} golden mismatch at image {i} logit {j}: {diff}"
-                );
-            }
-        }
-    }
-}
-
-/// The LSTM mirror matches the JAX scan implementation.
-#[test]
-fn lstm_mirror_matches_jax_golden() {
-    let Some(store) = store() else {
-        eprintln!("skipping: artifacts not built");
-        return;
-    };
-    let app = d2a::apps::cosim_models::lstm_wlm_lite();
-    let mut weights = store.weights("lstm").unwrap();
-    let embed = weights.remove("embed").unwrap();
-    let tokens = store.test_tokens().unwrap();
-    let golden = store.golden("lstm", &[16, 64]).unwrap();
-    let e = embed.shape[1];
-    let mut x = vec![0.0f32; 16 * e];
-    for (t, &tok) in tokens[..16].iter().enumerate() {
-        x[t * e..(t + 1) * e].copy_from_slice(&embed.data[tok * e..(tok + 1) * e]);
-    }
-    let mut env = weights.clone();
-    env.insert("x_seq".to_string(), Tensor::new(vec![16, 1, e], x));
-    let out = interp::eval(&app.expr, &env).unwrap();
-    assert_eq!(out.shape, vec![16, 64]);
-    assert!(
-        out.max_abs_diff(&golden) < 2e-3,
-        "lstm golden mismatch: {}",
-        out.max_abs_diff(&golden)
-    );
+    assert!(got.max_abs_diff(&want) < 1e-5, "kernel artifact mismatch");
 }
 
 /// The AOT-lowered ResMLP forward pass runs via PJRT and agrees with the

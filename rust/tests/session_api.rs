@@ -1,0 +1,231 @@
+//! Integration tests for the unified session API: registry
+//! lookup/ownership, batch determinism across worker counts and design
+//! revisions, and compile-handle reuse. These run on synthetic programs
+//! and need no trained artifacts.
+
+use d2a::ir::{GraphBuilder, Op, RecExpr, Target};
+use d2a::session::{
+    AcceleratorRegistry, Bindings, DesignRev, Session, SessionBuilder, SweepSpec,
+};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn toy_classifier() -> (RecExpr, HashMap<String, Vec<usize>>) {
+    let mut g = GraphBuilder::new();
+    let x = g.var("pixels");
+    let w = g.weight("w");
+    let b = g.weight("b");
+    let lin = g.linear(x, w, b);
+    g.relu(lin);
+    let shapes: HashMap<String, Vec<usize>> = [
+        ("pixels".to_string(), vec![1usize, 8]),
+        ("w".to_string(), vec![4, 8]),
+        ("b".to_string(), vec![4]),
+    ]
+    .into_iter()
+    .collect();
+    (g.finish(), shapes)
+}
+
+fn toy_dataset(seed: u64) -> (HashMap<String, Tensor>, Vec<Tensor>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let weights: HashMap<String, Tensor> = [
+        ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.5)),
+        ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+    ]
+    .into_iter()
+    .collect();
+    let images: Vec<Tensor> =
+        (0..23).map(|_| Tensor::randn(&[1, 8], &mut rng, 1.0)).collect();
+    let labels: Vec<usize> = (0..23).map(|_| rng.below(4)).collect();
+    (weights, images, labels)
+}
+
+// ---- registry lookup / ownership -----------------------------------
+
+#[test]
+fn registry_covers_all_accelerator_targets() {
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let reg = AcceleratorRegistry::for_rev(rev);
+        assert_eq!(reg.len(), 3);
+        for (t, name) in [
+            (Target::FlexAsr, "FlexASR"),
+            (Target::Hlscnn, "HLSCNN"),
+            (Target::Vta, "VTA"),
+        ] {
+            assert_eq!(reg.lookup(t).unwrap().name(), name, "{rev:?}");
+        }
+        assert!(reg.lookup(Target::Host).is_none());
+    }
+}
+
+#[test]
+fn registry_dispatches_ops_to_owners() {
+    let reg = AcceleratorRegistry::for_rev(DesignRev::Updated);
+    assert_eq!(reg.for_op(&Op::FlexLinear).unwrap().target(), Target::FlexAsr);
+    assert_eq!(reg.for_op(&Op::FlexLstm { steps: 3 }).unwrap().target(), Target::FlexAsr);
+    assert_eq!(
+        reg.for_op(&Op::HlscnnConv2d { stride: (1, 1), pad: (0, 0) })
+            .unwrap()
+            .target(),
+        Target::Hlscnn
+    );
+    assert_eq!(reg.for_op(&Op::VtaAdd).unwrap().target(), Target::Vta);
+    assert!(reg.for_op(&Op::Dense).is_none(), "host ops have no owner");
+    assert!(reg.for_op(&Op::Var("x".into())).is_none());
+}
+
+#[test]
+fn session_shares_one_registry_across_handles() {
+    let (expr, shapes) = toy_classifier();
+    let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    let p1 = session.compile_expr(&expr, &shapes);
+    let p2 = session.compile_expr(&expr, &shapes);
+    let p3 = session.attach(p1.expr().clone());
+    assert!(Arc::ptr_eq(p1.registry(), session.registry()));
+    assert!(Arc::ptr_eq(p1.registry(), p2.registry()));
+    assert!(Arc::ptr_eq(p1.registry(), p3.registry()));
+    // handles stay valid after the session is dropped (shared ownership)
+    drop(session);
+    let mut rng = Rng::new(11);
+    let b = Bindings::new()
+        .with("pixels", Tensor::randn(&[1, 8], &mut rng, 1.0))
+        .with("w", Tensor::randn(&[4, 8], &mut rng, 0.5))
+        .with("b", Tensor::randn(&[4], &mut rng, 0.1));
+    assert!(p1.run(&b).is_ok());
+}
+
+// ---- batch determinism across worker counts and revisions -----------
+
+#[test]
+fn classify_sweep_deterministic_across_worker_counts_and_revs() {
+    let (expr, shapes) = toy_classifier();
+    let (weights, images, labels) = toy_dataset(5);
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let mut reports = Vec::new();
+        for workers in [1usize, 4, 9] {
+            let session = SessionBuilder::new()
+                .targets(&[Target::FlexAsr])
+                .design_rev(rev)
+                .workers(workers)
+                .build();
+            let program = session.compile_expr(&expr, &shapes);
+            assert_eq!(program.invocations(Target::FlexAsr), 1);
+            let rep = program.classify_sweep(&SweepSpec {
+                input_var: "pixels",
+                weights: &weights,
+                inputs: &images,
+                labels: &labels,
+            });
+            assert_eq!(rep.n, 23, "sharding must cover every input once");
+            assert_eq!(rep.workers, workers);
+            reports.push(rep);
+        }
+        for rep in &reports[1..] {
+            assert_eq!(rep.ref_correct, reports[0].ref_correct, "{rev:?}");
+            assert_eq!(rep.acc_correct, reports[0].acc_correct, "{rev:?}");
+        }
+    }
+}
+
+#[test]
+fn run_batch_outputs_identical_across_worker_counts() {
+    let (expr, shapes) = toy_classifier();
+    let (weights, images, _) = toy_dataset(6);
+    let batch: Vec<Bindings> = images
+        .iter()
+        .map(|img| {
+            let mut b = Bindings::from_env(weights.clone());
+            b.set("pixels", img.clone());
+            b
+        })
+        .collect();
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let mut outputs: Vec<Vec<Tensor>> = Vec::new();
+        for workers in [1usize, 4, 9] {
+            let session = SessionBuilder::new()
+                .targets(&[Target::FlexAsr])
+                .design_rev(rev)
+                .workers(workers)
+                .build();
+            let program = session.compile_expr(&expr, &shapes);
+            let out: Vec<Tensor> = program
+                .run_batch(&batch)
+                .into_iter()
+                .map(|r| r.expect("toy program evaluates"))
+                .collect();
+            assert_eq!(out.len(), batch.len(), "order-preserving, one per input");
+            outputs.push(out);
+        }
+        assert_eq!(outputs[0], outputs[1], "{rev:?}: 1 vs 4 workers");
+        assert_eq!(outputs[0], outputs[2], "{rev:?}: 1 vs 9 workers");
+    }
+}
+
+#[test]
+fn design_revisions_actually_differ() {
+    // same program + data, different revision registries: the original
+    // FlexASR AdaptivFloat config must change at least one output
+    let (expr, shapes) = toy_classifier();
+    let (weights, images, _) = toy_dataset(7);
+    let mut b = Bindings::from_env(weights);
+    b.set("pixels", images[0].clone());
+    let run = |rev: DesignRev| {
+        let session = SessionBuilder::new()
+            .targets(&[Target::FlexAsr])
+            .design_rev(rev)
+            .build();
+        session.compile_expr(&expr, &shapes).run(&b).unwrap()
+    };
+    let orig = run(DesignRev::Original);
+    let upd = run(DesignRev::Updated);
+    assert_ne!(orig, upd, "original vs updated numerics must diverge");
+}
+
+// ---- compile-handle reuse -------------------------------------------
+
+#[test]
+fn one_handle_serves_many_batches() {
+    let (expr, shapes) = toy_classifier();
+    let (weights, images, labels) = toy_dataset(8);
+    let session = SessionBuilder::new()
+        .targets(&[Target::FlexAsr])
+        .workers(4)
+        .build();
+    let program = session.compile_expr(&expr, &shapes);
+    let spec = SweepSpec {
+        input_var: "pixels",
+        weights: &weights,
+        inputs: &images,
+        labels: &labels,
+    };
+    let first = program.classify_sweep(&spec);
+    let second = program.classify_sweep(&spec);
+    assert_eq!(first.n, second.n);
+    assert_eq!(first.ref_correct, second.ref_correct);
+    assert_eq!(first.acc_correct, second.acc_correct);
+
+    // and the same handle answers single runs and cosim consistently
+    let mut b = Bindings::from_env(weights.clone());
+    b.set("pixels", images[0].clone());
+    let out1 = program.run(&b).unwrap();
+    let out2 = program.run(&b).unwrap();
+    assert_eq!(out1, out2);
+    let rep = program.cosim(&b).unwrap();
+    assert_eq!(rep.accelerated, out1);
+    assert_eq!(rep.invocations, program.plan().offloaded());
+}
+
+#[test]
+fn compiled_handle_exposes_compile_stats() {
+    let (expr, shapes) = toy_classifier();
+    let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    let program = session.compile_expr(&expr, &shapes);
+    let stats = program.stats().expect("compiled handles carry stats");
+    assert!(stats.classes > 0);
+    assert!(stats.nodes > 0);
+    let attached = session.attach(program.expr().clone());
+    assert!(attached.stats().is_none(), "attached handles skip saturation");
+}
