@@ -1,0 +1,76 @@
+//! Bench smoke binary for the e-matching hot path: saturates every seed
+//! (Table 1) application under both matching modes and emits a
+//! `BENCH_matching.json` trajectory point — saturation iterations,
+//! e-graph size, probed candidate classes, matches, and wall time — so
+//! the perf trend is tracked from PR 2 onward.
+//!
+//! Output path defaults to `BENCH_matching.json` in the working
+//! directory; override with `D2A_BENCH_OUT`. The JSON is a flat array of
+//! per-(app, mode) records, serialized by hand (the offline crate set
+//! has no serde).
+
+use d2a::apps::table1::all_apps;
+use d2a::compiler::compile_app;
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use std::time::Duration;
+
+fn limits() -> RunnerLimits {
+    RunnerLimits {
+        max_iters: 8,
+        max_nodes: 150_000,
+        time_limit: Duration::from_secs(30),
+    }
+}
+
+fn main() -> std::io::Result<()> {
+    let targets = [Target::FlexAsr, Target::Hlscnn, Target::Vta];
+    let mut records = Vec::new();
+    println!("=== bench_matching: saturation smoke (indexed matcher) ===");
+    println!(
+        "{:<14} {:<8} {:>6} {:>8} {:>8} {:>11} {:>9} {:>9}",
+        "application", "mode", "iters", "classes", "nodes", "candidates", "matches", "ms"
+    );
+    for app in all_apps() {
+        for mode in [Matching::Exact, Matching::Flexible] {
+            let res = compile_app(&app, &targets, mode, limits());
+            let ms = res.elapsed.as_secs_f64() * 1e3;
+            println!(
+                "{:<14} {:<8} {:>6} {:>8} {:>8} {:>11} {:>9} {:>9.1}",
+                app.name,
+                mode.to_string(),
+                res.iterations.len(),
+                res.classes,
+                res.nodes,
+                res.candidate_classes(),
+                res.total_matches(),
+                ms
+            );
+            records.push(format!(
+                "  {{\"app\": \"{}\", \"mode\": \"{}\", \"stop\": \"{:?}\", \
+                 \"iters\": {}, \"classes\": {}, \"nodes\": {}, \
+                 \"candidates\": {}, \"matches\": {}, \"wall_ms\": {:.3}, \
+                 \"invocations\": {{\"flexasr\": {}, \"hlscnn\": {}, \"vta\": {}}}}}",
+                app.name,
+                mode,
+                res.stop,
+                res.iterations.len(),
+                res.classes,
+                res.nodes,
+                res.candidate_classes(),
+                res.total_matches(),
+                ms,
+                res.invocations(Target::FlexAsr),
+                res.invocations(Target::Hlscnn),
+                res.invocations(Target::Vta),
+            ));
+        }
+    }
+    let out = std::env::var("D2A_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_matching.json".to_string());
+    let json = format!("[\n{}\n]\n", records.join(",\n"));
+    std::fs::write(&out, json)?;
+    println!("wrote {out}");
+    Ok(())
+}

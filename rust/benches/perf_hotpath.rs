@@ -4,12 +4,16 @@
 //! Hot paths, in co-sim/table-bench weight order:
 //!  1. `tensor::ops::conv2d`   — dominates ResNet/MobileNet co-sim;
 //!  2. `tensor::ops::dense`    — dominates ResMLP co-sim + im2col GEMMs;
-//!  3. e-graph saturation      — dominates Table 1;
+//!  3. e-graph saturation      — dominates Table 1; measured both ways:
+//!     op-indexed + backoff vs the full-scan reference, with the probed
+//!     candidate-class counters from `IterStats`;
 //!  4. SAT propagation         — dominates Table 3 (BMC);
 //!  5. FlexASR ILA fast path   — the per-invocation co-sim cost;
 //!  6. accelerator dispatch    — registry O(1) lookup vs the seed-era
 //!     linear scan, and the plan-driven session run vs the hook path.
 
+use d2a::egraph::{EGraph, Runner, RunnerLimits};
+use d2a::rewrites::{rules_for, Matching};
 use d2a::session::{AcceleratorRegistry, Bindings, DesignRev, Session};
 use d2a::tensor::{ops, Tensor};
 use d2a::util::Rng;
@@ -58,6 +62,8 @@ fn main() {
         );
     });
 
+    matching_benches();
+
     time("BMC miter 4x16 (CDCL)", 3, || {
         let _ = d2a::verify::verify_bmc(4, 16, std::time::Duration::from_secs(120));
     });
@@ -71,6 +77,55 @@ fn main() {
     });
 
     dispatch_benches(&mut rng);
+}
+
+/// E-matching: op-indexed search + backoff scheduling vs the full-scan
+/// reference, on the largest Table 1 app (Transformer). The indexed path
+/// must probe strictly fewer root-candidate classes for the same final
+/// e-graph (extraction parity is asserted by `tests/prop_invariants.rs`).
+fn matching_benches() {
+    use d2a::ir::Target;
+    let limits = RunnerLimits {
+        max_iters: 6,
+        max_nodes: 150_000,
+        time_limit: std::time::Duration::from_secs(30),
+    };
+    let targets = [Target::FlexAsr, Target::Hlscnn, Target::Vta];
+    let rules = rules_for(&targets, Matching::Flexible);
+    let app = d2a::apps::table1::transformer();
+    let saturate = |mut runner: Runner| -> Runner {
+        let mut eg = EGraph::new(app.shapes.clone());
+        eg.add_expr(&app.expr);
+        runner.run(&mut eg, &rules);
+        runner
+    };
+    let mut probed = [0usize; 2];
+    let t0 = Instant::now();
+    let indexed = saturate(Runner::new(limits.clone()));
+    let t_indexed = t0.elapsed();
+    let t1 = Instant::now();
+    let full = saturate(Runner::reference(limits));
+    let t_full = t1.elapsed();
+    probed[0] = indexed.total_candidates();
+    probed[1] = full.total_candidates();
+    println!(
+        "saturate Transformer, op-indexed + backoff        {:>10.3} ms  \
+         ({} candidates)",
+        t_indexed.as_secs_f64() * 1e3,
+        probed[0]
+    );
+    println!(
+        "saturate Transformer, full-scan reference         {:>10.3} ms  \
+         ({} candidates)",
+        t_full.as_secs_f64() * 1e3,
+        probed[1]
+    );
+    assert!(
+        probed[0] < probed[1],
+        "indexed matching must do strictly less work: {} vs {}",
+        probed[0],
+        probed[1]
+    );
 }
 
 /// Per-node accelerator dispatch: the co-sim hot loop resolves an

@@ -107,7 +107,9 @@ fn main() -> anyhow::Result<()> {
             format!("{:.2}%", orig.ref_accuracy() * 100.0),
             format!("{:.2}%", orig.acc_accuracy() * 100.0),
             format!("{:.2}%", upd.acc_accuracy() * 100.0),
-            format!("{:.1?}", upd.time_per_point()),
+            // per-point *sim* time (aggregate worker busy time / n), not
+            // wall/n which shrinks with the worker count
+            format!("{:.1?}", upd.sim_time_per_point()),
             PAPER[paper_idx].2,
             PAPER[paper_idx].3,
             PAPER[paper_idx].4

@@ -6,7 +6,9 @@
 //! [`crate::session::CompiledProgram`] handle with a precomputed
 //! accelerator dispatch plan.
 
-use crate::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits, StopReason};
+use crate::egraph::{
+    AccelCost, EGraph, Extractor, IterStats, Runner, RunnerLimits, StopReason,
+};
 use crate::ir::shape::Shape;
 use crate::ir::{RecExpr, Target};
 use crate::rewrites::{rules_for, Matching};
@@ -25,12 +27,25 @@ pub struct CompileResult {
     pub nodes: usize,
     /// wall-clock of saturation + extraction.
     pub elapsed: Duration,
+    /// Per-iteration saturation statistics (candidate-class counts,
+    /// matches, unions) — the op-index effectiveness trail.
+    pub iterations: Vec<IterStats>,
 }
 
 impl CompileResult {
     /// Static accelerator invocations per target — the Table 1 metric.
     pub fn invocations(&self, t: Target) -> usize {
         self.expr.invocations(t)
+    }
+
+    /// Total root-candidate classes probed during saturation.
+    pub fn candidate_classes(&self) -> usize {
+        self.iterations.iter().map(|i| i.candidates).sum()
+    }
+
+    /// Total e-matches found during saturation.
+    pub fn total_matches(&self) -> usize {
+        self.iterations.iter().map(|i| i.matches).sum()
     }
 }
 
@@ -85,6 +100,7 @@ pub fn compile_with_extra(
         classes: eg.num_classes(),
         nodes: eg.num_nodes(),
         elapsed: start.elapsed(),
+        iterations: runner.iterations,
     }
 }
 

@@ -77,8 +77,32 @@ pub fn run_accelerated(
     Ok((out, hook.invocations))
 }
 
+/// Parameters of a language-model co-simulation sweep. The seed
+/// hardcoded the input variable (`"x_seq"`) and the window length (16) —
+/// the same hardcoding PR 1 removed from classification sweeps via
+/// [`crate::session::SweepSpec`].
+#[derive(Debug, Clone)]
+pub struct LmSpec<'a> {
+    /// Name of the per-window input variable the program reads.
+    pub input_var: &'a str,
+    /// Tokens per evaluation window (each window consumes `seq_len + 1`
+    /// tokens: `seq_len` inputs plus the shifted targets).
+    pub seq_len: usize,
+    /// Record per-invocation relative errors (the §4.4.2 debugging
+    /// statistics; costs an extra f32 evaluation per invocation).
+    pub track_errors: bool,
+}
+
+impl Default for LmSpec<'_> {
+    fn default() -> Self {
+        LmSpec { input_var: "x_seq", seq_len: 16, track_errors: false }
+    }
+}
+
 /// Language-model co-simulation: per-token perplexity over `n_sentences`
-/// consecutive (SEQ_LEN+1)-token windows, reference vs accelerated.
+/// consecutive (seq_len+1)-token windows, reference vs accelerated, with
+/// the default [`LmSpec`] (input `"x_seq"`, 16-token windows, no error
+/// tracking). Kept for the seed callers; prefer [`cosim_lm_spec`].
 pub fn cosim_lm(
     expr: &RecExpr,
     weights: &HashMap<String, Tensor>,
@@ -87,23 +111,82 @@ pub fn cosim_lm(
     n_sentences: usize,
     registry: &AcceleratorRegistry,
 ) -> Result<LmReport, EvalError> {
-    let seq_len = 16usize;
-    let e = embed.shape[1];
+    cosim_lm_spec(expr, &LmSpec::default(), weights, embed, tokens, n_sentences, registry)
+}
+
+/// Language-model co-simulation under an explicit [`LmSpec`].
+///
+/// Malformed inputs (short token streams, out-of-vocabulary token ids,
+/// non-matrix embedding tables) return [`EvalError::Input`] instead of
+/// slice-panicking, and per-invocation error statistics are collected
+/// when `spec.track_errors` is set instead of being silently dropped.
+pub fn cosim_lm_spec(
+    expr: &RecExpr,
+    spec: &LmSpec<'_>,
+    weights: &HashMap<String, Tensor>,
+    embed: &Tensor,
+    tokens: &[usize],
+    n_sentences: usize,
+    registry: &AcceleratorRegistry,
+) -> Result<LmReport, EvalError> {
+    let seq_len = spec.seq_len;
+    if seq_len == 0 {
+        return Err(EvalError::Input("LmSpec::seq_len must be >= 1".into()));
+    }
+    if embed.shape.len() != 2 {
+        return Err(EvalError::Input(format!(
+            "embedding table must be [vocab, dim], got {:?}",
+            embed.shape
+        )));
+    }
+    let needed = n_sentences * (seq_len + 1);
+    if tokens.len() < needed {
+        return Err(EvalError::Input(format!(
+            "LM sweep needs {needed} tokens ({n_sentences} windows x {} tokens), got {}",
+            seq_len + 1,
+            tokens.len()
+        )));
+    }
+    let (vocab, e) = (embed.shape[0], embed.shape[1]);
     let mut env = weights.clone();
+    let mut hook = AccelHook::new(registry);
+    hook.track_errors = spec.track_errors;
     let mut nll_ref = 0.0f64;
     let mut nll_acc = 0.0f64;
     let mut count = 0usize;
     for s in 0..n_sentences {
         let w = &tokens[s * (seq_len + 1)..(s + 1) * (seq_len + 1)];
+        if let Some(&bad) = w.iter().find(|&&tok| tok >= vocab) {
+            return Err(EvalError::Input(format!(
+                "token id {bad} out of vocabulary (size {vocab})"
+            )));
+        }
         // embedding lookup on the host (as in the paper's runtime)
         let mut x = vec![0.0f32; seq_len * e];
         for (t, &tok) in w[..seq_len].iter().enumerate() {
             x[t * e..(t + 1) * e]
                 .copy_from_slice(&embed.data[tok * e..(tok + 1) * e]);
         }
-        env.insert("x_seq".to_string(), Tensor::new(vec![seq_len, 1, e], x));
+        env.insert(
+            spec.input_var.to_string(),
+            Tensor::new(vec![seq_len, 1, e], x),
+        );
         let logits_ref = crate::ir::interp::eval(expr, &env)?;
-        let (logits_acc, _) = run_accelerated(expr, &env, registry)?;
+        let logits_acc = eval_with_hook(expr, &env, &mut hook)?;
+        // targets index the *logits* rows/columns, whose geometry need
+        // not match the embedding table — validate before indexing
+        let width = *logits_ref.shape.last().unwrap_or(&0);
+        if logits_ref.data.len() < seq_len * width.max(1) {
+            return Err(EvalError::Input(format!(
+                "program produced logits {:?}, need {seq_len} rows",
+                logits_ref.shape
+            )));
+        }
+        if let Some(&bad) = w[1..].iter().find(|&&tok| tok >= width) {
+            return Err(EvalError::Input(format!(
+                "target token {bad} out of logits width {width}"
+            )));
+        }
         for t in 0..seq_len {
             let target = w[t + 1];
             nll_ref += -log_softmax_at(&logits_ref, t, target) as f64;
@@ -113,8 +196,10 @@ pub fn cosim_lm(
     }
     Ok(LmReport {
         sentences: n_sentences,
-        ref_perplexity: (nll_ref / count as f64).exp() as f32,
-        acc_perplexity: (nll_acc / count as f64).exp() as f32,
+        ref_perplexity: (nll_ref / count.max(1) as f64).exp() as f32,
+        acc_perplexity: (nll_acc / count.max(1) as f64).exp() as f32,
+        invocations: hook.invocations,
+        inv_errors: hook.inv_errors,
     })
 }
 
@@ -124,6 +209,11 @@ pub struct LmReport {
     pub sentences: usize,
     pub ref_perplexity: f32,
     pub acc_perplexity: f32,
+    /// Accelerator invocations executed across the whole sweep.
+    pub invocations: usize,
+    /// Per-invocation relative errors (empty unless
+    /// [`LmSpec::track_errors`] was set).
+    pub inv_errors: Vec<f32>,
 }
 
 fn log_softmax_at(logits: &Tensor, row: usize, idx: usize) -> f32 {
@@ -203,5 +293,75 @@ mod tests {
         let t = Tensor::new(vec![1, 3], vec![0.0, 0.0, 0.0]);
         let l = log_softmax_at(&t, 0, 1);
         assert!((l - (1.0f32 / 3.0).ln()).abs() < 1e-5);
+    }
+
+    /// A tiny LM program: x_seq-style input through one FlexLinear layer.
+    fn tiny_lm(
+        input_var: &str,
+        seq_len: usize,
+        e: usize,
+        v: usize,
+    ) -> (crate::ir::RecExpr, HashMap<String, Tensor>, Tensor) {
+        let mut g = GraphBuilder::new();
+        let x = g.var(input_var);
+        let flat = g.reshape(x, &[seq_len, e]);
+        let w = g.weight("w");
+        let b = g.weight("b");
+        g.expr.add(Op::FlexLinear, vec![flat, w, b]);
+        let mut rng = Rng::new(12);
+        let weights: HashMap<String, Tensor> = [
+            ("w".to_string(), Tensor::randn(&[v, e], &mut rng, 0.3)),
+            ("b".to_string(), Tensor::randn(&[v], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let embed = Tensor::randn(&[v, e], &mut rng, 1.0);
+        (g.finish(), weights, embed)
+    }
+
+    #[test]
+    fn lm_spec_short_token_stream_errors_instead_of_panicking() {
+        let (expr, weights, embed) = tiny_lm("x_seq", 4, 8, 16);
+        let spec = LmSpec { input_var: "x_seq", seq_len: 4, track_errors: false };
+        let tokens: Vec<usize> = (0..7).map(|i| i % 16).collect(); // needs 2*5=10
+        let err = cosim_lm_spec(&expr, &spec, &weights, &embed, &tokens, 2, &registry())
+            .unwrap_err();
+        assert!(matches!(err, EvalError::Input(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn lm_spec_out_of_vocab_token_errors() {
+        let (expr, weights, embed) = tiny_lm("x_seq", 4, 8, 16);
+        let spec = LmSpec { input_var: "x_seq", seq_len: 4, track_errors: false };
+        let tokens = vec![0, 1, 99, 2, 3]; // 99 >= vocab 16
+        let err = cosim_lm_spec(&expr, &spec, &weights, &embed, &tokens, 1, &registry())
+            .unwrap_err();
+        assert!(matches!(err, EvalError::Input(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn lm_spec_custom_input_var_and_error_tracking() {
+        let (seq_len, e, v) = (4usize, 8usize, 16usize);
+        let (expr, weights, embed) = tiny_lm("tokens_embedded", seq_len, e, v);
+        let spec = LmSpec {
+            input_var: "tokens_embedded",
+            seq_len,
+            track_errors: true,
+        };
+        let tokens: Vec<usize> = (0..2 * (seq_len + 1)).map(|i| i % v).collect();
+        let rep =
+            cosim_lm_spec(&expr, &spec, &weights, &embed, &tokens, 2, &registry())
+                .unwrap();
+        assert_eq!(rep.sentences, 2);
+        assert_eq!(rep.invocations, 2, "one FlexLinear per window");
+        assert_eq!(rep.inv_errors.len(), 2, "track_errors threads through");
+        assert!(rep.ref_perplexity.is_finite() && rep.acc_perplexity.is_finite());
+        // without tracking, the stats stay empty but perplexities agree
+        let plain = LmSpec { track_errors: false, ..spec };
+        let rep2 =
+            cosim_lm_spec(&expr, &plain, &weights, &embed, &tokens, 2, &registry())
+                .unwrap();
+        assert!(rep2.inv_errors.is_empty());
+        assert_eq!(rep.acc_perplexity, rep2.acc_perplexity);
     }
 }

@@ -9,6 +9,22 @@
 //! Each e-class carries a *shape analysis* value (egg's "analysis"
 //! mechanism): the inferred tensor shape, which shape-dependent dynamic
 //! rewrites (dense+zero-add, im2col) consult.
+//!
+//! # The op-head index
+//!
+//! E-matching cost is dominated by the root probe: naively, every rule
+//! scans every e-class on every iteration. The e-graph therefore keeps an
+//! *op-head index* — operator family ([`OpFamily`], the enum discriminant
+//! of [`Op`], so all `Conv2d` parameterizations share one family) →
+//! the set of canonical classes containing at least one e-node of that
+//! family. [`Pattern::search`](pattern::Pattern::search) seeds matching
+//! from the index entry of the pattern root's family, turning the
+//! per-iteration search from O(rules × classes) into
+//! O(rules × candidate classes). The index is maintained through
+//! [`EGraph::add`], [`EGraph::union`], and [`EGraph::rebuild`]; families
+//! only ever accumulate per class (class node sets never shrink), so the
+//! index is always exact: a class is indexed under a family iff one of
+//! its nodes belongs to it.
 
 pub mod extract;
 pub mod pattern;
@@ -17,14 +33,25 @@ pub mod runner;
 pub mod unionfind;
 
 pub use extract::{AccelCost, CostFn, Extractor};
-pub use pattern::{Pattern, Subst};
+pub use pattern::{Pattern, SearchStrategy, Subst};
 pub use rewrite::{Applier, Rewrite};
-pub use runner::{Runner, RunnerLimits, StopReason};
+pub use runner::{BackoffScheduler, IterStats, Runner, RunnerLimits, StopReason};
 
 use crate::ir::shape::{infer_op, Shape};
 use crate::ir::{Id, Node, Op, RecExpr};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use unionfind::UnionFind;
+
+/// Operator family key: the enum discriminant of [`Op`], so every
+/// parameterization of an operator (`Conv2d` with any stride/pad/groups,
+/// `Reshape` to any shape, …) maps to one family. This is the key of the
+/// e-graph's op-head index.
+pub type OpFamily = std::mem::Discriminant<Op>;
+
+/// The op family of an operator (see [`OpFamily`]).
+pub fn op_family(op: &Op) -> OpFamily {
+    std::mem::discriminant(op)
+}
 
 /// One equivalence class of e-nodes.
 #[derive(Debug, Clone, Default)]
@@ -45,7 +72,11 @@ pub struct EGraph {
     pub classes: HashMap<Id, EClass>,
     /// canonicalized node -> class id (the hashcons).
     memo: HashMap<Node, Id>,
-    /// classes touched by unions since the last rebuild.
+    /// op family -> canonical classes containing a node of that family
+    /// (the op-head index seeding e-matching).
+    op_index: HashMap<OpFamily, HashSet<Id>>,
+    /// classes touched by unions since the last rebuild (deduped when the
+    /// worklist is drained).
     dirty: Vec<Id>,
     /// shapes of `Var`/`Weight` leaves for the shape analysis.
     pub shape_env: HashMap<String, Shape>,
@@ -60,6 +91,7 @@ impl EGraph {
             uf: UnionFind::new(),
             classes: HashMap::new(),
             memo: HashMap::new(),
+            op_index: HashMap::new(),
             dirty: Vec::new(),
             shape_env,
             nodes_added: 0,
@@ -105,6 +137,7 @@ impl EGraph {
         let class = EClass { nodes: vec![node.clone()], parents: Vec::new(), shape };
         self.classes.insert(id, class);
         self.memo.insert(node.clone(), id);
+        self.op_index.entry(op_family(&node.op)).or_default().insert(id);
         for &c in &node.children {
             let cc = self.uf.find(c);
             self.classes.get_mut(&cc).unwrap().parents.push((node.clone(), id));
@@ -133,6 +166,14 @@ impl EGraph {
         }
         let (winner, loser) = self.uf.union(ra, rb);
         let lost = self.classes.remove(&loser).expect("loser class must exist");
+        // migrate the loser's op-index memberships to the winner so the
+        // index stays canonical without a rebuild
+        for node in &lost.nodes {
+            if let Some(set) = self.op_index.get_mut(&op_family(&node.op)) {
+                set.remove(&loser);
+                set.insert(winner);
+            }
+        }
         let win = self.classes.get_mut(&winner).expect("winner class must exist");
         win.nodes.extend(lost.nodes);
         win.parents.extend(lost.parents);
@@ -150,46 +191,63 @@ impl EGraph {
     }
 
     /// Restore the congruence invariant after unions (egg's `rebuild`).
+    ///
+    /// The dirty worklist is drained in deduplicated batches: a class
+    /// unioned many times between rebuilds is repaired once per batch
+    /// instead of once per union.
     pub fn rebuild(&mut self) {
-        while let Some(id) = self.dirty.pop() {
-            let id = self.uf.find(id);
-            let parents = match self.classes.get_mut(&id) {
-                Some(c) => std::mem::take(&mut c.parents),
-                None => continue,
-            };
-            let mut new_parents: Vec<(Node, Id)> = Vec::with_capacity(parents.len());
-            for (pnode, pclass) in parents {
-                let canon = self.canonicalize(&pnode);
-                self.memo.remove(&pnode);
-                let pclass = self.uf.find(pclass);
-                if let Some(&existing) = self.memo.get(&canon) {
-                    // congruence: two parents became identical -> union
-                    let (_, changed) = self.union(existing, pclass);
-                    if changed {
-                        // the union pushed onto dirty; continue
-                    }
-                } else {
-                    self.memo.insert(canon.clone(), pclass);
-                }
-                new_parents.push((canon, self.uf.find(pclass)));
+        while !self.dirty.is_empty() {
+            let mut todo = std::mem::take(&mut self.dirty);
+            for id in &mut todo {
+                *id = self.uf.find(*id);
             }
-            let id = self.uf.find(id);
-            if let Some(c) = self.classes.get_mut(&id) {
-                c.parents.extend(new_parents);
-                // canonicalize and dedup the class's own nodes
-                let mut nodes = std::mem::take(&mut c.nodes);
-                for n in &mut nodes {
-                    for ch in &mut n.children {
-                        *ch = self.uf.find_imm(*ch);
-                    }
-                }
-                nodes.sort_unstable();
-                nodes.dedup();
-                self.classes.get_mut(&id).unwrap().nodes = nodes;
+            todo.sort_unstable();
+            todo.dedup();
+            for id in todo {
+                self.repair(id);
             }
         }
         // refresh shapes where newly computable
         self.propagate_shapes();
+    }
+
+    /// Repair congruence around one dirty class (a step of `rebuild`).
+    fn repair(&mut self, id: Id) {
+        let id = self.uf.find(id);
+        let parents = match self.classes.get_mut(&id) {
+            Some(c) => std::mem::take(&mut c.parents),
+            None => return,
+        };
+        let mut new_parents: Vec<(Node, Id)> = Vec::with_capacity(parents.len());
+        for (pnode, pclass) in parents {
+            let canon = self.canonicalize(&pnode);
+            self.memo.remove(&pnode);
+            let pclass = self.uf.find(pclass);
+            if let Some(&existing) = self.memo.get(&canon) {
+                // congruence: two parents became identical -> union
+                let (_, changed) = self.union(existing, pclass);
+                if changed {
+                    // the union pushed onto dirty; continue
+                }
+            } else {
+                self.memo.insert(canon.clone(), pclass);
+            }
+            new_parents.push((canon, self.uf.find(pclass)));
+        }
+        let id = self.uf.find(id);
+        if let Some(c) = self.classes.get_mut(&id) {
+            c.parents.extend(new_parents);
+            // canonicalize and dedup the class's own nodes
+            let mut nodes = std::mem::take(&mut c.nodes);
+            for n in &mut nodes {
+                for ch in &mut n.children {
+                    *ch = self.uf.find_imm(*ch);
+                }
+            }
+            nodes.sort_unstable();
+            nodes.dedup();
+            self.classes.get_mut(&id).unwrap().nodes = nodes;
+        }
     }
 
     /// Propagate shape analysis to classes that gained computable shapes.
@@ -234,6 +292,50 @@ impl EGraph {
     /// Iterate canonical (id, class) pairs.
     pub fn iter_classes(&self) -> impl Iterator<Item = (Id, &EClass)> {
         self.classes.iter().map(|(&id, c)| (id, c))
+    }
+
+    /// Canonical classes containing at least one node of `fam` (None when
+    /// no class ever held one). The returned ids are canonical as of the
+    /// last union — no rebuild is needed before querying.
+    pub fn classes_in_family(&self, fam: OpFamily) -> Option<&HashSet<Id>> {
+        self.op_index.get(&fam)
+    }
+
+    /// Check the op-head index invariant (used by the property tests):
+    /// a canonical class is indexed under a family iff one of its nodes
+    /// belongs to that family, and no stale (non-canonical) ids linger.
+    pub fn validate_op_index(&self) -> Result<(), String> {
+        for (fam, ids) in &self.op_index {
+            for &id in ids {
+                if self.find_imm(id) != id {
+                    return Err(format!("op index holds non-canonical id {id}"));
+                }
+                let class = self
+                    .classes
+                    .get(&id)
+                    .ok_or_else(|| format!("op index holds dead class {id}"))?;
+                if !class.nodes.iter().any(|n| op_family(&n.op) == *fam) {
+                    return Err(format!(
+                        "class {id} indexed under a family it lacks"
+                    ));
+                }
+            }
+        }
+        for (id, class) in self.iter_classes() {
+            for node in &class.nodes {
+                let indexed = self
+                    .op_index
+                    .get(&op_family(&node.op))
+                    .is_some_and(|s| s.contains(&id));
+                if !indexed {
+                    return Err(format!(
+                        "class {id} has op {} but is not indexed under it",
+                        node.op.head()
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 }
 

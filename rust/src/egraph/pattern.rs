@@ -6,8 +6,17 @@
 //! (e.g. `Conv2d` with any stride/pad) and records the concrete operator
 //! in the substitution so dynamic appliers can transfer its parameters to
 //! the right-hand side.
+//!
+//! Searches are *op-indexed* by default: the e-graph's op-head index
+//! (see [`super::EGraph::classes_in_family`]) seeds matching with only
+//! the classes that contain the pattern root's operator family, instead
+//! of probing every class. `AnyOp` roots declare the families their
+//! predicate can accept via [`dsl::any_of`]; an un-hinted `AnyOp` or a
+//! bare variable root falls back to the full scan. The unindexed scan
+//! survives as [`SearchStrategy::FullScan`] — the reference the parity
+//! tests compare against.
 
-use super::EGraph;
+use super::{op_family, EGraph, OpFamily};
 use crate::ir::{Id, Op};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -29,8 +38,13 @@ pub enum PatternNode {
     /// Exact operator with sub-patterns.
     Node(Op, Vec<Pat>),
     /// Predicated operator: matches any op satisfying `pred`; the concrete
-    /// op is bound under `bind` in the substitution.
-    AnyOp { bind: String, pred: OpPred, children: Vec<Pat> },
+    /// op is bound under `bind` in the substitution. `family_hints` lists
+    /// sample ops of every family the predicate can accept so a root-level
+    /// `AnyOp` can seed from the op-head index; an empty list means
+    /// "unknown — scan every class". A hint list that omits a family the
+    /// predicate accepts would silently drop root matches, so hints are
+    /// declared next to the predicate (see [`dsl::any_of`]).
+    AnyOp { bind: String, pred: OpPred, family_hints: Vec<Op>, children: Vec<Pat> },
 }
 
 impl std::fmt::Debug for PatternNode {
@@ -77,20 +91,71 @@ pub struct Match {
     pub subst: Subst,
 }
 
+/// How a search seeds its root candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SearchStrategy {
+    /// Seed from the op-head index: probe only classes containing the
+    /// pattern root's operator family.
+    #[default]
+    Indexed,
+    /// Probe every e-class (the pre-index behaviour) — kept as the
+    /// reference implementation for parity tests and benchmarks.
+    FullScan,
+}
+
 impl Pattern {
     /// Build from a pattern node.
     pub fn new(root: Pat) -> Self {
         Pattern { root }
     }
 
+    /// Op families that can root a match, or `None` when any class can
+    /// (variable roots and un-hinted `AnyOp` roots).
+    pub fn root_families(&self) -> Option<Vec<OpFamily>> {
+        match self.root.as_ref() {
+            PatternNode::Var(_) => None,
+            PatternNode::Node(op, _) => Some(vec![op_family(op)]),
+            PatternNode::AnyOp { family_hints, .. } => {
+                if family_hints.is_empty() {
+                    None
+                } else {
+                    Some(family_hints.iter().map(op_family).collect())
+                }
+            }
+        }
+    }
+
     /// Search the whole e-graph; returns every (class, substitution) pair.
     pub fn search(&self, eg: &EGraph) -> Vec<Match> {
+        self.search_with(eg, SearchStrategy::Indexed).0
+    }
+
+    /// Search under an explicit strategy; returns the matches plus the
+    /// number of root-candidate classes probed (the `IterStats` counter).
+    pub fn search_with(&self, eg: &EGraph, strategy: SearchStrategy) -> (Vec<Match>, usize) {
+        let candidates: Vec<Id> = match (strategy, self.root_families()) {
+            (SearchStrategy::Indexed, Some(fams)) => {
+                let mut ids: Vec<Id> = fams
+                    .iter()
+                    .filter_map(|&f| eg.classes_in_family(f))
+                    .flat_map(|s| s.iter().copied())
+                    .collect();
+                ids.sort_unstable();
+                ids.dedup();
+                ids
+            }
+            _ => {
+                let mut ids: Vec<Id> = eg.iter_classes().map(|(id, _)| id).collect();
+                ids.sort_unstable();
+                ids
+            }
+        };
         let mut out = Vec::new();
         let mut memo = MatchMemo::default();
-        for (id, _) in eg.iter_classes() {
+        for &id in &candidates {
             self.search_class_memo(eg, id, &mut out, &mut memo);
         }
-        out
+        (out, candidates.len())
     }
 
     /// Search one e-class.
@@ -168,7 +233,7 @@ fn match_node(
             memo.table.insert(key, results.clone());
             out.extend(results);
         }
-        PatternNode::AnyOp { bind, pred, children } => match_op_position(
+        PatternNode::AnyOp { bind, pred, children, .. } => match_op_position(
             eg,
             class,
             subst,
@@ -249,9 +314,29 @@ pub mod dsl {
         Arc::new(PatternNode::Node(op, children))
     }
 
-    /// Predicated operator node.
+    /// Predicated operator node with no family hints: sound anywhere, but
+    /// as a pattern *root* it forces a full e-graph scan. Prefer
+    /// [`any_of`] when the accepted families are known.
     pub fn any(bind: &str, pred: OpPred, children: Vec<Pat>) -> Pat {
-        Arc::new(PatternNode::AnyOp { bind: bind.to_string(), pred, children })
+        Arc::new(PatternNode::AnyOp {
+            bind: bind.to_string(),
+            pred,
+            family_hints: Vec::new(),
+            children,
+        })
+    }
+
+    /// Predicated operator node with explicit family hints: `families`
+    /// must contain a sample op of *every* family `pred` can accept
+    /// (parameters are ignored — only the enum discriminant matters), so
+    /// root-level searches can seed from the op-head index.
+    pub fn any_of(bind: &str, pred: OpPred, families: Vec<Op>, children: Vec<Pat>) -> Pat {
+        Arc::new(PatternNode::AnyOp {
+            bind: bind.to_string(),
+            pred,
+            family_hints: families,
+            children,
+        })
     }
 }
 
@@ -321,6 +406,49 @@ mod tests {
         ));
         let ms = pat.search(&eg);
         assert_eq!(ms.len(), 1);
+        assert!(matches!(
+            ms[0].subst.op("conv"),
+            Op::Conv2d { stride: (2, 2), pad: (1, 1), groups: 1 }
+        ));
+    }
+
+    #[test]
+    fn indexed_search_agrees_with_full_scan_and_probes_less() {
+        let mut eg = EGraph::new(env());
+        let x = eg.add(Op::Var("x".into()), vec![]);
+        let w = eg.add(Op::Weight("w".into()), vec![]);
+        let b = eg.add(Op::Weight("b".into()), vec![]);
+        let d = eg.add(Op::Dense, vec![x, w]);
+        let _lin = eg.add(Op::BiasAdd, vec![d, b]);
+        let _r = eg.add(Op::Relu, vec![d]);
+        let pat = Pattern::new(n(Op::Dense, vec![v("x"), v("w")]));
+        let (indexed, probed_indexed) = pat.search_with(&eg, SearchStrategy::Indexed);
+        let (full, probed_full) = pat.search_with(&eg, SearchStrategy::FullScan);
+        assert_eq!(indexed.len(), 1);
+        assert_eq!(full.len(), 1);
+        assert_eq!(indexed[0].class, full[0].class);
+        assert_eq!(probed_indexed, 1, "only the Dense class is probed");
+        assert_eq!(probed_full, eg.num_classes());
+    }
+
+    #[test]
+    fn any_of_hints_seed_from_index() {
+        let mut eg = EGraph::new(HashMap::new());
+        let x = eg.add(Op::Var("img".into()), vec![]);
+        let w = eg.add(Op::Weight("k".into()), vec![]);
+        let _c = eg.add(
+            Op::Conv2d { stride: (2, 2), pad: (1, 1), groups: 1 },
+            vec![x, w],
+        );
+        let pat = Pattern::new(any_of(
+            "conv",
+            |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![Op::Conv2d { stride: (1, 1), pad: (0, 0), groups: 1 }],
+            vec![v("x"), v("w")],
+        ));
+        let (ms, probed) = pat.search_with(&eg, SearchStrategy::Indexed);
+        assert_eq!(ms.len(), 1);
+        assert_eq!(probed, 1, "family hint narrows the seed to the conv class");
         assert!(matches!(
             ms[0].subst.op("conv"),
             Op::Conv2d { stride: (2, 2), pad: (1, 1), groups: 1 }

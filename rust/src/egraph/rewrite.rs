@@ -5,7 +5,7 @@
 //! maxpool decomposition) use *dynamic* appliers that consult the e-class
 //! shape analysis to synthesize parameterized RHS operators.
 
-use super::pattern::{instantiate, Match, Pat, Pattern};
+use super::pattern::{instantiate, Match, Pat, Pattern, SearchStrategy};
 use super::EGraph;
 use crate::ir::Id;
 
@@ -66,12 +66,21 @@ impl Rewrite {
         }
     }
 
-    /// Search + apply everywhere; returns the number of *new* unions made.
+    /// Search + apply everywhere (op-indexed); returns the number of
+    /// *new* unions made. The [`super::Runner`] splits the two phases so
+    /// its backoff scheduler can ban a rule *before* applying an
+    /// explosion of matches; this convenience form applies unconditionally.
     pub fn run(&self, eg: &mut EGraph) -> usize {
-        let matches = self.searcher.search(eg);
+        let (matches, _) = self.searcher.search_with(eg, SearchStrategy::Indexed);
+        self.apply_matches(eg, &matches)
+    }
+
+    /// Apply the right-hand side for each match; returns the number of
+    /// *new* unions made.
+    pub fn apply_matches(&self, eg: &mut EGraph, matches: &[Match]) -> usize {
         let mut changed = 0;
         for m in matches {
-            if let Some(rhs) = self.applier.apply(eg, &m) {
+            if let Some(rhs) = self.applier.apply(eg, m) {
                 let (_, did) = eg.union(m.class, rhs);
                 if did {
                     changed += 1;

@@ -1,6 +1,26 @@
 //! Equality-saturation runner: applies a rule set to fixpoint under
 //! node/iteration/time budgets (egg's `Runner`).
+//!
+//! Two hot-path mechanisms ride on top of the plain loop:
+//!
+//! * searches are *op-indexed* ([`SearchStrategy::Indexed`]): each rule
+//!   probes only the classes containing its pattern root's op family,
+//!   and the probed-candidate counts are recorded per iteration in
+//!   [`IterStats::candidates`];
+//! * an egg-style [`BackoffScheduler`] bans rules whose match count
+//!   explodes (e.g. commutativity-shaped rules) for a few iterations
+//!   with exponentially growing thresholds, instead of re-matching and
+//!   re-applying them every round. A fixpoint is only reported as
+//!   [`StopReason::Saturated`] when no rule was banned that iteration;
+//!   otherwise bans are cleared and saturation is re-checked.
+//!
+//! Budgets are enforced *between rules*, not just between iterations, so
+//! one slow iteration cannot overshoot the time limit arbitrarily.
+//! [`Runner::reference`] disables both mechanisms (full scan, no
+//! scheduler) — the behavioural baseline the parity tests compare
+//! against.
 
+use super::pattern::SearchStrategy;
 use super::rewrite::Rewrite;
 use super::EGraph;
 use std::time::{Duration, Instant};
@@ -26,7 +46,8 @@ impl Default for RunnerLimits {
 /// Why saturation stopped.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StopReason {
-    /// No rule produced a new union — a true fixed point.
+    /// No rule produced a new union (and none was banned) — a true
+    /// fixed point.
     Saturated,
     IterLimit,
     NodeLimit,
@@ -36,9 +57,94 @@ pub enum StopReason {
 /// Per-iteration statistics (for the metrics module and EXPERIMENTS.md).
 #[derive(Debug, Clone)]
 pub struct IterStats {
+    /// New unions made this iteration.
     pub unions: usize,
+    /// Canonical e-classes after this iteration's rebuild.
     pub classes: usize,
+    /// Total e-nodes after this iteration's rebuild.
     pub nodes: usize,
+    /// Root-candidate classes probed by all rule searches this iteration
+    /// — the op-index effectiveness metric: under
+    /// [`SearchStrategy::FullScan`] this is rules × classes; under
+    /// [`SearchStrategy::Indexed`] only classes holding each rule's root
+    /// op family are counted.
+    pub candidates: usize,
+    /// Matches found across all rules this iteration.
+    pub matches: usize,
+    /// Rules skipped this iteration because the backoff scheduler had
+    /// banned them (or banned them on sight of an exploding match set).
+    pub skipped_rules: usize,
+}
+
+/// Egg-style backoff rule scheduler: when a rule produces more than
+/// `match_limit << times_banned` matches in one iteration, its matches
+/// are *not* applied and the rule is banned for
+/// `ban_length << times_banned` iterations. Exploding rules thus get
+/// exponentially rarer (and exponentially larger quotas) instead of
+/// dominating every round.
+#[derive(Debug, Clone)]
+pub struct BackoffScheduler {
+    /// Base match budget per rule per iteration.
+    pub match_limit: usize,
+    /// Base ban duration, in iterations.
+    pub ban_length: usize,
+    stats: Vec<RuleBackoff>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct RuleBackoff {
+    times_banned: u32,
+    banned_until: usize,
+}
+
+impl Default for BackoffScheduler {
+    /// Defaults are deliberately generous (10k matches) so well-behaved
+    /// rule sets — including every seed app — never trip the scheduler
+    /// and saturation results stay bit-identical to an unscheduled run.
+    fn default() -> Self {
+        BackoffScheduler::new(10_000, 4)
+    }
+}
+
+impl BackoffScheduler {
+    pub fn new(match_limit: usize, ban_length: usize) -> Self {
+        BackoffScheduler { match_limit, ban_length, stats: Vec::new() }
+    }
+
+    /// Size the per-rule state for a rule set (clears previous bans).
+    fn reset(&mut self, n_rules: usize) {
+        self.stats = vec![RuleBackoff::default(); n_rules];
+    }
+
+    /// Is `rule` banned during `iter`?
+    fn banned(&self, rule: usize, iter: usize) -> bool {
+        self.stats.get(rule).is_some_and(|s| iter < s.banned_until)
+    }
+
+    /// Record a search outcome; returns true when the rule just got
+    /// banned (its matches must then be discarded, not applied).
+    fn observe(&mut self, rule: usize, iter: usize, n_matches: usize) -> bool {
+        let Some(s) = self.stats.get_mut(rule) else {
+            return false;
+        };
+        let shift = s.times_banned.min(20);
+        let threshold = self.match_limit.saturating_mul(1 << shift);
+        if n_matches > threshold {
+            s.banned_until = iter + self.ban_length.saturating_mul(1 << shift).max(1);
+            s.times_banned += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Lift all bans (used when the unbanned rules reach a fixpoint, so
+    /// saturation can be re-checked with the full rule set).
+    fn clear_bans(&mut self) {
+        for s in &mut self.stats {
+            s.banned_until = 0;
+        }
+    }
 }
 
 /// Saturation driver.
@@ -46,6 +152,10 @@ pub struct Runner {
     pub limits: RunnerLimits,
     pub iterations: Vec<IterStats>,
     pub stop_reason: Option<StopReason>,
+    /// Backoff scheduler; `None` applies every rule every iteration.
+    pub scheduler: Option<BackoffScheduler>,
+    /// Root-candidate seeding strategy for every rule search.
+    pub strategy: SearchStrategy,
 }
 
 impl Default for Runner {
@@ -55,38 +165,123 @@ impl Default for Runner {
 }
 
 impl Runner {
+    /// The production configuration: op-indexed search + backoff
+    /// scheduling.
     pub fn new(limits: RunnerLimits) -> Self {
-        Runner { limits, iterations: Vec::new(), stop_reason: None }
+        Runner {
+            limits,
+            iterations: Vec::new(),
+            stop_reason: None,
+            scheduler: Some(BackoffScheduler::default()),
+            strategy: SearchStrategy::Indexed,
+        }
+    }
+
+    /// The reference configuration: full-scan search, no scheduler — the
+    /// pre-index behaviour, kept for parity tests and benchmarks.
+    pub fn reference(limits: RunnerLimits) -> Self {
+        Runner {
+            limits,
+            iterations: Vec::new(),
+            stop_reason: None,
+            scheduler: None,
+            strategy: SearchStrategy::FullScan,
+        }
+    }
+
+    /// Total root-candidate classes probed across all iterations.
+    pub fn total_candidates(&self) -> usize {
+        self.iterations.iter().map(|i| i.candidates).sum()
+    }
+
+    /// Total matches found across all iterations.
+    pub fn total_matches(&self) -> usize {
+        self.iterations.iter().map(|i| i.matches).sum()
+    }
+
+    fn push_iter(
+        &mut self,
+        eg: &EGraph,
+        unions: usize,
+        candidates: usize,
+        matches: usize,
+        skipped_rules: usize,
+    ) {
+        self.iterations.push(IterStats {
+            unions,
+            classes: eg.num_classes(),
+            nodes: eg.num_nodes(),
+            candidates,
+            matches,
+            skipped_rules,
+        });
     }
 
     /// Run `rules` on `eg` until fixpoint or a budget trips.
     pub fn run(&mut self, eg: &mut EGraph, rules: &[Rewrite]) -> StopReason {
         let start = Instant::now();
-        let reason = loop {
+        if let Some(s) = &mut self.scheduler {
+            s.reset(rules.len());
+        }
+        let reason = 'run: loop {
             if self.iterations.len() >= self.limits.max_iters {
                 break StopReason::IterLimit;
             }
             if start.elapsed() > self.limits.time_limit {
                 break StopReason::TimeLimit;
             }
-            let mut unions = 0;
-            for rule in rules {
-                unions += rule.run(eg);
+            let iter = self.iterations.len();
+            let mut unions = 0usize;
+            let mut candidates = 0usize;
+            let mut matches = 0usize;
+            let mut skipped = 0usize;
+            let mut ran = 0usize;
+            let mut node_limit_hit = false;
+            for (ri, rule) in rules.iter().enumerate() {
+                // between-rules budget check: one slow iteration must not
+                // blow the time limit arbitrarily
+                if start.elapsed() > self.limits.time_limit {
+                    eg.rebuild();
+                    self.push_iter(eg, unions, candidates, matches, skipped);
+                    break 'run StopReason::TimeLimit;
+                }
+                if self.scheduler.as_ref().is_some_and(|s| s.banned(ri, iter)) {
+                    skipped += 1;
+                    continue;
+                }
+                let (ms, probed) = rule.searcher.search_with(eg, self.strategy);
+                candidates += probed;
+                matches += ms.len();
+                if self.scheduler.as_mut().is_some_and(|s| s.observe(ri, iter, ms.len())) {
+                    // banned on sight: the match explosion is discarded
+                    skipped += 1;
+                    continue;
+                }
+                unions += rule.apply_matches(eg, &ms);
+                ran += 1;
                 if eg.nodes_added > self.limits.max_nodes {
+                    node_limit_hit = true;
                     break;
                 }
             }
             eg.rebuild();
-            self.iterations.push(IterStats {
-                unions,
-                classes: eg.num_classes(),
-                nodes: eg.num_nodes(),
-            });
-            if eg.nodes_added > self.limits.max_nodes {
+            self.push_iter(eg, unions, candidates, matches, skipped);
+            // a fixpoint with no banned rules is genuine saturation — even
+            // when the node budget is also exhausted, the graph stopped
+            // changing, so don't mislabel the stop reason. It only counts
+            // when *every* rule actually ran: a node-limit break that
+            // skipped the tail of the rule list proves nothing.
+            if unions == 0 && skipped == 0 && ran == rules.len() {
+                break StopReason::Saturated;
+            }
+            if node_limit_hit || eg.nodes_added > self.limits.max_nodes {
                 break StopReason::NodeLimit;
             }
             if unions == 0 {
-                break StopReason::Saturated;
+                // only banned rules remain; lift bans and re-check
+                if let Some(s) = &mut self.scheduler {
+                    s.clear_bans();
+                }
             }
         };
         self.stop_reason = Some(reason);
@@ -166,5 +361,135 @@ mod tests {
         });
         let reason = runner.run(&mut eg, &rules);
         assert_eq!(reason, StopReason::NodeLimit);
+    }
+
+    #[test]
+    fn exhausted_node_budget_with_no_unions_is_saturation() {
+        // the e-graph starts over the node budget, but no rule fires:
+        // that is a fixpoint, not a node-limit stop (the seed mislabelled
+        // this case as NodeLimit).
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![a]);
+        let rules = vec![crate::egraph::Rewrite::pure(
+            "never-matches",
+            n(Op::Add, vec![v("x"), v("y")]),
+            n(Op::Add, vec![v("y"), v("x")]),
+        )];
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 10,
+            max_nodes: 0, // already exhausted by the two seed adds
+            time_limit: Duration::from_secs(5),
+        });
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::Saturated);
+    }
+
+    #[test]
+    fn node_limit_mid_rules_is_not_saturation() {
+        // over budget after the first of two rules: the second rule never
+        // ran, so the runner must not claim a fixpoint
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![a]);
+        let comm = |x: &str, y: &str| {
+            crate::egraph::Rewrite::pure(
+                "swap",
+                n(Op::Add, vec![v(x), v(y)]),
+                n(Op::Add, vec![v(y), v(x)]),
+            )
+        };
+        let rules = vec![comm("x", "y"), comm("p", "q")];
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 10,
+            max_nodes: 0, // already exhausted by the two seed adds
+            time_limit: Duration::from_secs(5),
+        });
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::NodeLimit);
+    }
+
+    #[test]
+    fn time_limit_checked_between_rules() {
+        // the second rule sleeps past the budget: the runner must stop
+        // mid-iteration instead of finishing every remaining rule.
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let _r = eg.add(Op::Relu, vec![a]);
+        let slow = |_: &mut EGraph, _: &crate::egraph::pattern::Match| {
+            std::thread::sleep(Duration::from_millis(30));
+            None
+        };
+        let rules = vec![
+            crate::egraph::Rewrite::dynamic("slow-1", n(Op::Relu, vec![v("x")]), slow),
+            crate::egraph::Rewrite::dynamic("slow-2", n(Op::Relu, vec![v("x")]), slow),
+        ];
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 100,
+            max_nodes: 1_000,
+            time_limit: Duration::from_millis(10),
+        });
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::TimeLimit);
+        assert_eq!(runner.iterations.len(), 1, "stopped inside the first iteration");
+    }
+
+    #[test]
+    fn backoff_bans_exploding_rule_then_converges() {
+        // with a match budget of 1, add-comm (2 matches on this graph)
+        // gets banned on sight; the exponential threshold then admits it
+        // and saturation is still reached.
+        let mut eg = EGraph::new(HashMap::new());
+        let a = eg.add(Op::Var("a".into()), vec![]);
+        let b = eg.add(Op::Var("b".into()), vec![]);
+        let c = eg.add(Op::Var("c".into()), vec![]);
+        let _ab = eg.add(Op::Add, vec![a, b]);
+        let _bc = eg.add(Op::Add, vec![b, c]);
+        let rules = vec![crate::egraph::Rewrite::pure(
+            "add-comm",
+            n(Op::Add, vec![v("x"), v("y")]),
+            n(Op::Add, vec![v("y"), v("x")]),
+        )];
+        let mut runner = Runner::default();
+        runner.scheduler = Some(BackoffScheduler::new(1, 1));
+        let reason = runner.run(&mut eg, &rules);
+        assert_eq!(reason, StopReason::Saturated);
+        assert!(
+            runner.iterations.iter().any(|i| i.skipped_rules > 0),
+            "the rule must have been banned at least once"
+        );
+        // the commuted nodes did get built eventually
+        let ba = eg.add(Op::Add, vec![b, a]);
+        let ab2 = eg.add(Op::Add, vec![a, b]);
+        assert_eq!(eg.find(ba), eg.find(ab2));
+    }
+
+    #[test]
+    fn iter_stats_expose_candidate_counts() {
+        let build = || {
+            let mut eg = EGraph::new(HashMap::new());
+            let a = eg.add(Op::Var("a".into()), vec![]);
+            let b = eg.add(Op::Var("b".into()), vec![]);
+            let _ab = eg.add(Op::Add, vec![a, b]);
+            eg
+        };
+        let rules = vec![crate::egraph::Rewrite::pure(
+            "add-comm",
+            n(Op::Add, vec![v("x"), v("y")]),
+            n(Op::Add, vec![v("y"), v("x")]),
+        )];
+        let mut eg = build();
+        let mut eg2 = build();
+        let mut indexed = Runner::default();
+        indexed.run(&mut eg, &rules);
+        let mut reference = Runner::reference(RunnerLimits::default());
+        reference.run(&mut eg2, &rules);
+        assert!(indexed.total_candidates() > 0);
+        assert!(
+            indexed.total_candidates() < reference.total_candidates(),
+            "indexed search must probe strictly fewer classes: {} vs {}",
+            indexed.total_candidates(),
+            reference.total_candidates()
+        );
     }
 }

@@ -17,6 +17,10 @@ pub enum EvalError {
     Unbound(String),
     #[error("evaluation of {0} failed: {1}")]
     Op(String, String),
+    /// Malformed driver input (e.g. a token stream too short for the
+    /// requested sweep) — reported instead of slice-panicking.
+    #[error("invalid input: {0}")]
+    Input(String),
 }
 
 /// Hook consulted for every node *before* default evaluation; returning

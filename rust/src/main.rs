@@ -179,13 +179,16 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         labels: &labels[..n],
     });
     println!(
-        "{} [{:?}] over {} images: reference {:.2}%, accelerated {:.2}%  ({:.1?}/image)",
+        "{} [{:?}] over {} images: reference {:.2}%, accelerated {:.2}%  \
+         (sim {:.1?}/image, wall {:.1?}/image, {} workers)",
         app.name,
         rev,
         rep.n,
         rep.ref_accuracy() * 100.0,
         rep.acc_accuracy() * 100.0,
-        rep.time_per_point()
+        rep.sim_time_per_point(),
+        rep.wall_time_per_point(),
+        rep.workers
     );
     Ok(())
 }

@@ -101,9 +101,10 @@ pub fn flexasr_rules() -> Vec<Rewrite> {
         // Table 1's dramatic granularity mismatch (566 Relay ops -> 1).
         Rewrite::dynamic(
             "flexasr-lstm",
-            any(
+            any_of(
                 "lstm",
                 |op| matches!(op, Op::Lstm { .. }),
+                vec![Op::Lstm { steps: 1 }],
                 vec![v("x"), v("wi"), v("wh"), v("b")],
             ),
             |eg, m| {
@@ -160,9 +161,10 @@ pub fn flexasr_extended_rules() -> Vec<Rewrite> {
 pub fn hlscnn_rules() -> Vec<Rewrite> {
     vec![Rewrite::dynamic(
         "hlscnn-conv2d",
-        any(
+        any_of(
             "conv",
             |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![Op::Conv2d { stride: (1, 1), pad: (0, 0), groups: 1 }],
             vec![v("x"), v("w")],
         ),
         |eg, m| {

@@ -114,9 +114,10 @@ fn dense_zero_add() -> Rewrite {
 fn conv2d_im2col() -> Rewrite {
     Rewrite::dynamic(
         "conv2d-im2col",
-        any(
+        any_of(
             "conv",
             |op| matches!(op, Op::Conv2d { groups: 1, .. }),
+            vec![Op::Conv2d { stride: (1, 1), pad: (0, 0), groups: 1 }],
             vec![v("x"), v("w")],
         ),
         |eg, m| {
@@ -150,6 +151,7 @@ fn maxpool_decompose() -> Rewrite {
     pool_decompose(
         "maxpool-decompose",
         |op| matches!(op, Op::MatMaxPool { .. }),
+        Op::MatMaxPool { window: (2, 2), stride: (2, 2) },
         |op| {
             let Op::MatMaxPool { window, stride } = *op else { unreachable!() };
             (window, stride)
@@ -164,6 +166,7 @@ fn meanpool_decompose() -> Rewrite {
     pool_decompose(
         "meanpool-decompose",
         |op| matches!(op, Op::MatMeanPool { .. }),
+        Op::MatMeanPool { window: (2, 2), stride: (2, 2) },
         |op| {
             let Op::MatMeanPool { window, stride } = *op else { unreachable!() };
             (window, stride)
@@ -175,10 +178,11 @@ fn meanpool_decompose() -> Rewrite {
 fn pool_decompose(
     name: &str,
     pred: fn(&Op) -> bool,
+    family: Op,
     params: fn(&Op) -> ((usize, usize), (usize, usize)),
     stage_op: Op,
 ) -> Rewrite {
-    Rewrite::dynamic(name, any("pool", pred, vec![v("t")]), move |eg, m| {
+    Rewrite::dynamic(name, any_of("pool", pred, vec![family], vec![v("t")]), move |eg, m| {
         let (window, stride) = params(m.subst.op("pool"));
         let wsize = window.0 * window.1;
         if wsize < 2 || !wsize.is_power_of_two() {

@@ -15,9 +15,12 @@
 //!   the compilation policy (targets, matching mode, saturation limits,
 //!   design revision, worker count) and exposes [`Session::compile`];
 //! * [`CompiledProgram`] — a reusable handle caching the extracted
-//!   [`RecExpr`] *and* a precomputed per-node [`DispatchPlan`], with
-//!   [`CompiledProgram::run`], [`CompiledProgram::run_batch`],
-//!   [`CompiledProgram::cosim`] and [`CompiledProgram::classify_sweep`].
+//!   [`RecExpr`] *and* a precomputed per-node [`DispatchPlan`] (dispatch
+//!   slots plus a tensor-liveness plan), with [`CompiledProgram::run`],
+//!   [`CompiledProgram::run_batch`], [`CompiledProgram::cosim`] and
+//!   [`CompiledProgram::classify_sweep`]. The execution loop is
+//!   zero-clone: leaves are borrowed from the [`Bindings`] and
+//!   intermediates are freed at their last use.
 //!
 //! ```text
 //! SessionBuilder ──build()──▶ Session ──compile(&App)──▶ CompiledProgram
@@ -212,6 +215,8 @@ impl Session {
             classes: res.classes,
             nodes: res.nodes,
             elapsed: res.elapsed,
+            candidates: res.candidate_classes(),
+            matches: res.total_matches(),
         };
         self.handle(res.expr, Some(stats))
     }
@@ -241,6 +246,10 @@ pub struct CompileStats {
     pub nodes: usize,
     /// Wall-clock of saturation + extraction.
     pub elapsed: Duration,
+    /// Root-candidate classes probed during saturation (op-index metric).
+    pub candidates: usize,
+    /// E-matches found during saturation.
+    pub matches: usize,
 }
 
 /// One per-node dispatch decision, precomputed at compile time.
@@ -255,18 +264,30 @@ enum Step {
 
 /// Precomputed per-node dispatch decisions for one compiled expression —
 /// the hot loop reads an array instead of matching op targets and
-/// scanning accelerator lists per node per input.
+/// scanning accelerator lists per node per input — plus a liveness plan:
+/// for each step, which value slots die there and can be freed, so big
+/// sweep batches stop retaining every intermediate tensor until the end
+/// of the evaluation.
 #[derive(Debug, Clone)]
 pub struct DispatchPlan {
     steps: Vec<Step>,
+    /// frees[i] = value slots whose last use is step i (the root is
+    /// never listed; unused non-root nodes are freed at their own step).
+    frees: Vec<Vec<usize>>,
     offloaded: usize,
 }
 
 impl DispatchPlan {
     fn new(expr: &RecExpr, registry: &AcceleratorRegistry) -> Self {
-        let mut steps = Vec::with_capacity(expr.len());
+        let n = expr.len();
+        let mut steps = Vec::with_capacity(n);
         let mut offloaded = 0usize;
-        for node in &expr.nodes {
+        // liveness: the last step consuming each node's value
+        let mut last_use: Vec<Option<usize>> = vec![None; n];
+        for (i, node) in expr.nodes.iter().enumerate() {
+            for &c in &node.children {
+                last_use[c] = Some(i);
+            }
             let t = node.op.target();
             let step = if t == Target::Host {
                 Step::Host
@@ -286,12 +307,23 @@ impl DispatchPlan {
             };
             steps.push(step);
         }
-        DispatchPlan { steps, offloaded }
+        let mut frees: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for i in 0..n.saturating_sub(1) {
+            // the root (last node) stays live; everything else dies at
+            // its last consumer, or immediately when never consumed
+            frees[last_use[i].unwrap_or(i)].push(i);
+        }
+        DispatchPlan { steps, frees, offloaded }
     }
 
     /// Number of accelerator invocations the plan routes per evaluation.
     pub fn offloaded(&self) -> usize {
         self.offloaded
+    }
+
+    /// Value slots freed after each step (exposed for the liveness tests).
+    pub fn frees(&self) -> &[Vec<usize>] {
+        &self.frees
     }
 }
 
@@ -349,7 +381,13 @@ pub struct SweepReport {
     pub n: usize,
     pub ref_correct: usize,
     pub acc_correct: usize,
+    /// Wall-clock duration of the whole sweep.
     pub elapsed: Duration,
+    /// Aggregate simulation (worker busy) time, summed across threads.
+    /// With `w` workers this is ≈ `w × elapsed`; dividing *wall* time by
+    /// `n` (the seed behaviour) under-reported the Table 4 per-point sim
+    /// time by about that factor.
+    pub sim_time: Duration,
     pub workers: usize,
 }
 
@@ -362,9 +400,24 @@ impl SweepReport {
         self.acc_correct as f32 / self.n as f32
     }
 
-    /// Average simulation time per data point (the Table 4 column).
-    pub fn time_per_point(&self) -> Duration {
+    /// Wall-clock time per data point (throughput view: shrinks as
+    /// workers are added).
+    pub fn wall_time_per_point(&self) -> Duration {
         self.elapsed / self.n.max(1) as u32
+    }
+
+    /// Aggregate simulation time per data point (the Table 4 "per-point
+    /// sim time" column: the cost of simulating one point, independent of
+    /// how many workers ran the sweep).
+    pub fn sim_time_per_point(&self) -> Duration {
+        self.sim_time / self.n.max(1) as u32
+    }
+
+    /// Average simulation time per data point (the Table 4 column).
+    /// Alias for [`Self::sim_time_per_point`]; the seed version divided
+    /// wall time by `n`, silently shrinking with the worker count.
+    pub fn time_per_point(&self) -> Duration {
+        self.sim_time_per_point()
     }
 }
 
@@ -479,11 +532,15 @@ impl CompiledProgram {
         let start = Instant::now();
         let workers = self.workers.max(1);
         let mut totals = (0usize, 0usize, 0usize); // (ref, acc, n)
+        let mut sim_time = Duration::ZERO;
         thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|wid| {
                     s.spawn(move || {
                         let mut env = spec.weights.clone();
+                        // busy time starts after per-worker setup so
+                        // sim_time measures simulation, not weight memcpy
+                        let busy = Instant::now();
                         let (mut ref_c, mut acc_c, mut n) = (0usize, 0usize, 0usize);
                         let mut idx = wid;
                         while idx < spec.inputs.len() {
@@ -504,15 +561,16 @@ impl CompiledProgram {
                             n += 1;
                             idx += workers;
                         }
-                        (ref_c, acc_c, n)
+                        (ref_c, acc_c, n, busy.elapsed())
                     })
                 })
                 .collect();
             for h in handles {
-                let (r, a, n) = h.join().expect("sweep worker panicked");
+                let (r, a, n, busy) = h.join().expect("sweep worker panicked");
                 totals.0 += r;
                 totals.1 += a;
                 totals.2 += n;
+                sim_time += busy;
             }
         });
         SweepReport {
@@ -520,12 +578,16 @@ impl CompiledProgram {
             ref_correct: totals.0,
             acc_correct: totals.1,
             elapsed: start.elapsed(),
+            sim_time,
             workers,
         }
     }
 
     /// Language-model co-simulation sweep (the Table 4 LSTM-WLM row):
-    /// per-token perplexity, reference vs accelerated.
+    /// per-token perplexity, reference vs accelerated. Uses the default
+    /// [`crate::cosim::LmSpec`] (input `"x_seq"`, 16-token windows) with
+    /// the session's error-tracking setting; see [`Self::lm_sweep_spec`]
+    /// for explicit control.
     pub fn lm_sweep(
         &self,
         weights: &HashMap<String, Tensor>,
@@ -533,8 +595,29 @@ impl CompiledProgram {
         tokens: &[usize],
         n_sentences: usize,
     ) -> Result<crate::cosim::LmReport, EvalError> {
-        crate::cosim::cosim_lm(
+        let spec = crate::cosim::LmSpec {
+            track_errors: self.track_errors,
+            ..crate::cosim::LmSpec::default()
+        };
+        self.lm_sweep_spec(&spec, weights, embed, tokens, n_sentences)
+    }
+
+    /// Language-model co-simulation sweep with an explicit [`LmSpec`]
+    /// (input variable name, window length, error tracking) — no
+    /// hardcoded `"x_seq"`/16 assumptions.
+    ///
+    /// [`LmSpec`]: crate::cosim::LmSpec
+    pub fn lm_sweep_spec(
+        &self,
+        spec: &crate::cosim::LmSpec<'_>,
+        weights: &HashMap<String, Tensor>,
+        embed: &Tensor,
+        tokens: &[usize],
+        n_sentences: usize,
+    ) -> Result<crate::cosim::LmReport, EvalError> {
+        crate::cosim::cosim_lm_spec(
             &self.expr,
+            spec,
             weights,
             embed,
             tokens,
@@ -546,42 +629,76 @@ impl CompiledProgram {
     /// The plan-driven interpreter loop: host ops run f32 semantics,
     /// accelerator ops dispatch through the precomputed slot table
     /// (no per-node target match, no accelerator scan).
+    ///
+    /// The loop is *zero-clone*: `Var`/`Weight` leaves are borrowed from
+    /// the environment instead of cloned (the seed cloned every leaf —
+    /// including full weight matrices — on every evaluation), and
+    /// intermediate tensors are dropped at their precomputed last use
+    /// (`DispatchPlan::frees`), so peak memory is the live set, not the
+    /// whole program.
     fn exec(
         &self,
         env: &HashMap<String, Tensor>,
         mut errors: Option<&mut Vec<f32>>,
     ) -> Result<(Tensor, usize), EvalError> {
-        let mut values: Vec<Tensor> = Vec::with_capacity(self.expr.len());
-        let mut invocations = 0usize;
-        for (node, step) in self.expr.nodes.iter().zip(&self.plan.steps) {
-            let ch: Vec<&Tensor> = node.children.iter().map(|&c| &values[c]).collect();
-            let v = match &node.op {
-                Op::Var(n) | Op::Weight(n) => {
-                    env.get(n).cloned().ok_or_else(|| EvalError::Unbound(n.clone()))?
+        enum Slot<'a> {
+            Borrowed(&'a Tensor),
+            Owned(Tensor),
+            Freed,
+        }
+        impl Slot<'_> {
+            fn get(&self) -> &Tensor {
+                match self {
+                    Slot::Borrowed(t) => t,
+                    Slot::Owned(t) => t,
+                    Slot::Freed => unreachable!("liveness plan freed a live value"),
                 }
-                op => match *step {
-                    Step::Accel { slot, invocation } => {
-                        match self.registry.by_slot(slot).exec_op(op, &ch) {
-                            Some(out) => {
-                                if invocation {
-                                    invocations += 1;
-                                    if let Some(errs) = errors.as_mut() {
-                                        if let Ok(r) = interp::eval_op(op, &ch) {
-                                            errs.push(out.rel_error(&r));
+            }
+        }
+        let mut values: Vec<Slot<'_>> = Vec::with_capacity(self.expr.len());
+        let mut invocations = 0usize;
+        for (i, (node, step)) in self.expr.nodes.iter().zip(&self.plan.steps).enumerate() {
+            let v = match &node.op {
+                Op::Var(n) | Op::Weight(n) => Slot::Borrowed(
+                    env.get(n).ok_or_else(|| EvalError::Unbound(n.clone()))?,
+                ),
+                op => {
+                    let ch: Vec<&Tensor> =
+                        node.children.iter().map(|&c| values[c].get()).collect();
+                    let out = match *step {
+                        Step::Accel { slot, invocation } => {
+                            match self.registry.by_slot(slot).exec_op(op, &ch) {
+                                Some(out) => {
+                                    if invocation {
+                                        invocations += 1;
+                                        if let Some(errs) = errors.as_mut() {
+                                            if let Ok(r) = interp::eval_op(op, &ch) {
+                                                errs.push(out.rel_error(&r));
+                                            }
                                         }
                                     }
+                                    out
                                 }
-                                out
+                                None => interp::eval_op(op, &ch)?,
                             }
-                            None => interp::eval_op(op, &ch)?,
                         }
-                    }
-                    Step::Host => interp::eval_op(op, &ch)?,
-                },
+                        Step::Host => interp::eval_op(op, &ch)?,
+                    };
+                    Slot::Owned(out)
+                }
             };
             values.push(v);
+            for &dead in &self.plan.frees[i] {
+                values[dead] = Slot::Freed;
+            }
         }
-        Ok((values.pop().expect("empty program"), invocations))
+        let out = match values.pop().expect("empty program") {
+            Slot::Owned(t) => t,
+            // a bare-leaf program: the root is the environment tensor
+            Slot::Borrowed(t) => t.clone(),
+            Slot::Freed => unreachable!("the root is never freed"),
+        };
+        Ok((out, invocations))
     }
 }
 
@@ -684,6 +801,107 @@ mod tests {
         let p2 = session.attach(p1.expr().clone());
         assert!(Arc::ptr_eq(p1.registry(), p2.registry()));
         assert!(Arc::ptr_eq(p1.registry(), session.registry()));
+    }
+
+    #[test]
+    fn liveness_plan_frees_at_last_use_and_keeps_root() {
+        // x ── relu ── add ── (root)
+        //  └──────────┘        diamond: x used by relu (1) and add (2)
+        let mut g = GraphBuilder::new();
+        let x = g.var("x"); // 0
+        let r = g.relu(x); // 1
+        g.add(x, r); // 2 (root)
+        let session = Session::builder().build();
+        let program = session.attach(g.finish());
+        let frees = program.plan().frees();
+        assert_eq!(frees.len(), 3);
+        assert!(frees[1].is_empty(), "x is still live after relu");
+        let mut at_root = frees[2].clone();
+        at_root.sort_unstable();
+        assert_eq!(at_root, vec![0, 1], "x and relu die at the root step");
+        // and the root itself is never freed
+        assert!(!frees.iter().any(|f| f.contains(&2)));
+    }
+
+    #[test]
+    fn unused_node_freed_immediately() {
+        // an attach()ed expression with dead code: the dead node must be
+        // freed at its own step, not retained for the whole evaluation
+        let mut g = GraphBuilder::new();
+        let x = g.var("x"); // 0
+        let _dead = g.relu(x); // 1 (unused)
+        g.relu(x); // 2 (root)
+        let session = Session::builder().build();
+        let program = session.attach(g.finish());
+        assert!(program.plan().frees()[1].contains(&1));
+        let b = Bindings::new().with("x", Tensor::ones(&[2, 2]));
+        assert_eq!(program.run(&b).unwrap(), program.run_ref(&b).unwrap());
+    }
+
+    #[test]
+    fn bare_leaf_program_returns_the_binding() {
+        let mut g = GraphBuilder::new();
+        g.var("x");
+        let session = Session::builder().build();
+        let program = session.attach(g.finish());
+        let t = Tensor::ones(&[3]);
+        let b = Bindings::new().with("x", t.clone());
+        assert_eq!(program.run(&b).unwrap(), t);
+    }
+
+    #[test]
+    fn sweep_report_separates_wall_and_sim_time() {
+        // the seed bug: time_per_point() divided *wall* time by n, so a
+        // 4-worker sweep under-reported per-point sim time ~4x
+        let rep = SweepReport {
+            n: 10,
+            ref_correct: 9,
+            acc_correct: 8,
+            elapsed: Duration::from_secs(10),
+            sim_time: Duration::from_secs(40),
+            workers: 4,
+        };
+        assert_eq!(rep.wall_time_per_point(), Duration::from_secs(1));
+        assert_eq!(rep.sim_time_per_point(), Duration::from_secs(4));
+        assert_eq!(rep.time_per_point(), rep.sim_time_per_point());
+    }
+
+    #[test]
+    fn classify_sweep_sim_time_bounded_by_workers() {
+        let (expr, shapes) = linear_app();
+        let mut rng = Rng::new(9);
+        let weights: HashMap<String, Tensor> = [
+            ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.3)),
+            ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let inputs: Vec<Tensor> =
+            (0..16).map(|_| Tensor::randn(&[1, 8], &mut rng, 1.0)).collect();
+        let labels: Vec<usize> = (0..16).map(|_| rng.below(4)).collect();
+        for workers in [1usize, 4] {
+            let session = Session::builder()
+                .targets(&[Target::FlexAsr])
+                .workers(workers)
+                .build();
+            let program = session.compile_expr(&expr, &shapes);
+            let rep = program.classify_sweep(&SweepSpec {
+                input_var: "input",
+                weights: &weights,
+                inputs: &inputs,
+                labels: &labels,
+            });
+            assert_eq!(rep.n, 16);
+            assert_eq!(rep.workers, workers);
+            // each worker's busy time is bounded by the sweep wall time
+            assert!(
+                rep.sim_time <= rep.elapsed * workers as u32,
+                "aggregate sim time {:?} exceeds {} x wall {:?}",
+                rep.sim_time,
+                workers,
+                rep.elapsed
+            );
+        }
     }
 
     #[test]

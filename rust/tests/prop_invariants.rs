@@ -4,7 +4,9 @@
 //! Each property runs against many seeded random cases; failures print
 //! the seed for reproduction.
 
-use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
+use d2a::egraph::{
+    AccelCost, EGraph, Extractor, Rewrite, Runner, RunnerLimits, SearchStrategy,
+};
 use d2a::ir::{interp, GraphBuilder, Op, RecExpr, Target};
 use d2a::numerics::adaptivfloat::AdaptivFloatFormat;
 use d2a::numerics::fixed_point::FixedPointFormat;
@@ -12,7 +14,7 @@ use d2a::numerics::NumericFormat;
 use d2a::rewrites::{rules_for, Matching};
 use d2a::tensor::Tensor;
 use d2a::util::Rng;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 /// Generate a random small MLP-ish program: chain of dense / bias_add /
 /// relu / add-residual ops with consistent shapes.
@@ -173,6 +175,211 @@ fn prop_congruence_closure() {
                 );
             } else {
                 seen.insert(ch, id);
+            }
+        }
+    }
+}
+
+/// INVARIANT: after any interleaving of adds, unions, and rebuilds, the
+/// hashcons is canonical (re-adding any existing node returns its class
+/// and creates nothing) and the op-head index is exact (a class is
+/// indexed under a family iff it holds a node of that family).
+#[test]
+fn prop_hashcons_and_op_index_after_random_mutation() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let mut eg = EGraph::new(HashMap::new());
+        let leaves: Vec<_> =
+            (0..5).map(|i| eg.add(Op::Var(format!("v{i}")), vec![])).collect();
+        let mut nodes = leaves.clone();
+        for _ in 0..40 {
+            match rng.below(6) {
+                0 => {
+                    let a = nodes[rng.below(nodes.len())];
+                    nodes.push(eg.add(Op::Relu, vec![a]));
+                }
+                1 | 2 => {
+                    let a = nodes[rng.below(nodes.len())];
+                    let b = nodes[rng.below(nodes.len())];
+                    nodes.push(eg.add(Op::Add, vec![a, b]));
+                }
+                3 => {
+                    let a = nodes[rng.below(nodes.len())];
+                    let b = nodes[rng.below(nodes.len())];
+                    nodes.push(eg.add(Op::Mul, vec![a, b]));
+                }
+                4 => {
+                    let a = nodes[rng.below(nodes.len())];
+                    let b = nodes[rng.below(nodes.len())];
+                    eg.union(a, b);
+                }
+                _ => eg.rebuild(),
+            }
+        }
+        eg.rebuild();
+        eg.validate_op_index().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // hashcons canonicality: re-adding every canonical node is a
+        // no-op that lands in the same class
+        let before = eg.nodes_added;
+        let snapshot: Vec<(usize, d2a::ir::Node)> = eg
+            .iter_classes()
+            .flat_map(|(id, c)| c.nodes.iter().cloned().map(move |n| (id, n)))
+            .collect();
+        for (id, node) in snapshot {
+            let got = eg.add(node.op.clone(), node.children.clone());
+            assert_eq!(
+                eg.find(got),
+                eg.find(id),
+                "seed {seed}: re-adding {node:?} left its class"
+            );
+        }
+        assert_eq!(
+            eg.nodes_added, before,
+            "seed {seed}: hashcons miss created fresh nodes"
+        );
+        // and the index is still exact after the probe adds
+        eg.validate_op_index().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Order-independent fingerprint of a match set.
+fn match_fingerprints(
+    eg: &EGraph,
+    ms: &[d2a::egraph::pattern::Match],
+) -> BTreeSet<(usize, Vec<(String, usize)>, Vec<(String, String)>)> {
+    ms.iter()
+        .map(|m| {
+            let mut vars: Vec<(String, usize)> = m
+                .subst
+                .vars
+                .iter()
+                .map(|(k, &v)| (k.clone(), eg.find_imm(v)))
+                .collect();
+            vars.sort();
+            let mut ops: Vec<(String, String)> =
+                m.subst.ops.iter().map(|(k, o)| (k.clone(), o.head())).collect();
+            ops.sort();
+            (eg.find_imm(m.class), vars, ops)
+        })
+        .collect()
+}
+
+fn assert_rules_parity(eg: &EGraph, rules: &[Rewrite], ctx: &str) {
+    for rule in rules {
+        let (indexed, probed_i) = rule.searcher.search_with(eg, SearchStrategy::Indexed);
+        let (full, probed_f) = rule.searcher.search_with(eg, SearchStrategy::FullScan);
+        assert_eq!(
+            match_fingerprints(eg, &indexed),
+            match_fingerprints(eg, &full),
+            "{ctx}: rule {} diverges between indexed and full scan",
+            rule.name
+        );
+        assert!(
+            probed_i <= probed_f,
+            "{ctx}: rule {} probed more classes indexed ({probed_i}) than \
+             full scan ({probed_f})",
+            rule.name
+        );
+    }
+}
+
+/// INVARIANT: the op-indexed matcher finds exactly the matches the full
+/// scan finds, for every rewrite rule, on randomly generated programs —
+/// both on the freshly loaded e-graph and after partial saturation.
+#[test]
+fn prop_matcher_parity_indexed_vs_full_scan() {
+    let rules = rules_for(&[Target::FlexAsr, Target::Hlscnn, Target::Vta], Matching::Flexible);
+    for seed in 200..215u64 {
+        let mut rng = Rng::new(seed);
+        let (expr, shapes, _) = random_program(&mut rng);
+        let mut eg = EGraph::new(shapes);
+        eg.add_expr(&expr);
+        assert_rules_parity(&eg, &rules, &format!("seed {seed} (fresh)"));
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 2,
+            ..RunnerLimits::default()
+        });
+        runner.run(&mut eg, &rules);
+        assert_rules_parity(&eg, &rules, &format!("seed {seed} (saturated)"));
+        eg.validate_op_index().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// INVARIANT: matcher parity holds on the six seed (Table 1) apps over
+/// the full flexible rule set — including the app-specific unrolled-LSTM
+/// rule — after one saturation iteration.
+#[test]
+fn matcher_parity_on_seed_apps() {
+    for app in d2a::apps::table1::all_apps() {
+        let mut rules =
+            rules_for(&[Target::FlexAsr, Target::Hlscnn, Target::Vta], Matching::Flexible);
+        if app.name == "LSTM-WLM" {
+            rules.push(d2a::rewrites::accel::flexasr_unrolled_lstm(35, 650));
+        }
+        let mut eg = EGraph::new(app.shapes.clone());
+        eg.add_expr(&app.expr);
+        let mut runner = Runner::new(RunnerLimits {
+            max_iters: 1,
+            ..RunnerLimits::default()
+        });
+        runner.run(&mut eg, &rules);
+        assert_rules_parity(&eg, &rules, app.name);
+        eg.validate_op_index().unwrap_or_else(|e| panic!("{}: {e}", app.name));
+    }
+}
+
+/// ACCEPTANCE: the production pipeline (op-indexed search + backoff
+/// scheduler) extracts programs with the same per-target invocation
+/// counts and the same extraction cost as the reference pipeline
+/// (full scan, no scheduler), for every seed app x matching mode x
+/// target.
+#[test]
+fn compile_parity_indexed_vs_reference() {
+    fn compile_one(
+        app: &d2a::apps::App,
+        target: Target,
+        mode: Matching,
+        limits: &RunnerLimits,
+        reference: bool,
+    ) -> (RecExpr, f64) {
+        let mut rules = rules_for(&[target], mode);
+        if app.name == "LSTM-WLM" && target == Target::FlexAsr {
+            rules.push(d2a::rewrites::accel::flexasr_unrolled_lstm(35, 650));
+        }
+        let mut eg = EGraph::new(app.shapes.clone());
+        let root = eg.add_expr(&app.expr);
+        let mut runner = if reference {
+            Runner::reference(limits.clone())
+        } else {
+            Runner::new(limits.clone())
+        };
+        runner.run(&mut eg, &rules);
+        let ex = Extractor::new(&eg, AccelCost::for_target(target));
+        let cost = ex.cost_of(root).expect("root must be extractable");
+        (ex.extract(root), cost)
+    }
+    let limits = RunnerLimits {
+        max_iters: 5,
+        max_nodes: 100_000,
+        time_limit: std::time::Duration::from_secs(30),
+    };
+    for app in d2a::apps::table1::all_apps() {
+        for mode in [Matching::Exact, Matching::Flexible] {
+            for target in [Target::FlexAsr, Target::Hlscnn, Target::Vta] {
+                let (fast, fast_cost) = compile_one(&app, target, mode, &limits, false);
+                let (slow, slow_cost) = compile_one(&app, target, mode, &limits, true);
+                assert_eq!(
+                    fast.invocations(target),
+                    slow.invocations(target),
+                    "{} x {mode} x {target}: invocation counts diverge",
+                    app.name
+                );
+                assert!(
+                    (fast_cost - slow_cost).abs() <= 1e-6 * slow_cost.abs().max(1.0),
+                    "{} x {mode} x {target}: extraction cost diverges \
+                     ({fast_cost} vs {slow_cost})",
+                    app.name
+                );
             }
         }
     }
