@@ -6,7 +6,7 @@
 //! Run with: `cargo run --release --example deploy_soc`
 
 use d2a::accel::{Accelerator, FlexAsr, Vta};
-use d2a::codegen::{lower_flex_linear, lower_flex_maxpool_chain, lower_vta_gemm};
+use d2a::ir::Op;
 use d2a::soc::driver::Driver;
 use d2a::soc::reference_soc;
 use d2a::tensor::Tensor;
@@ -22,10 +22,13 @@ fn main() -> anyhow::Result<()> {
     let x = fa.quant(&Tensor::randn(&[4, 32], &mut rng, 1.0));
     let w1 = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 0.3));
     let b1 = fa.quant(&Tensor::randn(&[16], &mut rng, 0.1));
-    let h = drv.invoke(&lower_flex_linear(&fa, &x, &w1, &b1))?;
+    let lin1 = fa.lower(&Op::FlexLinear, &[&x, &w1, &b1]).expect("fits");
+    let h = drv.invoke(&lin1)?;
     let w2 = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b2 = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-    let y = drv.invoke(&lower_flex_linear(&fa, &fa.quant(&h), &w2, &b2))?;
+    let hq = fa.quant(&h);
+    let lin2 = fa.lower(&Op::FlexLinear, &[&hq, &w2, &b2]).expect("fits");
+    let y = drv.invoke(&lin2)?;
     let expect = fa.linear(&fa.quant(&fa.linear(&x, &w1, &b1)), &w2, &b2);
     println!(
         "  output {:?}, error vs ILA fast path {:.2e}",
@@ -35,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("=== synthetic program 2: fused temporal-maxpool chain ===");
     let t = fa.quant(&Tensor::randn(&[64, 64], &mut rng, 1.0));
-    let inv = lower_flex_maxpool_chain(&fa, &t, 4);
+    let inv = fa.lower_maxpool_chain(&t, 4);
     let pooled = drv.invoke(&inv)?;
     println!(
         "  {:?} -> {:?} with ONE store + ONE load ({} data beats)",
@@ -47,7 +50,8 @@ fn main() -> anyhow::Result<()> {
     println!("=== synthetic program 3: heterogeneous FlexASR -> VTA pipeline ===");
     let q = vta.quant(&pooled.reshape(&[4, 64]));
     let wq = vta.quant(&Tensor::randn(&[8, 64], &mut rng, 1.0));
-    let g = drv.invoke(&lower_vta_gemm(&vta, &q, &wq))?;
+    let gemm = vta.lower(&Op::VtaGemm, &[&q, &wq]).expect("fits");
+    let g = drv.invoke(&gemm)?;
     assert_eq!(g.rel_error(&vta.gemm(&q, &wq)), 0.0);
     println!("  VTA GEMM exact ({:?})", g.shape);
 

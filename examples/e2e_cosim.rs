@@ -7,7 +7,7 @@
 //! * **runtime**: this binary loads both HLO modules via the PJRT CPU
 //!   client (`xla` crate) and executes them from Rust — no Python.
 //! * **L3**: the D2A compiler offloads the mirrored IR graph to FlexASR,
-//!   and the coordinator sweeps the 2000-image test set through
+//!   and the session's classify_sweep runs the 2000-image test set through
 //!   co-simulation, reporting the Table-4-style row.
 //!
 //! Run with: `cargo run --release --example e2e_cosim` (after

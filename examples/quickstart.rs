@@ -15,8 +15,7 @@
 //! Run with: `cargo run --release --example quickstart`
 
 use d2a::accel::{Accelerator, FlexAsr};
-use d2a::codegen::lower_flex_linear;
-use d2a::ir::{parse::to_sexpr, GraphBuilder, Target};
+use d2a::ir::{parse::to_sexpr, GraphBuilder, Op, Target};
 use d2a::session::{Bindings, Session};
 use d2a::soc::driver::Driver;
 use d2a::tensor::Tensor;
@@ -72,7 +71,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 4. lower the matched fasr_linear to ILA assembly + MMIO commands
-    let inv = lower_flex_linear(&dev, &xv, &wv, &bv);
+    let inv = dev
+        .lower(&Op::FlexLinear, &[&xv, &wv, &bv])
+        .expect("linear fits the device");
     println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);
     println!("tail of the MMIO stream (Fig. 5d):");
     for cmd in inv.cmds.iter().rev().take(7).rev() {
@@ -84,7 +85,7 @@ fn main() -> anyhow::Result<()> {
     let mut driver = Driver::new(d2a::soc::reference_soc());
     let accel_out = driver.invoke(&inv)?;
     let host_out = dev
-        .exec_op(&d2a::ir::Op::FlexLinear, &[&xv, &wv, &bv])
+        .exec_op(&Op::FlexLinear, &[&xv, &wv, &bv])
         .unwrap();
     println!(
         "\nMMIO-vs-ILA-fast-path error: {:.2e} (same semantics, two views)",

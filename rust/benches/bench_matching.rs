@@ -8,6 +8,14 @@
 //! directory; override with `D2A_BENCH_OUT`. The JSON is a flat array of
 //! per-(app, mode) records, serialized by hand (the offline crate set
 //! has no serde).
+//!
+//! **Regression gate**: `-- --check BENCH_matching_baseline.json`
+//! compares the deterministic work counters (probed candidate classes,
+//! e-matches) against a checked-in baseline and exits non-zero when a
+//! record regresses beyond tolerance (candidates may not grow, nor
+//! matches drift, by more than 25% + 64). Baseline records with a `-1`
+//! sentinel are unprimed: the gate passes and prints the priming
+//! instruction (copy the emitted file over the baseline and commit).
 
 use d2a::apps::table1::all_apps;
 use d2a::compiler::compile_app;
@@ -24,9 +32,126 @@ fn limits() -> RunnerLimits {
     }
 }
 
+/// Minimal field extraction from our own flat record format (the offline
+/// crate set has no serde): returns (app, mode, candidates, matches) per
+/// record. Nested objects are skipped because they contain no "app" key.
+fn parse_records(text: &str) -> Vec<(String, String, i64, i64)> {
+    let mut out = Vec::new();
+    for chunk in text.split('{').skip(1) {
+        let get_str = |key: &str| -> Option<String> {
+            chunk
+                .split(&format!("\"{key}\": \""))
+                .nth(1)
+                .and_then(|rest| rest.split('"').next())
+                .map(str::to_string)
+        };
+        let get_num = |key: &str| -> Option<i64> {
+            chunk.split(&format!("\"{key}\": ")).nth(1).and_then(|rest| {
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_digit() || c == '-'))
+                    .unwrap_or(rest.len());
+                rest[..end].parse::<i64>().ok()
+            })
+        };
+        if let (Some(app), Some(mode), Some(c), Some(m)) =
+            (get_str("app"), get_str("mode"), get_num("candidates"), get_num("matches"))
+        {
+            out.push((app, mode, c, m));
+        }
+    }
+    out
+}
+
+/// Tolerance band: fail when `now` exceeds `base * 1.25 + 64` (work
+/// counters are deterministic; the slack absorbs intentional rule-set
+/// growth without masking a complexity regression).
+fn ceiling(base: i64) -> i64 {
+    base + base / 4 + 64
+}
+
+fn check_against_baseline(
+    current: &[(String, String, i64, i64)],
+    baseline_path: &str,
+) -> Result<(), String> {
+    let text = std::fs::read_to_string(baseline_path)
+        .map_err(|e| format!("cannot read baseline {baseline_path}: {e}"))?;
+    let baseline = parse_records(&text);
+    if baseline.is_empty() {
+        return Err(format!("baseline {baseline_path} contains no records"));
+    }
+    let mut failures = Vec::new();
+    let mut unprimed = 0usize;
+    for (app, mode, cand, mat) in current {
+        let Some((_, _, bc, bm)) =
+            baseline.iter().find(|(a, m, _, _)| a == app && m == mode)
+        else {
+            println!("gate: no baseline record for {app}/{mode} (skipped)");
+            continue;
+        };
+        if *bc < 0 || *bm < 0 {
+            unprimed += 1;
+            continue;
+        }
+        if *cand > ceiling(*bc) {
+            failures.push(format!(
+                "{app}/{mode}: candidates {cand} regressed past baseline {bc} \
+                 (ceiling {})",
+                ceiling(*bc)
+            ));
+        }
+        if *mat > ceiling(*bm) || *mat < *bm - *bm / 4 - 64 {
+            failures.push(format!(
+                "{app}/{mode}: matches {mat} drifted from baseline {bm} \
+                 (band [{}, {}])",
+                *bm - *bm / 4 - 64,
+                ceiling(*bm)
+            ));
+        }
+    }
+    // coverage: a primed baseline row with no current counterpart means
+    // an app/mode silently dropped out of the bench — that is itself a
+    // regression, not a pass
+    for (app, mode, bc, bm) in &baseline {
+        if *bc < 0 || *bm < 0 {
+            continue;
+        }
+        if !current.iter().any(|(a, m, _, _)| a == app && m == mode) {
+            failures.push(format!(
+                "{app}/{mode}: primed baseline record has no current \
+                 measurement (app/mode dropped from the bench?)"
+            ));
+        }
+    }
+    if unprimed > 0 {
+        println!(
+            "gate: {unprimed} baseline record(s) unprimed (-1 sentinel); to arm \
+             them, copy the emitted BENCH_matching.json over {baseline_path} \
+             and commit"
+        );
+    }
+    if failures.is_empty() {
+        println!("gate: candidates/matches within tolerance of {baseline_path}");
+        Ok(())
+    } else {
+        Err(failures.join("\n"))
+    }
+}
+
 fn main() -> std::io::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let baseline = args
+        .windows(2)
+        .find(|w| w[0] == "--check")
+        .map(|w| w[1].clone());
+    // a dangling `--check` with no path would silently skip the gate
+    if baseline.is_none() && args.iter().any(|a| a == "--check") {
+        eprintln!("--check requires a baseline path argument");
+        std::process::exit(1);
+    }
+
     let targets = [Target::FlexAsr, Target::Hlscnn, Target::Vta];
     let mut records = Vec::new();
+    let mut counters = Vec::new();
     println!("=== bench_matching: saturation smoke (indexed matcher) ===");
     println!(
         "{:<14} {:<8} {:>6} {:>8} {:>8} {:>11} {:>9} {:>9}",
@@ -47,6 +172,12 @@ fn main() -> std::io::Result<()> {
                 res.total_matches(),
                 ms
             );
+            counters.push((
+                app.name.to_string(),
+                mode.to_string(),
+                res.candidate_classes() as i64,
+                res.total_matches() as i64,
+            ));
             records.push(format!(
                 "  {{\"app\": \"{}\", \"mode\": \"{}\", \"stop\": \"{:?}\", \
                  \"iters\": {}, \"classes\": {}, \"nodes\": {}, \
@@ -72,5 +203,12 @@ fn main() -> std::io::Result<()> {
     let json = format!("[\n{}\n]\n", records.join(",\n"));
     std::fs::write(&out, json)?;
     println!("wrote {out}");
+
+    if let Some(path) = baseline {
+        if let Err(msg) = check_against_baseline(&counters, &path) {
+            eprintln!("matching regression gate FAILED:\n{msg}");
+            std::process::exit(1);
+        }
+    }
     Ok(())
 }

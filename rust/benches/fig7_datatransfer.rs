@@ -8,7 +8,6 @@
 
 use d2a::accel::FlexAsr;
 use d2a::codegen::optimize::{pool_chains, transfer_stats};
-use d2a::codegen::{lower_flex_maxpool_chain, lower_flex_maxpool_chain_naive};
 use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
 use d2a::ir::{parse::to_sexpr, Op, RecExpr, Target};
 use d2a::rewrites::{compiler_ir, rules_for_extended, Matching};
@@ -51,8 +50,8 @@ fn main() {
     let dev = FlexAsr::new();
     let mut rng = Rng::new(7);
     let t = dev.quant(&Tensor::randn(&[128, 128], &mut rng, 1.0));
-    let fused_inv = lower_flex_maxpool_chain(&dev, &t, 4);
-    let naive_invs = lower_flex_maxpool_chain_naive(&dev, &t, 4);
+    let fused_inv = dev.lower_maxpool_chain(&t, 4);
+    let naive_invs = dev.lower_maxpool_chain_naive(&t, 4);
     let naive_beats: usize = naive_invs.iter().map(|i| i.data_beats()).sum();
     println!(
         "MMIO data beats: naive {} vs fused {} ({:.2}x reduction in stores alone;\n\

@@ -1,5 +1,10 @@
 //! Regenerates the **§4.4.2 speedup claim**: "for FlexASR, we see a ~30x
-//! speedup on average with the ILA simulator compared to RTL simulation".
+//! speedup on average with the ILA simulator compared to RTL simulation",
+//! plus a functional-vs-MMIO **fidelity section**: the same compiled
+//! program run under `ExecBackend::Functional` and `ExecBackend::IlaMmio`
+//! must produce bit-identical outputs (and `CrossCheck` must report a
+//! clean fidelity table), while the MMIO backend pays the byte-level
+//! interface cost this bench quantifies.
 //!
 //! Workload: FlexASR linear layers at several sizes. The ILA simulator
 //! executes one whole-operation state update per instruction; the
@@ -7,10 +12,76 @@
 //! decode in every lane.
 
 use d2a::accel::FlexAsr;
+use d2a::ir::{GraphBuilder, Target};
 use d2a::rtl::RtlFlexAsr;
+use d2a::session::{Bindings, ExecBackend, Session};
 use d2a::tensor::Tensor;
 use d2a::util::Rng;
 use std::time::Instant;
+
+/// Functional vs MMIO vs CrossCheck over one compiled linear program.
+fn fidelity_section() {
+    println!();
+    println!("=== backend fidelity: functional vs ILA-MMIO (one FlexASR linear) ===");
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    g.linear(x, w, b);
+    let expr = g.finish();
+    let shapes = [
+        ("x".to_string(), vec![32usize, 128]),
+        ("w".to_string(), vec![128, 128]),
+        ("b".to_string(), vec![128]),
+    ]
+    .into_iter()
+    .collect();
+    let mut rng = Rng::new(12);
+    let bindings = Bindings::new()
+        .with("x", Tensor::randn(&[32, 128], &mut rng, 1.0))
+        .with("w", Tensor::randn(&[128, 128], &mut rng, 0.3))
+        .with("b", Tensor::randn(&[128], &mut rng, 0.1));
+
+    let functional = Session::builder().targets(&[Target::FlexAsr]).build();
+    let program = functional.compile_expr(&expr, &shapes);
+    let reps = 20u32;
+    let t0 = Instant::now();
+    let mut f_out = program.run(&bindings).unwrap();
+    for _ in 1..reps {
+        f_out = program.run(&bindings).unwrap();
+    }
+    let t_func = t0.elapsed() / reps;
+
+    let mmio = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build()
+        .attach(program.expr().clone());
+    let t0 = Instant::now();
+    // NB: run() builds a fresh ExecEngine (and thus the FlexASR IlaSim)
+    // per call, so this ratio includes per-call simulator construction —
+    // the realistic cost of single-point MMIO evaluations; batch APIs
+    // amortize one engine per worker.
+    let mut m_out = mmio.run(&bindings).unwrap();
+    for _ in 1..reps {
+        m_out = mmio.run(&bindings).unwrap();
+    }
+    let t_mmio = t0.elapsed() / reps;
+
+    assert_eq!(f_out, m_out, "backends must be bit-identical");
+    println!(
+        "functional {t_func:.1?}/eval vs ila-mmio {t_mmio:.1?}/eval \
+         ({:.1}x interface cost), outputs bit-identical",
+        t_mmio.as_secs_f64() / t_func.as_secs_f64().max(1e-12)
+    );
+
+    let crosscheck = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::CrossCheck)
+        .build()
+        .attach(program.expr().clone());
+    let trace = crosscheck.run_traced(&bindings).unwrap();
+    assert!(trace.fidelity.is_clean(), "{}", trace.fidelity);
+    print!("{}", trace.fidelity);
+}
 
 fn main() {
     println!("=== ILA simulation vs RTL-level simulation (FlexASR linear) ===");
@@ -52,4 +123,6 @@ fn main() {
     }
     let avg = speedups.iter().sum::<f64>() / speedups.len() as f64;
     println!("average speedup: {avg:.1}x (paper: ~30x vs a commercial Verilog simulator)");
+
+    fidelity_section();
 }

@@ -130,15 +130,25 @@ fn matching_benches() {
 
 /// Per-node accelerator dispatch: the co-sim hot loop resolves an
 /// accelerator for every accelerator node of every input. The registry's
-/// target-indexed lookup must be no slower than the old linear scan
-/// (`accel_for`), and the plan-driven `CompiledProgram::run` must be no
-/// slower than the hook-interception path it replaces.
-#[allow(deprecated)] // benches the deprecated scan against the registry
+/// target-indexed lookup must be no slower than the seed-era linear scan
+/// (reproduced locally; the deprecated `accel_for` shim is deleted), and
+/// the plan-driven `CompiledProgram::run` must be no slower than the
+/// hook-interception path it replaces.
 fn dispatch_benches(rng: &mut Rng) {
+    use d2a::accel::Accelerator;
     use d2a::ir::{GraphBuilder, Op, Target};
 
+    /// The seed-era O(n) scan, kept here as the bench baseline.
+    fn accel_for_scan<'a>(
+        accels: &'a [Box<dyn Accelerator>],
+        op: &Op,
+    ) -> Option<&'a dyn Accelerator> {
+        let t = op.target();
+        accels.iter().map(|a| a.as_ref()).find(|a| a.target() == t)
+    }
+
     let registry = AcceleratorRegistry::for_rev(DesignRev::Updated);
-    let accels = d2a::coordinator::accelerators(DesignRev::Updated);
+    let accels = d2a::session::registry::models(DesignRev::Updated);
     let probe = [
         Op::FlexLinear,
         Op::VtaGemm,
@@ -152,10 +162,10 @@ fn dispatch_benches(rng: &mut Rng) {
             }
         }
     });
-    time("dispatch: linear-scan accel_for, 4 ops x 10k", 200, || {
+    time("dispatch: linear-scan baseline, 4 ops x 10k", 200, || {
         for _ in 0..10_000 {
             for op in &probe {
-                black_box(d2a::accel::accel_for(&accels, black_box(op)).map(|a| a.name()));
+                black_box(accel_for_scan(&accels, black_box(op)).map(|a| a.name()));
             }
         }
     });

@@ -13,11 +13,13 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::ila::Ila;
+use crate::codegen::{stream_bytes, LoweredInvocation, ReadPlan};
+use crate::ila::asm::Fragment;
+use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
 use crate::numerics::fixed_point::FixedPointFormat;
-use crate::numerics::NumericFormat;
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
+use self::model as hx;
 
 /// HLSCNN numerics configuration — the co-design knob of Table 4.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -69,8 +71,16 @@ impl Hlscnn {
     }
 
     /// Bit-accurate 2-D convolution: weights and activations snapped to
-    /// their fixed-point lattices, wide MAC accumulation, output
-    /// requantized to the activation format.
+    /// their fixed-point lattices, integer MAC accumulation (64-bit),
+    /// output requantized to the activation format.
+    ///
+    /// This runs the **same integer kernel** as the ILA model
+    /// ([`model::conv2d_codes`]), so the tensor view and the MMIO view
+    /// are bit-identical by construction — with one deliberate exception:
+    /// this path quantizes weights round-to-nearest into the store format
+    /// (the software contract), while the original silicon truncates the
+    /// wire code ([`model::wire_to_store`]); `ExecBackend::CrossCheck`
+    /// exists to catch exactly that class of divergence.
     pub fn conv2d(
         &self,
         x: &Tensor,
@@ -78,13 +88,141 @@ impl Hlscnn {
         stride: (usize, usize),
         pad: (usize, usize),
     ) -> Tensor {
-        let xq = self.cfg.act_fmt.quantize(x);
-        let wq = self.cfg.weight_fmt.quantize(w);
-        // both operand lattices are dyadic, so f32 conv over lattice
-        // values reproduces the integer MAC datapath exactly at these
-        // magnitudes; the lossy step is the output requantization.
-        let acc = ops::conv2d(&xq, &wq, stride, pad);
-        self.cfg.act_fmt.quantize(&acc)
+        assert_eq!(x.shape.len(), 4, "conv2d expects NCHW activations");
+        assert_eq!(w.shape.len(), 4, "conv2d expects OIHW weights");
+        let (n, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (o, kh, kw) = (w.shape[0], w.shape[2], w.shape[3]);
+        assert_eq!(w.shape[1], c, "conv2d channel mismatch");
+        assert!(
+            h + 2 * pad.0 >= kh && wd + 2 * pad.1 >= kw,
+            "conv2d kernel larger than padded input"
+        );
+        let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
+        let ow = (wd + 2 * pad.1 - kw) / stride.1 + 1;
+        let act_fmt = self.cfg.act_fmt;
+        let wgt_fmt = self.cfg.weight_fmt;
+        // store-format weight codes in the device's O-major HWC layout
+        let mut wgts = vec![0i64; o * kh * kw * c];
+        for oc in 0..o {
+            for dy in 0..kh {
+                for dx in 0..kw {
+                    for ch in 0..c {
+                        wgts[((oc * kh + dy) * kw + dx) * c + ch] =
+                            wgt_fmt.encode(w.data[((oc * c + ch) * kh + dy) * kw + dx]);
+                    }
+                }
+            }
+        }
+        let mut out = vec![0.0f32; n * o * oh * ow];
+        let mut acts = vec![0i16; h * wd * c];
+        for b in 0..n {
+            // NHWC activation codes for this image
+            for y in 0..h {
+                for xw in 0..wd {
+                    for ch in 0..c {
+                        acts[(y * wd + xw) * c + ch] =
+                            act_fmt.encode(x.data[((b * c + ch) * h + y) * wd + xw])
+                                as i16;
+                    }
+                }
+            }
+            let codes = hx::conv2d_codes(
+                &acts,
+                &wgts,
+                (c, h, wd),
+                o,
+                (kh, kw),
+                stride,
+                pad,
+                act_fmt,
+                wgt_fmt,
+            );
+            for y in 0..oh {
+                for xw in 0..ow {
+                    for oc in 0..o {
+                        out[((b * o + oc) * oh + y) * ow + xw] =
+                            act_fmt.decode(codes[(y * ow + xw) * o + oc] as i64);
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![n, o, oh, ow], out)
+    }
+
+    /// Lower `hlscnn_conv2d` to an MMIO command program (batch-1 device;
+    /// the engine falls back to the tensor path for batched inputs).
+    fn lower_conv2d(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+    ) -> Option<LoweredInvocation> {
+        if x.shape.len() != 4 || w.shape.len() != 4 || x.shape[0] != 1 {
+            return None;
+        }
+        let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
+        let (o, kh, kw) = (w.shape[0], w.shape[2], w.shape[3]);
+        if w.shape[1] != c || kh == 0 || kw == 0 || stride.0 == 0 || stride.1 == 0 {
+            return None;
+        }
+        if h + 2 * pad.0 < kh || wd + 2 * pad.1 < kw {
+            return None;
+        }
+        // config-register field widths and scratchpad capacities
+        if c > 0xFFF || h > 0xFFF || wd > 0xFFF || o > 0xFFF {
+            return None;
+        }
+        if kh > 0xFF || kw > 0xFF || stride.0 > 0xFF || stride.1 > 0xFF
+            || pad.0 > 0xFF || pad.1 > 0xFF
+        {
+            return None;
+        }
+        let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
+        let ow = (wd + 2 * pad.1 - kw) / stride.1 + 1;
+        if 2 * c * h * wd > hx::ACT_SIZE
+            || 2 * o * c * kh * kw > hx::WGT_SIZE
+            || 2 * o * oh * ow > hx::OUT_SIZE
+        {
+            return None;
+        }
+
+        let mut cmds = Vec::new();
+        stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(self, x));
+        stream_bytes(&mut cmds, hx::WGT_BASE, &hx::encode_wgt(self, w));
+        cmds.push(Cmd::write_u64(
+            hx::CFG_SHAPE,
+            (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24) | ((o as u64) << 36),
+        ));
+        cmds.push(Cmd::write_u64(
+            hx::CFG_KERNEL,
+            (kh as u64)
+                | ((kw as u64) << 8)
+                | ((stride.0 as u64) << 16)
+                | ((stride.1 as u64) << 24)
+                | ((pad.0 as u64) << 32)
+                | ((pad.1 as u64) << 40),
+        ));
+        cmds.push(Cmd::write_u64(hx::CFG_START, 1));
+
+        let mut asm = Fragment::new();
+        asm.push("HLSCNN_ILA.wr_act", &["%fmap"])
+            .push("HLSCNN_ILA.wr_wgt", &["%filters"])
+            .push("HLSCNN_ILA.cfg_conv_shape", &["%c", "%h", "%w", "%o"])
+            .push("HLSCNN_ILA.cfg_conv_kernel", &["%k", "%s", "%p"])
+            .push("HLSCNN_ILA.conv_start", &[])
+            .push("HLSCNN_ILA.rd_out", &["%out"]);
+
+        Some(LoweredInvocation {
+            target: Target::Hlscnn,
+            asm,
+            cmds,
+            read: ReadPlan::HlscnnI16 {
+                base: hx::OUT_BASE,
+                shape: vec![1, o, oh, ow],
+                fmt: self.cfg.act_fmt,
+            },
+        })
     }
 }
 
@@ -110,6 +248,15 @@ impl Accelerator for Hlscnn {
         }
     }
 
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation> {
+        match op {
+            Op::HlscnnConv2d { stride, pad } => {
+                self.lower_conv2d(inputs[0], inputs[1], *stride, *pad)
+            }
+            _ => None,
+        }
+    }
+
     fn supported_ops(&self) -> Vec<&'static str> {
         vec!["Conv2D"]
     }
@@ -118,6 +265,7 @@ impl Accelerator for Hlscnn {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::ops;
     use crate::util::Rng;
 
     #[test]

@@ -8,6 +8,7 @@
 
 use super::Hlscnn;
 use crate::ila::{Cmd, Ila, IlaState};
+use crate::numerics::fixed_point::FixedPointFormat;
 use crate::tensor::Tensor;
 
 // ----- address map ------------------------------------------------------
@@ -26,6 +27,97 @@ pub const CFG_SHAPE: u64 = 0xB000_0010;
 pub const CFG_KERNEL: u64 = 0xB000_0020;
 /// trigger.
 pub const CFG_START: u64 = 0xB000_0030;
+
+/// The interface ("wire") format for weights: 16-bit fixed point with 12
+/// fraction bits, matching the *updated* weight store. The driver always
+/// ships weights at wire precision; the device adapts them to its store
+/// width (see [`wire_to_store`]).
+pub fn wire_wgt_fmt() -> FixedPointFormat {
+    FixedPointFormat::new(16, 12)
+}
+
+/// Adapt a wire-format weight code to the device's weight-store format.
+///
+/// The updated 16-bit store matches the wire format, so codes pass
+/// through unchanged. The **original** 8-bit store drops the extra
+/// fraction bits with an arithmetic right shift (truncation toward
+/// negative infinity — what dropping low-order bits of a two's-complement
+/// register does in RTL) and saturates at the store rails. The software
+/// stack's tensor-level model assumed round-to-nearest into the store
+/// format, so roughly half of all trained weights land one store step
+/// below what the compiler believes — invisible in operation-level
+/// tolerance tests, surfaced by `ExecBackend::CrossCheck` (the
+/// repo-native version of the paper's "unknown flaw" found by
+/// application-level validation).
+pub fn wire_to_store(store: FixedPointFormat, code: i64) -> i64 {
+    let wire = wire_wgt_fmt();
+    let shift = wire.frac_bits.saturating_sub(store.frac_bits);
+    let shifted = code >> shift;
+    // defensive rails for store widths narrower than `wire.bits - shift`;
+    // with the two shipped configs (Q16.12 wire → Q8.2 or Q16.12 store)
+    // the shifted i16 range already fits and this never engages
+    let max = (1i64 << (store.bits - 1)) - 1;
+    let min = -(1i64 << (store.bits - 1));
+    shifted.clamp(min, max)
+}
+
+/// The shared integer convolution datapath: NHWC activation codes ×
+/// store-format weight codes → NHWC output codes, 64-bit accumulation,
+/// requantized to the activation format at writeback.
+///
+/// Both the ILA's `conv_start` update and the tensor fast path
+/// ([`Hlscnn::conv2d`]) call this one function, so the two views are
+/// bit-identical **by construction** whenever they agree on the store
+/// codes (always true for the updated design; the original design's
+/// wire→store truncation makes them diverge — see [`wire_to_store`]).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_codes(
+    acts: &[i16],
+    wgts_store: &[i64],
+    (c_in, h, w): (usize, usize, usize),
+    o: usize,
+    (kh, kw): (usize, usize),
+    (sh, sw): (usize, usize),
+    (ph, pw): (usize, usize),
+    act_fmt: FixedPointFormat,
+    wgt_fmt: FixedPointFormat,
+) -> Vec<i16> {
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+    let mut out_codes = vec![0i16; oh * ow * o];
+    for y in 0..oh {
+        for xw in 0..ow {
+            for oc in 0..o {
+                let mut acc: i64 = 0;
+                for dy in 0..kh {
+                    let iy = (y * sh + dy) as isize - ph as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let ix = (xw * sw + dx) as isize - pw as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        for ch in 0..c_in {
+                            let a = acts[(iy as usize * w + ix as usize) * c_in + ch]
+                                as i64;
+                            let wv =
+                                wgts_store[((oc * kh + dy) * kw + dx) * c_in + ch];
+                            acc += a * wv;
+                        }
+                    }
+                }
+                // acc has act_frac + wgt_frac fractional bits; shift back
+                // to the activation format, saturating
+                let val = acc as f64
+                    * 0.5f64.powi((act_fmt.frac_bits + wgt_fmt.frac_bits) as i32);
+                out_codes[(y * ow + xw) * o + oc] = act_fmt.encode(val as f32) as i16;
+            }
+        }
+    }
+    out_codes
+}
 
 fn i16_store(mem: &mut [u8], base: usize, vals: impl Iterator<Item = i16>) {
     for (i, v) in vals.enumerate() {
@@ -61,11 +153,12 @@ pub fn encode_act_nhwc(dev: &Hlscnn, x: &Tensor) -> Vec<u8> {
 }
 
 /// Encode an OIHW weight tensor into the device's weight layout (O-major,
-/// per-filter HWC order), in the configured weight width (always shipped
-/// as i16 codes on the wire; the device re-truncates to its store width).
-pub fn encode_wgt(dev: &Hlscnn, w: &Tensor) -> Vec<u8> {
+/// per-filter HWC order), always at **wire precision** ([`wire_wgt_fmt`],
+/// i16 with 12 fraction bits); the device adapts the codes to its store
+/// width on use ([`wire_to_store`]).
+pub fn encode_wgt(_dev: &Hlscnn, w: &Tensor) -> Vec<u8> {
     let (o, c, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
-    let fmt = dev.cfg.weight_fmt;
+    let fmt = wire_wgt_fmt();
     let mut out = vec![0u8; o * c * kh * kw * 2];
     let mut idx = 0;
     for oc in 0..o {
@@ -85,8 +178,13 @@ pub fn encode_wgt(dev: &Hlscnn, w: &Tensor) -> Vec<u8> {
 
 /// Decode the device's NHWC i16 output buffer back to an NCHW tensor.
 pub fn decode_out_nchw(dev: &Hlscnn, codes: &[i16], shape: &[usize]) -> Tensor {
+    decode_out_nchw_fmt(dev.cfg.act_fmt, codes, shape)
+}
+
+/// [`decode_out_nchw`] with an explicit activation format (what a
+/// [`crate::codegen::ReadPlan`] carries).
+pub fn decode_out_nchw_fmt(fmt: FixedPointFormat, codes: &[i16], shape: &[usize]) -> Tensor {
     let (n, o, oh, ow) = (shape[0], shape[1], shape[2], shape[3]);
-    let fmt = dev.cfg.act_fmt;
     let mut out = vec![0.0f32; n * o * oh * ow];
     let mut idx = 0;
     for b in 0..n {
@@ -174,53 +272,30 @@ pub fn build_ila(dev: Hlscnn) -> Ila {
             if kh == 0 || kw == 0 || sh == 0 || sw == 0 {
                 return Err("kernel/stride not configured".into());
             }
-            let oh = (h + 2 * ph).checked_sub(kh).ok_or("kernel too large")? / sh + 1;
-            let ow = (w + 2 * pw).checked_sub(kw).ok_or("kernel too large")? / sw + 1;
+            // validate geometry before touching the scratchpads
+            (h + 2 * ph).checked_sub(kh).ok_or("kernel too large")?;
+            (w + 2 * pw).checked_sub(kw).ok_or("kernel too large")?;
 
             let act_fmt = dev.cfg.act_fmt;
             let wgt_fmt = dev.cfg.weight_fmt;
             let acts = i16_load(s.mem("act"), 0, h * w * c_in);
-            let wgts = i16_load(s.mem("wgt"), 0, o * kh * kw * c_in);
-            // integer conv with 64-bit accumulation over NHWC layout; the
-            // device re-truncates weight codes to its store width
-            let mut out_codes = vec![0i16; oh * ow * o];
-            for y in 0..oh {
-                for xw in 0..ow {
-                    for oc in 0..o {
-                        let mut acc: i64 = 0;
-                        for dy in 0..kh {
-                            let iy = (y * sh + dy) as isize - ph as isize;
-                            if iy < 0 || iy >= h as isize {
-                                continue;
-                            }
-                            for dx in 0..kw {
-                                let ix = (xw * sw + dx) as isize - pw as isize;
-                                if ix < 0 || ix >= w as isize {
-                                    continue;
-                                }
-                                for ch in 0..c_in {
-                                    let a = acts
-                                        [(iy as usize * w + ix as usize) * c_in + ch]
-                                        as i64;
-                                    let wv = wgt_fmt.encode(wgt_fmt.decode(
-                                        wgts[((oc * kh + dy) * kw + dx) * c_in + ch]
-                                            as i64,
-                                    ));
-                                    acc += a * wv;
-                                }
-                            }
-                        }
-                        // acc has act_frac + wgt_frac fractional bits;
-                        // shift back to the activation format, saturating
-                        let val = acc as f64
-                            * 0.5f64.powi(
-                                (act_fmt.frac_bits + wgt_fmt.frac_bits) as i32,
-                            );
-                        out_codes[(y * ow + xw) * o + oc] =
-                            act_fmt.encode(val as f32) as i16;
-                    }
-                }
-            }
+            // adapt wire-precision weight codes to the store width (the
+            // original 8-bit store truncates — see `wire_to_store`)
+            let wgts: Vec<i64> = i16_load(s.mem("wgt"), 0, o * kh * kw * c_in)
+                .into_iter()
+                .map(|code| wire_to_store(wgt_fmt, code as i64))
+                .collect();
+            let out_codes = conv2d_codes(
+                &acts,
+                &wgts,
+                (c_in, h, w),
+                o,
+                (kh, kw),
+                (sh, sw),
+                (ph, pw),
+                act_fmt,
+                wgt_fmt,
+            );
             i16_store(s.mem_mut("out"), 0, out_codes.into_iter());
             Ok(None)
         },
@@ -233,58 +308,55 @@ mod tests {
     use super::*;
     use crate::accel::hlscnn::HlscnnConfig;
     use crate::ila::sim::IlaSim;
-    use crate::util::Rng;
 
-    fn stream(sim: &mut IlaSim, base: u64, bytes: &[u8]) {
-        for (i, chunk) in bytes.chunks(16).enumerate() {
-            let mut data = [0u8; 16];
-            data[..chunk.len()].copy_from_slice(chunk);
-            sim.step(&Cmd::write(base + 16 * i as u64, data)).unwrap();
-        }
-    }
-
-    /// VT3-style consistency: MMIO model vs tensor-level fast path.
-    #[test]
-    fn mmio_matches_tensor_conv() {
-        let dev = Hlscnn::new(HlscnnConfig::updated());
-        let mut rng = Rng::new(41);
-        let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
-        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
-        let expect = dev.conv2d(&x, &w, (1, 1), (1, 1));
-
-        let mut sim = IlaSim::new(build_ila(dev));
-        stream(&mut sim, ACT_BASE, &encode_act_nhwc(&dev, &x));
-        stream(&mut sim, WGT_BASE, &encode_wgt(&dev, &w));
-        let shape_reg = 3u64 | (6 << 12) | (6 << 24) | (4 << 36);
-        sim.step(&Cmd::write_u64(CFG_SHAPE, shape_reg)).unwrap();
-        let kern_reg =
-            3u64 | (3 << 8) | (1 << 16) | (1 << 24) | (1 << 32) | (1 << 40);
-        sim.step(&Cmd::write_u64(CFG_KERNEL, kern_reg)).unwrap();
-        sim.step(&Cmd::write_u64(CFG_START, 1)).unwrap();
-
-        let n_out = 4 * 6 * 6;
-        let mut codes = Vec::new();
-        let mut addr = OUT_BASE;
-        while codes.len() < n_out {
-            let d = sim.step(&Cmd::read(addr)).unwrap().unwrap();
-            for pair in d.chunks(2) {
-                codes.push(i16::from_le_bytes(pair.try_into().unwrap()));
-            }
-            addr += 16;
-        }
-        codes.truncate(n_out);
-        let got = decode_out_nchw(&dev, &codes, &[1, 4, 6, 6]);
-        assert!(
-            got.max_abs_diff(&expect) <= dev.cfg.act_fmt.step() + 1e-6,
-            "max diff {}",
-            got.max_abs_diff(&expect)
-        );
-    }
+    // NOTE: the seed-era `mmio_matches_tensor_conv` test was subsumed by
+    // `tests/backend_parity.rs`, which asserts bit-exact Functional ≡
+    // IlaMmio agreement for the updated design through the session
+    // backend engine (and that CrossCheck flags the original design).
 
     #[test]
     fn trigger_without_config_errors() {
         let dev = Hlscnn::default();
         let mut sim = IlaSim::new(build_ila(dev));
         assert!(sim.step(&Cmd::write_u64(CFG_START, 1)).is_err());
+    }
+
+    #[test]
+    fn wire_to_store_is_identity_for_the_updated_width() {
+        let store = HlscnnConfig::updated().weight_fmt;
+        for code in [-32768i64, -1024, -1, 0, 1, 513, 32767] {
+            assert_eq!(wire_to_store(store, code), code);
+        }
+    }
+
+    #[test]
+    fn wire_to_store_truncates_on_the_original_width() {
+        let store = HlscnnConfig::original().weight_fmt;
+        // wire fixed<16,12> → store fixed<8,2>: 10 fraction bits dropped
+        // by arithmetic shift (floor), not round-to-nearest
+        assert_eq!(wire_to_store(store, 1024), 1); // exactly 0.25
+        assert_eq!(wire_to_store(store, 1023), 0); // 0.2498 → floor 0
+        assert_eq!(wire_to_store(store, 1535), 1); // 0.3748 → floor, round would give 0.25 too
+        assert_eq!(wire_to_store(store, 1536), 1); // 0.375 → round-to-nearest(-even) gives 2; RTL floors to 1
+        assert_eq!(wire_to_store(store, -1), -1); // -2^-12 → floor -0.25
+        // extreme wire codes: the 10-bit shift alone keeps i16 codes
+        // inside the 8-bit store range ([-32, 31] of 0.25 steps), so
+        // these are shift results, not clamped rails
+        assert_eq!(wire_to_store(store, 32767), 31);
+        assert_eq!(wire_to_store(store, -32768), -32);
+    }
+
+    #[test]
+    fn the_original_store_diverges_from_round_to_nearest() {
+        // the flaw CrossCheck surfaces: the software model rounds 0.38 to
+        // the nearest store step (0.5); the silicon's bit-drop floors the
+        // wire code (1556 >> 10 = 1) to 0.25
+        let store = HlscnnConfig::original().weight_fmt;
+        let wire = wire_wgt_fmt();
+        let value = 0.38f32;
+        let rtl = store.decode(wire_to_store(store, wire.encode(value)));
+        let sw = store.quantize_value(value);
+        assert_eq!(sw, 0.5, "software rounds to nearest");
+        assert_eq!(rtl, 0.25, "silicon floors");
     }
 }

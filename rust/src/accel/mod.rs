@@ -5,16 +5,20 @@
 //!
 //! 1. a full **ILA model** over its MMIO interface ([`Accelerator::
 //!    build_ila`]) — config registers, buffers, trigger instructions —
-//!    executed by [`crate::ila::sim::IlaSim`] (used by codegen/SoC
-//!    deployment and the formal/driver-level tests), and
+//!    executed by [`crate::ila::sim::IlaSim`], reached per-op through
+//!    [`Accelerator::lower`] (the Fig. 5 driver-side lowering: op →
+//!    command program + read plan), and
 //! 2. a **tensor-level bit-accurate fast path** ([`Accelerator::exec_op`])
 //!    computing the same custom-numerics results directly over tensors
-//!    (used by the co-simulation inner loop, where 2000-image sweeps make
-//!    byte-level MMIO emulation pointlessly slow).
+//!    (the default for 2000-image sweeps, where byte-level MMIO emulation
+//!    is pointlessly slow).
 //!
-//! Consistency between the two is itself tested (`mmio_matches_tensor_*`),
-//! which is our VT3-style check: the instruction-interface model against a
-//! second implementation of the semantics.
+//! Which view executes is a per-session choice
+//! ([`crate::session::ExecBackend`]): `Functional` runs view 2, `IlaMmio`
+//! runs view 1, and `CrossCheck` runs both and bit-compares them on every
+//! invocation — the always-on VT3-style consistency check that replaced
+//! the old ad-hoc `mmio_matches_tensor_*` tests (see
+//! `tests/backend_parity.rs`).
 
 pub mod flexasr;
 pub mod hlscnn;
@@ -24,6 +28,7 @@ pub use flexasr::FlexAsr;
 pub use hlscnn::{Hlscnn, HlscnnConfig};
 pub use vta::Vta;
 
+use crate::codegen::LoweredInvocation;
 use crate::ila::Ila;
 use crate::ir::{Op, Target};
 use crate::tensor::Tensor;
@@ -43,20 +48,16 @@ pub trait Accelerator: Send + Sync {
     /// Returns `None` when the op does not belong to this accelerator.
     fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor>;
 
+    /// Lower one accelerator IR op to a driver-level MMIO invocation
+    /// (operand encoding + command program + result read plan) for
+    /// execution on the accelerator's ILA simulator.
+    ///
+    /// Returns `None` when the op does not belong to this accelerator,
+    /// is pure data movement, or does not fit the device (operand shapes
+    /// outside config-register field widths or scratchpad capacities) —
+    /// the execution engine then falls back to [`Self::exec_op`].
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation>;
+
     /// Names of the supported operations (Appendix A).
     fn supported_ops(&self) -> Vec<&'static str>;
-}
-
-/// Look up the accelerator that owns `op` among the given set by linear
-/// scan.
-#[deprecated(
-    note = "use session::AcceleratorRegistry::for_op — an O(1) \
-            target-indexed lookup"
-)]
-pub fn accel_for<'a>(
-    accels: &'a [Box<dyn Accelerator>],
-    op: &Op,
-) -> Option<&'a dyn Accelerator> {
-    let t = op.target();
-    accels.iter().map(|a| a.as_ref()).find(|a| a.target() == t)
 }

@@ -11,10 +11,13 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::ila::Ila;
+use crate::codegen::{stream_bytes, LoweredInvocation, ReadPlan};
+use crate::ila::asm::Fragment;
+use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
 use crate::numerics::int8::{int8_gemm_acc, Int8Format};
 use crate::tensor::Tensor;
+use self::model as vx;
 
 /// The VTA accelerator model.
 #[derive(Debug, Clone, Copy, Default)]
@@ -50,6 +53,50 @@ impl Vta {
         )
     }
 
+    /// Lower `vta_gemm` (dense semantics) to the fixed
+    /// load/load/reset/gemm/store instruction sequence (Appendix A).
+    fn lower_gemm(&self, x: &Tensor, w: &Tensor) -> Option<LoweredInvocation> {
+        if x.shape.len() != 2 || w.shape.len() != 2 {
+            return None;
+        }
+        let (n, k) = (x.shape[0], x.shape[1]);
+        let m = w.shape[0];
+        if w.shape[1] != k || n == 0 || k == 0 || m == 0 {
+            return None;
+        }
+        // instruction-word field widths and scratchpad capacities
+        if n > 0xFFFF || k > 0xFFFF || m > 0xFFFF || n * m > u32::MAX as usize {
+            return None;
+        }
+        if n * k > vx::INP_SIZE || m * k > vx::WGT_SIZE || n * m * 4 > vx::ACC_SIZE {
+            return None;
+        }
+        let sx = self.int8.select_scale(x.max_abs());
+        let sw = self.int8.select_scale(w.max_abs());
+        let xc: Vec<u8> = x.data.iter().map(|&v| self.int8.encode(v, sx) as u8).collect();
+        let wc: Vec<u8> = w.data.iter().map(|&v| self.int8.encode(v, sw) as u8).collect();
+
+        let mut cmds = Vec::new();
+        stream_bytes(&mut cmds, vx::INP_BASE, &xc);
+        stream_bytes(&mut cmds, vx::WGT_BASE, &wc);
+        cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)));
+        cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)));
+
+        let mut asm = Fragment::new();
+        asm.push("VTA_ILA.load_inp", &["%x"])
+            .push("VTA_ILA.load_wgt", &["%w"])
+            .push("VTA_ILA.reset_acc", &[])
+            .push("VTA_ILA.gemm", &["%n", "%k", "%m"])
+            .push("VTA_ILA.store_out", &["%out"]);
+
+        Some(LoweredInvocation {
+            target: Target::Vta,
+            asm,
+            cmds,
+            read: ReadPlan::VtaI32 { base: vx::ACC_BASE, shape: vec![n, m], scale: sx * sw },
+        })
+    }
+
     /// Elementwise add on the vector ALU: int8 operands at a shared
     /// scale, int32 add, saturating writeback to int8.
     pub fn alu_add(&self, a: &Tensor, b: &Tensor) -> Tensor {
@@ -83,6 +130,16 @@ impl Accelerator for Vta {
         match op {
             Op::VtaGemm => Some(self.gemm(inputs[0], inputs[1])),
             Op::VtaAdd => Some(self.alu_add(inputs[0], inputs[1])),
+            _ => None,
+        }
+    }
+
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation> {
+        match op {
+            Op::VtaGemm => self.lower_gemm(inputs[0], inputs[1]),
+            // the ALU add's int32 operand staging is not part of the
+            // fixed driver sequences; the engine falls back to the
+            // (integer-exact) tensor fast path
             _ => None,
         }
     }

@@ -1,35 +1,39 @@
-//! Code generation: matched accelerator operators → ILA program fragments
-//! → MMIO command streams (the Fig. 3(b)→(d) / Fig. 5 pipeline).
+//! The shared code-generation machinery behind `Accelerator::lower` (the
+//! Fig. 3(b)→(d) / Fig. 5 pipeline): the [`LoweredInvocation`] /
+//! [`ReadPlan`] vocabulary every per-accelerator lowering produces, the
+//! MMIO byte streamer, and the executors that play a lowered invocation
+//! against an [`crate::ila::sim::IlaSim`] and decode its result.
 //!
-//! Each lowering produces a [`LoweredInvocation`]: the raw command stream
-//! that drives the accelerator over its bus interface, plus a
-//! [`ReadPlan`] describing how the driver fetches and decodes the result.
-//! The assembly-level [`Fragment`] view (Fig. 5(c)) is emitted alongside
-//! for inspection and for the VT2 verification path.
-//!
-//! §5.1's data-transfer optimization appears here too:
-//! [`lower_flex_maxpool_chain`] fuses a chain of temporal max pools into
-//! one store → k×trigger → load program, eliminating the intermediate
-//! loads/stores that naive per-op lowering would emit.
+//! The per-op lowerings themselves live with their accelerators
+//! (`accel::{flexasr,hlscnn,vta}`), reached through the
+//! [`crate::accel::Accelerator::lower`] trait method — there are no
+//! free-function lowerings here any more. The §5.1 fused maxpool-chain
+//! lowering is `FlexAsr::lower_maxpool_chain`; its program-level
+//! accounting stays in [`optimize`].
 
 pub mod optimize;
 
-use crate::accel::flexasr::{model as fx, FlexAsr};
-use crate::accel::hlscnn::{model as hx, Hlscnn};
-use crate::accel::vta::{model as vx, Vta};
+use crate::accel::flexasr::model as fx;
+use crate::accel::hlscnn::model as hx;
+use crate::accel::vta::model as vx;
 use crate::ila::asm::Fragment;
 use crate::ila::Cmd;
 use crate::ir::Target;
+use crate::numerics::adaptivfloat::AdaptivFloatFormat;
+use crate::numerics::fixed_point::FixedPointFormat;
 use crate::tensor::Tensor;
 
 /// How to retrieve and decode an accelerator result after the command
-/// stream has executed.
+/// stream has executed. Each plan carries the device's *configured*
+/// storage format (design revisions differ), so decoding never assumes a
+/// default-configured device.
 #[derive(Debug, Clone)]
 pub enum ReadPlan {
     /// FlexASR: read `status_out_bias`, then `len` AF8 codes at `base`.
-    FlexAf8 { base: u64, shape: Vec<usize> },
-    /// HLSCNN: read `len` i16 codes at `base`, NHWC layout.
-    HlscnnI16 { base: u64, shape: Vec<usize> },
+    FlexAf8 { base: u64, shape: Vec<usize>, fmt: AdaptivFloatFormat },
+    /// HLSCNN: read `len` i16 codes at `base`, NHWC layout, in the
+    /// device's activation format.
+    HlscnnI16 { base: u64, shape: Vec<usize>, fmt: FixedPointFormat },
     /// VTA: read `n*m` i32 accumulators at `base`, dequant by `scale`.
     VtaI32 { base: u64, shape: Vec<usize>, scale: f32 },
 }
@@ -62,238 +66,13 @@ impl LoweredInvocation {
     }
 }
 
-/// Stream a byte buffer as 16-byte MMIO writes starting at `base`.
-fn stream_bytes(cmds: &mut Vec<Cmd>, base: u64, bytes: &[u8]) {
+/// Stream a byte buffer as 16-byte MMIO writes starting at `base` (used
+/// by every per-accelerator lowering).
+pub fn stream_bytes(cmds: &mut Vec<Cmd>, base: u64, bytes: &[u8]) {
     for (i, chunk) in bytes.chunks(16).enumerate() {
         let mut data = [0u8; 16];
         data[..chunk.len()].copy_from_slice(chunk);
         cmds.push(Cmd::write(base + 16 * i as u64, data));
-    }
-}
-
-// ----------------------------------------------------------------------
-// FlexASR lowerings
-// ----------------------------------------------------------------------
-
-/// Lower a FlexASR linear layer (`fasr_linear x w b`) — the Fig. 5
-/// mapping end to end.
-pub fn lower_flex_linear(
-    dev: &FlexAsr,
-    x: &Tensor,
-    w: &Tensor,
-    b: &Tensor,
-) -> LoweredInvocation {
-    let fmt = dev.af;
-    let (n, k) = (x.shape[0], x.shape[1]);
-    let m = w.shape[0];
-    let (xc, xb) = fx::encode_tensor(&fmt, x);
-    let (wc, wb) = fx::encode_tensor(&fmt, w);
-    let (bc, bb) = fx::encode_tensor(&fmt, b);
-    let bias_base = ((m * k + 15) / 16 * 16) as u64;
-    let out_base = ((n * k + 15) / 16 * 16) as u64;
-
-    let mut cmds = Vec::new();
-    stream_bytes(&mut cmds, fx::GB_BASE, &xc);
-    stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wc);
-    stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc);
-    cmds.push(Cmd::write_u64(
-        fx::CFG_LAYER_SIZING,
-        (k as u64) | ((m as u64) << 16),
-    ));
-    cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_base));
-    cmds.push(Cmd::write_u64(fx::CFG_ACT, 0));
-    cmds.push(Cmd::write_u64(
-        fx::CFG_GB_CONTROL,
-        fx::OP_LINEAR | ((n as u64) << 8),
-    ));
-    cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
-    cmds.push(Cmd::write_u64(
-        fx::CFG_EXP_BIAS,
-        (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
-    ));
-    cmds.push(Cmd::write_u64(fx::FN_START, 1));
-
-    let mut asm = Fragment::new();
-    asm.push("FlexASR_ILA.write_v", &["%input"])
-        .push("FlexASR_ILA.write_wgt", &["%weight", "%bias"])
-        .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%k", "%m"])
-        .push("FlexASR_ILA.pe_cfg_mngr", &["%bias_base"])
-        .push("FlexASR_ILA.pe_cfg_act_mngr", &["%act"])
-        .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%n"])
-        .push("FlexASR_ILA.gb_cfg_mmngr_gb_large", &["%in", "%out"])
-        .push("FlexASR_ILA.cfg_exp_bias", &["%biases"])
-        .push("FlexASR_ILA.fn_start", &[])
-        .push("FlexASR_ILA.read_v", &["%output"]);
-
-    LoweredInvocation {
-        target: Target::FlexAsr,
-        asm,
-        cmds,
-        read: ReadPlan::FlexAf8 { base: fx::GB_BASE + out_base, shape: vec![n, m] },
-    }
-}
-
-/// Lower a chain of `stages` FlexASR temporal max pools over `t` with the
-/// §5.1 optimization: ONE store in, `stages` triggers ping-ponging between
-/// two GB regions, ONE load out.
-pub fn lower_flex_maxpool_chain(
-    dev: &FlexAsr,
-    t: &Tensor,
-    stages: usize,
-) -> LoweredInvocation {
-    assert!(stages >= 1);
-    let fmt = dev.af;
-    let (r, c) = (t.shape[0], t.shape[1]);
-    assert!(r % (1 << stages) == 0, "rows must divide by 2^stages");
-    let (tc, tb) = fx::encode_tensor(&fmt, t);
-    let half = (fx::GB_SIZE / 2) as u64;
-
-    let mut cmds = Vec::new();
-    stream_bytes(&mut cmds, fx::GB_BASE, &tc);
-    let mut rows = r;
-    let mut in_base = 0u64;
-    let mut exp_bias = tb;
-    for s in 0..stages {
-        let out_base = if in_base == 0 { half } else { 0 };
-        cmds.push(Cmd::write_u64(fx::CFG_LAYER_SIZING, c as u64));
-        cmds.push(Cmd::write_u64(
-            fx::CFG_GB_CONTROL,
-            fx::OP_MAXPOOL | ((rows as u64) << 8),
-        ));
-        cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, in_base | (out_base << 32)));
-        cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, exp_bias as u8 as u64));
-        cmds.push(Cmd::write_u64(fx::FN_START, 1));
-        // maxpool preserves the exponent bias (max of lattice values);
-        // subsequent stages read the device-chosen output bias, which for
-        // maxpool equals or shrinks the input bias. The driver conservatively
-        // re-reads the status register between stages — modeled by reading
-        // it in the command stream (a status read, not a data beat).
-        cmds.push(Cmd::read(fx::STATUS_OUT_BIAS));
-        rows /= 2;
-        in_base = out_base;
-        exp_bias = tb; // same-lattice: device bias query is advisory here
-        let _ = s;
-    }
-
-    let mut asm = Fragment::new();
-    asm.push("FlexASR_ILA.fasrMaxpStore", &["%t"]);
-    for _ in 0..stages {
-        asm.push("FlexASR_ILA.fasrMaxpool", &[]);
-    }
-    asm.push("FlexASR_ILA.fasrMaxpLoad", &["%out"]);
-
-    LoweredInvocation {
-        target: Target::FlexAsr,
-        asm,
-        cmds,
-        read: ReadPlan::FlexAf8 {
-            base: fx::GB_BASE + in_base,
-            shape: vec![r >> stages, c],
-        },
-    }
-}
-
-/// Naive per-op lowering of the same chain (each stage stores and loads)
-/// — the baseline that Fig. 7 / the fig7 bench compares against.
-pub fn lower_flex_maxpool_chain_naive(
-    dev: &FlexAsr,
-    t: &Tensor,
-    stages: usize,
-) -> Vec<LoweredInvocation> {
-    let mut out = Vec::new();
-    let mut cur = t.clone();
-    for _ in 0..stages {
-        let inv = lower_flex_maxpool_chain(dev, &cur, 1);
-        cur = crate::ir::interp::eval_op(&crate::ir::Op::TempMaxPool, &[&cur]).unwrap();
-        // naive lowering also reads the result back after every stage
-        out.push(inv);
-    }
-    out
-}
-
-// ----------------------------------------------------------------------
-// HLSCNN lowering
-// ----------------------------------------------------------------------
-
-/// Lower `hlscnn_conv2d` (batch 1).
-pub fn lower_hlscnn_conv2d(
-    dev: &Hlscnn,
-    x: &Tensor,
-    w: &Tensor,
-    stride: (usize, usize),
-    pad: (usize, usize),
-) -> LoweredInvocation {
-    assert_eq!(x.shape[0], 1, "HLSCNN device is batch-1; driver loops batch");
-    let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
-    let (o, kh, kw) = (w.shape[0], w.shape[2], w.shape[3]);
-    let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
-    let ow = (wd + 2 * pad.1 - kw) / stride.1 + 1;
-
-    let mut cmds = Vec::new();
-    stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(dev, x));
-    stream_bytes(&mut cmds, hx::WGT_BASE, &hx::encode_wgt(dev, w));
-    cmds.push(Cmd::write_u64(
-        hx::CFG_SHAPE,
-        (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24) | ((o as u64) << 36),
-    ));
-    cmds.push(Cmd::write_u64(
-        hx::CFG_KERNEL,
-        (kh as u64)
-            | ((kw as u64) << 8)
-            | ((stride.0 as u64) << 16)
-            | ((stride.1 as u64) << 24)
-            | ((pad.0 as u64) << 32)
-            | ((pad.1 as u64) << 40),
-    ));
-    cmds.push(Cmd::write_u64(hx::CFG_START, 1));
-
-    let mut asm = Fragment::new();
-    asm.push("HLSCNN_ILA.wr_act", &["%fmap"])
-        .push("HLSCNN_ILA.wr_wgt", &["%filters"])
-        .push("HLSCNN_ILA.cfg_conv_shape", &["%c", "%h", "%w", "%o"])
-        .push("HLSCNN_ILA.cfg_conv_kernel", &["%k", "%s", "%p"])
-        .push("HLSCNN_ILA.conv_start", &[])
-        .push("HLSCNN_ILA.rd_out", &["%out"]);
-
-    LoweredInvocation {
-        target: Target::Hlscnn,
-        asm,
-        cmds,
-        read: ReadPlan::HlscnnI16 { base: hx::OUT_BASE, shape: vec![1, o, oh, ow] },
-    }
-}
-
-// ----------------------------------------------------------------------
-// VTA lowering
-// ----------------------------------------------------------------------
-
-/// Lower `vta_gemm` (dense semantics).
-pub fn lower_vta_gemm(dev: &Vta, x: &Tensor, w: &Tensor) -> LoweredInvocation {
-    let (n, k) = (x.shape[0], x.shape[1]);
-    let m = w.shape[0];
-    let sx = dev.int8.select_scale(x.max_abs());
-    let sw = dev.int8.select_scale(w.max_abs());
-    let xc: Vec<u8> = x.data.iter().map(|&v| dev.int8.encode(v, sx) as u8).collect();
-    let wc: Vec<u8> = w.data.iter().map(|&v| dev.int8.encode(v, sw) as u8).collect();
-
-    let mut cmds = Vec::new();
-    stream_bytes(&mut cmds, vx::INP_BASE, &xc);
-    stream_bytes(&mut cmds, vx::WGT_BASE, &wc);
-    cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)));
-    cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)));
-
-    let mut asm = Fragment::new();
-    asm.push("VTA_ILA.load_inp", &["%x"])
-        .push("VTA_ILA.load_wgt", &["%w"])
-        .push("VTA_ILA.reset_acc", &[])
-        .push("VTA_ILA.gemm", &["%n", "%k", "%m"])
-        .push("VTA_ILA.store_out", &["%out"]);
-
-    LoweredInvocation {
-        target: Target::Vta,
-        asm,
-        cmds,
-        read: ReadPlan::VtaI32 { base: vx::ACC_BASE, shape: vec![n, m], scale: sx * sw },
     }
 }
 
@@ -311,7 +90,9 @@ pub fn execute_lowered(
     read_result(inv, sim)
 }
 
-/// Decode a completed invocation's result from device state.
+/// Decode a completed invocation's result from device state. Reads that
+/// return no data surface as structured errors instead of being masked
+/// with zeros.
 pub fn read_result(
     inv: &LoweredInvocation,
     sim: &mut crate::ila::sim::IlaSim,
@@ -326,7 +107,9 @@ pub fn read_result(
             let d = sim
                 .step(&Cmd::read(addr))
                 .map_err(|e| anyhow::anyhow!("{e}"))?
-                .ok_or_else(|| anyhow::anyhow!("read returned no data"))?;
+                .ok_or_else(|| {
+                    anyhow::anyhow!("read at 0x{addr:08X} returned no data")
+                })?;
             out.extend_from_slice(&d);
             addr += 16;
         }
@@ -334,25 +117,28 @@ pub fn read_result(
         Ok(out)
     };
     match &inv.read {
-        ReadPlan::FlexAf8 { base, shape } => {
-            let fmt = crate::numerics::adaptivfloat::AdaptivFloatFormat::new(8, 3);
+        ReadPlan::FlexAf8 { base, shape, fmt } => {
             let ob = sim
                 .step(&Cmd::read(fx::STATUS_OUT_BIAS))
                 .map_err(|e| anyhow::anyhow!("{e}"))?
-                .unwrap()[0] as i8 as i32;
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "status read at 0x{:08X} returned no data",
+                        fx::STATUS_OUT_BIAS
+                    )
+                })?[0] as i8 as i32;
             let n: usize = shape.iter().product();
             let codes = fetch(sim, *base, n)?;
-            Ok(fx::decode_tensor(&fmt, &codes, ob, shape))
+            Ok(fx::decode_tensor(fmt, &codes, ob, shape))
         }
-        ReadPlan::HlscnnI16 { base, shape } => {
+        ReadPlan::HlscnnI16 { base, shape, fmt } => {
             let n: usize = shape.iter().product();
             let bytes = fetch(sim, *base, 2 * n)?;
             let codes: Vec<i16> = bytes
                 .chunks(2)
                 .map(|p| i16::from_le_bytes(p.try_into().unwrap()))
                 .collect();
-            let dev = Hlscnn::default();
-            Ok(hx::decode_out_nchw(&dev, &codes, shape))
+            Ok(hx::decode_out_nchw_fmt(*fmt, &codes, shape))
         }
         ReadPlan::VtaI32 { base, shape, scale } => {
             let n: usize = shape.iter().product();
@@ -369,8 +155,9 @@ pub fn read_result(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::accel::Accelerator;
+    use crate::accel::{Accelerator, FlexAsr, Hlscnn, Vta};
     use crate::ila::sim::IlaSim;
+    use crate::ir::Op;
     use crate::util::Rng;
 
     #[test]
@@ -380,13 +167,13 @@ mod tests {
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
         let b = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-        let inv = lower_flex_linear(&dev, &x, &w, &b);
+        let inv = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_lowered(&inv, &mut sim).unwrap();
-        // the MMIO result equals the tensor-level fast path modulo the
-        // codec roundtrip of operands
+        // the MMIO result equals the tensor-level fast path bit-exactly:
+        // both sides quantize through the same storage codec
         let expect = dev.linear(&x, &w, &b);
-        assert!(got.rel_error(&expect) < 0.02, "err {}", got.rel_error(&expect));
+        assert_eq!(got, expect, "MMIO path diverges from tensor path");
         assert!(inv.asm.len() >= 8, "Fig. 5(c)-style fragment emitted");
     }
 
@@ -395,8 +182,8 @@ mod tests {
         let dev = FlexAsr::new();
         let mut rng = Rng::new(72);
         let t = dev.quant(&Tensor::randn(&[64, 64], &mut rng, 1.0));
-        let fused = lower_flex_maxpool_chain(&dev, &t, 4);
-        let naive = lower_flex_maxpool_chain_naive(&dev, &t, 4);
+        let fused = dev.lower_maxpool_chain(&t, 4);
+        let naive = dev.lower_maxpool_chain_naive(&t, 4);
         let naive_beats: usize = naive.iter().map(|i| i.data_beats()).sum();
         // naive: 256+128+64+32 = 480 store beats (plus ~240 read-back
         // beats not counted here since reads happen in read_result);
@@ -425,11 +212,14 @@ mod tests {
         let mut rng = Rng::new(73);
         let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
         let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
-        let inv = lower_hlscnn_conv2d(&dev, &x, &w, (1, 1), (1, 1));
+        let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
+        let inv = dev.lower(&op, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_lowered(&inv, &mut sim).unwrap();
+        // updated design: the integer kernel is shared, so the MMIO and
+        // tensor views agree bit-exactly
         let expect = dev.conv2d(&x, &w, (1, 1), (1, 1));
-        assert!(got.max_abs_diff(&expect) <= dev.cfg.act_fmt.step() + 1e-6);
+        assert_eq!(got, expect);
     }
 
     #[test]
@@ -438,10 +228,31 @@ mod tests {
         let mut rng = Rng::new(74);
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 1.0));
-        let inv = lower_vta_gemm(&dev, &x, &w);
+        let inv = dev.lower(&Op::VtaGemm, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_lowered(&inv, &mut sim).unwrap();
         let expect = dev.gemm(&x, &w);
         assert_eq!(got.rel_error(&expect), 0.0, "VTA GEMM is exact");
+    }
+
+    #[test]
+    fn lower_declines_oversized_and_foreign_ops() {
+        let fa = FlexAsr::new();
+        let mut rng = Rng::new(75);
+        // weights beyond the PE buffer: decline, don't corrupt
+        let x = Tensor::randn(&[1, 600], &mut rng, 1.0);
+        let w = Tensor::randn(&[600, 600], &mut rng, 0.3);
+        let b = Tensor::randn(&[600], &mut rng, 0.1);
+        assert!(fa.lower(&Op::FlexLinear, &[&x, &w, &b]).is_none());
+        // foreign op: not this accelerator's
+        assert!(fa.lower(&Op::VtaGemm, &[&x, &w]).is_none());
+        // data movement has no single-op program
+        assert!(fa.lower(&Op::FlexMaxpStore, &[&x]).is_none());
+        // batched conv: HLSCNN is a batch-1 device
+        let hl = Hlscnn::default();
+        let xb = Tensor::randn(&[2, 3, 6, 6], &mut rng, 1.0);
+        let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+        let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
+        assert!(hl.lower(&op, &[&xb, &k]).is_none());
     }
 }

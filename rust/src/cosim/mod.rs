@@ -9,27 +9,28 @@
 //! run the accelerator's exact custom numerics, just like the ILAng-based
 //! co-simulation in the paper.
 //!
-//! Dispatch goes through the session-layer
-//! [`AcceleratorRegistry`](crate::session::AcceleratorRegistry): each
-//! intercepted node costs one O(1) table read instead of the seed-era
-//! linear scan over all accelerator models. Prefer driving co-simulation
-//! through [`crate::session::CompiledProgram::cosim`], which adds a
-//! precomputed per-node dispatch plan on top.
+//! Dispatch goes through the session-layer execution engine
+//! ([`crate::session::ExecEngine`]): each intercepted node costs one
+//! O(1) registry read, and the engine routes it to the tensor fast path,
+//! the MMIO/ILA simulators, or both, per the selected
+//! [`ExecBackend`](crate::session::ExecBackend). Prefer driving
+//! co-simulation through [`crate::session::CompiledProgram::cosim`],
+//! which adds a precomputed per-node dispatch plan on top.
 
 pub mod stats;
 pub mod table2;
 
 use crate::ir::interp::{eval_with_hook, EvalError, EvalHook};
 use crate::ir::{Node, RecExpr};
-use crate::session::AcceleratorRegistry;
+use crate::session::{AcceleratorRegistry, ExecBackend, ExecEngine, FidelityReport};
 use crate::tensor::Tensor;
 use std::collections::HashMap;
 
-/// Evaluation hook that dispatches accelerator ops to ILA models through
-/// a target-indexed registry and records per-invocation error statistics
-/// against the f32 semantics.
+/// Evaluation hook that dispatches accelerator ops through a
+/// backend-selectable [`ExecEngine`] and records per-invocation error
+/// statistics against the f32 semantics.
 pub struct AccelHook<'a> {
-    registry: &'a AcceleratorRegistry,
+    engine: ExecEngine<'a>,
     /// number of accelerator invocations executed
     pub invocations: usize,
     /// per-invocation relative error vs the f32 op semantics (the
@@ -40,20 +41,33 @@ pub struct AccelHook<'a> {
 }
 
 impl<'a> AccelHook<'a> {
+    /// Hook over the tensor fast path (the sweep default).
     pub fn new(registry: &'a AcceleratorRegistry) -> Self {
+        Self::with_backend(registry, ExecBackend::Functional)
+    }
+
+    /// Hook over an explicit execution backend.
+    pub fn with_backend(registry: &'a AcceleratorRegistry, backend: ExecBackend) -> Self {
         AccelHook {
-            registry,
+            engine: ExecEngine::new(registry, backend),
             invocations: 0,
             inv_errors: Vec::new(),
             track_errors: false,
         }
     }
+
+    /// Take the engine's accumulated cross-check report.
+    pub fn take_fidelity(&mut self) -> FidelityReport {
+        self.engine.take_fidelity()
+    }
 }
 
 impl EvalHook for AccelHook<'_> {
-    fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Option<Tensor> {
-        let accel = self.registry.for_op(&node.op)?;
-        let out = accel.exec_op(&node.op, ch)?;
+    fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Result<Option<Tensor>, EvalError> {
+        let out = match self.engine.execute(&node.op, ch)? {
+            Some(t) => t,
+            None => return Ok(None),
+        };
         if node.op.is_accel_invocation() {
             self.invocations += 1;
             if self.track_errors {
@@ -62,11 +76,12 @@ impl EvalHook for AccelHook<'_> {
                 }
             }
         }
-        Some(out)
+        Ok(Some(out))
     }
 }
 
-/// Evaluate a compiled program with accelerator numerics.
+/// Evaluate a compiled program with accelerator numerics (tensor fast
+/// path; build an [`AccelHook::with_backend`] for MMIO fidelity).
 pub fn run_accelerated(
     expr: &RecExpr,
     env: &HashMap<String, Tensor>,
@@ -114,12 +129,8 @@ pub fn cosim_lm(
     cosim_lm_spec(expr, &LmSpec::default(), weights, embed, tokens, n_sentences, registry)
 }
 
-/// Language-model co-simulation under an explicit [`LmSpec`].
-///
-/// Malformed inputs (short token streams, out-of-vocabulary token ids,
-/// non-matrix embedding tables) return [`EvalError::Input`] instead of
-/// slice-panicking, and per-invocation error statistics are collected
-/// when `spec.track_errors` is set instead of being silently dropped.
+/// Language-model co-simulation under an explicit [`LmSpec`], on the
+/// tensor fast path. See [`cosim_lm_backend`] for backend selection.
 pub fn cosim_lm_spec(
     expr: &RecExpr,
     spec: &LmSpec<'_>,
@@ -128,6 +139,36 @@ pub fn cosim_lm_spec(
     tokens: &[usize],
     n_sentences: usize,
     registry: &AcceleratorRegistry,
+) -> Result<LmReport, EvalError> {
+    cosim_lm_backend(
+        expr,
+        spec,
+        weights,
+        embed,
+        tokens,
+        n_sentences,
+        registry,
+        ExecBackend::Functional,
+    )
+}
+
+/// Language-model co-simulation under an explicit [`LmSpec`] and
+/// execution backend.
+///
+/// Malformed inputs (short token streams, out-of-vocabulary token ids,
+/// non-matrix embedding tables) return [`EvalError::Input`] instead of
+/// slice-panicking, and per-invocation error statistics are collected
+/// when `spec.track_errors` is set instead of being silently dropped.
+#[allow(clippy::too_many_arguments)]
+pub fn cosim_lm_backend(
+    expr: &RecExpr,
+    spec: &LmSpec<'_>,
+    weights: &HashMap<String, Tensor>,
+    embed: &Tensor,
+    tokens: &[usize],
+    n_sentences: usize,
+    registry: &AcceleratorRegistry,
+    backend: ExecBackend,
 ) -> Result<LmReport, EvalError> {
     let seq_len = spec.seq_len;
     if seq_len == 0 {
@@ -149,7 +190,7 @@ pub fn cosim_lm_spec(
     }
     let (vocab, e) = (embed.shape[0], embed.shape[1]);
     let mut env = weights.clone();
-    let mut hook = AccelHook::new(registry);
+    let mut hook = AccelHook::with_backend(registry, backend);
     hook.track_errors = spec.track_errors;
     let mut nll_ref = 0.0f64;
     let mut nll_acc = 0.0f64;
@@ -194,12 +235,14 @@ pub fn cosim_lm_spec(
             count += 1;
         }
     }
+    let fidelity = hook.take_fidelity();
     Ok(LmReport {
         sentences: n_sentences,
         ref_perplexity: (nll_ref / count.max(1) as f64).exp() as f32,
         acc_perplexity: (nll_acc / count.max(1) as f64).exp() as f32,
         invocations: hook.invocations,
         inv_errors: hook.inv_errors,
+        fidelity,
     })
 }
 
@@ -214,6 +257,9 @@ pub struct LmReport {
     /// Per-invocation relative errors (empty unless
     /// [`LmSpec::track_errors`] was set).
     pub inv_errors: Vec<f32>,
+    /// Cross-check outcome (empty unless the sweep ran under
+    /// [`ExecBackend::CrossCheck`]).
+    pub fidelity: FidelityReport,
 }
 
 fn log_softmax_at(logits: &Tensor, row: usize, idx: usize) -> f32 {

@@ -23,20 +23,42 @@ pub enum EvalError {
     Input(String),
 }
 
+/// Name → tensor lookup consulted for `Var`/`Weight` leaves.
+///
+/// Abstracting over the environment lets sweep workers layer a one-slot
+/// per-datapoint input override on top of a shared weight map
+/// ([`crate::session::LayeredEnv`]) instead of cloning the whole map per
+/// worker, while plain `HashMap` environments keep working unchanged.
+pub trait EnvLookup {
+    /// Resolve a leaf name to its bound tensor.
+    fn lookup(&self, name: &str) -> Option<&Tensor>;
+}
+
+impl EnvLookup for HashMap<String, Tensor> {
+    fn lookup(&self, name: &str) -> Option<&Tensor> {
+        self.get(name)
+    }
+}
+
 /// Hook consulted for every node *before* default evaluation; returning
-/// `Some(tensor)` overrides the f32 semantics. The co-sim driver uses this
-/// to swap in ILA-simulated accelerator execution.
+/// `Ok(Some(tensor))` overrides the f32 semantics. The co-sim driver uses
+/// this to swap in ILA-simulated accelerator execution; MMIO-backend
+/// failures surface as `Err` instead of being silently dropped.
 pub trait EvalHook {
     /// Override evaluation of `node` given already-evaluated children.
-    fn intercept(&mut self, node: &Node, children: &[&Tensor]) -> Option<Tensor>;
+    fn intercept(
+        &mut self,
+        node: &Node,
+        children: &[&Tensor],
+    ) -> Result<Option<Tensor>, EvalError>;
 }
 
 /// No-op hook: pure f32 reference execution.
 pub struct NoHook;
 
 impl EvalHook for NoHook {
-    fn intercept(&mut self, _: &Node, _: &[&Tensor]) -> Option<Tensor> {
-        None
+    fn intercept(&mut self, _: &Node, _: &[&Tensor]) -> Result<Option<Tensor>, EvalError> {
+        Ok(None)
     }
 }
 
@@ -127,9 +149,9 @@ pub fn eval_op(op: &Op, ch: &[&Tensor]) -> Result<Tensor, EvalError> {
 }
 
 /// Evaluate a whole program under `env`, with an interception hook.
-pub fn eval_with_hook(
+pub fn eval_with_hook<E: EnvLookup + ?Sized>(
     expr: &RecExpr,
-    env: &HashMap<String, Tensor>,
+    env: &E,
     hook: &mut dyn EvalHook,
 ) -> Result<Tensor, EvalError> {
     let mut values: Vec<Tensor> = Vec::with_capacity(expr.len());
@@ -137,9 +159,9 @@ pub fn eval_with_hook(
         let ch: Vec<&Tensor> = node.children.iter().map(|&c| &values[c]).collect();
         let v = match &node.op {
             Op::Var(n) | Op::Weight(n) => {
-                env.get(n).cloned().ok_or_else(|| EvalError::Unbound(n.clone()))?
+                env.lookup(n).cloned().ok_or_else(|| EvalError::Unbound(n.clone()))?
             }
-            op => match hook.intercept(node, &ch) {
+            op => match hook.intercept(node, &ch)? {
                 Some(t) => t,
                 None => eval_op(op, &ch)?,
             },
@@ -150,7 +172,7 @@ pub fn eval_with_hook(
 }
 
 /// Pure f32 reference evaluation.
-pub fn eval(expr: &RecExpr, env: &HashMap<String, Tensor>) -> Result<Tensor, EvalError> {
+pub fn eval<E: EnvLookup + ?Sized>(expr: &RecExpr, env: &E) -> Result<Tensor, EvalError> {
     eval_with_hook(expr, env, &mut NoHook)
 }
 
@@ -398,14 +420,18 @@ mod tests {
     fn hook_intercepts_accelerator_nodes() {
         struct CountHook(usize);
         impl EvalHook for CountHook {
-            fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Option<Tensor> {
+            fn intercept(
+                &mut self,
+                node: &Node,
+                ch: &[&Tensor],
+            ) -> Result<Option<Tensor>, EvalError> {
                 if matches!(node.op, Op::FlexLinear) {
                     self.0 += 1;
                     // deliberately perturb so we can observe the override
-                    let t = eval_op(&node.op, ch).unwrap();
-                    return Some(t.map(|v| v + 1000.0));
+                    let t = eval_op(&node.op, ch)?;
+                    return Ok(Some(t.map(|v| v + 1000.0)));
                 }
-                None
+                Ok(None)
             }
         }
         let mut e = RecExpr::new();

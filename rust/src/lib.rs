@@ -9,9 +9,10 @@
 //!
 //! The public entry point is the [`session`] module: build a [`Session`]
 //! with [`SessionBuilder`], compile applications into [`CompiledProgram`]
-//! handles, and run/co-simulate/sweep through them. The older free
-//! functions in [`compiler`], [`cosim`] and [`coordinator`] remain as the
-//! low-level core plus deprecated shims.
+//! handles, and run/co-simulate/sweep through them on a per-session
+//! [`session::ExecBackend`] (tensor fast path, MMIO-level ILA
+//! simulation, or bit-exact cross-check of both). The free functions in
+//! [`compiler`] and [`cosim`] remain as the low-level core.
 //!
 //! See DESIGN.md for the system inventory and the per-experiment index.
 
@@ -20,7 +21,6 @@ pub mod apps;
 pub mod cli;
 pub mod codegen;
 pub mod compiler;
-pub mod coordinator;
 pub mod cosim;
 pub mod egraph;
 pub mod ila;

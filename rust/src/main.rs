@@ -8,7 +8,7 @@ use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
 use d2a::rewrites::Matching;
 use d2a::runtime::ArtifactStore;
-use d2a::session::{DesignRev, SessionBuilder, SweepSpec};
+use d2a::session::{DesignRev, ExecBackend, SessionBuilder, SweepSpec};
 use std::time::Duration;
 
 const HELP: &str = "\
@@ -23,9 +23,13 @@ COMMANDS:
   verify [--rows R --cols C --timeout SECS]
                          BMC + CHC verification of the FlexASR MaxPool mapping
   cosim  --app NAME [--rev original|updated] [--limit N] [--workers W]
-         [--input-var NAME]
+         [--input-var NAME] [--backend functional|mmio|crosscheck]
                          application-level co-simulation (resmlp | resnet20 |
-                         mobilenet | lstm)
+                         mobilenet | lstm); `mmio` runs every accelerator op
+                         as MMIO programs on the ILA simulators, `crosscheck`
+                         runs both paths and reports bit-level mismatches
+                         (try --rev original --app resnet20 --backend
+                         crosscheck to see the HLSCNN weight-store flaw)
   soc-demo               run a D2A-lowered program on the emulated SoC
   help                   this text
 ";
@@ -120,6 +124,16 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         Some("original") => DesignRev::Original,
         _ => DesignRev::Updated,
     };
+    let backend = match cli.get("backend") {
+        Some("mmio") | Some("ila-mmio") => ExecBackend::IlaMmio,
+        Some("crosscheck") | Some("cross-check") => ExecBackend::CrossCheck,
+        Some("functional") | None => ExecBackend::Functional,
+        // a typo silently downgrading to Functional would make the
+        // cross-check demo "pass" for the wrong reason — refuse instead
+        Some(other) => anyhow::bail!(
+            "unknown --backend `{other}` (expected functional | mmio | crosscheck)"
+        ),
+    };
     let limit = cli.get_usize("limit", 400);
     let workers = cli.get_usize("workers", 1);
 
@@ -130,6 +144,7 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
             .matching(Matching::Flexible)
             .limits(limits())
             .design_rev(rev)
+            .backend(backend)
             .build();
         let program = session.compile(&app);
         let mut weights = store.weights("lstm")?;
@@ -138,9 +153,13 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         let n_sent = limit.min(100);
         let rep = program.lm_sweep(&weights, &embed, &tokens, n_sent)?;
         println!(
-            "LSTM-WLM ({n_sent} sentences): reference ppl {:.2}, accelerated ppl {:.2}",
+            "LSTM-WLM ({n_sent} sentences, {backend} backend): \
+             reference ppl {:.2}, accelerated ppl {:.2}",
             rep.ref_perplexity, rep.acc_perplexity
         );
+        if backend == ExecBackend::CrossCheck {
+            print!("{}", rep.fidelity);
+        }
         return Ok(());
     }
 
@@ -161,6 +180,7 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         .limits(limits())
         .design_rev(rev)
         .workers(workers)
+        .backend(backend)
         .build();
     let program = session.compile(&app);
     println!(
@@ -179,10 +199,11 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         labels: &labels[..n],
     });
     println!(
-        "{} [{:?}] over {} images: reference {:.2}%, accelerated {:.2}%  \
-         (sim {:.1?}/image, wall {:.1?}/image, {} workers)",
+        "{} [{:?}, {} backend] over {} images: reference {:.2}%, \
+         accelerated {:.2}%  (sim {:.1?}/image, wall {:.1?}/image, {} workers)",
         app.name,
         rev,
+        backend,
         rep.n,
         rep.ref_accuracy() * 100.0,
         rep.acc_accuracy() * 100.0,
@@ -190,12 +211,22 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
         rep.wall_time_per_point(),
         rep.workers
     );
+    if rep.exec_errors > 0 {
+        println!(
+            "WARNING: {} accelerated evaluation(s) failed outright \
+             (execution faults, counted as misses)",
+            rep.exec_errors
+        );
+    }
+    if backend == ExecBackend::CrossCheck {
+        print!("{}", rep.fidelity);
+    }
     Ok(())
 }
 
 fn cmd_soc_demo() -> anyhow::Result<()> {
-    use d2a::accel::{FlexAsr, Vta};
-    use d2a::codegen::{lower_flex_linear, lower_vta_gemm};
+    use d2a::accel::{Accelerator, FlexAsr, Vta};
+    use d2a::ir::Op;
     use d2a::soc::driver::Driver;
     use d2a::tensor::Tensor;
     use d2a::util::Rng;
@@ -206,7 +237,9 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
     let x = fa.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
     let w = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-    let inv = lower_flex_linear(&fa, &x, &w, &b);
+    let inv = fa
+        .lower(&Op::FlexLinear, &[&x, &w, &b])
+        .expect("linear fits the device");
     println!("FlexASR linear fragment (Fig. 5c):\n{}", inv.asm);
     println!("final MMIO commands (Fig. 5d):");
     for c in inv.cmds.iter().rev().take(7).rev() {
@@ -215,7 +248,11 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
     let y = drv.invoke(&inv)?;
     println!("result shape {:?}; now chaining into VTA GEMM...", y.shape);
     let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
-    let y2 = drv.invoke(&lower_vta_gemm(&vta, &vta.quant(&y), &w2))?;
+    let yq = vta.quant(&y);
+    let gemm = vta
+        .lower(&Op::VtaGemm, &[&yq, &w2])
+        .expect("gemm fits the device");
+    let y2 = drv.invoke(&gemm)?;
     println!(
         "VTA GEMM result shape {:?}; bus handled {} MMIO commands total",
         y2.shape,

@@ -1,0 +1,439 @@
+//! Backend-selectable accelerator execution: one engine driving either
+//! the tensor fast path, the MMIO-level ILA simulators, or both.
+//!
+//! The paper's central object is the ILA — the formal software/hardware
+//! interface from which simulators are derived — yet the seed hot path
+//! only ever ran the hand-written tensor semantics
+//! ([`Accelerator::exec_op`]), with MMIO-level execution stranded in
+//! per-accelerator test helpers. [`ExecEngine`] makes the choice a
+//! first-class, per-[`super::Session`] knob:
+//!
+//! * [`ExecBackend::Functional`] — the tensor fast path (default; what
+//!   2000-image sweeps want);
+//! * [`ExecBackend::IlaMmio`] — lower every accelerator op to an MMIO
+//!   command program ([`Accelerator::lower`]) and run it on a per-worker
+//!   [`IlaSim`] (deployment fidelity: every byte crosses the modeled
+//!   interface);
+//! * [`ExecBackend::CrossCheck`] — run **both**, bit-compare, and
+//!   accumulate per-op mismatch statistics in a [`FidelityReport`]
+//!   instead of aborting — the always-on VT3-style consistency check.
+//!   On `DesignRev::Original` this visibly flags HLSCNN, whose silicon
+//!   truncates wire-precision weights into the 8-bit store while the
+//!   software model rounds (see `accel::hlscnn::model::wire_to_store`) —
+//!   the repo-native version of the paper's "uncovered an unknown flaw"
+//!   case study.
+//!
+//! Ops an accelerator cannot lower (data movement, shapes beyond device
+//! buffers) fall back to the tensor path under every backend, so whole
+//! applications always run end to end.
+
+use super::AcceleratorRegistry;
+use crate::accel::Accelerator;
+use crate::codegen::{self, LoweredInvocation};
+use crate::ila::sim::IlaSim;
+use crate::ir::interp::EvalError;
+use crate::ir::{Op, Target};
+use crate::tensor::Tensor;
+use std::fmt;
+
+/// Which execution path a session's accelerator invocations take.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecBackend {
+    /// Tensor-level bit-accurate fast path (`Accelerator::exec_op`).
+    #[default]
+    Functional,
+    /// Driver-level MMIO programs on the ILA simulators
+    /// (`Accelerator::lower` + `IlaSim`).
+    IlaMmio,
+    /// Run both paths, bit-compare every invocation, and accumulate a
+    /// [`FidelityReport`]; the functional result flows onward.
+    CrossCheck,
+}
+
+impl fmt::Display for ExecBackend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ExecBackend::Functional => write!(f, "functional"),
+            ExecBackend::IlaMmio => write!(f, "ila-mmio"),
+            ExecBackend::CrossCheck => write!(f, "cross-check"),
+        }
+    }
+}
+
+/// Per-op fidelity statistics accumulated by `ExecBackend::CrossCheck`.
+#[derive(Debug, Clone)]
+pub struct FidelityRecord {
+    /// S-expression head of the op (e.g. `hlscnn_conv2d<s(1, 1),p(1, 1)>`).
+    pub op: String,
+    /// Owning accelerator target.
+    pub target: Target,
+    /// Invocations cross-checked (functional and MMIO both ran).
+    pub checked: usize,
+    /// Invocations whose two results were **not** bit-identical.
+    pub mismatches: usize,
+    /// Largest element-wise |functional − mmio| seen.
+    pub max_abs_diff: f32,
+}
+
+/// Aggregate cross-check outcome of a run (empty unless the backend was
+/// [`ExecBackend::CrossCheck`]). Mismatches are *reported*, never
+/// panicked: the run completes on the functional results and the report
+/// says where the two views of the hardware disagreed.
+#[derive(Debug, Clone, Default)]
+pub struct FidelityReport {
+    records: Vec<FidelityRecord>,
+    unlowered: usize,
+}
+
+impl FidelityReport {
+    /// Per-op records, in first-seen order.
+    pub fn records(&self) -> &[FidelityRecord] {
+        &self.records
+    }
+
+    /// Total invocations cross-checked.
+    pub fn total_checked(&self) -> usize {
+        self.records.iter().map(|r| r.checked).sum()
+    }
+
+    /// Invocations that could NOT be cross-checked because the op has no
+    /// MMIO lowering (data movement, device-capacity declines) and ran
+    /// functional-only. A clean report with a non-zero count here means
+    /// "everything *checked* agreed", not "everything was checked".
+    pub fn total_unlowered(&self) -> usize {
+        self.unlowered
+    }
+
+    /// Total bit-mismatched invocations.
+    pub fn total_mismatches(&self) -> usize {
+        self.records.iter().map(|r| r.mismatches).sum()
+    }
+
+    /// True when every checked invocation was bit-identical (vacuously
+    /// true when nothing was checked).
+    pub fn is_clean(&self) -> bool {
+        self.total_mismatches() == 0
+    }
+
+    /// Records that saw at least one mismatch.
+    pub fn mismatched(&self) -> impl Iterator<Item = &FidelityRecord> {
+        self.records.iter().filter(|r| r.mismatches > 0)
+    }
+
+    /// Index of the record for `(op, target)`, creating it on first use.
+    fn entry(&mut self, op: String, target: Target) -> usize {
+        match self.records.iter().position(|r| r.target == target && r.op == op) {
+            Some(i) => i,
+            None => {
+                self.records.push(FidelityRecord {
+                    op,
+                    target,
+                    checked: 0,
+                    mismatches: 0,
+                    max_abs_diff: 0.0,
+                });
+                self.records.len() - 1
+            }
+        }
+    }
+
+    /// Record one cross-checked invocation.
+    pub fn record(&mut self, op: &Op, target: Target, functional: &Tensor, mmio: &Tensor) {
+        let idx = self.entry(op.head(), target);
+        let rec = &mut self.records[idx];
+        rec.checked += 1;
+        if functional.shape != mmio.shape {
+            rec.mismatches += 1;
+            rec.max_abs_diff = f32::INFINITY;
+        } else if functional != mmio {
+            rec.mismatches += 1;
+            rec.max_abs_diff = rec.max_abs_diff.max(functional.max_abs_diff(mmio));
+        }
+    }
+
+    /// Fold another report (e.g. from a sweep worker) into this one.
+    pub fn merge(&mut self, other: FidelityReport) {
+        self.unlowered += other.unlowered;
+        for rec in other.records {
+            let idx = self.entry(rec.op.clone(), rec.target);
+            let into = &mut self.records[idx];
+            into.checked += rec.checked;
+            into.mismatches += rec.mismatches;
+            into.max_abs_diff = into.max_abs_diff.max(rec.max_abs_diff);
+        }
+    }
+}
+
+impl fmt::Display for FidelityReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.records.is_empty() && self.unlowered == 0 {
+            return write!(f, "fidelity: nothing cross-checked");
+        }
+        writeln!(
+            f,
+            "fidelity: {}/{} invocations bit-identical",
+            self.total_checked() - self.total_mismatches(),
+            self.total_checked()
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "  {:<8} {:<28} checked {:>6}  mismatched {:>6}  max|Δ| {:.6}",
+                r.target.to_string(),
+                r.op,
+                r.checked,
+                r.mismatches,
+                r.max_abs_diff
+            )?;
+        }
+        if self.unlowered > 0 {
+            writeln!(
+                f,
+                "  NOTE: {} invocation(s) had no MMIO lowering (capacity/data \
+                 movement) and ran functional-only — NOT cross-checked",
+                self.unlowered
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// The per-worker execution engine: routes accelerator invocations to
+/// the backend's path(s), owns lazily-built per-target [`IlaSim`]
+/// instances, and accumulates the cross-check [`FidelityReport`].
+///
+/// An engine is cheap to create under `Functional` (no simulator state);
+/// MMIO simulators are instantiated on first use per target and reset
+/// before every invocation, so results are independent of invocation
+/// order and worker count.
+pub struct ExecEngine<'r> {
+    registry: &'r AcceleratorRegistry,
+    backend: ExecBackend,
+    sims: [Option<IlaSim>; Target::COUNT],
+    fidelity: FidelityReport,
+    lowered: usize,
+}
+
+impl<'r> ExecEngine<'r> {
+    /// Build an engine over a registry for the given backend.
+    pub fn new(registry: &'r AcceleratorRegistry, backend: ExecBackend) -> Self {
+        ExecEngine {
+            registry,
+            backend,
+            sims: std::array::from_fn(|_| None),
+            fidelity: FidelityReport::default(),
+            lowered: 0,
+        }
+    }
+
+    /// The engine's backend.
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
+    /// Invocations that actually executed as MMIO programs (lowered and
+    /// run on an `IlaSim`) so far — useful to assert MMIO fidelity really
+    /// engaged rather than silently falling back.
+    pub fn lowered_invocations(&self) -> usize {
+        self.lowered
+    }
+
+    /// Take the accumulated fidelity report, leaving an empty one.
+    pub fn take_fidelity(&mut self) -> FidelityReport {
+        std::mem::take(&mut self.fidelity)
+    }
+
+    /// Execute one op on the accelerator that owns it, per the backend.
+    /// `Ok(None)` means no registered accelerator claims the op (host
+    /// ops, unregistered targets) — the caller evaluates f32 semantics.
+    pub fn execute(&mut self, op: &Op, inputs: &[&Tensor]) -> Result<Option<Tensor>, EvalError> {
+        let registry = self.registry;
+        match registry.for_op(op) {
+            Some(accel) => self.execute_on(accel, op, inputs),
+            None => Ok(None),
+        }
+    }
+
+    /// Execute one op via the registry slot a dispatch plan resolved.
+    pub fn execute_slot(
+        &mut self,
+        slot: usize,
+        op: &Op,
+        inputs: &[&Tensor],
+    ) -> Result<Option<Tensor>, EvalError> {
+        let registry = self.registry;
+        self.execute_on(registry.by_slot(slot), op, inputs)
+    }
+
+    /// Execute one op on an accelerator resolved from this engine's
+    /// registry. Private on purpose: the per-target simulator cache is
+    /// only valid for the registry's own model instances, so external
+    /// callers must go through [`Self::execute`] / [`Self::execute_slot`]
+    /// (mixing in a foreign accelerator of the same target would replay
+    /// its program on a simulator built from a different design rev).
+    fn execute_on(
+        &mut self,
+        accel: &'r dyn Accelerator,
+        op: &Op,
+        inputs: &[&Tensor],
+    ) -> Result<Option<Tensor>, EvalError> {
+        match self.backend {
+            ExecBackend::Functional => Ok(accel.exec_op(op, inputs)),
+            ExecBackend::IlaMmio => match accel.lower(op, inputs) {
+                Some(inv) => self.run_lowered(accel, op, &inv).map(Some),
+                // not lowerable (data movement, device-capacity limits):
+                // the tensor path keeps the application running end to end
+                None => Ok(accel.exec_op(op, inputs)),
+            },
+            ExecBackend::CrossCheck => {
+                let functional = match accel.exec_op(op, inputs) {
+                    Some(t) => t,
+                    None => return Ok(None),
+                };
+                match accel.lower(op, inputs) {
+                    Some(inv) => {
+                        let mmio = self.run_lowered(accel, op, &inv)?;
+                        self.fidelity.record(op, accel.target(), &functional, &mmio);
+                    }
+                    // not lowerable: count it so a "clean" report cannot
+                    // silently mean "nothing was actually compared"
+                    None => self.fidelity.unlowered += 1,
+                }
+                Ok(Some(functional))
+            }
+        }
+    }
+
+    /// Play a lowered invocation on the (reset) per-target simulator and
+    /// decode the result.
+    fn run_lowered(
+        &mut self,
+        accel: &dyn Accelerator,
+        op: &Op,
+        inv: &LoweredInvocation,
+    ) -> Result<Tensor, EvalError> {
+        let idx = accel.target().index();
+        if self.sims[idx].is_none() {
+            self.sims[idx] = Some(IlaSim::new(accel.build_ila()));
+        }
+        let sim = self.sims[idx].as_mut().unwrap();
+        sim.reset();
+        self.lowered += 1;
+        codegen::execute_lowered(inv, sim)
+            .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::DesignRev;
+    use crate::util::Rng;
+
+    fn registry(rev: DesignRev) -> AcceleratorRegistry {
+        AcceleratorRegistry::for_rev(rev)
+    }
+
+    #[test]
+    fn functional_and_mmio_agree_on_flex_linear() {
+        let reg = registry(DesignRev::Updated);
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[4, 16], &mut rng, 1.0);
+        let w = Tensor::randn(&[8, 16], &mut rng, 0.3);
+        let b = Tensor::randn(&[8], &mut rng, 0.1);
+        let inputs = [&x, &w, &b];
+        let mut func = ExecEngine::new(&reg, ExecBackend::Functional);
+        let mut mmio = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+        let f = func.execute(&Op::FlexLinear, &inputs).unwrap().unwrap();
+        let m = mmio.execute(&Op::FlexLinear, &inputs).unwrap().unwrap();
+        assert_eq!(f, m, "backends must be bit-identical");
+        assert_eq!(mmio.lowered_invocations(), 1);
+        assert_eq!(func.lowered_invocations(), 0);
+    }
+
+    #[test]
+    fn host_ops_are_not_claimed() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+        let t = Tensor::ones(&[2, 2]);
+        assert!(engine.execute(&Op::Relu, &[&t]).unwrap().is_none());
+    }
+
+    #[test]
+    fn crosscheck_is_clean_on_the_updated_designs() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::CrossCheck);
+        let mut rng = Rng::new(8);
+        let x = Tensor::randn(&[4, 16], &mut rng, 1.0);
+        let w = Tensor::randn(&[8, 16], &mut rng, 0.3);
+        let b = Tensor::randn(&[8], &mut rng, 0.1);
+        engine.execute(&Op::FlexLinear, &[&x, &w, &b]).unwrap().unwrap();
+        let xc = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
+        let wc = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+        engine
+            .execute(&Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) }, &[&xc, &wc])
+            .unwrap()
+            .unwrap();
+        let rep = engine.take_fidelity();
+        assert_eq!(rep.total_checked(), 2);
+        assert!(rep.is_clean(), "updated designs must cross-check clean:\n{rep}");
+        // taking the report resets the accumulator
+        assert_eq!(engine.take_fidelity().total_checked(), 0);
+    }
+
+    #[test]
+    fn crosscheck_flags_the_original_hlscnn_weight_store() {
+        let reg = registry(DesignRev::Original);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::CrossCheck);
+        let mut rng = Rng::new(9);
+        let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
+        // typical trained-conv weight scale: codes land between the
+        // coarse 8-bit store steps, where floor != round
+        let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
+        let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
+        let out = engine.execute(&op, &[&x, &w]).unwrap();
+        assert!(out.is_some(), "cross-check must not abort the run");
+        let rep = engine.take_fidelity();
+        assert_eq!(rep.total_checked(), 1);
+        assert!(
+            rep.total_mismatches() > 0,
+            "original HLSCNN weight-store truncation must be flagged:\n{rep}"
+        );
+        let rec = rep.mismatched().next().unwrap();
+        assert_eq!(rec.target, Target::Hlscnn);
+        assert!(rec.max_abs_diff > 0.0 && rec.max_abs_diff.is_finite());
+    }
+
+    #[test]
+    fn crosscheck_counts_unlowerable_invocations() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::CrossCheck);
+        let t = Tensor::ones(&[2, 4]);
+        // data movement executes functionally but has no MMIO program
+        engine.execute(&Op::FlexMaxpStore, &[&t]).unwrap().unwrap();
+        let rep = engine.take_fidelity();
+        assert_eq!(rep.total_checked(), 0);
+        assert_eq!(rep.total_unlowered(), 1);
+        assert!(rep.is_clean(), "unlowered is not a mismatch");
+        assert!(
+            format!("{rep}").contains("NOT cross-checked"),
+            "the report must disclose unchecked invocations:\n{rep}"
+        );
+    }
+
+    #[test]
+    fn fidelity_reports_merge() {
+        let mut a = FidelityReport::default();
+        let mut b = FidelityReport::default();
+        let t1 = Tensor::ones(&[2]);
+        let t2 = Tensor::zeros(&[2]);
+        a.record(&Op::VtaGemm, Target::Vta, &t1, &t1);
+        b.record(&Op::VtaGemm, Target::Vta, &t1, &t2);
+        b.record(&Op::FlexLinear, Target::FlexAsr, &t1, &t1);
+        a.merge(b);
+        assert_eq!(a.total_checked(), 3);
+        assert_eq!(a.total_mismatches(), 1);
+        assert_eq!(a.records().len(), 2);
+        assert!(!a.is_clean());
+    }
+}

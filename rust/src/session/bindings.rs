@@ -3,11 +3,45 @@
 //! A [`Bindings`] maps IR leaf names (`Var`/`Weight`) to tensors. It
 //! replaces the raw `HashMap<String, Tensor>` environments of the seed
 //! API — and, crucially, makes the *input* variable of a sweep an
-//! explicit parameter instead of the hardcoded `"x"` the old
-//! `coordinator::classify_sweep` assumed.
+//! explicit parameter instead of the hardcoded `"x"` the old (deleted)
+//! `coordinator::classify_sweep` shim assumed.
 
+use crate::ir::interp::EnvLookup;
 use crate::tensor::Tensor;
 use std::collections::HashMap;
+
+/// A borrowed environment layering one per-datapoint binding over a
+/// shared base map — the allocation-free worker environment of
+/// [`crate::session::CompiledProgram::classify_sweep`].
+///
+/// The seed sweep cloned the whole weight map once per worker and then
+/// re-inserted the input tensor per point; a `LayeredEnv` is two
+/// references, so worker spin-up allocates nothing and the shared
+/// weights are read in place by every thread.
+#[derive(Debug, Clone, Copy)]
+pub struct LayeredEnv<'a> {
+    base: &'a HashMap<String, Tensor>,
+    name: &'a str,
+    value: &'a Tensor,
+}
+
+impl<'a> LayeredEnv<'a> {
+    /// Layer `name → value` over `base` (the override wins on collision,
+    /// matching the seed's insert-over-clone semantics).
+    pub fn new(base: &'a HashMap<String, Tensor>, name: &'a str, value: &'a Tensor) -> Self {
+        LayeredEnv { base, name, value }
+    }
+}
+
+impl EnvLookup for LayeredEnv<'_> {
+    fn lookup(&self, name: &str) -> Option<&Tensor> {
+        if name == self.name {
+            Some(self.value)
+        } else {
+            self.base.get(name)
+        }
+    }
+}
 
 /// Named tensor bindings for one evaluation of a compiled program.
 #[derive(Debug, Clone, Default)]
@@ -65,6 +99,12 @@ impl From<HashMap<String, Tensor>> for Bindings {
     }
 }
 
+impl EnvLookup for Bindings {
+    fn lookup(&self, name: &str) -> Option<&Tensor> {
+        self.env.get(name)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +126,21 @@ mod tests {
         b.set("x", Tensor::ones(&[3]));
         assert_eq!(b.len(), 1);
         assert_eq!(b.get("x").unwrap().shape, vec![3]);
+    }
+
+    #[test]
+    fn layered_env_overrides_without_touching_base() {
+        let base: HashMap<String, Tensor> = [
+            ("w".to_string(), Tensor::ones(&[2])),
+            ("x".to_string(), Tensor::zeros(&[2])),
+        ]
+        .into_iter()
+        .collect();
+        let point = Tensor::ones(&[4]);
+        let env = LayeredEnv::new(&base, "x", &point);
+        assert_eq!(env.lookup("x").unwrap().shape, vec![4], "override wins");
+        assert_eq!(env.lookup("w").unwrap().shape, vec![2], "base visible");
+        assert!(env.lookup("missing").is_none());
+        assert_eq!(base.get("x").unwrap().shape, vec![2], "base untouched");
     }
 }

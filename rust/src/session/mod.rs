@@ -25,21 +25,32 @@
 //! ```text
 //! SessionBuilder ──build()──▶ Session ──compile(&App)──▶ CompiledProgram
 //!                              │  Arc<AcceleratorRegistry>     │ plan: per-node slot
+//!                              │  ExecBackend                  │
 //!                              └────────────┬──────────────────┘
 //!                                           ▼
-//!                          ILA tensor fast path (exec_op)
+//!                                 ExecEngine (per worker)
+//!                              Functional │ IlaMmio │ CrossCheck
+//!                               exec_op   │ lower + IlaSim │ both
 //! ```
+//!
+//! Execution is **backend-selectable** per session
+//! ([`SessionBuilder::backend`]): the same compiled program can run on
+//! the tensor fast path, at MMIO fidelity on the ILA simulators, or in
+//! [`ExecBackend::CrossCheck`] mode where every invocation runs both
+//! ways and bit-level disagreements accumulate in a [`FidelityReport`].
 
+pub mod backend;
 pub mod bindings;
 pub mod registry;
 
-pub use bindings::Bindings;
+pub use backend::{ExecBackend, ExecEngine, FidelityRecord, FidelityReport};
+pub use bindings::{Bindings, LayeredEnv};
 pub use registry::AcceleratorRegistry;
 
 use crate::apps::App;
 use crate::compiler;
 use crate::egraph::{RunnerLimits, StopReason};
-use crate::ir::interp::{self, EvalError};
+use crate::ir::interp::{self, EnvLookup, EvalError};
 use crate::ir::shape::Shape;
 use crate::ir::{Op, RecExpr, Target};
 use crate::rewrites::Matching;
@@ -68,6 +79,7 @@ pub struct SessionBuilder {
     rev: DesignRev,
     workers: usize,
     track_errors: bool,
+    backend: ExecBackend,
 }
 
 impl Default for SessionBuilder {
@@ -79,7 +91,7 @@ impl Default for SessionBuilder {
 impl SessionBuilder {
     /// Defaults: all three accelerators, flexible matching, default
     /// saturation limits, updated designs, one worker, no per-invocation
-    /// error tracking.
+    /// error tracking, functional execution backend.
     pub fn new() -> Self {
         SessionBuilder {
             targets: vec![Target::FlexAsr, Target::Hlscnn, Target::Vta],
@@ -88,6 +100,7 @@ impl SessionBuilder {
             rev: DesignRev::Updated,
             workers: 1,
             track_errors: false,
+            backend: ExecBackend::Functional,
         }
     }
 
@@ -129,6 +142,21 @@ impl SessionBuilder {
         self
     }
 
+    /// Select the execution backend for accelerator invocations.
+    ///
+    /// * [`ExecBackend::Functional`] (default) — tensor fast path; use
+    ///   for big sweeps where throughput matters.
+    /// * [`ExecBackend::IlaMmio`] — full MMIO programs on the ILA
+    ///   simulators; use when deployment fidelity matters (every byte
+    ///   crosses the modeled hardware interface).
+    /// * [`ExecBackend::CrossCheck`] — both, bit-compared per
+    ///   invocation into a [`FidelityReport`]; use as the always-on
+    ///   consistency check between the two views of the hardware.
+    pub fn backend(mut self, backend: ExecBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
     /// Instantiate the accelerator models once and freeze the session.
     pub fn build(self) -> Session {
         Session {
@@ -139,6 +167,7 @@ impl SessionBuilder {
             rev: self.rev,
             workers: self.workers,
             track_errors: self.track_errors,
+            backend: self.backend,
         }
     }
 }
@@ -153,6 +182,7 @@ pub struct Session {
     rev: DesignRev,
     workers: usize,
     track_errors: bool,
+    backend: ExecBackend,
 }
 
 impl Session {
@@ -184,6 +214,11 @@ impl Session {
     /// The session's worker-thread count.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// The session's execution backend.
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
     }
 
     /// Compile an application (including app-specific rewrite rules) into
@@ -230,6 +265,7 @@ impl Session {
             registry: Arc::clone(&self.registry),
             workers: self.workers,
             track_errors: self.track_errors,
+            backend: self.backend,
         }
     }
 }
@@ -337,10 +373,16 @@ pub struct RunTrace {
     pub output: Tensor,
     /// Accelerator invocations executed.
     pub invocations: usize,
+    /// Invocations that executed as MMIO programs on an ILA simulator
+    /// (0 under [`ExecBackend::Functional`]).
+    pub mmio_invocations: usize,
     /// Per-invocation relative errors (§4.4.2 debugging statistics);
     /// empty unless the session enabled
     /// [`SessionBuilder::track_errors`].
     pub inv_errors: Vec<f32>,
+    /// Cross-check outcome (empty unless the session backend is
+    /// [`ExecBackend::CrossCheck`]).
+    pub fidelity: FidelityReport,
 }
 
 /// Result of one co-simulated evaluation ([`CompiledProgram::cosim`]).
@@ -358,6 +400,9 @@ pub struct CosimReport {
     /// empty unless the session enabled
     /// [`SessionBuilder::track_errors`].
     pub inv_errors: Vec<f32>,
+    /// Cross-check outcome (empty unless the session backend is
+    /// [`ExecBackend::CrossCheck`]).
+    pub fidelity: FidelityReport,
 }
 
 /// A classification sweep over a dataset: which bindings are shared
@@ -389,6 +434,14 @@ pub struct SweepReport {
     /// time by about that factor.
     pub sim_time: Duration,
     pub workers: usize,
+    /// Accelerated evaluations that *failed* (e.g. an MMIO engine fault
+    /// under [`ExecBackend::IlaMmio`]); these points count as
+    /// misclassifications, so a non-zero value means the accuracy gap is
+    /// (partly) execution failure, not numerics.
+    pub exec_errors: usize,
+    /// Cross-check outcome merged across workers (empty unless the
+    /// session backend is [`ExecBackend::CrossCheck`]).
+    pub fidelity: FidelityReport,
 }
 
 impl SweepReport {
@@ -432,12 +485,23 @@ pub struct CompiledProgram {
     registry: Arc<AcceleratorRegistry>,
     workers: usize,
     track_errors: bool,
+    backend: ExecBackend,
 }
 
 impl CompiledProgram {
     /// The extracted (rewritten) program.
     pub fn expr(&self) -> &RecExpr {
         &self.expr
+    }
+
+    /// The execution backend this handle runs under.
+    pub fn backend(&self) -> ExecBackend {
+        self.backend
+    }
+
+    /// A fresh per-worker execution engine for this handle's backend.
+    fn engine(&self) -> ExecEngine<'_> {
+        ExecEngine::new(&self.registry, self.backend)
     }
 
     /// Compilation statistics (None for [`Session::attach`] handles).
@@ -465,29 +529,52 @@ impl CompiledProgram {
         interp::eval(&self.expr, bindings.env())
     }
 
-    /// Evaluate with accelerator numerics on the offloaded regions.
+    /// Evaluate with accelerator numerics on the offloaded regions,
+    /// through the session's execution backend.
+    ///
+    /// This tensor-only API does not surface the
+    /// [`ExecBackend::CrossCheck`] fidelity report; use
+    /// [`Self::run_traced`] when the cross-check outcome matters.
     pub fn run(&self, bindings: &Bindings) -> Result<Tensor, EvalError> {
-        self.exec(bindings.env(), None).map(|(t, _)| t)
+        let mut engine = self.engine();
+        self.exec(bindings.env(), &mut engine, None).map(|(t, _)| t)
     }
 
     /// Evaluate with accelerator numerics, returning the invocation
-    /// count and (when the session opted in) per-invocation errors —
-    /// half the cost of [`Self::cosim`] when the f32 reference output
-    /// is not needed.
+    /// count, (when the session opted in) per-invocation errors, and the
+    /// backend's fidelity report — half the cost of [`Self::cosim`] when
+    /// the f32 reference output is not needed.
     pub fn run_traced(&self, bindings: &Bindings) -> Result<RunTrace, EvalError> {
+        let mut engine = self.engine();
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
-        let (output, invocations) = self.exec(bindings.env(), errors)?;
-        Ok(RunTrace { output, invocations, inv_errors })
+        let (output, invocations) = self.exec(bindings.env(), &mut engine, errors)?;
+        Ok(RunTrace {
+            output,
+            invocations,
+            mmio_invocations: engine.lowered_invocations(),
+            inv_errors,
+            fidelity: engine.take_fidelity(),
+        })
     }
 
     /// Evaluate a batch, sharded over the session's worker threads.
     /// Output order matches input order and results are independent of
-    /// the worker count.
+    /// the worker count. Each worker owns one [`ExecEngine`] (and thus
+    /// its own ILA simulators under the MMIO backends).
+    ///
+    /// Note: this tensor-only API does not surface the
+    /// [`ExecBackend::CrossCheck`] fidelity report (the per-worker
+    /// engines are dropped with it); use [`Self::run_traced`] per point
+    /// or [`Self::classify_sweep`] when the cross-check outcome matters.
     pub fn run_batch(&self, batch: &[Bindings]) -> Vec<Result<Tensor, EvalError>> {
         let workers = self.workers.max(1).min(batch.len().max(1));
         if workers <= 1 {
-            return batch.iter().map(|b| self.run(b)).collect();
+            let mut engine = self.engine();
+            return batch
+                .iter()
+                .map(|b| self.exec(b.env(), &mut engine, None).map(|(t, _)| t))
+                .collect();
         }
         let chunk = batch.len().div_ceil(workers);
         let mut out = Vec::with_capacity(batch.len());
@@ -496,7 +583,13 @@ impl CompiledProgram {
                 .chunks(chunk)
                 .map(|shard| {
                     s.spawn(move || {
-                        shard.iter().map(|b| self.run(b)).collect::<Vec<_>>()
+                        let mut engine = self.engine();
+                        shard
+                            .iter()
+                            .map(|b| {
+                                self.exec(b.env(), &mut engine, None).map(|(t, _)| t)
+                            })
+                            .collect::<Vec<_>>()
                     })
                 })
                 .collect();
@@ -512,17 +605,29 @@ impl CompiledProgram {
     /// opted in.
     pub fn cosim(&self, bindings: &Bindings) -> Result<CosimReport, EvalError> {
         let reference = interp::eval(&self.expr, bindings.env())?;
+        let mut engine = self.engine();
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
-        let (accelerated, invocations) = self.exec(bindings.env(), errors)?;
+        let (accelerated, invocations) = self.exec(bindings.env(), &mut engine, errors)?;
         let rel_error = accelerated.rel_error(&reference);
-        Ok(CosimReport { reference, accelerated, invocations, rel_error, inv_errors })
+        Ok(CosimReport {
+            reference,
+            accelerated,
+            invocations,
+            rel_error,
+            inv_errors,
+            fidelity: engine.take_fidelity(),
+        })
     }
 
     /// Application-level classification sweep (Table 4): reference and
     /// accelerated accuracy over a labelled dataset, sharded over the
-    /// session's worker threads. Replaces `coordinator::classify_sweep`;
-    /// the input variable is explicit in the [`SweepSpec`].
+    /// session's worker threads. The input variable is explicit in the
+    /// [`SweepSpec`].
+    ///
+    /// Worker spin-up is allocation-free: each point evaluates under a
+    /// [`LayeredEnv`] (shared weight map + one borrowed input slot)
+    /// instead of the seed's per-worker clone of the whole weight map.
     pub fn classify_sweep(&self, spec: &SweepSpec<'_>) -> SweepReport {
         assert_eq!(
             spec.inputs.len(),
@@ -533,44 +638,55 @@ impl CompiledProgram {
         let workers = self.workers.max(1);
         let mut totals = (0usize, 0usize, 0usize); // (ref, acc, n)
         let mut sim_time = Duration::ZERO;
+        let mut exec_errors = 0usize;
+        let mut fidelity = FidelityReport::default();
         thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|wid| {
                     s.spawn(move || {
-                        let mut env = spec.weights.clone();
-                        // busy time starts after per-worker setup so
-                        // sim_time measures simulation, not weight memcpy
+                        let mut engine = self.engine();
                         let busy = Instant::now();
                         let (mut ref_c, mut acc_c, mut n) = (0usize, 0usize, 0usize);
+                        let mut errs = 0usize;
                         let mut idx = wid;
                         while idx < spec.inputs.len() {
-                            env.insert(
-                                spec.input_var.to_string(),
-                                spec.inputs[idx].clone(),
+                            let env = LayeredEnv::new(
+                                spec.weights,
+                                spec.input_var,
+                                &spec.inputs[idx],
                             );
                             if let Ok(r) = interp::eval(&self.expr, &env) {
                                 if r.argmax() == spec.labels[idx] {
                                     ref_c += 1;
                                 }
                             }
-                            if let Ok((a, _)) = self.exec(&env, None) {
-                                if a.argmax() == spec.labels[idx] {
-                                    acc_c += 1;
+                            // an execution failure counts as a miss AND is
+                            // surfaced in the report — the MMIO backends
+                            // make this path genuinely fallible
+                            match self.exec(&env, &mut engine, None) {
+                                Ok((a, _)) => {
+                                    if a.argmax() == spec.labels[idx] {
+                                        acc_c += 1;
+                                    }
                                 }
+                                Err(_) => errs += 1,
                             }
                             n += 1;
                             idx += workers;
                         }
-                        (ref_c, acc_c, n, busy.elapsed())
+                        (ref_c, acc_c, n, errs, busy.elapsed(), engine.take_fidelity())
                     })
                 })
                 .collect();
             for h in handles {
-                let (r, a, n, busy) = h.join().expect("sweep worker panicked");
+                let (r, a, n, errs, busy, fid) =
+                    h.join().expect("sweep worker panicked");
                 totals.0 += r;
                 totals.1 += a;
                 totals.2 += n;
+                exec_errors += errs;
                 sim_time += busy;
+                fidelity.merge(fid);
             }
         });
         SweepReport {
@@ -580,14 +696,16 @@ impl CompiledProgram {
             elapsed: start.elapsed(),
             sim_time,
             workers,
+            exec_errors,
+            fidelity,
         }
     }
 
     /// Language-model co-simulation sweep (the Table 4 LSTM-WLM row):
     /// per-token perplexity, reference vs accelerated. Uses the default
     /// [`crate::cosim::LmSpec`] (input `"x_seq"`, 16-token windows) with
-    /// the session's error-tracking setting; see [`Self::lm_sweep_spec`]
-    /// for explicit control.
+    /// the session's error-tracking setting and execution backend; see
+    /// [`Self::lm_sweep_spec`] for explicit control.
     pub fn lm_sweep(
         &self,
         weights: &HashMap<String, Tensor>,
@@ -604,7 +722,8 @@ impl CompiledProgram {
 
     /// Language-model co-simulation sweep with an explicit [`LmSpec`]
     /// (input variable name, window length, error tracking) — no
-    /// hardcoded `"x_seq"`/16 assumptions.
+    /// hardcoded `"x_seq"`/16 assumptions. Runs under the session's
+    /// execution backend.
     ///
     /// [`LmSpec`]: crate::cosim::LmSpec
     pub fn lm_sweep_spec(
@@ -615,7 +734,7 @@ impl CompiledProgram {
         tokens: &[usize],
         n_sentences: usize,
     ) -> Result<crate::cosim::LmReport, EvalError> {
-        crate::cosim::cosim_lm_spec(
+        crate::cosim::cosim_lm_backend(
             &self.expr,
             spec,
             weights,
@@ -623,12 +742,14 @@ impl CompiledProgram {
             tokens,
             n_sentences,
             &self.registry,
+            self.backend,
         )
     }
 
     /// The plan-driven interpreter loop: host ops run f32 semantics,
-    /// accelerator ops dispatch through the precomputed slot table
-    /// (no per-node target match, no accelerator scan).
+    /// accelerator ops dispatch through the precomputed slot table into
+    /// the worker's [`ExecEngine`] (which routes them to the tensor fast
+    /// path, the ILA MMIO simulators, or both, per the session backend).
     ///
     /// The loop is *zero-clone*: `Var`/`Weight` leaves are borrowed from
     /// the environment instead of cloned (the seed cloned every leaf —
@@ -636,9 +757,10 @@ impl CompiledProgram {
     /// intermediate tensors are dropped at their precomputed last use
     /// (`DispatchPlan::frees`), so peak memory is the live set, not the
     /// whole program.
-    fn exec(
+    fn exec<E: EnvLookup + ?Sized>(
         &self,
-        env: &HashMap<String, Tensor>,
+        env: &E,
+        engine: &mut ExecEngine<'_>,
         mut errors: Option<&mut Vec<f32>>,
     ) -> Result<(Tensor, usize), EvalError> {
         enum Slot<'a> {
@@ -660,14 +782,14 @@ impl CompiledProgram {
         for (i, (node, step)) in self.expr.nodes.iter().zip(&self.plan.steps).enumerate() {
             let v = match &node.op {
                 Op::Var(n) | Op::Weight(n) => Slot::Borrowed(
-                    env.get(n).ok_or_else(|| EvalError::Unbound(n.clone()))?,
+                    env.lookup(n).ok_or_else(|| EvalError::Unbound(n.clone()))?,
                 ),
                 op => {
                     let ch: Vec<&Tensor> =
                         node.children.iter().map(|&c| values[c].get()).collect();
                     let out = match *step {
                         Step::Accel { slot, invocation } => {
-                            match self.registry.by_slot(slot).exec_op(op, &ch) {
+                            match engine.execute_slot(slot, op, &ch)? {
                                 Some(out) => {
                                     if invocation {
                                         invocations += 1;
@@ -860,6 +982,8 @@ mod tests {
             elapsed: Duration::from_secs(10),
             sim_time: Duration::from_secs(40),
             workers: 4,
+            exec_errors: 0,
+            fidelity: FidelityReport::default(),
         };
         assert_eq!(rep.wall_time_per_point(), Duration::from_secs(1));
         assert_eq!(rep.sim_time_per_point(), Duration::from_secs(4));
@@ -915,5 +1039,91 @@ mod tests {
         let out = program.run_batch(std::slice::from_ref(&b));
         assert_eq!(out.len(), 1);
         assert_eq!(*out[0].as_ref().unwrap(), program.run(&b).unwrap());
+    }
+
+    #[test]
+    fn backend_threads_from_builder_to_program() {
+        let (expr, shapes) = linear_app();
+        for backend in
+            [ExecBackend::Functional, ExecBackend::IlaMmio, ExecBackend::CrossCheck]
+        {
+            let session =
+                Session::builder().targets(&[Target::FlexAsr]).backend(backend).build();
+            assert_eq!(session.backend(), backend);
+            let program = session.compile_expr(&expr, &shapes);
+            assert_eq!(program.backend(), backend);
+        }
+    }
+
+    #[test]
+    fn mmio_backend_runs_bit_identical_to_functional() {
+        let (expr, shapes) = linear_app();
+        let functional = Session::builder().targets(&[Target::FlexAsr]).build();
+        let program = functional.compile_expr(&expr, &shapes);
+        let mmio = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::IlaMmio)
+            .build()
+            .attach(program.expr().clone());
+        let mut rng = Rng::new(21);
+        let b = linear_bindings(&mut rng);
+        assert_eq!(program.run(&b).unwrap(), mmio.run(&b).unwrap());
+        // and the MMIO run really lowered (no silent fallback)
+        let trace = mmio.run_traced(&b).unwrap();
+        assert_eq!(trace.invocations, 1);
+        assert_eq!(trace.mmio_invocations, 1);
+    }
+
+    #[test]
+    fn crosscheck_backend_populates_fidelity() {
+        let (expr, shapes) = linear_app();
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::CrossCheck)
+            .build();
+        let program = session.compile_expr(&expr, &shapes);
+        let mut rng = Rng::new(22);
+        let trace = program.run_traced(&linear_bindings(&mut rng)).unwrap();
+        assert_eq!(trace.fidelity.total_checked(), 1);
+        assert!(trace.fidelity.is_clean(), "{}", trace.fidelity);
+        // functional runs leave the report empty
+        let plain = Session::builder().targets(&[Target::FlexAsr]).build();
+        let t2 = plain
+            .attach(program.expr().clone())
+            .run_traced(&linear_bindings(&mut rng))
+            .unwrap();
+        assert_eq!(t2.fidelity.total_checked(), 0);
+        assert_eq!(t2.mmio_invocations, 0);
+    }
+
+    #[test]
+    fn crosscheck_sweep_merges_worker_fidelity() {
+        let (expr, shapes) = linear_app();
+        let mut rng = Rng::new(23);
+        let weights: HashMap<String, Tensor> = [
+            ("w".to_string(), Tensor::randn(&[4, 8], &mut rng, 0.3)),
+            ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+        ]
+        .into_iter()
+        .collect();
+        let inputs: Vec<Tensor> =
+            (0..12).map(|_| Tensor::randn(&[1, 8], &mut rng, 1.0)).collect();
+        let labels: Vec<usize> = (0..12).map(|_| rng.below(4)).collect();
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::CrossCheck)
+            .workers(3)
+            .build();
+        let program = session.compile_expr(&expr, &shapes);
+        let rep = program.classify_sweep(&SweepSpec {
+            input_var: "input",
+            weights: &weights,
+            inputs: &inputs,
+            labels: &labels,
+        });
+        assert_eq!(rep.n, 12);
+        // one FlexLinear invocation per point, merged across 3 workers
+        assert_eq!(rep.fidelity.total_checked(), 12);
+        assert!(rep.fidelity.is_clean(), "{}", rep.fidelity);
     }
 }

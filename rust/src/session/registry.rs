@@ -1,9 +1,10 @@
 //! The accelerator registry: an owned, `Target`-indexed dispatch table.
 //!
-//! The registry replaces two seed-era patterns:
+//! The registry replaces two seed-era patterns (whose deprecated shims,
+//! `accel::accel_for` and `coordinator::accelerators`, are now deleted):
 //!
-//! * the O(n) [`crate::accel::accel_for`] linear scan on every
-//!   intercepted node of the co-simulation hot loop, and
+//! * the O(n) `accel_for` linear scan on every intercepted node of the
+//!   co-simulation hot loop, and
 //! * the per-worker `coordinator::accelerators(rev)` re-instantiation,
 //!   which rebuilt every accelerator model for each sweep thread.
 //!

@@ -28,6 +28,11 @@ pub enum BusError {
     NoDevice(u64),
     #[error("device `{dev}` fault: {err}")]
     Device { dev: String, err: IlaError },
+    /// A read decoded to an instruction that produced no read-back data
+    /// (e.g. reading a write-only register). The seed driver masked this
+    /// by returning zeros, silently corrupting results downstream.
+    #[error("read at 0x{0:08X} returned no data")]
+    NoData(u64),
 }
 
 /// The MMIO interconnect.
