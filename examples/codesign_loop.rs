@@ -1,4 +1,5 @@
-//! The §4.4.2 software/hardware co-design loop, replayed:
+//! **Reproduces: §4.4.2 + Table 4 (ResNet-20 rows)** — the
+//! software/hardware co-design loop, replayed:
 //!
 //! 1. compile ResNet-20 for FlexASR + HLSCNN and co-simulate — accuracy
 //!    collapses with the *original* designs (HLSCNN's coarse 8-bit

@@ -1,4 +1,4 @@
-//! §4.3.2 system deployment, on the emulated SoC instead of the Zynq
+//! **Reproduces: §4.3.2** — system deployment, on the emulated SoC instead of the Zynq
 //! ZCU102: compile synthetic programs in which LSTM layers and linear
 //! layers are offloaded to FlexASR, lower them to MMIO command streams,
 //! and drive them through the XSDK-style driver over the bus.
@@ -23,12 +23,12 @@ fn main() -> anyhow::Result<()> {
     let w1 = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 0.3));
     let b1 = fa.quant(&Tensor::randn(&[16], &mut rng, 0.1));
     let lin1 = fa.lower(&Op::FlexLinear, &[&x, &w1, &b1]).expect("fits");
-    let h = drv.invoke(&lin1)?;
+    let h = drv.invoke_program(&lin1)?;
     let w2 = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b2 = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
     let hq = fa.quant(&h);
     let lin2 = fa.lower(&Op::FlexLinear, &[&hq, &w2, &b2]).expect("fits");
-    let y = drv.invoke(&lin2)?;
+    let y = drv.invoke_program(&lin2)?;
     let expect = fa.linear(&fa.quant(&fa.linear(&x, &w1, &b1)), &w2, &b2);
     println!(
         "  output {:?}, error vs ILA fast path {:.2e}",
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
     let q = vta.quant(&pooled.reshape(&[4, 64]));
     let wq = vta.quant(&Tensor::randn(&[8, 64], &mut rng, 1.0));
     let gemm = vta.lower(&Op::VtaGemm, &[&q, &wq]).expect("fits");
-    let g = drv.invoke(&gemm)?;
+    let g = drv.invoke_program(&gemm)?;
     assert_eq!(g.rel_error(&vta.gemm(&q, &wq)), 0.0);
     println!("  VTA GEMM exact ({:?})", g.shape);
 

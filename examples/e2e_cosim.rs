@@ -1,5 +1,5 @@
-//! End-to-end driver: proves all three layers compose on a real (small)
-//! workload.
+//! **Reproduces: the Table 4 pipeline end to end (L1/L2/L3 composition)**
+//! — proves all three layers compose on a real (small) workload.
 //!
 //! * **L1/L2 → artifacts**: `make artifacts` trained the models in JAX
 //!   (AdaptivFloat Pallas kernel in the compile path) and lowered the

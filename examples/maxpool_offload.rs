@@ -1,13 +1,16 @@
-//! The §5.1 / Fig. 7 walk: offloading 2-D max pooling with window (4,4)
-//! and stride (2,2) onto FlexASR's fixed (2,1)/(2,1) temporal max pool,
-//! then cancelling the redundant intermediate store/loads.
+//! **Reproduces: §5.1 / Fig. 7** — offloading 2-D max pooling with
+//! window (4,4) and stride (2,2) onto FlexASR's fixed (2,1)/(2,1)
+//! temporal max pool, then cancelling the redundant intermediate
+//! store/loads — entirely through the Session API
+//! (`SessionBuilder::extended_rules` enables the §5.1 data-movement
+//! rule set; the compiled handle runs the optimized program under both
+//! execution backends).
 //!
 //! Run with: `cargo run --release --example maxpool_offload`
 
 use d2a::codegen::optimize::{pool_chains, transfer_stats};
-use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
-use d2a::ir::{interp, parse::to_sexpr, Op, RecExpr, Target};
-use d2a::rewrites::{rules_for_extended, Matching};
+use d2a::ir::{parse::to_sexpr, Op, RecExpr, Target};
+use d2a::session::{Bindings, ExecBackend, Session};
 use d2a::tensor::Tensor;
 use d2a::util::Rng;
 use std::collections::HashMap;
@@ -21,36 +24,65 @@ fn main() {
 
     let shapes: HashMap<String, Vec<usize>> =
         [("t".to_string(), vec![128usize, 128])].into_iter().collect();
-    let mut eg = EGraph::new(shapes);
-    let root = eg.add_expr(&program);
-    let rules = rules_for_extended(&[Target::FlexAsr], Matching::Flexible);
-    Runner::new(RunnerLimits::default()).run(&mut eg, &rules);
-    let best = Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root);
+
+    // one session carries the whole policy: FlexASR target, flexible
+    // matching, plus the extended §5.1 store/load-cancellation rules
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .extended_rules(true)
+        .build();
+    let compiled = session.compile_expr(&program, &shapes);
 
     // Fig. 7(f): optimized offload
-    println!("optimized offload (Fig. 7f):\n  {}\n", to_sexpr(&best));
-    let stats = transfer_stats(&best);
+    println!("optimized offload (Fig. 7f):\n  {}\n", to_sexpr(compiled.expr()));
+    let stats = transfer_stats(compiled.expr());
     println!(
         "data movement: {} store, {} load, {} fasr_maxpool stages (chains {:?})",
         stats.stores,
         stats.loads,
         stats.compute,
-        pool_chains(&best)
+        pool_chains(compiled.expr())
     );
     assert_eq!(stats.stores, 1);
     assert_eq!(stats.loads, 1);
     assert_eq!(stats.compute, 4);
 
-    // semantics check against the original program
+    // rewrite-equivalence check, through handles: the optimized program
+    // computes the same f32 function as the original (both run_ref)
     let mut rng = Rng::new(3);
-    let tv = Tensor::randn(&[128, 128], &mut rng, 1.0);
-    let env: HashMap<String, Tensor> = [("t".to_string(), tv)].into_iter().collect();
-    let a = interp::eval(&program, &env).unwrap();
-    let b = interp::eval(&best, &env).unwrap();
+    let bindings = Bindings::new().with("t", Tensor::randn(&[128, 128], &mut rng, 1.0));
+    let original = session.attach(program.clone());
+    let reference = original.run_ref(&bindings).unwrap();
+    let rewritten = compiled.run_ref(&bindings).unwrap();
     println!(
-        "\nrewritten program max|diff| vs original: {:.2e} over {:?} output",
-        a.max_abs_diff(&b),
-        a.shape
+        "\nrewritten-vs-original f32 max|diff|: {:.2e} over {:?} output",
+        rewritten.max_abs_diff(&reference),
+        rewritten.shape
     );
-    assert!(a.max_abs_diff(&b) < 1e-6);
+    assert!(rewritten.max_abs_diff(&reference) < 1e-6);
+
+    // accelerated run: store/load cross the AF8 interface, so the gap to
+    // f32 is the (small) AdaptivFloat quantization error, not zero
+    let accelerated = compiled.run(&bindings).unwrap();
+    let gap = accelerated.rel_error(&reference);
+    println!("accelerated (AF8) vs f32 relative error: {:.2}%", gap * 100.0);
+    assert!(gap < 0.1, "AdaptivFloat gap out of range: {gap}");
+
+    // the same handle at MMIO fidelity: every pool stage as a real
+    // command program on the FlexASR ILA simulator, bit-identical
+    let mmio = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build()
+        .attach(compiled.expr().clone());
+    let mut engine = mmio.engine();
+    let trace = mmio.run_traced_with(&mut engine, &bindings).unwrap();
+    assert_eq!(trace.output, accelerated, "MMIO and functional agree bit-exactly");
+    println!(
+        "MMIO replay: {} invocation(s) as real command programs, \
+         {} simulator reset(s), {} B of state restored (dirty-region resets)",
+        trace.mmio_invocations,
+        engine.resets(),
+        engine.bytes_cleared()
+    );
 }

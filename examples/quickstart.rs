@@ -1,5 +1,5 @@
-//! Quickstart: the whole D2A flow on one small program, through the
-//! unified session API.
+//! **Reproduces: Fig. 3(a) → Fig. 5(c)/(d)** — the whole D2A flow on one
+//! small program, through the unified session API.
 //!
 //! 1. write an IR program (a linear layer, Fig. 3a),
 //! 2. build a [`Session`] and compile the program with equality
@@ -71,9 +71,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // 4. lower the matched fasr_linear to ILA assembly + MMIO commands
-    let inv = dev
+    let prog = dev
         .lower(&Op::FlexLinear, &[&xv, &wv, &bv])
         .expect("linear fits the device");
+    let inv = &prog.invocations[0];
     println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);
     println!("tail of the MMIO stream (Fig. 5d):");
     for cmd in inv.cmds.iter().rev().take(7).rev() {
@@ -83,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     // 5. run on the emulated SoC, compare against the ILA fast path and
     //    the session's accelerated result
     let mut driver = Driver::new(d2a::soc::reference_soc());
-    let accel_out = driver.invoke(&inv)?;
+    let accel_out = driver.invoke_program(&prog)?;
     let host_out = dev
         .exec_op(&Op::FlexLinear, &[&xv, &wv, &bv])
         .unwrap();

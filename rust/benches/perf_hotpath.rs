@@ -77,6 +77,7 @@ fn main() {
     });
 
     dispatch_benches(&mut rng);
+    engine_reuse_benches(&mut rng);
 }
 
 /// E-matching: op-indexed search + backoff scheduling vs the full-scan
@@ -125,6 +126,58 @@ fn matching_benches() {
         "indexed matching must do strictly less work: {} vs {}",
         probed[0],
         probed[1]
+    );
+}
+
+/// Engine reuse + dirty-region resets: single-point MMIO evaluations
+/// through a caller-held `ExecEngine` vs a throwaway engine per call
+/// (the seed behaviour of `run`), and the per-invocation sim setup work
+/// each pays. The persistent engine must build its simulator once and
+/// its dirty-region resets must restore strictly fewer bytes than the
+/// full-clone-per-invocation baseline — the counters are reported so the
+/// reduction is visible in CI logs, not just asserted.
+fn engine_reuse_benches(rng: &mut Rng) {
+    use d2a::ir::{GraphBuilder, Target};
+    use d2a::session::ExecBackend;
+
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    g.linear(x, w, b);
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let program = session.attach(g.finish());
+    let bindings = Bindings::new()
+        .with("x", Tensor::randn(&[16, 96], rng, 1.0))
+        .with("w", Tensor::randn(&[96, 96], rng, 0.2))
+        .with("b", Tensor::randn(&[96], rng, 0.1));
+
+    let reps = 200u32;
+    time("mmio run: fresh engine per call (seed)", reps, || {
+        let _ = program.run(&bindings).unwrap();
+    });
+    let mut engine = program.engine();
+    time("mmio run: caller-held persistent engine", reps, || {
+        let _ = program.run_with(&mut engine, &bindings).unwrap();
+    });
+
+    let per_invocation_cleared = engine.bytes_cleared() / engine.resets().max(1);
+    let full_clone = engine.state_bytes();
+    println!(
+        "engine-reuse: {} sim build(s) for {} invocations; dirty resets \
+         restored {} B/invocation vs {} B/invocation full-clone baseline \
+         ({:.1}x less reset traffic)",
+        engine.sims_built(),
+        engine.lowered_invocations(),
+        per_invocation_cleared,
+        full_clone,
+        full_clone as f64 / per_invocation_cleared.max(1) as f64
+    );
+    assert_eq!(engine.sims_built(), 1, "persistent engine must build once");
+    assert!(
+        engine.bytes_cleared() < engine.resets() * full_clone,
+        "dirty resets must restore strictly fewer bytes than full clones"
     );
 }
 

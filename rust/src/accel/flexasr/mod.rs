@@ -16,7 +16,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, ReadPlan};
+use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -45,6 +45,7 @@ impl Default for FlexAsr {
 }
 
 impl FlexAsr {
+    /// The updated (post-fix) configuration, same as [`Self::updated`].
     pub fn new() -> Self {
         Self::default()
     }
@@ -101,12 +102,30 @@ impl FlexAsr {
     /// so quantization error compounds across timesteps (the Table 2
     /// LSTM > Linear error ordering).
     pub fn lstm(&self, x: &Tensor, w_ih: &Tensor, w_hh: &Tensor, b: &Tensor) -> Tensor {
+        self.lstm_traced(x, w_ih, w_hh, b).0
+    }
+
+    /// [`Self::lstm`] plus the per-step quantization-bias schedule it
+    /// used. The tiled MMIO lowering mirrors the recurrence through this
+    /// function to learn, ahead of execution, which bias every re-encode
+    /// point will need (a driver-side calibration pass, like a quantized
+    /// deployment deriving static scales) — the device then replays the
+    /// schedule with forced biases so each tile lands on the exact
+    /// lattice the whole-tensor fast path chose.
+    pub fn lstm_traced(
+        &self,
+        x: &Tensor,
+        w_ih: &Tensor,
+        w_hh: &Tensor,
+        b: &Tensor,
+    ) -> (Tensor, LstmBiasSchedule) {
         let (t, n, i) = (x.shape[0], x.shape[1], x.shape[2]);
         let hidden = w_hh.shape[1];
         let xq = self.quant(x);
         let wiq = self.quant(w_ih);
         let whq = self.quant(w_hh);
         let bq = self.quant(b);
+        let mut sched = LstmBiasSchedule::default();
         let mut h = Tensor::zeros(&[n, hidden]);
         let mut c = Tensor::zeros(&[n, hidden]);
         let mut out = vec![0.0f32; t * n * hidden];
@@ -119,34 +138,28 @@ impl FlexAsr {
                 &ops::add(&ops::dense(&xt, &wiq), &ops::dense(&h, &whq)),
                 &bq,
             );
-            let gates = self.quant_wide(&gates);
-            let mut nh = vec![0.0f32; n * hidden];
-            let mut nc = vec![0.0f32; n * hidden];
-            for bi in 0..n {
-                for u in 0..hidden {
-                    let gi = gates.data[bi * 4 * hidden + u];
-                    let gf = gates.data[bi * 4 * hidden + hidden + u];
-                    let gg = gates.data[bi * 4 * hidden + 2 * hidden + u];
-                    let go = gates.data[bi * 4 * hidden + 3 * hidden + u];
-                    let ig = 1.0 / (1.0 + (-gi).exp());
-                    let fg = 1.0 / (1.0 + (-gf).exp());
-                    let g = gg.tanh();
-                    let og = 1.0 / (1.0 + (-go).exp());
-                    let cv = fg * c.data[bi * hidden + u] + ig * g;
-                    nc[bi * hidden + u] = cv;
-                    nh[bi * hidden + u] = og * cv.tanh();
-                }
-            }
+            let wide_bias = self.af_wide.select_bias(gates.max_abs());
+            let gates = self.af_wide.quantize_with_bias(&gates, wide_bias);
+            let (nh, nc) = fx::lstm_cell(&gates.data, &c.data, n, hidden);
             // h and c live in the global buffer between steps: AF8
-            h = self.quant(&Tensor::new(vec![n, hidden], nh));
-            c = self.quant(&Tensor::new(vec![n, hidden], nc));
+            let nh = Tensor::new(vec![n, hidden], nh);
+            let nc = Tensor::new(vec![n, hidden], nc);
+            let h_bias = self.af.select_bias(nh.max_abs());
+            let c_bias = self.af.select_bias(nc.max_abs());
+            h = fx::codec_roundtrip_with(&self.af, &nh, h_bias);
+            c = fx::codec_roundtrip_with(&self.af, &nc, c_bias);
+            sched.wide.push(wide_bias);
+            sched.h.push(h_bias);
+            sched.c.push(c_bias);
             out[step * n * hidden..(step + 1) * n * hidden].copy_from_slice(&h.data);
         }
         // the assembled sequence leaves the device through the 8-bit
         // output port under ONE tensor-wide bias (per-step hidden states
         // were encoded under per-step biases), so the whole output is
         // re-encoded here — exactly what the MMIO path's store does
-        self.quant(&Tensor::new(vec![t, n, hidden], out))
+        let out = Tensor::new(vec![t, n, hidden], out);
+        sched.out = self.af.select_bias(out.max_abs());
+        (fx::codec_roundtrip_with(&self.af, &out, sched.out), sched)
     }
 
     /// Layer norm: statistics in the wide format, output re-encoded AF8.
@@ -207,6 +220,22 @@ impl FlexAsr {
     }
 }
 
+/// The quantization-bias schedule of one LSTM evaluation: for each step,
+/// the wide gate-accumulator bias and the AF8 biases of the re-encoded
+/// h/c states, plus the whole-sequence output bias. Recorded by
+/// [`FlexAsr::lstm_traced`]; replayed by the tiled MMIO lowering.
+#[derive(Debug, Clone, Default)]
+pub struct LstmBiasSchedule {
+    /// Per-step wide bias of the gate pre-activations.
+    pub wide: Vec<i32>,
+    /// Per-step AF8 bias of the re-encoded hidden state.
+    pub h: Vec<i32>,
+    /// Per-step AF8 bias of the re-encoded cell state.
+    pub c: Vec<i32>,
+    /// AF8 bias of the assembled output sequence.
+    pub out: i32,
+}
+
 /// Split the fused LSTM gate matrix `w = [w_ih | w_hh]` (the concat
 /// formulation the unrolled-LSTM rewrite produces) into its parts, given
 /// the input width `e`. `None` when the shape is not a valid fusion.
@@ -240,12 +269,18 @@ fn align16(n: usize) -> u64 {
 // MMIO lowering — the driver side of the Fig. 5 pipeline, one command
 // program per accelerator op. Each lowering encodes operands to AF8
 // codes, configures the device, and triggers `fn_start`; the engine
-// decodes the result per the invocation's [`ReadPlan`].
+// decodes the result per the invocations' [`ReadPlan`]s. Ops whose
+// operands exceed the device buffers are **tiled** into multi-trigger
+// programs (weight-row tiles for linear, per-step gate tiles for LSTM),
+// like the real driver issuing several architecture-level instructions
+// per tensor op.
 // ----------------------------------------------------------------------
 
 impl FlexAsr {
     /// Lower a linear layer (`fasr_linear x w b`) — Fig. 5 end to end.
-    fn lower_linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Option<LoweredInvocation> {
+    /// Layers whose weights or outputs exceed the device buffers come
+    /// back as a weight-row-tiled multi-trigger program.
+    fn lower_linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Option<LoweredProgram> {
         if x.shape.len() != 2 || w.shape.len() != 2 || b.shape.len() != 1 {
             return None;
         }
@@ -254,15 +289,17 @@ impl FlexAsr {
         if w.shape[1] != k || b.shape[0] != m || n == 0 || k == 0 || m == 0 {
             return None;
         }
-        if k > 0xFFFF || m > 0xFFFF || n > 0xFF_FFFF {
+        if k > 0xFFFF || n > 0xFF_FFFF {
             return None;
         }
         let bias_base = align16(m * k);
         let out_base = align16(n * k);
-        if out_base as usize + n * m > fx::GB_SIZE
+        if m > 0xFFFF
+            || out_base as usize + n * m > fx::GB_SIZE
             || bias_base as usize + m > fx::PE_WGT_SIZE
         {
-            return None;
+            // whole layer exceeds one trigger's staging: tile it
+            return self.lower_linear_tiled(x, w, b);
         }
         let fmt = self.af;
         let (xc, xb) = fx::encode_tensor(&fmt, x);
@@ -302,20 +339,134 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%output"]);
 
-        Some(LoweredInvocation {
+        Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
             cmds,
-            read: ReadPlan::FlexAf8 {
+            read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![n, m],
                 fmt: self.af,
-            },
+            }),
+        }))
+    }
+
+    /// Row-tiled linear: the input matrix is staged once; every tile
+    /// streams its weight-row block + bias slice, reconfigures, triggers,
+    /// and reads its output column block back, with the output-port bias
+    /// **forced** to the bias the whole-result store would have chosen
+    /// (derived by a driver-side mirror of the accumulation) so all tiles
+    /// share the fast path's output lattice bit-exactly.
+    fn lower_linear_tiled(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+    ) -> Option<LoweredProgram> {
+        let fmt = self.af;
+        let (n, k) = (x.shape[0], x.shape[1]);
+        let m = w.shape[0];
+        let xa = align16(n * k) as usize;
+        // row-tile capacity: the tile's weights + bias slice must fit the
+        // PE buffer, its output block must fit the GB beside the input,
+        // and the sizing field is 16 bits
+        let mut r_cap = (fx::PE_WGT_SIZE / (k + 1))
+            .min(fx::GB_SIZE.saturating_sub(xa) / n)
+            .min(0xFFFF)
+            .min(m);
+        while r_cap > 0
+            && (align16(r_cap * k) as usize + r_cap > fx::PE_WGT_SIZE
+                || xa + n * r_cap > fx::GB_SIZE)
+        {
+            r_cap -= 1;
+        }
+        if r_cap == 0 {
+            return None; // not even one output row can be staged
+        }
+
+        let (xc, xb) = fx::encode_tensor(&fmt, x);
+        let (wc, wb) = fx::encode_tensor(&fmt, w);
+        let (bc, bb) = fx::encode_tensor(&fmt, b);
+        // driver calibration mirror: replay the device arithmetic on the
+        // host to learn the whole-result output bias ahead of execution
+        let xq = fx::decode_tensor(&fmt, &xc, xb, &x.shape);
+        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
+        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
+        let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
+        let out_bias = fmt.select_bias(acc.max_abs());
+
+        let mut invocations = Vec::new();
+        let mut lo = 0usize;
+        while lo < m {
+            let r = r_cap.min(m - lo);
+            let bias_base = align16(r * k);
+            let mut cmds = Vec::new();
+            if lo == 0 {
+                // the input stays resident across tiles
+                stream_bytes(&mut cmds, fx::GB_BASE, &xc);
+            }
+            stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wc[lo * k..(lo + r) * k]);
+            stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc[lo..lo + r]);
+            cmds.push(Cmd::write_u64(
+                fx::CFG_LAYER_SIZING,
+                (k as u64) | ((r as u64) << 16),
+            ));
+            cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_base));
+            cmds.push(Cmd::write_u64(fx::CFG_ACT, 0));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_GB_CONTROL,
+                fx::OP_LINEAR | ((n as u64) << 8),
+            ));
+            cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, (xa as u64) << 32));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_EXP_BIAS,
+                (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
+            ));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_OUT_BIAS,
+                0x100 | (out_bias as u8 as u64),
+            ));
+            cmds.push(Cmd::write_u64(fx::FN_START, 1));
+
+            let mut asm = Fragment::new();
+            if lo == 0 {
+                asm.push("FlexASR_ILA.write_v", &["%input"]);
+            }
+            asm.push("FlexASR_ILA.write_wgt", &["%w_rows", "%b_slice"])
+                .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%k", "%rows"])
+                .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%n"])
+                .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
+                .push("FlexASR_ILA.fn_start", &[])
+                .push("FlexASR_ILA.read_v", &["%out_cols"]);
+
+            invocations.push(LoweredInvocation {
+                target: Target::FlexAsr,
+                asm,
+                cmds,
+                read: Some(ReadPlan::FlexAf8 {
+                    base: fx::GB_BASE + xa as u64,
+                    shape: vec![n, r],
+                    fmt,
+                }),
+            });
+            lo += r;
+        }
+        // driver hygiene: disarm the output-bias override so a later
+        // program on the same (un-reset) device, e.g. over the SoC bus,
+        // gets auto-selected output biases again
+        if let Some(last) = invocations.last_mut() {
+            last.cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
+        }
+        Some(LoweredProgram {
+            invocations,
+            stitch: Stitch::Concat { axis: 1, shape: vec![n, m] },
         })
     }
 
     /// Lower a whole LSTM layer — one trigger regardless of step count
-    /// (the Table 1 granularity story). `x: [t, 1, e]`, `wi: [4h, e]`,
+    /// (the Table 1 granularity story) when the gate matrices fit the PE
+    /// buffer; otherwise a per-step gate-row-tiled program
+    /// ([`Self::lower_lstm_tiled`]). `x: [t, 1, e]`, `wi: [4h, e]`,
     /// `wh: [4h, h]`, `b: [4h]`; result `[t, 1, h]`.
     fn lower_lstm(
         &self,
@@ -323,7 +474,7 @@ impl FlexAsr {
         wi: &Tensor,
         wh: &Tensor,
         b: &Tensor,
-    ) -> Option<LoweredInvocation> {
+    ) -> Option<LoweredProgram> {
         if x.shape.len() != 3
             || x.shape[1] != 1
             || wi.shape.len() != 2
@@ -347,16 +498,18 @@ impl FlexAsr {
         {
             return None;
         }
-        if e > 0xFFFF || four_h > 0xFFFF || t > 0xFF_FFFF {
+        if e > 0xFFFF || t > 0xFF_FFFF {
             return None;
         }
         let out_base = align16(t * e);
         let wgt2_base = align16(four_h * e);
         let bias_base = wgt2_base + align16(four_h * h);
-        if out_base as usize + t * h > fx::GB_SIZE
+        if four_h > 0xFFFF
+            || out_base as usize + t * h > fx::GB_SIZE
             || bias_base as usize + four_h > fx::PE_WGT_SIZE
         {
-            return None;
+            // gate matrices beyond the PE buffer: per-step tiled program
+            return self.lower_lstm_tiled(x, wi, wh, b);
         }
         let fmt = self.af;
         let (xc, xb) = fx::encode_tensor(&fmt, x);
@@ -400,16 +553,207 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%h_seq"]);
 
-        Some(LoweredInvocation {
+        Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
             cmds,
-            read: ReadPlan::FlexAf8 {
+            read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![t, 1, h],
                 fmt: self.af,
-            },
-        })
+            }),
+        }))
+    }
+
+    /// Per-step tiled LSTM: the real-driver decomposition when the gate
+    /// matrices exceed the PE weight buffer. The sequence, h, c, a wide
+    /// gate staging region, and the output live in the GB; each timestep
+    /// issues one [`fx::OP_LSTM_GATES`] trigger per weight-row tile
+    /// (streaming that tile of `[w_ih | w_hh | b]`) followed by one
+    /// [`fx::OP_LSTM_ACT`] trigger, and one read at the very end returns
+    /// the whole output sequence.
+    ///
+    /// Bit-exactness with the fast path is engineered via a **bias
+    /// schedule**: the driver mirrors the recurrence host-side
+    /// ([`FlexAsr::lstm_traced`]) to learn every re-encode bias (wide
+    /// gates, h, c per step; final output), then forces those biases in
+    /// the per-step configs — so device tiles land on exactly the
+    /// lattices the whole-tensor fast path chose. Weights are re-streamed
+    /// every step (they do not fit on device — the irreducible cost the
+    /// ISA-level tiling models).
+    fn lower_lstm_tiled(
+        &self,
+        x: &Tensor,
+        wi: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+    ) -> Option<LoweredProgram> {
+        let (t, nrows, e) = (x.shape[0], x.shape[1], x.shape[2]);
+        if nrows != 1 {
+            return None; // the tiled decomposition models the batch-1 device
+        }
+        let four_h = wi.shape[0];
+        let h = four_h / 4;
+        if e > 0xFFFF || h > 0xFF_FFFF {
+            return None;
+        }
+        let fmt = self.af;
+        // GB layout: x sequence | h | c | wide gate staging | out sequence
+        let h_base = align16(t * e) as usize;
+        let c_base = h_base + align16(h) as usize;
+        let gates_base = c_base + align16(h) as usize;
+        let out_base = gates_base + align16(4 * four_h) as usize;
+        if out_base + t * h > fx::GB_SIZE {
+            return None;
+        }
+        // PE row-tile capacity for [wi_rows | wh_rows | b_slice]
+        let mut r_cap = (fx::PE_WGT_SIZE / (e + h + 1)).min(four_h).min(0xFFFF);
+        while r_cap > 0
+            && (align16(r_cap * e) + align16(r_cap * h)) as usize + r_cap
+                > fx::PE_WGT_SIZE
+        {
+            r_cap -= 1;
+        }
+        if r_cap == 0 {
+            return None;
+        }
+
+        let (xc, xb) = fx::encode_tensor(&fmt, x);
+        let (wic, wib) = fx::encode_tensor(&fmt, wi);
+        let (whc, whb) = fx::encode_tensor(&fmt, wh);
+        let (bc, bb) = fx::encode_tensor(&fmt, b);
+        // the calibration mirror: one host replay of the recurrence
+        // yields the full bias schedule the device configs replay
+        let (_, sched) = self.lstm_traced(x, wi, wh, b);
+
+        let mut invocations = Vec::new();
+        // staging: the sequence plus AF8 zero codes for h0/c0
+        let mut cmds = Vec::new();
+        stream_bytes(&mut cmds, fx::GB_BASE, &xc);
+        let zeros = vec![0x80u8; align16(h) as usize];
+        stream_bytes(&mut cmds, fx::GB_BASE + h_base as u64, &zeros);
+        stream_bytes(&mut cmds, fx::GB_BASE + c_base as u64, &zeros);
+        let mut asm = Fragment::new();
+        asm.push("FlexASR_ILA.write_v", &["%x_seq", "%h0", "%c0"]);
+        invocations.push(LoweredInvocation {
+            target: Target::FlexAsr,
+            asm,
+            cmds,
+            read: None,
+        });
+
+        for step in 0..t {
+            let h_bias_in = if step == 0 { 0 } else { sched.h[step - 1] };
+            let c_bias_in = if step == 0 { 0 } else { sched.c[step - 1] };
+            let mut lo = 0usize;
+            while lo < four_h {
+                let r = r_cap.min(four_h - lo);
+                let wgt2 = align16(r * e);
+                let bias_b = wgt2 + align16(r * h);
+                let mut cmds = Vec::new();
+                stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wic[lo * e..(lo + r) * e]);
+                stream_bytes(
+                    &mut cmds,
+                    fx::PE_WGT_BASE + wgt2,
+                    &whc[lo * h..(lo + r) * h],
+                );
+                stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_b, &bc[lo..lo + r]);
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_LAYER_SIZING,
+                    (e as u64) | ((r as u64) << 16),
+                ));
+                cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_b | (wgt2 << 32)));
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_GB_CONTROL,
+                    fx::OP_LSTM_GATES | ((h as u64) << 8),
+                ));
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_GB_MMNGR,
+                    ((step * e) as u64) | (((gates_base + 4 * lo) as u64) << 32),
+                ));
+                cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR2, h_base as u64));
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_EXP_BIAS,
+                    (xb as u8 as u64)
+                        | ((wib as u8 as u64) << 8)
+                        | ((bb as u8 as u64) << 16)
+                        | ((whb as u8 as u64) << 24),
+                ));
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_EXP_BIAS2,
+                    (h_bias_in as u8 as u64) | ((sched.wide[step] as u8 as u64) << 8),
+                ));
+                cmds.push(Cmd::write_u64(fx::FN_START, 1));
+
+                let mut asm = Fragment::new();
+                asm.push("FlexASR_ILA.write_wgt", &["%wi_rows", "%wh_rows", "%b_slice"])
+                    .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%e", "%rows"])
+                    .push("FlexASR_ILA.gb_cfg_gb_control", &["%lstm_gates", "%h"])
+                    .push("FlexASR_ILA.cfg_exp_bias2", &["%h_bias", "%wide_bias"])
+                    .push("FlexASR_ILA.fn_start", &[]);
+                invocations.push(LoweredInvocation {
+                    target: Target::FlexAsr,
+                    asm,
+                    cmds,
+                    read: None,
+                });
+                lo += r;
+            }
+
+            let mut cmds = Vec::new();
+            cmds.push(Cmd::write_u64(
+                fx::CFG_GB_CONTROL,
+                fx::OP_LSTM_ACT | ((h as u64) << 8),
+            ));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_GB_MMNGR,
+                (gates_base as u64) | (((out_base + step * h) as u64) << 32),
+            ));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_GB_MMNGR2,
+                (h_base as u64) | ((c_base as u64) << 32),
+            ));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_EXP_BIAS,
+                (c_bias_in as u8 as u64)
+                    | ((sched.h[step] as u8 as u64) << 8)
+                    | ((sched.c[step] as u8 as u64) << 16),
+            ));
+            cmds.push(Cmd::write_u64(
+                fx::CFG_OUT_BIAS,
+                0x100 | (sched.out as u8 as u64),
+            ));
+            cmds.push(Cmd::write_u64(fx::FN_START, 1));
+            let mut asm = Fragment::new();
+            asm.push("FlexASR_ILA.gb_cfg_gb_control", &["%lstm_act", "%h"])
+                .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
+                .push("FlexASR_ILA.fn_start", &[]);
+            invocations.push(LoweredInvocation {
+                target: Target::FlexAsr,
+                asm,
+                cmds,
+                read: None,
+            });
+        }
+
+        // one read at the end returns the whole output sequence; the
+        // output-bias override is disarmed first (driver hygiene for
+        // un-reset devices, e.g. on the SoC bus) — the status register
+        // still reports the forced bias the last ACT recorded
+        let mut asm = Fragment::new();
+        asm.push("FlexASR_ILA.cfg_out_bias", &["%auto"])
+            .push("FlexASR_ILA.read_v", &["%h_seq"]);
+        invocations.push(LoweredInvocation {
+            target: Target::FlexAsr,
+            asm,
+            cmds: vec![Cmd::write_u64(fx::CFG_OUT_BIAS, 0)],
+            read: Some(ReadPlan::FlexAf8 {
+                base: fx::GB_BASE + out_base as u64,
+                shape: vec![t, 1, h],
+                fmt,
+            }),
+        });
+        Some(LoweredProgram { invocations, stitch: Stitch::Last })
     }
 
     /// Lower a row-wise GB op (max pool / mean pool / layer norm): store,
@@ -419,7 +763,7 @@ impl FlexAsr {
         x: &Tensor,
         opcode: u64,
         out_rows: usize,
-    ) -> Option<LoweredInvocation> {
+    ) -> Option<LoweredProgram> {
         if x.shape.len() != 2 {
             return None;
         }
@@ -450,16 +794,16 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%out"]);
 
-        Some(LoweredInvocation {
+        Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
             cmds,
-            read: ReadPlan::FlexAf8 {
+            read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![out_rows, c],
                 fmt: self.af,
-            },
-        })
+            }),
+        }))
     }
 
     /// Lower single-head attention: q/k/v staged in three GB regions,
@@ -469,7 +813,7 @@ impl FlexAsr {
         q: &Tensor,
         k: &Tensor,
         v: &Tensor,
-    ) -> Option<LoweredInvocation> {
+    ) -> Option<LoweredProgram> {
         if q.shape.len() != 2 || k.shape.len() != 2 || v.shape.len() != 2 {
             return None;
         }
@@ -528,16 +872,16 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%context"]);
 
-        Some(LoweredInvocation {
+        Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
             cmds,
-            read: ReadPlan::FlexAf8 {
+            read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![n, dv],
                 fmt: self.af,
-            },
-        })
+            }),
+        }))
     }
 
     /// Lower a chain of `stages` temporal max pools over `t` with the
@@ -595,11 +939,11 @@ impl FlexAsr {
             target: Target::FlexAsr,
             asm,
             cmds,
-            read: ReadPlan::FlexAf8 {
+            read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + in_base,
                 shape: vec![r >> stages, c],
                 fmt: self.af,
-            },
+            }),
         }
     }
 
@@ -655,7 +999,7 @@ impl Accelerator for FlexAsr {
         })
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation> {
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
         match op {
             Op::FlexLinear => self.lower_linear(inputs[0], inputs[1], inputs[2]),
             Op::FlexLstm { .. } => {

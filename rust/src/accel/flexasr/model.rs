@@ -16,13 +16,16 @@ use crate::tensor::{ops, Tensor};
 // ----- address map ----------------------------------------------------
 /// Global buffer (activations in/out): 64 KiB.
 pub const GB_BASE: u64 = 0xA050_0000;
+/// Global buffer size in bytes.
 pub const GB_SIZE: usize = 0x1_0000;
 /// PE weight buffer: 256 KiB — sized so every Table 1 ResMLP layer
-/// (384x384 AF8 codes = 144 KiB) fits in one invocation. The silicon
-/// streams bigger layers in tiles; the model keeps whole-layer grain,
-/// and `Accelerator::lower` declines (falls back to the tensor path)
-/// when a layer exceeds the buffer.
+/// (384x384 AF8 codes = 144 KiB) fits in one invocation. Bigger layers
+/// (the LSTM-WLM gate matrix and decoder) are **tiled** by the driver
+/// into multi-trigger programs, exactly like the silicon streaming
+/// weight tiles — see `FlexAsr::lower_linear_tiled` and
+/// `FlexAsr::lower_lstm_tiled`.
 pub const PE_WGT_BASE: u64 = 0xA060_0000;
+/// PE weight buffer size in bytes.
 pub const PE_WGT_SIZE: usize = 0x4_0000;
 /// K (cols, bits 0..16) | M (rows, bits 16..32).
 pub const CFG_LAYER_SIZING: u64 = 0xA040_0010;
@@ -40,16 +43,36 @@ pub const CFG_GB_MMNGR2: u64 = 0xA070_0030;
 pub const CFG_EXP_BIAS: u64 = 0xA030_0010;
 /// read-only: output exponent bias chosen by the device.
 pub const STATUS_OUT_BIAS: u64 = 0xA030_0020;
+/// secondary exponent biases for the tiled-LSTM instructions: recurrent
+/// state bias (bits 0..8) | wide gate-accumulator bias (bits 8..16).
+pub const CFG_EXP_BIAS2: u64 = 0xA030_0030;
+/// output-port bias override: bit 8 = force enable, bits 0..8 = i8 bias.
+/// 0 (reset value) = the device self-selects the output bias, as before.
+/// Drivers force it when an op is tiled so every tile shares the output
+/// lattice the whole-tensor encode would have chosen.
+pub const CFG_OUT_BIAS: u64 = 0xA030_0040;
 /// trigger.
 pub const FN_START: u64 = 0xA000_0010;
 
 // ----- opcodes --------------------------------------------------------
+/// Linear layer (matmul + bias + optional activation).
 pub const OP_LINEAR: u64 = 1;
+/// Whole-sequence LSTM layer.
 pub const OP_LSTM: u64 = 2;
+/// Temporal max pool over row pairs.
 pub const OP_MAXPOOL: u64 = 3;
+/// Temporal mean pool over row pairs.
 pub const OP_MEANPOOL: u64 = 4;
+/// Row-wise layer normalization.
 pub const OP_LAYERNORM: u64 = 5;
+/// Single-head attention over q/k/v GB regions.
 pub const OP_ATTENTION: u64 = 6;
+/// Tiled-LSTM, part 1: one gate-row tile of one timestep's pre-activation
+/// matmul, written wide-quantized into the GB gate staging region.
+pub const OP_LSTM_GATES: u64 = 7;
+/// Tiled-LSTM, part 2: one timestep's activation/state update over the
+/// staged gate vector (no weights involved).
+pub const OP_LSTM_ACT: u64 = 8;
 
 // ----- AdaptivFloat byte codec -----------------------------------------
 // The all-bits pattern `0x80` (negative, E=0, M=0 — the smallest negative
@@ -79,7 +102,13 @@ pub fn decode_byte(fmt: &AdaptivFloatFormat, b: u8, bias: i32) -> f32 {
 /// Encode a whole tensor; returns (codes, chosen bias).
 pub fn encode_tensor(fmt: &AdaptivFloatFormat, t: &Tensor) -> (Vec<u8>, i32) {
     let bias = fmt.select_bias(t.max_abs());
-    (t.data.iter().map(|&v| encode_byte(fmt, v, bias)).collect(), bias)
+    (encode_values(fmt, &t.data, bias), bias)
+}
+
+/// Encode a value slice under an explicit bias (tile encodes must share
+/// the whole-tensor bias so tile codes equal slices of the full encode).
+pub fn encode_values(fmt: &AdaptivFloatFormat, vals: &[f32], bias: i32) -> Vec<u8> {
+    vals.iter().map(|&v| encode_byte(fmt, v, bias)).collect()
 }
 
 /// Decode codes into a tensor of the given shape.
@@ -106,8 +135,43 @@ pub fn decode_tensor(
 /// **bit-identical** lattices — the invariant `ExecBackend::CrossCheck`
 /// relies on. Idempotent on codec outputs.
 pub fn codec_roundtrip(fmt: &AdaptivFloatFormat, t: &Tensor) -> Tensor {
-    let bias = fmt.select_bias(t.max_abs());
+    codec_roundtrip_with(fmt, t, fmt.select_bias(t.max_abs()))
+}
+
+/// [`codec_roundtrip`] under an explicit bias. The tiled-LSTM driver
+/// mirrors the functional recurrence to derive a per-step bias schedule
+/// and replays it here and in the device, so both paths land on the same
+/// lattice.
+pub fn codec_roundtrip_with(fmt: &AdaptivFloatFormat, t: &Tensor, bias: i32) -> Tensor {
     t.map(|v| decode_byte(fmt, encode_byte(fmt, v, bias), bias))
+}
+
+/// One LSTM timestep's activation/state update over wide-quantized gate
+/// pre-activations, shared **verbatim** by the tensor fast path
+/// ([`super::FlexAsr::lstm`]) and the ILA's [`OP_LSTM_ACT`] instruction
+/// so the two views stay bit-identical by construction.
+///
+/// `gates` is `[n, 4*hidden]` (i | f | g | o blocks), `c` is
+/// `[n, hidden]`; returns `(new_h, new_c)` **pre**-quantization.
+pub fn lstm_cell(gates: &[f32], c: &[f32], n: usize, hidden: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut nh = vec![0.0f32; n * hidden];
+    let mut nc = vec![0.0f32; n * hidden];
+    for bi in 0..n {
+        for u in 0..hidden {
+            let gi = gates[bi * 4 * hidden + u];
+            let gf = gates[bi * 4 * hidden + hidden + u];
+            let gg = gates[bi * 4 * hidden + 2 * hidden + u];
+            let go = gates[bi * 4 * hidden + 3 * hidden + u];
+            let ig = 1.0 / (1.0 + (-gi).exp());
+            let fg = 1.0 / (1.0 + (-gf).exp());
+            let g = gg.tanh();
+            let og = 1.0 / (1.0 + (-go).exp());
+            let cv = fg * c[bi * hidden + u] + ig * g;
+            nc[bi * hidden + u] = cv;
+            nh[bi * hidden + u] = og * cv.tanh();
+        }
+    }
+    (nh, nc)
 }
 
 // ----- config views ----------------------------------------------------
@@ -141,6 +205,16 @@ fn exp_bias(s: &IlaState, idx: u32) -> i32 {
     ((s.reg("cfg_exp_bias") >> (8 * idx)) & 0xFF) as i8 as i32
 }
 
+fn exp_bias2(s: &IlaState, idx: u32) -> i32 {
+    ((s.reg("cfg_exp_bias2") >> (8 * idx)) & 0xFF) as i8 as i32
+}
+
+/// The forced output-port bias, when the driver armed the override.
+fn forced_out_bias(s: &IlaState) -> Option<i32> {
+    let v = s.reg("cfg_out_bias");
+    (v & 0x100 != 0).then(|| (v & 0xFF) as u8 as i8 as i32)
+}
+
 fn load_mat(
     fmt: &AdaptivFloatFormat,
     mem: &[u8],
@@ -152,12 +226,16 @@ fn load_mat(
     decode_tensor(fmt, &mem[base..base + rows * cols], bias, &[rows, cols])
 }
 
-fn store_mat(fmt: &AdaptivFloatFormat, mem: &mut [u8], base: usize, t: &Tensor) -> i32 {
-    let bias = fmt.select_bias(t.max_abs());
-    for (i, &v) in t.data.iter().enumerate() {
-        mem[base + i] = encode_byte(fmt, v, bias);
-    }
-    bias
+fn store_mat(
+    fmt: &AdaptivFloatFormat,
+    s: &mut IlaState,
+    mem: &str,
+    base: usize,
+    t: &Tensor,
+    bias: i32,
+) {
+    let codes = encode_values(fmt, &t.data, bias);
+    s.mem_write(mem, base, &codes);
 }
 
 /// Build the FlexASR ILA.
@@ -172,6 +250,8 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
     st.new_bv("cfg_gb_mmngr", 64);
     st.new_bv("cfg_gb_mmngr2", 64);
     st.new_bv("cfg_exp_bias", 32);
+    st.new_bv("cfg_exp_bias2", 16);
+    st.new_bv("cfg_out_bias", 16);
     st.new_bv("status_out_bias", 8);
     st.new_bv("busy", 1);
     let mut ila = Ila::new("FlexASR_ILA", st);
@@ -182,7 +262,7 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
         |c, _| c.is_write && (GB_BASE..GB_BASE + GB_SIZE as u64).contains(&c.addr),
         |c, s| {
             let off = (c.addr - GB_BASE) as usize;
-            s.mem_mut("gb_large")[off..off + 16].copy_from_slice(&c.data);
+            s.mem_write("gb_large", off, &c.data);
             Ok(None)
         },
     );
@@ -203,7 +283,7 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
         },
         |c, s| {
             let off = (c.addr - PE_WGT_BASE) as usize;
-            s.mem_mut("pe_weight")[off..off + 16].copy_from_slice(&c.data);
+            s.mem_write("pe_weight", off, &c.data);
             Ok(None)
         },
     );
@@ -217,6 +297,8 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
         ("gb_cfg_mmngr_gb_large", CFG_GB_MMNGR, "cfg_gb_mmngr"),
         ("gb_cfg_mmngr2", CFG_GB_MMNGR2, "cfg_gb_mmngr2"),
         ("cfg_exp_bias", CFG_EXP_BIAS, "cfg_exp_bias"),
+        ("cfg_exp_bias2", CFG_EXP_BIAS2, "cfg_exp_bias2"),
+        ("cfg_out_bias", CFG_OUT_BIAS, "cfg_out_bias"),
     ];
     for &(name, addr, reg) in cfg_regs {
         let reg = reg.to_string();
@@ -253,6 +335,99 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
             let b_bias = exp_bias(s, 2);
             let b_wgt2 = exp_bias(s, 3);
             let fmt = dev.af;
+
+            // The tiled-LSTM instructions manage their own write-backs
+            // (wide gate staging, recurrent h/c state, output slice);
+            // every other opcode returns a tensor that leaves through the
+            // shared 8-bit output port below.
+            match opcode {
+                OP_LSTM_GATES => {
+                    // one gate-row tile of one timestep: rows `m` of
+                    // [w_ih | w_hh] against x_t (GB @ in_base) and the
+                    // recurrent h (GB @ mmngr2.k_base)
+                    let hidden = n;
+                    let (h_base, _) = mmngr2(s);
+                    let h_bias = exp_bias2(s, 0);
+                    let wide_bias = exp_bias2(s, 1);
+                    let x_t = load_mat(&fmt, s.mem("gb_large"), in_base, 1, k, b_in);
+                    let hv =
+                        load_mat(&fmt, s.mem("gb_large"), h_base, 1, hidden, h_bias);
+                    let wi = load_mat(&fmt, s.mem("pe_weight"), 0, m, k, b_wgt);
+                    let wh = load_mat(
+                        &fmt,
+                        s.mem("pe_weight"),
+                        wgt2_base,
+                        m,
+                        hidden,
+                        b_wgt2,
+                    );
+                    let bv =
+                        load_mat(&fmt, s.mem("pe_weight"), bias_base, 1, m, b_bias)
+                            .reshape(&[m]);
+                    let gates = ops::bias_add(
+                        &ops::add(&ops::dense(&x_t, &wi), &ops::dense(&hv, &wh)),
+                        &bv,
+                    );
+                    // accumulator readout: wide-quantize under the
+                    // driver-scheduled bias and park the values as raw
+                    // f32 words in the GB gate staging region (internal
+                    // accumulator state, not interface data)
+                    let gq = dev.af_wide.quantize_with_bias(&gates, wide_bias);
+                    let mut bytes = Vec::with_capacity(4 * gq.data.len());
+                    for &v in &gq.data {
+                        bytes.extend_from_slice(&v.to_le_bytes());
+                    }
+                    s.mem_write("gb_large", out_base, &bytes);
+                    s.set_reg("status_out_bias", wide_bias as u8 as u64);
+                    return Ok(None);
+                }
+                OP_LSTM_ACT => {
+                    // one timestep's activation/state update over the
+                    // fully staged gate vector
+                    let hidden = n;
+                    let (h_base, c_base) = mmngr2(s);
+                    let (c_bias_in, h_bias_out, c_bias_out) = (b_in, b_wgt, b_bias);
+                    let out_bias = forced_out_bias(s).ok_or_else(|| {
+                        "lstm_act requires a forced output bias".to_string()
+                    })?;
+                    let gb = s.mem("gb_large");
+                    let gates: Vec<f32> = (0..4 * hidden)
+                        .map(|i| {
+                            f32::from_le_bytes(
+                                gb[in_base + 4 * i..in_base + 4 * i + 4]
+                                    .try_into()
+                                    .unwrap(),
+                            )
+                        })
+                        .collect();
+                    let cv: Vec<f32> = gb[c_base..c_base + hidden]
+                        .iter()
+                        .map(|&code| decode_byte(&fmt, code, c_bias_in))
+                        .collect();
+                    let (nh, nc) = lstm_cell(&gates, &cv, 1, hidden);
+                    // h and c re-enter the GB through the 8-bit port
+                    // under the scheduled per-step biases; the output
+                    // sequence slice re-encodes the *quantized* h under
+                    // the whole-sequence output bias (exactly what the
+                    // fast path's final re-encode does)
+                    let mut h_codes = vec![0u8; hidden];
+                    let mut c_codes = vec![0u8; hidden];
+                    let mut out_codes = vec![0u8; hidden];
+                    for i in 0..hidden {
+                        let hc = encode_byte(&fmt, nh[i], h_bias_out);
+                        h_codes[i] = hc;
+                        let hq = decode_byte(&fmt, hc, h_bias_out);
+                        out_codes[i] = encode_byte(&fmt, hq, out_bias);
+                        c_codes[i] = encode_byte(&fmt, nc[i], c_bias_out);
+                    }
+                    s.mem_write("gb_large", h_base, &h_codes);
+                    s.mem_write("gb_large", c_base, &c_codes);
+                    s.mem_write("gb_large", out_base, &out_codes);
+                    s.set_reg("status_out_bias", out_bias as u8 as u64);
+                    return Ok(None);
+                }
+                _ => {}
+            }
 
             let result: Tensor = match opcode {
                 OP_LINEAR => {
@@ -304,8 +479,12 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
                 other => return Err(format!("unknown opcode {other}")),
             };
             // outputs pass through the 8-bit port: encode (which also
-            // performs the lattice rounding) and record the chosen bias
-            let out_bias = store_mat(&fmt, s.mem_mut("gb_large"), out_base, &result);
+            // performs the lattice rounding) and record the bias — the
+            // device's own choice, unless the driver forced one (tiled
+            // programs force the whole-result bias on every tile)
+            let out_bias = forced_out_bias(s)
+                .unwrap_or_else(|| fmt.select_bias(result.max_abs()));
+            store_mat(&fmt, s, "gb_large", out_base, &result, out_bias);
             s.set_reg("status_out_bias", out_bias as u8 as u64);
             Ok(None)
         },

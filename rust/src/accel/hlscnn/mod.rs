@@ -13,7 +13,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, ReadPlan};
+use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -56,6 +56,7 @@ impl HlscnnConfig {
 /// The HLSCNN accelerator model.
 #[derive(Debug, Clone, Copy)]
 pub struct Hlscnn {
+    /// Numerics configuration (original vs updated weight store).
     pub cfg: HlscnnConfig,
 }
 
@@ -66,6 +67,7 @@ impl Default for Hlscnn {
 }
 
 impl Hlscnn {
+    /// Model with an explicit numerics configuration.
     pub fn new(cfg: HlscnnConfig) -> Self {
         Hlscnn { cfg }
     }
@@ -151,26 +153,35 @@ impl Hlscnn {
 
     /// Lower `hlscnn_conv2d` to an MMIO command program (batch-1 device;
     /// the engine falls back to the tensor path for batched inputs).
+    /// When the filter bank or the output exceed the scratchpads, the
+    /// driver tiles over **output channels**: the feature map is staged
+    /// once and each tile streams its filter rows, reconfigures the
+    /// shape register with its channel count, triggers, and reads its
+    /// output block back — bit-exact because the fixed-point output
+    /// requantization is per-element (no whole-tensor parameter).
     fn lower_conv2d(
         &self,
         x: &Tensor,
         w: &Tensor,
         stride: (usize, usize),
         pad: (usize, usize),
-    ) -> Option<LoweredInvocation> {
+    ) -> Option<LoweredProgram> {
         if x.shape.len() != 4 || w.shape.len() != 4 || x.shape[0] != 1 {
             return None;
         }
         let (c, h, wd) = (x.shape[1], x.shape[2], x.shape[3]);
         let (o, kh, kw) = (w.shape[0], w.shape[2], w.shape[3]);
-        if w.shape[1] != c || kh == 0 || kw == 0 || stride.0 == 0 || stride.1 == 0 {
+        if w.shape[1] != c || c == 0 || o == 0 {
+            return None;
+        }
+        if kh == 0 || kw == 0 || stride.0 == 0 || stride.1 == 0 {
             return None;
         }
         if h + 2 * pad.0 < kh || wd + 2 * pad.1 < kw {
             return None;
         }
-        // config-register field widths and scratchpad capacities
-        if c > 0xFFF || h > 0xFFF || wd > 0xFFF || o > 0xFFF {
+        // config-register field widths (per tile for the channel count)
+        if c > 0xFFF || h > 0xFFF || wd > 0xFFF {
             return None;
         }
         if kh > 0xFF || kw > 0xFF || stride.0 > 0xFF || stride.1 > 0xFF
@@ -180,48 +191,77 @@ impl Hlscnn {
         }
         let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
         let ow = (wd + 2 * pad.1 - kw) / stride.1 + 1;
-        if 2 * c * h * wd > hx::ACT_SIZE
-            || 2 * o * c * kh * kw > hx::WGT_SIZE
-            || 2 * o * oh * ow > hx::OUT_SIZE
-        {
+        // the feature map is not tiled: it must fit the act scratchpad
+        if 2 * c * h * wd > hx::ACT_SIZE {
+            return None;
+        }
+        // output-channel tile capacity from the weight and output
+        // scratchpads and the 12-bit shape field
+        let o_cap = (hx::WGT_SIZE / (2 * c * kh * kw))
+            .min(hx::OUT_SIZE / (2 * oh * ow))
+            .min(0xFFF)
+            .min(o);
+        if o_cap == 0 {
             return None;
         }
 
-        let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(self, x));
-        stream_bytes(&mut cmds, hx::WGT_BASE, &hx::encode_wgt(self, w));
-        cmds.push(Cmd::write_u64(
-            hx::CFG_SHAPE,
-            (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24) | ((o as u64) << 36),
-        ));
-        cmds.push(Cmd::write_u64(
-            hx::CFG_KERNEL,
-            (kh as u64)
-                | ((kw as u64) << 8)
-                | ((stride.0 as u64) << 16)
-                | ((stride.1 as u64) << 24)
-                | ((pad.0 as u64) << 32)
-                | ((pad.1 as u64) << 40),
-        ));
-        cmds.push(Cmd::write_u64(hx::CFG_START, 1));
+        let wgt_codes = hx::encode_wgt(self, w); // O-major filter rows
+        let filter_bytes = 2 * c * kh * kw;
+        let mut invocations = Vec::new();
+        let mut lo = 0usize;
+        while lo < o {
+            let oc = o_cap.min(o - lo);
+            let mut cmds = Vec::new();
+            if lo == 0 {
+                // the feature map stays resident across tiles
+                stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(self, x));
+            }
+            stream_bytes(
+                &mut cmds,
+                hx::WGT_BASE,
+                &wgt_codes[lo * filter_bytes..(lo + oc) * filter_bytes],
+            );
+            cmds.push(Cmd::write_u64(
+                hx::CFG_SHAPE,
+                (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24)
+                    | ((oc as u64) << 36),
+            ));
+            cmds.push(Cmd::write_u64(
+                hx::CFG_KERNEL,
+                (kh as u64)
+                    | ((kw as u64) << 8)
+                    | ((stride.0 as u64) << 16)
+                    | ((stride.1 as u64) << 24)
+                    | ((pad.0 as u64) << 32)
+                    | ((pad.1 as u64) << 40),
+            ));
+            cmds.push(Cmd::write_u64(hx::CFG_START, 1));
 
-        let mut asm = Fragment::new();
-        asm.push("HLSCNN_ILA.wr_act", &["%fmap"])
-            .push("HLSCNN_ILA.wr_wgt", &["%filters"])
-            .push("HLSCNN_ILA.cfg_conv_shape", &["%c", "%h", "%w", "%o"])
-            .push("HLSCNN_ILA.cfg_conv_kernel", &["%k", "%s", "%p"])
-            .push("HLSCNN_ILA.conv_start", &[])
-            .push("HLSCNN_ILA.rd_out", &["%out"]);
+            let mut asm = Fragment::new();
+            if lo == 0 {
+                asm.push("HLSCNN_ILA.wr_act", &["%fmap"]);
+            }
+            asm.push("HLSCNN_ILA.wr_wgt", &["%filter_rows"])
+                .push("HLSCNN_ILA.cfg_conv_shape", &["%c", "%h", "%w", "%o_tile"])
+                .push("HLSCNN_ILA.cfg_conv_kernel", &["%k", "%s", "%p"])
+                .push("HLSCNN_ILA.conv_start", &[])
+                .push("HLSCNN_ILA.rd_out", &["%out_channels"]);
 
-        Some(LoweredInvocation {
-            target: Target::Hlscnn,
-            asm,
-            cmds,
-            read: ReadPlan::HlscnnI16 {
-                base: hx::OUT_BASE,
-                shape: vec![1, o, oh, ow],
-                fmt: self.cfg.act_fmt,
-            },
+            invocations.push(LoweredInvocation {
+                target: Target::Hlscnn,
+                asm,
+                cmds,
+                read: Some(ReadPlan::HlscnnI16 {
+                    base: hx::OUT_BASE,
+                    shape: vec![1, oc, oh, ow],
+                    fmt: self.cfg.act_fmt,
+                }),
+            });
+            lo += oc;
+        }
+        Some(LoweredProgram {
+            invocations,
+            stitch: Stitch::Concat { axis: 1, shape: vec![1, o, oh, ow] },
         })
     }
 }
@@ -248,7 +288,7 @@ impl Accelerator for Hlscnn {
         }
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation> {
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
         match op {
             Op::HlscnnConv2d { stride, pad } => {
                 self.lower_conv2d(inputs[0], inputs[1], *stride, *pad)

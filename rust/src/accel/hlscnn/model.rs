@@ -14,12 +14,15 @@ use crate::tensor::Tensor;
 // ----- address map ------------------------------------------------------
 /// Activation (feature map) buffer: 128 KiB.
 pub const ACT_BASE: u64 = 0xB010_0000;
+/// Activation buffer size in bytes.
 pub const ACT_SIZE: usize = 0x2_0000;
 /// Weight buffer: 128 KiB.
 pub const WGT_BASE: u64 = 0xB020_0000;
+/// Weight buffer size in bytes.
 pub const WGT_SIZE: usize = 0x2_0000;
 /// Output buffer: 128 KiB.
 pub const OUT_BASE: u64 = 0xB030_0000;
+/// Output buffer size in bytes.
 pub const OUT_SIZE: usize = 0x2_0000;
 /// in channels C (0..12) | H (12..24) | W (24..36) | out channels O (36..48).
 pub const CFG_SHAPE: u64 = 0xB000_0010;
@@ -219,7 +222,7 @@ pub fn build_ila(dev: Hlscnn) -> Ila {
             move |c, _| c.is_write && (base..base + size).contains(&c.addr),
             move |c, s| {
                 let off = (c.addr - base) as usize;
-                s.mem_mut(mem)[off..off + 16].copy_from_slice(&c.data);
+                s.mem_write(mem, off, &c.data);
                 Ok(None)
             },
         );
@@ -296,7 +299,8 @@ pub fn build_ila(dev: Hlscnn) -> Ila {
                 act_fmt,
                 wgt_fmt,
             );
-            i16_store(s.mem_mut("out"), 0, out_codes.into_iter());
+            let n_out = out_codes.len();
+            i16_store(s.mem_range_mut("out", 0, 2 * n_out), 0, out_codes.into_iter());
             Ok(None)
         },
     );

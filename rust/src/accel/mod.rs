@@ -28,7 +28,7 @@ pub use flexasr::FlexAsr;
 pub use hlscnn::{Hlscnn, HlscnnConfig};
 pub use vta::Vta;
 
-use crate::codegen::LoweredInvocation;
+use crate::codegen::LoweredProgram;
 use crate::ila::Ila;
 use crate::ir::{Op, Target};
 use crate::tensor::Tensor;
@@ -48,15 +48,23 @@ pub trait Accelerator: Send + Sync {
     /// Returns `None` when the op does not belong to this accelerator.
     fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor>;
 
-    /// Lower one accelerator IR op to a driver-level MMIO invocation
-    /// (operand encoding + command program + result read plan) for
-    /// execution on the accelerator's ILA simulator.
+    /// Lower one accelerator IR op to a driver-level MMIO program
+    /// (operand encoding + command streams + result read/stitch plan)
+    /// for execution on the accelerator's ILA simulator.
+    ///
+    /// Ops whose operands exceed the device buffers are **tiled**: the
+    /// program carries multiple trigger invocations (weight-row tiles for
+    /// FlexASR linear layers, per-timestep gate tiles for LSTM,
+    /// output-channel tiles for HLSCNN conv2d, flat chunks for the VTA
+    /// ALU) plus a stitch step, and remains bit-exact with
+    /// [`Self::exec_op`] by construction.
     ///
     /// Returns `None` when the op does not belong to this accelerator,
-    /// is pure data movement, or does not fit the device (operand shapes
-    /// outside config-register field widths or scratchpad capacities) —
-    /// the execution engine then falls back to [`Self::exec_op`].
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation>;
+    /// is pure data movement, or cannot be staged even tile-wise
+    /// (operand shapes outside config-register field widths, inputs
+    /// larger than the staging buffers) — the execution engine then
+    /// falls back to [`Self::exec_op`].
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram>;
 
     /// Names of the supported operations (Appendix A).
     fn supported_ops(&self) -> Vec<&'static str>;

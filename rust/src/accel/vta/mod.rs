@@ -11,7 +11,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, ReadPlan};
+use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -22,10 +22,12 @@ use self::model as vx;
 /// The VTA accelerator model.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Vta {
+    /// The int8 quantization format (per-tensor power-of-two scales).
     pub int8: Int8Format,
 }
 
 impl Vta {
+    /// Default int8 configuration.
     pub fn new() -> Self {
         Vta { int8: Int8Format::new() }
     }
@@ -55,7 +57,7 @@ impl Vta {
 
     /// Lower `vta_gemm` (dense semantics) to the fixed
     /// load/load/reset/gemm/store instruction sequence (Appendix A).
-    fn lower_gemm(&self, x: &Tensor, w: &Tensor) -> Option<LoweredInvocation> {
+    fn lower_gemm(&self, x: &Tensor, w: &Tensor) -> Option<LoweredProgram> {
         if x.shape.len() != 2 || w.shape.len() != 2 {
             return None;
         }
@@ -89,11 +91,72 @@ impl Vta {
             .push("VTA_ILA.gemm", &["%n", "%k", "%m"])
             .push("VTA_ILA.store_out", &["%out"]);
 
-        Some(LoweredInvocation {
+        Some(LoweredProgram::single(LoweredInvocation {
             target: Target::Vta,
             asm,
             cmds,
-            read: ReadPlan::VtaI32 { base: vx::ACC_BASE, shape: vec![n, m], scale: sx * sw },
+            read: Some(ReadPlan::VtaI32 {
+                base: vx::ACC_BASE,
+                shape: vec![n, m],
+                scale: sx * sw,
+            }),
+        }))
+    }
+
+    /// Lower `vta_add` to driver-level int32 ALU operand staging: the
+    /// left operand's pre-scaled int32 codes go straight into the
+    /// accumulator scratchpad (`load_acc`), the right operand's into the
+    /// weight scratchpad, then one saturating `alu_add` per chunk and an
+    /// accumulator read-back. Tensors larger than the scratchpads are
+    /// processed in flat chunks (the driver's loop) and stitched by
+    /// concatenation — bit-exact because the shared power-of-two scale
+    /// is per-*tensor* and computed once by the driver.
+    fn lower_add(&self, a: &Tensor, b: &Tensor) -> Option<LoweredProgram> {
+        // the staged form requires equal shapes; broadcast adds fall
+        // back to the (integer-exact) tensor path
+        if a.shape != b.shape || a.data.is_empty() {
+            return None;
+        }
+        let scale = self.int8.select_scale(a.max_abs().max(b.max_abs()));
+        let chunk_cap = (vx::ACC_SIZE / 4).min(vx::WGT_SIZE / 4).min(u32::MAX as usize);
+        let total = a.data.len();
+        let mut invocations = Vec::new();
+        let mut lo = 0usize;
+        while lo < total {
+            let len = chunk_cap.min(total - lo);
+            let enc = |v: f32| (self.int8.encode(v, scale) as i32).to_le_bytes();
+            let mut a_bytes = Vec::with_capacity(4 * len);
+            let mut b_bytes = Vec::with_capacity(4 * len);
+            for i in lo..lo + len {
+                a_bytes.extend_from_slice(&enc(a.data[i]));
+                b_bytes.extend_from_slice(&enc(b.data[i]));
+            }
+            let mut cmds = Vec::new();
+            stream_bytes(&mut cmds, vx::ACC_BASE, &a_bytes);
+            stream_bytes(&mut cmds, vx::WGT_BASE, &b_bytes);
+            cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_alu_add(len as u32, true)));
+
+            let mut asm = Fragment::new();
+            asm.push("VTA_ILA.load_acc", &["%a_chunk"])
+                .push("VTA_ILA.load_wgt", &["%b_chunk"])
+                .push("VTA_ILA.alu_add_sat", &["%len"])
+                .push("VTA_ILA.store_out", &["%out_chunk"]);
+
+            invocations.push(LoweredInvocation {
+                target: Target::Vta,
+                asm,
+                cmds,
+                read: Some(ReadPlan::VtaI32 {
+                    base: vx::ACC_BASE,
+                    shape: vec![len],
+                    scale,
+                }),
+            });
+            lo += len;
+        }
+        Some(LoweredProgram {
+            invocations,
+            stitch: Stitch::Concat { axis: 0, shape: a.shape.clone() },
         })
     }
 
@@ -134,12 +197,10 @@ impl Accelerator for Vta {
         }
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredInvocation> {
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
         match op {
             Op::VtaGemm => self.lower_gemm(inputs[0], inputs[1]),
-            // the ALU add's int32 operand staging is not part of the
-            // fixed driver sequences; the engine falls back to the
-            // (integer-exact) tensor fast path
+            Op::VtaAdd => self.lower_add(inputs[0], inputs[1]),
             _ => None,
         }
     }

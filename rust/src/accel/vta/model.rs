@@ -14,17 +14,23 @@ use crate::ila::{Cmd, Ila, IlaState};
 pub const INSN_ADDR: u64 = 0xC000_0010;
 /// Input (activation) scratchpad: 64 KiB of int8 codes.
 pub const INP_BASE: u64 = 0xC010_0000;
+/// Input scratchpad size in bytes.
 pub const INP_SIZE: usize = 0x1_0000;
 /// Weight scratchpad: 64 KiB of int8 codes.
 pub const WGT_BASE: u64 = 0xC020_0000;
+/// Weight scratchpad size in bytes.
 pub const WGT_SIZE: usize = 0x1_0000;
 /// Accumulator/output scratchpad: 256 KiB of int32 codes.
 pub const ACC_BASE: u64 = 0xC030_0000;
+/// Accumulator scratchpad size in bytes.
 pub const ACC_SIZE: usize = 0x4_0000;
 
 // ----- instruction opcodes (byte 0 of the instruction word) -------------
+/// GEMM instruction opcode.
 pub const VTA_GEMM: u8 = 1;
+/// Vector-ALU add instruction opcode.
 pub const VTA_ALU_ADD: u8 = 2;
+/// Accumulator-reset instruction opcode.
 pub const VTA_RESET_ACC: u8 = 3;
 
 /// Pack a GEMM instruction: gemm over x[n,k] (inp), w[m,k] (wgt) into
@@ -39,10 +45,15 @@ pub fn insn_gemm(n: u16, k: u16, m: u16) -> [u8; 16] {
 }
 
 /// Pack an ALU-add instruction: acc[i] += inp2[i] over `len` int32 lanes
-/// (operand streamed into the weight scratchpad as int32).
-pub fn insn_alu_add(len: u32) -> [u8; 16] {
+/// (operand streamed into the weight scratchpad as int32). With
+/// `saturate`, the write-back clamps each lane to the int8 value range
+/// [-127, 127] — the vector ALU's saturating int8 mode, which is what
+/// the driver-level `vta_add` lowering uses so the MMIO result matches
+/// the tensor fast path's saturating semantics bit-exactly.
+pub fn insn_alu_add(len: u32, saturate: bool) -> [u8; 16] {
     let mut w = [0u8; 16];
     w[0] = VTA_ALU_ADD;
+    w[1] = saturate as u8;
     w[2..6].copy_from_slice(&len.to_le_bytes());
     w
 }
@@ -66,13 +77,16 @@ pub fn build_ila(_dev: Vta) -> Ila {
     for (name, base, size, mem) in [
         ("load_inp", INP_BASE, INP_SIZE as u64, "inp"),
         ("load_wgt", WGT_BASE, WGT_SIZE as u64, "wgt"),
+        // int32 ALU operand staging: the driver writes pre-scaled
+        // accumulator words directly (the `vta_add` lowering)
+        ("load_acc", ACC_BASE, ACC_SIZE as u64, "acc"),
     ] {
         ila.instr(
             name,
             move |c, _| c.is_write && (base..base + size).contains(&c.addr),
             move |c, s| {
                 let off = (c.addr - base) as usize;
-                s.mem_mut(mem)[off..off + 16].copy_from_slice(&c.data);
+                s.mem_write(mem, off, &c.data);
                 Ok(None)
             },
         );
@@ -101,7 +115,7 @@ pub fn build_ila(_dev: Vta) -> Ila {
             }
             let inp = s.mem("inp")[..n * k].to_vec();
             let wgt = s.mem("wgt")[..m * k].to_vec();
-            let acc = s.mem_mut("acc");
+            let acc = s.mem_range_mut("acc", 0, 4 * n * m);
             for i in 0..n {
                 for j in 0..m {
                     let mut sum: i32 = 0;
@@ -120,19 +134,21 @@ pub fn build_ila(_dev: Vta) -> Ila {
         "alu_add",
         |c, _| c.is_write && c.addr == INSN_ADDR && c.data[0] == VTA_ALU_ADD,
         |c, s| {
+            let saturate = c.data[1] != 0;
             let len = u32::from_le_bytes(c.data[2..6].try_into().unwrap()) as usize;
             if len * 4 > ACC_SIZE || len * 4 > WGT_SIZE {
                 return Err("alu_add length exceeds scratchpads".into());
             }
             let operand = s.mem("wgt")[..len * 4].to_vec();
-            let acc = s.mem_mut("acc");
+            let acc = s.mem_range_mut("acc", 0, 4 * len);
             for i in 0..len {
                 let a =
                     i32::from_le_bytes(acc[4 * i..4 * i + 4].try_into().unwrap());
                 let b = i32::from_le_bytes(
                     operand[4 * i..4 * i + 4].try_into().unwrap(),
                 );
-                acc[4 * i..4 * i + 4].copy_from_slice(&(a + b).to_le_bytes());
+                let sum = if saturate { (a + b).clamp(-127, 127) } else { a + b };
+                acc[4 * i..4 * i + 4].copy_from_slice(&sum.to_le_bytes());
             }
             Ok(None)
         },
@@ -142,8 +158,8 @@ pub fn build_ila(_dev: Vta) -> Ila {
         |c, _| c.is_write && c.addr == INSN_ADDR && c.data[0] == VTA_RESET_ACC,
         |c, s| {
             let len = u32::from_le_bytes(c.data[2..6].try_into().unwrap()) as usize;
-            let acc = s.mem_mut("acc");
-            for b in acc[..(len * 4).min(ACC_SIZE)].iter_mut() {
+            let acc = s.mem_range_mut("acc", 0, (len * 4).min(ACC_SIZE));
+            for b in acc.iter_mut() {
                 *b = 0;
             }
             Ok(None)

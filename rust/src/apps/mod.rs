@@ -22,9 +22,13 @@ use std::collections::HashMap;
 
 /// A compilable application: graph + leaf shapes.
 pub struct App {
+    /// Application name (the Table 1 row label).
     pub name: &'static str,
+    /// Front-end the paper imported the model from (PyTorch, MxNet, ...).
     pub source_dsl: &'static str,
+    /// The IR program.
     pub expr: RecExpr,
+    /// Declared shapes of every input/weight leaf.
     pub shapes: HashMap<String, Shape>,
 }
 

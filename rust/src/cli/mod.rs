@@ -5,7 +5,9 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand + `--key value` flags.
 #[derive(Debug, Clone, Default)]
 pub struct Cli {
+    /// The subcommand (first positional argument).
     pub command: String,
+    /// `--key value` flags (bare `--key` maps to "true").
     pub flags: HashMap<String, String>,
 }
 
@@ -32,10 +34,12 @@ impl Cli {
         Cli { command, flags }
     }
 
+    /// A flag's value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// A flag parsed as `usize`, with a default.
     pub fn get_usize(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }

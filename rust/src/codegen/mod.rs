@@ -1,8 +1,22 @@
 //! The shared code-generation machinery behind `Accelerator::lower` (the
-//! Fig. 3(b)→(d) / Fig. 5 pipeline): the [`LoweredInvocation`] /
-//! [`ReadPlan`] vocabulary every per-accelerator lowering produces, the
-//! MMIO byte streamer, and the executors that play a lowered invocation
-//! against an [`crate::ila::sim::IlaSim`] and decode its result.
+//! Fig. 3(b)→(d) / Fig. 5 pipeline): the [`LoweredProgram`] /
+//! [`LoweredInvocation`] / [`ReadPlan`] vocabulary every per-accelerator
+//! lowering produces, the MMIO byte streamer, and the executors that play
+//! a lowered program against an [`crate::ila::sim::IlaSim`] and decode /
+//! stitch its result.
+//!
+//! A lowered *program* is a sequence of *invocations* — each one MMIO
+//! write burst + trigger (+ optional read-back) — because one tensor op
+//! frequently needs **multiple architecture-level instructions**: a layer
+//! whose operands exceed the device buffers is tiled by the driver
+//! (weight-row tiles for FlexASR linear, per-step gate tiles for LSTM,
+//! output-channel tiles for HLSCNN conv2d, flat chunks for the VTA ALU),
+//! exactly as the ILA papers model real driver behaviour. Single-trigger
+//! ops are the degenerate one-invocation program
+//! ([`LoweredProgram::single`]). Invocations of one program execute on
+//! one simulator session **without intervening resets**, so operands
+//! staged by an earlier invocation (the activation tensor, the input
+//! matrix) stay resident for later tiles.
 //!
 //! The per-op lowerings themselves live with their accelerators
 //! (`accel::{flexasr,hlscnn,vta}`), reached through the
@@ -29,22 +43,101 @@ use crate::tensor::Tensor;
 /// default-configured device.
 #[derive(Debug, Clone)]
 pub enum ReadPlan {
-    /// FlexASR: read `status_out_bias`, then `len` AF8 codes at `base`.
-    FlexAf8 { base: u64, shape: Vec<usize>, fmt: AdaptivFloatFormat },
-    /// HLSCNN: read `len` i16 codes at `base`, NHWC layout, in the
-    /// device's activation format.
-    HlscnnI16 { base: u64, shape: Vec<usize>, fmt: FixedPointFormat },
-    /// VTA: read `n*m` i32 accumulators at `base`, dequant by `scale`.
-    VtaI32 { base: u64, shape: Vec<usize>, scale: f32 },
+    /// FlexASR: read `status_out_bias`, then AF8 codes at `base`.
+    FlexAf8 {
+        /// MMIO address of the first code.
+        base: u64,
+        /// Decoded tensor shape.
+        shape: Vec<usize>,
+        /// The device's configured storage format.
+        fmt: AdaptivFloatFormat,
+    },
+    /// HLSCNN: read i16 codes at `base`, NHWC layout, in the device's
+    /// activation format.
+    HlscnnI16 {
+        /// MMIO address of the first code.
+        base: u64,
+        /// Decoded tensor shape (NCHW).
+        shape: Vec<usize>,
+        /// The device's configured activation format.
+        fmt: FixedPointFormat,
+    },
+    /// VTA: read i32 accumulators at `base`, dequantized by `scale`.
+    VtaI32 {
+        /// MMIO address of the first accumulator word.
+        base: u64,
+        /// Decoded tensor shape.
+        shape: Vec<usize>,
+        /// f32 dequantization factor (product of operand scales).
+        scale: f32,
+    },
 }
 
-/// One lowered accelerator invocation.
+/// One lowered accelerator invocation: a command burst and, when this
+/// invocation produces (part of) the op's result, a read plan for it.
 #[derive(Debug, Clone)]
 pub struct LoweredInvocation {
+    /// Owning accelerator.
     pub target: Target,
+    /// The Fig. 5(c) assembly-level fragment.
     pub asm: Fragment,
+    /// The Fig. 5(d) MMIO command stream.
     pub cmds: Vec<Cmd>,
-    pub read: ReadPlan,
+    /// How to retrieve this invocation's result; `None` for invocations
+    /// whose effect stays in device state (operand staging, intermediate
+    /// tiles of a multi-trigger program).
+    pub read: Option<ReadPlan>,
+}
+
+/// How a multi-invocation program's read-backs combine into the op's
+/// final tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Stitch {
+    /// The last read-back *is* the result (single-trigger ops; programs
+    /// whose tiles accumulate in device memory and read once at the end).
+    Last,
+    /// Concatenate the read-backs along `axis` (tile outputs are
+    /// contiguous blocks of the result along that axis), then reshape to
+    /// `shape` — bit-exact data assembly, no arithmetic.
+    Concat {
+        /// Axis the tiles partition.
+        axis: usize,
+        /// Final result shape.
+        shape: Vec<usize>,
+    },
+}
+
+/// One lowered accelerator *op*: a sequence of invocations plus the
+/// stitch step combining their read-backs. See the module docs for why
+/// this is a sequence (driver-side tiling).
+#[derive(Debug, Clone)]
+pub struct LoweredProgram {
+    /// The invocations, in execution order.
+    pub invocations: Vec<LoweredInvocation>,
+    /// How read-backs assemble into the op result.
+    pub stitch: Stitch,
+}
+
+impl LoweredProgram {
+    /// The degenerate single-trigger program.
+    pub fn single(inv: LoweredInvocation) -> Self {
+        LoweredProgram { invocations: vec![inv], stitch: Stitch::Last }
+    }
+
+    /// Owning accelerator (programs never mix targets).
+    pub fn target(&self) -> Target {
+        self.invocations[0].target
+    }
+
+    /// Total MMIO beats moving tensor data across all invocations.
+    pub fn data_beats(&self) -> usize {
+        self.invocations.iter().map(|i| i.data_beats()).sum()
+    }
+
+    /// True when the driver tiled the op into multiple triggers.
+    pub fn is_tiled(&self) -> bool {
+        self.invocations.len() > 1
+    }
 }
 
 impl LoweredInvocation {
@@ -80,8 +173,74 @@ pub fn stream_bytes(cmds: &mut Vec<Cmd>, base: u64, bytes: &[u8]) {
 // Result retrieval
 // ----------------------------------------------------------------------
 
-/// Execute a lowered invocation on a fresh ILA simulator of the right
-/// device and decode the result per its read plan.
+/// Execute a whole lowered program on one simulator session — invocations
+/// run in order with **no resets in between** (staged operands stay
+/// resident) — collecting each invocation's read-back and stitching them
+/// into the op result. The caller is responsible for resetting the
+/// simulator *before* the program (the execution engine does a
+/// dirty-region reset).
+pub fn execute_program(
+    prog: &LoweredProgram,
+    sim: &mut crate::ila::sim::IlaSim,
+) -> anyhow::Result<Tensor> {
+    let mut parts = Vec::new();
+    for inv in &prog.invocations {
+        sim.run(&inv.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if inv.read.is_some() {
+            parts.push(read_result(inv, sim)?);
+        }
+    }
+    stitch_parts(parts, &prog.stitch)
+}
+
+/// Assemble invocation read-backs per the program's stitch step.
+pub fn stitch_parts(mut parts: Vec<Tensor>, stitch: &Stitch) -> anyhow::Result<Tensor> {
+    match stitch {
+        Stitch::Last => {
+            parts.pop().ok_or_else(|| anyhow::anyhow!("program produced no read-back"))
+        }
+        Stitch::Concat { axis, shape } => {
+            if parts.is_empty() {
+                anyhow::bail!("concat stitch over zero tiles");
+            }
+            let t = concat_axis(&parts, *axis);
+            anyhow::ensure!(
+                t.len() == shape.iter().product::<usize>(),
+                "stitched {} elements, expected shape {shape:?}",
+                t.len()
+            );
+            Ok(t.reshape(shape))
+        }
+    }
+}
+
+/// Concatenate tensors along `axis` (all other dims must agree).
+fn concat_axis(parts: &[Tensor], axis: usize) -> Tensor {
+    let first = &parts[0];
+    let rank = first.shape.len();
+    assert!(axis < rank, "concat axis {axis} out of rank {rank}");
+    let outer: usize = first.shape[..axis].iter().product();
+    let inner: usize = first.shape[axis + 1..].iter().product();
+    let axis_total: usize = parts.iter().map(|p| p.shape[axis]).sum();
+    let mut shape = first.shape.clone();
+    shape[axis] = axis_total;
+    let mut data = vec![0.0f32; outer * axis_total * inner];
+    let mut axis_off = 0usize;
+    for p in parts {
+        debug_assert_eq!(&p.shape[..axis], &first.shape[..axis]);
+        debug_assert_eq!(&p.shape[axis + 1..], &first.shape[axis + 1..]);
+        let block = p.shape[axis] * inner;
+        for o in 0..outer {
+            let dst = (o * axis_total + axis_off) * inner;
+            data[dst..dst + block].copy_from_slice(&p.data[o * block..(o + 1) * block]);
+        }
+        axis_off += p.shape[axis];
+    }
+    Tensor::new(shape, data)
+}
+
+/// Execute a single lowered invocation and decode its result (requires a
+/// read plan; use [`execute_program`] for whole ops).
 pub fn execute_lowered(
     inv: &LoweredInvocation,
     sim: &mut crate::ila::sim::IlaSim,
@@ -92,11 +251,15 @@ pub fn execute_lowered(
 
 /// Decode a completed invocation's result from device state. Reads that
 /// return no data surface as structured errors instead of being masked
-/// with zeros.
+/// with zeros. Errors when the invocation has no read plan.
 pub fn read_result(
     inv: &LoweredInvocation,
     sim: &mut crate::ila::sim::IlaSim,
 ) -> anyhow::Result<Tensor> {
+    let plan = inv
+        .read
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("invocation has no read plan"))?;
     let fetch = |sim: &mut crate::ila::sim::IlaSim,
                  base: u64,
                  nbytes: usize|
@@ -116,7 +279,7 @@ pub fn read_result(
         out.truncate(nbytes);
         Ok(out)
     };
-    match &inv.read {
+    match plan {
         ReadPlan::FlexAf8 { base, shape, fmt } => {
             let ob = sim
                 .step(&Cmd::read(fx::STATUS_OUT_BIAS))
@@ -167,14 +330,54 @@ mod tests {
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
         let b = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-        let inv = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        let prog = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        assert!(!prog.is_tiled(), "small linear is a single trigger");
         let mut sim = IlaSim::new(dev.build_ila());
-        let got = execute_lowered(&inv, &mut sim).unwrap();
+        let got = execute_program(&prog, &mut sim).unwrap();
         // the MMIO result equals the tensor-level fast path bit-exactly:
         // both sides quantize through the same storage codec
         let expect = dev.linear(&x, &w, &b);
         assert_eq!(got, expect, "MMIO path diverges from tensor path");
-        assert!(inv.asm.len() >= 8, "Fig. 5(c)-style fragment emitted");
+        assert!(
+            prog.invocations[0].asm.len() >= 8,
+            "Fig. 5(c)-style fragment emitted"
+        );
+    }
+
+    #[test]
+    fn oversized_linear_tiles_instead_of_declining() {
+        // weights beyond the 256 KiB PE buffer: the driver now emits a
+        // multi-trigger row-tiled program instead of falling back
+        let dev = FlexAsr::new();
+        let mut rng = Rng::new(76);
+        let x = Tensor::randn(&[2, 600], &mut rng, 1.0);
+        let w = Tensor::randn(&[600, 600], &mut rng, 0.3);
+        let b = Tensor::randn(&[600], &mut rng, 0.1);
+        let prog = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        assert!(prog.is_tiled(), "600x600 weights exceed one tile");
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_program(&prog, &mut sim).unwrap();
+        assert_eq!(got, dev.linear(&x, &w, &b), "tiled MMIO diverges");
+    }
+
+    #[test]
+    fn stitch_concat_reassembles_column_tiles() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 5.0, 6.0]);
+        let b = Tensor::new(vec![2, 1], vec![3.0, 7.0]);
+        let out = stitch_parts(
+            vec![a, b],
+            &Stitch::Concat { axis: 1, shape: vec![2, 3] },
+        )
+        .unwrap();
+        assert_eq!(out.data, vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0]);
+        // Last keeps only the final read-back
+        let last = stitch_parts(
+            vec![Tensor::ones(&[1]), Tensor::zeros(&[2])],
+            &Stitch::Last,
+        )
+        .unwrap();
+        assert_eq!(last.shape, vec![2]);
+        assert!(stitch_parts(vec![], &Stitch::Last).is_err());
     }
 
     #[test]
@@ -213,9 +416,9 @@ mod tests {
         let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
         let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
         let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
-        let inv = dev.lower(&op, &[&x, &w]).unwrap();
+        let prog = dev.lower(&op, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
-        let got = execute_lowered(&inv, &mut sim).unwrap();
+        let got = execute_program(&prog, &mut sim).unwrap();
         // updated design: the integer kernel is shared, so the MMIO and
         // tensor views agree bit-exactly
         let expect = dev.conv2d(&x, &w, (1, 1), (1, 1));
@@ -228,31 +431,34 @@ mod tests {
         let mut rng = Rng::new(74);
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 1.0));
-        let inv = dev.lower(&Op::VtaGemm, &[&x, &w]).unwrap();
+        let prog = dev.lower(&Op::VtaGemm, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
-        let got = execute_lowered(&inv, &mut sim).unwrap();
+        let got = execute_program(&prog, &mut sim).unwrap();
         let expect = dev.gemm(&x, &w);
         assert_eq!(got.rel_error(&expect), 0.0, "VTA GEMM is exact");
     }
 
     #[test]
-    fn lower_declines_oversized_and_foreign_ops() {
+    fn lower_declines_foreign_and_untileable_ops() {
         let fa = FlexAsr::new();
         let mut rng = Rng::new(75);
-        // weights beyond the PE buffer: decline, don't corrupt
         let x = Tensor::randn(&[1, 600], &mut rng, 1.0);
         let w = Tensor::randn(&[600, 600], &mut rng, 0.3);
-        let b = Tensor::randn(&[600], &mut rng, 0.1);
-        assert!(fa.lower(&Op::FlexLinear, &[&x, &w, &b]).is_none());
         // foreign op: not this accelerator's
         assert!(fa.lower(&Op::VtaGemm, &[&x, &w]).is_none());
         // data movement has no single-op program
         assert!(fa.lower(&Op::FlexMaxpStore, &[&x]).is_none());
+        // an input matrix that alone overflows the global buffer cannot
+        // be staged even one row-tile at a time: decline, don't corrupt
+        let xb = Tensor::randn(&[3, 30_000], &mut rng, 1.0);
+        let wb = Tensor::randn(&[4, 30_000], &mut rng, 0.3);
+        let bb = Tensor::randn(&[4], &mut rng, 0.1);
+        assert!(fa.lower(&Op::FlexLinear, &[&xb, &wb, &bb]).is_none());
         // batched conv: HLSCNN is a batch-1 device
         let hl = Hlscnn::default();
-        let xb = Tensor::randn(&[2, 3, 6, 6], &mut rng, 1.0);
+        let xc = Tensor::randn(&[2, 3, 6, 6], &mut rng, 1.0);
         let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
         let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
-        assert!(hl.lower(&op, &[&xb, &k]).is_none());
+        assert!(hl.lower(&op, &[&xc, &k]).is_none());
     }
 }

@@ -10,8 +10,11 @@ use crate::ir::{Op, RecExpr};
 /// Data-movement statistics of an extracted program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TransferStats {
+    /// `fasr_maxp_store` ops (host -> GB transfers).
     pub stores: usize,
+    /// `fasr_maxp_load` ops (GB -> host transfers).
     pub loads: usize,
+    /// Pool compute triggers.
     pub compute: usize,
 }
 

@@ -24,6 +24,7 @@ pub struct CompileResult {
     pub stop: StopReason,
     /// e-graph size at extraction time.
     pub classes: usize,
+    /// e-graph nodes at extraction time.
     pub nodes: usize,
     /// wall-clock of saturation + extraction.
     pub elapsed: Duration,

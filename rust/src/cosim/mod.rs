@@ -249,8 +249,11 @@ pub fn cosim_lm_backend(
 /// Result of a language-model co-simulation.
 #[derive(Debug, Clone)]
 pub struct LmReport {
+    /// Evaluation windows processed.
     pub sentences: usize,
+    /// Per-token perplexity of the f32 reference.
     pub ref_perplexity: f32,
+    /// Per-token perplexity under accelerator numerics.
     pub acc_perplexity: f32,
     /// Accelerator invocations executed across the whole sweep.
     pub invocations: usize,

@@ -3,8 +3,11 @@
 /// Mean and standard deviation of a set of relative errors.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ErrorStats {
+    /// Mean relative error.
     pub mean: f32,
+    /// Standard deviation of the relative error.
     pub std_dev: f32,
+    /// Sample count.
     pub n: usize,
 }
 

@@ -19,8 +19,11 @@ use crate::util::Rng;
 /// One Table 2 row.
 #[derive(Debug, Clone)]
 pub struct MappingValidation {
+    /// Accelerator name (Table 2 column 1).
     pub accelerator: &'static str,
+    /// Operation name (Table 2 column 2).
     pub operation: &'static str,
+    /// Relative-error statistics over the random test inputs.
     pub stats: ErrorStats,
 }
 

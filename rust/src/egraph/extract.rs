@@ -22,14 +22,17 @@ pub trait CostFn {
 /// for a *disabled* accelerator costs infinity so extraction can never
 /// pick it (the paper compiles per-target).
 pub struct AccelCost {
+    /// Accelerator targets extraction may offload to.
     pub enabled: Vec<Target>,
 }
 
 impl AccelCost {
+    /// Cost function with one enabled target.
     pub fn for_target(t: Target) -> Self {
         AccelCost { enabled: vec![t] }
     }
 
+    /// Cost function with several enabled targets.
     pub fn for_targets(ts: &[Target]) -> Self {
         AccelCost { enabled: ts.to_vec() }
     }

@@ -62,13 +62,16 @@ impl std::fmt::Debug for PatternNode {
 /// A top-level pattern.
 #[derive(Debug, Clone)]
 pub struct Pattern {
+    /// The root pattern node.
     pub root: Pat,
 }
 
 /// One substitution: pattern-var -> e-class, op-binder -> concrete op.
 #[derive(Debug, Clone, Default)]
 pub struct Subst {
+    /// Pattern-variable bindings (`?x` -> e-class).
     pub vars: HashMap<String, Id>,
+    /// Op-binder bindings (`AnyOp` -> concrete op).
     pub ops: HashMap<String, Op>,
 }
 
@@ -87,7 +90,9 @@ impl Subst {
 /// A match: the e-class the pattern root matched, plus the substitution.
 #[derive(Debug, Clone)]
 pub struct Match {
+    /// The e-class the pattern root matched.
     pub class: Id,
+    /// The substitution that made it match.
     pub subst: Subst,
 }
 
@@ -186,6 +191,9 @@ impl Pattern {
 /// as a tree — exponential time.
 type MemoKey = (usize, Id, Vec<(String, Id)>);
 
+/// Per-search memo of subpattern matches (keyed by subpattern identity,
+/// e-class, and the bindings in scope) — keeps DAG-shaped patterns from
+/// re-expanding as trees.
 #[derive(Default)]
 pub struct MatchMemo {
     table: HashMap<MemoKey, Vec<Subst>>,

@@ -39,8 +39,11 @@ where
 
 /// A named rewrite rule.
 pub struct Rewrite {
+    /// Rule name (shows up in scheduler/bench reports).
     pub name: String,
+    /// Left-hand-side pattern.
     pub searcher: Pattern,
+    /// Right-hand-side constructor.
     pub applier: Box<dyn Applier>,
 }
 

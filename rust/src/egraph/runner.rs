@@ -28,8 +28,11 @@ use std::time::{Duration, Instant};
 /// Saturation budgets.
 #[derive(Debug, Clone)]
 pub struct RunnerLimits {
+    /// Maximum saturation iterations.
     pub max_iters: usize,
+    /// Node-count budget for the e-graph.
     pub max_nodes: usize,
+    /// Wall-clock budget.
     pub time_limit: Duration,
 }
 
@@ -107,6 +110,7 @@ impl Default for BackoffScheduler {
 }
 
 impl BackoffScheduler {
+    /// Scheduler with an initial match limit and base ban length.
     pub fn new(match_limit: usize, ban_length: usize) -> Self {
         BackoffScheduler { match_limit, ban_length, stats: Vec::new() }
     }
@@ -149,8 +153,11 @@ impl BackoffScheduler {
 
 /// Saturation driver.
 pub struct Runner {
+    /// Saturation budgets.
     pub limits: RunnerLimits,
+    /// Per-iteration statistics, filled as saturation runs.
     pub iterations: Vec<IterStats>,
+    /// Why the run stopped (set by `run`).
     pub stop_reason: Option<StopReason>,
     /// Backoff scheduler; `None` applies every rule every iteration.
     pub scheduler: Option<BackoffScheduler>,

@@ -10,6 +10,7 @@ pub struct UnionFind {
 }
 
 impl UnionFind {
+    /// An empty forest.
     pub fn new() -> Self {
         UnionFind { parent: Vec::new(), size: Vec::new() }
     }

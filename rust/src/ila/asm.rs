@@ -19,6 +19,7 @@ pub struct AsmInstr {
 }
 
 impl AsmInstr {
+    /// Build an instruction from a name and symbolic operands.
     pub fn new(name: &str, operands: &[&str]) -> Self {
         AsmInstr {
             name: name.to_string(),
@@ -41,23 +42,28 @@ impl fmt::Display for AsmInstr {
 /// mapping.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Fragment {
+    /// The instructions, in program order.
     pub instrs: Vec<AsmInstr>,
 }
 
 impl Fragment {
+    /// An empty fragment.
     pub fn new() -> Self {
         Fragment { instrs: Vec::new() }
     }
 
+    /// Append an instruction (builder style).
     pub fn push(&mut self, name: &str, operands: &[&str]) -> &mut Self {
         self.instrs.push(AsmInstr::new(name, operands));
         self
     }
 
+    /// Number of instructions.
     pub fn len(&self) -> usize {
         self.instrs.len()
     }
 
+    /// True when the fragment has no instructions.
     pub fn is_empty(&self) -> bool {
         self.instrs.is_empty()
     }

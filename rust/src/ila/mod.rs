@@ -27,8 +27,11 @@ use std::sync::Arc;
 /// upper bytes).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Cmd {
+    /// Write (true) or read (false).
     pub is_write: bool,
+    /// Interface address.
     pub addr: u64,
+    /// Payload (writes); ignored for reads.
     pub data: [u8; 16],
 }
 
@@ -70,13 +73,23 @@ impl fmt::Display for Cmd {
 
 /// Architectural state of an ILA model: named registers (bit-vectors up
 /// to 64 bits) and named byte-addressable memories.
+///
+/// Memory writes are **dirty-tracked**: every mutation path records the
+/// byte range it touched (conservatively, the whole memory for the legacy
+/// [`Self::mem_mut`] accessor), so a simulator reset between invocations
+/// only has to restore the bytes a program actually wrote instead of
+/// cloning the full multi-hundred-KiB initial state (see
+/// [`sim::IlaSim::reset_dirty`]).
 #[derive(Debug, Clone, Default)]
 pub struct IlaState {
     regs: BTreeMap<String, (u64, u32)>,
     mems: BTreeMap<String, Vec<u8>>,
+    /// Per-memory dirty watermark `[lo, hi)`; absent = clean.
+    dirty: BTreeMap<String, (usize, usize)>,
 }
 
 impl IlaState {
+    /// Empty state (no registers, no memories).
     pub fn new() -> Self {
         Self::default()
     }
@@ -117,11 +130,79 @@ impl IlaState {
             .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"))
     }
 
-    /// Borrow a memory mutably.
+    /// Widen a memory's dirty watermark to cover `[lo, hi)`.
+    fn mark_dirty(&mut self, name: &str, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        self.dirty
+            .entry(name.to_string())
+            .and_modify(|(dl, dh)| {
+                *dl = (*dl).min(lo);
+                *dh = (*dh).max(hi);
+            })
+            .or_insert((lo, hi));
+    }
+
+    /// Borrow a memory mutably. The legacy catch-all accessor: because
+    /// the caller may write anywhere, the **whole** memory is marked
+    /// dirty; prefer [`Self::mem_write`] / [`Self::mem_range_mut`] so
+    /// dirty-region resets stay cheap.
     pub fn mem_mut(&mut self, name: &str) -> &mut Vec<u8> {
+        let len = self.mem(name).len();
+        self.mark_dirty(name, 0, len);
         self.mems
             .get_mut(name)
             .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"))
+    }
+
+    /// Write `bytes` into a memory at `off`, dirty-tracking exactly that
+    /// range.
+    pub fn mem_write(&mut self, name: &str, off: usize, bytes: &[u8]) {
+        self.mark_dirty(name, off, off + bytes.len());
+        let mem = self
+            .mems
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"));
+        mem[off..off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    /// Mutably borrow the byte range `[lo, hi)` of a memory,
+    /// dirty-tracking exactly that range.
+    pub fn mem_range_mut(&mut self, name: &str, lo: usize, hi: usize) -> &mut [u8] {
+        self.mark_dirty(name, lo, hi);
+        let mem = self
+            .mems
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("unknown ILA memory `{name}`"));
+        &mut mem[lo..hi]
+    }
+
+    /// Restore this state to `init` by rewinding only what was touched:
+    /// every register value is copied back (registers are few and cheap)
+    /// and each memory's dirty range is copied from `init`'s bytes.
+    /// Returns the number of memory bytes restored — the work a
+    /// dirty-region reset actually did, vs. [`Self::total_mem_bytes`] for
+    /// a full clone.
+    pub fn restore_from(&mut self, init: &IlaState) -> u64 {
+        for (name, val) in &init.regs {
+            if let Some(entry) = self.regs.get_mut(name) {
+                *entry = *val;
+            }
+        }
+        let mut restored = 0u64;
+        for (name, (lo, hi)) in std::mem::take(&mut self.dirty) {
+            let src = &init.mems[&name][lo..hi];
+            self.mems.get_mut(&name).expect("dirty unknown mem")[lo..hi]
+                .copy_from_slice(src);
+            restored += (hi - lo) as u64;
+        }
+        restored
+    }
+
+    /// Total bytes across all memories (the cost of a full-state clone).
+    pub fn total_mem_bytes(&self) -> u64 {
+        self.mems.values().map(|m| m.len() as u64).sum()
     }
 
     /// Register names (for state dumps / debugging).
@@ -150,8 +231,11 @@ pub type UpdateFn =
 /// One ILA instruction.
 #[derive(Clone)]
 pub struct Instr {
+    /// Instruction name (as in the ILAng model).
     pub name: String,
+    /// Which interface commands trigger this instruction.
     pub decode: DecodeFn,
+    /// State update (may produce read-back data).
     pub update: UpdateFn,
 }
 
@@ -164,12 +248,16 @@ impl fmt::Debug for Instr {
 /// An ILA model: a named set of instructions plus initial state.
 #[derive(Clone)]
 pub struct Ila {
+    /// Model name.
     pub name: String,
+    /// The instruction set.
     pub instrs: Vec<Instr>,
+    /// Architectural reset state.
     pub init_state: IlaState,
 }
 
 impl Ila {
+    /// A model with no instructions yet.
     pub fn new(name: &str, init_state: IlaState) -> Self {
         Ila { name: name.to_string(), instrs: Vec::new(), init_state }
     }

@@ -11,26 +11,63 @@ use std::collections::HashMap;
 
 /// A running simulation of one ILA model.
 pub struct IlaSim {
+    /// The ILA model being executed.
     pub model: Ila,
+    /// Current architectural state.
     pub state: IlaState,
     /// per-instruction execution counts
     pub instr_counts: HashMap<String, u64>,
     /// total commands executed
     pub steps: u64,
+    /// resets performed ([`Self::reset`] + [`Self::reset_dirty`])
+    pub resets: u64,
+    /// total bytes of memory state restored by resets; a full
+    /// [`Self::reset`] counts the whole state, a [`Self::reset_dirty`]
+    /// only what the previous program touched
+    pub bytes_cleared: u64,
 }
 
 impl IlaSim {
     /// Instantiate a simulator with the model's initial state.
     pub fn new(model: Ila) -> Self {
         let state = model.init_state.clone();
-        IlaSim { model, state, instr_counts: HashMap::new(), steps: 0 }
+        IlaSim {
+            model,
+            state,
+            instr_counts: HashMap::new(),
+            steps: 0,
+            resets: 0,
+            bytes_cleared: 0,
+        }
     }
 
-    /// Reset to the initial state.
+    /// Reset to the initial state by cloning it wholesale (the
+    /// heavyweight baseline; ~0.3 MB for FlexASR). Prefer
+    /// [`Self::reset_dirty`] between invocations.
     pub fn reset(&mut self) {
+        self.bytes_cleared += self.state.total_mem_bytes();
+        self.resets += 1;
         self.state = self.model.init_state.clone();
         self.instr_counts.clear();
         self.steps = 0;
+    }
+
+    /// Reset only the state the previous program(s) dirtied: registers
+    /// are restored wholesale (they are few) and each memory rewinds just
+    /// its dirty byte range. Equivalent to [`Self::reset`] for execution
+    /// purposes — every subsequent decode sees the initial state — at a
+    /// fraction of the memory traffic. The debug counters
+    /// (`instr_counts`, `steps`) deliberately keep accumulating so a
+    /// persistent engine reports per-session totals.
+    pub fn reset_dirty(&mut self) {
+        self.bytes_cleared += self.state.restore_from(&self.model.init_state);
+        self.resets += 1;
+    }
+
+    /// Total bytes of this simulator's memories (what a full reset
+    /// clones).
+    pub fn state_bytes(&self) -> u64 {
+        self.state.total_mem_bytes()
     }
 
     /// Execute one interface command; returns read-back data when the
@@ -106,5 +143,79 @@ mod tests {
         sim.reset();
         let out = sim.step(&Cmd::read(0)).unwrap().unwrap();
         assert_eq!(u64::from_le_bytes(out[..8].try_into().unwrap()), 0);
+    }
+
+    fn mem_ila() -> Ila {
+        let mut st = IlaState::new();
+        st.new_mem("buf", 1024);
+        st.new_bv("cfg", 32);
+        let mut ila = Ila::new("mem", st);
+        ila.instr(
+            "write_buf",
+            |c, _| c.is_write && c.addr < 1024,
+            |c, s| {
+                s.mem_write("buf", c.addr as usize, &c.data);
+                Ok(None)
+            },
+        );
+        ila.instr(
+            "read_buf",
+            |c, _| !c.is_write && c.addr < 1024,
+            |c, s| {
+                let off = c.addr as usize;
+                let mut out = [0u8; 16];
+                out.copy_from_slice(&s.mem("buf")[off..off + 16]);
+                Ok(Some(out))
+            },
+        );
+        ila.instr(
+            "set_cfg",
+            |c, _| c.is_write && c.addr == 0x8000,
+            |c, s| {
+                s.set_reg("cfg", c.data_u64());
+                Ok(None)
+            },
+        );
+        ila
+    }
+
+    #[test]
+    fn dirty_reset_restores_only_touched_bytes() {
+        let mut sim = IlaSim::new(mem_ila());
+        sim.step(&Cmd::write(64, [7u8; 16])).unwrap();
+        sim.step(&Cmd::write(96, [9u8; 16])).unwrap();
+        sim.step(&Cmd::write_u64(0x8000, 0xAB)).unwrap();
+        sim.reset_dirty();
+        // the whole architectural state is back to init...
+        assert_eq!(sim.state.reg("cfg"), 0);
+        let d = sim.step(&Cmd::read(96)).unwrap().unwrap();
+        assert_eq!(d, [0u8; 16]);
+        // ...but only the dirty watermark [64, 112) was rewound
+        assert_eq!(sim.resets, 1);
+        assert_eq!(sim.bytes_cleared, 48);
+        assert!(sim.bytes_cleared < sim.state_bytes());
+    }
+
+    #[test]
+    fn dirty_reset_on_clean_sim_clears_nothing() {
+        let mut sim = IlaSim::new(mem_ila());
+        sim.reset_dirty();
+        assert_eq!(sim.bytes_cleared, 0);
+        // reads do not dirty state
+        let _ = sim.step(&Cmd::read(0)).unwrap();
+        sim.reset_dirty();
+        assert_eq!(sim.bytes_cleared, 0);
+        assert_eq!(sim.resets, 2);
+    }
+
+    #[test]
+    fn legacy_mem_mut_is_conservatively_full_dirty() {
+        let mut st = IlaState::new();
+        st.new_mem("m", 256);
+        let init = st.clone();
+        let mut state = st;
+        state.mem_mut("m")[3] = 5;
+        assert_eq!(state.restore_from(&init), 256);
+        assert_eq!(state.mem("m")[3], 0);
     }
 }

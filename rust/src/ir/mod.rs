@@ -273,7 +273,9 @@ impl Op {
 /// One node: operator + children.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Node {
+    /// The operator.
     pub op: Op,
+    /// Child node indices.
     pub children: Vec<Id>,
 }
 
@@ -294,6 +296,7 @@ impl Node {
 /// parents); the last node is the root.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RecExpr {
+    /// Nodes in topological order; the last is the root.
     pub nodes: Vec<Node>,
 }
 
@@ -353,26 +356,32 @@ impl RecExpr {
 /// Convenience builder for writing application graphs by hand.
 #[derive(Debug, Default)]
 pub struct GraphBuilder {
+    /// The expression under construction.
     pub expr: RecExpr,
 }
 
 impl GraphBuilder {
+    /// An empty graph.
     pub fn new() -> Self {
         GraphBuilder { expr: RecExpr::new() }
     }
 
+    /// A named input leaf.
     pub fn var(&mut self, name: &str) -> Id {
         self.expr.add(Op::Var(name.to_string()), vec![])
     }
 
+    /// A named weight leaf.
     pub fn weight(&mut self, name: &str) -> Id {
         self.expr.add(Op::Weight(name.to_string()), vec![])
     }
 
+    /// `nn.dense` (x @ w^T).
     pub fn dense(&mut self, x: Id, w: Id) -> Id {
         self.expr.add(Op::Dense, vec![x, w])
     }
 
+    /// Broadcasting bias add.
     pub fn bias_add(&mut self, x: Id, b: Id) -> Id {
         self.expr.add(Op::BiasAdd, vec![x, b])
     }
@@ -384,42 +393,52 @@ impl GraphBuilder {
         self.bias_add(d, b)
     }
 
+    /// Elementwise add.
     pub fn add(&mut self, a: Id, b: Id) -> Id {
         self.expr.add(Op::Add, vec![a, b])
     }
 
+    /// Elementwise multiply.
     pub fn mul(&mut self, a: Id, b: Id) -> Id {
         self.expr.add(Op::Mul, vec![a, b])
     }
 
+    /// ReLU activation.
     pub fn relu(&mut self, x: Id) -> Id {
         self.expr.add(Op::Relu, vec![x])
     }
 
+    /// GELU activation.
     pub fn gelu(&mut self, x: Id) -> Id {
         self.expr.add(Op::Gelu, vec![x])
     }
 
+    /// Row-wise softmax.
     pub fn softmax(&mut self, x: Id) -> Id {
         self.expr.add(Op::Softmax, vec![x])
     }
 
+    /// Row-wise layer normalization.
     pub fn layer_norm(&mut self, x: Id) -> Id {
         self.expr.add(Op::LayerNorm, vec![x])
     }
 
+    /// Reshape to an explicit shape.
     pub fn reshape(&mut self, x: Id, shape: &[usize]) -> Id {
         self.expr.add(Op::Reshape(shape.to_vec()), vec![x])
     }
 
+    /// 2-D transpose.
     pub fn transpose(&mut self, x: Id) -> Id {
         self.expr.add(Op::Transpose, vec![x])
     }
 
+    /// Column-wise concatenation.
     pub fn concat(&mut self, a: Id, b: Id) -> Id {
         self.expr.add(Op::Concat, vec![a, b])
     }
 
+    /// 2-D convolution (NCHW x OIHW).
     pub fn conv2d(
         &mut self,
         x: Id,
@@ -431,22 +450,27 @@ impl GraphBuilder {
         self.expr.add(Op::Conv2d { stride, pad, groups }, vec![x, w])
     }
 
+    /// 2-D max pooling.
     pub fn max_pool2d(&mut self, x: Id, window: (usize, usize), stride: (usize, usize)) -> Id {
         self.expr.add(Op::MaxPool2d { window, stride }, vec![x])
     }
 
+    /// Global average pool over spatial dims.
     pub fn global_avg_pool(&mut self, x: Id) -> Id {
         self.expr.add(Op::GlobalAvgPool, vec![x])
     }
 
+    /// Whole-sequence LSTM layer.
     pub fn lstm(&mut self, x: Id, w_ih: Id, w_hh: Id, b: Id, steps: usize) -> Id {
         self.expr.add(Op::Lstm { steps }, vec![x, w_ih, w_hh, b])
     }
 
+    /// Single-head attention.
     pub fn attention(&mut self, q: Id, k: Id, v: Id) -> Id {
         self.expr.add(Op::Attention, vec![q, k, v])
     }
 
+    /// Finalize and return the expression.
     pub fn finish(self) -> RecExpr {
         self.expr
     }

@@ -11,10 +11,14 @@
 //! with [`SessionBuilder`], compile applications into [`CompiledProgram`]
 //! handles, and run/co-simulate/sweep through them on a per-session
 //! [`session::ExecBackend`] (tensor fast path, MMIO-level ILA
-//! simulation, or bit-exact cross-check of both). The free functions in
-//! [`compiler`] and [`cosim`] remain as the low-level core.
+//! simulation, or bit-exact cross-check of both — the fidelity ladder).
+//! The free functions in [`compiler`] and [`cosim`] remain as the
+//! low-level core.
 //!
-//! See DESIGN.md for the system inventory and the per-experiment index.
+//! See `docs/ARCHITECTURE.md` for the layer map, the fidelity ladder,
+//! and where driver-side tiling and persistent execution engines sit.
+
+#![warn(missing_docs)]
 
 pub mod accel;
 pub mod apps;

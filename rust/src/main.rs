@@ -237,22 +237,22 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
     let x = fa.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
     let w = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-    let inv = fa
+    let prog = fa
         .lower(&Op::FlexLinear, &[&x, &w, &b])
         .expect("linear fits the device");
-    println!("FlexASR linear fragment (Fig. 5c):\n{}", inv.asm);
+    println!("FlexASR linear fragment (Fig. 5c):\n{}", prog.invocations[0].asm);
     println!("final MMIO commands (Fig. 5d):");
-    for c in inv.cmds.iter().rev().take(7).rev() {
+    for c in prog.invocations[0].cmds.iter().rev().take(7).rev() {
         println!("  {c}");
     }
-    let y = drv.invoke(&inv)?;
+    let y = drv.invoke_program(&prog)?;
     println!("result shape {:?}; now chaining into VTA GEMM...", y.shape);
     let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
     let yq = vta.quant(&y);
     let gemm = vta
         .lower(&Op::VtaGemm, &[&yq, &w2])
         .expect("gemm fits the device");
-    let y2 = drv.invoke(&gemm)?;
+    let y2 = drv.invoke_program(&gemm)?;
     println!(
         "VTA GEMM result shape {:?}; bus handled {} MMIO commands total",
         y2.shape,

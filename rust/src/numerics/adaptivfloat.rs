@@ -53,6 +53,13 @@ impl AdaptivFloatFormat {
         exp - e_max
     }
 
+    /// Quantize a whole tensor under an explicit bias (instead of the
+    /// tensor-derived one [`NumericFormat::quantize`] selects). Drivers
+    /// use this to replay a scheduled bias across operand tiles.
+    pub fn quantize_with_bias(&self, t: &Tensor, bias: i32) -> Tensor {
+        t.map(|x| self.quantize_value(x, bias))
+    }
+
     /// Quantize one value with the given bias. Bit-exact model of the
     /// FlexASR datapath's storage format.
     pub fn quantize_value(&self, x: f32, bias: i32) -> f32 {

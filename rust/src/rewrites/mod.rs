@@ -44,6 +44,8 @@ pub fn rules_for_extended(targets: &[Target], mode: Matching) -> Vec<Rewrite> {
     rules
 }
 
+/// The rewrite-rule set for a target list under a matching mode
+/// (Table 1's per-target compilation).
 pub fn rules_for(targets: &[Target], mode: Matching) -> Vec<Rewrite> {
     let mut rules = Vec::new();
     for &t in targets {

@@ -37,6 +37,7 @@ struct LaneRegs {
 
 /// The cycle-level device.
 pub struct RtlFlexAsr {
+    /// Storage format the lanes decode/encode.
     pub fmt: AdaptivFloatFormat,
     lanes: [LaneRegs; LANES],
     /// total cycles simulated (for the speedup report)
@@ -50,6 +51,7 @@ impl Default for RtlFlexAsr {
 }
 
 impl RtlFlexAsr {
+    /// Device in the default (updated) AF8 format.
     pub fn new() -> Self {
         RtlFlexAsr {
             fmt: AdaptivFloatFormat::new(8, 3),

@@ -8,6 +8,7 @@ use std::path::{Path, PathBuf};
 /// Handle to the artifacts directory.
 #[derive(Debug, Clone)]
 pub struct ArtifactStore {
+    /// Root directory holding the artifacts.
     pub dir: PathBuf,
 }
 

@@ -23,13 +23,18 @@
 //!   the repo-native version of the paper's "uncovered an unknown flaw"
 //!   case study.
 //!
-//! Ops an accelerator cannot lower (data movement, shapes beyond device
-//! buffers) fall back to the tensor path under every backend, so whole
-//! applications always run end to end.
+//! Ops whose operands exceed the device buffers are **tiled** by the
+//! driver into multi-trigger [`LoweredProgram`]s (weight-row tiles,
+//! per-step LSTM gate tiles, output-channel tiles, flat ALU chunks), so
+//! even the full Table 1 LSTM-WLM gate matrix executes as real MMIO.
+//! Ops an accelerator genuinely cannot lower (pure data movement,
+//! inputs larger than the staging buffers) fall back to the tensor path
+//! under every backend, so whole applications always run end to end —
+//! and [`FidelityReport::total_unlowered`] discloses every fallback.
 
 use super::AcceleratorRegistry;
 use crate::accel::Accelerator;
-use crate::codegen::{self, LoweredInvocation};
+use crate::codegen::{self, LoweredProgram};
 use crate::ila::sim::IlaSim;
 use crate::ir::interp::EvalError;
 use crate::ir::{Op, Target};
@@ -203,15 +208,25 @@ impl fmt::Display for FidelityReport {
 /// instances, and accumulates the cross-check [`FidelityReport`].
 ///
 /// An engine is cheap to create under `Functional` (no simulator state);
-/// MMIO simulators are instantiated on first use per target and reset
-/// before every invocation, so results are independent of invocation
-/// order and worker count.
+/// MMIO simulators are instantiated on first use per target and
+/// **dirty-region reset** before every lowered program (only the state
+/// the previous program touched is restored — see
+/// [`IlaSim::reset_dirty`]), so results are independent of invocation
+/// order and worker count without paying a full state clone per op.
+///
+/// Engines are built to be **held across calls**: obtain one from
+/// [`super::CompiledProgram::engine`] and pass it to the `*_with` run
+/// APIs ([`super::CompiledProgram::run_with`] and friends) to amortize
+/// simulator construction over a whole session instead of rebuilding the
+/// per-target simulators on every single-point evaluation.
 pub struct ExecEngine<'r> {
     registry: &'r AcceleratorRegistry,
     backend: ExecBackend,
     sims: [Option<IlaSim>; Target::COUNT],
     fidelity: FidelityReport,
     lowered: usize,
+    triggers: usize,
+    sims_built: usize,
 }
 
 impl<'r> ExecEngine<'r> {
@@ -223,6 +238,8 @@ impl<'r> ExecEngine<'r> {
             sims: std::array::from_fn(|_| None),
             fidelity: FidelityReport::default(),
             lowered: 0,
+            triggers: 0,
+            sims_built: 0,
         }
     }
 
@@ -231,11 +248,56 @@ impl<'r> ExecEngine<'r> {
         self.backend
     }
 
-    /// Invocations that actually executed as MMIO programs (lowered and
-    /// run on an `IlaSim`) so far — useful to assert MMIO fidelity really
-    /// engaged rather than silently falling back.
+    /// True when this engine dispatches into `registry`'s model set (the
+    /// compatibility check behind the `*_with` run APIs: a simulator
+    /// cache is only valid for the registry that built it).
+    pub fn serves(&self, registry: &AcceleratorRegistry) -> bool {
+        std::ptr::eq(self.registry, registry)
+    }
+
+    /// Accelerator *ops* that actually executed as MMIO programs
+    /// (lowered and run on an `IlaSim`) so far — useful to assert MMIO
+    /// fidelity really engaged rather than silently falling back.
     pub fn lowered_invocations(&self) -> usize {
         self.lowered
+    }
+
+    /// Architecture-level trigger invocations executed across all
+    /// lowered programs — greater than [`Self::lowered_invocations`]
+    /// exactly when the driver tiled ops into multi-trigger programs.
+    pub fn lowered_triggers(&self) -> usize {
+        self.triggers
+    }
+
+    /// Per-target simulators constructed so far (at most one per target
+    /// for the engine's lifetime — the counter a caller-held engine
+    /// keeps flat where per-call engines rebuild).
+    pub fn sims_built(&self) -> usize {
+        self.sims_built
+    }
+
+    /// Simulator resets performed (one dirty-region reset per lowered
+    /// program).
+    pub fn resets(&self) -> u64 {
+        self.sims().map(|s| s.resets).sum()
+    }
+
+    /// Memory bytes restored by those resets. Compare against
+    /// [`Self::resets`] × [`Self::state_bytes`] — what the same run
+    /// would have cloned under full per-invocation resets — to quantify
+    /// the dirty-tracking savings.
+    pub fn bytes_cleared(&self) -> u64 {
+        self.sims().map(|s| s.bytes_cleared).sum()
+    }
+
+    /// Total architectural memory bytes of the built simulators (the
+    /// per-reset cost of the full-clone baseline).
+    pub fn state_bytes(&self) -> u64 {
+        self.sims().map(|s| s.state_bytes()).sum()
+    }
+
+    fn sims(&self) -> impl Iterator<Item = &IlaSim> {
+        self.sims.iter().flatten()
     }
 
     /// Take the accumulated fidelity report, leaving an empty one.
@@ -280,9 +342,10 @@ impl<'r> ExecEngine<'r> {
         match self.backend {
             ExecBackend::Functional => Ok(accel.exec_op(op, inputs)),
             ExecBackend::IlaMmio => match accel.lower(op, inputs) {
-                Some(inv) => self.run_lowered(accel, op, &inv).map(Some),
-                // not lowerable (data movement, device-capacity limits):
-                // the tensor path keeps the application running end to end
+                Some(prog) => self.run_lowered(accel, op, &prog).map(Some),
+                // not lowerable (data movement, shapes that cannot be
+                // staged even tile-wise): the tensor path keeps the
+                // application running end to end
                 None => Ok(accel.exec_op(op, inputs)),
             },
             ExecBackend::CrossCheck => {
@@ -291,8 +354,8 @@ impl<'r> ExecEngine<'r> {
                     None => return Ok(None),
                 };
                 match accel.lower(op, inputs) {
-                    Some(inv) => {
-                        let mmio = self.run_lowered(accel, op, &inv)?;
+                    Some(prog) => {
+                        let mmio = self.run_lowered(accel, op, &prog)?;
                         self.fidelity.record(op, accel.target(), &functional, &mmio);
                     }
                     // not lowerable: count it so a "clean" report cannot
@@ -304,22 +367,26 @@ impl<'r> ExecEngine<'r> {
         }
     }
 
-    /// Play a lowered invocation on the (reset) per-target simulator and
-    /// decode the result.
+    /// Play a lowered program on the per-target simulator — one
+    /// dirty-region reset up front, then its invocations run on shared
+    /// device state (tiles reuse staged operands) — and decode/stitch
+    /// the result.
     fn run_lowered(
         &mut self,
         accel: &dyn Accelerator,
         op: &Op,
-        inv: &LoweredInvocation,
+        prog: &LoweredProgram,
     ) -> Result<Tensor, EvalError> {
         let idx = accel.target().index();
         if self.sims[idx].is_none() {
             self.sims[idx] = Some(IlaSim::new(accel.build_ila()));
+            self.sims_built += 1;
         }
         let sim = self.sims[idx].as_mut().unwrap();
-        sim.reset();
+        sim.reset_dirty();
         self.lowered += 1;
-        codegen::execute_lowered(inv, sim)
+        self.triggers += prog.invocations.len();
+        codegen::execute_program(prog, sim)
             .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))
     }
 }

@@ -37,7 +37,12 @@
 //! ([`SessionBuilder::backend`]): the same compiled program can run on
 //! the tensor fast path, at MMIO fidelity on the ILA simulators, or in
 //! [`ExecBackend::CrossCheck`] mode where every invocation runs both
-//! ways and bit-level disagreements accumulate in a [`FidelityReport`].
+//! ways and bit-level disagreements accumulate in a [`FidelityReport`]
+//! — the fidelity ladder (`docs/ARCHITECTURE.md`). Under the MMIO
+//! backends, oversized layers execute as driver-tiled multi-trigger
+//! programs, and callers can hold one [`ExecEngine`] across calls
+//! ([`CompiledProgram::engine`] + the `*_with` APIs) so repeated
+//! single-point evaluations skip per-call simulator construction.
 
 pub mod backend;
 pub mod bindings;
@@ -71,6 +76,20 @@ pub enum DesignRev {
 }
 
 /// Configuration builder for a [`Session`].
+///
+/// ```
+/// use d2a::ir::Target;
+/// use d2a::session::{DesignRev, ExecBackend, Session};
+///
+/// let session = Session::builder()
+///     .targets(&[Target::FlexAsr, Target::Hlscnn])
+///     .design_rev(DesignRev::Updated)
+///     .backend(ExecBackend::Functional)
+///     .workers(4)
+///     .build();
+/// assert_eq!(session.workers(), 4);
+/// assert_eq!(session.backend(), ExecBackend::Functional);
+/// ```
 #[derive(Debug, Clone)]
 pub struct SessionBuilder {
     targets: Vec<Target>,
@@ -80,6 +99,7 @@ pub struct SessionBuilder {
     workers: usize,
     track_errors: bool,
     backend: ExecBackend,
+    extended: bool,
 }
 
 impl Default for SessionBuilder {
@@ -101,6 +121,7 @@ impl SessionBuilder {
             workers: 1,
             track_errors: false,
             backend: ExecBackend::Functional,
+            extended: false,
         }
     }
 
@@ -142,6 +163,14 @@ impl SessionBuilder {
         self
     }
 
+    /// Also saturate with the extended FlexASR rule set (2-D pool
+    /// decomposition + store/load cancellation — the §5.1 / Fig. 7
+    /// data-movement rules) on top of the per-target mapping rules.
+    pub fn extended_rules(mut self, on: bool) -> Self {
+        self.extended = on;
+        self
+    }
+
     /// Select the execution backend for accelerator invocations.
     ///
     /// * [`ExecBackend::Functional`] (default) — tensor fast path; use
@@ -168,6 +197,7 @@ impl SessionBuilder {
             workers: self.workers,
             track_errors: self.track_errors,
             backend: self.backend,
+            extended: self.extended,
         }
     }
 }
@@ -183,6 +213,7 @@ pub struct Session {
     workers: usize,
     track_errors: bool,
     backend: ExecBackend,
+    extended: bool,
 }
 
 impl Session {
@@ -228,13 +259,27 @@ impl Session {
         self.finish(res)
     }
 
-    /// Compile a bare IR expression under the session policy.
+    /// Compile a bare IR expression under the session policy (including
+    /// the extended FlexASR data-movement rules when the session enabled
+    /// [`SessionBuilder::extended_rules`]).
     pub fn compile_expr(
         &self,
         expr: &RecExpr,
         shapes: &HashMap<String, Shape>,
     ) -> CompiledProgram {
-        let res = compiler::compile(expr, shapes, &self.targets, self.mode, self.limits.clone());
+        let extra = if self.extended && self.targets.contains(&Target::FlexAsr) {
+            crate::rewrites::accel::flexasr_extended_rules()
+        } else {
+            Vec::new()
+        };
+        let res = compiler::compile_with_extra(
+            expr,
+            shapes,
+            &self.targets,
+            self.mode,
+            self.limits.clone(),
+            extra,
+        );
         self.finish(res)
     }
 
@@ -423,8 +468,11 @@ pub struct SweepSpec<'a> {
 /// Merged result of a (possibly multi-worker) classification sweep.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Data points evaluated.
     pub n: usize,
+    /// Correct classifications of the f32 reference.
     pub ref_correct: usize,
+    /// Correct classifications under accelerator numerics.
     pub acc_correct: usize,
     /// Wall-clock duration of the whole sweep.
     pub elapsed: Duration,
@@ -433,6 +481,7 @@ pub struct SweepReport {
     /// `n` (the seed behaviour) under-reported the Table 4 per-point sim
     /// time by about that factor.
     pub sim_time: Duration,
+    /// Worker threads used.
     pub workers: usize,
     /// Accelerated evaluations that *failed* (e.g. an MMIO engine fault
     /// under [`ExecBackend::IlaMmio`]); these points count as
@@ -445,10 +494,12 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
+    /// Reference classification accuracy.
     pub fn ref_accuracy(&self) -> f32 {
         self.ref_correct as f32 / self.n as f32
     }
 
+    /// Accelerated classification accuracy.
     pub fn acc_accuracy(&self) -> f32 {
         self.acc_correct as f32 / self.n as f32
     }
@@ -499,9 +550,61 @@ impl CompiledProgram {
         self.backend
     }
 
-    /// A fresh per-worker execution engine for this handle's backend.
-    fn engine(&self) -> ExecEngine<'_> {
+    /// A fresh execution engine for this handle's backend, to be **held
+    /// by the caller** across [`Self::run_with`] /
+    /// [`Self::run_traced_with`] / [`Self::cosim_with`] calls.
+    ///
+    /// The per-call convenience APIs ([`Self::run`] and friends) build a
+    /// throwaway engine each time — which, under the MMIO backends,
+    /// re-instantiates the per-target ILA simulators (a ~0.3 MB
+    /// initial-state clone for FlexASR) on every single-point
+    /// evaluation. A persistent engine pays that once: simulators are
+    /// built on first use, dirty-region reset between invocations, and
+    /// reused for the engine's lifetime.
+    ///
+    /// ```
+    /// use d2a::ir::{GraphBuilder, Op, Target};
+    /// use d2a::session::{Bindings, ExecBackend, Session};
+    /// use d2a::tensor::Tensor;
+    ///
+    /// // an already-mapped accelerator op (attach() skips saturation)
+    /// let mut g = GraphBuilder::new();
+    /// let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    /// g.expr.add(Op::FlexLinear, vec![x, w, b]);
+    /// let session = Session::builder()
+    ///     .targets(&[Target::FlexAsr])
+    ///     .backend(ExecBackend::IlaMmio)
+    ///     .build();
+    /// let program = session.attach(g.finish());
+    /// let bindings = Bindings::new()
+    ///     .with("x", Tensor::ones(&[1, 8]))
+    ///     .with("w", Tensor::ones(&[4, 8]))
+    ///     .with("b", Tensor::ones(&[4]));
+    ///
+    /// let mut engine = program.engine();
+    /// let first = program.run_with(&mut engine, &bindings).unwrap();
+    /// let second = program.run_with(&mut engine, &bindings).unwrap();
+    /// assert_eq!(first, second);
+    /// assert_eq!(engine.sims_built(), 1); // one simulator, two MMIO runs
+    /// assert_eq!(engine.lowered_invocations(), 2);
+    /// ```
+    pub fn engine(&self) -> ExecEngine<'_> {
         ExecEngine::new(&self.registry, self.backend)
+    }
+
+    /// Guard for the `*_with` APIs: the engine must dispatch into this
+    /// handle's registry (its simulator cache is only valid for the
+    /// model instances that built it).
+    fn check_engine(&self, engine: &ExecEngine<'_>) -> Result<(), EvalError> {
+        if engine.serves(&self.registry) {
+            Ok(())
+        } else {
+            Err(EvalError::Input(
+                "execution engine belongs to a different session/registry; \
+                 obtain it from this program's `engine()`"
+                    .into(),
+            ))
+        }
     }
 
     /// Compilation statistics (None for [`Session::attach`] handles).
@@ -534,10 +637,53 @@ impl CompiledProgram {
     ///
     /// This tensor-only API does not surface the
     /// [`ExecBackend::CrossCheck`] fidelity report; use
-    /// [`Self::run_traced`] when the cross-check outcome matters.
+    /// [`Self::run_traced`] when the cross-check outcome matters, and a
+    /// caller-held [`Self::engine`] + [`Self::run_with`] for repeated
+    /// single-point MMIO evaluations.
+    ///
+    /// ```
+    /// use d2a::ir::{GraphBuilder, Target};
+    /// use d2a::session::{Bindings, Session};
+    /// use d2a::tensor::Tensor;
+    ///
+    /// let mut g = GraphBuilder::new();
+    /// let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    /// g.linear(x, w, b);
+    /// let shapes = [
+    ///     ("x".to_string(), vec![1usize, 8]),
+    ///     ("w".to_string(), vec![4, 8]),
+    ///     ("b".to_string(), vec![4]),
+    /// ]
+    /// .into_iter()
+    /// .collect();
+    /// let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    /// let program = session.compile_expr(&g.finish(), &shapes);
+    /// assert_eq!(program.invocations(Target::FlexAsr), 1);
+    ///
+    /// let out = program
+    ///     .run(&Bindings::new()
+    ///         .with("x", Tensor::ones(&[1, 8]))
+    ///         .with("w", Tensor::ones(&[4, 8]))
+    ///         .with("b", Tensor::ones(&[4])))
+    ///     .unwrap();
+    /// assert_eq!(out.shape, vec![1, 4]);
+    /// ```
     pub fn run(&self, bindings: &Bindings) -> Result<Tensor, EvalError> {
         let mut engine = self.engine();
-        self.exec(bindings.env(), &mut engine, None).map(|(t, _)| t)
+        self.run_with(&mut engine, bindings)
+    }
+
+    /// [`Self::run`] on a caller-held engine (see [`Self::engine`]):
+    /// repeated single-point evaluations skip per-call simulator
+    /// construction, and under [`ExecBackend::CrossCheck`] the fidelity
+    /// report keeps accumulating in the engine across calls.
+    pub fn run_with(
+        &self,
+        engine: &mut ExecEngine<'_>,
+        bindings: &Bindings,
+    ) -> Result<Tensor, EvalError> {
+        self.check_engine(engine)?;
+        self.exec(bindings.env(), engine, None).map(|(t, _)| t)
     }
 
     /// Evaluate with accelerator numerics, returning the invocation
@@ -546,13 +692,26 @@ impl CompiledProgram {
     /// the f32 reference output is not needed.
     pub fn run_traced(&self, bindings: &Bindings) -> Result<RunTrace, EvalError> {
         let mut engine = self.engine();
+        self.run_traced_with(&mut engine, bindings)
+    }
+
+    /// [`Self::run_traced`] on a caller-held engine. The trace reports
+    /// **this call's** MMIO invocation count and drains the fidelity
+    /// accumulated in the engine since it was last taken.
+    pub fn run_traced_with(
+        &self,
+        engine: &mut ExecEngine<'_>,
+        bindings: &Bindings,
+    ) -> Result<RunTrace, EvalError> {
+        self.check_engine(engine)?;
+        let mmio_before = engine.lowered_invocations();
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
-        let (output, invocations) = self.exec(bindings.env(), &mut engine, errors)?;
+        let (output, invocations) = self.exec(bindings.env(), engine, errors)?;
         Ok(RunTrace {
             output,
             invocations,
-            mmio_invocations: engine.lowered_invocations(),
+            mmio_invocations: engine.lowered_invocations() - mmio_before,
             inv_errors,
             fidelity: engine.take_fidelity(),
         })
@@ -604,11 +763,21 @@ impl CompiledProgram {
     /// numerics, with per-invocation error tracking when the session
     /// opted in.
     pub fn cosim(&self, bindings: &Bindings) -> Result<CosimReport, EvalError> {
-        let reference = interp::eval(&self.expr, bindings.env())?;
         let mut engine = self.engine();
+        self.cosim_with(&mut engine, bindings)
+    }
+
+    /// [`Self::cosim`] on a caller-held engine (see [`Self::engine`]).
+    pub fn cosim_with(
+        &self,
+        engine: &mut ExecEngine<'_>,
+        bindings: &Bindings,
+    ) -> Result<CosimReport, EvalError> {
+        self.check_engine(engine)?;
+        let reference = interp::eval(&self.expr, bindings.env())?;
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
-        let (accelerated, invocations) = self.exec(bindings.env(), &mut engine, errors)?;
+        let (accelerated, invocations) = self.exec(bindings.env(), engine, errors)?;
         let rel_error = accelerated.rel_error(&reference);
         Ok(CosimReport {
             reference,

@@ -26,14 +26,17 @@ pub enum BvTerm {
 }
 
 impl BvTerm {
+    /// A named input variable.
     pub fn var(name: impl Into<String>) -> Rc<BvTerm> {
         Rc::new(BvTerm::Var(name.into()))
     }
 
+    /// Unsigned maximum of two terms.
     pub fn max(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
         Rc::new(BvTerm::Max(a, b))
     }
 
+    /// Unsigned minimum of two terms.
     pub fn min(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
         Rc::new(BvTerm::Min(a, b))
     }
@@ -51,7 +54,9 @@ impl BvTerm {
 
 /// Bit-blasting context: CNF builder over a [`Solver`].
 pub struct BitBlaster {
+    /// The underlying CDCL solver.
     pub solver: Solver,
+    /// Bit-vector width in bits.
     pub width: u32,
     /// input variable name -> bit literals (LSB first)
     inputs: HashMap<String, Vec<Lit>>,
@@ -62,6 +67,7 @@ pub struct BitBlaster {
 }
 
 impl BitBlaster {
+    /// Fresh context for `width`-bit terms.
     pub fn new(width: u32) -> Self {
         let mut solver = Solver::new();
         let t = solver.new_var();

@@ -14,22 +14,27 @@ pub type Var = u32;
 pub struct Lit(pub u32);
 
 impl Lit {
+    /// Positive literal of a variable.
     pub fn pos(v: Var) -> Lit {
         Lit(v << 1)
     }
 
+    /// Negated literal of a variable.
     pub fn neg(v: Var) -> Lit {
         Lit((v << 1) | 1)
     }
 
+    /// The underlying variable.
     pub fn var(self) -> Var {
         self.0 >> 1
     }
 
+    /// True when negated.
     pub fn sign(self) -> bool {
         self.0 & 1 == 1
     }
 
+    /// The opposite literal.
     pub fn negate(self) -> Lit {
         Lit(self.0 ^ 1)
     }
@@ -75,8 +80,11 @@ pub struct Solver {
     polarity: Vec<bool>,
     /// set when an empty clause is added
     unsat_on_add: bool,
+    /// Conflicts encountered (proof effort metric).
     pub stats_conflicts: u64,
+    /// Unit propagations performed.
     pub stats_propagations: u64,
+    /// Branching decisions taken.
     pub stats_decisions: u64,
 }
 
@@ -87,6 +95,7 @@ impl Default for Solver {
 }
 
 impl Solver {
+    /// An empty solver.
     pub fn new() -> Self {
         Solver {
             clauses: Vec::new(),
@@ -120,10 +129,12 @@ impl Solver {
         v
     }
 
+    /// Number of allocated variables.
     pub fn num_vars(&self) -> usize {
         self.assign.len()
     }
 
+    /// Number of stored clauses.
     pub fn num_clauses(&self) -> usize {
         self.clauses.len()
     }

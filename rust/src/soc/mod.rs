@@ -16,8 +16,11 @@ use std::ops::Range;
 
 /// One device on the bus: an ILA simulator claiming address ranges.
 pub struct BusDevice {
+    /// Device name (used by driver-side result read-out).
     pub name: String,
+    /// Claimed MMIO address ranges.
     pub ranges: Vec<Range<u64>>,
+    /// The device's ILA simulator.
     pub sim: IlaSim,
 }
 
@@ -42,6 +45,7 @@ pub struct Bus {
 }
 
 impl Bus {
+    /// An empty bus with no devices attached.
     pub fn new() -> Self {
         Bus { devices: Vec::new() }
     }

@@ -17,7 +17,9 @@ pub type Shape = Vec<usize>;
 /// A dense, row-major f32 tensor.
 #[derive(Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes (row-major).
     pub shape: Shape,
+    /// Elements, row-major contiguous.
     pub data: Vec<f32>,
 }
 

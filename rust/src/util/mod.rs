@@ -1,2 +1,4 @@
+//! Small self-contained utilities (deterministic RNG).
+
 pub mod rng;
 pub use rng::Rng;

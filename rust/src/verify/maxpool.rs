@@ -11,7 +11,9 @@ pub const BANKS: usize = 16;
 /// Verification outcome with timing and query statistics.
 #[derive(Debug, Clone)]
 pub struct VerifyOutcome {
+    /// Equivalence verdict.
     pub result: EquivResult,
+    /// Wall-clock time the check took.
     pub elapsed: Duration,
     /// number of SAT queries discharged (1 for BMC; tiles for CHC)
     pub queries: usize,

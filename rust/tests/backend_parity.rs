@@ -88,33 +88,120 @@ fn table1_resmlp_end_to_end_mmio_bit_identical() {
     assert_eq!(trace.mmio_invocations, trace.invocations, "all layers fit the device");
 }
 
-/// The Table 1 LSTM-WLM end-to-end: bit-identical across backends. Its
-/// fused [2600 x 1300] gate matrix exceeds the modeled 256 KiB weight
-/// buffer, so the engine's documented capacity fallback keeps the app
-/// running; the LSTM ILA instruction itself is exercised at MMIO
-/// fidelity by the (Table 4) lite mirror below and by the op-level
-/// property test.
+/// The Table 1 LSTM-WLM end-to-end at full size: the fused
+/// [2600 x 1300] gate matrix and the [33278 x 650] decoder both exceed
+/// the modeled device buffers, so the driver **tiles** them into
+/// multi-trigger MMIO programs (per-step gate-row tiles for the LSTM,
+/// weight-row tiles for the decoder) — no tensor-path fallback anywhere —
+/// and CrossCheck must stay bit-exact on BOTH design revisions (the
+/// FlexASR revisions differ in AdaptivFloat exponent width, not in the
+/// tiling contract).
 #[test]
-fn table1_lstm_wlm_end_to_end_bit_identical() {
+fn table1_lstm_wlm_full_gates_tiled_mmio_crosscheck_both_revs() {
     let app = lstm_wlm();
-    let functional = Session::builder()
+    let compile = Session::builder()
         .targets(&[Target::FlexAsr])
         .matching(Matching::Flexible)
         .limits(limits())
         .build();
-    let program = functional.compile(&app);
-    let mmio = Session::builder()
-        .targets(&[Target::FlexAsr])
-        .backend(ExecBackend::IlaMmio)
-        .build()
-        .attach(program.expr().clone());
+    let compiled = compile.compile(&app);
+    assert!(compiled.invocations(Target::FlexAsr) > 0, "LSTM-WLM must offload");
     let mut rng = Rng::new(102);
     let b = random_bindings(&app, &mut rng);
-    assert_eq!(
-        program.run(&b).unwrap(),
-        mmio.run(&b).unwrap(),
-        "LSTM-WLM: MMIO diverges from functional"
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .design_rev(rev)
+            .backend(ExecBackend::CrossCheck)
+            .build();
+        let program = session.attach(compiled.expr().clone());
+        let mut engine = program.engine();
+        let trace = program.run_traced_with(&mut engine, &b).unwrap();
+        assert!(trace.fidelity.total_checked() > 0, "[{rev:?}] nothing checked");
+        assert_eq!(
+            trace.fidelity.total_unlowered(),
+            0,
+            "[{rev:?}] the full gate matrix must run as MMIO, not fall back"
+        );
+        assert!(
+            trace.fidelity.is_clean(),
+            "[{rev:?}] tiled MMIO diverges from functional:\n{}",
+            trace.fidelity
+        );
+        assert!(
+            engine.lowered_triggers() > engine.lowered_invocations(),
+            "[{rev:?}] oversized layers must tile into multiple \
+             architecture-level triggers ({} ops, {} triggers)",
+            engine.lowered_invocations(),
+            engine.lowered_triggers()
+        );
+    }
+}
+
+/// Tile-boundary edge cases for every tiled lowering: uneven last tiles,
+/// exact-multiple tiling, GB-bound (not PE-bound) linear tiling, tiled
+/// LSTM at small shapes, HLSCNN output-channel tiles, and chunked VTA
+/// adds — all bit-exact against the tensor fast path.
+#[test]
+fn tiled_lowerings_tile_boundaries_bit_exact() {
+    use d2a::accel::Accelerator;
+    let reg = AcceleratorRegistry::for_rev(DesignRev::Updated);
+    let mut rng = Rng::new(707);
+
+    // FlexASR linear: (uneven last tile), (exact multiple of the tile
+    // cap), (GB-bound tile cap with a big staged input)
+    for (n, k, m) in [(2usize, 700usize, 1100usize), (1, 512, 1022), (100, 500, 300)] {
+        let x = Tensor::randn(&[n, k], &mut rng, 1.0);
+        let w = Tensor::randn(&[m, k], &mut rng, 0.3);
+        let b = Tensor::randn(&[m], &mut rng, 0.1);
+        let fa = reg.lookup(Target::FlexAsr).unwrap();
+        let prog = fa.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        assert!(prog.is_tiled(), "{n}x{k}->{m} should exceed one trigger");
+        assert_op_parity(
+            &reg,
+            &Op::FlexLinear,
+            &[&x, &w, &b],
+            &format!("tiled FlexLinear {n}x{k}->{m} ({} tiles)", prog.invocations.len()),
+        );
+    }
+
+    // FlexASR LSTM: gate matrices just past the PE buffer -> 2 row tiles
+    // per step
+    let (t, e, h) = (3usize, 200usize, 200usize);
+    let xs = Tensor::randn(&[t, 1, e], &mut rng, 1.0);
+    let wi = Tensor::randn(&[4 * h, e], &mut rng, 0.3);
+    let wh = Tensor::randn(&[4 * h, h], &mut rng, 0.3);
+    let bg = Tensor::randn(&[4 * h], &mut rng, 0.1);
+    let fa = reg.lookup(Target::FlexAsr).unwrap();
+    let prog = fa.lower(&Op::FlexLstm { steps: t }, &[&xs, &wi, &wh, &bg]).unwrap();
+    assert!(prog.is_tiled(), "LSTM gates should not fit one trigger");
+    assert_op_parity(
+        &reg,
+        &Op::FlexLstm { steps: t },
+        &[&xs, &wi, &wh, &bg],
+        &format!("tiled FlexLstm t{t} e{e} h{h} ({} invocations)", prog.invocations.len()),
     );
+
+    // HLSCNN conv2d: 200 output channels against a 163-channel output
+    // scratchpad cap -> 2 channel tiles
+    let xc = Tensor::randn(&[1, 8, 20, 20], &mut rng, 1.0);
+    let wc = Tensor::randn(&[200, 8, 3, 3], &mut rng, 0.2);
+    let conv = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
+    let hl = reg.lookup(Target::Hlscnn).unwrap();
+    let prog = hl.lower(&conv, &[&xc, &wc]).unwrap();
+    assert!(prog.is_tiled(), "200 output channels should tile");
+    assert_op_parity(&reg, &conv, &[&xc, &wc], "tiled HlscnnConv2d o200");
+
+    // VTA add: 70000 elements against the 16384-lane chunk cap (the
+    // int32-staged right operand is bounded by the 64 KiB weight
+    // scratchpad) -> 5 chunks, saturating int8 semantics preserved
+    let a = Tensor::randn(&[70_000], &mut rng, 1.0);
+    let b2 = Tensor::randn(&[70_000], &mut rng, 1.0);
+    let vta = reg.lookup(Target::Vta).unwrap();
+    let prog = vta.lower(&Op::VtaAdd, &[&a, &b2]).unwrap();
+    assert!(prog.is_tiled(), "70000 lanes should chunk");
+    assert_eq!(prog.invocations.len(), 70_000usize.div_ceil(16_384));
+    assert_op_parity(&reg, &Op::VtaAdd, &[&a, &b2], "chunked VtaAdd 70000");
 }
 
 /// The LSTM-WLM lite mirror's whole-layer LSTM op runs as ONE MMIO
@@ -216,6 +303,17 @@ fn prop_functional_equals_ila_mmio_random_shapes() {
                 &Op::VtaGemm,
                 &[&vx, &vw],
                 &format!("[{rev:?} r{round}] VtaGemm {vn}x{vk}->{vm}"),
+            );
+
+            // VTA ALU add (driver-staged int32 operands, saturating)
+            let (an2, am2) = (1 + rng.below(8), 1 + rng.below(24));
+            let va = Tensor::randn(&[an2, am2], &mut rng, 2.0);
+            let vb = Tensor::randn(&[an2, am2], &mut rng, 2.0);
+            assert_op_parity(
+                &reg,
+                &Op::VtaAdd,
+                &[&va, &vb],
+                &format!("[{rev:?} r{round}] VtaAdd {an2}x{am2}"),
             );
 
             // HLSCNN conv: bit-exact on the updated design; the original

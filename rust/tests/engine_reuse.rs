@@ -1,0 +1,119 @@
+//! Persistent execution engines: a caller-held [`ExecEngine`] reused
+//! across `run_with`/`run_traced_with`/`cosim_with` calls must produce
+//! results bit-identical to per-call throwaway engines while doing
+//! strictly less simulator setup work — one simulator build for its
+//! lifetime and dirty-region resets (bytes restored ≪ full-state
+//! clones). The counters asserted here are the ones the
+//! `perf_hotpath` engine-reuse bench section reports.
+
+use d2a::ir::{GraphBuilder, Target};
+use d2a::session::{Bindings, ExecBackend, Session};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+
+fn linear_program(session: &Session) -> d2a::CompiledProgram {
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    g.linear(x, w, b);
+    session.attach(g.finish())
+}
+
+fn bindings(rng: &mut Rng) -> Bindings {
+    Bindings::new()
+        .with("x", Tensor::randn(&[8, 64], rng, 1.0))
+        .with("w", Tensor::randn(&[32, 64], rng, 0.3))
+        .with("b", Tensor::randn(&[32], rng, 0.1))
+}
+
+#[test]
+fn reused_engine_is_deterministic_and_resets_less() {
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let program = linear_program(&session);
+    let mut rng = Rng::new(41);
+    let points: Vec<Bindings> = (0..6).map(|_| bindings(&mut rng)).collect();
+
+    // baseline: a fresh engine per call (what `run` does internally)
+    let fresh: Vec<Tensor> =
+        points.iter().map(|b| program.run(b).unwrap()).collect();
+
+    // persistent engine across all calls
+    let mut engine = program.engine();
+    for (i, b) in points.iter().enumerate() {
+        let out = program.run_with(&mut engine, b).unwrap();
+        assert_eq!(out, fresh[i], "reused engine diverged at point {i}");
+    }
+
+    // one simulator built for the engine's whole lifetime...
+    assert_eq!(engine.sims_built(), 1, "one FlexASR simulator, many runs");
+    // ...one dirty reset per lowered op...
+    assert_eq!(engine.resets(), points.len() as u64);
+    assert_eq!(engine.lowered_invocations(), points.len());
+    // ...and the dirty resets restored strictly less state than the
+    // full-clone-per-invocation baseline would have
+    let full_clone_equivalent = engine.resets() * engine.state_bytes();
+    assert!(
+        engine.bytes_cleared() < full_clone_equivalent,
+        "dirty resets ({} B) must beat full clones ({} B)",
+        engine.bytes_cleared(),
+        full_clone_equivalent
+    );
+    // the reset counter really counts resets: one more run, one more
+    let b = bindings(&mut rng);
+    program.run_with(&mut engine, &b).unwrap();
+    assert_eq!(engine.resets(), points.len() as u64 + 1);
+}
+
+#[test]
+fn reused_engine_reports_per_call_traces() {
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::CrossCheck)
+        .build();
+    let program = linear_program(&session);
+    let mut rng = Rng::new(42);
+    let mut engine = program.engine();
+    for _ in 0..3 {
+        let trace = program.run_traced_with(&mut engine, &bindings(&mut rng)).unwrap();
+        // per-call deltas, not engine-lifetime totals
+        assert_eq!(trace.invocations, 1);
+        assert_eq!(trace.mmio_invocations, 1);
+        assert_eq!(trace.fidelity.total_checked(), 1);
+        assert!(trace.fidelity.is_clean(), "{}", trace.fidelity);
+    }
+    assert_eq!(engine.lowered_invocations(), 3, "engine totals accumulate");
+}
+
+#[test]
+fn engine_from_another_session_is_rejected() {
+    let mmio = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let other = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let program = linear_program(&mmio);
+    let foreign_program = linear_program(&other);
+    let mut foreign_engine = foreign_program.engine();
+    let mut rng = Rng::new(43);
+    let err = program.run_with(&mut foreign_engine, &bindings(&mut rng));
+    assert!(err.is_err(), "an engine bound to another registry must be refused");
+    // cosim_with enforces the same guard
+    assert!(program.cosim_with(&mut foreign_engine, &bindings(&mut rng)).is_err());
+}
+
+#[test]
+fn functional_engines_build_no_simulators() {
+    let session = Session::builder().targets(&[Target::FlexAsr]).build();
+    let program = linear_program(&session);
+    let mut engine = program.engine();
+    let mut rng = Rng::new(44);
+    program.run_with(&mut engine, &bindings(&mut rng)).unwrap();
+    assert_eq!(engine.sims_built(), 0);
+    assert_eq!(engine.resets(), 0);
+    assert_eq!(engine.state_bytes(), 0);
+}

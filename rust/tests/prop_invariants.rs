@@ -408,11 +408,11 @@ fn prop_maxpool_exact_and_codegen_routable() {
         let x = fa.quant(&Tensor::randn(&[n, k], &mut rng, 1.0));
         let w = fa.quant(&Tensor::randn(&[m, k], &mut rng, 0.3));
         let b = fa.quant(&Tensor::randn(&[m], &mut rng, 0.1));
-        let inv = {
+        let prog = {
             use d2a::accel::Accelerator;
             fa.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap()
         };
-        let out = drv.invoke(&inv).unwrap();
+        let out = drv.invoke_program(&prog).unwrap();
         assert_eq!(out.shape, vec![n, m]);
     }
 }
