@@ -77,7 +77,8 @@ fn main() -> anyhow::Result<()> {
     let inv = &prog.invocations[0];
     println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);
     println!("tail of the MMIO stream (Fig. 5d):");
-    for cmd in inv.cmds.iter().rev().take(7).rev() {
+    let cmds: Vec<_> = inv.cmds().collect();
+    for cmd in cmds.iter().rev().take(7).rev() {
         println!("  {cmd}");
     }
 

@@ -15,7 +15,15 @@
 //! record regresses beyond tolerance (candidates may not grow, nor
 //! matches drift, by more than 25% + 64). Baseline records with a `-1`
 //! sentinel are unprimed: the gate passes and prints the priming
-//! instruction (copy the emitted file over the baseline and commit).
+//! instruction.
+//!
+//! **Priming**: `-- --prime BENCH_matching_baseline.json` writes the
+//! counters just measured into the baseline file in the flat baseline
+//! format (replacing `-1` sentinels or stale numbers) — one command
+//! instead of the manual copy-and-trim. CI uses it to emit a
+//! ready-to-commit `BENCH_matching_baseline.primed.json` artifact
+//! whenever the checked-in baseline is still sentinel-valued, so the
+//! gate stops being vacuous as soon as that artifact lands in the repo.
 
 use d2a::apps::table1::all_apps;
 use d2a::compiler::compile_app;
@@ -137,15 +145,40 @@ fn check_against_baseline(
     }
 }
 
+/// Serialize counters in the flat baseline format (app/mode/candidates/
+/// matches only — the stable subset the gate compares).
+fn write_baseline(
+    path: &str,
+    counters: &[(String, String, i64, i64)],
+) -> std::io::Result<()> {
+    let rows: Vec<String> = counters
+        .iter()
+        .map(|(app, mode, c, m)| {
+            format!(
+                "  {{\"app\": \"{app}\", \"mode\": \"{mode}\", \
+                 \"candidates\": {c}, \"matches\": {m}}}"
+            )
+        })
+        .collect();
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n")))?;
+    println!("primed {path} with {} record(s)", counters.len());
+    Ok(())
+}
+
 fn main() -> std::io::Result<()> {
     let args: Vec<String> = std::env::args().collect();
-    let baseline = args
-        .windows(2)
-        .find(|w| w[0] == "--check")
-        .map(|w| w[1].clone());
-    // a dangling `--check` with no path would silently skip the gate
+    let flag_path = |flag: &str| -> Option<String> {
+        args.windows(2).find(|w| w[0] == flag).map(|w| w[1].clone())
+    };
+    let baseline = flag_path("--check");
+    // a dangling `--check`/`--prime` with no path would silently skip
     if baseline.is_none() && args.iter().any(|a| a == "--check") {
         eprintln!("--check requires a baseline path argument");
+        std::process::exit(1);
+    }
+    let prime = flag_path("--prime");
+    if prime.is_none() && args.iter().any(|a| a == "--prime") {
+        eprintln!("--prime requires a baseline path argument");
         std::process::exit(1);
     }
 
@@ -204,6 +237,9 @@ fn main() -> std::io::Result<()> {
     std::fs::write(&out, json)?;
     println!("wrote {out}");
 
+    if let Some(path) = prime {
+        write_baseline(&path, &counters)?;
+    }
     if let Some(path) = baseline {
         if let Err(msg) = check_against_baseline(&counters, &path) {
             eprintln!("matching regression gate FAILED:\n{msg}");

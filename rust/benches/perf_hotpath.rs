@@ -78,6 +78,7 @@ fn main() {
 
     dispatch_benches(&mut rng);
     engine_reuse_benches(&mut rng);
+    operand_residency_benches(&mut rng);
 }
 
 /// E-matching: op-indexed search + backoff scheduling vs the full-scan
@@ -137,12 +138,14 @@ fn matching_benches() {
 /// full-clone-per-invocation baseline — the counters are reported so the
 /// reduction is visible in CI logs, not just asserted.
 fn engine_reuse_benches(rng: &mut Rng) {
-    use d2a::ir::{GraphBuilder, Target};
+    use d2a::ir::{GraphBuilder, Op, Target};
     use d2a::session::ExecBackend;
 
     let mut g = GraphBuilder::new();
     let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
-    g.linear(x, w, b);
+    // attach() skips saturation: add the already-mapped accelerator op
+    // (the host-level `g.linear` pattern would never lower)
+    g.expr.add(Op::FlexLinear, vec![x, w, b]);
     let session = Session::builder()
         .targets(&[Target::FlexAsr])
         .backend(ExecBackend::IlaMmio)
@@ -174,10 +177,115 @@ fn engine_reuse_benches(rng: &mut Rng) {
         full_clone,
         full_clone as f64 / per_invocation_cleared.max(1) as f64
     );
+    println!(
+        "engine-reuse: {} B streamed over {} invocations; {} resident \
+         burst(s) deduped, {} mirror recomputation(s) avoided",
+        engine.bytes_streamed(),
+        engine.lowered_invocations(),
+        engine.bursts_deduped(),
+        engine.mirror_hits()
+    );
     assert_eq!(engine.sims_built(), 1, "persistent engine must build once");
     assert!(
         engine.bytes_cleared() < engine.resets() * full_clone,
         "dirty resets must restore strictly fewer bytes than full clones"
+    );
+    // operand residency must engage on the repeated layer: the weight
+    // and bias bursts stay device-resident from the second call on
+    assert!(
+        engine.bursts_deduped() > 0,
+        "resident weight bursts must dedup across repeated calls"
+    );
+    // and it must strictly reduce streamed traffic: one more call on the
+    // persistent engine moves fewer bytes than a fresh engine's call
+    let before = engine.bytes_streamed();
+    let _ = program.run_with(&mut engine, &bindings).unwrap();
+    let resident_call = engine.bytes_streamed() - before;
+    let mut fresh = program.engine();
+    let _ = program.run_with(&mut fresh, &bindings).unwrap();
+    println!(
+        "engine-reuse: resident call streams {} B vs {} B fresh",
+        resident_call,
+        fresh.bytes_streamed()
+    );
+    assert!(
+        resident_call < fresh.bytes_streamed(),
+        "residency must strictly reduce streamed traffic: {} vs {}",
+        resident_call,
+        fresh.bytes_streamed()
+    );
+}
+
+/// Operand residency + lowering cache on the Table 1 LSTM-WLM gate
+/// matrix ([2600 x 1300], 35 timesteps) at MMIO fidelity. The tiled
+/// lowering stages each weight tile in the device weight DRAM **once
+/// per program** (not once per timestep — the PR-4 behaviour paid ~35x
+/// that), and under a persistent engine the staged tiles survive the
+/// between-call dirty reset, so a repeat call re-streams only the input
+/// sequence. The acceptance bar: repeat-call `bytes_streamed` is >10x
+/// below the fresh-engine baseline.
+fn operand_residency_benches(rng: &mut Rng) {
+    use d2a::ir::{GraphBuilder, Op, Target};
+    use d2a::session::ExecBackend;
+
+    let (t, e, h) = (35usize, 650usize, 650usize);
+    let mut g = GraphBuilder::new();
+    let (x, wi, wh, b) =
+        (g.var("x"), g.weight("wi"), g.weight("wh"), g.weight("b"));
+    g.expr.add(Op::FlexLstm { steps: t }, vec![x, wi, wh, b]);
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let program = session.attach(g.finish());
+    let bindings = Bindings::new()
+        .with("x", Tensor::randn(&[t, 1, e], rng, 1.0))
+        .with("wi", Tensor::randn(&[4 * h, e], rng, 0.3))
+        .with("wh", Tensor::randn(&[4 * h, h], rng, 0.3))
+        .with("b", Tensor::randn(&[4 * h], rng, 0.1));
+
+    // fresh-engine baseline: every call stages the whole tile set
+    let t0 = Instant::now();
+    let mut fresh_engine = program.engine();
+    let fresh =
+        program.run_traced_with(&mut fresh_engine, &bindings).unwrap();
+    let t_fresh = t0.elapsed();
+
+    // persistent engine: first call stages, repeat call rides residency
+    let mut engine = program.engine();
+    let first = program.run_traced_with(&mut engine, &bindings).unwrap();
+    let t1 = Instant::now();
+    let repeat = program.run_traced_with(&mut engine, &bindings).unwrap();
+    let t_repeat = t1.elapsed();
+    assert_eq!(repeat.output, fresh.output, "residency changed the result");
+
+    println!(
+        "lstm-wlm mmio: fresh engine          {:>10.1} ms  {:>12} B streamed",
+        t_fresh.as_secs_f64() * 1e3,
+        fresh.bytes_streamed
+    );
+    println!(
+        "lstm-wlm mmio: persistent, repeat    {:>10.1} ms  {:>12} B streamed \
+         ({} bursts deduped, {} mirror hit(s))",
+        t_repeat.as_secs_f64() * 1e3,
+        repeat.bytes_streamed,
+        repeat.bursts_deduped,
+        repeat.mirror_hits
+    );
+    println!(
+        "lstm-wlm mmio: residency cuts streamed traffic {:.1}x \
+         (first call already stages each weight tile once, not once per \
+         timestep)",
+        fresh.bytes_streamed as f64 / repeat.bytes_streamed.max(1) as f64
+    );
+    assert_eq!(first.bytes_streamed, fresh.bytes_streamed);
+    assert!(repeat.bursts_deduped > 0, "weight tiles must stay resident");
+    assert!(repeat.mirror_hits > 0, "the bias-schedule mirror must cache");
+    assert!(
+        fresh.bytes_streamed > 10 * repeat.bytes_streamed,
+        "residency must cut streamed bytes >10x: fresh {} vs repeat {}",
+        fresh.bytes_streamed,
+        repeat.bytes_streamed
     );
 }
 

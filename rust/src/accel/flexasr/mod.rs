@@ -16,7 +16,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -306,10 +306,12 @@ impl FlexAsr {
         let (wc, wb) = fx::encode_tensor(&fmt, w);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
 
+        let mut bursts = vec![
+            Burst::stage(fx::GB_BASE, &xc),
+            Burst::stage(fx::PE_WGT_BASE, &wc),
+            Burst::stage(fx::PE_WGT_BASE + bias_base, &bc),
+        ];
         let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &xc);
-        stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wc);
-        stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc);
         cmds.push(Cmd::write_u64(
             fx::CFG_LAYER_SIZING,
             (k as u64) | ((m as u64) << 16),
@@ -326,6 +328,7 @@ impl FlexAsr {
             (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
         ));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
+        bursts.push(Burst::control(cmds));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%input"])
@@ -342,7 +345,7 @@ impl FlexAsr {
         Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![n, m],
@@ -352,11 +355,19 @@ impl FlexAsr {
     }
 
     /// Row-tiled linear: the input matrix is staged once; every tile
-    /// streams its weight-row block + bias slice, reconfigures, triggers,
+    /// loads its weight-row block + bias slice, reconfigures, triggers,
     /// and reads its output column block back, with the output-port bias
     /// **forced** to the bias the whole-result store would have chosen
     /// (derived by a driver-side mirror of the accumulation) so all tiles
     /// share the fast path's output lattice bit-exactly.
+    ///
+    /// When the whole tile set fits the device's weight staging DRAM,
+    /// every tile is staged there **once** (one fingerprinted burst per
+    /// tile) and each trigger issues a cheap [`fx::DMA_CTRL`] copy into
+    /// the PE buffer — so repeated evaluations of the same layer under a
+    /// persistent engine re-stream nothing but the input. Tile sets
+    /// beyond the DRAM (the LSTM-WLM decoder) fall back to streaming
+    /// each tile directly, still exactly once per program.
     fn lower_linear_tiled(
         &self,
         x: &Tensor,
@@ -395,23 +406,68 @@ impl FlexAsr {
         let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
         let out_bias = fmt.select_bias(acc.max_abs());
 
-        let mut invocations = Vec::new();
+        // tile table: row range + per-tile PE layout + DRAM slot
+        let mut tiles = Vec::new(); // (lo, r, bias_base, tile_len, dram_off)
+        let mut dram_off = 0usize;
         let mut lo = 0usize;
         while lo < m {
             let r = r_cap.min(m - lo);
-            let bias_base = align16(r * k);
-            let mut cmds = Vec::new();
-            if lo == 0 {
-                // the input stays resident across tiles
-                stream_bytes(&mut cmds, fx::GB_BASE, &xc);
+            let bias_base = align16(r * k) as usize;
+            let tile_len = bias_base + r;
+            tiles.push((lo, r, bias_base, tile_len, dram_off));
+            dram_off += align16(tile_len) as usize;
+            lo += r;
+        }
+        let use_dram = dram_off <= fx::WGT_DRAM_SIZE;
+
+        let mut invocations = Vec::new();
+        if use_dram {
+            // one staging invocation: the input plus every weight tile,
+            // each as its own fingerprinted (residency-trackable) burst
+            let mut bursts = vec![Burst::stage(fx::GB_BASE, &xc)];
+            for &(tlo, r, bias_base, tile_len, doff) in &tiles {
+                let mut buf = vec![0u8; tile_len];
+                buf[..r * k].copy_from_slice(&wc[tlo * k..(tlo + r) * k]);
+                buf[bias_base..].copy_from_slice(&bc[tlo..tlo + r]);
+                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
             }
-            stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wc[lo * k..(lo + r) * k]);
-            stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc[lo..lo + r]);
+            let mut asm = Fragment::new();
+            asm.push("FlexASR_ILA.write_v", &["%input"])
+                .push("FlexASR_ILA.write_wgt_dram", &["%w_tiles", "%b_slices"]);
+            invocations.push(LoweredInvocation {
+                target: Target::FlexAsr,
+                asm,
+                bursts,
+                read: None,
+            });
+        }
+        for (ti, &(tlo, r, bias_base, tile_len, doff)) in tiles.iter().enumerate() {
+            let mut bursts = Vec::new();
+            let mut cmds = Vec::new();
+            if use_dram {
+                cmds.push(Cmd::write_u64(
+                    fx::DMA_CTRL,
+                    fx::dma_word(doff, 0, tile_len),
+                ));
+            } else {
+                if ti == 0 {
+                    // the input stays resident across tiles
+                    bursts.push(Burst::stage(fx::GB_BASE, &xc));
+                }
+                bursts.push(Burst::stage(
+                    fx::PE_WGT_BASE,
+                    &wc[tlo * k..(tlo + r) * k],
+                ));
+                bursts.push(Burst::stage(
+                    fx::PE_WGT_BASE + bias_base as u64,
+                    &bc[tlo..tlo + r],
+                ));
+            }
             cmds.push(Cmd::write_u64(
                 fx::CFG_LAYER_SIZING,
                 (k as u64) | ((r as u64) << 16),
             ));
-            cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_base));
+            cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_base as u64));
             cmds.push(Cmd::write_u64(fx::CFG_ACT, 0));
             cmds.push(Cmd::write_u64(
                 fx::CFG_GB_CONTROL,
@@ -427,13 +483,24 @@ impl FlexAsr {
                 0x100 | (out_bias as u8 as u64),
             ));
             cmds.push(Cmd::write_u64(fx::FN_START, 1));
+            if ti + 1 == tiles.len() {
+                // driver hygiene: disarm the output-bias override so a
+                // later program on the same (un-reset) device, e.g. over
+                // the SoC bus, gets auto-selected output biases again
+                cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
+            }
+            bursts.push(Burst::control(cmds));
 
             let mut asm = Fragment::new();
-            if lo == 0 {
-                asm.push("FlexASR_ILA.write_v", &["%input"]);
+            if use_dram {
+                asm.push("FlexASR_ILA.wgt_dma", &["%tile_slot"]);
+            } else {
+                if ti == 0 {
+                    asm.push("FlexASR_ILA.write_v", &["%input"]);
+                }
+                asm.push("FlexASR_ILA.write_wgt", &["%w_rows", "%b_slice"]);
             }
-            asm.push("FlexASR_ILA.write_wgt", &["%w_rows", "%b_slice"])
-                .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%k", "%rows"])
+            asm.push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%k", "%rows"])
                 .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%n"])
                 .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
                 .push("FlexASR_ILA.fn_start", &[])
@@ -442,24 +509,18 @@ impl FlexAsr {
             invocations.push(LoweredInvocation {
                 target: Target::FlexAsr,
                 asm,
-                cmds,
+                bursts,
                 read: Some(ReadPlan::FlexAf8 {
                     base: fx::GB_BASE + xa as u64,
                     shape: vec![n, r],
                     fmt,
                 }),
             });
-            lo += r;
-        }
-        // driver hygiene: disarm the output-bias override so a later
-        // program on the same (un-reset) device, e.g. over the SoC bus,
-        // gets auto-selected output biases again
-        if let Some(last) = invocations.last_mut() {
-            last.cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
         }
         Some(LoweredProgram {
             invocations,
             stitch: Stitch::Concat { axis: 1, shape: vec![n, m] },
+            mirrors: 1,
         })
     }
 
@@ -517,11 +578,13 @@ impl FlexAsr {
         let (whc, whb) = fx::encode_tensor(&fmt, wh);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
 
+        let mut bursts = vec![
+            Burst::stage(fx::GB_BASE, &xc),
+            Burst::stage(fx::PE_WGT_BASE, &wic),
+            Burst::stage(fx::PE_WGT_BASE + wgt2_base, &whc),
+            Burst::stage(fx::PE_WGT_BASE + bias_base, &bc),
+        ];
         let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &xc);
-        stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wic);
-        stream_bytes(&mut cmds, fx::PE_WGT_BASE + wgt2_base, &whc);
-        stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_base, &bc);
         cmds.push(Cmd::write_u64(
             fx::CFG_LAYER_SIZING,
             (e as u64) | ((four_h as u64) << 16),
@@ -541,6 +604,7 @@ impl FlexAsr {
                 | ((whb as u8 as u64) << 24),
         ));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
+        bursts.push(Burst::control(cmds));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x_seq"])
@@ -556,7 +620,7 @@ impl FlexAsr {
         Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![t, 1, h],
@@ -568,19 +632,30 @@ impl FlexAsr {
     /// Per-step tiled LSTM: the real-driver decomposition when the gate
     /// matrices exceed the PE weight buffer. The sequence, h, c, a wide
     /// gate staging region, and the output live in the GB; each timestep
-    /// issues one [`fx::OP_LSTM_GATES`] trigger per weight-row tile
-    /// (streaming that tile of `[w_ih | w_hh | b]`) followed by one
-    /// [`fx::OP_LSTM_ACT`] trigger, and one read at the very end returns
-    /// the whole output sequence.
+    /// issues one [`fx::OP_LSTM_GATES`] trigger per weight-row tile of
+    /// `[w_ih | w_hh | b]` followed by one [`fx::OP_LSTM_ACT`] trigger,
+    /// and one read at the very end returns the whole output sequence.
+    ///
+    /// **Weight residency:** each weight tile crosses MMIO **once per
+    /// program**, not once per timestep. When the tile set fits the
+    /// device's weight staging DRAM (it does for the LSTM-WLM
+    /// `[2600 × 1300]` gate matrix), tiles are staged there up front as
+    /// fingerprinted bursts and every per-step trigger issues a cheap
+    /// [`fx::DMA_CTRL`] copy into the PE buffer — the DMA/scratchpad
+    /// reuse of real driver stacks, which removes the ~`t`× redundant
+    /// weight traffic the previous lowering paid. (Under a persistent
+    /// engine the staging bursts themselves dedup across calls, so
+    /// repeat evaluations re-stream only the input sequence.) Tile sets
+    /// beyond the DRAM fall back to per-step streaming, with the tile
+    /// bursts `Arc`-shared across steps so they are at least encoded
+    /// only once host-side.
     ///
     /// Bit-exactness with the fast path is engineered via a **bias
     /// schedule**: the driver mirrors the recurrence host-side
     /// ([`FlexAsr::lstm_traced`]) to learn every re-encode bias (wide
     /// gates, h, c per step; final output), then forces those biases in
     /// the per-step configs — so device tiles land on exactly the
-    /// lattices the whole-tensor fast path chose. Weights are re-streamed
-    /// every step (they do not fit on device — the irreducible cost the
-    /// ISA-level tiling models).
+    /// lattices the whole-tensor fast path chose.
     fn lower_lstm_tiled(
         &self,
         x: &Tensor,
@@ -626,50 +701,98 @@ impl FlexAsr {
         // yields the full bias schedule the device configs replay
         let (_, sched) = self.lstm_traced(x, wi, wh, b);
 
+        // tile table: (lo, r, wgt2, bias_b, tile_len, dram_off)
+        let mut tiles = Vec::new();
+        let mut dram_off = 0usize;
+        let mut lo = 0usize;
+        while lo < four_h {
+            let r = r_cap.min(four_h - lo);
+            let wgt2 = align16(r * e) as usize;
+            let bias_b = wgt2 + align16(r * h) as usize;
+            let tile_len = bias_b + r;
+            tiles.push((lo, r, wgt2, bias_b, tile_len, dram_off));
+            dram_off += align16(tile_len) as usize;
+            lo += r;
+        }
+        let use_dram = dram_off <= fx::WGT_DRAM_SIZE;
+
         let mut invocations = Vec::new();
-        // staging: the sequence plus AF8 zero codes for h0/c0
-        let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &xc);
+        // staging: the sequence plus AF8 zero codes for h0/c0, and (on
+        // the DRAM path) every weight tile exactly once
         let zeros = vec![0x80u8; align16(h) as usize];
-        stream_bytes(&mut cmds, fx::GB_BASE + h_base as u64, &zeros);
-        stream_bytes(&mut cmds, fx::GB_BASE + c_base as u64, &zeros);
+        let mut bursts = vec![
+            Burst::stage(fx::GB_BASE, &xc),
+            Burst::stage(fx::GB_BASE + h_base as u64, &zeros),
+            Burst::stage(fx::GB_BASE + c_base as u64, &zeros),
+        ];
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x_seq", "%h0", "%c0"]);
+        if use_dram {
+            for &(tlo, r, wgt2, bias_b, tile_len, doff) in &tiles {
+                let mut buf = vec![0u8; tile_len];
+                buf[..r * e].copy_from_slice(&wic[tlo * e..(tlo + r) * e]);
+                buf[wgt2..wgt2 + r * h].copy_from_slice(&whc[tlo * h..(tlo + r) * h]);
+                buf[bias_b..].copy_from_slice(&bc[tlo..tlo + r]);
+                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
+            }
+            asm.push("FlexASR_ILA.write_wgt_dram", &["%gate_tiles"]);
+        }
         invocations.push(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: None,
         });
+        // fallback path: encode each tile's stage bursts once and share
+        // them (`Arc`) across all timesteps
+        let direct_bursts: Vec<Vec<Burst>> = if use_dram {
+            Vec::new()
+        } else {
+            tiles
+                .iter()
+                .map(|&(tlo, r, wgt2, bias_b, _, _)| {
+                    vec![
+                        Burst::stage(fx::PE_WGT_BASE, &wic[tlo * e..(tlo + r) * e]),
+                        Burst::stage(
+                            fx::PE_WGT_BASE + wgt2 as u64,
+                            &whc[tlo * h..(tlo + r) * h],
+                        ),
+                        Burst::stage(fx::PE_WGT_BASE + bias_b as u64, &bc[tlo..tlo + r]),
+                    ]
+                })
+                .collect()
+        };
 
         for step in 0..t {
             let h_bias_in = if step == 0 { 0 } else { sched.h[step - 1] };
             let c_bias_in = if step == 0 { 0 } else { sched.c[step - 1] };
-            let mut lo = 0usize;
-            while lo < four_h {
-                let r = r_cap.min(four_h - lo);
-                let wgt2 = align16(r * e);
-                let bias_b = wgt2 + align16(r * h);
+            for (ti, &(tlo, r, wgt2, bias_b, tile_len, doff)) in tiles.iter().enumerate()
+            {
+                let mut bursts = Vec::new();
                 let mut cmds = Vec::new();
-                stream_bytes(&mut cmds, fx::PE_WGT_BASE, &wic[lo * e..(lo + r) * e]);
-                stream_bytes(
-                    &mut cmds,
-                    fx::PE_WGT_BASE + wgt2,
-                    &whc[lo * h..(lo + r) * h],
-                );
-                stream_bytes(&mut cmds, fx::PE_WGT_BASE + bias_b, &bc[lo..lo + r]);
+                if use_dram {
+                    cmds.push(Cmd::write_u64(
+                        fx::DMA_CTRL,
+                        fx::dma_word(doff, 0, tile_len),
+                    ));
+                } else {
+                    bursts.extend(direct_bursts[ti].iter().cloned());
+                }
                 cmds.push(Cmd::write_u64(
                     fx::CFG_LAYER_SIZING,
                     (e as u64) | ((r as u64) << 16),
                 ));
-                cmds.push(Cmd::write_u64(fx::CFG_MNGR, bias_b | (wgt2 << 32)));
+                cmds.push(Cmd::write_u64(
+                    fx::CFG_MNGR,
+                    bias_b as u64 | ((wgt2 as u64) << 32),
+                ));
                 cmds.push(Cmd::write_u64(
                     fx::CFG_GB_CONTROL,
                     fx::OP_LSTM_GATES | ((h as u64) << 8),
                 ));
                 cmds.push(Cmd::write_u64(
                     fx::CFG_GB_MMNGR,
-                    ((step * e) as u64) | (((gates_base + 4 * lo) as u64) << 32),
+                    ((step * e) as u64) | (((gates_base + 4 * tlo) as u64) << 32),
                 ));
                 cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR2, h_base as u64));
                 cmds.push(Cmd::write_u64(
@@ -684,20 +807,27 @@ impl FlexAsr {
                     (h_bias_in as u8 as u64) | ((sched.wide[step] as u8 as u64) << 8),
                 ));
                 cmds.push(Cmd::write_u64(fx::FN_START, 1));
+                bursts.push(Burst::control(cmds));
 
                 let mut asm = Fragment::new();
-                asm.push("FlexASR_ILA.write_wgt", &["%wi_rows", "%wh_rows", "%b_slice"])
-                    .push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%e", "%rows"])
+                if use_dram {
+                    asm.push("FlexASR_ILA.wgt_dma", &["%tile_slot"]);
+                } else {
+                    asm.push(
+                        "FlexASR_ILA.write_wgt",
+                        &["%wi_rows", "%wh_rows", "%b_slice"],
+                    );
+                }
+                asm.push("FlexASR_ILA.pe_cfg_rnn_layer_sizing", &["%e", "%rows"])
                     .push("FlexASR_ILA.gb_cfg_gb_control", &["%lstm_gates", "%h"])
                     .push("FlexASR_ILA.cfg_exp_bias2", &["%h_bias", "%wide_bias"])
                     .push("FlexASR_ILA.fn_start", &[]);
                 invocations.push(LoweredInvocation {
                     target: Target::FlexAsr,
                     asm,
-                    cmds,
+                    bursts,
                     read: None,
                 });
-                lo += r;
             }
 
             let mut cmds = Vec::new();
@@ -731,7 +861,7 @@ impl FlexAsr {
             invocations.push(LoweredInvocation {
                 target: Target::FlexAsr,
                 asm,
-                cmds,
+                bursts: vec![Burst::control(cmds)],
                 read: None,
             });
         }
@@ -746,14 +876,14 @@ impl FlexAsr {
         invocations.push(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds: vec![Cmd::write_u64(fx::CFG_OUT_BIAS, 0)],
+            bursts: vec![Burst::control(vec![Cmd::write_u64(fx::CFG_OUT_BIAS, 0)])],
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base as u64,
                 shape: vec![t, 1, h],
                 fmt,
             }),
         });
-        Some(LoweredProgram { invocations, stitch: Stitch::Last })
+        Some(LoweredProgram { invocations, stitch: Stitch::Last, mirrors: 1 })
     }
 
     /// Lower a row-wise GB op (max pool / mean pool / layer norm): store,
@@ -778,12 +908,12 @@ impl FlexAsr {
         let fmt = self.af;
         let (xc, xb) = fx::encode_tensor(&fmt, x);
         let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &xc);
         cmds.push(Cmd::write_u64(fx::CFG_LAYER_SIZING, c as u64));
         cmds.push(Cmd::write_u64(fx::CFG_GB_CONTROL, opcode | ((r as u64) << 8)));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
         cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, xb as u8 as u64));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
+        let bursts = vec![Burst::stage(fx::GB_BASE, &xc), Burst::control(cmds)];
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x"])
@@ -797,7 +927,7 @@ impl FlexAsr {
         Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![out_rows, c],
@@ -842,10 +972,12 @@ impl FlexAsr {
         let (kc, kb) = fx::encode_tensor(&fmt, k);
         let (vc, vb) = fx::encode_tensor(&fmt, v);
 
+        let mut bursts = vec![
+            Burst::stage(fx::GB_BASE, &qc),
+            Burst::stage(fx::GB_BASE + k_base, &kc),
+            Burst::stage(fx::GB_BASE + v_base, &vc),
+        ];
         let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &qc);
-        stream_bytes(&mut cmds, fx::GB_BASE + k_base, &kc);
-        stream_bytes(&mut cmds, fx::GB_BASE + v_base, &vc);
         cmds.push(Cmd::write_u64(
             fx::CFG_LAYER_SIZING,
             (d as u64) | ((dv as u64) << 16),
@@ -861,6 +993,7 @@ impl FlexAsr {
             (qb as u8 as u64) | ((kb as u8 as u64) << 8) | ((vb as u8 as u64) << 24),
         ));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
+        bursts.push(Burst::control(cmds));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%q", "%k", "%v"])
@@ -875,7 +1008,7 @@ impl FlexAsr {
         Some(LoweredProgram::single(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base,
                 shape: vec![n, dv],
@@ -895,8 +1028,8 @@ impl FlexAsr {
         let (tc, tb) = fx::encode_tensor(&fmt, t);
         let half = (fx::GB_SIZE / 2) as u64;
 
+        let mut bursts = vec![Burst::stage(fx::GB_BASE, &tc)];
         let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, fx::GB_BASE, &tc);
         // Host-side mirror of the device state: pooling discards the most
         // negative values, so the output's max-abs — and with it the
         // device-chosen storage bias — can shrink across a binade between
@@ -927,6 +1060,7 @@ impl FlexAsr {
             rows /= 2;
             in_base = out_base;
         }
+        bursts.push(Burst::control(cmds));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.fasrMaxpStore", &["%t"]);
@@ -938,7 +1072,7 @@ impl FlexAsr {
         LoweredInvocation {
             target: Target::FlexAsr,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + in_base,
                 shape: vec![r >> stages, c],

@@ -27,6 +27,20 @@ pub const GB_SIZE: usize = 0x1_0000;
 pub const PE_WGT_BASE: u64 = 0xA060_0000;
 /// PE weight buffer size in bytes.
 pub const PE_WGT_SIZE: usize = 0x4_0000;
+/// Device-side weight staging DRAM: 8 MiB. The DMA/scratchpad-reuse
+/// model of real accelerator stacks (cf. VTA's DRAM→scratchpad loads):
+/// the driver stages each weight tile here **once** over MMIO, then
+/// replays cheap [`DMA_CTRL`] copies into the PE weight buffer per
+/// trigger — instead of re-streaming multi-hundred-KiB tiles across the
+/// interface every LSTM timestep.
+pub const WGT_DRAM_BASE: u64 = 0xA100_0000;
+/// Weight staging DRAM size in bytes.
+pub const WGT_DRAM_SIZE: usize = 0x80_0000;
+/// Weight DMA doorbell: src DRAM offset (bits 0..24) | dst PE-buffer
+/// offset (bits 24..44) | length in bytes (bits 44..64). Writing it
+/// copies `[src, src+len)` of the staging DRAM into `[dst, dst+len)` of
+/// the PE weight buffer.
+pub const DMA_CTRL: u64 = 0xA000_0020;
 /// K (cols, bits 0..16) | M (rows, bits 16..32).
 pub const CFG_LAYER_SIZING: u64 = 0xA040_0010;
 /// bias_base (bits 0..32) | wgt2_base (bits 32..64), offsets into PE wgt.
@@ -73,6 +87,13 @@ pub const OP_LSTM_GATES: u64 = 7;
 /// Tiled-LSTM, part 2: one timestep's activation/state update over the
 /// staged gate vector (no weights involved).
 pub const OP_LSTM_ACT: u64 = 8;
+
+/// Pack a [`DMA_CTRL`] word: copy `len` bytes from staging-DRAM offset
+/// `src` to PE-weight-buffer offset `dst`.
+pub fn dma_word(src: usize, dst: usize, len: usize) -> u64 {
+    debug_assert!(src < (1 << 24) && dst < (1 << 20) && len < (1 << 20));
+    (src as u64) | ((dst as u64) << 24) | ((len as u64) << 44)
+}
 
 // ----- AdaptivFloat byte codec -----------------------------------------
 // The all-bits pattern `0x80` (negative, E=0, M=0 — the smallest negative
@@ -243,6 +264,7 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
     let mut st = IlaState::new();
     st.new_mem("gb_large", GB_SIZE);
     st.new_mem("pe_weight", PE_WGT_SIZE);
+    st.new_mem("wgt_dram", WGT_DRAM_SIZE);
     st.new_bv("cfg_layer_sizing", 32);
     st.new_bv("cfg_mngr", 64);
     st.new_bv("cfg_act", 8);
@@ -257,12 +279,14 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
     let mut ila = Ila::new("FlexASR_ILA", st);
 
     // -- data movement ------------------------------------------------
+    // data-port stores honor the command's byte enables (`Cmd::payload`):
+    // a short final beat must not clobber the adjacent staged region
     ila.instr(
         "write_v",
         |c, _| c.is_write && (GB_BASE..GB_BASE + GB_SIZE as u64).contains(&c.addr),
         |c, s| {
             let off = (c.addr - GB_BASE) as usize;
-            s.mem_write("gb_large", off, &c.data);
+            s.mem_write("gb_large", off, c.payload());
             Ok(None)
         },
     );
@@ -283,7 +307,44 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
         },
         |c, s| {
             let off = (c.addr - PE_WGT_BASE) as usize;
-            s.mem_write("pe_weight", off, &c.data);
+            s.mem_write("pe_weight", off, c.payload());
+            Ok(None)
+        },
+    );
+    ila.instr(
+        "write_wgt_dram",
+        |c, _| {
+            c.is_write
+                && (WGT_DRAM_BASE..WGT_DRAM_BASE + WGT_DRAM_SIZE as u64)
+                    .contains(&c.addr)
+        },
+        |c, s| {
+            let off = (c.addr - WGT_DRAM_BASE) as usize;
+            s.mem_write("wgt_dram", off, c.payload());
+            Ok(None)
+        },
+    );
+    ila.instr(
+        "wgt_dma",
+        |c, _| c.is_write && c.addr == DMA_CTRL,
+        |c, s| {
+            let w = c.data_u64();
+            let (src, dst, len) = (
+                (w & 0xFF_FFFF) as usize,
+                ((w >> 24) & 0xF_FFFF) as usize,
+                (w >> 44) as usize,
+            );
+            if src + len > WGT_DRAM_SIZE {
+                return Err(format!("DMA source [{src}, {}) exceeds DRAM", src + len));
+            }
+            if dst + len > PE_WGT_SIZE {
+                return Err(format!(
+                    "DMA destination [{dst}, {}) exceeds PE buffer",
+                    dst + len
+                ));
+            }
+            let tile = s.mem("wgt_dram")[src..src + len].to_vec();
+            s.mem_write("pe_weight", dst, &tile);
             Ok(None)
         },
     );
@@ -489,6 +550,14 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
             Ok(None)
         },
     );
+    // residency contract: the PE weight buffer and the staging DRAM are
+    // host-exclusive operand stores (no compute instruction writes them),
+    // EXCEPT that the DMA doorbell copies into the PE buffer — declared
+    // as a hazard so engines drop PE residency when a DMA runs. The GB is
+    // NOT stageable: every compute op writes results/state into it.
+    ila.stage_region("pe_weight", PE_WGT_BASE, PE_WGT_SIZE);
+    ila.stage_region("wgt_dram", WGT_DRAM_BASE, WGT_DRAM_SIZE);
+    ila.hazard(DMA_CTRL, "pe_weight");
     ila
 }
 

@@ -13,7 +13,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -211,16 +211,16 @@ impl Hlscnn {
         let mut lo = 0usize;
         while lo < o {
             let oc = o_cap.min(o - lo);
-            let mut cmds = Vec::new();
+            let mut bursts = Vec::new();
             if lo == 0 {
                 // the feature map stays resident across tiles
-                stream_bytes(&mut cmds, hx::ACT_BASE, &hx::encode_act_nhwc(self, x));
+                bursts.push(Burst::stage(hx::ACT_BASE, &hx::encode_act_nhwc(self, x)));
             }
-            stream_bytes(
-                &mut cmds,
+            bursts.push(Burst::stage(
                 hx::WGT_BASE,
                 &wgt_codes[lo * filter_bytes..(lo + oc) * filter_bytes],
-            );
+            ));
+            let mut cmds = Vec::new();
             cmds.push(Cmd::write_u64(
                 hx::CFG_SHAPE,
                 (c as u64) | ((h as u64) << 12) | ((wd as u64) << 24)
@@ -236,6 +236,7 @@ impl Hlscnn {
                     | ((pad.1 as u64) << 40),
             ));
             cmds.push(Cmd::write_u64(hx::CFG_START, 1));
+            bursts.push(Burst::control(cmds));
 
             let mut asm = Fragment::new();
             if lo == 0 {
@@ -250,7 +251,7 @@ impl Hlscnn {
             invocations.push(LoweredInvocation {
                 target: Target::Hlscnn,
                 asm,
-                cmds,
+                bursts,
                 read: Some(ReadPlan::HlscnnI16 {
                     base: hx::OUT_BASE,
                     shape: vec![1, oc, oh, ow],
@@ -262,6 +263,7 @@ impl Hlscnn {
         Some(LoweredProgram {
             invocations,
             stitch: Stitch::Concat { axis: 1, shape: vec![1, o, oh, ow] },
+            mirrors: 0,
         })
     }
 }

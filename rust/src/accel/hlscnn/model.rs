@@ -222,7 +222,9 @@ pub fn build_ila(dev: Hlscnn) -> Ila {
             move |c, _| c.is_write && (base..base + size).contains(&c.addr),
             move |c, s| {
                 let off = (c.addr - base) as usize;
-                s.mem_write(mem, off, &c.data);
+                // byte-enabled store: a short final beat must not clobber
+                // bytes past the streamed slice
+                s.mem_write(mem, off, c.payload());
                 Ok(None)
             },
         );
@@ -304,6 +306,11 @@ pub fn build_ila(dev: Hlscnn) -> Ila {
             Ok(None)
         },
     );
+    // residency contract: the act/wgt scratchpads are host-exclusive
+    // (conv writes only `out`), so staged feature maps and filter banks
+    // may stay device-resident across invocations.
+    ila.stage_region("act", ACT_BASE, ACT_SIZE);
+    ila.stage_region("wgt", WGT_BASE, WGT_SIZE);
     ila
 }
 

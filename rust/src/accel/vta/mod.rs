@@ -11,7 +11,7 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{stream_bytes, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -78,11 +78,14 @@ impl Vta {
         let xc: Vec<u8> = x.data.iter().map(|&v| self.int8.encode(v, sx) as u8).collect();
         let wc: Vec<u8> = w.data.iter().map(|&v| self.int8.encode(v, sw) as u8).collect();
 
-        let mut cmds = Vec::new();
-        stream_bytes(&mut cmds, vx::INP_BASE, &xc);
-        stream_bytes(&mut cmds, vx::WGT_BASE, &wc);
-        cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)));
-        cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)));
+        let bursts = vec![
+            Burst::stage(vx::INP_BASE, &xc),
+            Burst::stage(vx::WGT_BASE, &wc),
+            Burst::control(vec![
+                Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)),
+                Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)),
+            ]),
+        ];
 
         let mut asm = Fragment::new();
         asm.push("VTA_ILA.load_inp", &["%x"])
@@ -94,7 +97,7 @@ impl Vta {
         Some(LoweredProgram::single(LoweredInvocation {
             target: Target::Vta,
             asm,
-            cmds,
+            bursts,
             read: Some(ReadPlan::VtaI32 {
                 base: vx::ACC_BASE,
                 shape: vec![n, m],
@@ -131,10 +134,14 @@ impl Vta {
                 a_bytes.extend_from_slice(&enc(a.data[i]));
                 b_bytes.extend_from_slice(&enc(b.data[i]));
             }
-            let mut cmds = Vec::new();
-            stream_bytes(&mut cmds, vx::ACC_BASE, &a_bytes);
-            stream_bytes(&mut cmds, vx::WGT_BASE, &b_bytes);
-            cmds.push(Cmd::write(vx::INSN_ADDR, vx::insn_alu_add(len as u32, true)));
+            let bursts = vec![
+                Burst::stage(vx::ACC_BASE, &a_bytes),
+                Burst::stage(vx::WGT_BASE, &b_bytes),
+                Burst::control(vec![Cmd::write(
+                    vx::INSN_ADDR,
+                    vx::insn_alu_add(len as u32, true),
+                )]),
+            ];
 
             let mut asm = Fragment::new();
             asm.push("VTA_ILA.load_acc", &["%a_chunk"])
@@ -145,7 +152,7 @@ impl Vta {
             invocations.push(LoweredInvocation {
                 target: Target::Vta,
                 asm,
-                cmds,
+                bursts,
                 read: Some(ReadPlan::VtaI32 {
                     base: vx::ACC_BASE,
                     shape: vec![len],
@@ -157,6 +164,7 @@ impl Vta {
         Some(LoweredProgram {
             invocations,
             stitch: Stitch::Concat { axis: 0, shape: a.shape.clone() },
+            mirrors: 0,
         })
     }
 

@@ -86,7 +86,9 @@ pub fn build_ila(_dev: Vta) -> Ila {
             move |c, _| c.is_write && (base..base + size).contains(&c.addr),
             move |c, s| {
                 let off = (c.addr - base) as usize;
-                s.mem_write(mem, off, &c.data);
+                // byte-enabled store: a short final beat must not clobber
+                // bytes past the streamed slice
+                s.mem_write(mem, off, c.payload());
                 Ok(None)
             },
         );
@@ -165,6 +167,12 @@ pub fn build_ila(_dev: Vta) -> Ila {
             Ok(None)
         },
     );
+    // residency contract: the inp/wgt scratchpads are host-exclusive
+    // (gemm/alu/reset write only `acc`), so staged operands may stay
+    // device-resident across invocations. `acc` is NOT stageable — every
+    // compute instruction mutates it.
+    ila.stage_region("inp", INP_BASE, INP_SIZE);
+    ila.stage_region("wgt", WGT_BASE, WGT_SIZE);
     ila
 }
 

@@ -36,6 +36,73 @@ use crate::ir::Target;
 use crate::numerics::adaptivfloat::AdaptivFloatFormat;
 use crate::numerics::fixed_point::FixedPointFormat;
 use crate::tensor::Tensor;
+use crate::util::fnv1a;
+use std::sync::Arc;
+
+/// The MMIO address range an operand burst stages into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MmioRegion {
+    /// First byte address written.
+    pub base: u64,
+    /// Payload length in bytes.
+    pub len: usize,
+}
+
+/// One fingerprinted MMIO command burst.
+///
+/// Commands are `Arc`-shared so identical bursts (the same weight tile
+/// staged by many timesteps or sweep points) are encoded **once**
+/// host-side and shared by every program that replays them, and the
+/// content fingerprint + target region let an execution engine recognize
+/// a burst that is already device-resident and skip re-streaming it
+/// (operand residency — see `session::ExecEngine`).
+#[derive(Debug, Clone)]
+pub struct Burst {
+    /// The MMIO commands, in order.
+    pub cmds: Arc<[Cmd]>,
+    /// Content fingerprint (address + enabled payload bytes of every
+    /// command, in order).
+    pub fingerprint: u64,
+    /// The contiguous staging region this burst fills, for operand
+    /// bursts; `None` for config/trigger tails (always streamed).
+    pub region: Option<MmioRegion>,
+}
+
+impl Burst {
+    /// An operand-staging burst: stream `payload` as 16-byte beats (with
+    /// a byte-enabled short final beat) into `[base, base+len)`.
+    pub fn stage(base: u64, payload: &[u8]) -> Self {
+        let mut cmds = Vec::new();
+        stream_bytes(&mut cmds, base, payload);
+        let mut fp = fnv1a(0, &base.to_le_bytes());
+        fp = fnv1a(fp, payload);
+        Burst {
+            cmds: cmds.into(),
+            fingerprint: fp,
+            region: Some(MmioRegion { base, len: payload.len() }),
+        }
+    }
+
+    /// A control burst (configuration writes, triggers, status reads):
+    /// no staging region, always streamed.
+    pub fn control(cmds: Vec<Cmd>) -> Self {
+        let mut fp = 0u64;
+        for c in &cmds {
+            fp = fnv1a(fp, &c.addr.to_le_bytes());
+            fp = fnv1a(fp, if c.is_write { c.payload() } else { &[] });
+        }
+        Burst { cmds: cmds.into(), fingerprint: fp, region: None }
+    }
+
+    /// Bytes of write payload this burst moves over MMIO when streamed.
+    pub fn payload_bytes(&self) -> u64 {
+        self.cmds
+            .iter()
+            .filter(|c| c.is_write)
+            .map(|c| c.len as u64)
+            .sum()
+    }
+}
 
 /// How to retrieve and decode an accelerator result after the command
 /// stream has executed. Each plan carries the device's *configured*
@@ -73,16 +140,19 @@ pub enum ReadPlan {
     },
 }
 
-/// One lowered accelerator invocation: a command burst and, when this
-/// invocation produces (part of) the op's result, a read plan for it.
+/// One lowered accelerator invocation: a sequence of command bursts and,
+/// when this invocation produces (part of) the op's result, a read plan
+/// for it.
 #[derive(Debug, Clone)]
 pub struct LoweredInvocation {
     /// Owning accelerator.
     pub target: Target,
     /// The Fig. 5(c) assembly-level fragment.
     pub asm: Fragment,
-    /// The Fig. 5(d) MMIO command stream.
-    pub cmds: Vec<Cmd>,
+    /// The Fig. 5(d) MMIO command stream, as fingerprinted [`Burst`]s:
+    /// operand-staging bursts (region-tagged, residency-trackable)
+    /// followed by config/trigger control bursts.
+    pub bursts: Vec<Burst>,
     /// How to retrieve this invocation's result; `None` for invocations
     /// whose effect stays in device state (operand staging, intermediate
     /// tiles of a multi-trigger program).
@@ -110,18 +180,31 @@ pub enum Stitch {
 /// One lowered accelerator *op*: a sequence of invocations plus the
 /// stitch step combining their read-backs. See the module docs for why
 /// this is a sequence (driver-side tiling).
+///
+/// **Invariant:** a program whose stitch is [`Stitch::Last`] must carry
+/// its read plan on exactly one invocation — the one producing the op
+/// result. `Last` used to silently discard earlier read-backs; since the
+/// stream-path hardening pass, [`stitch_parts`] rejects multi-read
+/// `Last` programs with a structured error so a future lowering cannot
+/// mask a lost tile.
 #[derive(Debug, Clone)]
 pub struct LoweredProgram {
     /// The invocations, in execution order.
     pub invocations: Vec<LoweredInvocation>,
     /// How read-backs assemble into the op result.
     pub stitch: Stitch,
+    /// Driver-side calibration mirrors this lowering had to compute (the
+    /// tiled-linear forced-bias replay, the tiled-LSTM `lstm_traced`
+    /// bias-schedule replay). The engine's lowering cache reports a
+    /// `mirror_hits` counter from this: a cache hit on a program with
+    /// `mirrors > 0` is a full mirror recomputation avoided.
+    pub mirrors: usize,
 }
 
 impl LoweredProgram {
     /// The degenerate single-trigger program.
     pub fn single(inv: LoweredInvocation) -> Self {
-        LoweredProgram { invocations: vec![inv], stitch: Stitch::Last }
+        LoweredProgram { invocations: vec![inv], stitch: Stitch::Last, mirrors: 0 }
     }
 
     /// Owning accelerator (programs never mix targets).
@@ -141,14 +224,20 @@ impl LoweredProgram {
 }
 
 impl LoweredInvocation {
+    /// All MMIO commands of this invocation, in stream order.
+    pub fn cmds(&self) -> impl Iterator<Item = &Cmd> {
+        self.bursts.iter().flat_map(|b| b.cmds.iter())
+    }
+
     /// Number of MMIO beats moving tensor data (the §5.1 metric).
     pub fn data_beats(&self) -> usize {
-        self.cmds
-            .iter()
+        self.cmds()
             .filter(|c| {
                 let a = c.addr;
                 (fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64).contains(&a)
                     || (fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64)
+                        .contains(&a)
+                    || (fx::WGT_DRAM_BASE..fx::WGT_DRAM_BASE + fx::WGT_DRAM_SIZE as u64)
                         .contains(&a)
                     || (hx::ACT_BASE..hx::ACT_BASE + hx::ACT_SIZE as u64).contains(&a)
                     || (hx::WGT_BASE..hx::WGT_BASE + hx::WGT_SIZE as u64).contains(&a)
@@ -160,12 +249,13 @@ impl LoweredInvocation {
 }
 
 /// Stream a byte buffer as 16-byte MMIO writes starting at `base` (used
-/// by every per-accelerator lowering).
+/// by every per-accelerator lowering). An unaligned final slice becomes a
+/// **byte-enabled short beat** ([`Cmd::write_bytes`]); the seed zero-
+/// padded it to 16 bytes, clobbering up to 15 bytes past the slice's end
+/// — fatal for adjacent staged regions packed closer than a beat.
 pub fn stream_bytes(cmds: &mut Vec<Cmd>, base: u64, bytes: &[u8]) {
     for (i, chunk) in bytes.chunks(16).enumerate() {
-        let mut data = [0u8; 16];
-        data[..chunk.len()].copy_from_slice(chunk);
-        cmds.push(Cmd::write(base + 16 * i as u64, data));
+        cmds.push(Cmd::write_bytes(base + 16 * i as u64, chunk));
     }
 }
 
@@ -185,7 +275,9 @@ pub fn execute_program(
 ) -> anyhow::Result<Tensor> {
     let mut parts = Vec::new();
     for inv in &prog.invocations {
-        sim.run(&inv.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+        for burst in &inv.bursts {
+            sim.run(&burst.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
         if inv.read.is_some() {
             parts.push(read_result(inv, sim)?);
         }
@@ -194,16 +286,28 @@ pub fn execute_program(
 }
 
 /// Assemble invocation read-backs per the program's stitch step.
+///
+/// A [`Stitch::Last`] program with more than one read-back is rejected
+/// (see the invariant on [`LoweredProgram`]): the extra read plans mean a
+/// lowering produced tiles it then threw away, which `Last` used to mask
+/// silently.
 pub fn stitch_parts(mut parts: Vec<Tensor>, stitch: &Stitch) -> anyhow::Result<Tensor> {
     match stitch {
         Stitch::Last => {
+            anyhow::ensure!(
+                parts.len() <= 1,
+                "Stitch::Last over {} read-backs would discard {} tile(s); \
+                 a Last program must carry exactly one read plan",
+                parts.len(),
+                parts.len() - 1
+            );
             parts.pop().ok_or_else(|| anyhow::anyhow!("program produced no read-back"))
         }
         Stitch::Concat { axis, shape } => {
             if parts.is_empty() {
                 anyhow::bail!("concat stitch over zero tiles");
             }
-            let t = concat_axis(&parts, *axis);
+            let t = concat_axis(&parts, *axis)?;
             anyhow::ensure!(
                 t.len() == shape.iter().product::<usize>(),
                 "stitched {} elements, expected shape {shape:?}",
@@ -215,10 +319,24 @@ pub fn stitch_parts(mut parts: Vec<Tensor>, stitch: &Stitch) -> anyhow::Result<T
 }
 
 /// Concatenate tensors along `axis` (all other dims must agree).
-fn concat_axis(parts: &[Tensor], axis: usize) -> Tensor {
+///
+/// Shape validation is structured (`anyhow`), not `debug_assert!`: a
+/// malformed [`LoweredProgram`] must fail loudly in release builds too,
+/// instead of silently corrupting the stitched tensor.
+fn concat_axis(parts: &[Tensor], axis: usize) -> anyhow::Result<Tensor> {
     let first = &parts[0];
     let rank = first.shape.len();
-    assert!(axis < rank, "concat axis {axis} out of rank {rank}");
+    anyhow::ensure!(axis < rank, "concat axis {axis} out of rank {rank}");
+    for (i, p) in parts.iter().enumerate() {
+        anyhow::ensure!(
+            p.shape.len() == rank
+                && p.shape[..axis] == first.shape[..axis]
+                && p.shape[axis + 1..] == first.shape[axis + 1..],
+            "tile {i} shape {:?} disagrees with tile 0 shape {:?} off axis {axis}",
+            p.shape,
+            first.shape
+        );
+    }
     let outer: usize = first.shape[..axis].iter().product();
     let inner: usize = first.shape[axis + 1..].iter().product();
     let axis_total: usize = parts.iter().map(|p| p.shape[axis]).sum();
@@ -227,8 +345,6 @@ fn concat_axis(parts: &[Tensor], axis: usize) -> Tensor {
     let mut data = vec![0.0f32; outer * axis_total * inner];
     let mut axis_off = 0usize;
     for p in parts {
-        debug_assert_eq!(&p.shape[..axis], &first.shape[..axis]);
-        debug_assert_eq!(&p.shape[axis + 1..], &first.shape[axis + 1..]);
         let block = p.shape[axis] * inner;
         for o in 0..outer {
             let dst = (o * axis_total + axis_off) * inner;
@@ -236,7 +352,7 @@ fn concat_axis(parts: &[Tensor], axis: usize) -> Tensor {
         }
         axis_off += p.shape[axis];
     }
-    Tensor::new(shape, data)
+    Ok(Tensor::new(shape, data))
 }
 
 /// Execute a single lowered invocation and decode its result (requires a
@@ -245,7 +361,9 @@ pub fn execute_lowered(
     inv: &LoweredInvocation,
     sim: &mut crate::ila::sim::IlaSim,
 ) -> anyhow::Result<Tensor> {
-    sim.run(&inv.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+    for burst in &inv.bursts {
+        sim.run(&burst.cmds).map_err(|e| anyhow::anyhow!("{e}"))?;
+    }
     read_result(inv, sim)
 }
 
@@ -370,14 +488,73 @@ mod tests {
         )
         .unwrap();
         assert_eq!(out.data, vec![1.0, 2.0, 3.0, 5.0, 6.0, 7.0]);
-        // Last keeps only the final read-back
-        let last = stitch_parts(
+        // Last with exactly one read-back is the result
+        let last = stitch_parts(vec![Tensor::zeros(&[2])], &Stitch::Last).unwrap();
+        assert_eq!(last.shape, vec![2]);
+        assert!(stitch_parts(vec![], &Stitch::Last).is_err());
+    }
+
+    #[test]
+    fn stitch_last_rejects_multiple_readbacks() {
+        // Last used to silently discard every read-back but the final
+        // one; a multi-read Last program is now a structured error so a
+        // lowering cannot mask a lost tile
+        let err = stitch_parts(
             vec![Tensor::ones(&[1]), Tensor::zeros(&[2])],
             &Stitch::Last,
         )
-        .unwrap();
-        assert_eq!(last.shape, vec![2]);
-        assert!(stitch_parts(vec![], &Stitch::Last).is_err());
+        .unwrap_err();
+        assert!(err.to_string().contains("discard"), "{err}");
+    }
+
+    #[test]
+    fn concat_shape_mismatch_is_a_structured_error() {
+        // release builds used to skip the debug_assert and corrupt the
+        // stitched tensor; malformed tiles must fail loudly
+        let a = Tensor::new(vec![2, 2], vec![1.0; 4]);
+        let bad = Tensor::new(vec![3, 1], vec![2.0; 3]);
+        let err = stitch_parts(
+            vec![a.clone(), bad],
+            &Stitch::Concat { axis: 1, shape: vec![2, 3] },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("disagrees"), "{err}");
+        // out-of-rank axis is rejected, not a panic
+        let err = stitch_parts(
+            vec![a.clone(), a],
+            &Stitch::Concat { axis: 5, shape: vec![2, 4] },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("axis"), "{err}");
+    }
+
+    #[test]
+    fn unaligned_burst_does_not_clobber_adjacent_region() {
+        // regression for the stream_bytes zero-pad bug: a deliberately
+        // unaligned tile boundary — 22 payload bytes, then a second
+        // region starting 22 bytes in (packed tighter than a beat)
+        let dev = FlexAsr::new();
+        let mut sim = IlaSim::new(dev.build_ila());
+        use crate::accel::flexasr::model as fxm;
+        // pre-stage a sentinel where the adjacent region lives
+        let sentinel = Burst::stage(fxm::PE_WGT_BASE + 16, &[0xAAu8; 16]);
+        for c in sentinel.cmds.iter() {
+            sim.step(c).unwrap();
+        }
+        // an unaligned 22-byte burst [0, 22) — its final beat covers
+        // [16, 32) but only 6 bytes are enabled
+        let tile = Burst::stage(fxm::PE_WGT_BASE, &[0x11u8; 22]);
+        assert_eq!(tile.cmds.last().unwrap().len, 6, "short final beat");
+        for c in tile.cmds.iter() {
+            sim.step(c).unwrap();
+        }
+        let mem = sim.state.mem("pe_weight");
+        assert_eq!(&mem[..22], &[0x11u8; 22][..]);
+        assert_eq!(
+            &mem[22..32],
+            &[0xAAu8; 10][..],
+            "the zero-pad clobbered the adjacent staged region"
+        );
     }
 
     #[test]
@@ -407,6 +584,54 @@ mod tests {
                     .unwrap();
         }
         assert!(got.rel_error(&expect) < 1e-5);
+    }
+
+    #[test]
+    fn tiled_lstm_stages_each_weight_tile_once_not_once_per_step() {
+        // the PR-4 lowering re-streamed every gate tile on every
+        // timestep (~t x redundant traffic); the DRAM-staged lowering
+        // moves each tile across MMIO exactly once, then DMA-replays it
+        let dev = FlexAsr::new();
+        let mut rng = Rng::new(78);
+        let (t, e, h) = (4usize, 200usize, 200usize);
+        let x = Tensor::randn(&[t, 1, e], &mut rng, 1.0);
+        let wi = Tensor::randn(&[4 * h, e], &mut rng, 0.3);
+        let wh = Tensor::randn(&[4 * h, h], &mut rng, 0.3);
+        let b = Tensor::randn(&[4 * h], &mut rng, 0.1);
+        let prog = dev.lower(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
+        assert!(prog.is_tiled());
+        assert_eq!(prog.mirrors, 1, "the bias-schedule mirror is declared");
+        use crate::accel::flexasr::model as fxm;
+        let dram_range =
+            fxm::WGT_DRAM_BASE..fxm::WGT_DRAM_BASE + fxm::WGT_DRAM_SIZE as u64;
+        let pe_range =
+            fxm::PE_WGT_BASE..fxm::PE_WGT_BASE + fxm::PE_WGT_SIZE as u64;
+        let dram_bytes: u64 = prog
+            .invocations
+            .iter()
+            .flat_map(|i| i.bursts.iter())
+            .filter(|bu| {
+                bu.region.is_some_and(|r| dram_range.contains(&r.base))
+            })
+            .map(|bu| bu.payload_bytes())
+            .sum();
+        let weight_bytes = (4 * h * e + 4 * h * h + 4 * h) as u64;
+        assert!(
+            dram_bytes >= weight_bytes && dram_bytes < weight_bytes + weight_bytes / 2,
+            "weights must cross MMIO about once ({dram_bytes} B staged for \
+             {weight_bytes} B of weights), not once per timestep"
+        );
+        // no direct PE-window data writes remain: tiles ride the DMA
+        assert!(
+            prog.invocations.iter().flat_map(|i| i.cmds()).all(|c| {
+                !c.is_write || !pe_range.contains(&c.addr)
+            }),
+            "per-step invocations must not re-stream weight tiles"
+        );
+        // and the program still computes the exact fast-path result
+        let mut sim = IlaSim::new(dev.build_ila());
+        let got = execute_program(&prog, &mut sim).unwrap();
+        assert_eq!(got, dev.lstm(&x, &wi, &wh, &b));
     }
 
     #[test]

@@ -25,6 +25,16 @@ use std::sync::Arc;
 /// One command at the accelerator interface: an MMIO read or write of a
 /// 128-bit word (the FlexASR interface width; narrower devices ignore the
 /// upper bytes).
+///
+/// Writes carry a **byte-enable count** `len` (the AXI write-strobe
+/// analogue): only the first `len` payload bytes are written by the
+/// device. The seed streamer zero-padded the final beat of every burst
+/// to 16 bytes, silently clobbering up to 15 bytes past an unaligned
+/// slice's destination — dangerous for adjacent staged regions (e.g. the
+/// FlexASR `PE_WGT_BASE + bias_base` / `wgt2_base` layouts). Partial
+/// writes via [`Cmd::write_bytes`] make the short final beat explicit,
+/// and every device's data-port instruction masks its store to
+/// [`Cmd::payload`].
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Cmd {
     /// Write (true) or read (false).
@@ -33,29 +43,50 @@ pub struct Cmd {
     pub addr: u64,
     /// Payload (writes); ignored for reads.
     pub data: [u8; 16],
+    /// Enabled payload bytes (1..=16 for writes; 16 for reads). Bytes
+    /// beyond `len` are don't-care and must not be stored by devices.
+    pub len: u8,
 }
 
 impl Cmd {
-    /// An MMIO write.
+    /// An MMIO write of a full 128-bit beat.
     pub fn write(addr: u64, data: [u8; 16]) -> Self {
-        Cmd { is_write: true, addr, data }
+        Cmd { is_write: true, addr, data, len: 16 }
+    }
+
+    /// An MMIO write of `1..=16` payload bytes (a short final beat with
+    /// byte enables); panics on an empty or oversized payload.
+    pub fn write_bytes(addr: u64, bytes: &[u8]) -> Self {
+        assert!(
+            !bytes.is_empty() && bytes.len() <= 16,
+            "partial write must carry 1..=16 bytes, got {}",
+            bytes.len()
+        );
+        let mut data = [0u8; 16];
+        data[..bytes.len()].copy_from_slice(bytes);
+        Cmd { is_write: true, addr, data, len: bytes.len() as u8 }
     }
 
     /// An MMIO write of a u64 value (upper bytes zero).
     pub fn write_u64(addr: u64, v: u64) -> Self {
         let mut data = [0u8; 16];
         data[..8].copy_from_slice(&v.to_le_bytes());
-        Cmd { is_write: true, addr, data }
+        Cmd { is_write: true, addr, data, len: 16 }
     }
 
     /// An MMIO read.
     pub fn read(addr: u64) -> Self {
-        Cmd { is_write: false, addr, data: [0u8; 16] }
+        Cmd { is_write: false, addr, data: [0u8; 16], len: 16 }
     }
 
     /// Low 8 bytes as u64.
     pub fn data_u64(&self) -> u64 {
         u64::from_le_bytes(self.data[..8].try_into().unwrap())
+    }
+
+    /// The byte-enabled payload (what a data-port store may write).
+    pub fn payload(&self) -> &[u8] {
+        &self.data[..self.len as usize]
     }
 }
 
@@ -185,6 +216,21 @@ impl IlaState {
     /// dirty-region reset actually did, vs. [`Self::total_mem_bytes`] for
     /// a full clone.
     pub fn restore_from(&mut self, init: &IlaState) -> u64 {
+        self.restore_from_keeping(init, &[])
+    }
+
+    /// [`Self::restore_from`] that **keeps** the listed `(mem, lo, hi)`
+    /// byte ranges as-is instead of rewinding them — the residency hook:
+    /// an execution engine that knows an operand burst is still staged in
+    /// a region passes that region here, so the staged bytes survive the
+    /// between-program reset and the burst need not be re-streamed. Kept
+    /// ranges remain marked dirty (they still diverge from `init`), so a
+    /// later reset without the keep list rewinds them normally.
+    pub fn restore_from_keeping(
+        &mut self,
+        init: &IlaState,
+        keep: &[(String, usize, usize)],
+    ) -> u64 {
         for (name, val) in &init.regs {
             if let Some(entry) = self.regs.get_mut(name) {
                 *entry = *val;
@@ -192,10 +238,33 @@ impl IlaState {
         }
         let mut restored = 0u64;
         for (name, (lo, hi)) in std::mem::take(&mut self.dirty) {
-            let src = &init.mems[&name][lo..hi];
-            self.mems.get_mut(&name).expect("dirty unknown mem")[lo..hi]
-                .copy_from_slice(src);
-            restored += (hi - lo) as u64;
+            // kept sub-ranges of this memory's dirty watermark, merged
+            let mut kept: Vec<(usize, usize)> = keep
+                .iter()
+                .filter(|(m, klo, khi)| *m == name && *khi > lo && *klo < hi)
+                .map(|&(_, klo, khi)| (klo.max(lo), khi.min(hi)))
+                .collect();
+            kept.sort_unstable();
+            let src = &init.mems[&name];
+            let dst = self.mems.get_mut(&name).expect("dirty unknown mem");
+            let mut cursor = lo;
+            for &(klo, khi) in &kept {
+                if cursor < klo {
+                    dst[cursor..klo].copy_from_slice(&src[cursor..klo]);
+                    restored += (klo - cursor) as u64;
+                }
+                cursor = cursor.max(khi);
+            }
+            if cursor < hi {
+                dst[cursor..hi].copy_from_slice(&src[cursor..hi]);
+                restored += (hi - cursor) as u64;
+            }
+            if let Some(&(first, _)) = kept.first() {
+                // the kept bytes still diverge from init: the watermark
+                // must keep covering them (conservatively, their span)
+                let span_hi = kept.iter().map(|&(_, khi)| khi).max().unwrap();
+                self.dirty.insert(name, (first, span_hi));
+            }
         }
         restored
     }
@@ -245,6 +314,21 @@ impl fmt::Debug for Instr {
     }
 }
 
+/// A declared operand-staging window: an MMIO address range that maps
+/// 1:1 onto a byte range of one architectural memory which only the
+/// **host** ever writes (the device reads it but never mutates it
+/// internally — that invariant is what makes engine-level residency
+/// tracking sound). See [`Ila::stage_region`].
+#[derive(Debug, Clone)]
+pub struct StagingRegion {
+    /// Backing memory name.
+    pub mem: String,
+    /// First MMIO address of the window.
+    pub mmio_base: u64,
+    /// Window size in bytes (memory offset = addr − `mmio_base`).
+    pub size: usize,
+}
+
 /// An ILA model: a named set of instructions plus initial state.
 #[derive(Clone)]
 pub struct Ila {
@@ -254,12 +338,60 @@ pub struct Ila {
     pub instrs: Vec<Instr>,
     /// Architectural reset state.
     pub init_state: IlaState,
+    /// Declared operand-staging windows (see [`Self::stage_region`]).
+    pub staging: Vec<StagingRegion>,
+    /// Residency hazards: `(mmio_addr, mem)` pairs declaring that a write
+    /// to `mmio_addr` may mutate `mem` internally (e.g. a DMA doorbell
+    /// copying into a scratchpad), so any residency assumption about
+    /// `mem` must be dropped when such a command executes.
+    pub hazards: Vec<(u64, String)>,
 }
 
 impl Ila {
     /// A model with no instructions yet.
     pub fn new(name: &str, init_state: IlaState) -> Self {
-        Ila { name: name.to_string(), instrs: Vec::new(), init_state }
+        Ila {
+            name: name.to_string(),
+            instrs: Vec::new(),
+            init_state,
+            staging: Vec::new(),
+            hazards: Vec::new(),
+        }
+    }
+
+    /// Declare an operand-staging window: MMIO range
+    /// `[mmio_base, mmio_base + size)` backs memory `mem` byte-for-byte,
+    /// and `mem` is **host-exclusive** (no instruction of this model
+    /// writes it internally, except via doorbells declared with
+    /// [`Self::hazard`]). Execution engines use these declarations to
+    /// keep fingerprinted operand bursts device-resident across
+    /// invocations and skip re-streaming them.
+    pub fn stage_region(&mut self, mem: &str, mmio_base: u64, size: usize) {
+        assert!(
+            self.init_state.mems.get(mem).is_some_and(|m| m.len() >= size),
+            "staging region over unknown/short memory `{mem}`"
+        );
+        self.staging.push(StagingRegion { mem: mem.to_string(), mmio_base, size });
+    }
+
+    /// Declare that a write to `addr` (a DMA/copy doorbell) may mutate
+    /// `mem` internally — engines must invalidate residency for `mem`
+    /// when streaming such a command.
+    pub fn hazard(&mut self, addr: u64, mem: &str) {
+        self.hazards.push((addr, mem.to_string()));
+    }
+
+    /// Map an MMIO byte range onto its staging memory: `Some((mem, lo,
+    /// hi))` when `[base, base + len)` lies entirely inside one declared
+    /// window, else `None` (the range is not residency-trackable).
+    pub fn staging_for(&self, base: u64, len: usize) -> Option<(&str, usize, usize)> {
+        self.staging.iter().find_map(|r| {
+            let end = r.mmio_base + r.size as u64;
+            (base >= r.mmio_base && base + len as u64 <= end).then(|| {
+                let lo = (base - r.mmio_base) as usize;
+                (r.mem.as_str(), lo, lo + len)
+            })
+        })
     }
 
     /// Add an instruction (builder style, mirroring ILAng's `NewInstr`).

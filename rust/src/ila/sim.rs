@@ -60,7 +60,17 @@ impl IlaSim {
     /// (`instr_counts`, `steps`) deliberately keep accumulating so a
     /// persistent engine reports per-session totals.
     pub fn reset_dirty(&mut self) {
-        self.bytes_cleared += self.state.restore_from(&self.model.init_state);
+        self.reset_dirty_keeping(&[]);
+    }
+
+    /// [`Self::reset_dirty`] that keeps the listed `(mem, lo, hi)` byte
+    /// ranges device-resident instead of rewinding them — the execution
+    /// engine passes the regions whose staged operand bursts it intends
+    /// to reuse, so a persistent engine can skip re-streaming them (see
+    /// [`crate::ila::IlaState::restore_from_keeping`]).
+    pub fn reset_dirty_keeping(&mut self, keep: &[(String, usize, usize)]) {
+        self.bytes_cleared +=
+            self.state.restore_from_keeping(&self.model.init_state, keep);
         self.resets += 1;
     }
 
@@ -194,6 +204,24 @@ mod tests {
         assert_eq!(sim.resets, 1);
         assert_eq!(sim.bytes_cleared, 48);
         assert!(sim.bytes_cleared < sim.state_bytes());
+    }
+
+    #[test]
+    fn dirty_reset_keeping_preserves_resident_ranges() {
+        let mut sim = IlaSim::new(mem_ila());
+        sim.step(&Cmd::write(64, [7u8; 16])).unwrap();
+        sim.step(&Cmd::write(96, [9u8; 16])).unwrap();
+        sim.step(&Cmd::write_u64(0x8000, 0xAB)).unwrap();
+        // keep [64, 80) staged; everything else rewinds (incl. registers)
+        sim.reset_dirty_keeping(&[("buf".to_string(), 64, 80)]);
+        assert_eq!(sim.state.mem("buf")[64], 7, "kept range must survive");
+        assert_eq!(sim.state.mem("buf")[96], 0, "unkept range rewound");
+        assert_eq!(sim.state.reg("cfg"), 0);
+        // the kept bytes restored fewer bytes than a plain dirty reset
+        assert_eq!(sim.bytes_cleared, 48 - 16);
+        // the kept range is still dirty: a later plain reset rewinds it
+        sim.reset_dirty();
+        assert_eq!(sim.state.mem("buf")[64], 0);
     }
 
     #[test]

@@ -242,7 +242,8 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
         .expect("linear fits the device");
     println!("FlexASR linear fragment (Fig. 5c):\n{}", prog.invocations[0].asm);
     println!("final MMIO commands (Fig. 5d):");
-    for c in prog.invocations[0].cmds.iter().rev().take(7).rev() {
+    let cmds: Vec<_> = prog.invocations[0].cmds().collect();
+    for c in cmds.iter().rev().take(7).rev() {
         println!("  {c}");
     }
     let y = drv.invoke_program(&prog)?;

@@ -67,7 +67,7 @@ use std::time::{Duration, Instant};
 
 /// Which accelerator configuration a session runs under (the Table 4
 /// "Original" vs "Updated" columns).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DesignRev {
     /// As-published designs: HLSCNN 8-bit fixed-point weight store.
     Original,
@@ -421,6 +421,18 @@ pub struct RunTrace {
     /// Invocations that executed as MMIO programs on an ILA simulator
     /// (0 under [`ExecBackend::Functional`]).
     pub mmio_invocations: usize,
+    /// MMIO write-payload bytes streamed to the simulators by **this
+    /// call** (a per-call delta of [`ExecEngine::bytes_streamed`]); on a
+    /// persistent engine, operand residency makes repeat calls strictly
+    /// cheaper here.
+    pub bytes_streamed: u64,
+    /// Staged operand bursts this call skipped because a bit-identical
+    /// burst was already device-resident (delta of
+    /// [`ExecEngine::bursts_deduped`]).
+    pub bursts_deduped: u64,
+    /// Driver-side calibration mirrors this call avoided via the
+    /// engine's lowering cache (delta of [`ExecEngine::mirror_hits`]).
+    pub mirror_hits: u64,
     /// Per-invocation relative errors (§4.4.2 debugging statistics);
     /// empty unless the session enabled
     /// [`SessionBuilder::track_errors`].
@@ -705,6 +717,9 @@ impl CompiledProgram {
     ) -> Result<RunTrace, EvalError> {
         self.check_engine(engine)?;
         let mmio_before = engine.lowered_invocations();
+        let bytes_before = engine.bytes_streamed();
+        let dedup_before = engine.bursts_deduped();
+        let mirrors_before = engine.mirror_hits();
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
         let (output, invocations) = self.exec(bindings.env(), engine, errors)?;
@@ -712,6 +727,9 @@ impl CompiledProgram {
             output,
             invocations,
             mmio_invocations: engine.lowered_invocations() - mmio_before,
+            bytes_streamed: engine.bytes_streamed() - bytes_before,
+            bursts_deduped: engine.bursts_deduped() - dedup_before,
+            mirror_hits: engine.mirror_hits() - mirrors_before,
             inv_errors,
             fidelity: engine.take_fidelity(),
         })

@@ -37,6 +37,7 @@ pub fn models(rev: DesignRev) -> Vec<Box<dyn Accelerator>> {
 pub struct AcceleratorRegistry {
     accels: Vec<Box<dyn Accelerator>>,
     by_target: [Option<usize>; Target::COUNT],
+    rev: Option<DesignRev>,
 }
 
 impl AcceleratorRegistry {
@@ -51,13 +52,23 @@ impl AcceleratorRegistry {
                 *slot = Some(i);
             }
         }
-        AcceleratorRegistry { accels, by_target }
+        AcceleratorRegistry { accels, by_target, rev: None }
     }
 
     /// The standard three-accelerator set for a design revision (the
     /// Table 4 "Original" vs "Updated" columns).
     pub fn for_rev(rev: DesignRev) -> Self {
-        Self::new(models(rev))
+        let mut reg = Self::new(models(rev));
+        reg.rev = Some(rev);
+        reg
+    }
+
+    /// The design revision this registry was built for (`None` for
+    /// custom model sets assembled via [`Self::new`]). Part of the
+    /// engine's lowering-cache key, so programs lowered against one
+    /// revision are never replayed under another.
+    pub fn design_rev(&self) -> Option<DesignRev> {
+        self.rev
     }
 
     /// O(1) lookup of the accelerator registered for a target.

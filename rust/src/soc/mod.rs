@@ -101,7 +101,8 @@ pub fn reference_soc() -> Bus {
         vec![
             fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64,
             fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64,
-            0xA000_0000..0xA100_0000, // config/trigger/status block
+            fx::WGT_DRAM_BASE..fx::WGT_DRAM_BASE + fx::WGT_DRAM_SIZE as u64,
+            0xA000_0000..0xA100_0000, // config/trigger/status/DMA block
         ],
         IlaSim::new(FlexAsr::new().build_ila()),
     );

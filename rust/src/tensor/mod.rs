@@ -56,6 +56,21 @@ impl Tensor {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Content fingerprint over shape and element bits (FNV-1a). Two
+    /// tensors fingerprint equal iff shape and data are bit-identical
+    /// (up to hash collision); used as the operand key of the session
+    /// layer's lowering cache and for staged-burst identity.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0u64;
+        for &d in &self.shape {
+            h = crate::util::fnv1a(h, &(d as u64).to_le_bytes());
+        }
+        for &v in &self.data {
+            h = crate::util::fnv1a(h, &v.to_bits().to_le_bytes());
+        }
+        h
+    }
+
     /// Filled from a generator over the linear index.
     pub fn from_fn(shape: &[usize], f: impl FnMut(usize) -> f32) -> Self {
         let n = shape.iter().product();

@@ -1,4 +1,18 @@
-//! Small self-contained utilities (deterministic RNG).
+//! Small self-contained utilities (deterministic RNG, content hashing).
 
 pub mod rng;
 pub use rng::Rng;
+
+/// FNV-1a over a byte slice, continuing from `seed` (pass 0 to start a
+/// fresh hash at the standard offset basis). The shared content
+/// fingerprint behind [`crate::tensor::Tensor::fingerprint`] and the
+/// codegen `Burst` identity the execution engine's residency/lowering
+/// caches key on.
+pub fn fnv1a(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = if seed == 0 { 0xcbf2_9ce4_8422_2325 } else { seed };
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}

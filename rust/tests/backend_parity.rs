@@ -135,6 +135,32 @@ fn table1_lstm_wlm_full_gates_tiled_mmio_crosscheck_both_revs() {
             engine.lowered_invocations(),
             engine.lowered_triggers()
         );
+        // residency repeat on the SAME persistent engine: the staged
+        // gate tiles dedup and the calibration mirrors cache, and the
+        // cross-check must stay bit-clean — device-resident operands
+        // cannot change results on either revision
+        let repeat = program.run_traced_with(&mut engine, &b).unwrap();
+        assert_eq!(repeat.output, trace.output, "[{rev:?}] residency diverged");
+        assert_eq!(repeat.fidelity.total_unlowered(), 0);
+        assert!(
+            repeat.fidelity.is_clean(),
+            "[{rev:?}] residency broke MMIO/functional parity:\n{}",
+            repeat.fidelity
+        );
+        assert!(
+            repeat.bursts_deduped > 0,
+            "[{rev:?}] resident gate tiles must dedup on the repeat call"
+        );
+        assert!(
+            repeat.mirror_hits > 0,
+            "[{rev:?}] the bias-schedule/forced-bias mirrors must cache"
+        );
+        assert!(
+            repeat.bytes_streamed < trace.bytes_streamed,
+            "[{rev:?}] the repeat call must stream strictly less: {} vs {}",
+            repeat.bytes_streamed,
+            trace.bytes_streamed
+        );
     }
 }
 
