@@ -1,0 +1,308 @@
+//! Multi-tenant serving bench for the arbitrated device pool: an
+//! open-loop Poisson load generator drives W worker threads against a
+//! shared pool of K < W ILA devices, serving the LSTM-WLM layer with M
+//! rotating weight sets (M tenants). Reports throughput, p50/p99
+//! latency, pool occupancy, and the residency hit rate for both
+//! scheduling policies, and emits a `BENCH_serving.json` trajectory
+//! point (hand-serialized; the offline crate set has no serde).
+//!
+//! Open loop means arrivals are precomputed from an exponential
+//! inter-arrival distribution and do **not** wait for completions — a
+//! slow service backs requests up in the pool queue and shows up as p99
+//! latency, exactly like production serving.
+//!
+//! The timing section is load-dependent, so the strict acceptance check
+//! lives in a deterministic coda: a sequential repeated-weights pattern
+//! (A,B,B,A,A,B,B,A) on a 2-device pool, where affinity routing must
+//! stream strictly fewer bytes than FIFO. `tests/device_pool.rs` asserts
+//! the same property under CrossCheck; here it also lands in the JSON.
+//!
+//! `--smoke` shrinks shapes and request count for CI. Output path
+//! defaults to `BENCH_serving.json`; override with
+//! `D2A_BENCH_OUT_SERVING`.
+
+use d2a::ir::{GraphBuilder, Op, Target};
+use d2a::session::{Bindings, DesignRev, ExecBackend, SchedPolicy, Session};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Shared pool size (devices per target) — deliberately smaller than
+/// [`WORKERS`] so requests contend for devices.
+const POOL: usize = 2;
+/// Serving worker threads.
+const WORKERS: usize = 6;
+/// Tenants: distinct weight sets rotating through the request stream.
+const TENANTS: usize = 4;
+
+struct Load {
+    /// LSTM timesteps / embedding width / hidden width.
+    t: usize,
+    e: usize,
+    h: usize,
+    /// Requests in the open-loop run.
+    requests: usize,
+}
+
+fn lstm_session(policy: SchedPolicy) -> Session {
+    Session::builder()
+        .targets(&[Target::FlexAsr])
+        .design_rev(DesignRev::Updated)
+        .backend(ExecBackend::IlaMmio)
+        .device_pool(POOL)
+        .sched_policy(policy)
+        .build()
+}
+
+fn lstm_expr(steps: usize) -> d2a::ir::RecExpr {
+    let mut g = GraphBuilder::new();
+    let (x, wi, wh, b) = (g.var("x"), g.weight("wi"), g.weight("wh"), g.weight("b"));
+    g.expr.add(Op::FlexLstm { steps }, vec![x, wi, wh, b]);
+    g.finish()
+}
+
+/// One tenant's weight set plus a fresh per-request input, bound for the
+/// LSTM program.
+fn bindings_for(load: &Load, set: &(Tensor, Tensor, Tensor), rng: &mut Rng) -> Bindings {
+    Bindings::new()
+        .with("x", Tensor::randn(&[load.t, 1, load.e], rng, 1.0))
+        .with("wi", set.0.clone())
+        .with("wh", set.1.clone())
+        .with("b", set.2.clone())
+}
+
+fn weight_sets(load: &Load, rng: &mut Rng) -> Vec<(Tensor, Tensor, Tensor)> {
+    (0..TENANTS)
+        .map(|_| {
+            (
+                Tensor::randn(&[4 * load.h, load.e], rng, 0.3),
+                Tensor::randn(&[4 * load.h, load.h], rng, 0.3),
+                Tensor::randn(&[4 * load.h], rng, 0.1),
+            )
+        })
+        .collect()
+}
+
+struct ServingReport {
+    policy: SchedPolicy,
+    wall: Duration,
+    throughput: f64,
+    p50: Duration,
+    p99: Duration,
+    occupancy: f64,
+    hit_rate: f64,
+    bytes_streamed: u64,
+    mean_interarrival: Duration,
+    stats: d2a::session::PoolStats,
+}
+
+fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Open-loop run: W workers pull request indices off a shared counter,
+/// sleep until each request's precomputed Poisson arrival, execute it on
+/// a pool-backed engine, and record completion − arrival as its latency.
+fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
+    let session = lstm_session(policy);
+    let program = session.attach(lstm_expr(load.t));
+    let mut rng = Rng::new(61);
+    let sets = weight_sets(load, &mut rng);
+
+    // warm one device and measure the per-request service time s, then
+    // offer load just under pool capacity: mean inter-arrival 1.2·s/K
+    let mut warm = program.engine();
+    let _ = program.run_with(&mut warm, &bindings_for(load, &sets[0], &mut rng)).unwrap();
+    let t0 = Instant::now();
+    let _ = program.run_with(&mut warm, &bindings_for(load, &sets[0], &mut rng)).unwrap();
+    let service = t0.elapsed();
+    drop(warm);
+    let mean = service.mul_f64(1.2 / POOL as f64);
+
+    // precompute the whole request stream before the clock starts:
+    // tenant rotation, fresh inputs, and exponential inter-arrivals
+    let requests: Vec<Bindings> = (0..load.requests)
+        .map(|i| bindings_for(load, &sets[i % TENANTS], &mut rng))
+        .collect();
+    let mut arrivals = Vec::with_capacity(load.requests);
+    let mut at = Duration::ZERO;
+    for _ in 0..load.requests {
+        let u = rng.uniform() as f64;
+        at += mean.mul_f64(-(1.0 - u).ln());
+        arrivals.push(at);
+    }
+
+    let next = AtomicUsize::new(0);
+    let clock = Instant::now();
+    let (mut latencies, dedup, streamed, bytes) = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut engine = program.engine();
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= requests.len() {
+                            break;
+                        }
+                        let due = arrivals[i];
+                        let now = clock.elapsed();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                        let _ = program.run_with(&mut engine, &requests[i]).unwrap();
+                        mine.push(clock.elapsed() - due);
+                    }
+                    let dedup = engine.bursts_deduped();
+                    let streamed = engine.staged_streamed();
+                    let bytes = engine.bytes_streamed();
+                    (mine, dedup, streamed, bytes)
+                })
+            })
+            .collect();
+        let mut lat = Vec::with_capacity(load.requests);
+        let (mut dedup, mut streamed, mut bytes) = (0u64, 0u64, 0u64);
+        for h in handles {
+            let (mine, d, s, b) = h.join().expect("serving worker panicked");
+            lat.extend(mine);
+            dedup += d;
+            streamed += s;
+            bytes += b;
+        }
+        (lat, dedup, streamed, bytes)
+    });
+    let wall = clock.elapsed();
+    latencies.sort();
+
+    let stats = session.device_pool().unwrap().stats();
+    ServingReport {
+        policy,
+        wall,
+        throughput: load.requests as f64 / wall.as_secs_f64(),
+        p50: percentile(&latencies, 0.50),
+        p99: percentile(&latencies, 0.99),
+        occupancy: stats.busy.as_secs_f64() / (POOL as f64 * wall.as_secs_f64()),
+        hit_rate: dedup as f64 / (dedup + streamed).max(1) as f64,
+        bytes_streamed: bytes,
+        mean_interarrival: mean,
+        stats,
+    }
+}
+
+/// Deterministic coda: sequential repeated-weights pattern on a
+/// 2-device pool. Returns total `bytes_streamed` under the policy.
+fn repeated_weights_bytes(load: &Load, policy: SchedPolicy) -> u64 {
+    let pattern = [0usize, 1, 1, 0, 0, 1, 1, 0];
+    let session = lstm_session(policy);
+    let program = session.attach(lstm_expr(load.t));
+    let mut rng = Rng::new(62);
+    let sets = weight_sets(load, &mut rng);
+    let mut engine = program.engine();
+    for &set in pattern.iter() {
+        let b = bindings_for(load, &sets[set], &mut rng);
+        let _ = program.run_with(&mut engine, &b).unwrap();
+    }
+    engine.bytes_streamed()
+}
+
+fn report_json(r: &ServingReport, load: &Load) -> String {
+    format!(
+        "  {{\"section\": \"open-loop\", \"policy\": \"{}\", \
+         \"lstm\": [{}, {}, {}], \"requests\": {}, \"workers\": {}, \
+         \"pool\": {}, \"tenants\": {}, \
+         \"mean_interarrival_ms\": {:.3}, \"wall_ms\": {:.1}, \
+         \"throughput_rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
+         \"occupancy\": {:.3}, \"residency_hit_rate\": {:.3}, \
+         \"bytes_streamed\": {}, \"devices_built\": {}, \"queued\": {}, \
+         \"affinity_grants\": {}, \"fifo_grants\": {}, \
+         \"build_grants\": {}, \"starvation_promotions\": {}}}",
+        r.policy,
+        load.t,
+        load.e,
+        load.h,
+        load.requests,
+        WORKERS,
+        POOL,
+        TENANTS,
+        r.mean_interarrival.as_secs_f64() * 1e3,
+        r.wall.as_secs_f64() * 1e3,
+        r.throughput,
+        r.p50.as_secs_f64() * 1e3,
+        r.p99.as_secs_f64() * 1e3,
+        r.occupancy,
+        r.hit_rate,
+        r.bytes_streamed,
+        r.stats.devices_built,
+        r.stats.queued,
+        r.stats.affinity_grants,
+        r.stats.fifo_grants,
+        r.stats.build_grants,
+        r.stats.starvation_promotions,
+    )
+}
+
+fn main() -> std::io::Result<()> {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let load = if smoke {
+        Load { t: 2, e: 64, h: 64, requests: 24 }
+    } else {
+        Load { t: 8, e: 256, h: 256, requests: 48 }
+    };
+    println!(
+        "=== bench_serving: {} workers, pool {}, {} tenants, {} requests, \
+         LSTM ({}, {}, {}) ===",
+        WORKERS, POOL, TENANTS, load.requests, load.t, load.e, load.h
+    );
+
+    let mut records = Vec::new();
+    for policy in [SchedPolicy::Affinity, SchedPolicy::Fifo] {
+        let r = open_loop(&load, policy);
+        println!(
+            "{:<9} {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
+             occupancy {:>5.1}%  residency hits {:>5.1}%  {:>12} B streamed",
+            r.policy.to_string(),
+            r.throughput,
+            r.p50.as_secs_f64() * 1e3,
+            r.p99.as_secs_f64() * 1e3,
+            r.occupancy * 1e2,
+            r.hit_rate * 1e2,
+            r.bytes_streamed,
+        );
+        assert!(r.throughput > 0.0);
+        assert!(r.p50 <= r.p99);
+        assert!((0.0..=1.0).contains(&r.hit_rate));
+        assert!(
+            r.stats.devices_built as usize <= POOL,
+            "pool must cap device construction"
+        );
+        records.push(report_json(&r, &load));
+    }
+
+    // the strict, load-independent acceptance check
+    let aff = repeated_weights_bytes(&load, SchedPolicy::Affinity);
+    let fifo = repeated_weights_bytes(&load, SchedPolicy::Fifo);
+    println!(
+        "repeated-weights (A,B,B,A,A,B,B,A): affinity streams {aff} B, \
+         fifo {fifo} B ({:.2}x less)",
+        fifo as f64 / aff.max(1) as f64
+    );
+    assert!(
+        aff < fifo,
+        "affinity must stream strictly fewer bytes than FIFO: {aff} vs {fifo}"
+    );
+    records.push(format!(
+        "  {{\"section\": \"repeated-weights\", \"pattern\": \"ABBAABBA\", \
+         \"affinity_bytes\": {aff}, \"fifo_bytes\": {fifo}}}"
+    ));
+
+    let out = std::env::var("D2A_BENCH_OUT_SERVING")
+        .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+    std::fs::write(&out, format!("[\n{}\n]\n", records.join(",\n")))?;
+    println!("wrote {out}");
+    Ok(())
+}

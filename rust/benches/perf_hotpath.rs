@@ -79,6 +79,7 @@ fn main() {
     dispatch_benches(&mut rng);
     engine_reuse_benches(&mut rng);
     operand_residency_benches(&mut rng);
+    pool_scheduling_benches(&mut rng);
 }
 
 /// E-matching: op-indexed search + backoff scheduling vs the full-scan
@@ -286,6 +287,73 @@ fn operand_residency_benches(rng: &mut Rng) {
         "residency must cut streamed bytes >10x: fresh {} vs repeat {}",
         fresh.bytes_streamed,
         repeat.bytes_streamed
+    );
+}
+
+/// Affinity-aware device-pool scheduling on a repeated-weights serving
+/// workload: the A,B,B,A,A,B,B,A tenant pattern on a 2-device pool.
+/// Affinity routing parks each weight set on its own device and serves
+/// repeats from residency; FIFO re-streams the weights on every tenant
+/// switch. The full open-loop Poisson load generator (throughput,
+/// p50/p99, occupancy) lives in `benches/bench_serving.rs` — this
+/// section keeps the strict streamed-bytes comparison in the hot-path
+/// log.
+fn pool_scheduling_benches(rng: &mut Rng) {
+    use d2a::ir::{GraphBuilder, Op, Target};
+    use d2a::session::{ExecBackend, SchedPolicy};
+
+    let (t, e, h) = (2usize, 64usize, 64usize);
+    let pattern = [0usize, 1, 1, 0, 0, 1, 1, 0];
+    let mut bytes = [0u64; 2];
+    let mut times = [0f64; 2];
+    for (slot, policy) in [SchedPolicy::Affinity, SchedPolicy::Fifo].into_iter().enumerate() {
+        let mut g = GraphBuilder::new();
+        let (x, wi, wh, b) = (g.var("x"), g.weight("wi"), g.weight("wh"), g.weight("b"));
+        g.expr.add(Op::FlexLstm { steps: t }, vec![x, wi, wh, b]);
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::IlaMmio)
+            .device_pool(2)
+            .sched_policy(policy)
+            .build();
+        let program = session.attach(g.finish());
+        let mut set_rng = Rng::new(17);
+        let sets: Vec<_> = (0..2)
+            .map(|_| {
+                (
+                    Tensor::randn(&[4 * h, e], &mut set_rng, 0.3),
+                    Tensor::randn(&[4 * h, h], &mut set_rng, 0.3),
+                    Tensor::randn(&[4 * h], &mut set_rng, 0.1),
+                )
+            })
+            .collect();
+        let mut engine = program.engine();
+        let t0 = Instant::now();
+        for &set in pattern.iter() {
+            let (wi, wh, b) = &sets[set];
+            let bindings = Bindings::new()
+                .with("x", Tensor::randn(&[t, 1, e], rng, 1.0))
+                .with("wi", wi.clone())
+                .with("wh", wh.clone())
+                .with("b", b.clone());
+            let _ = program.run_with(&mut engine, &bindings).unwrap();
+        }
+        times[slot] = t0.elapsed().as_secs_f64() * 1e3;
+        bytes[slot] = engine.bytes_streamed();
+        println!(
+            "pool {:<9} A,B,B,A,A,B,B,A x lstm({t},{e},{h})  {:>8.1} ms  \
+             {:>10} B streamed",
+            policy.to_string(),
+            times[slot],
+            bytes[slot]
+        );
+    }
+    assert!(
+        bytes[0] < bytes[1],
+        "affinity scheduling must stream strictly fewer bytes than FIFO: \
+         {} vs {}",
+        bytes[0],
+        bytes[1]
     );
 }
 

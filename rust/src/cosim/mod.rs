@@ -170,6 +170,54 @@ pub fn cosim_lm_backend(
     registry: &AcceleratorRegistry,
     backend: ExecBackend,
 ) -> Result<LmReport, EvalError> {
+    let mut engine = ExecEngine::new(registry, backend);
+    cosim_lm_engine(expr, spec, weights, embed, tokens, n_sentences, &mut engine)
+}
+
+/// Hook that dispatches through a **borrowed** engine — the LM sweep
+/// path for engines whose devices come from a shared
+/// [`DevicePool`](crate::session::DevicePool) (the caller builds the
+/// pooled engine; the sweep only borrows it).
+struct EngineHook<'e, 'a> {
+    engine: &'e mut ExecEngine<'a>,
+    invocations: usize,
+    inv_errors: Vec<f32>,
+    track_errors: bool,
+}
+
+impl EvalHook for EngineHook<'_, '_> {
+    fn intercept(&mut self, node: &Node, ch: &[&Tensor]) -> Result<Option<Tensor>, EvalError> {
+        let out = match self.engine.execute(&node.op, ch)? {
+            Some(t) => t,
+            None => return Ok(None),
+        };
+        if node.op.is_accel_invocation() {
+            self.invocations += 1;
+            if self.track_errors {
+                if let Ok(reference) = crate::ir::interp::eval_op(&node.op, ch) {
+                    self.inv_errors.push(out.rel_error(&reference));
+                }
+            }
+        }
+        Ok(Some(out))
+    }
+}
+
+/// Language-model co-simulation on a **caller-held engine** — the
+/// engine's backend (and device source: private simulators or a shared
+/// [`DevicePool`](crate::session::DevicePool)) decides how accelerator
+/// ops execute. [`cosim_lm_backend`] wraps this with a throwaway
+/// private-device engine. The report drains the fidelity accumulated in
+/// the engine since it was last taken.
+pub fn cosim_lm_engine(
+    expr: &RecExpr,
+    spec: &LmSpec<'_>,
+    weights: &HashMap<String, Tensor>,
+    embed: &Tensor,
+    tokens: &[usize],
+    n_sentences: usize,
+    engine: &mut ExecEngine<'_>,
+) -> Result<LmReport, EvalError> {
     let seq_len = spec.seq_len;
     if seq_len == 0 {
         return Err(EvalError::Input("LmSpec::seq_len must be >= 1".into()));
@@ -190,8 +238,12 @@ pub fn cosim_lm_backend(
     }
     let (vocab, e) = (embed.shape[0], embed.shape[1]);
     let mut env = weights.clone();
-    let mut hook = AccelHook::with_backend(registry, backend);
-    hook.track_errors = spec.track_errors;
+    let mut hook = EngineHook {
+        engine,
+        invocations: 0,
+        inv_errors: Vec::new(),
+        track_errors: spec.track_errors,
+    };
     let mut nll_ref = 0.0f64;
     let mut nll_acc = 0.0f64;
     let mut count = 0usize;
@@ -235,7 +287,7 @@ pub fn cosim_lm_backend(
             count += 1;
         }
     }
-    let fidelity = hook.take_fidelity();
+    let fidelity = hook.engine.take_fidelity();
     Ok(LmReport {
         sentences: n_sentences,
         ref_perplexity: (nll_ref / count.max(1) as f64).exp() as f32,

@@ -32,6 +32,7 @@
 //! under every backend, so whole applications always run end to end —
 //! and [`FidelityReport::total_unlowered`] discloses every fallback.
 
+use super::pool::{Device, DevicePool, Resident};
 use super::{AcceleratorRegistry, DesignRev};
 use crate::accel::Accelerator;
 use crate::codegen::{self, LoweredProgram};
@@ -170,6 +171,23 @@ impl FidelityReport {
             into.max_abs_diff = into.max_abs_diff.max(rec.max_abs_diff);
         }
     }
+
+    /// Merge a batch of per-worker reports into one — the single merge
+    /// point at a sweep/pool boundary. The result is **worker-order
+    /// independent**: counts are commutative sums and the records are
+    /// put in canonical `(target, op)` order, so the same sweep run
+    /// with different worker counts (or interleavings) produces an
+    /// identical report. Prefer this over folding [`Self::merge`] in a
+    /// join loop, whose record order follows first-seen worker order.
+    pub fn merge_all(reports: impl IntoIterator<Item = FidelityReport>) -> FidelityReport {
+        let mut out = FidelityReport::default();
+        for rep in reports {
+            out.merge(rep);
+        }
+        out.records
+            .sort_by(|a, b| (a.target.index(), &a.op).cmp(&(b.target.index(), &b.op)));
+        out
+    }
 }
 
 impl fmt::Display for FidelityReport {
@@ -220,11 +238,19 @@ struct LowerKey {
     operands: Vec<u64>,
 }
 
-/// Bound on cached lowered programs per engine; the map is cleared
-/// wholesale when full (per-datapoint operands in big sweeps would
-/// otherwise grow it without bound, and a tiled program can hold
-/// megabytes of encoded weight bursts).
+/// Bound on cached lowered programs per engine (per-datapoint operands
+/// in big sweeps would otherwise grow the memo without bound, and a
+/// tiled program can hold megabytes of encoded weight bursts). When
+/// full, the **least-recently-used single entry** is evicted, so hot
+/// repeated-layer programs survive per-datapoint churn that a wholesale
+/// clear would flush.
 const LOWER_CACHE_CAP: usize = 16;
+
+/// One cached lowering plus its LRU stamp.
+struct CacheSlot {
+    prog: Option<Arc<LoweredProgram>>,
+    last_use: u64,
+}
 
 /// A per-engine memo of whole lowered programs, `Arc`-shared with every
 /// caller. A hit skips re-encoding every operand burst **and** skips the
@@ -233,22 +259,16 @@ const LOWER_CACHE_CAP: usize = 16;
 /// the tiled-LSTM `lstm_traced` bias-schedule replay) — the dominant
 /// host-side cost of the MMIO path for repeated evaluations. Declines
 /// (`lower` → `None`) are cached too, so unlowerable ops pay the probe
-/// once per operand set.
+/// once per operand set. Eviction is per-entry LRU (see
+/// [`LOWER_CACHE_CAP`]), counted in `evictions`.
 #[derive(Default)]
 struct LoweringCache {
-    entries: HashMap<LowerKey, Option<Arc<LoweredProgram>>>,
+    entries: HashMap<LowerKey, CacheSlot>,
+    clock: u64,
     hits: u64,
     misses: u64,
     mirror_hits: u64,
-}
-
-/// One device-resident staged operand range: memory byte range plus the
-/// fingerprint of the burst that staged it.
-struct Resident {
-    mem: String,
-    lo: usize,
-    hi: usize,
-    fp: u64,
+    evictions: u64,
 }
 
 /// Drop residency entries that `cmds` may invalidate: writes to a
@@ -300,11 +320,23 @@ fn invalidate_hazards(resident: &mut Vec<Resident>, model: &Ila, cmds: &[Cmd]) {
 /// cache (program + calibration-mirror memo, [`Self::mirror_hits`]),
 /// repeated MMIO evaluations of one layer re-stream only the operands
 /// that actually changed.
+///
+/// Engines come in two flavors, chosen at construction:
+///
+/// * **private** ([`Self::new`]) — the engine owns one lazily-built
+///   device per target, the classic one-simulator-set-per-worker model;
+/// * **pooled** ([`Self::new_pooled`]) — the engine checks a device out
+///   of a shared [`DevicePool`] per lowered program and returns it with
+///   its residency set intact, so residency built up by one worker is
+///   visible to the next request the pool routes to that device. The
+///   residency reconciliation in [`Self::bytes_streamed`] accounting is
+///   identical either way: a staged burst is skipped only when the
+///   device's resident fingerprint matches bit-for-bit, so results do
+///   not depend on which device the pool picked.
 pub struct ExecEngine<'r> {
     registry: &'r AcceleratorRegistry,
     backend: ExecBackend,
-    sims: [Option<IlaSim>; Target::COUNT],
-    resident: [Vec<Resident>; Target::COUNT],
+    devices: DeviceSource,
     cache: LoweringCache,
     fidelity: FidelityReport,
     lowered: usize,
@@ -312,16 +344,45 @@ pub struct ExecEngine<'r> {
     sims_built: usize,
     bytes_streamed: u64,
     bursts_deduped: u64,
+    staged_streamed: u64,
+}
+
+/// Where an engine's MMIO devices come from: a private lazily-built
+/// per-target set, or a shared arbitrated pool.
+enum DeviceSource {
+    Private(Box<[Option<Device>; Target::COUNT]>),
+    Pooled(Arc<DevicePool>),
 }
 
 impl<'r> ExecEngine<'r> {
-    /// Build an engine over a registry for the given backend.
+    /// Build an engine over a registry for the given backend, with
+    /// private per-target devices (built lazily on first MMIO use).
     pub fn new(registry: &'r AcceleratorRegistry, backend: ExecBackend) -> Self {
+        let slots = Box::new(std::array::from_fn(|_| None));
+        Self::with_devices(registry, backend, DeviceSource::Private(slots))
+    }
+
+    /// Build an engine that draws devices from a shared [`DevicePool`]
+    /// instead of owning private simulators: each lowered program checks
+    /// a device out (blocking under contention) and returns it — with
+    /// its residency set intact — when the program finishes.
+    pub fn new_pooled(
+        registry: &'r AcceleratorRegistry,
+        backend: ExecBackend,
+        pool: Arc<DevicePool>,
+    ) -> Self {
+        Self::with_devices(registry, backend, DeviceSource::Pooled(pool))
+    }
+
+    fn with_devices(
+        registry: &'r AcceleratorRegistry,
+        backend: ExecBackend,
+        devices: DeviceSource,
+    ) -> Self {
         ExecEngine {
             registry,
             backend,
-            sims: std::array::from_fn(|_| None),
-            resident: std::array::from_fn(|_| Vec::new()),
+            devices,
             cache: LoweringCache::default(),
             fidelity: FidelityReport::default(),
             lowered: 0,
@@ -329,7 +390,13 @@ impl<'r> ExecEngine<'r> {
             sims_built: 0,
             bytes_streamed: 0,
             bursts_deduped: 0,
+            staged_streamed: 0,
         }
+    }
+
+    /// True when this engine draws devices from a shared [`DevicePool`].
+    pub fn pooled(&self) -> bool {
+        matches!(self.devices, DeviceSource::Pooled(_))
     }
 
     /// The engine's backend.
@@ -358,15 +425,18 @@ impl<'r> ExecEngine<'r> {
         self.triggers
     }
 
-    /// Per-target simulators constructed so far (at most one per target
-    /// for the engine's lifetime — the counter a caller-held engine
-    /// keeps flat where per-call engines rebuild).
+    /// Private per-target simulators constructed so far (at most one per
+    /// target for the engine's lifetime — the counter a caller-held
+    /// engine keeps flat where per-call engines rebuild). Pooled engines
+    /// build devices through the pool, so this stays 0 there; see
+    /// [`DevicePool::stats`] for the pooled equivalent.
     pub fn sims_built(&self) -> usize {
         self.sims_built
     }
 
     /// Simulator resets performed (one dirty-region reset per lowered
-    /// program).
+    /// program). Covers private devices only; pooled devices travel with
+    /// their own counters.
     pub fn resets(&self) -> u64 {
         self.sims().map(|s| s.resets).sum()
     }
@@ -374,13 +444,13 @@ impl<'r> ExecEngine<'r> {
     /// Memory bytes restored by those resets. Compare against
     /// [`Self::resets`] × [`Self::state_bytes`] — what the same run
     /// would have cloned under full per-invocation resets — to quantify
-    /// the dirty-tracking savings.
+    /// the dirty-tracking savings. Private devices only.
     pub fn bytes_cleared(&self) -> u64 {
         self.sims().map(|s| s.bytes_cleared).sum()
     }
 
     /// Total architectural memory bytes of the built simulators (the
-    /// per-reset cost of the full-clone baseline).
+    /// per-reset cost of the full-clone baseline). Private devices only.
     pub fn state_bytes(&self) -> u64 {
         self.sims().map(|s| s.state_bytes()).sum()
     }
@@ -397,6 +467,24 @@ impl<'r> ExecEngine<'r> {
     /// already device-resident in the same staging range.
     pub fn bursts_deduped(&self) -> u64 {
         self.bursts_deduped
+    }
+
+    /// Staged (region-mapped) operand bursts that actually had to be
+    /// streamed — the residency misses. Together with
+    /// [`Self::bursts_deduped`] this gives the residency hit rate.
+    pub fn staged_streamed(&self) -> u64 {
+        self.staged_streamed
+    }
+
+    /// Fraction of staged operand bursts served from device residency:
+    /// `deduped / (deduped + streamed)`. `0.0` when nothing was staged.
+    pub fn residency_hit_rate(&self) -> f64 {
+        let total = self.bursts_deduped + self.staged_streamed;
+        if total == 0 {
+            0.0
+        } else {
+            self.bursts_deduped as f64 / total as f64
+        }
     }
 
     /// Driver-side calibration mirrors avoided by lowering-cache hits
@@ -416,8 +504,18 @@ impl<'r> ExecEngine<'r> {
         self.cache.misses
     }
 
+    /// Lowering-cache entries evicted (LRU, one at a time, when the
+    /// cache is at capacity).
+    pub fn lower_cache_evictions(&self) -> u64 {
+        self.cache.evictions
+    }
+
     fn sims(&self) -> impl Iterator<Item = &IlaSim> {
-        self.sims.iter().flatten()
+        let slots: &[Option<Device>] = match &self.devices {
+            DeviceSource::Private(slots) => &slots[..],
+            DeviceSource::Pooled(_) => &[],
+        };
+        slots.iter().flatten().map(|d| &d.sim)
     }
 
     /// Take the accumulated fidelity report, leaving an empty one.
@@ -503,12 +601,16 @@ impl<'r> ExecEngine<'r> {
             op: op.head(),
             operands: inputs.iter().map(|t| t.fingerprint()).collect(),
         };
-        if let Some(cached) = self.cache.entries.get(&key) {
+        self.cache.clock += 1;
+        let now = self.cache.clock;
+        if let Some(slot) = self.cache.entries.get_mut(&key) {
+            slot.last_use = now;
             self.cache.hits += 1;
-            return match cached {
+            return match &slot.prog {
                 Some(p) => {
+                    let p = Arc::clone(p);
                     self.cache.mirror_hits += p.mirrors as u64;
-                    Some(Arc::clone(p))
+                    Some(p)
                 }
                 None => None,
             };
@@ -516,36 +618,82 @@ impl<'r> ExecEngine<'r> {
         self.cache.misses += 1;
         let lowered = accel.lower(op, inputs).map(Arc::new);
         if self.cache.entries.len() >= LOWER_CACHE_CAP {
-            // per-datapoint operands would grow the memo without bound;
-            // a wholesale clear keeps the hot repeated-layer case cached
-            // at bounded memory
-            self.cache.entries.clear();
+            // evict the least-recently-used single entry: per-datapoint
+            // operands churn through the cold slots while hot
+            // repeated-layer programs keep refreshing their stamp
+            let victim = self
+                .cache
+                .entries
+                .iter()
+                .min_by_key(|(_, slot)| slot.last_use)
+                .map(|(k, _)| k.clone());
+            if let Some(victim) = victim {
+                self.cache.entries.remove(&victim);
+                self.cache.evictions += 1;
+            }
         }
-        self.cache.entries.insert(key, lowered.clone());
+        self.cache.entries.insert(key, CacheSlot { prog: lowered.clone(), last_use: now });
         lowered
     }
 
-    /// Play a lowered program on the per-target simulator — one
-    /// residency-keeping dirty reset up front, then its invocations run
-    /// on shared device state (tiles reuse staged operands) — decode and
-    /// stitch the result. Staged bursts that are still device-resident
-    /// from an earlier program of this engine (same staging range, same
-    /// content fingerprint) are skipped instead of re-streamed.
+    /// Run a lowered program on a device — private or checked out of the
+    /// shared pool, per this engine's [`DeviceSource`].
     fn run_lowered(
         &mut self,
         accel: &dyn Accelerator,
         op: &Op,
         prog: &LoweredProgram,
     ) -> Result<Tensor, EvalError> {
-        let idx = accel.target().index();
-        if self.sims[idx].is_none() {
-            self.sims[idx] = Some(IlaSim::new(accel.build_ila()));
-            self.sims_built += 1;
-        }
         self.lowered += 1;
         self.triggers += prog.invocations.len();
-        let resident = &mut self.resident[idx];
-        let sim = self.sims[idx].as_mut().unwrap();
+        let pool = match &self.devices {
+            DeviceSource::Pooled(pool) => Some(Arc::clone(pool)),
+            DeviceSource::Private(_) => None,
+        };
+        if let Some(pool) = pool {
+            // checkout carries the program's staged-burst fingerprints so
+            // the arbiter can route to the device with the best residency
+            let fps = staged_fingerprints(prog);
+            let mut lease = pool
+                .checkout(accel.target(), &fps, || IlaSim::new(accel.build_ila()))
+                .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))?;
+            // the lease's Drop returns the device — residency intact —
+            // whether the program succeeds or errors
+            return self.play_program(lease.device_mut(), op, prog);
+        }
+        let idx = accel.target().index();
+        let taken = match &mut self.devices {
+            DeviceSource::Private(slots) => slots[idx].take(),
+            DeviceSource::Pooled(_) => unreachable!("pooled path returned above"),
+        };
+        let mut dev = match taken {
+            Some(dev) => dev,
+            None => {
+                self.sims_built += 1;
+                Device::new(IlaSim::new(accel.build_ila()))
+            }
+        };
+        let out = self.play_program(&mut dev, op, prog);
+        if let DeviceSource::Private(slots) = &mut self.devices {
+            slots[idx] = Some(dev);
+        }
+        out
+    }
+
+    /// Play a lowered program on a device — one residency-keeping dirty
+    /// reset up front, then its invocations run on shared device state
+    /// (tiles reuse staged operands) — decode and stitch the result.
+    /// Staged bursts that are still device-resident from an earlier
+    /// program (same staging range, same content fingerprint) are
+    /// skipped instead of re-streamed; the fingerprint check makes this
+    /// safe no matter which engine last used a pooled device.
+    fn play_program(
+        &mut self,
+        dev: &mut Device,
+        op: &Op,
+        prog: &LoweredProgram,
+    ) -> Result<Tensor, EvalError> {
+        let Device { sim, resident } = dev;
         // between-program reset: everything the last program dirtied is
         // rewound EXCEPT ranges whose staged bursts we may reuse
         let keep: Vec<(String, usize, usize)> =
@@ -573,6 +721,7 @@ impl<'r> ExecEngine<'r> {
                         EvalError::Op(op.head(), format!("MMIO backend: {e}"))
                     })?;
                     self.bytes_streamed += burst.payload_bytes();
+                    self.staged_streamed += 1;
                     resident.retain(|r| r.mem != mem || r.hi <= lo || r.lo >= hi);
                     resident.push(Resident { mem, lo, hi, fp: burst.fingerprint });
                 } else {
@@ -594,6 +743,17 @@ impl<'r> ExecEngine<'r> {
         codegen::stitch_parts(parts, &prog.stitch)
             .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))
     }
+}
+
+/// Fingerprints of a program's region-mapped (staged) bursts — the
+/// affinity-score inputs a pooled checkout sends to the arbiter.
+fn staged_fingerprints(prog: &LoweredProgram) -> Vec<u64> {
+    prog.invocations
+        .iter()
+        .flat_map(|inv| inv.bursts.iter())
+        .filter(|b| b.region.is_some())
+        .map(|b| b.fingerprint)
+        .collect()
 }
 
 #[cfg(test)]
@@ -707,5 +867,69 @@ mod tests {
         assert_eq!(a.total_mismatches(), 1);
         assert_eq!(a.records().len(), 2);
         assert!(!a.is_clean());
+    }
+
+    #[test]
+    fn merge_all_is_worker_order_independent() {
+        let t1 = Tensor::ones(&[2]);
+        let t2 = Tensor::zeros(&[2]);
+        let make = |seed: usize| {
+            // three "workers" that saw different op mixes
+            let mut r = FidelityReport::default();
+            if seed % 2 == 0 {
+                r.record(&Op::VtaGemm, Target::Vta, &t1, &t2);
+            }
+            r.record(&Op::FlexLinear, Target::FlexAsr, &t1, &t1);
+            if seed == 2 {
+                r.record(
+                    &Op::HlscnnConv2d { stride: (1, 1), pad: (0, 0) },
+                    Target::Hlscnn,
+                    &t1,
+                    &t1,
+                );
+            }
+            r
+        };
+        let forward = FidelityReport::merge_all([make(0), make(1), make(2)]);
+        let shuffled = FidelityReport::merge_all([make(2), make(0), make(1)]);
+        assert_eq!(forward.total_checked(), shuffled.total_checked());
+        assert_eq!(forward.total_mismatches(), shuffled.total_mismatches());
+        let sig = |r: &FidelityReport| {
+            r.records()
+                .iter()
+                .map(|rec| (rec.target, rec.op.clone(), rec.checked, rec.mismatches))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(sig(&forward), sig(&shuffled), "record order must be canonical");
+    }
+
+    #[test]
+    fn lowering_cache_evicts_single_lru_entries() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+        let mut rng = Rng::new(11);
+        let x = Tensor::randn(&[1, 16], &mut rng, 1.0);
+        let b = Tensor::randn(&[4], &mut rng, 0.1);
+        let weights: Vec<Tensor> =
+            (0..LOWER_CACHE_CAP + 1).map(|_| Tensor::randn(&[4, 16], &mut rng, 0.3)).collect();
+        // fill the cache exactly to capacity
+        for w in weights.iter().take(LOWER_CACHE_CAP) {
+            engine.execute(&Op::FlexLinear, &[&x, w, &b]).unwrap().unwrap();
+        }
+        assert_eq!(engine.lower_cache_evictions(), 0);
+        // refresh entry 0 so it is NOT the LRU victim...
+        engine.execute(&Op::FlexLinear, &[&x, &weights[0], &b]).unwrap().unwrap();
+        let hits_before = engine.lower_cache_hits();
+        assert_eq!(hits_before, 1);
+        // ...then overflow: exactly one (cold) entry is evicted
+        engine.execute(&Op::FlexLinear, &[&x, &weights[LOWER_CACHE_CAP], &b]).unwrap().unwrap();
+        assert_eq!(engine.lower_cache_evictions(), 1);
+        // the refreshed hot entry survived the eviction
+        engine.execute(&Op::FlexLinear, &[&x, &weights[0], &b]).unwrap().unwrap();
+        assert_eq!(engine.lower_cache_hits(), hits_before + 1);
+        // the LRU victim (entry 1) is gone: touching it is a miss
+        let misses_before = engine.lower_cache_misses();
+        engine.execute(&Op::FlexLinear, &[&x, &weights[1], &b]).unwrap().unwrap();
+        assert_eq!(engine.lower_cache_misses(), misses_before + 1);
     }
 }

@@ -43,13 +43,23 @@
 //! programs, and callers can hold one [`ExecEngine`] across calls
 //! ([`CompiledProgram::engine`] + the `*_with` APIs) so repeated
 //! single-point evaluations skip per-call simulator construction.
+//!
+//! Sessions can additionally be built with a shared **device pool**
+//! ([`SessionBuilder::device_pool`]): instead of one private simulator
+//! set per worker, all engines check devices out of one arbitrated
+//! [`DevicePool`] (K devices per target, K typically < workers) whose
+//! scheduler routes each request to the device with the best operand
+//! residency ([`SchedPolicy`]) — the multi-tenant serving model. See
+//! the [`pool`] module docs.
 
 pub mod backend;
 pub mod bindings;
+pub mod pool;
 pub mod registry;
 
 pub use backend::{ExecBackend, ExecEngine, FidelityRecord, FidelityReport};
 pub use bindings::{Bindings, LayeredEnv};
+pub use pool::{DevicePool, PoolError, PoolStats, SchedPolicy};
 pub use registry::AcceleratorRegistry;
 
 use crate::apps::App;
@@ -100,6 +110,8 @@ pub struct SessionBuilder {
     track_errors: bool,
     backend: ExecBackend,
     extended: bool,
+    pool_devices: Option<usize>,
+    sched: SchedPolicy,
 }
 
 impl Default for SessionBuilder {
@@ -122,6 +134,8 @@ impl SessionBuilder {
             track_errors: false,
             backend: ExecBackend::Functional,
             extended: false,
+            pool_devices: None,
+            sched: SchedPolicy::Affinity,
         }
     }
 
@@ -186,6 +200,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Share one arbitrated [`DevicePool`] of `devices_per_target`
+    /// simulators (clamped to ≥ 1) among all of the session's engines,
+    /// instead of one private simulator set per worker. Only the MMIO
+    /// backends touch devices, so this is a no-op under
+    /// [`ExecBackend::Functional`]. Pick `devices_per_target` smaller
+    /// than the worker count to model multi-tenant contention.
+    pub fn device_pool(mut self, devices_per_target: usize) -> Self {
+        self.pool_devices = Some(devices_per_target.max(1));
+        self
+    }
+
+    /// Scheduling policy for the shared device pool (default
+    /// [`SchedPolicy::Affinity`]). Meaningless without
+    /// [`Self::device_pool`].
+    pub fn sched_policy(mut self, policy: SchedPolicy) -> Self {
+        self.sched = policy;
+        self
+    }
+
     /// Instantiate the accelerator models once and freeze the session.
     pub fn build(self) -> Session {
         Session {
@@ -198,6 +231,7 @@ impl SessionBuilder {
             track_errors: self.track_errors,
             backend: self.backend,
             extended: self.extended,
+            pool: self.pool_devices.map(|k| Arc::new(DevicePool::new(k, self.sched))),
         }
     }
 }
@@ -214,6 +248,7 @@ pub struct Session {
     track_errors: bool,
     backend: ExecBackend,
     extended: bool,
+    pool: Option<Arc<DevicePool>>,
 }
 
 impl Session {
@@ -250,6 +285,13 @@ impl Session {
     /// The session's execution backend.
     pub fn backend(&self) -> ExecBackend {
         self.backend
+    }
+
+    /// The session's shared device pool, when one was configured via
+    /// [`SessionBuilder::device_pool`] (e.g. to read
+    /// [`DevicePool::stats`] after a serving run).
+    pub fn device_pool(&self) -> Option<&Arc<DevicePool>> {
+        self.pool.as_ref()
     }
 
     /// Compile an application (including app-specific rewrite rules) into
@@ -311,6 +353,7 @@ impl Session {
             workers: self.workers,
             track_errors: self.track_errors,
             backend: self.backend,
+            pool: self.pool.clone(),
         }
     }
 }
@@ -549,6 +592,7 @@ pub struct CompiledProgram {
     workers: usize,
     track_errors: bool,
     backend: ExecBackend,
+    pool: Option<Arc<DevicePool>>,
 }
 
 impl CompiledProgram {
@@ -600,8 +644,23 @@ impl CompiledProgram {
     /// assert_eq!(engine.sims_built(), 1); // one simulator, two MMIO runs
     /// assert_eq!(engine.lowered_invocations(), 2);
     /// ```
+    ///
+    /// When the session was built with [`SessionBuilder::device_pool`],
+    /// the returned engine draws devices from the shared pool instead of
+    /// owning private simulators.
     pub fn engine(&self) -> ExecEngine<'_> {
-        ExecEngine::new(&self.registry, self.backend)
+        match &self.pool {
+            Some(pool) => {
+                ExecEngine::new_pooled(&self.registry, self.backend, Arc::clone(pool))
+            }
+            None => ExecEngine::new(&self.registry, self.backend),
+        }
+    }
+
+    /// The shared device pool this handle's engines draw from (None for
+    /// sessions without [`SessionBuilder::device_pool`]).
+    pub fn device_pool(&self) -> Option<&Arc<DevicePool>> {
+        self.pool.as_ref()
     }
 
     /// Guard for the `*_with` APIs: the engine must dispatch into this
@@ -826,7 +885,9 @@ impl CompiledProgram {
         let mut totals = (0usize, 0usize, 0usize); // (ref, acc, n)
         let mut sim_time = Duration::ZERO;
         let mut exec_errors = 0usize;
-        let mut fidelity = FidelityReport::default();
+        // workers return their raw reports; ONE merge at the boundary
+        // (below) keeps the result worker-order-independent
+        let mut worker_fidelity = Vec::with_capacity(workers);
         thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|wid| {
@@ -873,7 +934,7 @@ impl CompiledProgram {
                 totals.2 += n;
                 exec_errors += errs;
                 sim_time += busy;
-                fidelity.merge(fid);
+                worker_fidelity.push(fid);
             }
         });
         SweepReport {
@@ -884,7 +945,7 @@ impl CompiledProgram {
             sim_time,
             workers,
             exec_errors,
-            fidelity,
+            fidelity: FidelityReport::merge_all(worker_fidelity),
         }
     }
 
@@ -921,15 +982,17 @@ impl CompiledProgram {
         tokens: &[usize],
         n_sentences: usize,
     ) -> Result<crate::cosim::LmReport, EvalError> {
-        crate::cosim::cosim_lm_backend(
+        // a pooled session's LM sweep draws its devices from the shared
+        // pool like every other engine of the session
+        let mut engine = self.engine();
+        crate::cosim::cosim_lm_engine(
             &self.expr,
             spec,
             weights,
             embed,
             tokens,
             n_sentences,
-            &self.registry,
-            self.backend,
+            &mut engine,
         )
     }
 

@@ -1,0 +1,674 @@
+//! The arbitrated accelerator device pool: K shared per-target devices
+//! behind an asynchronous work queue — the multi-tenant serving story.
+//!
+//! The per-worker engine model (one private [`IlaSim`] set per
+//! [`super::ExecEngine`]) is the opposite of a real SoC, where many
+//! requests contend for few devices behind an arbiter. A [`DevicePool`]
+//! owns up to `K` devices per target (`K` typically < worker threads)
+//! and brokers access through **decoupled request/response channels**,
+//! the N:K arbitration structure of hardware accelerator interfaces:
+//!
+//! ```text
+//! worker 0 ──checkout──▶ ┌──────────────┐ ──Grant(Device)──▶ worker 0
+//! worker 1 ──checkout──▶ │ arbiter      │ ──Build──────────▶ worker 1
+//!    ...                 │ (own thread) │        ...
+//! worker N ──return────▶ └──────────────┘
+//! ```
+//!
+//! Every checkout sends a request (target + the program's staged-burst
+//! fingerprints) over the pool's MPSC work queue and blocks on its own
+//! private response channel; the arbiter thread answers with either a
+//! granted [`Device`] or a `Build` ticket (capacity reserved, the caller
+//! constructs the simulator itself so model construction never blocks
+//! the arbiter). Returned devices keep their **residency set** — the
+//! `(region, fingerprint)` pairs of operand bursts still staged in
+//! device memory — which is exactly what the scheduler routes on:
+//!
+//! * [`SchedPolicy::Affinity`] (default): a freed device goes to the
+//!   waiting request whose burst fingerprints best overlap the device's
+//!   resident set (a cache-aware load balancer: re-streaming a weight
+//!   set that is already on *some* device is the dominant serving cost);
+//!   zero-overlap requests fall back to FIFO order, and any request
+//!   passed over [`DevicePool::STARVATION_BOUND`] times is served next
+//!   regardless of affinity, bounding starvation. A zero-overlap request
+//!   also prefers *building* a fresh device while the pool is below
+//!   capacity, rather than evicting residency another request built up.
+//! * [`SchedPolicy::Fifo`]: strict arrival order, residency-blind — the
+//!   baseline the serving benchmark compares against.
+//!
+//! Correctness does not depend on placement: the engine dirty-resets a
+//! checked-out device before playing a program (keeping only resident
+//! ranges, which are re-verified by fingerprint before every skip), so
+//! results are bit-identical whichever device serves a request —
+//! scheduling affects *traffic*, never *values*.
+
+use crate::ila::sim::IlaSim;
+use crate::ir::Target;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// One device-resident staged operand range: memory byte range plus the
+/// fingerprint of the burst that staged it.
+pub(crate) struct Resident {
+    pub(crate) mem: String,
+    pub(crate) lo: usize,
+    pub(crate) hi: usize,
+    pub(crate) fp: u64,
+}
+
+/// One pooled device: an ILA simulator plus the residency set that
+/// travels with it across checkouts (the whole point of affinity
+/// scheduling — a returned device remembers what is staged on it).
+pub(crate) struct Device {
+    pub(crate) sim: IlaSim,
+    pub(crate) resident: Vec<Resident>,
+}
+
+impl Device {
+    pub(crate) fn new(sim: IlaSim) -> Self {
+        Device { sim, resident: Vec::new() }
+    }
+}
+
+/// How the pool assigns freed/idle devices to requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Route each request to the device whose resident burst set best
+    /// covers the request's staged-burst fingerprints; FIFO fallback on
+    /// zero overlap, with a starvation bound
+    /// ([`DevicePool::STARVATION_BOUND`]).
+    #[default]
+    Affinity,
+    /// Strict arrival order, residency-blind (the serving baseline).
+    Fifo,
+}
+
+impl fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedPolicy::Affinity => write!(f, "affinity"),
+            SchedPolicy::Fifo => write!(f, "fifo"),
+        }
+    }
+}
+
+/// Errors surfaced by pool checkouts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PoolError {
+    /// The pool's arbiter has shut down (the pool was dropped while a
+    /// checkout was in flight).
+    Closed,
+}
+
+impl fmt::Display for PoolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PoolError::Closed => write!(f, "device pool is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for PoolError {}
+
+/// Cumulative scheduling counters, snapshotted by [`DevicePool::stats`].
+///
+/// Grants are classified exclusively:
+/// `affinity_grants + fifo_grants + build_grants + starvation_promotions
+/// == checkouts`.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// Devices constructed so far (≤ capacity × targets in use).
+    pub devices_built: u64,
+    /// Total granted checkouts.
+    pub checkouts: u64,
+    /// Grants routed by residency overlap (affinity policy only).
+    pub affinity_grants: u64,
+    /// Grants routed by arrival order (FIFO policy, or the affinity
+    /// policy's zero-overlap fallback).
+    pub fifo_grants: u64,
+    /// Grants satisfied by constructing a new device (pool below
+    /// capacity for that target).
+    pub build_grants: u64,
+    /// Grants forced by the starvation bound — a request passed over
+    /// [`DevicePool::STARVATION_BOUND`] times was served regardless of
+    /// affinity.
+    pub starvation_promotions: u64,
+    /// Checkouts that found no idle device and no spare capacity and had
+    /// to queue.
+    pub queued: u64,
+    /// Total time queued requests spent waiting for a device.
+    pub wait: Duration,
+    /// Integral of (checked-out devices × time): divide by
+    /// `capacity × wall-clock` for pool occupancy.
+    pub busy: Duration,
+}
+
+#[derive(Default)]
+struct Counters {
+    devices_built: AtomicU64,
+    checkouts: AtomicU64,
+    affinity_grants: AtomicU64,
+    fifo_grants: AtomicU64,
+    build_grants: AtomicU64,
+    starvation_promotions: AtomicU64,
+    queued: AtomicU64,
+    wait_nanos: AtomicU64,
+    busy_nanos: AtomicU64,
+}
+
+enum Response {
+    /// A device, granted. Its residency set is intact.
+    Grant(Device),
+    /// Capacity reserved: the requester constructs the device itself
+    /// (keeps ~0.3 MB simulator construction off the arbiter thread).
+    Build,
+}
+
+enum Request {
+    Checkout { target: usize, fps: Vec<u64>, resp: mpsc::Sender<Response> },
+    Return { target: usize, device: Device },
+    Shutdown,
+}
+
+struct Waiter {
+    seq: u64,
+    target: usize,
+    fps: Vec<u64>,
+    resp: mpsc::Sender<Response>,
+    passed_over: u32,
+    since: Instant,
+}
+
+enum GrantKind {
+    Affinity,
+    Fifo,
+    Starved,
+}
+
+/// How many staged-burst fingerprints of `fps` are currently resident on
+/// `device` — the affinity score.
+fn overlap(device: &Device, fps: &[u64]) -> usize {
+    fps.iter().filter(|fp| device.resident.iter().any(|r| r.fp == **fp)).count()
+}
+
+/// Pick the idle device for an arriving request: under affinity, the one
+/// with the best residency overlap; otherwise (and on zero overlap) the
+/// front of the idle queue — devices return to the back, so the fallback
+/// spreads load round-robin instead of hammering one device.
+fn best_idle(idle: &[Device], fps: &[u64], policy: SchedPolicy) -> (usize, usize) {
+    if matches!(policy, SchedPolicy::Fifo) {
+        return (0, 0);
+    }
+    let mut best = (0usize, 0usize);
+    for (i, d) in idle.iter().enumerate() {
+        let ov = overlap(d, fps);
+        if ov > best.1 {
+            best = (i, ov);
+        }
+    }
+    best
+}
+
+/// Pick the waiting request a freed device should serve. Starved
+/// requests (passed over ≥ [`DevicePool::STARVATION_BOUND`] times) win
+/// unconditionally, oldest first; then affinity by overlap (ties to the
+/// older request); then FIFO.
+fn choose_waiter(
+    waiting: &[Waiter],
+    target: usize,
+    device: &Device,
+    policy: SchedPolicy,
+) -> Option<(usize, GrantKind)> {
+    let mut oldest: Option<usize> = None;
+    let mut starved: Option<usize> = None;
+    let mut best: Option<(usize, usize)> = None; // (index, overlap > 0)
+    for (i, w) in waiting.iter().enumerate() {
+        if w.target != target {
+            continue;
+        }
+        if oldest.map_or(true, |o| waiting[o].seq > w.seq) {
+            oldest = Some(i);
+        }
+        if w.passed_over >= DevicePool::STARVATION_BOUND
+            && starved.map_or(true, |s| waiting[s].seq > w.seq)
+        {
+            starved = Some(i);
+        }
+        let ov = overlap(device, &w.fps);
+        if ov > 0
+            && best.map_or(true, |(bi, bov)| {
+                ov > bov || (ov == bov && waiting[bi].seq > w.seq)
+            })
+        {
+            best = Some((i, ov));
+        }
+    }
+    if let Some(s) = starved {
+        return Some((s, GrantKind::Starved));
+    }
+    match policy {
+        SchedPolicy::Fifo => oldest.map(|i| (i, GrantKind::Fifo)),
+        SchedPolicy::Affinity => match best {
+            Some((i, _)) => Some((i, GrantKind::Affinity)),
+            None => oldest.map(|i| (i, GrantKind::Fifo)),
+        },
+    }
+}
+
+fn arbiter_loop(
+    rx: mpsc::Receiver<Request>,
+    capacity: usize,
+    policy: SchedPolicy,
+    counters: Arc<Counters>,
+) {
+    let mut idle: [Vec<Device>; Target::COUNT] = std::array::from_fn(|_| Vec::new());
+    let mut built = [0usize; Target::COUNT];
+    let mut waiting: Vec<Waiter> = Vec::new();
+    let mut next_seq = 0u64;
+    let mut busy = 0usize; // devices currently checked out, all targets
+    let mut last_event = Instant::now();
+    let mut tick = |busy: usize, last_event: &mut Instant| {
+        let now = Instant::now();
+        let dt = now.duration_since(*last_event).as_nanos() as u64;
+        counters.busy_nanos.fetch_add(busy as u64 * dt, Relaxed);
+        *last_event = now;
+    };
+    for req in rx {
+        match req {
+            Request::Checkout { target, fps, resp } => {
+                tick(busy, &mut last_event);
+                // under affinity, a zero-overlap request prefers warming
+                // a fresh device (while capacity remains) over evicting
+                // another request's residency on an idle one
+                let pick = if idle[target].is_empty() {
+                    None
+                } else {
+                    let (i, ov) = best_idle(&idle[target], &fps, policy);
+                    let prefer_build = ov == 0
+                        && built[target] < capacity
+                        && matches!(policy, SchedPolicy::Affinity);
+                    if prefer_build {
+                        None
+                    } else {
+                        Some((i, ov))
+                    }
+                };
+                if let Some((i, ov)) = pick {
+                    let dev = idle[target].remove(i);
+                    if ov > 0 {
+                        counters.affinity_grants.fetch_add(1, Relaxed);
+                    } else {
+                        counters.fifo_grants.fetch_add(1, Relaxed);
+                    }
+                    counters.checkouts.fetch_add(1, Relaxed);
+                    busy += 1;
+                    if let Err(mpsc::SendError(Response::Grant(dev))) =
+                        resp.send(Response::Grant(dev))
+                    {
+                        // requester vanished (panicked thread): reclaim
+                        idle[target].push(dev);
+                        busy -= 1;
+                    }
+                } else if built[target] < capacity {
+                    built[target] += 1;
+                    busy += 1;
+                    counters.devices_built.fetch_add(1, Relaxed);
+                    counters.build_grants.fetch_add(1, Relaxed);
+                    counters.checkouts.fetch_add(1, Relaxed);
+                    if resp.send(Response::Build).is_err() {
+                        built[target] -= 1;
+                        busy -= 1;
+                    }
+                } else {
+                    counters.queued.fetch_add(1, Relaxed);
+                    waiting.push(Waiter {
+                        seq: next_seq,
+                        target,
+                        fps,
+                        resp,
+                        passed_over: 0,
+                        since: Instant::now(),
+                    });
+                    next_seq += 1;
+                }
+            }
+            Request::Return { target, mut device } => {
+                tick(busy, &mut last_event);
+                busy -= 1;
+                loop {
+                    let Some((idx, kind)) =
+                        choose_waiter(&waiting, target, &device, policy)
+                    else {
+                        // no waiter for this target: park at the back of
+                        // the idle queue (round-robin fallback order)
+                        idle[target].push(device);
+                        break;
+                    };
+                    let w = waiting.remove(idx);
+                    for o in waiting
+                        .iter_mut()
+                        .filter(|o| o.target == target && o.seq < w.seq)
+                    {
+                        o.passed_over += 1;
+                    }
+                    match kind {
+                        GrantKind::Affinity => {
+                            counters.affinity_grants.fetch_add(1, Relaxed)
+                        }
+                        GrantKind::Fifo => counters.fifo_grants.fetch_add(1, Relaxed),
+                        GrantKind::Starved => {
+                            counters.starvation_promotions.fetch_add(1, Relaxed)
+                        }
+                    };
+                    counters
+                        .wait_nanos
+                        .fetch_add(w.since.elapsed().as_nanos() as u64, Relaxed);
+                    counters.checkouts.fetch_add(1, Relaxed);
+                    busy += 1;
+                    match w.resp.send(Response::Grant(device)) {
+                        Ok(()) => break,
+                        // waiter died while queued: take the device back
+                        // and try the next candidate
+                        Err(mpsc::SendError(Response::Grant(d))) => {
+                            device = d;
+                            busy -= 1;
+                        }
+                        Err(_) => unreachable!("return path only sends grants"),
+                    }
+                }
+            }
+            Request::Shutdown => break,
+        }
+    }
+    // dropping `waiting` closes every queued response channel, so any
+    // thread still blocked in checkout() observes PoolError::Closed
+}
+
+/// An arbitrated pool of up to K [`IlaSim`] devices per target, shared
+/// by every [`super::ExecEngine`] the owning session hands out. See the
+/// module docs for the scheduling model.
+pub struct DevicePool {
+    req_tx: mpsc::Sender<Request>,
+    arbiter: Mutex<Option<JoinHandle<()>>>,
+    counters: Arc<Counters>,
+    capacity: usize,
+    policy: SchedPolicy,
+}
+
+impl DevicePool {
+    /// A queued request passed over this many times by affinity routing
+    /// is served next regardless of overlap — the starvation bound.
+    pub const STARVATION_BOUND: u32 = 4;
+
+    /// Create a pool of up to `devices_per_target` devices per target
+    /// (clamped to ≥ 1), scheduled by `policy`. Devices are built lazily
+    /// on first demand, so unused targets cost nothing.
+    pub fn new(devices_per_target: usize, policy: SchedPolicy) -> Self {
+        let capacity = devices_per_target.max(1);
+        let (req_tx, req_rx) = mpsc::channel();
+        let counters = Arc::new(Counters::default());
+        let worker_counters = Arc::clone(&counters);
+        let handle = std::thread::Builder::new()
+            .name("d2a-device-pool".into())
+            .spawn(move || arbiter_loop(req_rx, capacity, policy, worker_counters))
+            .expect("spawn device-pool arbiter thread");
+        DevicePool {
+            req_tx,
+            arbiter: Mutex::new(Some(handle)),
+            counters,
+            capacity,
+            policy,
+        }
+    }
+
+    /// Maximum devices per target.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// The pool's scheduling policy.
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
+    /// Snapshot the scheduling counters.
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.counters;
+        PoolStats {
+            devices_built: c.devices_built.load(Relaxed),
+            checkouts: c.checkouts.load(Relaxed),
+            affinity_grants: c.affinity_grants.load(Relaxed),
+            fifo_grants: c.fifo_grants.load(Relaxed),
+            build_grants: c.build_grants.load(Relaxed),
+            starvation_promotions: c.starvation_promotions.load(Relaxed),
+            queued: c.queued.load(Relaxed),
+            wait: Duration::from_nanos(c.wait_nanos.load(Relaxed)),
+            busy: Duration::from_nanos(c.busy_nanos.load(Relaxed)),
+        }
+    }
+
+    /// Check a device out for `target`, blocking until one is granted.
+    /// `fps` are the requesting program's staged-burst fingerprints (the
+    /// affinity score inputs); `build` constructs the simulator when the
+    /// pool reserves new capacity for this request.
+    pub(crate) fn checkout(
+        &self,
+        target: Target,
+        fps: &[u64],
+        build: impl FnOnce() -> IlaSim,
+    ) -> Result<DeviceLease, PoolError> {
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.req_tx
+            .send(Request::Checkout {
+                target: target.index(),
+                fps: fps.to_vec(),
+                resp: resp_tx,
+            })
+            .map_err(|_| PoolError::Closed)?;
+        let device = match resp_rx.recv().map_err(|_| PoolError::Closed)? {
+            Response::Grant(d) => d,
+            Response::Build => Device::new(build()),
+        };
+        Ok(DeviceLease {
+            device: Some(device),
+            target: target.index(),
+            ret: self.req_tx.clone(),
+        })
+    }
+}
+
+impl Drop for DevicePool {
+    fn drop(&mut self) {
+        let _ = self.req_tx.send(Request::Shutdown);
+        if let Ok(mut guard) = self.arbiter.lock() {
+            if let Some(handle) = guard.take() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+impl fmt::Debug for DevicePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DevicePool")
+            .field("capacity", &self.capacity)
+            .field("policy", &self.policy)
+            .finish()
+    }
+}
+
+/// A checked-out device. Dropping the lease returns the device — with
+/// its residency set intact — to the pool for the next request.
+pub struct DeviceLease {
+    device: Option<Device>,
+    target: usize,
+    ret: mpsc::Sender<Request>,
+}
+
+impl DeviceLease {
+    pub(crate) fn device_mut(&mut self) -> &mut Device {
+        self.device.as_mut().expect("lease already returned")
+    }
+}
+
+impl Drop for DeviceLease {
+    fn drop(&mut self) {
+        if let Some(device) = self.device.take() {
+            // if the pool shut down first, the device is simply dropped
+            let _ = self.ret.send(Request::Return { target: self.target, device });
+        }
+    }
+}
+
+impl fmt::Debug for DeviceLease {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("DeviceLease").field("target", &self.target).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ila::{Ila, IlaState};
+
+    fn toy_sim() -> IlaSim {
+        let mut st = IlaState::new();
+        st.new_mem("buf", 64);
+        IlaSim::new(Ila::new("toy", st))
+    }
+
+    fn device_with_fps(fps: &[u64]) -> Device {
+        let mut d = Device::new(toy_sim());
+        for &fp in fps {
+            d.resident.push(Resident { mem: "buf".into(), lo: 0, hi: 1, fp });
+        }
+        d
+    }
+
+    fn waiter(seq: u64, target: usize, fps: &[u64], passed_over: u32) -> Waiter {
+        Waiter {
+            seq,
+            target,
+            fps: fps.to_vec(),
+            resp: mpsc::channel().0,
+            passed_over,
+            since: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn choose_waiter_prefers_best_overlap_under_affinity() {
+        let dev = device_with_fps(&[1, 2, 3]);
+        let waiting = vec![
+            waiter(0, 0, &[9], 0),       // oldest, no overlap
+            waiter(1, 0, &[1], 0),       // overlap 1
+            waiter(2, 0, &[1, 2], 0),    // overlap 2 (best)
+            waiter(3, 1, &[1, 2, 3], 0), // wrong target
+        ];
+        let (i, kind) = choose_waiter(&waiting, 0, &dev, SchedPolicy::Affinity).unwrap();
+        assert_eq!(i, 2);
+        assert!(matches!(kind, GrantKind::Affinity));
+    }
+
+    #[test]
+    fn choose_waiter_falls_back_to_fifo_on_zero_overlap() {
+        let dev = device_with_fps(&[1]);
+        let waiting = vec![waiter(5, 0, &[9], 0), waiter(6, 0, &[8], 0)];
+        let (i, kind) = choose_waiter(&waiting, 0, &dev, SchedPolicy::Affinity).unwrap();
+        assert_eq!(i, 0, "oldest request wins the fallback");
+        assert!(matches!(kind, GrantKind::Fifo));
+    }
+
+    #[test]
+    fn choose_waiter_fifo_policy_ignores_overlap() {
+        let dev = device_with_fps(&[7]);
+        let waiting = vec![waiter(0, 0, &[9], 0), waiter(1, 0, &[7], 0)];
+        let (i, kind) = choose_waiter(&waiting, 0, &dev, SchedPolicy::Fifo).unwrap();
+        assert_eq!(i, 0);
+        assert!(matches!(kind, GrantKind::Fifo));
+    }
+
+    #[test]
+    fn choose_waiter_starvation_bound_overrides_affinity() {
+        let dev = device_with_fps(&[7]);
+        let waiting = vec![
+            waiter(0, 0, &[9], DevicePool::STARVATION_BOUND), // starved
+            waiter(1, 0, &[7], 0),                            // perfect overlap
+        ];
+        let (i, kind) = choose_waiter(&waiting, 0, &dev, SchedPolicy::Affinity).unwrap();
+        assert_eq!(i, 0, "the starved request must be served first");
+        assert!(matches!(kind, GrantKind::Starved));
+    }
+
+    #[test]
+    fn choose_waiter_none_for_other_targets() {
+        let dev = device_with_fps(&[]);
+        let waiting = vec![waiter(0, 1, &[1], 0)];
+        assert!(choose_waiter(&waiting, 0, &dev, SchedPolicy::Affinity).is_none());
+    }
+
+    #[test]
+    fn checkout_builds_up_to_capacity_then_queues() {
+        let pool = DevicePool::new(1, SchedPolicy::Affinity);
+        let lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.devices_built, 1);
+        assert_eq!(stats.build_grants, 1);
+        assert_eq!(stats.checkouts, 1);
+        drop(lease);
+        // the returned device is granted, not rebuilt
+        let lease2 = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.devices_built, 1, "capacity 1 pool must reuse the device");
+        assert_eq!(stats.checkouts, 2);
+        drop(lease2);
+    }
+
+    #[test]
+    fn contended_checkout_blocks_until_return() {
+        let pool = Arc::new(DevicePool::new(1, SchedPolicy::Fifo));
+        let lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let p2 = Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || {
+            // blocks until the main thread drops its lease
+            let l = p2.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+            drop(l);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(lease);
+        waiter.join().unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.devices_built, 1);
+        assert_eq!(stats.checkouts, 2);
+        assert_eq!(stats.queued, 1);
+        assert!(stats.wait > Duration::ZERO);
+    }
+
+    #[test]
+    fn per_target_capacity_is_independent() {
+        let pool = DevicePool::new(1, SchedPolicy::Affinity);
+        let a = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        // a different target gets its own device without waiting
+        let b = pool.checkout(Target::Vta, &[], toy_sim).unwrap();
+        assert_eq!(pool.stats().devices_built, 2);
+        drop(a);
+        drop(b);
+    }
+
+    #[test]
+    fn stats_classify_grants_exclusively() {
+        let pool = DevicePool::new(2, SchedPolicy::Affinity);
+        let a = pool.checkout(Target::FlexAsr, &[1], toy_sim).unwrap();
+        drop(a);
+        let b = pool.checkout(Target::FlexAsr, &[2], toy_sim).unwrap();
+        drop(b);
+        let s = pool.stats();
+        assert_eq!(
+            s.affinity_grants + s.fifo_grants + s.build_grants + s.starvation_promotions,
+            s.checkouts
+        );
+    }
+}

@@ -1,0 +1,249 @@
+//! The arbitrated device pool: engines drawing devices from a shared
+//! [`DevicePool`] must be bit-identical to private-device engines, no
+//! matter how many workers contend for how few devices and which
+//! scheduling policy routes the requests — placement affects traffic,
+//! never values. And on a repeated-weights serving workload, affinity
+//! scheduling must stream strictly fewer bytes than the FIFO baseline.
+
+use d2a::cosim::LmSpec;
+use d2a::ir::{GraphBuilder, Op, Target};
+use d2a::session::{Bindings, DesignRev, ExecBackend, SchedPolicy, Session, SweepSpec};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+
+fn linear_expr() -> d2a::ir::RecExpr {
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("input"), g.weight("w"), g.weight("b"));
+    g.expr.add(Op::FlexLinear, vec![x, w, b]);
+    g.finish()
+}
+
+fn lstm_expr(steps: usize) -> d2a::ir::RecExpr {
+    let mut g = GraphBuilder::new();
+    let (x, wi, wh, b) = (g.var("x"), g.weight("wi"), g.weight("wh"), g.weight("b"));
+    g.expr.add(Op::FlexLstm { steps }, vec![x, wi, wh, b]);
+    g.finish()
+}
+
+#[test]
+fn pooled_engine_matches_private_engine() {
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let private = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .design_rev(rev)
+            .backend(ExecBackend::IlaMmio)
+            .build();
+        let pooled = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .design_rev(rev)
+            .backend(ExecBackend::IlaMmio)
+            .device_pool(2)
+            .build();
+        let p_priv = private.attach(linear_expr());
+        let p_pool = pooled.attach(linear_expr());
+        let mut rng = Rng::new(51);
+        for i in 0..4 {
+            let b = Bindings::new()
+                .with("input", Tensor::randn(&[2, 16], &mut rng, 1.0))
+                .with("w", Tensor::randn(&[8, 16], &mut rng, 0.3))
+                .with("b", Tensor::randn(&[8], &mut rng, 0.1));
+            assert_eq!(
+                p_priv.run(&b).unwrap(),
+                p_pool.run(&b).unwrap(),
+                "pooled vs private diverged at point {i} ({rev:?})"
+            );
+        }
+        let stats = pooled.device_pool().unwrap().stats();
+        assert!(stats.checkouts >= 4, "the pooled runs must check devices out");
+    }
+}
+
+/// The satellite coverage grid: 1/4/9 workers × pool sizes 1/2/4 on both
+/// design revisions, CrossCheck backend. Accuracy counts and fidelity
+/// must be identical to the uncontended single-worker private baseline,
+/// and every cross-check must come back clean — whichever device served
+/// a request.
+#[test]
+fn pooled_sweeps_are_deterministic_under_contention() {
+    let mut rng = Rng::new(52);
+    let weights: HashMap<String, Tensor> = [
+        ("w".to_string(), Tensor::randn(&[4, 16], &mut rng, 0.3)),
+        ("b".to_string(), Tensor::randn(&[4], &mut rng, 0.1)),
+    ]
+    .into_iter()
+    .collect();
+    let inputs: Vec<Tensor> = (0..12).map(|_| Tensor::randn(&[1, 16], &mut rng, 1.0)).collect();
+    let labels: Vec<usize> = (0..12).map(|_| rng.below(4)).collect();
+    let spec = SweepSpec {
+        input_var: "input",
+        weights: &weights,
+        inputs: &inputs,
+        labels: &labels,
+    };
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let baseline_session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .design_rev(rev)
+            .backend(ExecBackend::CrossCheck)
+            .build();
+        let baseline = baseline_session.attach(linear_expr()).classify_sweep(&spec);
+        assert_eq!(baseline.n, 12);
+        assert!(baseline.fidelity.is_clean(), "{}", baseline.fidelity);
+        for workers in [1usize, 4, 9] {
+            for pool in [1usize, 2, 4] {
+                let session = Session::builder()
+                    .targets(&[Target::FlexAsr])
+                    .design_rev(rev)
+                    .backend(ExecBackend::CrossCheck)
+                    .workers(workers)
+                    .device_pool(pool)
+                    .build();
+                let rep = session.attach(linear_expr()).classify_sweep(&spec);
+                let cfg = format!("{rev:?} workers={workers} pool={pool}");
+                assert_eq!(rep.n, 12, "{cfg}");
+                assert_eq!(rep.exec_errors, 0, "{cfg}");
+                assert_eq!(rep.ref_correct, baseline.ref_correct, "{cfg}");
+                assert_eq!(
+                    rep.acc_correct, baseline.acc_correct,
+                    "{cfg}: results must not depend on device placement"
+                );
+                assert_eq!(rep.fidelity.total_checked(), 12, "{cfg}");
+                assert!(rep.fidelity.is_clean(), "{cfg}: {}", rep.fidelity);
+                let stats = session.device_pool().unwrap().stats();
+                assert!(
+                    stats.devices_built as usize <= pool,
+                    "{cfg}: pool must never exceed its capacity"
+                );
+                assert_eq!(
+                    stats.affinity_grants
+                        + stats.fifo_grants
+                        + stats.build_grants
+                        + stats.starvation_promotions,
+                    stats.checkouts,
+                    "{cfg}: grant classes must partition checkouts"
+                );
+            }
+        }
+    }
+}
+
+/// The acceptance workload: the LSTM-WLM layer served repeatedly with
+/// two alternating weight sets (the A,B,B,A,A,B,B,A request pattern
+/// guarantees the set switches every other request). With pool capacity
+/// 2, affinity routing parks each weight set on its own device and
+/// re-streams almost nothing; FIFO thrashes one device's residency on
+/// every switch — so affinity must stream strictly fewer bytes, with
+/// bit-identical outputs and a clean cross-check on both design revs.
+#[test]
+fn affinity_strictly_beats_fifo_on_repeated_lstm_weights() {
+    let (t, e, h) = (2usize, 64usize, 64usize);
+    let pattern = [0usize, 1, 1, 0, 0, 1, 1, 0];
+    for rev in [DesignRev::Original, DesignRev::Updated] {
+        let mut outputs: Vec<Vec<Tensor>> = Vec::new();
+        let mut bytes = Vec::new();
+        for policy in [SchedPolicy::Affinity, SchedPolicy::Fifo] {
+            let session = Session::builder()
+                .targets(&[Target::FlexAsr])
+                .design_rev(rev)
+                .backend(ExecBackend::CrossCheck)
+                .device_pool(2)
+                .sched_policy(policy)
+                .build();
+            let program = session.attach(lstm_expr(t));
+            // identical weight sets and inputs for both policies
+            let mut rng = Rng::new(53);
+            let sets: Vec<(Tensor, Tensor, Tensor)> = (0..2)
+                .map(|_| {
+                    (
+                        Tensor::randn(&[4 * h, e], &mut rng, 0.3),
+                        Tensor::randn(&[4 * h, h], &mut rng, 0.3),
+                        Tensor::randn(&[4 * h], &mut rng, 0.1),
+                    )
+                })
+                .collect();
+            let mut engine = program.engine();
+            let mut outs = Vec::new();
+            for &set in pattern.iter() {
+                let (wi, wh, b) = &sets[set];
+                // a fresh input per request, like real serving traffic
+                let bindings = Bindings::new()
+                    .with("x", Tensor::randn(&[t, 1, e], &mut rng, 1.0))
+                    .with("wi", wi.clone())
+                    .with("wh", wh.clone())
+                    .with("b", b.clone());
+                outs.push(program.run_with(&mut engine, &bindings).unwrap());
+            }
+            let fidelity = engine.take_fidelity();
+            assert!(
+                fidelity.is_clean(),
+                "{rev:?}/{policy}: cross-check must be clean:\n{fidelity}"
+            );
+            assert_eq!(fidelity.total_checked(), pattern.len());
+            if policy == SchedPolicy::Affinity {
+                assert!(
+                    engine.bursts_deduped() > 0,
+                    "{rev:?}: affinity must serve bursts from residency"
+                );
+                let stats = session.device_pool().unwrap().stats();
+                assert_eq!(
+                    stats.devices_built, 2,
+                    "{rev:?}: affinity warms both devices instead of thrashing one"
+                );
+                assert!(stats.affinity_grants > 0, "{rev:?}: no affinity grants");
+            }
+            bytes.push(engine.bytes_streamed());
+            outputs.push(outs);
+        }
+        assert_eq!(
+            outputs[0], outputs[1],
+            "{rev:?}: scheduling policy must never change results"
+        );
+        assert!(
+            bytes[0] < bytes[1],
+            "{rev:?}: affinity must stream strictly fewer bytes than FIFO \
+             ({} vs {})",
+            bytes[0],
+            bytes[1]
+        );
+    }
+}
+
+/// `lm_sweep` draws its devices from the session pool too: every window
+/// of the LM sweep checks out of the shared pool, and the cross-check
+/// stays clean.
+#[test]
+fn lm_sweep_draws_from_the_shared_pool() {
+    let (seq_len, e, v) = (4usize, 8usize, 16usize);
+    let mut g = GraphBuilder::new();
+    let x = g.var("x_seq");
+    let flat = g.reshape(x, &[seq_len, e]);
+    let (w, b) = (g.weight("w"), g.weight("b"));
+    g.expr.add(Op::FlexLinear, vec![flat, w, b]);
+    let mut rng = Rng::new(54);
+    let weights: HashMap<String, Tensor> = [
+        ("w".to_string(), Tensor::randn(&[v, e], &mut rng, 0.3)),
+        ("b".to_string(), Tensor::randn(&[v], &mut rng, 0.1)),
+    ]
+    .into_iter()
+    .collect();
+    let embed = Tensor::randn(&[v, e], &mut rng, 1.0);
+    let tokens: Vec<usize> = (0..3 * (seq_len + 1)).map(|i| i % v).collect();
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::CrossCheck)
+        .device_pool(1)
+        .build();
+    let program = session.attach(g.finish());
+    let spec = LmSpec { input_var: "x_seq", seq_len, track_errors: false };
+    let rep = program.lm_sweep_spec(&spec, &weights, &embed, &tokens, 3).unwrap();
+    assert_eq!(rep.sentences, 3);
+    assert_eq!(rep.invocations, 3, "one FlexLinear per window");
+    assert!(rep.fidelity.is_clean(), "{}", rep.fidelity);
+    let stats = session.device_pool().unwrap().stats();
+    assert_eq!(
+        stats.checkouts, 3,
+        "each window's lowered program must check out of the pool"
+    );
+    assert_eq!(stats.devices_built, 1);
+}
