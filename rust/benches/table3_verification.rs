@@ -3,9 +3,22 @@
 //! CHC-style (relational per-tile invariants) runtimes across matrix
 //! sizes, on our from-scratch CDCL/bit-blasting stack (the paper used Z3
 //! on an i7-5500U with a 3-hour timeout; set D2A_VERIFY_TIMEOUT to taste).
+//!
+//! The second section runs the **lowering translation-validation
+//! obligation suite** (both design revisions) and emits a
+//! `BENCH_verification.json` trajectory point — per obligation: verdict,
+//! SAT queries, conflicts, CNF variables, and wall time — so solver
+//! effort on the repo's own codegen is tracked over time. Output path
+//! defaults to `BENCH_verification.json` in the working directory;
+//! override with `D2A_BENCH_OUT` (serialized by hand — the offline
+//! crate set has no serde). The bench asserts the obligation lattice:
+//! every verdict must match its expectation (Updated all-equivalent,
+//! Original HLSCNN conv refuted with a concrete counterexample).
 
 use d2a::smt::EquivResult;
-use d2a::verify::{verify_bmc, verify_chc};
+use d2a::verify::{
+    all_obligations_both_revs, check, verify_bmc, verify_chc, ObligationStatus,
+};
 use std::time::Duration;
 
 const PAPER: &[((usize, usize), &str, &str)] = &[
@@ -54,4 +67,57 @@ fn main() {
         );
         assert!(!matches!(chc.result, EquivResult::Counterexample(_)));
     }
+
+    println!();
+    println!("=== Lowering translation validation (both design revisions) ===");
+    println!(
+        "{:<36} {:>13} {:>7} {:>10} {:>8}",
+        "obligation", "status", "vars", "conflicts", "time"
+    );
+    let mut records = Vec::new();
+    let mut unexpected = 0usize;
+    for ob in all_obligations_both_revs() {
+        let rep = check(&ob, timeout);
+        let (queries, conflicts, vars, wall_ms) = rep
+            .stats
+            .as_ref()
+            .map(|s| (s.queries, s.conflicts, s.vars, s.elapsed.as_secs_f64() * 1e3))
+            .unwrap_or((0, 0, 0, 0.0));
+        println!(
+            "{:<36} {:>13} {:>7} {:>10} {:>7.0}ms",
+            ob.id,
+            rep.status.label(),
+            vars,
+            conflicts,
+            wall_ms
+        );
+        if let ObligationStatus::Inequivalent(cex) = &rep.status {
+            println!(
+                "      counterexample at index {}: device {} vs reference {} — {}",
+                cex.index, cex.hw_code, cex.ref_code, cex.note
+            );
+        }
+        if !rep.as_expected() {
+            unexpected += 1;
+        }
+        records.push(format!(
+            "  {{\"obligation\": \"{}\", \"status\": \"{}\", \"queries\": {}, \
+             \"conflicts\": {}, \"vars\": {}, \"wall_ms\": {:.1}}}",
+            ob.id,
+            rep.status.label(),
+            queries,
+            conflicts,
+            vars,
+            wall_ms
+        ));
+    }
+    let out = std::env::var("D2A_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_verification.json".to_string());
+    std::fs::write(&out, format!("[\n{}\n]\n", records.join(",\n")))
+        .expect("write BENCH_verification.json");
+    println!("wrote {out}");
+    assert_eq!(
+        unexpected, 0,
+        "every obligation must match its expected verdict (see table above)"
+    );
 }

@@ -277,6 +277,50 @@ fn align16(n: usize) -> u64 {
 // ----------------------------------------------------------------------
 
 impl FlexAsr {
+    /// The forced output-port bias the tiled linear lowering programs:
+    /// the driver-side calibration mirror (encode, decode, dense +
+    /// bias-add, `select_bias`) that every tile's `CFG_OUT_BIAS` replays.
+    /// Exposed so translation validation can recompute the side condition
+    /// independently of the lowering.
+    pub(crate) fn linear_forced_bias(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> i32 {
+        let fmt = self.af;
+        let (xc, xb) = fx::encode_tensor(&fmt, x);
+        let (wc, wb) = fx::encode_tensor(&fmt, w);
+        let (bc, bb) = fx::encode_tensor(&fmt, b);
+        let xq = fx::decode_tensor(&fmt, &xc, xb, &x.shape);
+        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
+        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
+        let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
+        fmt.select_bias(acc.max_abs())
+    }
+
+    /// Tiled-linear entry point for translation validation: forces a
+    /// row-tile `cap` so small obligation shapes still exercise genuine
+    /// multi-tile programs (the production path only tiles when buffers
+    /// overflow).
+    pub(crate) fn lower_linear_for_verify(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        cap: usize,
+    ) -> Option<LoweredProgram> {
+        self.lower_linear_tiled(x, w, b, cap)
+    }
+
+    /// Tiled-LSTM entry point for translation validation: forces a
+    /// gate-row tile `cap` (see [`Self::lower_linear_for_verify`]).
+    pub(crate) fn lower_lstm_for_verify(
+        &self,
+        x: &Tensor,
+        wi: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+        cap: usize,
+    ) -> Option<LoweredProgram> {
+        self.lower_lstm_tiled(x, wi, wh, b, cap)
+    }
+
     /// Lower a linear layer (`fasr_linear x w b`) — Fig. 5 end to end.
     /// Layers whose weights or outputs exceed the device buffers come
     /// back as a weight-row-tiled multi-trigger program.
@@ -299,7 +343,7 @@ impl FlexAsr {
             || bias_base as usize + m > fx::PE_WGT_SIZE
         {
             // whole layer exceeds one trigger's staging: tile it
-            return self.lower_linear_tiled(x, w, b);
+            return self.lower_linear_tiled(x, w, b, usize::MAX);
         }
         let fmt = self.af;
         let (xc, xb) = fx::encode_tensor(&fmt, x);
@@ -373,6 +417,7 @@ impl FlexAsr {
         x: &Tensor,
         w: &Tensor,
         b: &Tensor,
+        cap: usize,
     ) -> Option<LoweredProgram> {
         let fmt = self.af;
         let (n, k) = (x.shape[0], x.shape[1]);
@@ -384,7 +429,8 @@ impl FlexAsr {
         let mut r_cap = (fx::PE_WGT_SIZE / (k + 1))
             .min(fx::GB_SIZE.saturating_sub(xa) / n)
             .min(0xFFFF)
-            .min(m);
+            .min(m)
+            .min(cap);
         while r_cap > 0
             && (align16(r_cap * k) as usize + r_cap > fx::PE_WGT_SIZE
                 || xa + n * r_cap > fx::GB_SIZE)
@@ -400,11 +446,7 @@ impl FlexAsr {
         let (bc, bb) = fx::encode_tensor(&fmt, b);
         // driver calibration mirror: replay the device arithmetic on the
         // host to learn the whole-result output bias ahead of execution
-        let xq = fx::decode_tensor(&fmt, &xc, xb, &x.shape);
-        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
-        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
-        let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
-        let out_bias = fmt.select_bias(acc.max_abs());
+        let out_bias = self.linear_forced_bias(x, w, b);
 
         // tile table: row range + per-tile PE layout + DRAM slot
         let mut tiles = Vec::new(); // (lo, r, bias_base, tile_len, dram_off)
@@ -570,7 +612,7 @@ impl FlexAsr {
             || bias_base as usize + four_h > fx::PE_WGT_SIZE
         {
             // gate matrices beyond the PE buffer: per-step tiled program
-            return self.lower_lstm_tiled(x, wi, wh, b);
+            return self.lower_lstm_tiled(x, wi, wh, b, usize::MAX);
         }
         let fmt = self.af;
         let (xc, xb) = fx::encode_tensor(&fmt, x);
@@ -662,6 +704,7 @@ impl FlexAsr {
         wi: &Tensor,
         wh: &Tensor,
         b: &Tensor,
+        cap: usize,
     ) -> Option<LoweredProgram> {
         let (t, nrows, e) = (x.shape[0], x.shape[1], x.shape[2]);
         if nrows != 1 {
@@ -682,7 +725,10 @@ impl FlexAsr {
             return None;
         }
         // PE row-tile capacity for [wi_rows | wh_rows | b_slice]
-        let mut r_cap = (fx::PE_WGT_SIZE / (e + h + 1)).min(four_h).min(0xFFFF);
+        let mut r_cap = (fx::PE_WGT_SIZE / (e + h + 1))
+            .min(four_h)
+            .min(0xFFFF)
+            .min(cap);
         while r_cap > 0
             && (align16(r_cap * e) + align16(r_cap * h)) as usize + r_cap
                 > fx::PE_WGT_SIZE

@@ -166,6 +166,20 @@ impl Hlscnn {
         stride: (usize, usize),
         pad: (usize, usize),
     ) -> Option<LoweredProgram> {
+        self.lower_conv2d_capped(x, w, stride, pad, usize::MAX)
+    }
+
+    /// [`Self::lower_conv2d`] with a forced output-channel tile `cap`,
+    /// the translation-validation entry point: small obligation shapes
+    /// still exercise genuine channel-split programs.
+    pub(crate) fn lower_conv2d_capped(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        cap: usize,
+    ) -> Option<LoweredProgram> {
         if x.shape.len() != 4 || w.shape.len() != 4 || x.shape[0] != 1 {
             return None;
         }
@@ -200,7 +214,8 @@ impl Hlscnn {
         let o_cap = (hx::WGT_SIZE / (2 * c * kh * kw))
             .min(hx::OUT_SIZE / (2 * oh * ow))
             .min(0xFFF)
-            .min(o);
+            .min(o)
+            .min(cap);
         if o_cap == 0 {
             return None;
         }

@@ -115,13 +115,28 @@ impl Vta {
     /// concatenation — bit-exact because the shared power-of-two scale
     /// is per-*tensor* and computed once by the driver.
     fn lower_add(&self, a: &Tensor, b: &Tensor) -> Option<LoweredProgram> {
+        self.lower_add_capped(a, b, usize::MAX)
+    }
+
+    /// [`Self::lower_add`] with a forced chunk `cap`, the
+    /// translation-validation entry point: small obligation shapes still
+    /// exercise genuine multi-chunk programs.
+    pub(crate) fn lower_add_capped(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        cap: usize,
+    ) -> Option<LoweredProgram> {
         // the staged form requires equal shapes; broadcast adds fall
         // back to the (integer-exact) tensor path
         if a.shape != b.shape || a.data.is_empty() {
             return None;
         }
         let scale = self.int8.select_scale(a.max_abs().max(b.max_abs()));
-        let chunk_cap = (vx::ACC_SIZE / 4).min(vx::WGT_SIZE / 4).min(u32::MAX as usize);
+        let chunk_cap = (vx::ACC_SIZE / 4)
+            .min(vx::WGT_SIZE / 4)
+            .min(u32::MAX as usize)
+            .min(cap.max(1));
         let total = a.data.len();
         let mut invocations = Vec::new();
         let mut lo = 0usize;

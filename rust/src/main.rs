@@ -20,8 +20,14 @@ USAGE: d2a <command> [flags]
 COMMANDS:
   table1                 compilation statistics (exact vs flexible), 6 apps
   table2 [--inputs N]    simulation-based mapping validation (default 100)
-  verify [--rows R --cols C --timeout SECS]
-                         BMC + CHC verification of the FlexASR MaxPool mapping
+  verify [--rows R --cols C --timeout SECS] [--all | --rev original|updated]
+         [--target flexasr|hlscnn|vta] [--op linear|lstm|conv2d|vta_add]
+                         BMC + CHC verification of the FlexASR MaxPool mapping,
+                         then translation validation of every tiled lowering:
+                         symbolic execution of the real MMIO programs mitered
+                         against the op semantics (--all covers both design
+                         revisions; the Original-rev HLSCNN conv obligation
+                         prints a concrete wire_to_store counterexample)
   cosim  --app NAME [--rev original|updated] [--limit N] [--workers W]
          [--input-var NAME] [--backend functional|mmio|crosscheck]
                          application-level co-simulation (resmlp | resnet20 |
@@ -39,11 +45,7 @@ fn main() -> anyhow::Result<()> {
     match cli.command.as_str() {
         "table1" => cmd_table1(),
         "table2" => cmd_table2(cli.get_usize("inputs", 100)),
-        "verify" => cmd_verify(
-            cli.get_usize("rows", 4),
-            cli.get_usize("cols", 32),
-            cli.get_usize("timeout", 120),
-        ),
+        "verify" => cmd_verify(&cli),
         "cosim" => cmd_cosim(&cli),
         "soc-demo" => cmd_soc_demo(),
         _ => {
@@ -95,10 +97,13 @@ fn cmd_table2(n: usize) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_verify(rows: usize, cols: usize, timeout: usize) -> anyhow::Result<()> {
-    let t = Duration::from_secs(timeout as u64);
-    println!("FlexASR MaxPool mapping, {rows}x{cols}, timeout {timeout}s");
-    let bmc = d2a::verify::verify_bmc(rows, cols, t);
+fn cmd_verify(cli: &Cli) -> anyhow::Result<()> {
+    use d2a::verify as vf;
+    let rows = cli.get_usize("rows", 4);
+    let cols = cli.get_usize("cols", 32);
+    let t = Duration::from_secs(cli.get_usize("timeout", 120) as u64);
+    println!("FlexASR MaxPool mapping, {rows}x{cols}, timeout {}s", t.as_secs());
+    let bmc = vf::verify_bmc(rows, cols, t);
     println!(
         "  BMC: {:?} in {:.2}s ({} vars, {} conflicts)",
         bmc.result,
@@ -106,7 +111,7 @@ fn cmd_verify(rows: usize, cols: usize, timeout: usize) -> anyhow::Result<()> {
         bmc.vars,
         bmc.conflicts
     );
-    let chc = d2a::verify::verify_chc(rows, cols, t);
+    let chc = vf::verify_chc(rows, cols, t);
     println!(
         "  CHC: {:?} in {:.2}s ({} queries, {} conflicts)",
         chc.result,
@@ -114,7 +119,91 @@ fn cmd_verify(rows: usize, cols: usize, timeout: usize) -> anyhow::Result<()> {
         chc.queries,
         chc.conflicts
     );
+
+    let revs: Vec<DesignRev> = if cli.get("all").is_some() {
+        vec![DesignRev::Original, DesignRev::Updated]
+    } else {
+        match cli.get("rev") {
+            Some("original") => vec![DesignRev::Original],
+            Some("updated") | None => vec![DesignRev::Updated],
+            Some(other) => anyhow::bail!("unknown --rev `{other}`"),
+        }
+    };
+    let target = cli.get("target");
+    let op = cli.get("op");
+    println!();
+    println!("Lowering translation validation (tiled MMIO programs vs op semantics)");
+    println!(
+        "{:<36} {:>13} {:>13} {:>7} {:>10} {:>8}",
+        "obligation", "status", "expected", "vars", "conflicts", "time"
+    );
+    let mut checked = 0usize;
+    let mut failures = 0usize;
+    for rev in revs {
+        for ob in vf::all_obligations(rev) {
+            if let Some(tf) = target {
+                if !format!("{:?}", ob.target).eq_ignore_ascii_case(tf) {
+                    continue;
+                }
+            }
+            if let Some(of) = op {
+                if ob.op != of {
+                    continue;
+                }
+            }
+            checked += 1;
+            let rep = vf::check(&ob, t);
+            let (vars, conflicts, secs) = rep
+                .stats
+                .as_ref()
+                .map(|s| (s.vars, s.conflicts, s.elapsed.as_secs_f64()))
+                .unwrap_or((0, 0, 0.0));
+            let ok = rep.as_expected();
+            println!(
+                "{:<36} {:>13} {:>13} {:>7} {:>10} {:>7.2}s{}",
+                ob.id,
+                rep.status.label(),
+                vf::expected_label(&ob),
+                vars,
+                conflicts,
+                secs,
+                if ok { "" } else { "  <-- UNEXPECTED" }
+            );
+            match &rep.status {
+                vf::ObligationStatus::Inequivalent(cex) => print_cex(&ob, cex),
+                vf::ObligationStatus::Mismatch(msg) => println!("      mismatch: {msg}"),
+                _ => {}
+            }
+            if !ok {
+                failures += 1;
+            }
+        }
+    }
+    if checked == 0 {
+        anyhow::bail!("no obligation matches the given --target/--op/--rev filters");
+    }
+    if failures > 0 {
+        anyhow::bail!("{failures} obligation(s) deviated from the expected verdict");
+    }
+    println!("all {checked} obligations matched their expected verdicts");
     Ok(())
+}
+
+fn print_cex(ob: &d2a::verify::Obligation, cex: &d2a::verify::LoweringCex) {
+    println!(
+        "      counterexample at flat output index {}: device code {} vs reference code {}",
+        cex.index, cex.hw_code, cex.ref_code
+    );
+    if !cex.note.is_empty() {
+        println!("      {}", cex.note);
+    }
+    let inputs: Vec<String> =
+        cex.inputs.iter().map(|(n, v)| format!("{n}={v}")).collect();
+    println!("      symbolic inputs: {}", inputs.join(" "));
+    if let Some((act, wgt)) = d2a::verify::conv_witness_tensors(ob, cex) {
+        println!("      witness activations {:?}: {:?}", act.shape, act.data);
+        println!("      witness weights {:?}: {:?}", wgt.shape, wgt.data);
+    }
 }
 
 fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {

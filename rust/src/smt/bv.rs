@@ -1,34 +1,104 @@
 //! Bit-vector layer: terms, Tseitin bit-blasting, and miter-based
 //! equivalence checking over the SAT core.
 //!
-//! The term language is exactly what the FlexASR MaxPool verification
-//! (§4.4.1 / Table 3) needs: symbolic fixed-width variables, constants,
-//! `max` (unsigned compare + mux), and `select` over symbolically-indexed
-//! buffers (the store/select chains that make BMC's fully-unrolled
-//! encodings big).
+//! The term language started as exactly what the FlexASR MaxPool
+//! verification (§4.4.1 / Table 3) needs — symbolic fixed-width
+//! variables, constants, unsigned `max`/`min` — and now additionally
+//! carries the integer arithmetic the tiled-lowering translation
+//! validation (`verify::lowering`) encodes: two's-complement add /
+//! multiply / negate, logic and arithmetic shifts, round-ties-even
+//! arithmetic shift (the fixed-point requantization step), signed
+//! max/min (saturation clamps), and width-bounded signed inputs
+//! ([`BvTerm::SVar`]) that keep obligation inputs inside the ranges the
+//! storage codecs can replay.
+//!
+//! Gate constructors constant-fold (`and(a, true) = a`,
+//! `xor(a, a) = false`, …), so a miter whose two sides blast to the same
+//! literals collapses to an empty clause at `add_clause` time: a
+//! structurally-correct lowering discharges with **zero** solver search.
 
-use super::sat::{Lit, SatResult, Solver, Var};
+use super::sat::{Lit, SatResult, Solver};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::Duration;
 
+/// Low `width` bits set.
+fn mask(width: u32) -> u64 {
+    if width >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << width) - 1
+    }
+}
+
+/// Sign-extend the low `width` bits of `v` to a full i64.
+fn sext64(v: u64, width: u32) -> i64 {
+    if width >= 64 {
+        return v as i64;
+    }
+    let v = v & mask(width);
+    if (v >> (width - 1)) & 1 == 1 {
+        (v | (!0u64 << width)) as i64
+    } else {
+        v as i64
+    }
+}
+
 /// A bit-vector term (all terms in one query share a width).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum BvTerm {
-    /// Named symbolic input.
+    /// Named symbolic input spanning the full query width.
     Var(String),
-    /// Constant value.
+    /// Named signed symbolic input of `n` significant bits, sign-extended
+    /// to the query width. Bounding inputs this way keeps obligation
+    /// witnesses inside the value ranges the storage codecs round-trip.
+    SVar(String, u32),
+    /// Constant value (truncated to the query width when blasted).
     Const(u64),
     /// `max(a, b)` — unsigned.
     Max(Rc<BvTerm>, Rc<BvTerm>),
     /// `min(a, b)` — unsigned (used by meanpool-style fragments).
     Min(Rc<BvTerm>, Rc<BvTerm>),
+    /// Two's-complement addition (wrapping).
+    Add(Rc<BvTerm>, Rc<BvTerm>),
+    /// Two's-complement multiplication (wrapping).
+    Mul(Rc<BvTerm>, Rc<BvTerm>),
+    /// Two's-complement negation.
+    Neg(Rc<BvTerm>),
+    /// Logical left shift by a constant.
+    Shl(Rc<BvTerm>, u32),
+    /// Arithmetic (sign-preserving) right shift by a constant — the
+    /// truncating fixed-point rescale.
+    Ashr(Rc<BvTerm>, u32),
+    /// Round-ties-even arithmetic right shift by a constant — the
+    /// rounding fixed-point rescale (`FixedPointFormat` encode
+    /// semantics).
+    Rte(Rc<BvTerm>, u32),
+    /// `max(a, b)` — signed (saturation clamps).
+    SMax(Rc<BvTerm>, Rc<BvTerm>),
+    /// `min(a, b)` — signed (saturation clamps).
+    SMin(Rc<BvTerm>, Rc<BvTerm>),
 }
 
 impl BvTerm {
     /// A named input variable.
     pub fn var(name: impl Into<String>) -> Rc<BvTerm> {
         Rc::new(BvTerm::Var(name.into()))
+    }
+
+    /// A named signed input of `bits` significant bits (sign-extended).
+    pub fn svar(name: impl Into<String>, bits: u32) -> Rc<BvTerm> {
+        Rc::new(BvTerm::SVar(name.into(), bits))
+    }
+
+    /// A constant.
+    pub fn cnst(c: u64) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Const(c))
+    }
+
+    /// A constant from a signed value (two's complement at blast width).
+    pub fn cnst_i(c: i64) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Const(c as u64))
     }
 
     /// Unsigned maximum of two terms.
@@ -41,13 +111,116 @@ impl BvTerm {
         Rc::new(BvTerm::Min(a, b))
     }
 
-    /// Evaluate under a concrete environment (differential testing).
-    pub fn eval(&self, env: &HashMap<String, u64>) -> u64 {
+    /// Wrapping addition.
+    pub fn add(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Add(a, b))
+    }
+
+    /// Wrapping multiplication.
+    pub fn mul(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Mul(a, b))
+    }
+
+    /// Two's-complement negation.
+    pub fn neg(a: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::Neg(a))
+    }
+
+    /// Left shift by a constant (`shl(t, 0)` folds to `t`).
+    pub fn shl(a: Rc<BvTerm>, s: u32) -> Rc<BvTerm> {
+        if s == 0 {
+            a
+        } else {
+            Rc::new(BvTerm::Shl(a, s))
+        }
+    }
+
+    /// Arithmetic right shift by a constant (`ashr(t, 0)` folds to `t`).
+    pub fn ashr(a: Rc<BvTerm>, s: u32) -> Rc<BvTerm> {
+        if s == 0 {
+            a
+        } else {
+            Rc::new(BvTerm::Ashr(a, s))
+        }
+    }
+
+    /// Round-ties-even right shift by a constant (`rte(t, 0)` = `t`).
+    pub fn rte(a: Rc<BvTerm>, s: u32) -> Rc<BvTerm> {
+        if s == 0 {
+            a
+        } else {
+            Rc::new(BvTerm::Rte(a, s))
+        }
+    }
+
+    /// Signed maximum.
+    pub fn smax(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::SMax(a, b))
+    }
+
+    /// Signed minimum.
+    pub fn smin(a: Rc<BvTerm>, b: Rc<BvTerm>) -> Rc<BvTerm> {
+        Rc::new(BvTerm::SMin(a, b))
+    }
+
+    /// Clamp `a` into the signed range `[lo, hi]` (saturation).
+    pub fn sclamp(a: Rc<BvTerm>, lo: i64, hi: i64) -> Rc<BvTerm> {
+        BvTerm::smin(BvTerm::smax(a, BvTerm::cnst_i(lo)), BvTerm::cnst_i(hi))
+    }
+
+    /// Evaluate under a concrete environment at `width` bits, mirroring
+    /// the blasted two's-complement semantics (differential testing and
+    /// counterexample replay).
+    pub fn eval(&self, env: &HashMap<String, u64>, width: u32) -> u64 {
+        let m = mask(width);
         match self {
-            BvTerm::Var(n) => *env.get(n).unwrap_or(&0),
-            BvTerm::Const(c) => *c,
-            BvTerm::Max(a, b) => a.eval(env).max(b.eval(env)),
-            BvTerm::Min(a, b) => a.eval(env).min(b.eval(env)),
+            BvTerm::Var(n) | BvTerm::SVar(n, _) => *env.get(n).unwrap_or(&0) & m,
+            BvTerm::Const(c) => *c & m,
+            BvTerm::Max(a, b) => a.eval(env, width).max(b.eval(env, width)),
+            BvTerm::Min(a, b) => a.eval(env, width).min(b.eval(env, width)),
+            BvTerm::Add(a, b) => {
+                a.eval(env, width).wrapping_add(b.eval(env, width)) & m
+            }
+            BvTerm::Mul(a, b) => {
+                a.eval(env, width).wrapping_mul(b.eval(env, width)) & m
+            }
+            BvTerm::Neg(a) => a.eval(env, width).wrapping_neg() & m,
+            BvTerm::Shl(a, s) => {
+                let v = a.eval(env, width);
+                if *s >= 64 {
+                    0
+                } else {
+                    (v << s) & m
+                }
+            }
+            BvTerm::Ashr(a, s) => {
+                let v = sext64(a.eval(env, width), width);
+                (v >> s.min(&63)) as u64 & m
+            }
+            BvTerm::Rte(a, s) => {
+                let v = a.eval(env, width);
+                let q = (sext64(v, width) >> s.min(&63)) as u64;
+                let r = v & mask(*s);
+                let half = 1u64 << (s - 1);
+                let inc = r > half || (r == half && q & 1 == 1);
+                q.wrapping_add(inc as u64) & m
+            }
+            BvTerm::SMax(a, b) => {
+                let (x, y) = (a.eval(env, width), b.eval(env, width));
+                if sext64(x, width) >= sext64(y, width) {
+                    x
+                } else {
+                    y
+                }
+            }
+            BvTerm::SMin(a, b) => {
+                let (x, y) = (a.eval(env, width), b.eval(env, width));
+                if sext64(x, width) <= sext64(y, width) {
+                    x
+                } else {
+                    y
+                }
+            }
         }
     }
 }
@@ -60,6 +233,9 @@ pub struct BitBlaster {
     pub width: u32,
     /// input variable name -> bit literals (LSB first)
     inputs: HashMap<String, Vec<Lit>>,
+    /// significant-bit count of each [`BvTerm::SVar`] input (for
+    /// sign-extended model extraction)
+    svar_bits: HashMap<String, u32>,
     /// structural cache: term pointer identity is not stable, so cache by
     /// value
     cache: HashMap<BvTerm, Vec<Lit>>,
@@ -76,6 +252,7 @@ impl BitBlaster {
             solver,
             width,
             inputs: HashMap::new(),
+            svar_bits: HashMap::new(),
             cache: HashMap::new(),
             lit_true: Lit::pos(t),
         }
@@ -93,8 +270,20 @@ impl BitBlaster {
         }
     }
 
-    /// y <-> a AND b
+    /// y <-> a AND b (constant-folded: known operands never allocate a
+    /// gate, so structurally-equal miter sides stay literal-identical).
     fn and_gate(&mut self, a: Lit, b: Lit) -> Lit {
+        let t = self.lit_true;
+        let f = t.negate();
+        if a == f || b == f || a == b.negate() {
+            return f;
+        }
+        if a == t || a == b {
+            return b;
+        }
+        if b == t {
+            return a;
+        }
         let y = self.fresh();
         self.solver.add_clause(&[y.negate(), a]);
         self.solver.add_clause(&[y.negate(), b]);
@@ -107,8 +296,28 @@ impl BitBlaster {
         self.and_gate(a.negate(), b.negate()).negate()
     }
 
-    /// y <-> a XOR b
+    /// y <-> a XOR b (constant-folded)
     fn xor_gate(&mut self, a: Lit, b: Lit) -> Lit {
+        let t = self.lit_true;
+        let f = t.negate();
+        if a == f {
+            return b;
+        }
+        if b == f {
+            return a;
+        }
+        if a == t {
+            return b.negate();
+        }
+        if b == t {
+            return a.negate();
+        }
+        if a == b {
+            return f;
+        }
+        if a == b.negate() {
+            return t;
+        }
         let y = self.fresh();
         self.solver.add_clause(&[y.negate(), a, b]);
         self.solver.add_clause(&[y.negate(), a.negate(), b.negate()]);
@@ -117,8 +326,16 @@ impl BitBlaster {
         y
     }
 
-    /// y <-> (sel ? a : b)
+    /// y <-> (sel ? a : b) (constant-folded)
     fn mux_gate(&mut self, sel: Lit, a: Lit, b: Lit) -> Lit {
+        let t = self.lit_true;
+        let f = t.negate();
+        if sel == t || a == b {
+            return a;
+        }
+        if sel == f {
+            return b;
+        }
         let y = self.fresh();
         self.solver.add_clause(&[sel.negate(), y.negate(), a]);
         self.solver.add_clause(&[sel.negate(), y, a.negate()]);
@@ -127,7 +344,7 @@ impl BitBlaster {
         y
     }
 
-    /// Unsigned `a >= b` comparator (ripple from MSB).
+    /// Unsigned `a >= b` comparator (ripple from LSB up).
     fn geq(&mut self, a: &[Lit], b: &[Lit]) -> Lit {
         // geq_i over bits [i..]: geq = (a_i > b_i) OR (a_i == b_i AND geq_{i+1})
         let mut geq = self.const_lit(true); // empty suffix: equal
@@ -140,11 +357,47 @@ impl BitBlaster {
         geq
     }
 
+    /// Signed `a >= b`: flip both MSBs (bias by 2^(w-1)) and compare
+    /// unsigned.
+    fn sgeq(&mut self, a: &[Lit], b: &[Lit]) -> Lit {
+        let mut af = a.to_vec();
+        let mut bf = b.to_vec();
+        if let (Some(am), Some(bm)) = (af.last_mut(), bf.last_mut()) {
+            *am = am.negate();
+            *bm = bm.negate();
+        }
+        self.geq(&af, &bf)
+    }
+
+    /// Ripple-carry adder: `a + b + carry_in`, discarding the carry out
+    /// (wrapping semantics).
+    fn add_lits(&mut self, a: &[Lit], b: &[Lit], mut carry: Lit) -> Vec<Lit> {
+        let mut out = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let axb = self.xor_gate(a[i], b[i]);
+            out.push(self.xor_gate(axb, carry));
+            let c1 = self.and_gate(a[i], b[i]);
+            let c2 = self.and_gate(axb, carry);
+            carry = self.or_gate(c1, c2);
+        }
+        out
+    }
+
+    /// Arithmetic right shift of a literal vector (sign bit replicated).
+    fn ashr_lits(&self, a: &[Lit], s: u32) -> Vec<Lit> {
+        let w = a.len();
+        let sign = a[w - 1];
+        (0..w)
+            .map(|i| if i + (s as usize) < w { a[i + s as usize] } else { sign })
+            .collect()
+    }
+
     /// Bit-blast a term to literals (LSB first).
     pub fn blast(&mut self, t: &BvTerm) -> Vec<Lit> {
         if let Some(bits) = self.cache.get(t) {
             return bits.clone();
         }
+        let w = self.width as usize;
         let bits = match t {
             BvTerm::Var(name) => {
                 if let Some(b) = self.inputs.get(name) {
@@ -154,6 +407,21 @@ impl BitBlaster {
                     self.inputs.insert(name.clone(), b.clone());
                     b
                 }
+            }
+            BvTerm::SVar(name, nbits) => {
+                let nb = (*nbits).clamp(1, self.width) as usize;
+                let base = if let Some(b) = self.inputs.get(name) {
+                    b.clone()
+                } else {
+                    let b: Vec<Lit> = (0..nb).map(|_| self.fresh()).collect();
+                    self.inputs.insert(name.clone(), b.clone());
+                    self.svar_bits.insert(name.clone(), nb as u32);
+                    b
+                };
+                let sign = base[base.len() - 1];
+                (0..w)
+                    .map(|i| if i < base.len() { base[i] } else { sign })
+                    .collect()
             }
             BvTerm::Const(c) => (0..self.width)
                 .map(|i| self.const_lit((c >> i) & 1 == 1))
@@ -165,9 +433,71 @@ impl BitBlaster {
                 if matches!(t, BvTerm::Min(..)) {
                     sel = sel.negate();
                 }
-                (0..self.width as usize)
-                    .map(|i| self.mux_gate(sel, ab[i], bb[i]))
-                    .collect()
+                (0..w).map(|i| self.mux_gate(sel, ab[i], bb[i])).collect()
+            }
+            BvTerm::SMax(a, b) | BvTerm::SMin(a, b) => {
+                let ab = self.blast(a);
+                let bb = self.blast(b);
+                let mut sel = self.sgeq(&ab, &bb); // a >=s b
+                if matches!(t, BvTerm::SMin(..)) {
+                    sel = sel.negate();
+                }
+                (0..w).map(|i| self.mux_gate(sel, ab[i], bb[i])).collect()
+            }
+            BvTerm::Add(a, b) => {
+                let ab = self.blast(a);
+                let bb = self.blast(b);
+                let cin = self.const_lit(false);
+                self.add_lits(&ab, &bb, cin)
+            }
+            BvTerm::Mul(a, b) => {
+                let ab = self.blast(a);
+                let bb = self.blast(b);
+                let f = self.const_lit(false);
+                let mut acc = vec![f; w];
+                for i in 0..w {
+                    let mut pp = vec![f; w];
+                    for j in i..w {
+                        pp[j] = self.and_gate(bb[j - i], ab[i]);
+                    }
+                    acc = self.add_lits(&acc, &pp, f);
+                }
+                acc
+            }
+            BvTerm::Neg(a) => {
+                let ab = self.blast(a);
+                let inv: Vec<Lit> = ab.iter().map(|l| l.negate()).collect();
+                let zeros = vec![self.const_lit(false); w];
+                let one = self.const_lit(true);
+                self.add_lits(&inv, &zeros, one)
+            }
+            BvTerm::Shl(a, s) => {
+                let ab = self.blast(a);
+                let s = (*s as usize).min(w);
+                let f = self.const_lit(false);
+                (0..w).map(|i| if i < s { f } else { ab[i - s] }).collect()
+            }
+            BvTerm::Ashr(a, s) => {
+                let ab = self.blast(a);
+                self.ashr_lits(&ab, (*s).min(self.width - 1))
+            }
+            BvTerm::Rte(a, s) => {
+                // q = a >>s (arith); r = low s bits; round up when
+                // r > half, or r == half and q is odd (ties to even)
+                let ab = self.blast(a);
+                let s = (*s).min(self.width - 1).max(1) as usize;
+                let q = self.ashr_lits(&ab, s as u32);
+                let mut low_or = self.const_lit(false);
+                for &l in &ab[..s - 1] {
+                    low_or = self.or_gate(low_or, l);
+                }
+                let rtop = ab[s - 1];
+                let gt = self.and_gate(rtop, low_or);
+                let eq = self.and_gate(rtop, low_or.negate());
+                let tie_up = self.and_gate(eq, q[0]);
+                let round_up = self.or_gate(gt, tie_up);
+                let zeros = vec![self.const_lit(false); w];
+                self.add_lits(&q, &zeros, round_up)
             }
         };
         self.cache.insert(t.clone(), bits.clone());
@@ -210,6 +540,13 @@ impl BitBlaster {
                                 v |= 1 << i;
                             }
                         }
+                        // sign-extend bounded signed inputs so the
+                        // witness reads as a plain i64
+                        if let Some(&nb) = self.svar_bits.get(name) {
+                            if nb < 64 && (v >> (nb - 1)) & 1 == 1 {
+                                v |= !0u64 << nb;
+                            }
+                        }
                         (name.clone(), v)
                     })
                     .collect();
@@ -222,18 +559,16 @@ impl BitBlaster {
     pub fn input_bits(&self, name: &str) -> Option<&Vec<Lit>> {
         self.inputs.get(name)
     }
-
-    #[allow(dead_code)]
-    fn _unused(&self) -> Var {
-        0
-    }
 }
 
 /// Equivalence verdict.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum EquivResult {
+    /// UNSAT miter: the two sides agree on every input.
     Equivalent,
+    /// SAT miter: a concrete input assignment distinguishing the sides.
     Counterexample(HashMap<String, u64>),
+    /// Solver hit the caller's wall-clock budget.
     Timeout,
 }
 
@@ -311,9 +646,92 @@ mod tests {
             for i in 0..6 {
                 env.insert(format!("x{i}"), rng.below(256) as u64);
             }
-            assert_eq!(lhs.eval(&env), rhs.eval(&env));
+            assert_eq!(lhs.eval(&env, 8), rhs.eval(&env, 8));
             let mut bb = BitBlaster::new(8);
             assert_eq!(bb.prove_all_equal(&[(lhs, rhs)], T), EquivResult::Equivalent);
         }
+    }
+
+    /// Differential fuzz of the arithmetic nodes: `eval` must agree with
+    /// the blasted circuit on random signed inputs (proved by asking the
+    /// solver whether a term differs from the constant `eval` computed).
+    #[test]
+    fn arithmetic_eval_matches_blasted_semantics() {
+        let mut rng = Rng::new(11);
+        for round in 0..8 {
+            let a = BvTerm::svar("a", 9);
+            let b = BvTerm::svar("b", 9);
+            let t = match round % 4 {
+                0 => BvTerm::add(BvTerm::mul(a.clone(), b.clone()), a.clone()),
+                1 => BvTerm::rte(BvTerm::mul(a.clone(), b.clone()), 3),
+                2 => BvTerm::sclamp(BvTerm::add(a.clone(), b.clone()), -100, 100),
+                _ => BvTerm::ashr(BvTerm::neg(a.clone()), 2),
+            };
+            let av = rng.below(512) as i64 - 256;
+            let bv = rng.below(512) as i64 - 256;
+            let mut env = HashMap::new();
+            env.insert("a".to_string(), av as u64);
+            env.insert("b".to_string(), bv as u64);
+            let want = t.eval(&env, 24);
+            // pin the inputs with unit clauses, then prove t == want
+            let mut bb = BitBlaster::new(24);
+            let bits_t = bb.blast(&t);
+            for (name, v) in [("a", av), ("b", bv)] {
+                let lits = bb.input_bits(name).unwrap().clone();
+                for (i, l) in lits.iter().enumerate() {
+                    let on = (v as u64 >> i) & 1 == 1;
+                    let unit = if on { *l } else { l.negate() };
+                    assert!(bb.solver.add_clause(&[unit]));
+                }
+            }
+            let want_bits = bb.blast(&BvTerm::Const(want));
+            let pairs: Vec<_> =
+                bits_t.into_iter().zip(want_bits).collect();
+            // any diff bit must be unsatisfiable
+            let mut diff = bb.const_lit(false);
+            for (x, y) in pairs {
+                let d = bb.xor_gate(x, y);
+                diff = bb.or_gate(diff, d);
+            }
+            bb.solver.add_clause(&[diff]);
+            assert_eq!(
+                bb.solver.solve(T),
+                SatResult::Unsat,
+                "round {round}: blasted value disagrees with eval ({av}, {bv})"
+            );
+        }
+    }
+
+    /// The requantization flaw in miniature: round-ties-even shift vs
+    /// truncating shift differ, and the witness pinpoints it.
+    #[test]
+    fn rte_vs_ashr_refuted_with_sound_witness() {
+        let mut bb = BitBlaster::new(16);
+        let a = BvTerm::svar("a", 12);
+        let lhs = BvTerm::rte(a.clone(), 4);
+        let rhs = BvTerm::ashr(a.clone(), 4);
+        match bb.prove_all_equal(&[(lhs.clone(), rhs.clone())], T) {
+            EquivResult::Counterexample(m) => {
+                assert_ne!(lhs.eval(&m, 16), rhs.eval(&m, 16), "witness {m:?}");
+            }
+            other => panic!("expected counterexample, got {other:?}"),
+        }
+    }
+
+    /// Structurally identical miter sides must discharge without any
+    /// solver search: constant folding collapses the miter to an empty
+    /// clause at add time.
+    #[test]
+    fn structural_equality_discharges_without_search() {
+        let mut bb = BitBlaster::new(32);
+        let a = BvTerm::svar("a", 8);
+        let b = BvTerm::svar("b", 8);
+        let t = BvTerm::rte(BvTerm::add(BvTerm::mul(a, b.clone()), b), 2);
+        assert_eq!(
+            bb.prove_all_equal(&[(t.clone(), t)], T),
+            EquivResult::Equivalent
+        );
+        assert_eq!(bb.solver.stats_decisions, 0, "no search expected");
+        assert_eq!(bb.solver.stats_conflicts, 0, "no conflicts expected");
     }
 }

@@ -419,6 +419,44 @@ impl Solver {
         self.assign[v as usize] == 1
     }
 
+    /// Dump the problem clauses (original, not learnt) in DIMACS CNF,
+    /// including level-0 unit facts sitting on the trail — so a failing
+    /// obligation can be replayed through an external solver
+    /// (`minisat out.cnf`). DIMACS variables are 1-based.
+    pub fn dimacs(&self) -> String {
+        let level0 = if self.trail_lim.is_empty() {
+            &self.trail[..]
+        } else {
+            &self.trail[..self.trail_lim[0]]
+        };
+        let units: Vec<&Lit> = level0.iter().collect();
+        let originals: Vec<&Clause> =
+            self.clauses.iter().filter(|c| !c.learnt).collect();
+        let mut out = format!(
+            "p cnf {} {}\n",
+            self.num_vars(),
+            originals.len() + units.len()
+        );
+        let fmt_lit = |l: &Lit| {
+            let v = l.var() as i64 + 1;
+            if l.sign() {
+                -v
+            } else {
+                v
+            }
+        };
+        for l in units {
+            out.push_str(&format!("{} 0\n", fmt_lit(l)));
+        }
+        for c in originals {
+            for l in &c.lits {
+                out.push_str(&format!("{} ", fmt_lit(l)));
+            }
+            out.push_str("0\n");
+        }
+        out
+    }
+
     /// Drop learnt clauses and reset the trail — reuse the solver shell
     /// for a fresh problem is NOT supported; this is for tests only.
     #[cfg(test)]
@@ -496,6 +534,89 @@ mod tests {
         assert_eq!(s.solve(T), SatResult::Unsat);
         assert!(s.stats_conflicts > 0);
         assert!(s.is_learnt_count() > 0);
+    }
+
+    #[test]
+    fn unit_propagation_chains_without_decisions() {
+        // a; a->b; b->c; c->d : everything follows by propagation alone
+        let mut s = Solver::new();
+        let vs: Vec<Var> = (0..4).map(|_| s.new_var()).collect();
+        s.add_clause(&[Lit::pos(vs[0])]);
+        for w in vs.windows(2) {
+            s.add_clause(&[Lit::neg(w[0]), Lit::pos(w[1])]);
+        }
+        assert_eq!(s.solve(T), SatResult::Sat);
+        assert_eq!(s.stats_decisions, 0, "implication chain needs no search");
+        assert!(s.stats_propagations >= 4, "each fact must be propagated");
+        for v in vs {
+            assert!(s.model_value(v));
+        }
+    }
+
+    #[test]
+    fn conflict_analysis_learns_clauses() {
+        // PHP(4,3) cannot be solved without conflicts; every conflict
+        // must yield a learnt clause (or a level-0 unit fact)
+        let mut s = php_instance(4, 3);
+        assert_eq!(s.solve(T), SatResult::Unsat);
+        assert!(s.stats_conflicts > 0);
+        assert!(
+            s.is_learnt_count() > 0,
+            "CDCL without learning would be plain DPLL"
+        );
+    }
+
+    #[test]
+    fn restarts_are_deterministic() {
+        // two identical fresh solves must take the exact same path:
+        // restart policy, activity bumps, and phase saving hold no
+        // hidden global state
+        let run = || {
+            let mut s = php_instance(5, 4);
+            let r = s.solve(Duration::from_secs(60));
+            (r, s.stats_conflicts, s.stats_decisions, s.stats_propagations)
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.0, SatResult::Unsat);
+        assert_eq!(a, b, "solver must be a deterministic function of input");
+        assert!(a.1 > 100, "PHP(5,4) should be enough work to restart");
+    }
+
+    fn php_instance(p: usize, h: usize) -> Solver {
+        let mut s = Solver::new();
+        let vars: Vec<Vec<Var>> =
+            (0..p).map(|_| (0..h).map(|_| s.new_var()).collect()).collect();
+        for pi in vars.iter() {
+            let c: Vec<Lit> = pi.iter().map(|&v| Lit::pos(v)).collect();
+            s.add_clause(&c);
+        }
+        for j in 0..h {
+            for i1 in 0..p {
+                for i2 in i1 + 1..p {
+                    s.add_clause(&[Lit::neg(vars[i1][j]), Lit::neg(vars[i2][j])]);
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn dimacs_dump_roundtrips_the_problem() {
+        let mut s = Solver::new();
+        let a = s.new_var();
+        let b = s.new_var();
+        let c = s.new_var();
+        s.add_clause(&[Lit::pos(a)]); // becomes a level-0 unit fact
+        // add_clause simplifies against the trail: ¬a is already false
+        // and drops out, so the stored clause is (b ∨ ¬c)
+        s.add_clause(&[Lit::neg(a), Lit::pos(b), Lit::neg(c)]);
+        let text = s.dimacs();
+        let mut lines = text.lines();
+        assert_eq!(lines.next(), Some("p cnf 3 2"));
+        assert_eq!(lines.next(), Some("1 0"));
+        assert_eq!(lines.next(), Some("2 -3 0"));
+        assert_eq!(lines.next(), None);
     }
 
     /// Differential test against brute force on random small 3-SAT.

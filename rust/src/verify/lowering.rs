@@ -1,0 +1,1343 @@
+//! Symbolic execution of [`LoweredProgram`]s for translation validation.
+//!
+//! This is the static-analysis half of the `d2a verify` obligation
+//! pipeline (see [`super::obligations`]): a *shadow device* walks the
+//! exact MMIO command stream a driver lowering produced — operand
+//! bursts, DMA replays, per-tile triggers, bias schedules, `ReadPlan`
+//! decode, stitching — but carries [`BvTerm`]s instead of concrete
+//! bytes wherever a *marker* input element or a trigger result flows.
+//! The walk yields a symbolic term grid for the program's final result,
+//! which the obligation runner miters against an independently built
+//! reference grid for the op's semantics and discharges with the
+//! in-repo bit-blaster + CDCL solver (`smt::{bv,sat}`).
+//!
+//! Two fidelity levels coexist:
+//!
+//! * **Exact integer datapaths** (HLSCNN conv2d, the VTA vector ALU)
+//!   are modelled bit-precisely: the shared symbolic kernels here
+//!   ([`sym_conv2d_codes`], [`sym_wire_to_store_hw`], [`sym_vta_add`])
+//!   mirror the integer reference kernels in `accel/*/model.rs`
+//!   operation for operation, so a counterexample from the solver is a
+//!   *concrete witness* that replays on the real simulator.
+//! * **Float datapaths** (FlexASR's AdaptivFloat MACs) are abstracted
+//!   by hash-consed **uninterpreted functions** ([`UfTable`]): two
+//!   applications are the same term iff the opcode, every scheduled
+//!   bias, and every operand term agree. This cannot prove numeric
+//!   properties of the float math, but it proves exactly what tiling
+//!   can break — that each tile feeds the *right operand bytes* under
+//!   the *right bias schedule* to the *right trigger* and stores the
+//!   result where the stitcher expects it.
+//!
+//! Inputs are introduced as **marker codes**: each operand element is
+//! staged as a distinct concrete code whose byte pattern is registered
+//! in a [`MarkerMap`]; when the shadow device reads a registered code
+//! it substitutes the mapped symbolic variable. The obligation builders
+//! construct marker tensors whose canonical encoding provably
+//! round-trips (asserted, not assumed), so the correspondence
+//! `staged byte ↔ symbolic variable` is exact.
+
+use crate::accel::flexasr::model as fx;
+use crate::accel::hlscnn::model as hx;
+use crate::accel::hlscnn::HlscnnConfig;
+use crate::accel::vta::model as vx;
+use crate::codegen::{LoweredProgram, ReadPlan, Stitch};
+use crate::ila::Cmd;
+use crate::ir::Target;
+use crate::numerics::adaptivfloat::AdaptivFloatFormat;
+use crate::numerics::fixed_point::FixedPointFormat;
+use crate::smt::BvTerm;
+use crate::tensor::Tensor;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Marker registry: `(element width in bytes, raw little-endian code
+/// bits)` → the symbolic variable standing for that staged element.
+///
+/// Codes must be globally distinct across every operand of one
+/// obligation (the builders below enforce this on insert), because the
+/// shadow device resolves markers by *value*, not by address.
+pub type MarkerMap = HashMap<(usize, u64), Rc<BvTerm>>;
+
+/// A symbolic result grid: the term computed for every element of a
+/// tensor, in row-major order of `shape`.
+#[derive(Debug, Clone)]
+pub struct SymGrid {
+    /// Tensor shape the terms are laid out in.
+    pub shape: Vec<usize>,
+    /// One term per element, row-major.
+    pub terms: Vec<Rc<BvTerm>>,
+}
+
+/// Decode metadata attached to a symbolic read-back: everything the
+/// host-side [`ReadPlan`] decode consumes *besides* the raw codes. Two
+/// sides of a miter must agree on this exactly — a lowering that stores
+/// the right codes under the wrong exponent bias is still wrong, and
+/// that mismatch is caught structurally here rather than by the solver.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReadMeta {
+    /// AdaptivFloat-8 read-back: the decode bias (from
+    /// `STATUS_OUT_BIAS`) and the format parameters.
+    Flex {
+        /// Output exponent bias the device reported.
+        bias: i32,
+        /// Format total bits.
+        bits: u32,
+        /// Format exponent bits.
+        exp_bits: u32,
+    },
+    /// HLSCNN fixed-point i16 read-back.
+    Hlscnn {
+        /// Format total bits.
+        bits: u32,
+        /// Format fractional bits.
+        frac: u32,
+    },
+    /// VTA int32 read-back with a per-tensor power-of-two scale.
+    Vta {
+        /// Dequantization scale.
+        scale: f32,
+    },
+}
+
+/// A symbolic read-back: the term grid plus its decode metadata.
+#[derive(Debug, Clone)]
+pub struct SymPart {
+    /// Terms for every element of the read block.
+    pub grid: SymGrid,
+    /// Decode parameters the host would apply to those codes.
+    pub meta: ReadMeta,
+}
+
+/// Which device semantics drive the shadow triggers.
+#[derive(Debug, Clone, Copy)]
+pub enum DeviceModel {
+    /// FlexASR: float datapath abstracted by uninterpreted functions.
+    FlexAsr,
+    /// HLSCNN with the given (rev-dependent) fixed-point formats —
+    /// modelled bit-exactly, including the wire→store weight cast.
+    Hlscnn(HlscnnConfig),
+    /// VTA's saturating int32 vector ALU — modelled bit-exactly.
+    Vta,
+}
+
+impl DeviceModel {
+    fn target(&self) -> Target {
+        match self {
+            DeviceModel::FlexAsr => Target::FlexAsr,
+            DeviceModel::Hlscnn(_) => Target::Hlscnn,
+            DeviceModel::Vta => Target::Vta,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Uninterpreted functions
+// ---------------------------------------------------------------------
+
+/// Hash-consed uninterpreted-function table for abstracting float
+/// datapaths: `apply` returns the *same* fresh variable for the same
+/// `(name, params, args)` triple and a distinct one otherwise, which is
+/// precisely the congruence the equivalence obligations need. One table
+/// must be shared by the shadow execution and the reference builder of
+/// an obligation so their applications alias.
+#[derive(Debug, Default)]
+pub struct UfTable {
+    map: HashMap<(String, Vec<i64>, Vec<Rc<BvTerm>>), Rc<BvTerm>>,
+    counter: usize,
+}
+
+impl UfTable {
+    /// Fresh empty table.
+    pub fn new() -> Self {
+        UfTable::default()
+    }
+
+    /// Apply `name(params; args)`, hash-consing the result.
+    pub fn apply(&mut self, name: &str, params: &[i64], args: &[Rc<BvTerm>]) -> Rc<BvTerm> {
+        let key = (name.to_string(), params.to_vec(), args.to_vec());
+        if let Some(t) = self.map.get(&key) {
+            return t.clone();
+        }
+        let t = BvTerm::var(format!("uf{}_{}", self.counter, name));
+        self.counter += 1;
+        self.map.insert(key, t.clone());
+        t
+    }
+}
+
+/// One FlexASR linear output element `out[i][j]` as an uninterpreted
+/// function of the operand codes and the full bias/activation schedule.
+/// Shared by the shadow `fn_start` handler and [`ref_linear`].
+pub fn uf_linear_elem(
+    uf: &mut UfTable,
+    k: usize,
+    b_in: i32,
+    b_wgt: i32,
+    b_bias: i32,
+    act: i64,
+    out_bias: i32,
+    x_row: &[Rc<BvTerm>],
+    w_row: &[Rc<BvTerm>],
+    b_j: &Rc<BvTerm>,
+) -> Rc<BvTerm> {
+    let mut args: Vec<Rc<BvTerm>> = x_row.to_vec();
+    args.extend_from_slice(w_row);
+    args.push(b_j.clone());
+    uf.apply(
+        "flex_linear",
+        &[k as i64, b_in as i64, b_wgt as i64, b_bias as i64, act, out_bias as i64],
+        &args,
+    )
+}
+
+/// One FlexASR LSTM pre-activation gate element (the `OP_LSTM_GATES`
+/// wide-float output) as an uninterpreted function.
+#[allow(clippy::too_many_arguments)]
+pub fn uf_lstm_gate_elem(
+    uf: &mut UfTable,
+    e: usize,
+    hidden: usize,
+    b_in: i32,
+    b_wgt: i32,
+    b_bias: i32,
+    b_wgt2: i32,
+    h_bias_in: i32,
+    wide_bias: i32,
+    x_row: &[Rc<BvTerm>],
+    h_row: &[Rc<BvTerm>],
+    wi_row: &[Rc<BvTerm>],
+    wh_row: &[Rc<BvTerm>],
+    b_j: &Rc<BvTerm>,
+) -> Rc<BvTerm> {
+    let mut args: Vec<Rc<BvTerm>> = x_row.to_vec();
+    args.extend_from_slice(h_row);
+    args.extend_from_slice(wi_row);
+    args.extend_from_slice(wh_row);
+    args.push(b_j.clone());
+    uf.apply(
+        "flex_lstm_gate",
+        &[
+            e as i64,
+            hidden as i64,
+            b_in as i64,
+            b_wgt as i64,
+            b_bias as i64,
+            b_wgt2 as i64,
+            h_bias_in as i64,
+            wide_bias as i64,
+        ],
+        &args,
+    )
+}
+
+/// The three `OP_LSTM_ACT` per-element outputs (next hidden code,
+/// output-port code, next cell code) as uninterpreted functions of the
+/// four gate terms and the previous cell code.
+pub fn uf_lstm_act_elem(
+    uf: &mut UfTable,
+    which: &str,
+    biases: &[i32],
+    gate_i: &Rc<BvTerm>,
+    gate_f: &Rc<BvTerm>,
+    gate_g: &Rc<BvTerm>,
+    gate_o: &Rc<BvTerm>,
+    c_prev: &Rc<BvTerm>,
+) -> Rc<BvTerm> {
+    let params: Vec<i64> = biases.iter().map(|&b| b as i64).collect();
+    let args = vec![
+        gate_i.clone(),
+        gate_f.clone(),
+        gate_g.clone(),
+        gate_o.clone(),
+        c_prev.clone(),
+    ];
+    uf.apply(&format!("flex_lstm_act_{which}"), &params, &args)
+}
+
+// ---------------------------------------------------------------------
+// Shared symbolic integer kernels (exact datapaths)
+// ---------------------------------------------------------------------
+
+/// Symbolic mirror of the **hardware** weight cast
+/// [`hx::wire_to_store`]: arithmetic-shift the Q16.12 wire code down to
+/// the store format, then saturate. On the Original rev this truncates
+/// toward negative infinity — the flaw the Table 3 story rediscovers.
+pub fn sym_wire_to_store_hw(store: FixedPointFormat, wire: &Rc<BvTerm>) -> Rc<BvTerm> {
+    let shift = hx::wire_wgt_fmt().frac_bits.saturating_sub(store.frac_bits);
+    let hi = (1i64 << (store.bits - 1)) - 1;
+    let lo = -(1i64 << (store.bits - 1));
+    BvTerm::sclamp(BvTerm::ashr(wire.clone(), shift), lo, hi)
+}
+
+/// Symbolic mirror of the **software** weight quantization
+/// (`FixedPointFormat::encode` applied to the wire value): shift with
+/// round-to-nearest-even, then saturate to the same rails.
+pub fn sym_wire_to_store_sw(store: FixedPointFormat, wire: &Rc<BvTerm>) -> Rc<BvTerm> {
+    let shift = hx::wire_wgt_fmt().frac_bits.saturating_sub(store.frac_bits);
+    let hi = (1i64 << (store.bits - 1)) - 1;
+    let lo = -(1i64 << (store.bits - 1));
+    BvTerm::sclamp(BvTerm::rte(wire.clone(), shift), lo, hi)
+}
+
+/// Symbolic mirror of [`hx::conv2d_codes`]: NHWC activation codes ×
+/// O-major-HWC store-format weight codes → NHWC output codes, with the
+/// identical loop order, padding skip, and round-to-nearest-even
+/// requantization saturating to the activation format.
+#[allow(clippy::too_many_arguments)]
+pub fn sym_conv2d_codes(
+    acts: &[Rc<BvTerm>],
+    wgts_store: &[Rc<BvTerm>],
+    (c, h, w): (usize, usize, usize),
+    o: usize,
+    (kh, kw): (usize, usize),
+    (sh, sw): (usize, usize),
+    (ph, pw): (usize, usize),
+    act_fmt: FixedPointFormat,
+    wgt_fmt: FixedPointFormat,
+) -> Vec<Rc<BvTerm>> {
+    let oh = (h + 2 * ph - kh) / sh + 1;
+    let ow = (w + 2 * pw - kw) / sw + 1;
+    let hi = (1i64 << (act_fmt.bits - 1)) - 1;
+    let lo = -(1i64 << (act_fmt.bits - 1));
+    let mut out = Vec::with_capacity(oh * ow * o);
+    for y in 0..oh {
+        for xw in 0..ow {
+            for oc in 0..o {
+                let mut acc: Option<Rc<BvTerm>> = None;
+                for dy in 0..kh {
+                    let iy = (y * sh + dy) as isize - ph as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for dx in 0..kw {
+                        let ix = (xw * sw + dx) as isize - pw as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        for ch in 0..c {
+                            let a = &acts[(iy as usize * w + ix as usize) * c + ch];
+                            let wv = &wgts_store[((oc * kh + dy) * kw + dx) * c + ch];
+                            let prod = BvTerm::mul(a.clone(), wv.clone());
+                            acc = Some(match acc {
+                                None => prod,
+                                Some(s) => BvTerm::add(s, prod),
+                            });
+                        }
+                    }
+                }
+                let acc = acc.unwrap_or_else(|| BvTerm::cnst(0));
+                // accumulator carries `act_frac + wgt_frac` fractional
+                // bits; requantize back to the activation lattice
+                out.push(BvTerm::sclamp(BvTerm::rte(acc, wgt_fmt.frac_bits), lo, hi));
+            }
+        }
+    }
+    out
+}
+
+/// Symbolic mirror of the VTA saturating vector-ALU add (`alu_add`
+/// with `saturate` set): per-lane `clamp(a + b, -127, 127)`.
+pub fn sym_vta_add(a: &Rc<BvTerm>, b: &Rc<BvTerm>) -> Rc<BvTerm> {
+    BvTerm::sclamp(BvTerm::add(a.clone(), b.clone()), -127, 127)
+}
+
+// ---------------------------------------------------------------------
+// The shadow device
+// ---------------------------------------------------------------------
+
+struct Shadow<'m> {
+    /// Concrete byte image per device memory region, zero-initialized
+    /// like `IlaState::new_mem`.
+    regions: Vec<(u64, Vec<u8>)>,
+    /// Symbolic overlays: absolute address → (term, element width).
+    overlays: HashMap<u64, (Rc<BvTerm>, usize)>,
+    /// Concrete config registers (addr → last written u64).
+    regs: HashMap<u64, u64>,
+    /// The `STATUS_OUT_BIAS` value the last FlexASR trigger reported.
+    status_out_bias: i32,
+    markers: &'m MarkerMap,
+}
+
+impl<'m> Shadow<'m> {
+    fn new(target: Target, markers: &'m MarkerMap) -> Self {
+        let regions: Vec<(u64, usize)> = match target {
+            Target::FlexAsr => vec![
+                (fx::GB_BASE, fx::GB_SIZE),
+                (fx::PE_WGT_BASE, fx::PE_WGT_SIZE),
+                (fx::WGT_DRAM_BASE, fx::WGT_DRAM_SIZE),
+            ],
+            Target::Hlscnn => vec![
+                (hx::ACT_BASE, hx::ACT_SIZE),
+                (hx::WGT_BASE, hx::WGT_SIZE),
+                (hx::OUT_BASE, hx::OUT_SIZE),
+            ],
+            Target::Vta => vec![
+                (vx::INP_BASE, vx::INP_SIZE),
+                (vx::WGT_BASE, vx::WGT_SIZE),
+                (vx::ACC_BASE, vx::ACC_SIZE),
+            ],
+        };
+        Shadow {
+            regions: regions.into_iter().map(|(b, s)| (b, vec![0u8; s])).collect(),
+            overlays: HashMap::new(),
+            regs: HashMap::new(),
+            status_out_bias: 0,
+            markers,
+        }
+    }
+
+    fn reg(&self, addr: u64) -> u64 {
+        self.regs.get(&addr).copied().unwrap_or(0)
+    }
+
+    fn in_region(&self, addr: u64) -> bool {
+        self.regions
+            .iter()
+            .any(|(b, m)| addr >= *b && addr < *b + m.len() as u64)
+    }
+
+    fn clear_overlays(&mut self, addr: u64, len: usize) {
+        let end = addr + len as u64;
+        self.overlays
+            .retain(|&oa, &mut (_, ow)| oa + ow as u64 <= addr || oa >= end);
+    }
+
+    fn write_overlay(&mut self, addr: u64, width: usize, t: Rc<BvTerm>) {
+        self.clear_overlays(addr, width);
+        self.overlays.insert(addr, (t, width));
+    }
+
+    fn write_concrete(&mut self, addr: u64, payload: &[u8]) -> Result<(), String> {
+        let end = addr + payload.len() as u64;
+        for (base, mem) in &mut self.regions {
+            if addr >= *base && end <= *base + mem.len() as u64 {
+                let off = (addr - *base) as usize;
+                mem[off..off + payload.len()].copy_from_slice(payload);
+                self.clear_overlays(addr, payload.len());
+                return Ok(());
+            }
+        }
+        Err(format!("burst write outside device memory at {addr:#x}"))
+    }
+
+    fn read_concrete(&self, addr: u64, width: usize) -> Result<&[u8], String> {
+        for (base, mem) in &self.regions {
+            if addr >= *base && addr + width as u64 <= *base + mem.len() as u64 {
+                let off = (addr - *base) as usize;
+                return Ok(&mem[off..off + width]);
+            }
+        }
+        Err(format!("read outside device memory at {addr:#x}"))
+    }
+
+    /// Read one element: exact overlay hit → its term; partial overlay
+    /// overlap → error (a lowering must never slice a symbolic result);
+    /// otherwise the concrete bytes, resolved through the marker map.
+    fn read_elem(&self, addr: u64, width: usize) -> Result<Rc<BvTerm>, String> {
+        if let Some((t, w)) = self.overlays.get(&addr) {
+            if *w == width {
+                return Ok(t.clone());
+            }
+            return Err(format!(
+                "misaligned symbolic read at {addr:#x}: overlay width {w}, read width {width}"
+            ));
+        }
+        for (&oa, &(_, ow)) in &self.overlays {
+            if oa < addr + width as u64 && oa + ow as u64 > addr {
+                return Err(format!(
+                    "read at {addr:#x} partially overlaps symbolic overlay at {oa:#x}"
+                ));
+            }
+        }
+        let bytes = self.read_concrete(addr, width)?;
+        let raw: u64 = match width {
+            1 => bytes[0] as u64,
+            2 => u16::from_le_bytes([bytes[0], bytes[1]]) as u64,
+            4 => u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as u64,
+            _ => return Err(format!("unsupported element width {width}")),
+        };
+        if let Some(t) = self.markers.get(&(width, raw)) {
+            return Ok(t.clone());
+        }
+        Ok(match width {
+            1 => BvTerm::cnst(raw),
+            2 => BvTerm::cnst_i(raw as u16 as i16 as i64),
+            _ => BvTerm::cnst_i(raw as u32 as i32 as i64),
+        })
+    }
+
+    fn apply(
+        &mut self,
+        model: &DeviceModel,
+        cmd: &Cmd,
+        uf: &mut UfTable,
+    ) -> Result<(), String> {
+        if !cmd.is_write {
+            return Ok(());
+        }
+        if self.in_region(cmd.addr) {
+            return self.write_concrete(cmd.addr, cmd.payload());
+        }
+        match model {
+            DeviceModel::FlexAsr => match cmd.addr {
+                fx::DMA_CTRL => self.flex_dma(cmd.data_u64()),
+                fx::FN_START => {
+                    if cmd.data_u64() != 0 {
+                        self.flex_trigger(uf)
+                    } else {
+                        Ok(())
+                    }
+                }
+                _ => {
+                    self.regs.insert(cmd.addr, cmd.data_u64());
+                    Ok(())
+                }
+            },
+            DeviceModel::Hlscnn(cfg) => match cmd.addr {
+                hx::CFG_START => {
+                    if cmd.data_u64() != 0 {
+                        self.hlscnn_trigger(*cfg)
+                    } else {
+                        Ok(())
+                    }
+                }
+                _ => {
+                    self.regs.insert(cmd.addr, cmd.data_u64());
+                    Ok(())
+                }
+            },
+            DeviceModel::Vta => match cmd.addr {
+                vx::INSN_ADDR => self.vta_insn(cmd),
+                _ => {
+                    self.regs.insert(cmd.addr, cmd.data_u64());
+                    Ok(())
+                }
+            },
+        }
+    }
+
+    /// Replay a `DMA_CTRL` word: weight-DRAM → PE buffer copy, same
+    /// field layout as [`fx::dma_word`].
+    fn flex_dma(&mut self, w: u64) -> Result<(), String> {
+        let src = (w & 0xFF_FFFF) as usize;
+        let dst = ((w >> 24) & 0xF_FFFF) as usize;
+        let len = (w >> 44) as usize;
+        if src + len > fx::WGT_DRAM_SIZE || dst + len > fx::PE_WGT_SIZE {
+            return Err(format!("DMA out of range: src {src:#x} dst {dst:#x} len {len:#x}"));
+        }
+        let src_base = fx::WGT_DRAM_BASE + src as u64;
+        for (&oa, &(_, ow)) in &self.overlays {
+            if oa < src_base + len as u64 && oa + ow as u64 > src_base {
+                return Err("DMA from a symbolic source region is unsupported".to_string());
+            }
+        }
+        let bytes: Vec<u8> = {
+            let dram = self
+                .regions
+                .iter()
+                .find(|(b, _)| *b == fx::WGT_DRAM_BASE)
+                .expect("flexasr shadow has a DRAM region");
+            dram.1[src..src + len].to_vec()
+        };
+        self.write_concrete(fx::PE_WGT_BASE + dst as u64, &bytes)
+    }
+
+    /// Dispatch a FlexASR `fn_start`, mirroring the register decode of
+    /// `accel::flexasr::model::build_ila`.
+    fn flex_trigger(&mut self, uf: &mut UfTable) -> Result<(), String> {
+        let sizing = self.reg(fx::CFG_LAYER_SIZING);
+        let (k, m) = ((sizing & 0xFFFF) as usize, ((sizing >> 16) & 0xFFFF) as usize);
+        let control = self.reg(fx::CFG_GB_CONTROL);
+        let (opcode, n) = (control & 0xFF, ((control >> 8) & 0xFF_FFFF) as usize);
+        let mmngr = self.reg(fx::CFG_GB_MMNGR);
+        let (in_base, out_base) = (mmngr & 0xFFFF_FFFF, mmngr >> 32);
+        let mmngr2 = self.reg(fx::CFG_GB_MMNGR2);
+        let (m2_lo, m2_hi) = (mmngr2 & 0xFFFF_FFFF, mmngr2 >> 32);
+        let mngr = self.reg(fx::CFG_MNGR);
+        let (bias_base, wgt2_base) = (mngr & 0xFFFF_FFFF, mngr >> 32);
+        let eb = self.reg(fx::CFG_EXP_BIAS);
+        let bias = |idx: u32| ((eb >> (8 * idx)) & 0xFF) as u8 as i8 as i32;
+        let eb2 = self.reg(fx::CFG_EXP_BIAS2);
+        let bias2 = |idx: u32| ((eb2 >> (8 * idx)) & 0xFF) as u8 as i8 as i32;
+        let ob_reg = self.reg(fx::CFG_OUT_BIAS);
+        let forced = (ob_reg & 0x100 != 0).then(|| (ob_reg & 0xFF) as u8 as i8 as i32);
+        let gb = fx::GB_BASE;
+        let pe = fx::PE_WGT_BASE;
+
+        match opcode {
+            fx::OP_LINEAR => {
+                let ob = forced.ok_or_else(|| {
+                    "symbolic linear requires a driver-forced CFG_OUT_BIAS \
+                     (the output bias is data-dependent otherwise)"
+                        .to_string()
+                })?;
+                let act = (self.reg(fx::CFG_ACT) & 0xFF) as i64;
+                let mut writes = Vec::with_capacity(n * m);
+                for i in 0..n {
+                    let x_row: Vec<Rc<BvTerm>> = (0..k)
+                        .map(|j| self.read_elem(gb + in_base + (i * k + j) as u64, 1))
+                        .collect::<Result<_, _>>()?;
+                    for j in 0..m {
+                        let w_row: Vec<Rc<BvTerm>> = (0..k)
+                            .map(|t| self.read_elem(pe + (j * k + t) as u64, 1))
+                            .collect::<Result<_, _>>()?;
+                        let b_j = self.read_elem(pe + bias_base + j as u64, 1)?;
+                        let term = uf_linear_elem(
+                            uf,
+                            k,
+                            bias(0),
+                            bias(1),
+                            bias(2),
+                            act,
+                            ob,
+                            &x_row,
+                            &w_row,
+                            &b_j,
+                        );
+                        writes.push((gb + out_base + (i * m + j) as u64, term));
+                    }
+                }
+                for (addr, t) in writes {
+                    self.write_overlay(addr, 1, t);
+                }
+                self.status_out_bias = ob;
+                Ok(())
+            }
+            fx::OP_LSTM_GATES => {
+                let hidden = n;
+                let (e, r) = (k, m);
+                let h_base = m2_lo;
+                let (h_bias_in, wide_bias) = (bias2(0), bias2(1));
+                let x_row: Vec<Rc<BvTerm>> = (0..e)
+                    .map(|j| self.read_elem(gb + in_base + j as u64, 1))
+                    .collect::<Result<_, _>>()?;
+                let h_row: Vec<Rc<BvTerm>> = (0..hidden)
+                    .map(|j| self.read_elem(gb + h_base + j as u64, 1))
+                    .collect::<Result<_, _>>()?;
+                let mut writes = Vec::with_capacity(r);
+                for j in 0..r {
+                    let wi_row: Vec<Rc<BvTerm>> = (0..e)
+                        .map(|t| self.read_elem(pe + (j * e + t) as u64, 1))
+                        .collect::<Result<_, _>>()?;
+                    let wh_row: Vec<Rc<BvTerm>> = (0..hidden)
+                        .map(|t| self.read_elem(pe + wgt2_base + (j * hidden + t) as u64, 1))
+                        .collect::<Result<_, _>>()?;
+                    let b_j = self.read_elem(pe + bias_base + j as u64, 1)?;
+                    let g = uf_lstm_gate_elem(
+                        uf,
+                        e,
+                        hidden,
+                        bias(0),
+                        bias(1),
+                        bias(2),
+                        bias(3),
+                        h_bias_in,
+                        wide_bias,
+                        &x_row,
+                        &h_row,
+                        &wi_row,
+                        &wh_row,
+                        &b_j,
+                    );
+                    writes.push((gb + out_base + 4 * j as u64, g));
+                }
+                for (addr, g) in writes {
+                    self.write_overlay(addr, 4, g);
+                }
+                self.status_out_bias = wide_bias;
+                Ok(())
+            }
+            fx::OP_LSTM_ACT => {
+                let hidden = n;
+                let (h_base, c_base) = (m2_lo, m2_hi);
+                let (c_bias_in, h_bias_out, c_bias_out) = (bias(0), bias(1), bias(2));
+                let ob = forced
+                    .ok_or_else(|| "lstm_act requires a forced output bias".to_string())?;
+                let gates: Vec<Rc<BvTerm>> = (0..4 * hidden)
+                    .map(|i| self.read_elem(gb + in_base + 4 * i as u64, 4))
+                    .collect::<Result<_, _>>()?;
+                let c_prev: Vec<Rc<BvTerm>> = (0..hidden)
+                    .map(|j| self.read_elem(gb + c_base + j as u64, 1))
+                    .collect::<Result<_, _>>()?;
+                for j in 0..hidden {
+                    let (gi, gf, gg, go) = (
+                        &gates[j],
+                        &gates[hidden + j],
+                        &gates[2 * hidden + j],
+                        &gates[3 * hidden + j],
+                    );
+                    let h_t = uf_lstm_act_elem(
+                        uf,
+                        "h",
+                        &[c_bias_in, h_bias_out],
+                        gi,
+                        gf,
+                        gg,
+                        go,
+                        &c_prev[j],
+                    );
+                    let o_t = uf_lstm_act_elem(
+                        uf,
+                        "out",
+                        &[c_bias_in, h_bias_out, ob],
+                        gi,
+                        gf,
+                        gg,
+                        go,
+                        &c_prev[j],
+                    );
+                    let c_t = uf_lstm_act_elem(
+                        uf,
+                        "c",
+                        &[c_bias_in, c_bias_out],
+                        gi,
+                        gf,
+                        gg,
+                        go,
+                        &c_prev[j],
+                    );
+                    self.write_overlay(gb + h_base + j as u64, 1, h_t);
+                    self.write_overlay(gb + out_base + j as u64, 1, o_t);
+                    self.write_overlay(gb + c_base + j as u64, 1, c_t);
+                }
+                self.status_out_bias = ob;
+                Ok(())
+            }
+            _ => Err(format!("symbolic FlexASR trigger: unsupported opcode {opcode}")),
+        }
+    }
+
+    /// Replay an HLSCNN `conv_start`, bit-exactly, via the shared
+    /// symbolic kernels.
+    fn hlscnn_trigger(&mut self, cfg: HlscnnConfig) -> Result<(), String> {
+        let shp = self.reg(hx::CFG_SHAPE);
+        let c = (shp & 0xFFF) as usize;
+        let h = ((shp >> 12) & 0xFFF) as usize;
+        let w = ((shp >> 24) & 0xFFF) as usize;
+        let o = ((shp >> 36) & 0xFFF) as usize;
+        let krn = self.reg(hx::CFG_KERNEL);
+        let kh = (krn & 0xFF) as usize;
+        let kw = ((krn >> 8) & 0xFF) as usize;
+        let sh = ((krn >> 16) & 0xFF) as usize;
+        let sw = ((krn >> 24) & 0xFF) as usize;
+        let ph = ((krn >> 32) & 0xFF) as usize;
+        let pw = ((krn >> 40) & 0xFF) as usize;
+        if kh == 0 || kw == 0 || sh == 0 || sw == 0 {
+            return Err("conv_start with zero kernel/stride field".to_string());
+        }
+        if h + 2 * ph < kh || w + 2 * pw < kw {
+            return Err("conv_start kernel larger than padded input".to_string());
+        }
+        let acts: Vec<Rc<BvTerm>> = (0..h * w * c)
+            .map(|i| self.read_elem(hx::ACT_BASE + 2 * i as u64, 2))
+            .collect::<Result<_, _>>()?;
+        let store: Vec<Rc<BvTerm>> = (0..o * kh * kw * c)
+            .map(|i| {
+                self.read_elem(hx::WGT_BASE + 2 * i as u64, 2)
+                    .map(|wire| sym_wire_to_store_hw(cfg.weight_fmt, &wire))
+            })
+            .collect::<Result<_, _>>()?;
+        let out = sym_conv2d_codes(
+            &acts,
+            &store,
+            (c, h, w),
+            o,
+            (kh, kw),
+            (sh, sw),
+            (ph, pw),
+            cfg.act_fmt,
+            cfg.weight_fmt,
+        );
+        for (i, t) in out.into_iter().enumerate() {
+            self.write_overlay(hx::OUT_BASE + 2 * i as u64, 2, t);
+        }
+        Ok(())
+    }
+
+    /// Replay a VTA instruction-doorbell write.
+    fn vta_insn(&mut self, cmd: &Cmd) -> Result<(), String> {
+        let d = &cmd.data;
+        if d[0] == vx::VTA_ALU_ADD {
+            let saturate = d[1] != 0;
+            let len = u32::from_le_bytes([d[2], d[3], d[4], d[5]]) as usize;
+            if len * 4 > vx::ACC_SIZE || len * 4 > vx::WGT_SIZE {
+                return Err("alu_add length exceeds scratchpads".to_string());
+            }
+            let mut lanes = Vec::with_capacity(len);
+            for i in 0..len {
+                let a = self.read_elem(vx::ACC_BASE + 4 * i as u64, 4)?;
+                let b = self.read_elem(vx::WGT_BASE + 4 * i as u64, 4)?;
+                let sum = BvTerm::add(a, b);
+                lanes.push(if saturate {
+                    BvTerm::sclamp(sum, -127, 127)
+                } else {
+                    sum
+                });
+            }
+            for (i, t) in lanes.into_iter().enumerate() {
+                self.write_overlay(vx::ACC_BASE + 4 * i as u64, 4, t);
+            }
+            Ok(())
+        } else {
+            Err(format!("symbolic VTA: unsupported instruction opcode {}", d[0]))
+        }
+    }
+
+    /// Capture one invocation's read-back as a symbolic part.
+    fn sym_read(&self, plan: &ReadPlan) -> Result<SymPart, String> {
+        match plan {
+            ReadPlan::FlexAf8 { base, shape, fmt } => {
+                let count: usize = shape.iter().product();
+                let terms: Vec<Rc<BvTerm>> = (0..count)
+                    .map(|i| self.read_elem(base + i as u64, 1))
+                    .collect::<Result<_, _>>()?;
+                Ok(SymPart {
+                    grid: SymGrid { shape: shape.clone(), terms },
+                    meta: ReadMeta::Flex {
+                        bias: self.status_out_bias,
+                        bits: fmt.bits,
+                        exp_bits: fmt.exp_bits,
+                    },
+                })
+            }
+            ReadPlan::HlscnnI16 { base, shape, fmt } => {
+                if shape.len() != 4 {
+                    return Err("HlscnnI16 read plan must be rank 4".to_string());
+                }
+                let (n, o, oh, ow) = (shape[0], shape[1], shape[2], shape[3]);
+                let mut terms = vec![BvTerm::cnst(0); n * o * oh * ow];
+                let mut idx = 0usize;
+                // the device stores NHWC; the host decode permutes to
+                // NCHW (`hx::decode_out_nchw_fmt`) — mirror that here
+                for b in 0..n {
+                    for y in 0..oh {
+                        for xw in 0..ow {
+                            for ch in 0..o {
+                                terms[((b * o + ch) * oh + y) * ow + xw] =
+                                    self.read_elem(base + 2 * idx as u64, 2)?;
+                                idx += 1;
+                            }
+                        }
+                    }
+                }
+                Ok(SymPart {
+                    grid: SymGrid { shape: shape.clone(), terms },
+                    meta: ReadMeta::Hlscnn { bits: fmt.bits, frac: fmt.frac_bits },
+                })
+            }
+            ReadPlan::VtaI32 { base, shape, scale } => {
+                let count: usize = shape.iter().product();
+                let terms: Vec<Rc<BvTerm>> = (0..count)
+                    .map(|i| self.read_elem(base + 4 * i as u64, 4))
+                    .collect::<Result<_, _>>()?;
+                Ok(SymPart {
+                    grid: SymGrid { shape: shape.clone(), terms },
+                    meta: ReadMeta::Vta { scale: *scale },
+                })
+            }
+        }
+    }
+}
+
+/// Concatenate per-invocation parts along `axis` into `shape`,
+/// mirroring the concrete stitcher. All parts must share decode
+/// metadata — tiles decoded under different biases/scales are a
+/// lowering bug surfaced here as an error.
+fn concat_parts(parts: Vec<SymPart>, axis: usize, shape: &[usize]) -> Result<SymPart, String> {
+    let first_meta = parts
+        .first()
+        .map(|p| p.meta.clone())
+        .ok_or_else(|| "stitch of an empty part list".to_string())?;
+    for p in &parts {
+        if p.meta != first_meta {
+            return Err(format!(
+                "tiles disagree on decode metadata: {:?} vs {:?}",
+                p.meta, first_meta
+            ));
+        }
+        if p.grid.shape.len() != shape.len() {
+            return Err("tile rank mismatch in stitch".to_string());
+        }
+        for (d, (&pd, &sd)) in p.grid.shape.iter().zip(shape.iter()).enumerate() {
+            if d != axis && pd != sd {
+                return Err(format!("tile dim {d} mismatch: {pd} vs {sd}"));
+            }
+        }
+    }
+    let axis_total: usize = parts.iter().map(|p| p.grid.shape[axis]).sum();
+    if axis_total != shape[axis] {
+        return Err(format!(
+            "stitched axis {axis} covers {axis_total} of {} elements",
+            shape[axis]
+        ));
+    }
+    let outer: usize = shape[..axis].iter().product();
+    let inner: usize = shape[axis + 1..].iter().product();
+    let mut terms = vec![BvTerm::cnst(0); outer * shape[axis] * inner];
+    let mut off = 0usize;
+    for p in parts {
+        let pa = p.grid.shape[axis];
+        for oi in 0..outer {
+            for a in 0..pa {
+                for ii in 0..inner {
+                    terms[(oi * shape[axis] + off + a) * inner + ii] =
+                        p.grid.terms[(oi * pa + a) * inner + ii].clone();
+                }
+            }
+        }
+        off += pa;
+    }
+    Ok(SymPart {
+        grid: SymGrid { shape: shape.to_vec(), terms },
+        meta: first_meta,
+    })
+}
+
+/// Symbolically execute a lowered program against the shadow device:
+/// replay every burst in order, dispatch triggers through `model`'s
+/// symbolic semantics, capture each invocation's read-back *in program
+/// order* (a later tile may overwrite the block an earlier tile was
+/// read from — exactly as the concrete executor interleaves), and
+/// stitch the parts. Returns the final symbolic result grid + decode
+/// metadata, or a structural error when the program strays outside the
+/// validated fragment.
+pub fn sym_execute_program(
+    prog: &LoweredProgram,
+    model: &DeviceModel,
+    markers: &MarkerMap,
+    uf: &mut UfTable,
+) -> Result<SymPart, String> {
+    if prog.target() != model.target() {
+        return Err(format!(
+            "program targets {:?} but the shadow device models {:?}",
+            prog.target(),
+            model.target()
+        ));
+    }
+    let mut shadow = Shadow::new(model.target(), markers);
+    let mut parts = Vec::new();
+    for inv in &prog.invocations {
+        for burst in &inv.bursts {
+            for cmd in burst.cmds.iter() {
+                shadow.apply(model, cmd, uf)?;
+            }
+        }
+        if let Some(plan) = &inv.read {
+            parts.push(shadow.sym_read(plan)?);
+        }
+    }
+    match &prog.stitch {
+        Stitch::Last => parts.pop().ok_or_else(|| "no read-back invocation".to_string()),
+        Stitch::Concat { axis, shape } => concat_parts(parts, *axis, shape),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Marker tensor builders
+// ---------------------------------------------------------------------
+
+/// Build a row-major grid of symbolic input variables `{prefix}{i}`.
+pub fn svar_grid(prefix: &str, count: usize, bits: u32) -> Vec<Rc<BvTerm>> {
+    (0..count)
+        .map(|i| BvTerm::svar(format!("{prefix}{i}"), bits))
+        .collect()
+}
+
+/// AdaptivFloat-8 marker allocator: hands out concrete byte codes that
+/// (a) are globally distinct within one obligation, (b) decode to
+/// finite nonzero values at bias 0, (c) re-encode to themselves, and
+/// (d) keep each tensor's first element in the format's top binade so
+/// `select_bias` provably picks bias 0 for every marker tensor.
+pub struct Af8MarkerPool {
+    fmt: AdaptivFloatFormat,
+    anchors: Vec<u8>,
+    smalls: Vec<u8>,
+    next_anchor: usize,
+    next_small: usize,
+}
+
+impl Af8MarkerPool {
+    /// Enumerate the usable code pool for `fmt`.
+    pub fn new(fmt: AdaptivFloatFormat) -> Self {
+        let e_max = ((1i32 << fmt.exp_bits) - 1) as f32;
+        let binade_lo = e_max.exp2();
+        let binade_hi = binade_lo * 2.0;
+        let mut anchors = Vec::new();
+        let mut smalls = Vec::new();
+        for code in 0u16..=255 {
+            let code = code as u8;
+            if code == 0x80 || code == 0x81 {
+                continue; // canonical zero and its nudge target
+            }
+            let v = fx::decode_byte(&fmt, code, 0);
+            if !v.is_finite() || v == 0.0 {
+                continue;
+            }
+            if fx::encode_byte(&fmt, v, 0) != code {
+                continue; // non-canonical encoding
+            }
+            let mag = v.abs();
+            if mag >= binade_lo && mag < binade_hi {
+                anchors.push(code);
+            } else if mag < binade_lo {
+                smalls.push(code);
+            }
+        }
+        // deterministic hand-out order: anchors and smalls by ascending
+        // magnitude (codes are already enumerated in byte order; sort by
+        // decoded magnitude so ties in layout never matter)
+        let sort_key = |fmt: &AdaptivFloatFormat, c: u8| fx::decode_byte(fmt, c, 0).abs();
+        anchors.sort_by(|a, b| sort_key(&fmt, *a).total_cmp(&sort_key(&fmt, *b)));
+        smalls.sort_by(|a, b| sort_key(&fmt, *a).total_cmp(&sort_key(&fmt, *b)));
+        Af8MarkerPool { fmt, anchors, smalls, next_anchor: 0, next_small: 0 }
+    }
+
+    /// Build one marker tensor: element 0 gets a fresh top-binade
+    /// anchor, the rest fresh sub-binade codes. Registers every code in
+    /// `markers` as an 8-bit symbolic variable `{prefix}{i}` and
+    /// asserts that the canonical tensor encode reproduces exactly the
+    /// planned codes at bias 0.
+    pub fn tensor(
+        &mut self,
+        shape: &[usize],
+        prefix: &str,
+        markers: &mut MarkerMap,
+    ) -> Result<Tensor, String> {
+        let count: usize = shape.iter().product();
+        if count == 0 {
+            return Err("marker tensor must be non-empty".to_string());
+        }
+        let mut codes = Vec::with_capacity(count);
+        codes.push(
+            *self
+                .anchors
+                .get(self.next_anchor)
+                .ok_or_else(|| "AF8 marker pool out of anchor codes".to_string())?,
+        );
+        self.next_anchor += 1;
+        for _ in 1..count {
+            codes.push(
+                *self
+                    .smalls
+                    .get(self.next_small)
+                    .ok_or_else(|| "AF8 marker pool out of small codes".to_string())?,
+            );
+            self.next_small += 1;
+        }
+        let vals: Vec<f32> = codes.iter().map(|&c| fx::decode_byte(&self.fmt, c, 0)).collect();
+        let t = Tensor::new(shape.to_vec(), vals);
+        let (enc, bias) = fx::encode_tensor(&self.fmt, &t);
+        if bias != 0 {
+            return Err(format!("marker tensor {prefix} selected bias {bias}, expected 0"));
+        }
+        if enc != codes {
+            return Err(format!("marker tensor {prefix} does not round-trip its codes"));
+        }
+        for (i, &c) in codes.iter().enumerate() {
+            let prev = markers.insert((1, c as u64), BvTerm::svar(format!("{prefix}{i}"), 8));
+            if prev.is_some() {
+                return Err(format!("marker code collision on {c:#04x} ({prefix}{i})"));
+            }
+        }
+        Ok(t)
+    }
+}
+
+/// HLSCNN activation markers: NCHW element `i` carries fixed-point code
+/// `i + 1` (value `(i+1) · 2^-frac`), registered as a 2-byte marker
+/// bound to the 6-bit symbolic variable `a{i}`.
+pub fn hlscnn_act_markers(
+    fmt: FixedPointFormat,
+    shape: &[usize],
+    markers: &mut MarkerMap,
+) -> Result<Tensor, String> {
+    let count: usize = shape.iter().product();
+    let mut vals = Vec::with_capacity(count);
+    for i in 0..count {
+        let code = (i + 1) as i64;
+        let v = fmt.decode(code);
+        if fmt.encode(v) != code {
+            return Err(format!("activation marker code {code} does not round-trip"));
+        }
+        let prev = markers.insert(
+            (2, code as u16 as u64),
+            BvTerm::svar(format!("a{i}"), 6),
+        );
+        if prev.is_some() {
+            return Err(format!("activation marker code collision on {code}"));
+        }
+        vals.push(v);
+    }
+    Ok(Tensor::new(shape.to_vec(), vals))
+}
+
+/// HLSCNN weight markers: OIHW element `i` carries **wire** (Q16.12)
+/// code `code_offset + i`, registered as a 2-byte marker bound to the
+/// 12-bit symbolic variable `w{i}`. `code_offset` must clear the
+/// activation code range so the two marker families never collide.
+pub fn hlscnn_wgt_markers(
+    shape: &[usize],
+    code_offset: usize,
+    markers: &mut MarkerMap,
+) -> Result<Tensor, String> {
+    let wire = hx::wire_wgt_fmt();
+    let count: usize = shape.iter().product();
+    let mut vals = Vec::with_capacity(count);
+    for i in 0..count {
+        let code = (code_offset + i) as i64;
+        let v = wire.decode(code);
+        if wire.encode(v) != code {
+            return Err(format!("weight marker wire code {code} does not round-trip"));
+        }
+        let prev = markers.insert(
+            (2, code as u16 as u64),
+            BvTerm::svar(format!("w{i}"), 12),
+        );
+        if prev.is_some() {
+            return Err(format!("weight marker code collision on {code}"));
+        }
+        vals.push(v);
+    }
+    Ok(Tensor::new(shape.to_vec(), vals))
+}
+
+/// VTA int8 marker operands for a length-`len` add: `a[i] = i + 1`,
+/// `b[i] = -(i + 1)`, each registered as a 4-byte int32 marker bound to
+/// a 7-bit symbolic variable (`a{i}` / `b{i}`). Returns the operand
+/// tensors plus the shared power-of-two scale the driver will select.
+pub fn vta_add_markers(
+    len: usize,
+    markers: &mut MarkerMap,
+) -> Result<(Tensor, Tensor, f32), String> {
+    use crate::numerics::int8::Int8Format;
+    if len == 0 || len > 127 {
+        return Err("vta marker length must be in 1..=127".to_string());
+    }
+    let int8 = Int8Format::new();
+    let a_vals: Vec<f32> = (0..len).map(|i| (i + 1) as f32).collect();
+    let b_vals: Vec<f32> = (0..len).map(|i| -((i + 1) as f32)).collect();
+    let scale = int8.select_scale(len as f32);
+    for (i, &v) in a_vals.iter().enumerate() {
+        let code = int8.encode(v, scale) as i32;
+        let prev = markers.insert(
+            (4, code as u32 as u64),
+            BvTerm::svar(format!("a{i}"), 7),
+        );
+        if prev.is_some() {
+            return Err(format!("VTA marker code collision on a[{i}] = {code}"));
+        }
+    }
+    for (i, &v) in b_vals.iter().enumerate() {
+        let code = int8.encode(v, scale) as i32;
+        let prev = markers.insert(
+            (4, code as u32 as u64),
+            BvTerm::svar(format!("b{i}"), 7),
+        );
+        if prev.is_some() {
+            return Err(format!("VTA marker code collision on b[{i}] = {code}"));
+        }
+    }
+    Ok((
+        Tensor::new(vec![len], a_vals),
+        Tensor::new(vec![len], b_vals),
+        scale,
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Reference grids (op semantics over the same symbolic inputs)
+// ---------------------------------------------------------------------
+
+/// Reference semantics for the FlexASR linear layer over marker terms:
+/// every output element is the shared linear UF applied to the full
+/// operand rows under the expected bias schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn ref_linear(
+    uf: &mut UfTable,
+    x: &[Rc<BvTerm>],
+    w: &[Rc<BvTerm>],
+    b: &[Rc<BvTerm>],
+    (n, k, m): (usize, usize, usize),
+    (xb, wb, bb): (i32, i32, i32),
+    out_bias: i32,
+) -> SymGrid {
+    let mut terms = Vec::with_capacity(n * m);
+    for i in 0..n {
+        let x_row = &x[i * k..(i + 1) * k];
+        for j in 0..m {
+            let w_row = &w[j * k..(j + 1) * k];
+            terms.push(uf_linear_elem(
+                uf, k, xb, wb, bb, 0, out_bias, x_row, w_row, &b[j],
+            ));
+        }
+    }
+    SymGrid { shape: vec![n, m], terms }
+}
+
+/// The per-step bias schedule the reference LSTM threads through its
+/// UF applications — the validator recomputes it independently via
+/// `FlexAsr::lstm_traced` and the lowering must agree.
+#[derive(Debug, Clone)]
+pub struct RefLstmSchedule {
+    /// Wide (gate) bias per step.
+    pub wide: Vec<i32>,
+    /// Hidden-state bias per step.
+    pub h: Vec<i32>,
+    /// Cell-state bias per step.
+    pub c: Vec<i32>,
+    /// Forced output-port bias (whole sequence).
+    pub out: i32,
+}
+
+/// Reference semantics for the FlexASR LSTM over marker terms: per
+/// step, gate UFs over `x_t`, the previous hidden-code terms, and the
+/// full weight rows; then per-element activation UFs producing the next
+/// hidden/cell code terms and the output codes. Initial hidden/cell
+/// codes are the canonical zero byte `0x80`, exactly as the driver
+/// stages them.
+#[allow(clippy::too_many_arguments)]
+pub fn ref_lstm(
+    uf: &mut UfTable,
+    x: &[Rc<BvTerm>],
+    wi: &[Rc<BvTerm>],
+    wh: &[Rc<BvTerm>],
+    b: &[Rc<BvTerm>],
+    (t, e, h): (usize, usize, usize),
+    (xb, wib, bb, whb): (i32, i32, i32, i32),
+    sched: &RefLstmSchedule,
+) -> SymGrid {
+    let four_h = 4 * h;
+    let mut h_prev: Vec<Rc<BvTerm>> = (0..h).map(|_| BvTerm::cnst(0x80)).collect();
+    let mut c_prev: Vec<Rc<BvTerm>> = (0..h).map(|_| BvTerm::cnst(0x80)).collect();
+    let mut out = Vec::with_capacity(t * h);
+    for step in 0..t {
+        let h_bias_in = if step == 0 { 0 } else { sched.h[step - 1] };
+        let c_bias_in = if step == 0 { 0 } else { sched.c[step - 1] };
+        let x_row = &x[step * e..(step + 1) * e];
+        let gates: Vec<Rc<BvTerm>> = (0..four_h)
+            .map(|j| {
+                uf_lstm_gate_elem(
+                    uf,
+                    e,
+                    h,
+                    xb,
+                    wib,
+                    bb,
+                    whb,
+                    h_bias_in,
+                    sched.wide[step],
+                    x_row,
+                    &h_prev,
+                    &wi[j * e..(j + 1) * e],
+                    &wh[j * h..(j + 1) * h],
+                    &b[j],
+                )
+            })
+            .collect();
+        let mut h_next = Vec::with_capacity(h);
+        let mut c_next = Vec::with_capacity(h);
+        for j in 0..h {
+            let (gi, gf, gg, go) =
+                (&gates[j], &gates[h + j], &gates[2 * h + j], &gates[3 * h + j]);
+            h_next.push(uf_lstm_act_elem(
+                uf,
+                "h",
+                &[c_bias_in, sched.h[step]],
+                gi,
+                gf,
+                gg,
+                go,
+                &c_prev[j],
+            ));
+            out.push(uf_lstm_act_elem(
+                uf,
+                "out",
+                &[c_bias_in, sched.h[step], sched.out],
+                gi,
+                gf,
+                gg,
+                go,
+                &c_prev[j],
+            ));
+            c_next.push(uf_lstm_act_elem(
+                uf,
+                "c",
+                &[c_bias_in, sched.c[step]],
+                gi,
+                gf,
+                gg,
+                go,
+                &c_prev[j],
+            ));
+        }
+        h_prev = h_next;
+        c_prev = c_next;
+    }
+    SymGrid { shape: vec![t, 1, h], terms: out }
+}
+
+/// Reference semantics for HLSCNN conv2d over marker terms: activation
+/// variables in NCHW order (`a{i}`), **wire** weight variables in OIHW
+/// order (`w{i}`), software round-to-nearest weight quantization
+/// ([`sym_wire_to_store_sw`]), then the shared integer convolution
+/// kernel — finally permuted NHWC → NCHW as the host decode does.
+pub fn ref_conv2d(
+    acts_nchw: &[Rc<BvTerm>],
+    wgts_oihw: &[Rc<BvTerm>],
+    (c, h, w): (usize, usize, usize),
+    o: usize,
+    (kh, kw): (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    cfg: HlscnnConfig,
+) -> SymGrid {
+    // NCHW markers → the device's NHWC activation order
+    let mut acts_nhwc = Vec::with_capacity(h * w * c);
+    for y in 0..h {
+        for xw in 0..w {
+            for ch in 0..c {
+                acts_nhwc.push(acts_nchw[(ch * h + y) * w + xw].clone());
+            }
+        }
+    }
+    // OIHW wire markers → O-major HWC store codes via the software cast
+    let mut store = Vec::with_capacity(o * kh * kw * c);
+    for oc in 0..o {
+        for dy in 0..kh {
+            for dx in 0..kw {
+                for ch in 0..c {
+                    let wire = &wgts_oihw[((oc * c + ch) * kh + dy) * kw + dx];
+                    store.push(sym_wire_to_store_sw(cfg.weight_fmt, wire));
+                }
+            }
+        }
+    }
+    let codes = sym_conv2d_codes(
+        &acts_nhwc,
+        &store,
+        (c, h, w),
+        o,
+        (kh, kw),
+        stride,
+        pad,
+        cfg.act_fmt,
+        cfg.weight_fmt,
+    );
+    let oh = (h + 2 * pad.0 - kh) / stride.0 + 1;
+    let ow = (w + 2 * pad.1 - kw) / stride.1 + 1;
+    let mut terms = vec![BvTerm::cnst(0); o * oh * ow];
+    for y in 0..oh {
+        for xw in 0..ow {
+            for ch in 0..o {
+                terms[(ch * oh + y) * ow + xw] = codes[(y * ow + xw) * o + ch].clone();
+            }
+        }
+    }
+    SymGrid { shape: vec![1, o, oh, ow], terms }
+}
+
+/// Reference semantics for the chunked VTA add over marker terms.
+pub fn ref_vta_add(a: &[Rc<BvTerm>], b: &[Rc<BvTerm>], shape: &[usize]) -> SymGrid {
+    let terms = a.iter().zip(b.iter()).map(|(x, y)| sym_vta_add(x, y)).collect();
+    SymGrid { shape: shape.to_vec(), terms }
+}

@@ -1,27 +1,13 @@
 //! The FlexASR MaxPool mapping verification (Table 3).
 
-use crate::smt::bv::{BitBlaster, BvTerm, EquivResult};
+use super::obligations::{discharge_pairs, VerifyOutcome};
+use crate::smt::bv::{BvTerm, EquivResult};
 use std::collections::HashMap;
 use std::rc::Rc;
 use std::time::{Duration, Instant};
 
 /// FlexASR global-buffer bank count (the tiling width).
 pub const BANKS: usize = 16;
-
-/// Verification outcome with timing and query statistics.
-#[derive(Debug, Clone)]
-pub struct VerifyOutcome {
-    /// Equivalence verdict.
-    pub result: EquivResult,
-    /// Wall-clock time the check took.
-    pub elapsed: Duration,
-    /// number of SAT queries discharged (1 for BMC; tiles for CHC)
-    pub queries: usize,
-    /// total SAT conflicts across queries (proof effort)
-    pub conflicts: u64,
-    /// total CNF variables created
-    pub vars: usize,
-}
 
 /// Symbolic input element `x[i][j]`.
 fn xin(i: usize, j: usize) -> Rc<BvTerm> {
@@ -97,21 +83,16 @@ fn pairs_for_columns(
     pairs
 }
 
-/// Bounded model checking: unroll everything, one monolithic miter.
+/// Bounded model checking: unroll everything, one monolithic miter,
+/// discharged through the shared obligation runner.
 pub fn verify_bmc(r: usize, c: usize, timeout: Duration) -> VerifyOutcome {
     let start = Instant::now();
     let spec = spec_grid(r, c);
     let impl_ = flexasr_grid(r, c);
     let pairs = pairs_for_columns(&spec, &impl_, 0..c);
-    let mut bb = BitBlaster::new(8);
-    let result = bb.prove_all_equal(&pairs, timeout);
-    VerifyOutcome {
-        result,
-        elapsed: start.elapsed(),
-        queries: 1,
-        conflicts: bb.solver.stats_conflicts,
-        vars: bb.solver.num_vars(),
-    }
+    let mut out = discharge_pairs(8, &pairs, timeout);
+    out.elapsed = start.elapsed(); // include grid construction
+    out
 }
 
 /// CHC-style verification with the supplied relational invariant: the
@@ -139,14 +120,13 @@ pub fn verify_chc(r: usize, c: usize, timeout: Duration) -> VerifyOutcome {
         let lo = t * BANKS;
         let hi = ((t + 1) * BANKS).min(c);
         let pairs = pairs_for_columns(&spec, &impl_, lo..hi);
-        let mut bb = BitBlaster::new(8);
         let remaining = timeout.saturating_sub(start.elapsed());
-        let res = bb.prove_all_equal(&pairs, remaining);
-        conflicts += bb.solver.stats_conflicts;
-        vars += bb.solver.num_vars();
-        if res != EquivResult::Equivalent {
+        let step = discharge_pairs(8, &pairs, remaining);
+        conflicts += step.conflicts;
+        vars += step.vars;
+        if step.result != EquivResult::Equivalent {
             return VerifyOutcome {
-                result: res,
+                result: step.result,
                 elapsed: start.elapsed(),
                 queries: t + 1,
                 conflicts,
@@ -166,6 +146,7 @@ pub fn verify_chc(r: usize, c: usize, timeout: Duration) -> VerifyOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::smt::bv::BitBlaster;
     use crate::util::Rng;
 
     const T: Duration = Duration::from_secs(60);
@@ -185,7 +166,7 @@ mod tests {
         }
         for i in 0..r / 2 {
             for j in 0..c {
-                assert_eq!(spec[i][j].eval(&env), impl_[i][j].eval(&env));
+                assert_eq!(spec[i][j].eval(&env, 8), impl_[i][j].eval(&env, 8));
             }
         }
     }

@@ -23,7 +23,23 @@
 //!   step is a small miter; the number of steps is linear in the tile
 //!   count. (The paper likewise supplies the relational invariants by
 //!   hand and leaves inference to future work.)
+//!
+//! Beyond the Table 3 case study, [`lowering`] + [`obligations`] apply
+//! the same machinery to the repo's own compiler: a symbolic executor
+//! walks every tiled [`crate::codegen::LoweredProgram`] over
+//! [`crate::smt::BvTerm`]s and an obligation generator enumerates
+//! bounded shapes covering every tiling edge for both design revisions
+//! — **translation validation** of the codegen layer, which rediscovers
+//! the Original-rev HLSCNN `wire_to_store` truncation as a concrete
+//! counterexample.
 
+pub mod lowering;
 pub mod maxpool;
+pub mod obligations;
 
-pub use maxpool::{verify_bmc, verify_chc, VerifyOutcome};
+pub use maxpool::{verify_bmc, verify_chc};
+pub use obligations::{
+    all_obligations, all_obligations_both_revs, check, conv_witness_tensors, discharge_pairs,
+    expected_label, LoweringCex, ObKind, Obligation, ObligationReport, ObligationStatus,
+    VerifyOutcome,
+};
