@@ -9,12 +9,19 @@
 //! 3. re-run with the *updated* designs (16-bit weight store) — accuracy
 //!    recovers, without ever deploying to an FPGA.
 //!
+//! The per-revision objective is **accuracy at modeled latency**: the
+//! MMIO backend feeds the cost-model timeline as it executes, so each
+//! sweep reports modeled device cycles (transfer/compute/overhead)
+//! alongside accuracy — the codesign trade-off in device terms, not
+//! host proxy counts.
+//!
 //! Requires `make artifacts`. Run with:
 //! `cargo run --release --example codesign_loop`
 
+use d2a::cost::CycleBreakdown;
 use d2a::ir::Target;
 use d2a::runtime::ArtifactStore;
-use d2a::session::{Bindings, DesignRev, SessionBuilder};
+use d2a::session::{Bindings, DesignRev, ExecBackend, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let store = ArtifactStore::open(None)?;
@@ -35,23 +42,30 @@ fn main() -> anyhow::Result<()> {
     );
 
     for rev in [DesignRev::Original, DesignRev::Updated] {
-        // per-invocation error tracking is an opt-in of the session
+        // per-invocation error tracking is an opt-in of the session; the
+        // MMIO backend makes the timeline record real device work
         let session = SessionBuilder::new()
             .targets(&[Target::FlexAsr, Target::Hlscnn])
             .design_rev(rev)
+            .backend(ExecBackend::IlaMmio)
             .track_errors(true)
             .build();
         let program = session.attach(compiled.expr().clone());
+        // one engine for the whole sweep: operand residency carries the
+        // (constant) weights across images, as a deployment would
+        let mut engine = program.engine();
         let mut bindings = Bindings::from_env(weights.clone());
         let mut correct = 0usize;
         let mut errors: Vec<f32> = Vec::new();
+        let mut cycles = CycleBreakdown::default();
         for (img, &label) in images[..n].iter().zip(&labels[..n]) {
             bindings.set("x", img.clone());
-            let trace = program.run_traced(&bindings)?;
+            let trace = program.run_traced_with(&mut engine, &bindings)?;
             if trace.output.argmax() == label {
                 correct += 1;
             }
             errors.extend(trace.inv_errors);
+            cycles += trace.cycles;
         }
         let stats = d2a::cosim::stats::ErrorStats::from_samples(&errors);
         println!(
@@ -59,6 +73,15 @@ fn main() -> anyhow::Result<()> {
             100.0 * correct as f32 / n as f32,
             stats.mean * 100.0,
             stats.std_dev * 100.0,
+        );
+        println!(
+            "  modeled latency: {} cycles/image ({} total: {} transfer / \
+             {} compute / {} overhead)",
+            cycles.total() / n as u64,
+            cycles.total(),
+            cycles.transfer,
+            cycles.compute,
+            cycles.overhead,
         );
         if rev == DesignRev::Original {
             println!(

@@ -21,6 +21,7 @@
 //! defaults to `BENCH_serving.json`; override with
 //! `D2A_BENCH_OUT_SERVING`.
 
+use d2a::cost::CycleBreakdown;
 use d2a::ir::{GraphBuilder, Op, Target};
 use d2a::session::{Bindings, DesignRev, ExecBackend, SchedPolicy, Session};
 use d2a::tensor::Tensor;
@@ -94,6 +95,9 @@ struct ServingReport {
     hit_rate: f64,
     bytes_streamed: u64,
     mean_interarrival: Duration,
+    /// Modeled device cycles summed over the worker engines — the
+    /// host-speed-independent cost of serving the whole request stream.
+    cycles: CycleBreakdown,
     stats: d2a::session::PoolStats,
 }
 
@@ -139,7 +143,7 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
 
     let next = AtomicUsize::new(0);
     let clock = Instant::now();
-    let (mut latencies, dedup, streamed, bytes) = std::thread::scope(|scope| {
+    let (mut latencies, dedup, streamed, bytes, cycles) = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..WORKERS)
             .map(|_| {
                 scope.spawn(|| {
@@ -161,20 +165,23 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
                     let dedup = engine.bursts_deduped();
                     let streamed = engine.staged_streamed();
                     let bytes = engine.bytes_streamed();
-                    (mine, dedup, streamed, bytes)
+                    let cycles = engine.modeled_cycles();
+                    (mine, dedup, streamed, bytes, cycles)
                 })
             })
             .collect();
         let mut lat = Vec::with_capacity(load.requests);
         let (mut dedup, mut streamed, mut bytes) = (0u64, 0u64, 0u64);
+        let mut cycles = CycleBreakdown::default();
         for h in handles {
-            let (mine, d, s, b) = h.join().expect("serving worker panicked");
+            let (mine, d, s, b, c) = h.join().expect("serving worker panicked");
             lat.extend(mine);
             dedup += d;
             streamed += s;
             bytes += b;
+            cycles += c;
         }
-        (lat, dedup, streamed, bytes)
+        (lat, dedup, streamed, bytes, cycles)
     });
     let wall = clock.elapsed();
     latencies.sort();
@@ -190,13 +197,15 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
         hit_rate: dedup as f64 / (dedup + streamed).max(1) as f64,
         bytes_streamed: bytes,
         mean_interarrival: mean,
+        cycles,
         stats,
     }
 }
 
 /// Deterministic coda: sequential repeated-weights pattern on a
-/// 2-device pool. Returns total `bytes_streamed` under the policy.
-fn repeated_weights_bytes(load: &Load, policy: SchedPolicy) -> u64 {
+/// 2-device pool. Returns total `bytes_streamed` and modeled device
+/// cycles under the policy — affinity must win on both axes.
+fn repeated_weights(load: &Load, policy: SchedPolicy) -> (u64, CycleBreakdown) {
     let pattern = [0usize, 1, 1, 0, 0, 1, 1, 0];
     let session = lstm_session(policy);
     let program = session.attach(lstm_expr(load.t));
@@ -207,7 +216,7 @@ fn repeated_weights_bytes(load: &Load, policy: SchedPolicy) -> u64 {
         let b = bindings_for(load, &sets[set], &mut rng);
         let _ = program.run_with(&mut engine, &b).unwrap();
     }
-    engine.bytes_streamed()
+    (engine.bytes_streamed(), engine.modeled_cycles())
 }
 
 fn report_json(r: &ServingReport, load: &Load) -> String {
@@ -218,7 +227,10 @@ fn report_json(r: &ServingReport, load: &Load) -> String {
          \"mean_interarrival_ms\": {:.3}, \"wall_ms\": {:.1}, \
          \"throughput_rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
          \"occupancy\": {:.3}, \"residency_hit_rate\": {:.3}, \
-         \"bytes_streamed\": {}, \"devices_built\": {}, \"queued\": {}, \
+         \"bytes_streamed\": {}, \"transfer_cycles\": {}, \
+         \"compute_cycles\": {}, \"overhead_cycles\": {}, \
+         \"total_cycles\": {}, \"pool_busy_cycles\": {}, \
+         \"pool_wait_cycles\": {}, \"devices_built\": {}, \"queued\": {}, \
          \"affinity_grants\": {}, \"fifo_grants\": {}, \
          \"build_grants\": {}, \"starvation_promotions\": {}}}",
         r.policy,
@@ -237,6 +249,12 @@ fn report_json(r: &ServingReport, load: &Load) -> String {
         r.occupancy,
         r.hit_rate,
         r.bytes_streamed,
+        r.cycles.transfer,
+        r.cycles.compute,
+        r.cycles.overhead,
+        r.cycles.total(),
+        r.stats.busy_cycles,
+        r.stats.wait_cycles,
         r.stats.devices_built,
         r.stats.queued,
         r.stats.affinity_grants,
@@ -273,6 +291,16 @@ fn main() -> std::io::Result<()> {
             r.hit_rate * 1e2,
             r.bytes_streamed,
         );
+        println!(
+            "          modeled {} device cycles ({} transfer / {} compute \
+             / {} overhead); pool busy {} cy, queue exposure {} cy",
+            r.cycles.total(),
+            r.cycles.transfer,
+            r.cycles.compute,
+            r.cycles.overhead,
+            r.stats.busy_cycles,
+            r.stats.wait_cycles,
+        );
         assert!(r.throughput > 0.0);
         assert!(r.p50 <= r.p99);
         assert!((0.0..=1.0).contains(&r.hit_rate));
@@ -283,21 +311,40 @@ fn main() -> std::io::Result<()> {
         records.push(report_json(&r, &load));
     }
 
-    // the strict, load-independent acceptance check
-    let aff = repeated_weights_bytes(&load, SchedPolicy::Affinity);
-    let fifo = repeated_weights_bytes(&load, SchedPolicy::Fifo);
+    // the strict, load-independent acceptance check: affinity routing
+    // must beat FIFO in streamed bytes AND in modeled device cycles
+    let (aff, aff_cycles) = repeated_weights(&load, SchedPolicy::Affinity);
+    let (fifo, fifo_cycles) = repeated_weights(&load, SchedPolicy::Fifo);
     println!(
         "repeated-weights (A,B,B,A,A,B,B,A): affinity streams {aff} B, \
          fifo {fifo} B ({:.2}x less)",
         fifo as f64 / aff.max(1) as f64
     );
+    println!(
+        "modeled device cycles: affinity {} vs fifo {} \
+         ({} cycles saved, all in transfer: {} vs {})",
+        aff_cycles.total(),
+        fifo_cycles.total(),
+        fifo_cycles.total().saturating_sub(aff_cycles.total()),
+        aff_cycles.transfer,
+        fifo_cycles.transfer,
+    );
     assert!(
         aff < fifo,
         "affinity must stream strictly fewer bytes than FIFO: {aff} vs {fifo}"
     );
+    assert!(
+        aff_cycles.total() < fifo_cycles.total(),
+        "affinity must cost strictly fewer modeled cycles than FIFO: {} vs {}",
+        aff_cycles.total(),
+        fifo_cycles.total()
+    );
     records.push(format!(
         "  {{\"section\": \"repeated-weights\", \"pattern\": \"ABBAABBA\", \
-         \"affinity_bytes\": {aff}, \"fifo_bytes\": {fifo}}}"
+         \"affinity_bytes\": {aff}, \"fifo_bytes\": {fifo}, \
+         \"affinity_cycles\": {}, \"fifo_cycles\": {}}}",
+        aff_cycles.total(),
+        fifo_cycles.total()
     ));
 
     let out = std::env::var("D2A_BENCH_OUT_SERVING")

@@ -2,57 +2,90 @@
 //! offloading a (4,4)/(2,2) 2-D max pool of a 128x128 matrix onto
 //! FlexASR's fixed (2,1)/(2,1) temporal max pool.
 //!
+//! The fused program compiles through the Session API
+//! (`SessionBuilder::extended_rules` carries the §5.1 store/load
+//! cancellation); the naive baseline needs a rule-set surgery the
+//! session deliberately does not expose — dropping only
+//! `fasr-store-load-cancel` — so it keeps the manual e-graph drive.
+//!
 //! Reports (a) the rewritten program shapes with and without the
-//! store/load-cancellation rule and (b) the MMIO data beats of the naive
-//! vs fused lowering.
+//! cancellation rule, (b) the MMIO data beats/bytes of the naive vs
+//! fused lowering, and (c) **modeled device cycles** under the FlexASR
+//! cost model — the quantified Fig-7 claim: the fused lowering must be
+//! strictly cheaper. Emits `BENCH_fig7.json` (override the path with
+//! `D2A_BENCH_OUT_FIG7`).
 
 use d2a::accel::FlexAsr;
 use d2a::codegen::optimize::{pool_chains, transfer_stats};
+use d2a::cost::{self, CostModel, CycleBreakdown, OpFamily};
 use d2a::egraph::{AccelCost, EGraph, Extractor, Runner, RunnerLimits};
 use d2a::ir::{parse::to_sexpr, Op, RecExpr, Target};
-use d2a::rewrites::{compiler_ir, rules_for_extended, Matching};
+use d2a::rewrites::{rules_for_extended, Matching};
+use d2a::session::Session;
 use d2a::tensor::Tensor;
 use d2a::util::Rng;
 use std::collections::HashMap;
 
-fn compile_maxpool(with_cancellation: bool) -> RecExpr {
+fn maxpool_expr() -> (RecExpr, HashMap<String, Vec<usize>>) {
     let mut e = RecExpr::new();
     let t = e.add(Op::Var("t".into()), vec![]);
     e.add(Op::MatMaxPool { window: (4, 4), stride: (2, 2) }, vec![t]);
-    let env: HashMap<String, Vec<usize>> =
+    let shapes: HashMap<String, Vec<usize>> =
         [("t".to_string(), vec![128usize, 128])].into_iter().collect();
-    let mut eg = EGraph::new(env);
+    (e, shapes)
+}
+
+/// The naive baseline: saturate with the extended rule set **minus** the
+/// store/load-cancellation rule, so every pool stage round-trips through
+/// host memory.
+fn compile_naive() -> RecExpr {
+    let (e, shapes) = maxpool_expr();
+    let mut eg = EGraph::new(shapes);
     let root = eg.add_expr(&e);
     let mut rules = rules_for_extended(&[Target::FlexAsr], Matching::Flexible);
-    if !with_cancellation {
-        rules.retain(|r| r.name != "fasr-store-load-cancel");
-        let _ = compiler_ir::data_movement_rules();
-    }
+    rules.retain(|r| r.name != "fasr-store-load-cancel");
     Runner::new(RunnerLimits::default()).run(&mut eg, &rules);
     Extractor::new(&eg, AccelCost::for_target(Target::FlexAsr)).extract(root)
 }
 
-fn main() {
+fn main() -> std::io::Result<()> {
     println!("=== Fig. 7 / §5.1: data-transfer optimization ===");
-    let naive = compile_maxpool(false);
-    let fused = compile_maxpool(true);
+    let naive = compile_naive();
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .extended_rules(true)
+        .build();
+    let (expr, shapes) = maxpool_expr();
+    let fused = session.compile_expr(&expr, &shapes);
     let sn = transfer_stats(&naive);
-    let sf = transfer_stats(&fused);
+    let sf = transfer_stats(fused.expr());
     println!("without store/load cancellation: {sn:?}, chains {:?}", pool_chains(&naive));
-    println!("   with store/load cancellation: {sf:?}, chains {:?}", pool_chains(&fused));
+    println!(
+        "   with store/load cancellation: {sf:?}, chains {:?}",
+        pool_chains(fused.expr())
+    );
     println!("naive program:     {}", to_sexpr(&naive));
-    println!("optimized program: {}", to_sexpr(&fused));
+    println!("optimized program: {}", to_sexpr(fused.expr()));
     assert_eq!(sf.stores, 1, "optimized program stores once");
     assert_eq!(sf.loads, 1, "optimized program loads once");
     assert_eq!(sf.compute, 4);
 
-    // MMIO-level beats (the physical cost the rewrite saves)
+    // MMIO-level beats and modeled cycles (the physical cost the rewrite
+    // saves); the chain lowers the same way the engine executes it, so
+    // the static estimate is the cold-path engine cost
     let dev = FlexAsr::new();
+    let model = CostModel::for_target(Target::FlexAsr);
     let mut rng = Rng::new(7);
     let t = dev.quant(&Tensor::randn(&[128, 128], &mut rng, 1.0));
     let fused_inv = dev.lower_maxpool_chain(&t, 4);
     let naive_invs = dev.lower_maxpool_chain_naive(&t, 4);
     let naive_beats: usize = naive_invs.iter().map(|i| i.data_beats()).sum();
+    let naive_bytes: u64 = naive_invs.iter().map(|i| i.data_bytes()).sum();
+    let naive_cycles: CycleBreakdown = naive_invs
+        .iter()
+        .map(|i| cost::invocation_cycles(&model, OpFamily::Pool, i))
+        .fold(CycleBreakdown::default(), |acc, c| acc + c);
+    let fused_cycles = cost::invocation_cycles(&model, OpFamily::Pool, &fused_inv);
     println!(
         "MMIO data beats: naive {} vs fused {} ({:.2}x reduction in stores alone;\n\
          naive additionally reads every intermediate back to the host)",
@@ -60,4 +93,48 @@ fn main() {
         fused_inv.data_beats(),
         naive_beats as f64 / fused_inv.data_beats() as f64
     );
+    println!("modeled cycles: naive {naive_cycles} vs fused {fused_cycles}");
+    assert!(
+        fused_cycles.total() < naive_cycles.total(),
+        "Fig-7 ordering: fused must be strictly cheaper in modeled cycles \
+         ({} vs {})",
+        fused_cycles.total(),
+        naive_cycles.total()
+    );
+
+    let records = [
+        format!(
+            "  {{\"variant\": \"naive\", \"stores\": {}, \"loads\": {}, \
+             \"pool_stages\": {}, \"data_beats\": {}, \"data_bytes\": {}, \
+             \"transfer\": {}, \"compute\": {}, \"overhead\": {}, \"total\": {}}}",
+            sn.stores,
+            sn.loads,
+            sn.compute,
+            naive_beats,
+            naive_bytes,
+            naive_cycles.transfer,
+            naive_cycles.compute,
+            naive_cycles.overhead,
+            naive_cycles.total(),
+        ),
+        format!(
+            "  {{\"variant\": \"fused\", \"stores\": {}, \"loads\": {}, \
+             \"pool_stages\": {}, \"data_beats\": {}, \"data_bytes\": {}, \
+             \"transfer\": {}, \"compute\": {}, \"overhead\": {}, \"total\": {}}}",
+            sf.stores,
+            sf.loads,
+            sf.compute,
+            fused_inv.data_beats(),
+            fused_inv.data_bytes(),
+            fused_cycles.transfer,
+            fused_cycles.compute,
+            fused_cycles.overhead,
+            fused_cycles.total(),
+        ),
+    ];
+    let out = std::env::var("D2A_BENCH_OUT_FIG7")
+        .unwrap_or_else(|_| "BENCH_fig7.json".to_string());
+    std::fs::write(&out, format!("[\n{}\n]\n", records.join(",\n")))?;
+    println!("wrote {out}");
+    Ok(())
 }

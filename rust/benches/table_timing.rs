@@ -1,0 +1,337 @@
+//! Modeled-latency bench for the timing/cost subsystem: runs **all six
+//! Table-1 applications** end-to-end under `ExecBackend::IlaMmio` on
+//! **both design revisions** and emits a `BENCH_timing.json` trajectory
+//! point with per-op modeled-cycle breakdowns (transfer vs compute vs
+//! overhead — the Fig. 7 axes), plus the traffic tallies behind them
+//! (staged/dedup/DMA/read bytes). In full mode each (app, rev) pair also
+//! runs a residency repeat on the same persistent engine, so the JSON
+//! shows how much of the cold-run transfer cost operand residency
+//! removes; `--smoke` keeps one cold run per pair for CI.
+//!
+//! Output path defaults to `BENCH_timing.json`; override with
+//! `D2A_BENCH_OUT_TIMING`. Records are serialized by hand (the offline
+//! crate set has no serde).
+//!
+//! **Regression gate**: `-- --check BENCH_timing_baseline.json` compares
+//! each (app, rev) pair's cold-run total modeled cycles against a
+//! checked-in baseline and exits non-zero when a pair regresses past
+//! tolerance (cycles may not grow by more than 25% + 64 — the
+//! `bench_matching` band mechanics; cycles are deterministic, so the
+//! slack absorbs intentional cost-model recalibration, not noise).
+//! Baseline records with a `-1` sentinel are unprimed: the gate passes
+//! and prints the priming instruction. `--advisory` (or an
+//! `estimated-offline` provenance marker in the baseline) reports
+//! regressions as warnings and exits 0; `--prime <path>` writes the
+//! cycles just measured into the baseline format.
+
+use d2a::apps::table1::all_apps;
+use d2a::egraph::RunnerLimits;
+use d2a::ir::Target;
+use d2a::rewrites::Matching;
+use d2a::session::{Bindings, DesignRev, ExecBackend, Session};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::time::Duration;
+
+fn limits() -> RunnerLimits {
+    RunnerLimits {
+        max_iters: 8,
+        max_nodes: 150_000,
+        time_limit: Duration::from_secs(30),
+    }
+}
+
+fn rev_name(rev: DesignRev) -> &'static str {
+    match rev {
+        DesignRev::Original => "original",
+        DesignRev::Updated => "updated",
+    }
+}
+
+/// Random bindings covering every leaf an app declares shapes for.
+fn random_bindings(app: &d2a::apps::App, rng: &mut Rng) -> Bindings {
+    let mut b = Bindings::new();
+    for (name, shape) in &app.shapes {
+        b.set(name, Tensor::randn(shape, rng, 0.5));
+    }
+    b
+}
+
+/// Minimal field extraction from the flat baseline format (no serde):
+/// (app, rev, cycles) per record. Nested objects are skipped because
+/// they contain no "app" key.
+fn parse_records(text: &str) -> Vec<(String, String, i64)> {
+    let mut out = Vec::new();
+    for chunk in text.split('{').skip(1) {
+        let get_str = |key: &str| -> Option<String> {
+            chunk
+                .split(&format!("\"{key}\": \""))
+                .nth(1)
+                .and_then(|rest| rest.split('"').next())
+                .map(str::to_string)
+        };
+        let get_num = |key: &str| -> Option<i64> {
+            chunk.split(&format!("\"{key}\": ")).nth(1).and_then(|rest| {
+                let end = rest
+                    .find(|c: char| !(c.is_ascii_digit() || c == '-'))
+                    .unwrap_or(rest.len());
+                rest[..end].parse::<i64>().ok()
+            })
+        };
+        if let (Some(app), Some(rev), Some(c)) =
+            (get_str("app"), get_str("rev"), get_num("cycles"))
+        {
+            out.push((app, rev, c));
+        }
+    }
+    out
+}
+
+/// Tolerance band: fail when `now` exceeds `base * 1.25 + 64` (modeled
+/// cycles are deterministic; the slack absorbs intentional cost-model
+/// recalibration without masking a traffic regression).
+fn ceiling(base: i64) -> i64 {
+    base + base / 4 + 64
+}
+
+/// `Ok(())` on pass; `Err((msg, advisory))` on regression, where
+/// `advisory` is true when the baseline self-identifies as estimated
+/// (provenance marker) and failures must not gate.
+fn check_against_baseline(
+    current: &[(String, String, i64)],
+    baseline_path: &str,
+) -> Result<(), (String, bool)> {
+    let fail = |msg: String| Err((msg, false));
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(text) => text,
+        Err(e) => return fail(format!("cannot read baseline {baseline_path}: {e}")),
+    };
+    let estimated = text.contains("\"provenance\": \"estimated-offline\"");
+    let baseline = parse_records(&text);
+    if baseline.is_empty() {
+        return fail(format!("baseline {baseline_path} contains no records"));
+    }
+    if estimated {
+        println!(
+            "gate: baseline {baseline_path} is estimated-offline — running \
+             in advisory mode (regressions warn, never fail)"
+        );
+    }
+    let mut failures = Vec::new();
+    let mut unprimed = 0usize;
+    for (app, rev, cycles) in current {
+        let Some((_, _, bc)) =
+            baseline.iter().find(|(a, r, _)| a == app && r == rev)
+        else {
+            println!("gate: no baseline record for {app}/{rev} (skipped)");
+            continue;
+        };
+        if *bc < 0 {
+            unprimed += 1;
+            continue;
+        }
+        if *cycles > ceiling(*bc) {
+            failures.push(format!(
+                "{app}/{rev}: modeled cycles {cycles} regressed past baseline \
+                 {bc} (ceiling {})",
+                ceiling(*bc)
+            ));
+        }
+    }
+    // coverage: a primed baseline row with no current counterpart means
+    // an (app, rev) pair silently dropped out of the bench
+    for (app, rev, bc) in &baseline {
+        if *bc < 0 {
+            continue;
+        }
+        if !current.iter().any(|(a, r, _)| a == app && r == rev) {
+            failures.push(format!(
+                "{app}/{rev}: primed baseline record has no current \
+                 measurement (app/rev dropped from the bench?)"
+            ));
+        }
+    }
+    if unprimed > 0 {
+        println!(
+            "gate: {unprimed} baseline record(s) unprimed (-1 sentinel); to arm \
+             them, run with --prime {baseline_path} and commit"
+        );
+    }
+    if failures.is_empty() {
+        println!("gate: modeled cycles within tolerance of {baseline_path}");
+        Ok(())
+    } else {
+        Err((failures.join("\n"), estimated))
+    }
+}
+
+/// Serialize counters in the flat baseline format (app/rev/cycles only —
+/// the stable subset the gate compares).
+fn write_baseline(path: &str, counters: &[(String, String, i64)]) -> std::io::Result<()> {
+    let rows: Vec<String> = counters
+        .iter()
+        .map(|(app, rev, c)| {
+            format!("  {{\"app\": \"{app}\", \"rev\": \"{rev}\", \"cycles\": {c}}}")
+        })
+        .collect();
+    std::fs::write(path, format!("[\n{}\n]\n", rows.join(",\n")))?;
+    println!("primed {path} with {} record(s)", counters.len());
+    Ok(())
+}
+
+fn ops_json(ops: &[d2a::cost::OpCycles]) -> String {
+    let rows: Vec<String> = ops
+        .iter()
+        .map(|o| {
+            format!(
+                "{{\"target\": \"{}\", \"op\": \"{}\", \"executions\": {}, \
+                 \"transfer\": {}, \"compute\": {}, \"overhead\": {}, \
+                 \"staged_bytes\": {}, \"dedup_bytes\": {}, \"dma_bytes\": {}, \
+                 \"read_bytes\": {}, \"triggers\": {}}}",
+                o.target,
+                o.op,
+                o.executions,
+                o.cycles.transfer,
+                o.cycles.compute,
+                o.cycles.overhead,
+                o.staged_bytes,
+                o.dedup_bytes,
+                o.dma_bytes,
+                o.read_bytes,
+                o.triggers,
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(", "))
+}
+
+fn main() -> std::io::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let flag_path = |flag: &str| -> Option<String> {
+        args.windows(2).find(|w| w[0] == flag).map(|w| w[1].clone())
+    };
+    let baseline = flag_path("--check");
+    if baseline.is_none() && args.iter().any(|a| a == "--check") {
+        eprintln!("--check requires a baseline path argument");
+        std::process::exit(1);
+    }
+    let prime = flag_path("--prime");
+    if prime.is_none() && args.iter().any(|a| a == "--prime") {
+        eprintln!("--prime requires a baseline path argument");
+        std::process::exit(1);
+    }
+    let advisory = args.iter().any(|a| a == "--advisory");
+    let smoke = args.iter().any(|a| a == "--smoke");
+
+    let targets = [Target::FlexAsr, Target::Hlscnn, Target::Vta];
+    let mut records = Vec::new();
+    let mut counters = Vec::new();
+    println!("=== table_timing: modeled device cycles, Table-1 apps at MMIO ===");
+    println!(
+        "{:<14} {:<9} {:<5} {:>12} {:>12} {:>12} {:>14}",
+        "application", "rev", "run", "transfer", "compute", "overhead", "total cycles"
+    );
+    for app in all_apps() {
+        // the extracted program is revision-independent; compile once and
+        // re-attach under each revision's numerics
+        let compile = Session::builder()
+            .targets(&targets)
+            .matching(Matching::Flexible)
+            .limits(limits())
+            .build();
+        let compiled = compile.compile(&app);
+        for rev in [DesignRev::Original, DesignRev::Updated] {
+            let session = Session::builder()
+                .targets(&targets)
+                .design_rev(rev)
+                .backend(ExecBackend::IlaMmio)
+                .build();
+            let program = session.attach(compiled.expr().clone());
+            // the same seed per (app, rev): identical operands across
+            // revisions, so cycle differences are design differences
+            let mut rng = Rng::new(811);
+            let bindings = random_bindings(&app, &mut rng);
+            let mut engine = program.engine();
+            let cold = program
+                .run_traced_with(&mut engine, &bindings)
+                .unwrap_or_else(|e| panic!("{}/{}: MMIO run failed: {e}", app.name, rev_name(rev)));
+            assert!(
+                cold.mmio_invocations > 0,
+                "{}: nothing lowered — the timing record would be vacuous",
+                app.name
+            );
+            assert!(cold.cycles.total() > 0, "{}: no modeled cycles", app.name);
+            assert!(!cold.op_cycles.is_empty(), "{}: no per-op rows", app.name);
+            let mut runs = vec![("cold", cold)];
+            if !smoke {
+                // residency repeat on the same engine: staged operands
+                // dedup, so modeled transfer must not grow
+                let warm = program
+                    .run_traced_with(&mut engine, &bindings)
+                    .expect("residency repeat failed");
+                assert!(
+                    warm.cycles.transfer <= runs[0].1.cycles.transfer,
+                    "{}: residency increased modeled transfer ({} vs {})",
+                    app.name,
+                    warm.cycles.transfer,
+                    runs[0].1.cycles.transfer
+                );
+                runs.push(("warm", warm));
+            }
+            for (kind, trace) in &runs {
+                println!(
+                    "{:<14} {:<9} {:<5} {:>12} {:>12} {:>12} {:>14}",
+                    app.name,
+                    rev_name(rev),
+                    kind,
+                    trace.cycles.transfer,
+                    trace.cycles.compute,
+                    trace.cycles.overhead,
+                    trace.cycles.total(),
+                );
+                records.push(format!(
+                    "  {{\"app\": \"{}\", \"rev\": \"{}\", \"run\": \"{}\", \
+                     \"transfer\": {}, \"compute\": {}, \"overhead\": {}, \
+                     \"total\": {}, \"mmio_invocations\": {}, \
+                     \"bytes_streamed\": {}, \"bursts_deduped\": {}, \
+                     \"ops\": {}}}",
+                    app.name,
+                    rev_name(rev),
+                    kind,
+                    trace.cycles.transfer,
+                    trace.cycles.compute,
+                    trace.cycles.overhead,
+                    trace.cycles.total(),
+                    trace.mmio_invocations,
+                    trace.bytes_streamed,
+                    trace.bursts_deduped,
+                    ops_json(&trace.op_cycles),
+                ));
+            }
+            counters.push((
+                app.name.to_string(),
+                rev_name(rev).to_string(),
+                runs[0].1.cycles.total() as i64,
+            ));
+        }
+    }
+    let out = std::env::var("D2A_BENCH_OUT_TIMING")
+        .unwrap_or_else(|_| "BENCH_timing.json".to_string());
+    std::fs::write(&out, format!("[\n{}\n]\n", records.join(",\n")))?;
+    println!("wrote {out}");
+
+    if let Some(path) = prime {
+        write_baseline(&path, &counters)?;
+    }
+    if let Some(path) = baseline {
+        if let Err((msg, estimated)) = check_against_baseline(&counters, &path) {
+            if advisory || estimated {
+                println!("timing regression gate (advisory): would have failed:\n{msg}");
+            } else {
+                eprintln!("timing regression gate FAILED:\n{msg}");
+                std::process::exit(1);
+            }
+        }
+    }
+    Ok(())
+}

@@ -1224,6 +1224,43 @@ impl Accelerator for FlexAsr {
     }
 }
 
+/// Literature-calibrated timing constants for FlexASR (see
+/// [`crate::cost`]). These are order-of-magnitude calibrations from the
+/// published silicon, not RTL measurements — override via
+/// [`crate::cost::CostModel::builder`] to sweep alternatives:
+///
+/// * `mmio_beat_cycles = 4` — the 16 nm speech/NLP SoC (Tambe et al.,
+///   ISSCC'21) moves 128-bit beats over its AXI fabric at roughly one
+///   beat per 4 accelerator cycles once handshaking is included.
+/// * `dma_bytes_per_cycle = 32` — the on-die staging-DRAM → PE weight
+///   copy behind [`model::DMA_CTRL`] streams a 256-bit line per cycle,
+///   which is why DRAM-staged replays beat re-streaming over MMIO.
+/// * Trigger latencies scale with datapath reuse per trigger: pooling is
+///   a single reduction pass (32), layer norm adds a second pass (48),
+///   a linear tile walks the MAC array once (96), an LSTM step computes
+///   four gates plus the elementwise tail (128), attention chains
+///   scoring + softmax + context (160); 64 covers anything unprofiled.
+/// * Resets re-arm the CSR file (32 cycles) and restore dirty buffer
+///   bytes at 64 B/cycle.
+pub fn cost_model() -> crate::cost::CostModel {
+    use crate::cost::{CostModel, OpFamily};
+    let mut b = CostModel::zero()
+        .builder()
+        .mmio_beat_cycles(4)
+        .dma_bytes_per_cycle(32)
+        .reset_base_cycles(32)
+        .restore_bytes_per_cycle(64);
+    for f in OpFamily::ALL {
+        b = b.trigger(f, 64);
+    }
+    b.trigger(OpFamily::Linear, 96)
+        .trigger(OpFamily::Recurrent, 128)
+        .trigger(OpFamily::Pool, 32)
+        .trigger(OpFamily::Norm, 48)
+        .trigger(OpFamily::Attention, 160)
+        .build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -319,6 +319,33 @@ impl Accelerator for Hlscnn {
     }
 }
 
+/// Literature-calibrated timing constants for HLSCNN (see
+/// [`crate::cost`]). HLS-generated FPGA-class control dominates: the
+/// accelerator (Whatmough et al., VLSI'19 lineage) takes more cycles per
+/// MMIO beat and per trigger than the hand-tuned FlexASR datapath:
+///
+/// * `mmio_beat_cycles = 8` — HLS AXI-lite style register/buffer writes
+///   cost several fabric cycles of handshake per 16-byte beat.
+/// * `dma_bytes_per_cycle = 16` — a 128-bit internal bus.
+/// * A conv trigger walks the full filter window per output pixel
+///   (256 cycles per channel-tile trigger); other families (never
+///   mapped here today) default to 128.
+/// * Resets re-arm the config registers (48) and restore dirty
+///   activation/weight SRAM at 32 B/cycle.
+pub fn cost_model() -> crate::cost::CostModel {
+    use crate::cost::{CostModel, OpFamily};
+    let mut b = CostModel::zero()
+        .builder()
+        .mmio_beat_cycles(8)
+        .dma_bytes_per_cycle(16)
+        .reset_base_cycles(48)
+        .restore_bytes_per_cycle(32);
+    for f in OpFamily::ALL {
+        b = b.trigger(f, 128);
+    }
+    b.trigger(OpFamily::Conv, 256).build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

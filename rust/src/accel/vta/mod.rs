@@ -233,6 +233,32 @@ impl Accelerator for Vta {
     }
 }
 
+/// Literature-calibrated timing constants for VTA (see [`crate::cost`]).
+/// VTA (Moreau et al., IEEE Micro'19) is instruction-driven with a
+/// decoupled access/execute pipeline, so per-trigger latency is low and
+/// throughput comes from keeping the GEMM core fed:
+///
+/// * `mmio_beat_cycles = 6` — the FPGA shell's memory-mapped load path.
+/// * `dma_bytes_per_cycle = 16` — 128-bit load/store units.
+/// * A GEMM instruction retires a 16×16 int8 tile through the systolic
+///   array in ~64 cycles; a vector ALU op is half that (32); 48 covers
+///   unprofiled families.
+/// * Resets are cheap (24) — the ISA has an explicit accumulator-reset
+///   instruction — with restores at 32 B/cycle.
+pub fn cost_model() -> crate::cost::CostModel {
+    use crate::cost::{CostModel, OpFamily};
+    let mut b = CostModel::zero()
+        .builder()
+        .mmio_beat_cycles(6)
+        .dma_bytes_per_cycle(16)
+        .reset_base_cycles(24)
+        .restore_bytes_per_cycle(32);
+    for f in OpFamily::ALL {
+        b = b.trigger(f, 48);
+    }
+    b.trigger(OpFamily::Gemm, 64).trigger(OpFamily::Alu, 32).build()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -217,10 +217,40 @@ impl LoweredProgram {
         self.invocations.iter().map(|i| i.data_beats()).sum()
     }
 
+    /// Total enabled payload bytes crossing MMIO into data windows.
+    pub fn data_bytes(&self) -> u64 {
+        self.invocations.iter().map(|i| i.data_bytes()).sum()
+    }
+
+    /// Total bytes moved by on-device `DMA_CTRL` replays.
+    pub fn dma_replay_bytes(&self) -> u64 {
+        self.invocations.iter().map(|i| i.dma_replay_bytes()).sum()
+    }
+
     /// True when the driver tiled the op into multiple triggers.
     pub fn is_tiled(&self) -> bool {
         self.invocations.len() > 1
     }
+}
+
+/// True when `addr` lies in an operand/result data window of any device:
+/// FlexASR global buffer / PE weight buffer / weight-staging DRAM,
+/// HLSCNN activation / weight / output SRAM, VTA input / weight /
+/// accumulator buffer. (VTA accumulators and HLSCNN outputs count —
+/// VtaAdd stages its first operand directly into the accumulator window,
+/// and only host *writes* are tallied, so device-produced results never
+/// double-count.)
+fn in_data_window(addr: u64) -> bool {
+    (fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64).contains(&addr)
+        || (fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64).contains(&addr)
+        || (fx::WGT_DRAM_BASE..fx::WGT_DRAM_BASE + fx::WGT_DRAM_SIZE as u64)
+            .contains(&addr)
+        || (hx::ACT_BASE..hx::ACT_BASE + hx::ACT_SIZE as u64).contains(&addr)
+        || (hx::WGT_BASE..hx::WGT_BASE + hx::WGT_SIZE as u64).contains(&addr)
+        || (hx::OUT_BASE..hx::OUT_BASE + hx::OUT_SIZE as u64).contains(&addr)
+        || (vx::INP_BASE..vx::INP_BASE + vx::INP_SIZE as u64).contains(&addr)
+        || (vx::WGT_BASE..vx::WGT_BASE + vx::WGT_SIZE as u64).contains(&addr)
+        || (vx::ACC_BASE..vx::ACC_BASE + vx::ACC_SIZE as u64).contains(&addr)
 }
 
 impl LoweredInvocation {
@@ -229,22 +259,55 @@ impl LoweredInvocation {
         self.bursts.iter().flat_map(|b| b.cmds.iter())
     }
 
-    /// Number of MMIO beats moving tensor data (the §5.1 metric).
+    /// Number of MMIO beats moving tensor data (the §5.1 metric): write
+    /// beats into a data window, exactly as [`stream_bytes`] put them on
+    /// the bus — a byte-enabled short final beat is one beat. Read
+    /// commands touching a data window are result fetches, not data
+    /// pushed by the host, and are excluded; on-device `DMA_CTRL` replay
+    /// traffic never crosses MMIO and is reported separately by
+    /// [`Self::dma_replay_bytes`].
     pub fn data_beats(&self) -> usize {
+        self.cmds().filter(|c| c.is_write && in_data_window(c.addr)).count()
+    }
+
+    /// Enabled payload bytes crossing MMIO into data windows. Unlike the
+    /// beat count this gives a short final beat its true size: a 22-byte
+    /// stage is 2 beats but 22 bytes, not 32.
+    pub fn data_bytes(&self) -> u64 {
         self.cmds()
-            .filter(|c| {
-                let a = c.addr;
-                (fx::GB_BASE..fx::GB_BASE + fx::GB_SIZE as u64).contains(&a)
-                    || (fx::PE_WGT_BASE..fx::PE_WGT_BASE + fx::PE_WGT_SIZE as u64)
-                        .contains(&a)
-                    || (fx::WGT_DRAM_BASE..fx::WGT_DRAM_BASE + fx::WGT_DRAM_SIZE as u64)
-                        .contains(&a)
-                    || (hx::ACT_BASE..hx::ACT_BASE + hx::ACT_SIZE as u64).contains(&a)
-                    || (hx::WGT_BASE..hx::WGT_BASE + hx::WGT_SIZE as u64).contains(&a)
-                    || (vx::INP_BASE..vx::INP_BASE + vx::INP_SIZE as u64).contains(&a)
-                    || (vx::WGT_BASE..vx::WGT_BASE + vx::WGT_SIZE as u64).contains(&a)
-            })
-            .count()
+            .filter(|c| c.is_write && in_data_window(c.addr))
+            .map(|c| c.len as u64)
+            .sum()
+    }
+
+    /// Bytes moved by on-device `DMA_CTRL` replays (staging DRAM → PE
+    /// weight buffer), decoded from each descriptor's length field — the
+    /// same count the simulator copies when the descriptor executes.
+    pub fn dma_replay_bytes(&self) -> u64 {
+        self.cmds()
+            .filter(|c| c.is_write && c.addr == fx::DMA_CTRL)
+            .map(|c| c.data_u64() >> 44)
+            .sum()
+    }
+}
+
+impl ReadPlan {
+    /// Bytes this plan fetches from device memory (stored codes/words,
+    /// before decode): AF8 is one byte per element, HLSCNN two, VTA
+    /// four. The FlexASR status-bias beat is control, not data, and is
+    /// excluded.
+    pub fn read_bytes(&self) -> u64 {
+        match self {
+            ReadPlan::FlexAf8 { shape, .. } => {
+                shape.iter().product::<usize>() as u64
+            }
+            ReadPlan::HlscnnI16 { shape, .. } => {
+                2 * shape.iter().product::<usize>() as u64
+            }
+            ReadPlan::VtaI32 { shape, .. } => {
+                4 * shape.iter().product::<usize>() as u64
+            }
+        }
     }
 }
 
@@ -685,5 +748,82 @@ mod tests {
         let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
         let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
         assert!(hl.lower(&op, &[&xc, &k]).is_none());
+    }
+
+    #[test]
+    fn data_beat_accounting_matches_the_bus_on_unaligned_tails() {
+        // a 22-byte stage: stream_bytes emits 2 beats (one full, one
+        // byte-enabled short), so the beat count is 2 — but the payload
+        // crossing the bus is 22 bytes, not 2 * 16
+        let stage = Burst::stage(fx::GB_BASE, &[0x5Au8; 22]);
+        let inv = LoweredInvocation {
+            target: Target::FlexAsr,
+            asm: Fragment::new(),
+            bursts: vec![stage],
+            read: None,
+        };
+        assert_eq!(inv.data_beats(), 2, "short final beat is one beat");
+        assert_eq!(inv.data_bytes(), 22, "tail counts its true size");
+
+        // a read command inside a data window (a result fetch) is not
+        // data the host pushed: it must not inflate the beat count
+        let mut with_read = inv.clone();
+        with_read.bursts.push(Burst::control(vec![Cmd::read(fx::GB_BASE)]));
+        assert_eq!(with_read.data_beats(), 2, "reads are not data beats");
+        assert_eq!(with_read.data_bytes(), 22);
+
+        // a DMA_CTRL descriptor is control, not a data beat; its replay
+        // length is decoded from the descriptor word instead
+        let mut with_dma = inv.clone();
+        with_dma.bursts.push(Burst::control(vec![Cmd::write_u64(
+            fx::DMA_CTRL,
+            fx::dma_word(0, 0, 4096),
+        )]));
+        assert_eq!(with_dma.data_beats(), 2);
+        assert_eq!(with_dma.dma_replay_bytes(), 4096);
+    }
+
+    #[test]
+    fn dma_replay_bytes_cover_the_staged_lstm_weights() {
+        // the DRAM-staged LSTM replays every weight tile per timestep:
+        // the decoded replay traffic must be at least t times the weight
+        // footprint, while data_beats (MMIO writes) stays near one pass
+        let dev = FlexAsr::new();
+        let mut rng = Rng::new(79);
+        let (t, e, h) = (4usize, 200usize, 200usize);
+        let x = Tensor::randn(&[t, 1, e], &mut rng, 1.0);
+        let wi = Tensor::randn(&[4 * h, e], &mut rng, 0.3);
+        let wh = Tensor::randn(&[4 * h, h], &mut rng, 0.3);
+        let b = Tensor::randn(&[4 * h], &mut rng, 0.1);
+        let prog =
+            dev.lower(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
+        let weight_bytes = (4 * h * e + 4 * h * h) as u64;
+        assert!(
+            prog.dma_replay_bytes() >= weight_bytes * t as u64,
+            "replays {} must cover {} weight bytes x {t} steps",
+            prog.dma_replay_bytes(),
+            weight_bytes
+        );
+        // MMIO data traffic stays a single staging pass (plus
+        // activations/biases), far below the replayed total
+        assert!(prog.data_bytes() < prog.dma_replay_bytes());
+    }
+
+    #[test]
+    fn read_plan_bytes_follow_the_storage_width() {
+        let af = ReadPlan::FlexAf8 {
+            base: fx::GB_BASE,
+            shape: vec![3, 5],
+            fmt: AdaptivFloatFormat::new(8, 3),
+        };
+        assert_eq!(af.read_bytes(), 15);
+        let hl = ReadPlan::HlscnnI16 {
+            base: hx::OUT_BASE,
+            shape: vec![1, 2, 2, 2],
+            fmt: FixedPointFormat::new(16, 8),
+        };
+        assert_eq!(hl.read_bytes(), 16);
+        let vt = ReadPlan::VtaI32 { base: vx::ACC_BASE, shape: vec![4], scale: 1.0 };
+        assert_eq!(vt.read_bytes(), 16);
     }
 }

@@ -20,6 +20,7 @@
 pub mod stats;
 pub mod table2;
 
+use crate::cost::{CycleBreakdown, OpCycles};
 use crate::ir::interp::{eval_with_hook, EvalError, EvalHook};
 use crate::ir::{Node, RecExpr};
 use crate::session::{AcceleratorRegistry, ExecBackend, ExecEngine, FidelityReport};
@@ -238,6 +239,7 @@ pub fn cosim_lm_engine(
     }
     let (vocab, e) = (embed.shape[0], embed.shape[1]);
     let mut env = weights.clone();
+    let timeline_before = engine.timeline().snapshot();
     let mut hook = EngineHook {
         engine,
         invocations: 0,
@@ -288,6 +290,7 @@ pub fn cosim_lm_engine(
         }
     }
     let fidelity = hook.engine.take_fidelity();
+    let (cycles, op_cycles) = hook.engine.timeline().since(&timeline_before);
     Ok(LmReport {
         sentences: n_sentences,
         ref_perplexity: (nll_ref / count.max(1) as f64).exp() as f32,
@@ -295,6 +298,8 @@ pub fn cosim_lm_engine(
         invocations: hook.invocations,
         inv_errors: hook.inv_errors,
         fidelity,
+        cycles,
+        op_cycles,
     })
 }
 
@@ -315,6 +320,12 @@ pub struct LmReport {
     /// Cross-check outcome (empty unless the sweep ran under
     /// [`ExecBackend::CrossCheck`]).
     pub fidelity: FidelityReport,
+    /// Modeled device cycles spent across the sweep (transfer vs compute
+    /// vs overhead); zero on the functional fast path.
+    pub cycles: CycleBreakdown,
+    /// Per-(target, op-head) modeled-cycle breakdowns for the sweep, in
+    /// canonical (target, op) order.
+    pub op_cycles: Vec<OpCycles>,
 }
 
 fn log_softmax_at(logits: &Tensor, row: usize, idx: usize) -> f32 {

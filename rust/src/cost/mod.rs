@@ -1,0 +1,873 @@
+//! Per-target timing/cost models and the event-level [`Timeline`] that
+//! folds execution counters into **modeled device cycles** (ROADMAP
+//! direction 2).
+//!
+//! The paper's §5.1/Fig. 7 argument is that data *transfer* — not
+//! compute — dominates accelerator offload cost, but raw byte/burst
+//! tallies cannot make a quantified "faster" claim. This module attaches
+//! a [`CostModel`] to each target (MMIO beat cost, `DMA_CTRL` copy
+//! bandwidth, per-family trigger latency, reset/restore cost — constants
+//! calibrated from the FlexASR/HLSCNN/VTA literature, see each
+//! accelerator's `cost_model()`), and a [`Timeline`] recorder that the
+//! execution engine feeds one [`Event`] at a time as it plays lowered
+//! programs. Events are costed immediately and accumulated into
+//! per-(target, op) [`OpCycles`] rows plus a running
+//! [`CycleBreakdown`] total — no raw event log is retained, so a
+//! million-burst sweep costs a handful of rows, not memory proportional
+//! to traffic.
+//!
+//! Cycle totals split three ways, mirroring the Fig. 7 axes:
+//!
+//! * **transfer** — operand staging beats, `DMA_CTRL` replays, result
+//!   read-backs: bytes actually moving;
+//! * **compute** — trigger-to-done accelerator latency per op family;
+//! * **overhead** — config/trigger control beats and dirty-state resets.
+//!
+//! [`invocation_cycles`]/[`program_cycles`] estimate the same mapping
+//! statically from a lowered program (cold path, no residency dedup) for
+//! benches that have no engine in hand. Every constant is overridable
+//! through [`CostModel::builder`] so the codesign loop can sweep
+//! hypothetical devices.
+
+use crate::accel::flexasr::model as fx;
+use crate::codegen::{LoweredInvocation, LoweredProgram};
+use crate::ila::Cmd;
+use crate::ir::Target;
+use std::fmt;
+
+/// Ceiling division with the divisor clamped to ≥ 1 (bandwidth fields
+/// are user-overridable; a zero divisor must not panic).
+fn div_ceil(a: u64, b: u64) -> u64 {
+    let b = b.max(1);
+    (a + b - 1) / b
+}
+
+// ----------------------------------------------------------------------
+// Op families
+// ----------------------------------------------------------------------
+
+/// Coarse operator families sharing a trigger-latency class. Trigger
+/// latency varies far more across families (a conv window walk vs a
+/// vector add) than within one, so the cost model keys its compute
+/// constants per family rather than per op head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpFamily {
+    /// Dense/linear layers (`fasr_linear`).
+    Linear,
+    /// Recurrent cells, fused or per-step (`fasr_lstm*`).
+    Recurrent,
+    /// Pooling, including the §5.1 maxpool chain (`fasr_maxpool`,
+    /// `fasr_meanpool`).
+    Pool,
+    /// Normalization (`fasr_layernorm`).
+    Norm,
+    /// Attention blocks (`fasr_attention`).
+    Attention,
+    /// 2-D convolution (`hlscnn_conv2d*`).
+    Conv,
+    /// Systolic GEMM (`vta_gemm`).
+    Gemm,
+    /// Vector ALU ops (`vta_add`).
+    Alu,
+    /// Everything else (data movement, host fallbacks).
+    Other,
+}
+
+impl OpFamily {
+    /// Number of families — the size of per-family latency tables.
+    pub const COUNT: usize = 9;
+
+    /// Every family, in dense-index order.
+    pub const ALL: [OpFamily; OpFamily::COUNT] = [
+        OpFamily::Linear,
+        OpFamily::Recurrent,
+        OpFamily::Pool,
+        OpFamily::Norm,
+        OpFamily::Attention,
+        OpFamily::Conv,
+        OpFamily::Gemm,
+        OpFamily::Alu,
+        OpFamily::Other,
+    ];
+
+    /// Dense index into per-family tables.
+    pub fn index(self) -> usize {
+        match self {
+            OpFamily::Linear => 0,
+            OpFamily::Recurrent => 1,
+            OpFamily::Pool => 2,
+            OpFamily::Norm => 3,
+            OpFamily::Attention => 4,
+            OpFamily::Conv => 5,
+            OpFamily::Gemm => 6,
+            OpFamily::Alu => 7,
+            OpFamily::Other => 8,
+        }
+    }
+
+    /// Classify an accelerator op head (`fasr_lstm4`,
+    /// `hlscnn_conv2d<s(1,1),p(1,1)>`, ...) into its family. Heads carry
+    /// parameters as suffixes, so classification is by prefix.
+    pub fn of_head(head: &str) -> OpFamily {
+        if head.starts_with("fasr_lstm") {
+            OpFamily::Recurrent
+        } else if head.starts_with("fasr_linear") {
+            OpFamily::Linear
+        } else if head.starts_with("fasr_maxpool") || head.starts_with("fasr_meanpool") {
+            OpFamily::Pool
+        } else if head.starts_with("fasr_layernorm") {
+            OpFamily::Norm
+        } else if head.starts_with("fasr_attention") {
+            OpFamily::Attention
+        } else if head.starts_with("hlscnn_conv2d") {
+            OpFamily::Conv
+        } else if head.starts_with("vta_gemm") {
+            OpFamily::Gemm
+        } else if head.starts_with("vta_add") {
+            OpFamily::Alu
+        } else {
+            OpFamily::Other
+        }
+    }
+}
+
+impl fmt::Display for OpFamily {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self {
+            OpFamily::Linear => "linear",
+            OpFamily::Recurrent => "recurrent",
+            OpFamily::Pool => "pool",
+            OpFamily::Norm => "norm",
+            OpFamily::Attention => "attention",
+            OpFamily::Conv => "conv",
+            OpFamily::Gemm => "gemm",
+            OpFamily::Alu => "alu",
+            OpFamily::Other => "other",
+        };
+        write!(f, "{name}")
+    }
+}
+
+// ----------------------------------------------------------------------
+// Cycle breakdown
+// ----------------------------------------------------------------------
+
+/// Modeled device cycles, split by where the time goes (the Fig. 7
+/// axes). Components add independently; [`Self::total`] is their sum.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CycleBreakdown {
+    /// Data movement: operand staging beats, `DMA_CTRL` replays, result
+    /// read-backs.
+    pub transfer: u64,
+    /// Trigger-to-done accelerator compute.
+    pub compute: u64,
+    /// Control beats (config/trigger/status) and dirty-state resets.
+    pub overhead: u64,
+}
+
+impl CycleBreakdown {
+    /// Total modeled cycles.
+    pub fn total(&self) -> u64 {
+        self.transfer + self.compute + self.overhead
+    }
+
+    /// Per-component saturating subtraction (per-call deltas).
+    pub fn saturating_sub(&self, other: &CycleBreakdown) -> CycleBreakdown {
+        CycleBreakdown {
+            transfer: self.transfer.saturating_sub(other.transfer),
+            compute: self.compute.saturating_sub(other.compute),
+            overhead: self.overhead.saturating_sub(other.overhead),
+        }
+    }
+}
+
+impl std::ops::AddAssign for CycleBreakdown {
+    fn add_assign(&mut self, o: CycleBreakdown) {
+        self.transfer += o.transfer;
+        self.compute += o.compute;
+        self.overhead += o.overhead;
+    }
+}
+
+impl std::ops::Add for CycleBreakdown {
+    type Output = CycleBreakdown;
+    fn add(mut self, o: CycleBreakdown) -> CycleBreakdown {
+        self += o;
+        self
+    }
+}
+
+impl fmt::Display for CycleBreakdown {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} cycles (transfer {}, compute {}, overhead {})",
+            self.total(),
+            self.transfer,
+            self.compute,
+            self.overhead
+        )
+    }
+}
+
+// ----------------------------------------------------------------------
+// Events
+// ----------------------------------------------------------------------
+
+/// One execution event the engine reports to the [`Timeline`] while
+/// playing a lowered program. Byte counts are what actually crossed (or
+/// pointedly did not cross) the bus, so costing is exact with respect to
+/// the command stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Event {
+    /// An operand burst streamed over MMIO into a staging region.
+    Stage {
+        /// Enabled payload bytes put on the bus.
+        bytes: u64,
+        /// 16-byte beats streamed (a short final beat counts as one).
+        beats: u64,
+    },
+    /// An operand burst skipped because its region was already
+    /// device-resident (residency dedup). Costs nothing; tallied so the
+    /// avoided traffic stays visible.
+    DedupSkip {
+        /// Payload bytes that did *not* cross the bus.
+        bytes: u64,
+    },
+    /// A `DMA_CTRL` on-device copy (staging DRAM → PE weight buffer).
+    DmaReplay {
+        /// Bytes copied on-device.
+        bytes: u64,
+    },
+    /// Config/trigger/status beats of a control burst (the `DMA_CTRL`
+    /// descriptor write itself is also one such beat).
+    Control {
+        /// MMIO beats streamed.
+        beats: u64,
+    },
+    /// A trigger fired: the device computes for the family's latency.
+    Trigger {
+        /// Family of the op being computed.
+        family: OpFamily,
+    },
+    /// Result read-back over MMIO.
+    Read {
+        /// Bytes fetched from device memory.
+        bytes: u64,
+    },
+    /// Dirty-state reset before a program (clean state is restored or
+    /// re-zeroed at the restore bandwidth).
+    Reset {
+        /// Bytes restored.
+        bytes: u64,
+    },
+}
+
+// ----------------------------------------------------------------------
+// Cost model
+// ----------------------------------------------------------------------
+
+/// Per-target timing constants, in device-clock cycles. Defaults come
+/// from each accelerator's `cost_model()` (literature-calibrated, with
+/// provenance notes); every field is overridable through
+/// [`Self::builder`] for codesign sweeps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Cycles one 16-byte MMIO beat occupies the interconnect.
+    pub mmio_beat_cycles: u64,
+    /// On-device `DMA_CTRL` copy bandwidth, bytes per cycle.
+    pub dma_bytes_per_cycle: u64,
+    /// Trigger-to-done compute latency per [`OpFamily`].
+    pub trigger_cycles: [u64; OpFamily::COUNT],
+    /// Fixed cost of a dirty-state reset between programs.
+    pub reset_base_cycles: u64,
+    /// Bandwidth of restoring/re-zeroing dirty bytes on reset, bytes per
+    /// cycle.
+    pub restore_bytes_per_cycle: u64,
+}
+
+impl CostModel {
+    /// The calibrated model for `target` ([`Target::Host`] is free: host
+    /// ops never occupy an accelerator).
+    pub fn for_target(target: Target) -> CostModel {
+        match target {
+            Target::Host => CostModel::zero(),
+            Target::FlexAsr => crate::accel::flexasr::cost_model(),
+            Target::Hlscnn => crate::accel::hlscnn::cost_model(),
+            Target::Vta => crate::accel::vta::cost_model(),
+        }
+    }
+
+    /// An all-zero model (bandwidth divisors are 1 so costing never
+    /// divides by zero).
+    pub fn zero() -> CostModel {
+        CostModel {
+            mmio_beat_cycles: 0,
+            dma_bytes_per_cycle: 1,
+            trigger_cycles: [0; OpFamily::COUNT],
+            reset_base_cycles: 0,
+            restore_bytes_per_cycle: 1,
+        }
+    }
+
+    /// Start a builder seeded from this model — codesign sweeps override
+    /// one knob at a time.
+    pub fn builder(self) -> CostModelBuilder {
+        CostModelBuilder { model: self }
+    }
+
+    /// Map one execution event to its cycle cost under this model.
+    pub fn cycles(&self, ev: &Event) -> CycleBreakdown {
+        let mut c = CycleBreakdown::default();
+        match *ev {
+            Event::Stage { beats, .. } => {
+                c.transfer = beats * self.mmio_beat_cycles;
+            }
+            Event::DedupSkip { .. } => {}
+            Event::DmaReplay { bytes } => {
+                c.transfer = div_ceil(bytes, self.dma_bytes_per_cycle);
+            }
+            Event::Control { beats } => {
+                c.overhead = beats * self.mmio_beat_cycles;
+            }
+            Event::Trigger { family } => {
+                c.compute = self.trigger_cycles[family.index()];
+            }
+            Event::Read { bytes } => {
+                // reads cross the same interconnect in 16-byte beats
+                c.transfer = div_ceil(bytes, 16) * self.mmio_beat_cycles;
+            }
+            Event::Reset { bytes } => {
+                c.overhead = self.reset_base_cycles
+                    + if bytes > 0 {
+                        div_ceil(bytes, self.restore_bytes_per_cycle)
+                    } else {
+                        0
+                    };
+            }
+        }
+        c
+    }
+}
+
+/// Builder over [`CostModel`] (see [`CostModel::builder`]).
+#[derive(Debug, Clone)]
+pub struct CostModelBuilder {
+    model: CostModel,
+}
+
+impl CostModelBuilder {
+    /// Override the per-beat MMIO interconnect cost.
+    pub fn mmio_beat_cycles(mut self, v: u64) -> Self {
+        self.model.mmio_beat_cycles = v;
+        self
+    }
+
+    /// Override the `DMA_CTRL` copy bandwidth (bytes per cycle).
+    pub fn dma_bytes_per_cycle(mut self, v: u64) -> Self {
+        self.model.dma_bytes_per_cycle = v;
+        self
+    }
+
+    /// Override one family's trigger latency.
+    pub fn trigger(mut self, family: OpFamily, cycles: u64) -> Self {
+        self.model.trigger_cycles[family.index()] = cycles;
+        self
+    }
+
+    /// Override the fixed reset cost.
+    pub fn reset_base_cycles(mut self, v: u64) -> Self {
+        self.model.reset_base_cycles = v;
+        self
+    }
+
+    /// Override the reset restore bandwidth (bytes per cycle).
+    pub fn restore_bytes_per_cycle(mut self, v: u64) -> Self {
+        self.model.restore_bytes_per_cycle = v;
+        self
+    }
+
+    /// Finish, clamping bandwidth divisors to ≥ 1.
+    pub fn build(mut self) -> CostModel {
+        self.model.dma_bytes_per_cycle = self.model.dma_bytes_per_cycle.max(1);
+        self.model.restore_bytes_per_cycle = self.model.restore_bytes_per_cycle.max(1);
+        self.model
+    }
+}
+
+/// One [`CostModel`] per target, indexed by [`Target::index`]. The
+/// default table carries each accelerator's calibrated constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostTable {
+    models: [CostModel; Target::COUNT],
+}
+
+impl Default for CostTable {
+    fn default() -> Self {
+        let mut models = [CostModel::zero(); Target::COUNT];
+        for t in [Target::Host, Target::FlexAsr, Target::Hlscnn, Target::Vta] {
+            models[t.index()] = CostModel::for_target(t);
+        }
+        CostTable { models }
+    }
+}
+
+impl CostTable {
+    /// The model for `target`.
+    pub fn get(&self, target: Target) -> &CostModel {
+        &self.models[target.index()]
+    }
+
+    /// Replace `target`'s model (codesign sweeps).
+    pub fn set(&mut self, target: Target, model: CostModel) {
+        self.models[target.index()] = model;
+    }
+}
+
+// ----------------------------------------------------------------------
+// Per-op tallies
+// ----------------------------------------------------------------------
+
+/// Accumulated modeled cycles and traffic for one (target, op-head)
+/// pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OpCycles {
+    /// Executing accelerator.
+    pub target: Target,
+    /// Op head (`fasr_lstm4`, `hlscnn_conv2d<s(1,1),p(1,1)>`, ...).
+    pub op: String,
+    /// Lowered-program executions attributed here.
+    pub executions: u64,
+    /// Modeled cycles, by component.
+    pub cycles: CycleBreakdown,
+    /// Operand bytes streamed over MMIO.
+    pub staged_bytes: u64,
+    /// Operand bytes skipped as already device-resident.
+    pub dedup_bytes: u64,
+    /// Bytes copied by on-device `DMA_CTRL` replays.
+    pub dma_bytes: u64,
+    /// Result bytes read back.
+    pub read_bytes: u64,
+    /// Triggers fired.
+    pub triggers: u64,
+}
+
+impl OpCycles {
+    fn empty(target: Target, op: &str) -> OpCycles {
+        OpCycles {
+            target,
+            op: op.to_string(),
+            executions: 0,
+            cycles: CycleBreakdown::default(),
+            staged_bytes: 0,
+            dedup_bytes: 0,
+            dma_bytes: 0,
+            read_bytes: 0,
+            triggers: 0,
+        }
+    }
+
+    fn absorb(&mut self, o: &OpCycles) {
+        self.executions += o.executions;
+        self.cycles += o.cycles;
+        self.staged_bytes += o.staged_bytes;
+        self.dedup_bytes += o.dedup_bytes;
+        self.dma_bytes += o.dma_bytes;
+        self.read_bytes += o.read_bytes;
+        self.triggers += o.triggers;
+    }
+
+    fn delta_from(&self, base: &OpCycles) -> OpCycles {
+        OpCycles {
+            target: self.target,
+            op: self.op.clone(),
+            executions: self.executions.saturating_sub(base.executions),
+            cycles: self.cycles.saturating_sub(&base.cycles),
+            staged_bytes: self.staged_bytes.saturating_sub(base.staged_bytes),
+            dedup_bytes: self.dedup_bytes.saturating_sub(base.dedup_bytes),
+            dma_bytes: self.dma_bytes.saturating_sub(base.dma_bytes),
+            read_bytes: self.read_bytes.saturating_sub(base.read_bytes),
+            triggers: self.triggers.saturating_sub(base.triggers),
+        }
+    }
+
+    fn is_zero(&self) -> bool {
+        self.executions == 0
+            && self.cycles.total() == 0
+            && self.staged_bytes == 0
+            && self.dedup_bytes == 0
+            && self.dma_bytes == 0
+            && self.read_bytes == 0
+            && self.triggers == 0
+    }
+
+    /// Merge per-worker op tallies into one canonical list: sums are
+    /// keyed by (target, op) and the result is sorted by that key, so
+    /// the merge is independent of worker completion order (the
+    /// `FidelityReport::merge_all` discipline).
+    pub fn merge_all<I>(parts: I) -> Vec<OpCycles>
+    where
+        I: IntoIterator<Item = Vec<OpCycles>>,
+    {
+        let mut out: Vec<OpCycles> = Vec::new();
+        for part in parts {
+            for oc in part {
+                match out.iter_mut().find(|e| e.target == oc.target && e.op == oc.op) {
+                    Some(e) => e.absorb(&oc),
+                    None => out.push(oc),
+                }
+            }
+        }
+        sort_canonical(&mut out);
+        out
+    }
+}
+
+fn sort_canonical(ops: &mut [OpCycles]) {
+    ops.sort_by(|a, b| {
+        (a.target.index(), a.op.as_str()).cmp(&(b.target.index(), b.op.as_str()))
+    });
+}
+
+// ----------------------------------------------------------------------
+// Timeline
+// ----------------------------------------------------------------------
+
+/// The engine-side recorder: each reported [`Event`] is costed under the
+/// currently open op's target model and folded into per-op and total
+/// tallies immediately. Lives on the engine (never on a pooled device),
+/// so per-call deltas are engine-local and placement-independent.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    models: CostTable,
+    ops: Vec<OpCycles>,
+    totals: CycleBreakdown,
+    cur: Option<usize>,
+}
+
+impl Timeline {
+    /// A timeline with the default literature-calibrated models.
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    /// A timeline with caller-supplied models (codesign sweeps).
+    pub fn with_models(models: CostTable) -> Timeline {
+        Timeline { models, ..Timeline::default() }
+    }
+
+    /// The cost models in use.
+    pub fn models(&self) -> &CostTable {
+        &self.models
+    }
+
+    /// Swap the cost models. Accumulated tallies are kept — they were
+    /// costed under the models active when their events were recorded.
+    pub fn set_models(&mut self, models: CostTable) {
+        self.models = models;
+    }
+
+    /// Open an execution of `op` on `target`: subsequent events are
+    /// attributed (and costed) there until the next `begin_op`.
+    pub fn begin_op(&mut self, target: Target, op: &str) {
+        let idx = match self.ops.iter().position(|o| o.target == target && o.op == op)
+        {
+            Some(i) => i,
+            None => {
+                self.ops.push(OpCycles::empty(target, op));
+                self.ops.len() - 1
+            }
+        };
+        self.ops[idx].executions += 1;
+        self.cur = Some(idx);
+    }
+
+    /// Record one event against the currently open op. Events arriving
+    /// before any [`Self::begin_op`] land on a synthetic host-side
+    /// `unattributed` row instead of being dropped.
+    pub fn record(&mut self, ev: Event) {
+        if self.cur.is_none() {
+            self.begin_op(Target::Host, "unattributed");
+        }
+        let idx = self.cur.expect("begin_op just set cur");
+        let cost = self.models.get(self.ops[idx].target).cycles(&ev);
+        let entry = &mut self.ops[idx];
+        entry.cycles += cost;
+        self.totals += cost;
+        match ev {
+            Event::Stage { bytes, .. } => entry.staged_bytes += bytes,
+            Event::DedupSkip { bytes } => entry.dedup_bytes += bytes,
+            Event::DmaReplay { bytes } => entry.dma_bytes += bytes,
+            Event::Trigger { .. } => entry.triggers += 1,
+            Event::Read { bytes } => entry.read_bytes += bytes,
+            Event::Control { .. } | Event::Reset { .. } => {}
+        }
+    }
+
+    /// Total modeled cycles across every recorded event.
+    pub fn totals(&self) -> CycleBreakdown {
+        self.totals
+    }
+
+    /// Per-op tallies, in first-execution order.
+    pub fn per_op(&self) -> &[OpCycles] {
+        &self.ops
+    }
+
+    /// Per-op tallies in canonical (target, op) order — worker-order
+    /// independent, for aggregation across engines.
+    pub fn per_op_sorted(&self) -> Vec<OpCycles> {
+        let mut ops = self.ops.clone();
+        sort_canonical(&mut ops);
+        ops
+    }
+
+    /// Snapshot the tallies (cheap: one row per distinct op, not per
+    /// event).
+    pub fn snapshot(&self) -> TimelineSnapshot {
+        TimelineSnapshot { ops: self.ops.clone(), totals: self.totals }
+    }
+
+    /// Delta since `snap`: total cycles plus the per-op rows that
+    /// changed, canonically sorted — the per-call accounting behind
+    /// `RunTrace`.
+    pub fn since(&self, snap: &TimelineSnapshot) -> (CycleBreakdown, Vec<OpCycles>) {
+        let totals = self.totals.saturating_sub(&snap.totals);
+        let mut ops = Vec::new();
+        for cur in &self.ops {
+            let base =
+                snap.ops.iter().find(|o| o.target == cur.target && o.op == cur.op);
+            let d = match base {
+                Some(b) => cur.delta_from(b),
+                None => cur.clone(),
+            };
+            if !d.is_zero() {
+                ops.push(d);
+            }
+        }
+        sort_canonical(&mut ops);
+        (totals, ops)
+    }
+}
+
+/// A point-in-time copy of a [`Timeline`]'s tallies (see
+/// [`Timeline::snapshot`] / [`Timeline::since`]).
+#[derive(Debug, Clone, Default)]
+pub struct TimelineSnapshot {
+    ops: Vec<OpCycles>,
+    totals: CycleBreakdown,
+}
+
+// ----------------------------------------------------------------------
+// Static estimation (no engine required)
+// ----------------------------------------------------------------------
+
+/// Split a control burst into plain control beats and `DMA_CTRL` replay
+/// traffic. Every command costs one beat (the DMA descriptor write
+/// included); a write to `DMA_CTRL` additionally queues the on-device
+/// copy whose length is encoded in the descriptor word's top bits
+/// ([`fx::dma_word`]). Returns `(control_beats, dma_replay_bytes)`.
+pub fn control_profile(cmds: &[Cmd]) -> (u64, u64) {
+    let mut beats = 0u64;
+    let mut dma = 0u64;
+    for c in cmds {
+        beats += 1;
+        if c.is_write && c.addr == fx::DMA_CTRL {
+            dma += c.data_u64() >> 44;
+        }
+    }
+    (beats, dma)
+}
+
+/// Statically estimate one invocation's modeled cycles under `model` —
+/// the cold-path cost (every operand burst streams; no residency dedup),
+/// using exactly the event mapping the engine applies at execution time.
+/// Bench/analysis entry point: needs no engine or simulator.
+pub fn invocation_cycles(
+    model: &CostModel,
+    family: OpFamily,
+    inv: &LoweredInvocation,
+) -> CycleBreakdown {
+    let mut total = CycleBreakdown::default();
+    for burst in &inv.bursts {
+        if burst.region.is_some() {
+            total += model.cycles(&Event::Stage {
+                bytes: burst.payload_bytes(),
+                beats: burst.cmds.len() as u64,
+            });
+        } else {
+            let (beats, dma) = control_profile(&burst.cmds);
+            total += model.cycles(&Event::Control { beats });
+            if dma > 0 {
+                total += model.cycles(&Event::DmaReplay { bytes: dma });
+            }
+        }
+    }
+    total += model.cycles(&Event::Trigger { family });
+    if let Some(plan) = &inv.read {
+        total += model.cycles(&Event::Read { bytes: plan.read_bytes() });
+    }
+    total
+}
+
+/// Statically estimate a whole lowered program: the sum of its
+/// invocations (cold path; reset cost belongs to the engine boundary and
+/// is excluded).
+pub fn program_cycles(
+    model: &CostModel,
+    family: OpFamily,
+    prog: &LoweredProgram,
+) -> CycleBreakdown {
+    let mut total = CycleBreakdown::default();
+    for inv in &prog.invocations {
+        total += invocation_cycles(model, family, inv);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn of_head_classifies_every_known_family() {
+        let cases = [
+            ("fasr_linear", OpFamily::Linear),
+            ("fasr_lstm4", OpFamily::Recurrent),
+            ("fasr_lstm_fused4", OpFamily::Recurrent),
+            ("fasr_maxpool", OpFamily::Pool),
+            ("fasr_meanpool", OpFamily::Pool),
+            ("fasr_layernorm", OpFamily::Norm),
+            ("fasr_attention", OpFamily::Attention),
+            ("hlscnn_conv2d<s(1,1),p(1,1)>", OpFamily::Conv),
+            ("vta_gemm", OpFamily::Gemm),
+            ("vta_add", OpFamily::Alu),
+            ("fasr_maxp_store", OpFamily::Other),
+            ("host_softmax", OpFamily::Other),
+        ];
+        for (head, want) in cases {
+            assert_eq!(OpFamily::of_head(head), want, "{head}");
+        }
+        // the dense index is a permutation of 0..COUNT
+        let mut seen = [false; OpFamily::COUNT];
+        for f in OpFamily::ALL {
+            assert!(!seen[f.index()], "duplicate index for {f}");
+            seen[f.index()] = true;
+        }
+    }
+
+    #[test]
+    fn event_costing_arithmetic() {
+        let m = CostModel::zero()
+            .builder()
+            .mmio_beat_cycles(4)
+            .dma_bytes_per_cycle(32)
+            .trigger(OpFamily::Linear, 96)
+            .reset_base_cycles(10)
+            .restore_bytes_per_cycle(64)
+            .build();
+        assert_eq!(m.cycles(&Event::Stage { bytes: 22, beats: 2 }).transfer, 8);
+        assert_eq!(m.cycles(&Event::DedupSkip { bytes: 1 << 20 }).total(), 0);
+        // 33 bytes over a 32 B/cycle DMA: ceil → 2 cycles
+        assert_eq!(m.cycles(&Event::DmaReplay { bytes: 33 }).transfer, 2);
+        assert_eq!(m.cycles(&Event::Control { beats: 3 }).overhead, 12);
+        let trig = m.cycles(&Event::Trigger { family: OpFamily::Linear });
+        assert_eq!((trig.compute, trig.transfer, trig.overhead), (96, 0, 0));
+        // 17 bytes read back: 2 beats at 4 cycles
+        assert_eq!(m.cycles(&Event::Read { bytes: 17 }).transfer, 8);
+        assert_eq!(m.cycles(&Event::Reset { bytes: 0 }).overhead, 10);
+        assert_eq!(m.cycles(&Event::Reset { bytes: 65 }).overhead, 12);
+    }
+
+    #[test]
+    fn builder_clamps_zero_bandwidths() {
+        let m = CostModel::for_target(crate::ir::Target::FlexAsr)
+            .builder()
+            .dma_bytes_per_cycle(0)
+            .restore_bytes_per_cycle(0)
+            .build();
+        assert_eq!(m.dma_bytes_per_cycle, 1);
+        assert_eq!(m.restore_bytes_per_cycle, 1);
+        // and even an unclamped zero divisor must not panic in costing
+        let raw = CostModel { dma_bytes_per_cycle: 0, ..m };
+        assert_eq!(raw.cycles(&Event::DmaReplay { bytes: 7 }).transfer, 7);
+    }
+
+    #[test]
+    fn timeline_attributes_and_deltas_per_op() {
+        let mut tl = Timeline::new();
+        tl.begin_op(Target::FlexAsr, "fasr_linear");
+        tl.record(Event::Stage { bytes: 160, beats: 10 });
+        tl.record(Event::Trigger { family: OpFamily::Linear });
+        let snap = tl.snapshot();
+
+        tl.begin_op(Target::Vta, "vta_gemm");
+        tl.record(Event::Stage { bytes: 32, beats: 2 });
+        tl.record(Event::Trigger { family: OpFamily::Gemm });
+        tl.record(Event::Read { bytes: 64 });
+
+        let (delta, ops) = tl.since(&snap);
+        // only the vta op moved since the snapshot
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].op, "vta_gemm");
+        assert_eq!(ops[0].executions, 1);
+        assert_eq!(ops[0].staged_bytes, 32);
+        assert_eq!(ops[0].read_bytes, 64);
+        assert_eq!(ops[0].triggers, 1);
+        assert_eq!(delta, ops[0].cycles);
+        // totals cover both ops
+        assert_eq!(
+            tl.totals().total(),
+            tl.per_op().iter().map(|o| o.cycles.total()).sum::<u64>()
+        );
+        // a second execution of the same op reuses its row
+        tl.begin_op(Target::Vta, "vta_gemm");
+        tl.record(Event::DedupSkip { bytes: 32 });
+        let row = tl
+            .per_op()
+            .iter()
+            .find(|o| o.op == "vta_gemm")
+            .expect("row exists");
+        assert_eq!(row.executions, 2);
+        assert_eq!(row.dedup_bytes, 32);
+    }
+
+    #[test]
+    fn unattributed_events_are_not_dropped() {
+        let mut tl = Timeline::new();
+        tl.record(Event::Control { beats: 2 });
+        assert_eq!(tl.per_op().len(), 1);
+        assert_eq!(tl.per_op()[0].op, "unattributed");
+        assert_eq!(tl.per_op()[0].target, Target::Host);
+    }
+
+    #[test]
+    fn merge_all_is_worker_order_independent() {
+        let mk = |op: &str, transfer: u64| {
+            let mut oc = OpCycles::empty(Target::FlexAsr, op);
+            oc.executions = 1;
+            oc.cycles.transfer = transfer;
+            oc
+        };
+        let a = vec![mk("fasr_linear", 10), mk("fasr_lstm4", 5)];
+        let b = vec![mk("fasr_lstm4", 7)];
+        let ab = OpCycles::merge_all([a.clone(), b.clone()]);
+        let ba = OpCycles::merge_all([b, a]);
+        assert_eq!(ab, ba, "merge must not depend on worker order");
+        let lstm = ab.iter().find(|o| o.op == "fasr_lstm4").expect("merged row");
+        assert_eq!(lstm.cycles.transfer, 12);
+        assert_eq!(lstm.executions, 2);
+    }
+
+    #[test]
+    fn control_profile_decodes_dma_words() {
+        let cmds = vec![
+            Cmd::write_u64(fx::DMA_CTRL, fx::dma_word(0, 0, 4096)),
+            Cmd::write_u64(0xA000_0010, 1),
+            Cmd::write_u64(fx::DMA_CTRL, fx::dma_word(4096, 0, 100)),
+        ];
+        let (beats, dma) = control_profile(&cmds);
+        assert_eq!(beats, 3, "every command is a beat");
+        assert_eq!(dma, 4196, "replayed bytes decoded from the descriptors");
+    }
+}

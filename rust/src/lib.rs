@@ -26,6 +26,7 @@ pub mod cli;
 pub mod codegen;
 pub mod compiler;
 pub mod cosim;
+pub mod cost;
 pub mod egraph;
 pub mod ila;
 pub mod ir;

@@ -4,6 +4,7 @@
 
 use d2a::apps::table1::all_apps;
 use d2a::cli::Cli;
+use d2a::cost::{CycleBreakdown, OpCycles};
 use d2a::egraph::RunnerLimits;
 use d2a::ir::Target;
 use d2a::rewrites::Matching;
@@ -35,7 +36,9 @@ COMMANDS:
                          as MMIO programs on the ILA simulators, `crosscheck`
                          runs both paths and reports bit-level mismatches
                          (try --rev original --app resnet20 --backend
-                         crosscheck to see the HLSCNN weight-store flaw)
+                         crosscheck to see the HLSCNN weight-store flaw);
+                         mmio/crosscheck sweeps also report modeled device
+                         cycles (transfer/compute/overhead per op family)
   soc-demo               run a D2A-lowered program on the emulated SoC
   help                   this text
 ";
@@ -246,6 +249,7 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
              reference ppl {:.2}, accelerated ppl {:.2}",
             rep.ref_perplexity, rep.acc_perplexity
         );
+        print_cycles(&rep.cycles, &rep.op_cycles, n_sent);
         if backend == ExecBackend::CrossCheck {
             print!("{}", rep.fidelity);
         }
@@ -307,10 +311,45 @@ fn cmd_cosim(cli: &Cli) -> anyhow::Result<()> {
             rep.exec_errors
         );
     }
+    print_cycles(&rep.cycles, &rep.op_cycles, rep.n);
     if backend == ExecBackend::CrossCheck {
         print!("{}", rep.fidelity);
     }
     Ok(())
+}
+
+/// Modeled-cycle summary for a sweep: the cost-model totals plus the
+/// per-op breakdown the timeline folded them into. Silent under the
+/// Functional backend (no device work, all counters zero).
+fn print_cycles(cycles: &CycleBreakdown, op_cycles: &[OpCycles], n: usize) {
+    if cycles.total() == 0 {
+        return;
+    }
+    println!(
+        "modeled device cycles: {}/point ({} total: {} transfer / {} compute / \
+         {} overhead)",
+        cycles.total() / n.max(1) as u64,
+        cycles.total(),
+        cycles.transfer,
+        cycles.compute,
+        cycles.overhead,
+    );
+    println!(
+        "  {:<8} {:<22} {:>6} {:>12} {:>12} {:>12} {:>13}",
+        "target", "op", "execs", "transfer", "compute", "overhead", "total"
+    );
+    for oc in op_cycles {
+        println!(
+            "  {:<8} {:<22} {:>6} {:>12} {:>12} {:>12} {:>13}",
+            oc.target.to_string(),
+            oc.op,
+            oc.executions,
+            oc.cycles.transfer,
+            oc.cycles.compute,
+            oc.cycles.overhead,
+            oc.cycles.total(),
+        );
+    }
 }
 
 fn cmd_soc_demo() -> anyhow::Result<()> {

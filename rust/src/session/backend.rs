@@ -36,6 +36,7 @@ use super::pool::{Device, DevicePool, Resident};
 use super::{AcceleratorRegistry, DesignRev};
 use crate::accel::Accelerator;
 use crate::codegen::{self, LoweredProgram};
+use crate::cost::{self, CostTable, CycleBreakdown, Event, OpFamily, Timeline};
 use crate::ila::sim::IlaSim;
 use crate::ila::{Cmd, Ila};
 use crate::ir::interp::EvalError;
@@ -345,6 +346,7 @@ pub struct ExecEngine<'r> {
     bytes_streamed: u64,
     bursts_deduped: u64,
     staged_streamed: u64,
+    timeline: Timeline,
 }
 
 /// Where an engine's MMIO devices come from: a private lazily-built
@@ -391,6 +393,7 @@ impl<'r> ExecEngine<'r> {
             bytes_streamed: 0,
             bursts_deduped: 0,
             staged_streamed: 0,
+            timeline: Timeline::new(),
         }
     }
 
@@ -485,6 +488,29 @@ impl<'r> ExecEngine<'r> {
         } else {
             self.bursts_deduped as f64 / total as f64
         }
+    }
+
+    /// The modeled-cycle [`Timeline`] this engine has accumulated: every
+    /// lowered-program execution feeds stage/dedup/DMA-replay/trigger/
+    /// read/reset events, costed under the per-target [`CostTable`] (see
+    /// [`crate::cost`]). The timeline lives on the engine — never on a
+    /// (possibly pooled, shared) device — so snapshots/deltas are
+    /// engine-local and independent of device placement.
+    pub fn timeline(&self) -> &Timeline {
+        &self.timeline
+    }
+
+    /// Total modeled device cycles executed by this engine's lowered
+    /// programs, split transfer/compute/overhead.
+    pub fn modeled_cycles(&self) -> CycleBreakdown {
+        self.timeline.totals()
+    }
+
+    /// Replace the per-target cost models (codesign sweeps over
+    /// hypothetical devices). Tallies already accumulated are kept —
+    /// they were costed under the models active when recorded.
+    pub fn set_cost_models(&mut self, models: CostTable) {
+        self.timeline.set_models(models);
     }
 
     /// Driver-side calibration mirrors avoided by lowering-cache hits
@@ -658,8 +684,14 @@ impl<'r> ExecEngine<'r> {
                 .checkout(accel.target(), &fps, || IlaSim::new(accel.build_ila()))
                 .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))?;
             // the lease's Drop returns the device — residency intact —
-            // whether the program succeeds or errors
-            return self.play_program(lease.device_mut(), op, prog);
+            // whether the program succeeds or errors; the modeled cycles
+            // this program executed ride back with it so the pool can
+            // report occupancy/wait in device cycles, not just wall time
+            let before = self.timeline.totals();
+            let out = self.play_program(lease.device_mut(), op, prog);
+            let delta = self.timeline.totals().saturating_sub(&before);
+            lease.note_cycles(delta.total());
+            return out;
         }
         let idx = accel.target().index();
         let taken = match &mut self.devices {
@@ -693,12 +725,19 @@ impl<'r> ExecEngine<'r> {
         op: &Op,
         prog: &LoweredProgram,
     ) -> Result<Tensor, EvalError> {
+        let head = op.head();
+        let family = OpFamily::of_head(&head);
+        self.timeline.begin_op(prog.target(), &head);
         let Device { sim, resident } = dev;
         // between-program reset: everything the last program dirtied is
         // rewound EXCEPT ranges whose staged bursts we may reuse
         let keep: Vec<(String, usize, usize)> =
             resident.iter().map(|r| (r.mem.clone(), r.lo, r.hi)).collect();
+        let cleared_before = sim.bytes_cleared;
         sim.reset_dirty_keeping(&keep);
+        self.timeline.record(Event::Reset {
+            bytes: sim.bytes_cleared.saturating_sub(cleared_before),
+        });
 
         let mut parts = Vec::new();
         for inv in &prog.invocations {
@@ -715,6 +754,9 @@ impl<'r> ExecEngine<'r> {
                     }) {
                         // bit-identical burst already device-resident
                         self.bursts_deduped += 1;
+                        self.timeline.record(Event::DedupSkip {
+                            bytes: burst.payload_bytes(),
+                        });
                         continue;
                     }
                     sim.run(&burst.cmds).map_err(|e| {
@@ -722,6 +764,10 @@ impl<'r> ExecEngine<'r> {
                     })?;
                     self.bytes_streamed += burst.payload_bytes();
                     self.staged_streamed += 1;
+                    self.timeline.record(Event::Stage {
+                        bytes: burst.payload_bytes(),
+                        beats: burst.cmds.len() as u64,
+                    });
                     resident.retain(|r| r.mem != mem || r.hi <= lo || r.lo >= hi);
                     resident.push(Resident { mem, lo, hi, fp: burst.fingerprint });
                 } else {
@@ -732,12 +778,19 @@ impl<'r> ExecEngine<'r> {
                         EvalError::Op(op.head(), format!("MMIO backend: {e}"))
                     })?;
                     self.bytes_streamed += burst.payload_bytes();
+                    let (beats, dma) = cost::control_profile(&burst.cmds);
+                    self.timeline.record(Event::Control { beats });
+                    if dma > 0 {
+                        self.timeline.record(Event::DmaReplay { bytes: dma });
+                    }
                 }
             }
-            if inv.read.is_some() {
+            self.timeline.record(Event::Trigger { family });
+            if let Some(plan) = &inv.read {
                 parts.push(codegen::read_result(inv, sim).map_err(|e| {
                     EvalError::Op(op.head(), format!("MMIO backend: {e}"))
                 })?);
+                self.timeline.record(Event::Read { bytes: plan.read_bytes() });
             }
         }
         codegen::stitch_parts(parts, &prog.stitch)
@@ -931,5 +984,83 @@ mod tests {
         let misses_before = engine.lower_cache_misses();
         engine.execute(&Op::FlexLinear, &[&x, &weights[1], &b]).unwrap().unwrap();
         assert_eq!(engine.lower_cache_misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn timeline_accumulates_modeled_cycles_per_op() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(&[4, 16], &mut rng, 1.0);
+        let w = Tensor::randn(&[8, 16], &mut rng, 0.3);
+        let b = Tensor::randn(&[8], &mut rng, 0.1);
+        engine.execute(&Op::FlexLinear, &[&x, &w, &b]).unwrap().unwrap();
+        let total = engine.modeled_cycles();
+        assert!(total.transfer > 0, "staging + read-back must cost transfer");
+        assert!(total.compute > 0, "the trigger must cost compute");
+        assert!(total.overhead > 0, "config beats + reset must cost overhead");
+        let ops = engine.timeline().per_op();
+        assert_eq!(ops.len(), 1);
+        assert_eq!(ops[0].op, "fasr_linear");
+        assert_eq!((ops[0].executions, ops[0].triggers), (1, 1));
+        assert!(ops[0].staged_bytes > 0 && ops[0].read_bytes > 0);
+        // one trigger: compute equals the family's modeled latency
+        let model = crate::cost::CostModel::for_target(Target::FlexAsr);
+        assert_eq!(
+            ops[0].cycles.compute,
+            model.trigger_cycles[crate::cost::OpFamily::Linear.index()]
+        );
+
+        // a bit-identical repeat dedups the staged weight burst: the
+        // per-call transfer delta drops below the cold-start cost
+        let snap = engine.timeline().snapshot();
+        engine.execute(&Op::FlexLinear, &[&x, &w, &b]).unwrap().unwrap();
+        let (delta, dops) = engine.timeline().since(&snap);
+        assert!(
+            delta.transfer < total.transfer,
+            "repeat transfer {} must undercut cold-start {}",
+            delta.transfer,
+            total.transfer
+        );
+        assert_eq!(dops.len(), 1);
+        assert!(dops[0].dedup_bytes > 0, "the weight stage must dedup");
+        assert_eq!(dops[0].executions, 1, "the delta covers one execution");
+    }
+
+    #[test]
+    fn cost_model_overrides_rescale_new_work_only() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+        let mut rng = Rng::new(22);
+        let x = Tensor::randn(&[4, 16], &mut rng, 1.0);
+        let w = Tensor::randn(&[8, 16], &mut rng, 0.3);
+        let b = Tensor::randn(&[8], &mut rng, 0.1);
+        engine.execute(&Op::FlexLinear, &[&x, &w, &b]).unwrap().unwrap();
+        let before = engine.modeled_cycles();
+        // a hypothetical device with a 10x slower interconnect
+        let mut models = CostTable::default();
+        let slow = models
+            .get(Target::FlexAsr)
+            .builder()
+            .mmio_beat_cycles(40)
+            .build();
+        models.set(Target::FlexAsr, slow);
+        engine.set_cost_models(models);
+        assert_eq!(
+            engine.modeled_cycles(),
+            before,
+            "swapping models must not rewrite history"
+        );
+        let mut fresh_rng = Rng::new(23);
+        let x2 = Tensor::randn(&[4, 16], &mut fresh_rng, 1.0);
+        engine.execute(&Op::FlexLinear, &[&x2, &w, &b]).unwrap().unwrap();
+        let delta = engine.modeled_cycles().saturating_sub(&before);
+        assert!(
+            delta.transfer > before.transfer,
+            "one re-costed call ({}) must out-bill the whole cheap history \
+             ({}) under a 10x interconnect",
+            delta.transfer,
+            before.transfer
+        );
     }
 }

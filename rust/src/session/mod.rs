@@ -64,6 +64,7 @@ pub use registry::AcceleratorRegistry;
 
 use crate::apps::App;
 use crate::compiler;
+use crate::cost::{CycleBreakdown, OpCycles};
 use crate::egraph::{RunnerLimits, StopReason};
 use crate::ir::interp::{self, EnvLookup, EvalError};
 use crate::ir::shape::Shape;
@@ -476,6 +477,17 @@ pub struct RunTrace {
     /// Driver-side calibration mirrors this call avoided via the
     /// engine's lowering cache (delta of [`ExecEngine::mirror_hits`]).
     pub mirror_hits: u64,
+    /// Modeled device cycles spent by **this call** (a delta of the
+    /// engine's [`crate::cost::Timeline`]), split transfer vs compute vs
+    /// overhead. Zero under [`ExecBackend::Functional`] (nothing crosses
+    /// the modeled interface). Engine-local and placement-independent:
+    /// on a pooled engine the delta covers only this call's programs,
+    /// whichever devices served them.
+    pub cycles: CycleBreakdown,
+    /// Per-(target, op-head) modeled-cycle breakdowns for this call, in
+    /// canonical (target, op) order (delta of the engine timeline's
+    /// per-op rows).
+    pub op_cycles: Vec<OpCycles>,
     /// Per-invocation relative errors (§4.4.2 debugging statistics);
     /// empty unless the session enabled
     /// [`SessionBuilder::track_errors`].
@@ -546,6 +558,12 @@ pub struct SweepReport {
     /// Cross-check outcome merged across workers (empty unless the
     /// session backend is [`ExecBackend::CrossCheck`]).
     pub fidelity: FidelityReport,
+    /// Modeled device cycles summed across workers (transfer vs compute
+    /// vs overhead); zero under [`ExecBackend::Functional`].
+    pub cycles: CycleBreakdown,
+    /// Per-(target, op-head) modeled-cycle breakdowns merged across
+    /// workers, in canonical (target, op) order.
+    pub op_cycles: Vec<OpCycles>,
 }
 
 impl SweepReport {
@@ -577,6 +595,12 @@ impl SweepReport {
     /// wall time by `n`, silently shrinking with the worker count.
     pub fn time_per_point(&self) -> Duration {
         self.sim_time_per_point()
+    }
+
+    /// Modeled device cycles per data point — the host-speed-independent
+    /// latency figure (zero under [`ExecBackend::Functional`]).
+    pub fn cycles_per_point(&self) -> u64 {
+        self.cycles.total() / self.n.max(1) as u64
     }
 }
 
@@ -779,9 +803,11 @@ impl CompiledProgram {
         let bytes_before = engine.bytes_streamed();
         let dedup_before = engine.bursts_deduped();
         let mirrors_before = engine.mirror_hits();
+        let timeline_before = engine.timeline().snapshot();
         let mut inv_errors = Vec::new();
         let errors = if self.track_errors { Some(&mut inv_errors) } else { None };
         let (output, invocations) = self.exec(bindings.env(), engine, errors)?;
+        let (cycles, op_cycles) = engine.timeline().since(&timeline_before);
         Ok(RunTrace {
             output,
             invocations,
@@ -789,6 +815,8 @@ impl CompiledProgram {
             bytes_streamed: engine.bytes_streamed() - bytes_before,
             bursts_deduped: engine.bursts_deduped() - dedup_before,
             mirror_hits: engine.mirror_hits() - mirrors_before,
+            cycles,
+            op_cycles,
             inv_errors,
             fidelity: engine.take_fidelity(),
         })
@@ -888,6 +916,8 @@ impl CompiledProgram {
         // workers return their raw reports; ONE merge at the boundary
         // (below) keeps the result worker-order-independent
         let mut worker_fidelity = Vec::with_capacity(workers);
+        let mut cycles = CycleBreakdown::default();
+        let mut worker_ops = Vec::with_capacity(workers);
         thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|wid| {
@@ -922,12 +952,15 @@ impl CompiledProgram {
                             n += 1;
                             idx += workers;
                         }
-                        (ref_c, acc_c, n, errs, busy.elapsed(), engine.take_fidelity())
+                        let wc = engine.modeled_cycles();
+                        let wops = engine.timeline().per_op().to_vec();
+                        let fid = engine.take_fidelity();
+                        (ref_c, acc_c, n, errs, busy.elapsed(), fid, wc, wops)
                     })
                 })
                 .collect();
             for h in handles {
-                let (r, a, n, errs, busy, fid) =
+                let (r, a, n, errs, busy, fid, wc, wops) =
                     h.join().expect("sweep worker panicked");
                 totals.0 += r;
                 totals.1 += a;
@@ -935,6 +968,8 @@ impl CompiledProgram {
                 exec_errors += errs;
                 sim_time += busy;
                 worker_fidelity.push(fid);
+                cycles += wc;
+                worker_ops.push(wops);
             }
         });
         SweepReport {
@@ -946,6 +981,8 @@ impl CompiledProgram {
             workers,
             exec_errors,
             fidelity: FidelityReport::merge_all(worker_fidelity),
+            cycles,
+            op_cycles: OpCycles::merge_all(worker_ops),
         }
     }
 
@@ -1234,6 +1271,8 @@ mod tests {
             workers: 4,
             exec_errors: 0,
             fidelity: FidelityReport::default(),
+            cycles: CycleBreakdown::default(),
+            op_cycles: Vec::new(),
         };
         assert_eq!(rep.wall_time_per_point(), Duration::from_secs(1));
         assert_eq!(rep.sim_time_per_point(), Duration::from_secs(4));
@@ -1322,6 +1361,8 @@ mod tests {
         let trace = mmio.run_traced(&b).unwrap();
         assert_eq!(trace.invocations, 1);
         assert_eq!(trace.mmio_invocations, 1);
+        assert!(trace.cycles.total() > 0, "MMIO run must accrue modeled cycles");
+        assert_eq!(trace.op_cycles.len(), 1, "one op head ran: {:?}", trace.op_cycles);
     }
 
     #[test]
@@ -1344,6 +1385,7 @@ mod tests {
             .unwrap();
         assert_eq!(t2.fidelity.total_checked(), 0);
         assert_eq!(t2.mmio_invocations, 0);
+        assert_eq!(t2.cycles.total(), 0, "functional runs model no device cycles");
     }
 
     #[test]

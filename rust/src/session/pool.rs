@@ -144,6 +144,15 @@ pub struct PoolStats {
     /// Integral of (checked-out devices × time): divide by
     /// `capacity × wall-clock` for pool occupancy.
     pub busy: Duration,
+    /// Modeled device cycles spent by leased devices (summed from the
+    /// per-lease [`crate::cost::Timeline`] deltas reported at return) —
+    /// host-speed-independent pool occupancy.
+    pub busy_cycles: u64,
+    /// Modeled cycles of same-target queue exposure: each returned
+    /// lease's cycles weighted by how many requests were still waiting
+    /// for that target when it came back — host-speed-independent queue
+    /// pressure (the cycle analogue of [`PoolStats::wait`]).
+    pub wait_cycles: u64,
 }
 
 #[derive(Default)]
@@ -157,6 +166,8 @@ struct Counters {
     queued: AtomicU64,
     wait_nanos: AtomicU64,
     busy_nanos: AtomicU64,
+    busy_cycles: AtomicU64,
+    wait_cycles: AtomicU64,
 }
 
 enum Response {
@@ -169,7 +180,7 @@ enum Response {
 
 enum Request {
     Checkout { target: usize, fps: Vec<u64>, resp: mpsc::Sender<Response> },
-    Return { target: usize, device: Device },
+    Return { target: usize, device: Device, cycles: u64 },
     Shutdown,
 }
 
@@ -335,9 +346,15 @@ fn arbiter_loop(
                     next_seq += 1;
                 }
             }
-            Request::Return { target, mut device } => {
+            Request::Return { target, mut device, cycles } => {
                 tick(busy, &mut last_event);
                 busy -= 1;
+                counters.busy_cycles.fetch_add(cycles, Relaxed);
+                // every request still queued for this target sat behind
+                // those modeled cycles — charge each of them
+                let stalled =
+                    waiting.iter().filter(|w| w.target == target).count() as u64;
+                counters.wait_cycles.fetch_add(cycles * stalled, Relaxed);
                 loop {
                     let Some((idx, kind)) =
                         choose_waiter(&waiting, target, &device, policy)
@@ -447,6 +464,8 @@ impl DevicePool {
             queued: c.queued.load(Relaxed),
             wait: Duration::from_nanos(c.wait_nanos.load(Relaxed)),
             busy: Duration::from_nanos(c.busy_nanos.load(Relaxed)),
+            busy_cycles: c.busy_cycles.load(Relaxed),
+            wait_cycles: c.wait_cycles.load(Relaxed),
         }
     }
 
@@ -475,6 +494,7 @@ impl DevicePool {
         Ok(DeviceLease {
             device: Some(device),
             target: target.index(),
+            cycles: 0,
             ret: self.req_tx.clone(),
         })
     }
@@ -505,6 +525,7 @@ impl fmt::Debug for DevicePool {
 pub struct DeviceLease {
     device: Option<Device>,
     target: usize,
+    cycles: u64,
     ret: mpsc::Sender<Request>,
 }
 
@@ -512,13 +533,23 @@ impl DeviceLease {
     pub(crate) fn device_mut(&mut self) -> &mut Device {
         self.device.as_mut().expect("lease already returned")
     }
+
+    /// Attribute `c` modeled device cycles to this lease; reported to
+    /// the arbiter at return for occupancy/wait accounting.
+    pub(crate) fn note_cycles(&mut self, c: u64) {
+        self.cycles += c;
+    }
 }
 
 impl Drop for DeviceLease {
     fn drop(&mut self) {
         if let Some(device) = self.device.take() {
             // if the pool shut down first, the device is simply dropped
-            let _ = self.ret.send(Request::Return { target: self.target, device });
+            let _ = self.ret.send(Request::Return {
+                target: self.target,
+                device,
+                cycles: self.cycles,
+            });
         }
     }
 }
@@ -645,6 +676,29 @@ mod tests {
         assert_eq!(stats.checkouts, 2);
         assert_eq!(stats.queued, 1);
         assert!(stats.wait > Duration::ZERO);
+    }
+
+    #[test]
+    fn modeled_cycle_accounting_reaches_pool_stats() {
+        let pool = Arc::new(DevicePool::new(1, SchedPolicy::Fifo));
+        let mut lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        lease.note_cycles(100);
+        lease.note_cycles(23);
+        let p2 = Arc::clone(&pool);
+        let waiter = std::thread::spawn(move || {
+            let l = p2.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+            drop(l);
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        drop(lease); // returns 123 modeled cycles while one request waits
+        waiter.join().unwrap();
+        // a further checkout serializes behind the waiter's return on the
+        // arbiter's FIFO channel, so the counters below are settled
+        let l = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        drop(l);
+        let s = pool.stats();
+        assert_eq!(s.busy_cycles, 123, "only the first lease reported cycles");
+        assert_eq!(s.wait_cycles, 123, "one request was queued behind the lease");
     }
 
     #[test]

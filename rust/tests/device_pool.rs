@@ -209,6 +209,77 @@ fn affinity_strictly_beats_fifo_on_repeated_lstm_weights() {
     }
 }
 
+/// Per-call [`d2a::session::RunTrace`] counter deltas — bytes, dedups,
+/// and modeled cycles — are **engine-local**: a pooled engine's trace
+/// must be identical to a private engine's, whatever pool capacity or
+/// scheduling policy placed the work, and must not bleed between
+/// engines sharing a pool.
+#[test]
+fn pooled_trace_deltas_are_engine_local_and_placement_independent() {
+    let fixed_bindings = || {
+        let mut rng = Rng::new(55);
+        Bindings::new()
+            .with("input", Tensor::randn(&[2, 16], &mut rng, 1.0))
+            .with("w", Tensor::randn(&[8, 16], &mut rng, 0.3))
+            .with("b", Tensor::randn(&[8], &mut rng, 0.1))
+    };
+    let session_for = |pool: usize, policy: SchedPolicy| {
+        let mut b = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::IlaMmio)
+            .sched_policy(policy);
+        if pool > 0 {
+            b = b.device_pool(pool);
+        }
+        b.build()
+    };
+
+    // the private baseline: cold then warm trace on one engine
+    let private = session_for(0, SchedPolicy::Affinity);
+    let p_priv = private.attach(linear_expr());
+    let mut engine = p_priv.engine();
+    let b = fixed_bindings();
+    let cold = p_priv.run_traced_with(&mut engine, &b).unwrap();
+    let warm = p_priv.run_traced_with(&mut engine, &b).unwrap();
+    assert!(cold.cycles.total() > 0, "MMIO runs must model device cycles");
+    assert_eq!(cold.op_cycles.len(), 1, "one linear op family");
+    assert!(
+        warm.cycles.transfer < cold.cycles.transfer,
+        "residency must cut the warm transfer cycles"
+    );
+
+    for pool in [1usize, 2, 4] {
+        for policy in [SchedPolicy::Affinity, SchedPolicy::Fifo] {
+            let cfg = format!("pool={pool} {policy}");
+            let session = session_for(pool, policy);
+            let program = session.attach(linear_expr());
+            let b = fixed_bindings();
+            // a second engine interleaves between this engine's calls:
+            // its traffic must not leak into the first engine's deltas
+            let mut eng_a = program.engine();
+            let mut eng_b = program.engine();
+            let cold_a = program.run_traced_with(&mut eng_a, &b).unwrap();
+            let _ = program.run_traced_with(&mut eng_b, &b).unwrap();
+            let warm_a = program.run_traced_with(&mut eng_a, &b).unwrap();
+            assert_eq!(
+                cold_a.cycles, cold.cycles,
+                "{cfg}: cold modeled cycles must match the private engine"
+            );
+            assert_eq!(
+                cold_a.op_cycles, cold.op_cycles,
+                "{cfg}: per-op breakdown must be placement-independent"
+            );
+            assert_eq!(
+                warm_a.cycles, warm.cycles,
+                "{cfg}: warm delta must be engine-local (no bleed from \
+                 the interleaved engine)"
+            );
+            assert_eq!(cold_a.bytes_streamed, cold.bytes_streamed, "{cfg}");
+            assert_eq!(warm_a.bursts_deduped, warm.bursts_deduped, "{cfg}");
+        }
+    }
+}
+
 /// `lm_sweep` draws its devices from the session pool too: every window
 /// of the LM sweep checks out of the shared pool, and the cross-check
 /// stays clean.
