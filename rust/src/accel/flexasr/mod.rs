@@ -14,6 +14,7 @@
 //! MMIO beat, with per-tensor exponent biases in config registers.
 
 pub mod model;
+pub mod paging;
 
 use super::Accelerator;
 use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
@@ -33,6 +34,12 @@ pub struct FlexAsr {
     /// Accumulator / normalization internal format (wider AdaptivFloat —
     /// the PE accumulators are not 8-bit).
     pub af_wide: AdaptivFloatFormat,
+    /// Staging-DRAM bytes the *lowering* may plan weight tiles into
+    /// (clamped to the device's [`model::WGT_DRAM_SIZE`]). Tile sets
+    /// beyond this budget fall back to direct per-trigger PE streaming.
+    /// Defaults to the full DRAM; tests shrink it to force the direct
+    /// path on small shapes (e.g. to exercise the prefetch hazard rule).
+    pub dram_budget: usize,
 }
 
 impl Default for FlexAsr {
@@ -40,6 +47,7 @@ impl Default for FlexAsr {
         FlexAsr {
             af: AdaptivFloatFormat::new(8, 3),
             af_wide: AdaptivFloatFormat::new(16, 5),
+            dram_budget: fx::WGT_DRAM_SIZE,
         }
     }
 }
@@ -60,6 +68,7 @@ impl FlexAsr {
         FlexAsr {
             af: AdaptivFloatFormat::new(8, 1),
             af_wide: AdaptivFloatFormat::new(16, 3),
+            dram_budget: fx::WGT_DRAM_SIZE,
         }
     }
 
@@ -405,13 +414,20 @@ impl FlexAsr {
     /// (derived by a driver-side mirror of the accumulation) so all tiles
     /// share the fast path's output lattice bit-exactly.
     ///
-    /// When the whole tile set fits the device's weight staging DRAM,
-    /// every tile is staged there **once** (one fingerprinted burst per
-    /// tile) and each trigger issues a cheap [`fx::DMA_CTRL`] copy into
-    /// the PE buffer — so repeated evaluations of the same layer under a
-    /// persistent engine re-stream nothing but the input. Tile sets
-    /// beyond the DRAM (the LSTM-WLM decoder) fall back to streaming
-    /// each tile directly, still exactly once per program.
+    /// When the whole tile set fits the device's weight staging DRAM
+    /// (since the DRAM grew to 32 MiB this includes the [33278 × 650]
+    /// LSTM-WLM decoder), every tile is staged there **once** (one
+    /// fingerprinted burst per tile) and each trigger issues a cheap
+    /// [`fx::DMA_CTRL`] copy into the PE buffer — so repeated
+    /// evaluations of the same layer under a persistent engine re-stream
+    /// nothing but the input. Each tile's staging burst rides in the
+    /// invocation that first consumes it (stage phase before the trigger
+    /// phase), so the engine can prefetch tile N+1's staging while tile
+    /// N's trigger is in flight; persistent engines additionally page
+    /// the DRAM by fingerprint ([`paging::PageTable`]) and remap the DMA
+    /// sources, so tile sets ride residency across calls with LRU
+    /// eviction. Tile sets beyond [`FlexAsr::dram_budget`] fall back to
+    /// streaming each tile directly, still exactly once per program.
     fn lower_linear_tiled(
         &self,
         x: &Tensor,
@@ -460,26 +476,20 @@ impl FlexAsr {
             dram_off += align16(tile_len) as usize;
             lo += r;
         }
-        let use_dram = dram_off <= fx::WGT_DRAM_SIZE;
+        let use_dram = dram_off <= self.dram_budget.min(fx::WGT_DRAM_SIZE);
 
         let mut invocations = Vec::new();
         if use_dram {
-            // one staging invocation: the input plus every weight tile,
-            // each as its own fingerprinted (residency-trackable) burst
-            let mut bursts = vec![Burst::stage(fx::GB_BASE, &xc)];
-            for &(tlo, r, bias_base, tile_len, doff) in &tiles {
-                let mut buf = vec![0u8; tile_len];
-                buf[..r * k].copy_from_slice(&wc[tlo * k..(tlo + r) * k]);
-                buf[bias_base..].copy_from_slice(&bc[tlo..tlo + r]);
-                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
-            }
+            // stage phase, part one: the input burst. Each weight tile's
+            // fingerprinted DRAM burst instead rides in the invocation
+            // that first consumes it, so a persistent engine can stage
+            // tile N+1 while tile N's trigger is in flight.
             let mut asm = Fragment::new();
-            asm.push("FlexASR_ILA.write_v", &["%input"])
-                .push("FlexASR_ILA.write_wgt_dram", &["%w_tiles", "%b_slices"]);
+            asm.push("FlexASR_ILA.write_v", &["%input"]);
             invocations.push(LoweredInvocation {
                 target: Target::FlexAsr,
                 asm,
-                bursts,
+                bursts: vec![Burst::stage(fx::GB_BASE, &xc)],
                 read: None,
             });
         }
@@ -487,6 +497,10 @@ impl FlexAsr {
             let mut bursts = Vec::new();
             let mut cmds = Vec::new();
             if use_dram {
+                let mut buf = vec![0u8; tile_len];
+                buf[..r * k].copy_from_slice(&wc[tlo * k..(tlo + r) * k]);
+                buf[bias_base..].copy_from_slice(&bc[tlo..tlo + r]);
+                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
                 cmds.push(Cmd::write_u64(
                     fx::DMA_CTRL,
                     fx::dma_word(doff, 0, tile_len),
@@ -535,7 +549,8 @@ impl FlexAsr {
 
             let mut asm = Fragment::new();
             if use_dram {
-                asm.push("FlexASR_ILA.wgt_dma", &["%tile_slot"]);
+                asm.push("FlexASR_ILA.write_wgt_dram", &["%w_rows", "%b_slice"])
+                    .push("FlexASR_ILA.wgt_dma", &["%tile_slot"]);
             } else {
                 if ti == 0 {
                     asm.push("FlexASR_ILA.write_v", &["%input"]);
@@ -685,12 +700,17 @@ impl FlexAsr {
     /// fingerprinted bursts and every per-step trigger issues a cheap
     /// [`fx::DMA_CTRL`] copy into the PE buffer — the DMA/scratchpad
     /// reuse of real driver stacks, which removes the ~`t`× redundant
-    /// weight traffic the previous lowering paid. (Under a persistent
-    /// engine the staging bursts themselves dedup across calls, so
-    /// repeat evaluations re-stream only the input sequence.) Tile sets
-    /// beyond the DRAM fall back to per-step streaming, with the tile
-    /// bursts `Arc`-shared across steps so they are at least encoded
-    /// only once host-side.
+    /// weight traffic the previous lowering paid. Each tile's staging
+    /// burst rides in the step-0 invocation that first consumes it
+    /// (stage phase before trigger phase), so a persistent engine can
+    /// prefetch tile N+1's staging while tile N's trigger is in flight
+    /// — and the engine pages the DRAM by burst fingerprint
+    /// ([`paging::PageTable`], LRU eviction by region, DMA sources
+    /// remapped at play time), so staging bursts dedup across calls and
+    /// repeat evaluations re-stream only the input sequence. Tile sets
+    /// beyond [`FlexAsr::dram_budget`] fall back to per-step streaming,
+    /// with the tile bursts `Arc`-shared across steps so they are at
+    /// least encoded only once host-side.
     ///
     /// Bit-exactness with the fast path is engineered via a **bias
     /// schedule**: the driver mirrors the recurrence host-side
@@ -760,29 +780,20 @@ impl FlexAsr {
             dram_off += align16(tile_len) as usize;
             lo += r;
         }
-        let use_dram = dram_off <= fx::WGT_DRAM_SIZE;
+        let use_dram = dram_off <= self.dram_budget.min(fx::WGT_DRAM_SIZE);
 
         let mut invocations = Vec::new();
-        // staging: the sequence plus AF8 zero codes for h0/c0, and (on
-        // the DRAM path) every weight tile exactly once
+        // staging: the sequence plus AF8 zero codes for h0/c0. On the
+        // DRAM path each weight tile's burst instead rides in the step-0
+        // invocation that first consumes it (prefetchable stage phase).
         let zeros = vec![0x80u8; align16(h) as usize];
-        let mut bursts = vec![
+        let bursts = vec![
             Burst::stage(fx::GB_BASE, &xc),
             Burst::stage(fx::GB_BASE + h_base as u64, &zeros),
             Burst::stage(fx::GB_BASE + c_base as u64, &zeros),
         ];
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x_seq", "%h0", "%c0"]);
-        if use_dram {
-            for &(tlo, r, wgt2, bias_b, tile_len, doff) in &tiles {
-                let mut buf = vec![0u8; tile_len];
-                buf[..r * e].copy_from_slice(&wic[tlo * e..(tlo + r) * e]);
-                buf[wgt2..wgt2 + r * h].copy_from_slice(&whc[tlo * h..(tlo + r) * h]);
-                buf[bias_b..].copy_from_slice(&bc[tlo..tlo + r]);
-                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
-            }
-            asm.push("FlexASR_ILA.write_wgt_dram", &["%gate_tiles"]);
-        }
         invocations.push(LoweredInvocation {
             target: Target::FlexAsr,
             asm,
@@ -817,6 +828,18 @@ impl FlexAsr {
                 let mut bursts = Vec::new();
                 let mut cmds = Vec::new();
                 if use_dram {
+                    if step == 0 {
+                        // this tile's one fingerprinted DRAM burst: the
+                        // stage phase of the invocation, issued ahead of
+                        // the previous tile's in-flight trigger by the
+                        // engine's prefetch loop
+                        let mut buf = vec![0u8; tile_len];
+                        buf[..r * e].copy_from_slice(&wic[tlo * e..(tlo + r) * e]);
+                        buf[wgt2..wgt2 + r * h]
+                            .copy_from_slice(&whc[tlo * h..(tlo + r) * h]);
+                        buf[bias_b..].copy_from_slice(&bc[tlo..tlo + r]);
+                        bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
+                    }
                     cmds.push(Cmd::write_u64(
                         fx::DMA_CTRL,
                         fx::dma_word(doff, 0, tile_len),
@@ -857,6 +880,9 @@ impl FlexAsr {
 
                 let mut asm = Fragment::new();
                 if use_dram {
+                    if step == 0 {
+                        asm.push("FlexASR_ILA.write_wgt_dram", &["%gate_tile"]);
+                    }
                     asm.push("FlexASR_ILA.wgt_dma", &["%tile_slot"]);
                 } else {
                     asm.push(

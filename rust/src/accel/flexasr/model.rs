@@ -27,19 +27,24 @@ pub const GB_SIZE: usize = 0x1_0000;
 pub const PE_WGT_BASE: u64 = 0xA060_0000;
 /// PE weight buffer size in bytes.
 pub const PE_WGT_SIZE: usize = 0x4_0000;
-/// Device-side weight staging DRAM: 8 MiB. The DMA/scratchpad-reuse
+/// Device-side weight staging DRAM: 32 MiB. The DMA/scratchpad-reuse
 /// model of real accelerator stacks (cf. VTA's DRAM→scratchpad loads):
 /// the driver stages each weight tile here **once** over MMIO, then
 /// replays cheap [`DMA_CTRL`] copies into the PE weight buffer per
 /// trigger — instead of re-streaming multi-hundred-KiB tiles across the
-/// interface every LSTM timestep.
+/// interface every LSTM timestep. Sized so the largest Table 1 tile set
+/// (the ~22 MB LSTM-WLM decoder) fits whole; engines additionally page
+/// the DRAM by burst fingerprint (LRU eviction by region — see
+/// `accel::flexasr::paging`), so tile sets ride residency across calls
+/// even when several tenants share the window.
 pub const WGT_DRAM_BASE: u64 = 0xA100_0000;
 /// Weight staging DRAM size in bytes.
-pub const WGT_DRAM_SIZE: usize = 0x80_0000;
-/// Weight DMA doorbell: src DRAM offset (bits 0..24) | dst PE-buffer
-/// offset (bits 24..44) | length in bytes (bits 44..64). Writing it
+pub const WGT_DRAM_SIZE: usize = 0x200_0000;
+/// Weight DMA doorbell: src DRAM offset (bits 0..26) | dst PE-buffer
+/// offset (bits 26..44) | length in bytes (bits 44..64). Writing it
 /// copies `[src, src+len)` of the staging DRAM into `[dst, dst+len)` of
-/// the PE weight buffer.
+/// the PE weight buffer. The 26-bit src field addresses the full 32 MiB
+/// DRAM; 18 bits cover the 256 KiB PE buffer destination.
 pub const DMA_CTRL: u64 = 0xA000_0020;
 /// K (cols, bits 0..16) | M (rows, bits 16..32).
 pub const CFG_LAYER_SIZING: u64 = 0xA040_0010;
@@ -91,8 +96,26 @@ pub const OP_LSTM_ACT: u64 = 8;
 /// Pack a [`DMA_CTRL`] word: copy `len` bytes from staging-DRAM offset
 /// `src` to PE-weight-buffer offset `dst`.
 pub fn dma_word(src: usize, dst: usize, len: usize) -> u64 {
-    debug_assert!(src < (1 << 24) && dst < (1 << 20) && len < (1 << 20));
-    (src as u64) | ((dst as u64) << 24) | ((len as u64) << 44)
+    debug_assert!(src < (1 << 26) && dst < (1 << 18) && len < (1 << 20));
+    (src as u64) | ((dst as u64) << 26) | ((len as u64) << 44)
+}
+
+/// Split a [`DMA_CTRL`] word back into `(src, dst, len)` — the inverse
+/// of [`dma_word`]. Engines use this to remap descriptor sources when
+/// the paged staging DRAM places a tile at a physical region different
+/// from the logical offset the lowering assumed.
+pub fn dma_fields(w: u64) -> (usize, usize, usize) {
+    (
+        (w & 0x3FF_FFFF) as usize,
+        ((w >> 26) & 0x3_FFFF) as usize,
+        (w >> 44) as usize,
+    )
+}
+
+/// True when `[base, base+len)` lies entirely inside the weight-staging
+/// DRAM MMIO window.
+pub fn in_wgt_dram(base: u64, len: usize) -> bool {
+    base >= WGT_DRAM_BASE && base + len as u64 <= WGT_DRAM_BASE + WGT_DRAM_SIZE as u64
 }
 
 // ----- AdaptivFloat byte codec -----------------------------------------
@@ -328,12 +351,7 @@ pub fn build_ila(dev: FlexAsr) -> Ila {
         "wgt_dma",
         |c, _| c.is_write && c.addr == DMA_CTRL,
         |c, s| {
-            let w = c.data_u64();
-            let (src, dst, len) = (
-                (w & 0xFF_FFFF) as usize,
-                ((w >> 24) & 0xF_FFFF) as usize,
-                (w >> 44) as usize,
-            );
+            let (src, dst, len) = dma_fields(c.data_u64());
             if src + len > WGT_DRAM_SIZE {
                 return Err(format!("DMA source [{src}, {}) exceeds DRAM", src + len));
             }

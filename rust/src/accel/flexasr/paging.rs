@@ -1,0 +1,287 @@
+//! Page-table allocator for the FlexASR weight-staging DRAM.
+//!
+//! The lowering emits staging bursts at *logical* DRAM offsets (a fresh
+//! cursor per program, so [`crate::codegen::execute_program`] stays valid
+//! standalone). A persistent engine instead treats the DRAM as a paged
+//! cache: each staged burst's fingerprint maps to a **region** — a
+//! 16-byte-aligned `[off, off+len)` physical range — allocated first-fit
+//! and evicted **LRU by region** when the DRAM fills. A tile set that
+//! recurs across calls (the LSTM-WLM decoder's 83 tiles, a pooled
+//! tenant's gate matrix) then rides residency instead of re-streaming,
+//! and the engine remaps every `DMA_CTRL` replay from the logical source
+//! offset to the page's physical one.
+//!
+//! Pages touched by the program currently being planned are **pinned**:
+//! planning walks every staged burst of a program before any command
+//! runs, so an allocation made for tile 40 can never evict the page tile
+//! 3 was just placed on. If first-fit cannot place a tile even after
+//! evicting every unpinned page (fragmentation against pins), the engine
+//! flushes the whole table once and re-plans from empty; if the working
+//! set exceeds capacity even then, the **whole program** streams unpaged
+//! at its logical offsets (never a paged/unpaged mix — slot-rounded
+//! physical offsets can exceed logical ones, so a mixed plan could let
+//! an unpaged burst clobber a live page).
+
+/// One resident region of the staging DRAM.
+#[derive(Debug, Clone)]
+struct Page {
+    /// Fingerprint of the burst whose bytes this region holds.
+    fp: u64,
+    /// Physical byte offset of the region (16-aligned).
+    off: usize,
+    /// Region length in bytes (the burst's staged length).
+    len: usize,
+    /// LRU stamp: bumped on every lookup/alloc touch.
+    stamp: u64,
+    /// Pinned pages belong to the program currently being planned and
+    /// are never eviction candidates.
+    pinned: bool,
+}
+
+/// LRU page table over one device's weight-staging DRAM.
+///
+/// Tracks which burst fingerprints are resident and where; does **not**
+/// hold the bytes themselves (those live in the simulator's `wgt_dram`
+/// memory, preserved across resets via the engine's keep-ranges).
+#[derive(Debug, Clone)]
+pub struct PageTable {
+    capacity: usize,
+    pages: Vec<Page>,
+    clock: u64,
+    evictions: u64,
+    flushes: u64,
+}
+
+impl PageTable {
+    /// A table managing `capacity` bytes of staging DRAM.
+    pub fn new(capacity: usize) -> Self {
+        PageTable {
+            capacity,
+            pages: Vec::new(),
+            clock: 0,
+            evictions: 0,
+            flushes: 0,
+        }
+    }
+
+    /// Managed capacity in bytes.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Number of resident pages.
+    pub fn len(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// True when no pages are resident.
+    pub fn is_empty(&self) -> bool {
+        self.pages.is_empty()
+    }
+
+    /// Total bytes held by resident pages (always ≤ `capacity`).
+    pub fn live_bytes(&self) -> usize {
+        self.pages.iter().map(|p| Self::slot(p.len)).sum()
+    }
+
+    /// Pages evicted (LRU, individually) so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Whole-table flushes performed so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+
+    /// True when `fp` is resident.
+    pub fn contains(&self, fp: u64) -> bool {
+        self.pages.iter().any(|p| p.fp == fp)
+    }
+
+    /// Fingerprints of all resident pages, in no particular order.
+    pub fn resident_fps(&self) -> Vec<u64> {
+        self.pages.iter().map(|p| p.fp).collect()
+    }
+
+    fn slot(len: usize) -> usize {
+        (len + 15) & !15
+    }
+
+    fn touch(clock: &mut u64, page: &mut Page) {
+        *clock += 1;
+        page.stamp = *clock;
+        page.pinned = true;
+    }
+
+    /// Look up a resident fingerprint. On a hit the page is LRU-touched
+    /// and pinned for the current planning pass; returns its physical
+    /// byte offset.
+    pub fn lookup(&mut self, fp: u64) -> Option<usize> {
+        let clock = &mut self.clock;
+        self.pages.iter_mut().find(|p| p.fp == fp).map(|p| {
+            Self::touch(clock, p);
+            p.off
+        })
+    }
+
+    /// First-fit hole of at least `need` bytes among the current pages,
+    /// or `None` if no gap (including the tail) is large enough.
+    fn find_hole(&self, need: usize) -> Option<usize> {
+        let mut occupied: Vec<(usize, usize)> = self
+            .pages
+            .iter()
+            .map(|p| (p.off, p.off + Self::slot(p.len)))
+            .collect();
+        occupied.sort_unstable();
+        let mut cursor = 0usize;
+        for (lo, hi) in occupied {
+            if lo.saturating_sub(cursor) >= need {
+                return Some(cursor);
+            }
+            cursor = cursor.max(hi);
+        }
+        if self.capacity.saturating_sub(cursor) >= need {
+            Some(cursor)
+        } else {
+            None
+        }
+    }
+
+    /// Allocate a region for `fp` (`len` bytes, rounded up to the
+    /// 16-byte slot the burst streams). Evicts LRU unpinned pages until
+    /// a first-fit hole exists; the new page is touched and pinned.
+    ///
+    /// Returns `(physical offset, fingerprints evicted to make room)`,
+    /// or `None` when no placement is possible even with every unpinned
+    /// page evicted — the caller then flushes and re-plans, or streams
+    /// the burst unpaged.
+    pub fn alloc(&mut self, fp: u64, len: usize) -> Option<(usize, Vec<u64>)> {
+        let need = Self::slot(len);
+        if need > self.capacity {
+            return None;
+        }
+        let mut evicted = Vec::new();
+        loop {
+            if let Some(off) = self.find_hole(need) {
+                self.clock += 1;
+                self.pages.push(Page {
+                    fp,
+                    off,
+                    len,
+                    stamp: self.clock,
+                    pinned: true,
+                });
+                return Some((off, evicted));
+            }
+            // evict the least-recently-used unpinned page and retry
+            let victim = self
+                .pages
+                .iter()
+                .enumerate()
+                .filter(|(_, p)| !p.pinned)
+                .min_by_key(|(_, p)| p.stamp)
+                .map(|(i, _)| i)?;
+            let gone = self.pages.swap_remove(victim);
+            self.evictions += 1;
+            evicted.push(gone.fp);
+        }
+    }
+
+    /// Clear all pins (start of a planning pass).
+    pub fn unpin_all(&mut self) {
+        for p in &mut self.pages {
+            p.pinned = false;
+        }
+    }
+
+    /// Drop every page, returning the evicted fingerprints — the
+    /// fragmentation escape hatch before a clean re-plan.
+    pub fn flush(&mut self) -> Vec<u64> {
+        self.flushes += 1;
+        self.evictions += self.pages.len() as u64;
+        self.pages.drain(..).map(|p| p.fp).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_is_aligned_and_bounded_by_capacity() {
+        let mut pt = PageTable::new(1024);
+        let (a, ev) = pt.alloc(1, 100).unwrap();
+        assert_eq!((a, ev.len()), (0, 0));
+        let (b, _) = pt.alloc(2, 33).unwrap();
+        assert_eq!(b % 16, 0);
+        assert_eq!(b, 112, "first-fit after the 100→112 slot");
+        assert!(pt.live_bytes() <= pt.capacity());
+        assert!(pt.alloc(3, 2000).is_none(), "larger than capacity");
+    }
+
+    #[test]
+    fn lru_eviction_by_region_prefers_stalest_unpinned() {
+        let mut pt = PageTable::new(64);
+        pt.alloc(1, 16).unwrap();
+        pt.alloc(2, 16).unwrap();
+        pt.alloc(3, 16).unwrap();
+        pt.alloc(4, 16).unwrap();
+        pt.unpin_all();
+        assert!(pt.lookup(1).is_some(), "touch 1 so 2 is now LRU");
+        pt.unpin_all();
+        let (_, evicted) = pt.alloc(5, 16).unwrap();
+        assert_eq!(evicted, vec![2], "the untouched oldest page goes first");
+        assert!(pt.contains(1) && pt.contains(3) && pt.contains(4));
+        assert_eq!(pt.evictions(), 1);
+    }
+
+    #[test]
+    fn pinned_pages_survive_and_alloc_fails_rather_than_evict_them() {
+        let mut pt = PageTable::new(32);
+        pt.alloc(1, 16).unwrap(); // pinned by alloc
+        pt.alloc(2, 16).unwrap();
+        // everything pinned: no hole, no victim
+        assert!(pt.alloc(3, 16).is_none());
+        pt.unpin_all();
+        let (_, evicted) = pt.alloc(3, 16).unwrap();
+        assert_eq!(evicted.len(), 1);
+    }
+
+    #[test]
+    fn lookup_hits_touch_and_misses_dont() {
+        let mut pt = PageTable::new(64);
+        let (off, _) = pt.alloc(7, 40).unwrap();
+        assert_eq!(pt.lookup(7), Some(off));
+        assert_eq!(pt.lookup(8), None);
+        assert_eq!(pt.len(), 1);
+    }
+
+    #[test]
+    fn flush_returns_everything_and_empties_the_table() {
+        let mut pt = PageTable::new(64);
+        pt.alloc(1, 16).unwrap();
+        pt.alloc(2, 16).unwrap();
+        let mut fps = pt.flush();
+        fps.sort_unstable();
+        assert_eq!(fps, vec![1, 2]);
+        assert!(pt.is_empty());
+        assert_eq!(pt.flushes(), 1);
+        assert_eq!(pt.live_bytes(), 0);
+    }
+
+    #[test]
+    fn eviction_loop_frees_enough_contiguous_space() {
+        let mut pt = PageTable::new(64);
+        pt.alloc(1, 16).unwrap();
+        pt.alloc(2, 16).unwrap();
+        pt.alloc(3, 16).unwrap();
+        pt.alloc(4, 16).unwrap();
+        pt.unpin_all();
+        // a 48-byte tile must evict several adjacent LRU pages
+        let (off, evicted) = pt.alloc(5, 48).unwrap();
+        assert_eq!(off % 16, 0);
+        assert_eq!(evicted.len(), 3);
+        assert!(pt.live_bytes() <= pt.capacity());
+    }
+}

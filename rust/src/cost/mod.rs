@@ -234,6 +234,21 @@ pub enum Event {
         /// Payload bytes that did *not* cross the bus.
         bytes: u64,
     },
+    /// An operand burst streamed **ahead of trigger**: the engine staged
+    /// tile N+1's operands while tile N's trigger was still in flight,
+    /// so up to `overlap_cycles` of the beat cost hides under compute.
+    /// The overlap credit is bounded by the in-flight trigger's modeled
+    /// latency — the engine budgets it per trigger and never credits
+    /// more than one trigger's worth of hiding per invocation.
+    PrefetchedStage {
+        /// Enabled payload bytes put on the bus.
+        bytes: u64,
+        /// 16-byte beats streamed.
+        beats: u64,
+        /// Cycles of the beat cost hidden under the in-flight trigger
+        /// (≤ `beats × mmio_beat_cycles` after costing saturates).
+        overlap_cycles: u64,
+    },
     /// A `DMA_CTRL` on-device copy (staging DRAM → PE weight buffer).
     DmaReplay {
         /// Bytes copied on-device.
@@ -324,6 +339,13 @@ impl CostModel {
                 c.transfer = beats * self.mmio_beat_cycles;
             }
             Event::DedupSkip { .. } => {}
+            Event::PrefetchedStage { beats, overlap_cycles, .. } => {
+                // the beats still cross the bus, but the part that
+                // overlapped an in-flight trigger is already paid for by
+                // that trigger's compute cycles
+                c.transfer =
+                    (beats * self.mmio_beat_cycles).saturating_sub(overlap_cycles);
+            }
             Event::DmaReplay { bytes } => {
                 c.transfer = div_ceil(bytes, self.dma_bytes_per_cycle);
             }
@@ -442,6 +464,10 @@ pub struct OpCycles {
     pub cycles: CycleBreakdown,
     /// Operand bytes streamed over MMIO.
     pub staged_bytes: u64,
+    /// Of [`Self::staged_bytes`], bytes streamed ahead of trigger
+    /// (overlapped with an in-flight trigger — a subset, not an
+    /// addition).
+    pub prefetched_bytes: u64,
     /// Operand bytes skipped as already device-resident.
     pub dedup_bytes: u64,
     /// Bytes copied by on-device `DMA_CTRL` replays.
@@ -460,6 +486,7 @@ impl OpCycles {
             executions: 0,
             cycles: CycleBreakdown::default(),
             staged_bytes: 0,
+            prefetched_bytes: 0,
             dedup_bytes: 0,
             dma_bytes: 0,
             read_bytes: 0,
@@ -471,6 +498,7 @@ impl OpCycles {
         self.executions += o.executions;
         self.cycles += o.cycles;
         self.staged_bytes += o.staged_bytes;
+        self.prefetched_bytes += o.prefetched_bytes;
         self.dedup_bytes += o.dedup_bytes;
         self.dma_bytes += o.dma_bytes;
         self.read_bytes += o.read_bytes;
@@ -484,6 +512,7 @@ impl OpCycles {
             executions: self.executions.saturating_sub(base.executions),
             cycles: self.cycles.saturating_sub(&base.cycles),
             staged_bytes: self.staged_bytes.saturating_sub(base.staged_bytes),
+            prefetched_bytes: self.prefetched_bytes.saturating_sub(base.prefetched_bytes),
             dedup_bytes: self.dedup_bytes.saturating_sub(base.dedup_bytes),
             dma_bytes: self.dma_bytes.saturating_sub(base.dma_bytes),
             read_bytes: self.read_bytes.saturating_sub(base.read_bytes),
@@ -495,6 +524,7 @@ impl OpCycles {
         self.executions == 0
             && self.cycles.total() == 0
             && self.staged_bytes == 0
+            && self.prefetched_bytes == 0
             && self.dedup_bytes == 0
             && self.dma_bytes == 0
             && self.read_bytes == 0
@@ -596,6 +626,10 @@ impl Timeline {
         self.totals += cost;
         match ev {
             Event::Stage { bytes, .. } => entry.staged_bytes += bytes,
+            Event::PrefetchedStage { bytes, .. } => {
+                entry.staged_bytes += bytes;
+                entry.prefetched_bytes += bytes;
+            }
             Event::DedupSkip { bytes } => entry.dedup_bytes += bytes,
             Event::DmaReplay { bytes } => entry.dma_bytes += bytes,
             Event::Trigger { .. } => entry.triggers += 1,
@@ -768,6 +802,13 @@ mod tests {
             .build();
         assert_eq!(m.cycles(&Event::Stage { bytes: 22, beats: 2 }).transfer, 8);
         assert_eq!(m.cycles(&Event::DedupSkip { bytes: 1 << 20 }).total(), 0);
+        // prefetched stage: overlap credit subtracts from the beat cost...
+        let pf = m.cycles(&Event::PrefetchedStage { bytes: 160, beats: 10, overlap_cycles: 30 });
+        assert_eq!((pf.transfer, pf.compute, pf.overhead), (10, 0, 0));
+        // ...and saturates when the trigger fully hides the transfer
+        let hidden =
+            m.cycles(&Event::PrefetchedStage { bytes: 16, beats: 1, overlap_cycles: 999 });
+        assert_eq!(hidden.total(), 0);
         // 33 bytes over a 32 B/cycle DMA: ceil → 2 cycles
         assert_eq!(m.cycles(&Event::DmaReplay { bytes: 33 }).transfer, 2);
         assert_eq!(m.cycles(&Event::Control { beats: 3 }).overhead, 12);
@@ -798,7 +839,11 @@ mod tests {
         let mut tl = Timeline::new();
         tl.begin_op(Target::FlexAsr, "fasr_linear");
         tl.record(Event::Stage { bytes: 160, beats: 10 });
+        tl.record(Event::PrefetchedStage { bytes: 40, beats: 3, overlap_cycles: 6 });
         tl.record(Event::Trigger { family: OpFamily::Linear });
+        let linear = tl.per_op()[0].clone();
+        assert_eq!(linear.staged_bytes, 200, "prefetched bytes also count as staged");
+        assert_eq!(linear.prefetched_bytes, 40);
         let snap = tl.snapshot();
 
         tl.begin_op(Target::Vta, "vta_gemm");

@@ -34,8 +34,10 @@
 
 use super::pool::{Device, DevicePool, Resident};
 use super::{AcceleratorRegistry, DesignRev};
+use crate::accel::flexasr::model as fx;
+use crate::accel::flexasr::paging::PageTable;
 use crate::accel::Accelerator;
-use crate::codegen::{self, LoweredProgram};
+use crate::codegen::{self, Burst, LoweredInvocation, LoweredProgram};
 use crate::cost::{self, CostTable, CycleBreakdown, Event, OpFamily, Timeline};
 use crate::ila::sim::IlaSim;
 use crate::ila::{Cmd, Ila};
@@ -293,6 +295,168 @@ fn invalidate_hazards(resident: &mut Vec<Resident>, model: &Ila, cmds: &[Cmd]) {
     }
 }
 
+/// Where each of a program's weight-staging-DRAM bursts lands, decided
+/// by the **stage-planning pass** before any command runs (see
+/// [`crate::accel::flexasr::paging`]). Keyed by `(invocation index,
+/// burst index)`; the value is `(physical page offset, already
+/// resident)` — `None` for the physical offset means the whole program
+/// fell back to unpaged direct streaming at logical offsets.
+struct PagingPlan {
+    places: HashMap<(usize, usize), (Option<usize>, bool)>,
+    /// `(logical_lo, logical_hi, phys_lo)` triples for rewriting
+    /// `DMA_CTRL` source offsets from the lowering's logical cursor to
+    /// the allocated page.
+    remap: Vec<(usize, usize, usize)>,
+}
+
+impl PagingPlan {
+    fn empty() -> Self {
+        PagingPlan { places: HashMap::new(), remap: Vec::new() }
+    }
+
+    /// Physical source offset for a `DMA_CTRL` copy of `[src, src+len)`,
+    /// when some page covers that logical range.
+    fn remap_src(&self, src: usize, len: usize) -> Option<usize> {
+        self.remap
+            .iter()
+            .find_map(|&(llo, lhi, plo)| {
+                (src >= llo && src + len <= lhi).then(|| plo + (src - llo))
+            })
+    }
+
+    /// The memory range burst `key` actually occupies: its page when
+    /// paged, else its logical `[lo, hi)`.
+    fn phys_range(&self, key: &(usize, usize), lo: usize, hi: usize) -> (usize, usize) {
+        match self.places.get(key) {
+            Some(&(Some(phys), _)) => (phys, phys + (hi - lo)),
+            _ => (lo, hi),
+        }
+    }
+}
+
+/// The stage-planning pass: walk every DRAM-window stage burst of the
+/// program and decide its placement in the device's [`PageTable`] before
+/// a single command runs. Recurring fingerprints keep their pages
+/// (LRU-touched and pinned); new ones allocate, evicting LRU unpinned
+/// pages — whose residency entries are purged here, so the affinity
+/// scores in [`super::pool`] stop counting them. If placement fails
+/// (fragmentation against this program's own pins), the table is
+/// flushed once and planning restarts from empty; if even an empty
+/// table cannot hold the working set, the whole program streams unpaged
+/// at the lowering's logical offsets (mutually disjoint by
+/// construction) with no residency claims.
+fn plan_paging(
+    model: &Ila,
+    resident: &mut Vec<Resident>,
+    pages: &mut PageTable,
+    prog: &LoweredProgram,
+) -> PagingPlan {
+    // the program's DRAM-window stage bursts, in streaming order:
+    // (key, fingerprint, mem, logical_lo, len)
+    let mut dram: Vec<((usize, usize), u64, String, usize, usize)> = Vec::new();
+    for (i, inv) in prog.invocations.iter().enumerate() {
+        for (bi, b) in inv.bursts.iter().enumerate() {
+            let Some(r) = &b.region else { continue };
+            if !fx::in_wgt_dram(r.base, r.len) {
+                continue;
+            }
+            if let Some((mem, lo, hi)) = model.staging_for(r.base, r.len) {
+                dram.push(((i, bi), b.fingerprint, mem.to_string(), lo, hi - lo));
+            }
+        }
+    }
+    if dram.is_empty() {
+        return PagingPlan::empty();
+    }
+    let dram_mem = dram[0].2.clone();
+    pages.unpin_all();
+    for _attempt in 0..2 {
+        if let Some(plan) = try_place(resident, pages, &dram) {
+            return plan;
+        }
+        pages.flush();
+        resident.retain(|r| r.mem != dram_mem);
+    }
+    // working set beyond even an empty table: stream everything unpaged
+    let mut plan = PagingPlan::empty();
+    for (key, ..) in &dram {
+        plan.places.insert(*key, (None, false));
+    }
+    plan
+}
+
+/// One placement attempt over the current table state; `None` when some
+/// burst cannot be placed even after evicting every unpinned page.
+fn try_place(
+    resident: &mut Vec<Resident>,
+    pages: &mut PageTable,
+    dram: &[((usize, usize), u64, String, usize, usize)],
+) -> Option<PagingPlan> {
+    let mut plan = PagingPlan::empty();
+    for (key, fp, mem, lo, len) in dram {
+        let (off, hit) = match pages.lookup(*fp) {
+            Some(off) => {
+                // page hit: resident only if the bytes also survived
+                // (hazard invalidation may have dropped the claim)
+                let hit = resident.iter().any(|r| {
+                    &r.mem == mem && r.lo == off && r.hi == off + len && r.fp == *fp
+                });
+                (off, hit)
+            }
+            None => {
+                let (off, evicted) = pages.alloc(*fp, *len)?;
+                if !evicted.is_empty() {
+                    resident.retain(|r| &r.mem != mem || !evicted.contains(&r.fp));
+                }
+                (off, false)
+            }
+        };
+        plan.places.insert(*key, (Some(off), hit));
+        plan.remap.push((*lo, lo + len, off));
+    }
+    Some(plan)
+}
+
+/// The memory ranges an invocation's staged bursts occupy (page-mapped),
+/// i.e. what its in-flight trigger may still be reading.
+fn staged_ranges(
+    model: &Ila,
+    plan: &PagingPlan,
+    inv_idx: usize,
+    inv: &LoweredInvocation,
+) -> Vec<(String, usize, usize)> {
+    inv.bursts
+        .iter()
+        .enumerate()
+        .filter_map(|(bi, b)| {
+            let r = b.region.as_ref()?;
+            let (mem, lo, hi) = model.staging_for(r.base, r.len)?;
+            let (plo, phi) = plan.phys_range(&(inv_idx, bi), lo, hi);
+            Some((mem.to_string(), plo, phi))
+        })
+        .collect()
+}
+
+/// Is it safe to stream a staged burst into `mem[lo..hi)` while the
+/// current invocation's trigger is still in flight? Refused when `mem`
+/// is the target of any declared hazard doorbell — the in-flight
+/// invocation's `DMA_CTRL` replay writes that memory, the
+/// write-after-read the [`Ila::hazard`] declaration makes explicit (this
+/// serializes the direct pe-weight path) — or when the in-flight
+/// invocation itself staged an overlapping range of the same memory.
+fn prefetch_safe(
+    model: &Ila,
+    mem: &str,
+    lo: usize,
+    hi: usize,
+    inflight: &[(String, usize, usize)],
+) -> bool {
+    if model.hazards.iter().any(|(_, hmem)| hmem == mem) {
+        return false;
+    }
+    !inflight.iter().any(|(m, ilo, ihi)| m == mem && *ilo < hi && lo < *ihi)
+}
+
 /// The per-worker execution engine: routes accelerator invocations to
 /// the backend's path(s), owns lazily-built per-target [`IlaSim`]
 /// instances, and accumulates the cross-check [`FidelityReport`].
@@ -346,6 +510,9 @@ pub struct ExecEngine<'r> {
     bytes_streamed: u64,
     bursts_deduped: u64,
     staged_streamed: u64,
+    prefetched: u64,
+    prefetch: bool,
+    dram_capacity: usize,
     timeline: Timeline,
 }
 
@@ -393,8 +560,34 @@ impl<'r> ExecEngine<'r> {
             bytes_streamed: 0,
             bursts_deduped: 0,
             staged_streamed: 0,
+            prefetched: 0,
+            prefetch: true,
+            dram_capacity: fx::WGT_DRAM_SIZE,
             timeline: Timeline::new(),
         }
+    }
+
+    /// Toggle ahead-of-trigger prefetch (on by default): when enabled,
+    /// the engine stages invocation N+1's safe operand bursts while
+    /// invocation N's trigger is still in flight, crediting the overlap
+    /// against the trigger's modeled latency (see
+    /// [`Event::PrefetchedStage`]). Results are bit-identical either
+    /// way — the hazard rule refuses any burst the in-flight invocation
+    /// could still observe — so this is the A/B knob for quantifying
+    /// the overlap win.
+    pub fn with_prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Cap the paged weight-staging DRAM managed per device (clamped to
+    /// the architectural [`fx::WGT_DRAM_SIZE`]; that full size is the
+    /// default). Affects devices built *after* this call — eviction
+    /// tests inject small capacities here to force LRU churn on
+    /// otherwise-comfortable tile sets.
+    pub fn with_dram_capacity(mut self, bytes: usize) -> Self {
+        self.dram_capacity = bytes.min(fx::WGT_DRAM_SIZE);
+        self
     }
 
     /// True when this engine draws devices from a shared [`DevicePool`].
@@ -477,6 +670,15 @@ impl<'r> ExecEngine<'r> {
     /// [`Self::bursts_deduped`] this gives the residency hit rate.
     pub fn staged_streamed(&self) -> u64 {
         self.staged_streamed
+    }
+
+    /// Staged bursts streamed **ahead of trigger** — prefetched while a
+    /// previous invocation's trigger was still in flight (a subset of
+    /// [`Self::staged_streamed`]). Zero when prefetch is disabled via
+    /// [`Self::with_prefetch`] or when the hazard rule serialized every
+    /// candidate (e.g. the direct pe-weight staging path).
+    pub fn prefetched_stages(&self) -> u64 {
+        self.prefetched
     }
 
     /// Fraction of staged operand bursts served from device residency:
@@ -680,8 +882,11 @@ impl<'r> ExecEngine<'r> {
             // checkout carries the program's staged-burst fingerprints so
             // the arbiter can route to the device with the best residency
             let fps = staged_fingerprints(prog);
+            let cap = self.dram_capacity;
             let mut lease = pool
-                .checkout(accel.target(), &fps, || IlaSim::new(accel.build_ila()))
+                .checkout(accel.target(), &fps, || {
+                    Device::with_dram_capacity(IlaSim::new(accel.build_ila()), cap)
+                })
                 .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))?;
             // the lease's Drop returns the device — residency intact —
             // whether the program succeeds or errors; the modeled cycles
@@ -702,7 +907,7 @@ impl<'r> ExecEngine<'r> {
             Some(dev) => dev,
             None => {
                 self.sims_built += 1;
-                Device::new(IlaSim::new(accel.build_ila()))
+                Device::with_dram_capacity(IlaSim::new(accel.build_ila()), self.dram_capacity)
             }
         };
         let out = self.play_program(&mut dev, op, prog);
@@ -712,13 +917,28 @@ impl<'r> ExecEngine<'r> {
         out
     }
 
-    /// Play a lowered program on a device — one residency-keeping dirty
-    /// reset up front, then its invocations run on shared device state
-    /// (tiles reuse staged operands) — decode and stitch the result.
-    /// Staged bursts that are still device-resident from an earlier
-    /// program (same staging range, same content fingerprint) are
-    /// skipped instead of re-streamed; the fingerprint check makes this
-    /// safe no matter which engine last used a pooled device.
+    /// Play a lowered program on a device, in two phases per the
+    /// software/hardware interface contract:
+    ///
+    /// 1. **Stage planning** — [`plan_paging`] walks every DRAM-window
+    ///    stage burst and binds it to a page of the device's
+    ///    [`PageTable`] (recurring fingerprints keep their pages; new
+    ///    ones allocate, evicting LRU); then one residency-keeping dirty
+    ///    reset rewinds everything else the last program touched.
+    /// 2. **Execution** — invocations run in order on shared device
+    ///    state. Staged bursts stream to their planned pages (`DMA_CTRL`
+    ///    sources rewritten from logical to physical offsets), and
+    ///    bursts whose page still holds bit-identical resident bytes are
+    ///    skipped entirely. After each invocation's trigger fires, the
+    ///    engine **prefetches** the next invocation's hazard-free staged
+    ///    bursts while the trigger is modeled in flight (double-buffered
+    ///    staging: the next tile's page is disjoint from every page the
+    ///    in-flight trigger can read), crediting the overlap in the
+    ///    timeline via [`Event::PrefetchedStage`].
+    ///
+    /// The fingerprint checks make residency safe no matter which engine
+    /// last used a pooled device, and the hazard rule ([`prefetch_safe`])
+    /// keeps prefetched execution bit-identical to serialized execution.
     fn play_program(
         &mut self,
         dev: &mut Device,
@@ -727,8 +947,12 @@ impl<'r> ExecEngine<'r> {
     ) -> Result<Tensor, EvalError> {
         let head = op.head();
         let family = OpFamily::of_head(&head);
-        self.timeline.begin_op(prog.target(), &head);
-        let Device { sim, resident } = dev;
+        let target = prog.target();
+        self.timeline.begin_op(target, &head);
+        let Device { sim, resident, pages } = dev;
+        // phase 1: bind every DRAM stage burst to a page (this purges
+        // residency for evicted pages, so the reset below rewinds them)
+        let plan = plan_paging(&sim.model, resident, pages, prog);
         // between-program reset: everything the last program dirtied is
         // rewound EXCEPT ranges whose staged bursts we may reuse
         let keep: Vec<(String, usize, usize)> =
@@ -739,46 +963,45 @@ impl<'r> ExecEngine<'r> {
             bytes: sim.bytes_cleared.saturating_sub(cleared_before),
         });
 
+        // phase 2: execute, staging one invocation ahead of the trigger
+        let n = prog.invocations.len();
+        let mut consumed: Vec<Vec<bool>> =
+            prog.invocations.iter().map(|inv| vec![false; inv.bursts.len()]).collect();
         let mut parts = Vec::new();
-        for inv in &prog.invocations {
-            for burst in &inv.bursts {
-                let staged = burst.region.as_ref().and_then(|r| {
-                    sim.model
-                        .staging_for(r.base, r.len)
-                        .map(|(mem, lo, hi)| (mem.to_string(), lo, hi))
-                });
-                if let Some((mem, lo, hi)) = staged {
-                    if resident.iter().any(|r| {
-                        r.mem == mem && r.lo == lo && r.hi == hi
-                            && r.fp == burst.fingerprint
-                    }) {
-                        // bit-identical burst already device-resident
-                        self.bursts_deduped += 1;
-                        self.timeline.record(Event::DedupSkip {
-                            bytes: burst.payload_bytes(),
-                        });
-                        continue;
-                    }
-                    sim.run(&burst.cmds).map_err(|e| {
-                        EvalError::Op(op.head(), format!("MMIO backend: {e}"))
-                    })?;
-                    self.bytes_streamed += burst.payload_bytes();
-                    self.staged_streamed += 1;
-                    self.timeline.record(Event::Stage {
-                        bytes: burst.payload_bytes(),
-                        beats: burst.cmds.len() as u64,
-                    });
-                    resident.retain(|r| r.mem != mem || r.hi <= lo || r.lo >= hi);
-                    resident.push(Resident { mem, lo, hi, fp: burst.fingerprint });
+        for (i, inv) in prog.invocations.iter().enumerate() {
+            let mut had_control = false;
+            for (bi, burst) in inv.bursts.iter().enumerate() {
+                if consumed[i][bi] {
+                    // already streamed by the previous invocation's
+                    // prefetch window
+                    continue;
+                }
+                let staged = burst
+                    .region
+                    .as_ref()
+                    .and_then(|r| sim.model.staging_for(r.base, r.len))
+                    .is_some();
+                if staged {
+                    self.stage_burst(sim, resident, &plan, op, target, (i, bi), burst, None)?;
                 } else {
-                    // control or unstaged burst: honor residency hazards
-                    // (DMA doorbells, loose writes into staging windows)
-                    invalidate_hazards(resident, &sim.model, &burst.cmds);
-                    sim.run(&burst.cmds).map_err(|e| {
+                    had_control |= burst.region.is_none();
+                    // control or unstaged burst: rewrite DMA_CTRL source
+                    // offsets onto the planned pages, and honor residency
+                    // hazards (DMA doorbells, loose writes into staging
+                    // windows)
+                    let remapped;
+                    let cmds: &[Cmd] = if plan.remap.is_empty() {
+                        &burst.cmds
+                    } else {
+                        remapped = remap_dma_sources(&plan, &burst.cmds);
+                        &remapped
+                    };
+                    invalidate_hazards(resident, &sim.model, cmds);
+                    sim.run(cmds).map_err(|e| {
                         EvalError::Op(op.head(), format!("MMIO backend: {e}"))
                     })?;
                     self.bytes_streamed += burst.payload_bytes();
-                    let (beats, dma) = cost::control_profile(&burst.cmds);
+                    let (beats, dma) = cost::control_profile(cmds);
                     self.timeline.record(Event::Control { beats });
                     if dma > 0 {
                         self.timeline.record(Event::DmaReplay { bytes: dma });
@@ -786,16 +1009,161 @@ impl<'r> ExecEngine<'r> {
                 }
             }
             self.timeline.record(Event::Trigger { family });
-            if let Some(plan) = &inv.read {
+            if self.prefetch && had_control && i + 1 < n {
+                // the trigger is modeled in flight: stage the next
+                // invocation's hazard-free operand bursts now, crediting
+                // up to one trigger latency of overlap
+                let mut budget =
+                    self.timeline.models().get(target).trigger_cycles[family.index()];
+                let inflight = staged_ranges(&sim.model, &plan, i, inv);
+                let next = &prog.invocations[i + 1];
+                for (bi, burst) in next.bursts.iter().enumerate() {
+                    if consumed[i + 1][bi] {
+                        continue;
+                    }
+                    let Some(r) = &burst.region else { continue };
+                    let Some((mem, lo, hi)) = sim
+                        .model
+                        .staging_for(r.base, r.len)
+                        .map(|(m, lo, hi)| (m.to_string(), lo, hi))
+                    else {
+                        continue;
+                    };
+                    let (plo, phi) = plan.phys_range(&(i + 1, bi), lo, hi);
+                    if !prefetch_safe(&sim.model, &mem, plo, phi, &inflight) {
+                        continue;
+                    }
+                    self.stage_burst(
+                        sim,
+                        resident,
+                        &plan,
+                        op,
+                        target,
+                        (i + 1, bi),
+                        burst,
+                        Some(&mut budget),
+                    )?;
+                    consumed[i + 1][bi] = true;
+                }
+            }
+            if let Some(rplan) = &inv.read {
                 parts.push(codegen::read_result(inv, sim).map_err(|e| {
                     EvalError::Op(op.head(), format!("MMIO backend: {e}"))
                 })?);
-                self.timeline.record(Event::Read { bytes: plan.read_bytes() });
+                self.timeline.record(Event::Read { bytes: rplan.read_bytes() });
             }
         }
         codegen::stitch_parts(parts, &prog.stitch)
             .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))
     }
+
+    /// Stream (or dedup-skip) one staged operand burst per the paging
+    /// plan. `budget` is `Some` when this is an ahead-of-trigger
+    /// prefetch: the stream is recorded as [`Event::PrefetchedStage`]
+    /// with overlap credit drawn from (and decremented against) the
+    /// in-flight trigger's remaining latency; dedup skips consume no
+    /// budget.
+    #[allow(clippy::too_many_arguments)]
+    fn stage_burst(
+        &mut self,
+        sim: &mut IlaSim,
+        resident: &mut Vec<Resident>,
+        plan: &PagingPlan,
+        op: &Op,
+        target: Target,
+        key: (usize, usize),
+        burst: &Burst,
+        budget: Option<&mut u64>,
+    ) -> Result<(), EvalError> {
+        let (mem, lo, hi) = {
+            let r = burst.region.as_ref().expect("staged burst carries a region");
+            let (m, lo, hi) = sim
+                .model
+                .staging_for(r.base, r.len)
+                .expect("staged burst maps onto a staging window");
+            (m.to_string(), lo, hi)
+        };
+        // where the burst lands, whether its bytes are already there,
+        // and whether the landing spot is residency-claimable
+        let (plo, phi, hit, claim) = match plan.places.get(&key).copied() {
+            // paged DRAM burst: land on its page
+            Some((Some(phys), hit)) => (phys, phys + (hi - lo), hit, true),
+            // unpaged overflow: stream at the logical offset, claim no
+            // residency (the page table is not tracking these bytes)
+            Some((None, _)) => (lo, hi, false, false),
+            // non-DRAM staging window (pe_weight, direct path): the
+            // pre-paging exact-range fingerprint dedup
+            None => {
+                let hit = resident.iter().any(|r| {
+                    r.mem == mem && r.lo == lo && r.hi == hi && r.fp == burst.fingerprint
+                });
+                (lo, hi, hit, true)
+            }
+        };
+        let bytes = burst.payload_bytes();
+        if hit {
+            self.bursts_deduped += 1;
+            self.timeline.record(Event::DedupSkip { bytes });
+            return Ok(());
+        }
+        // rebase the MMIO addresses when the page landed away from the
+        // lowering's logical cursor
+        let rebased;
+        let cmds: &[Cmd] = if plo == lo {
+            &burst.cmds
+        } else {
+            rebased = burst
+                .cmds
+                .iter()
+                .map(|c| Cmd {
+                    addr: c.addr.wrapping_add(plo as u64).wrapping_sub(lo as u64),
+                    ..c.clone()
+                })
+                .collect::<Vec<_>>();
+            &rebased
+        };
+        sim.run(cmds)
+            .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))?;
+        self.bytes_streamed += bytes;
+        self.staged_streamed += 1;
+        let beats = burst.cmds.len() as u64;
+        match budget {
+            Some(b) => {
+                let cost = beats * self.timeline.models().get(target).mmio_beat_cycles;
+                let overlap = cost.min(*b);
+                *b -= overlap;
+                self.prefetched += 1;
+                self.timeline.record(Event::PrefetchedStage {
+                    bytes,
+                    beats,
+                    overlap_cycles: overlap,
+                });
+            }
+            None => self.timeline.record(Event::Stage { bytes, beats }),
+        }
+        resident.retain(|r| r.mem != mem || r.hi <= plo || r.lo >= phi);
+        if claim {
+            resident.push(Resident { mem, lo: plo, hi: phi, fp: burst.fingerprint });
+        }
+        Ok(())
+    }
+}
+
+/// Rewrite every `DMA_CTRL` descriptor in `cmds` whose logical source
+/// range is covered by a planned page, pointing it at the physical page
+/// offset instead (destination and length are untouched).
+fn remap_dma_sources(plan: &PagingPlan, cmds: &[Cmd]) -> Vec<Cmd> {
+    cmds.iter()
+        .map(|c| {
+            if c.is_write && c.addr == fx::DMA_CTRL {
+                let (src, dst, len) = fx::dma_fields(c.data_u64());
+                if let Some(p) = plan.remap_src(src, len) {
+                    return Cmd::write_u64(fx::DMA_CTRL, fx::dma_word(p, dst, len));
+                }
+            }
+            c.clone()
+        })
+        .collect()
 }
 
 /// Fingerprints of a program's region-mapped (staged) bursts — the
@@ -984,6 +1352,72 @@ mod tests {
         let misses_before = engine.lower_cache_misses();
         engine.execute(&Op::FlexLinear, &[&x, &weights[1], &b]).unwrap().unwrap();
         assert_eq!(engine.lower_cache_misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn prefetch_is_refused_on_the_direct_path_war_hazard() {
+        use crate::accel::flexasr::FlexAsr;
+        let reg = registry(DesignRev::Updated);
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[2, 64], &mut rng, 1.0);
+        let w = Tensor::randn(&[96, 64], &mut rng, 0.3);
+        let b = Tensor::randn(&[96], &mut rng, 0.1);
+        for (accel, label) in [
+            (FlexAsr { dram_budget: 0, ..FlexAsr::original() }, "original"),
+            (FlexAsr { dram_budget: 0, ..FlexAsr::new() }, "updated"),
+        ] {
+            // zero DRAM budget forces the direct path: weight tiles
+            // stage straight into pe_weight, the DMA_CTRL hazard target
+            let prog =
+                accel.lower_linear_for_verify(&x, &w, &b, 32).expect("tiled lowering");
+            assert!(prog.invocations.len() > 1, "{label}: tiling expected");
+            let mut engine = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+            let out = engine.run_lowered(&accel, &Op::FlexLinear, &prog).unwrap();
+            // the WAR rule must refuse every candidate: stage and
+            // trigger stay strictly serialized
+            assert_eq!(engine.prefetched_stages(), 0, "{label}");
+            assert!(engine.staged_streamed() > 0, "{label}");
+            let func = accel.exec_op(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+            assert_eq!(out, func, "{label}: serialized path must stay bit-exact");
+        }
+    }
+
+    #[test]
+    fn dram_path_prefetch_overlaps_and_stays_bit_exact() {
+        use crate::accel::flexasr::FlexAsr;
+        let reg = registry(DesignRev::Updated);
+        let mut rng = Rng::new(32);
+        let x = Tensor::randn(&[2, 64], &mut rng, 1.0);
+        let w = Tensor::randn(&[96, 64], &mut rng, 0.3);
+        let b = Tensor::randn(&[96], &mut rng, 0.1);
+        for (accel, label) in
+            [(FlexAsr::original(), "original"), (FlexAsr::new(), "updated")]
+        {
+            let prog =
+                accel.lower_linear_for_verify(&x, &w, &b, 32).expect("tiled lowering");
+            let tiles = prog.invocations.len() - 1; // minus the input-only invocation
+            assert!(tiles > 1, "{label}: several weight tiles expected");
+            let mut on = ExecEngine::new(&reg, ExecBackend::IlaMmio);
+            let mut off = ExecEngine::new(&reg, ExecBackend::IlaMmio).with_prefetch(false);
+            let a = on.run_lowered(&accel, &Op::FlexLinear, &prog).unwrap();
+            let b2 = off.run_lowered(&accel, &Op::FlexLinear, &prog).unwrap();
+            assert_eq!(a, b2, "{label}: prefetched and serialized runs must agree");
+            // tile N+1's DRAM page is disjoint from everything tile N's
+            // trigger reads, so every tile after the first prefetches
+            assert_eq!(on.prefetched_stages(), tiles as u64 - 1, "{label}");
+            assert_eq!(off.prefetched_stages(), 0, "{label}");
+            assert_eq!(
+                on.bytes_streamed(),
+                off.bytes_streamed(),
+                "{label}: prefetch reorders traffic, never adds any"
+            );
+            assert!(
+                on.modeled_cycles().total() < off.modeled_cycles().total(),
+                "{label}: overlap credit must cut modeled cycles ({} vs {})",
+                on.modeled_cycles().total(),
+                off.modeled_cycles().total()
+            );
+        }
     }
 
     #[test]

@@ -113,6 +113,8 @@ pub struct SessionBuilder {
     extended: bool,
     pool_devices: Option<usize>,
     sched: SchedPolicy,
+    prefetch: bool,
+    dram_capacity: usize,
 }
 
 impl Default for SessionBuilder {
@@ -137,6 +139,8 @@ impl SessionBuilder {
             extended: false,
             pool_devices: None,
             sched: SchedPolicy::Affinity,
+            prefetch: true,
+            dram_capacity: crate::accel::flexasr::model::WGT_DRAM_SIZE,
         }
     }
 
@@ -220,6 +224,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Toggle ahead-of-trigger operand prefetch in the MMIO engines (on
+    /// by default): stage the next invocation's hazard-free bursts while
+    /// the current trigger is modeled in flight, crediting the overlap
+    /// in the modeled-cycle timeline. Results are bit-identical either
+    /// way — turn it off for an A/B cost comparison.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    /// Cap the paged weight-staging DRAM each MMIO device manages
+    /// (clamped to the architectural size, which is also the default).
+    /// Small caps force LRU page eviction on otherwise-comfortable tile
+    /// sets — the concurrency/eviction test harness knob.
+    pub fn dram_capacity(mut self, bytes: usize) -> Self {
+        self.dram_capacity = bytes.min(crate::accel::flexasr::model::WGT_DRAM_SIZE);
+        self
+    }
+
     /// Instantiate the accelerator models once and freeze the session.
     pub fn build(self) -> Session {
         Session {
@@ -233,6 +256,8 @@ impl SessionBuilder {
             backend: self.backend,
             extended: self.extended,
             pool: self.pool_devices.map(|k| Arc::new(DevicePool::new(k, self.sched))),
+            prefetch: self.prefetch,
+            dram_capacity: self.dram_capacity,
         }
     }
 }
@@ -250,6 +275,8 @@ pub struct Session {
     backend: ExecBackend,
     extended: bool,
     pool: Option<Arc<DevicePool>>,
+    prefetch: bool,
+    dram_capacity: usize,
 }
 
 impl Session {
@@ -355,6 +382,8 @@ impl Session {
             track_errors: self.track_errors,
             backend: self.backend,
             pool: self.pool.clone(),
+            prefetch: self.prefetch,
+            dram_capacity: self.dram_capacity,
         }
     }
 }
@@ -617,6 +646,8 @@ pub struct CompiledProgram {
     track_errors: bool,
     backend: ExecBackend,
     pool: Option<Arc<DevicePool>>,
+    prefetch: bool,
+    dram_capacity: usize,
 }
 
 impl CompiledProgram {
@@ -673,12 +704,13 @@ impl CompiledProgram {
     /// the returned engine draws devices from the shared pool instead of
     /// owning private simulators.
     pub fn engine(&self) -> ExecEngine<'_> {
-        match &self.pool {
+        let engine = match &self.pool {
             Some(pool) => {
                 ExecEngine::new_pooled(&self.registry, self.backend, Arc::clone(pool))
             }
             None => ExecEngine::new(&self.registry, self.backend),
-        }
+        };
+        engine.with_prefetch(self.prefetch).with_dram_capacity(self.dram_capacity)
     }
 
     /// The shared device pool this handle's engines draw from (None for

@@ -42,6 +42,7 @@
 //! results are bit-identical whichever device serves a request —
 //! scheduling affects *traffic*, never *values*.
 
+use crate::accel::flexasr::{model as fx, paging::PageTable};
 use crate::ila::sim::IlaSim;
 use crate::ir::Target;
 use std::fmt;
@@ -59,17 +60,33 @@ pub(crate) struct Resident {
     pub(crate) fp: u64,
 }
 
-/// One pooled device: an ILA simulator plus the residency set that
-/// travels with it across checkouts (the whole point of affinity
-/// scheduling — a returned device remembers what is staged on it).
+/// One pooled device: an ILA simulator plus the residency set and the
+/// staging-DRAM page table that travel with it across checkouts (the
+/// whole point of affinity scheduling — a returned device remembers
+/// what is staged on it, and *where* the engine paged it).
 pub(crate) struct Device {
     pub(crate) sim: IlaSim,
     pub(crate) resident: Vec<Resident>,
+    /// Fingerprint-keyed LRU page table over the weight-staging DRAM;
+    /// evicted pages drop out of [`overlap`]'s affinity score with it.
+    pub(crate) pages: PageTable,
 }
 
 impl Device {
     pub(crate) fn new(sim: IlaSim) -> Self {
-        Device { sim, resident: Vec::new() }
+        Self::with_dram_capacity(sim, fx::WGT_DRAM_SIZE)
+    }
+
+    /// A device whose page table manages only `capacity` bytes of the
+    /// staging DRAM — the eviction-pressure injection point for tests
+    /// and capacity sweeps ([`crate::session::SessionBuilder`]'s
+    /// `dram_capacity`).
+    pub(crate) fn with_dram_capacity(sim: IlaSim, capacity: usize) -> Self {
+        Device {
+            sim,
+            resident: Vec::new(),
+            pages: PageTable::new(capacity.min(fx::WGT_DRAM_SIZE)),
+        }
     }
 }
 
@@ -200,9 +217,16 @@ enum GrantKind {
 }
 
 /// How many staged-burst fingerprints of `fps` are currently resident on
-/// `device` — the affinity score.
+/// `device` — the affinity score. DRAM-staged bursts are scored against
+/// the device's **page table** (the authority for what survives LRU
+/// eviction); everything else against the residency set. An evicted page
+/// leaves both, so it stops attracting requests immediately.
 fn overlap(device: &Device, fps: &[u64]) -> usize {
-    fps.iter().filter(|fp| device.resident.iter().any(|r| r.fp == **fp)).count()
+    fps.iter()
+        .filter(|fp| {
+            device.pages.contains(**fp) || device.resident.iter().any(|r| r.fp == **fp)
+        })
+        .count()
 }
 
 /// Pick the idle device for an arriving request: under affinity, the one
@@ -471,13 +495,14 @@ impl DevicePool {
 
     /// Check a device out for `target`, blocking until one is granted.
     /// `fps` are the requesting program's staged-burst fingerprints (the
-    /// affinity score inputs); `build` constructs the simulator when the
-    /// pool reserves new capacity for this request.
+    /// affinity score inputs); `build` constructs the device (simulator
+    /// plus page table, so the caller picks the paged-DRAM capacity)
+    /// when the pool reserves new capacity for this request.
     pub(crate) fn checkout(
         &self,
         target: Target,
         fps: &[u64],
-        build: impl FnOnce() -> IlaSim,
+        build: impl FnOnce() -> Device,
     ) -> Result<DeviceLease, PoolError> {
         let (resp_tx, resp_rx) = mpsc::channel();
         self.req_tx
@@ -489,7 +514,7 @@ impl DevicePool {
             .map_err(|_| PoolError::Closed)?;
         let device = match resp_rx.recv().map_err(|_| PoolError::Closed)? {
             Response::Grant(d) => d,
-            Response::Build => Device::new(build()),
+            Response::Build => build(),
         };
         Ok(DeviceLease {
             device: Some(device),
@@ -571,6 +596,10 @@ mod tests {
         IlaSim::new(Ila::new("toy", st))
     }
 
+    fn toy_dev() -> Device {
+        Device::new(toy_sim())
+    }
+
     fn device_with_fps(fps: &[u64]) -> Device {
         let mut d = Device::new(toy_sim());
         for &fp in fps {
@@ -602,6 +631,16 @@ mod tests {
         let (i, kind) = choose_waiter(&waiting, 0, &dev, SchedPolicy::Affinity).unwrap();
         assert_eq!(i, 2);
         assert!(matches!(kind, GrantKind::Affinity));
+    }
+
+    #[test]
+    fn overlap_scores_paged_fingerprints_until_eviction() {
+        let mut d = toy_dev();
+        d.pages.alloc(42, 64).unwrap();
+        assert_eq!(overlap(&d, &[42, 7]), 1, "paged fp counts toward affinity");
+        let evicted = d.pages.flush();
+        assert_eq!(evicted, vec![42]);
+        assert_eq!(overlap(&d, &[42, 7]), 0, "evicted pages stop scoring");
     }
 
     #[test]
@@ -644,14 +683,14 @@ mod tests {
     #[test]
     fn checkout_builds_up_to_capacity_then_queues() {
         let pool = DevicePool::new(1, SchedPolicy::Affinity);
-        let lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let lease = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         let stats = pool.stats();
         assert_eq!(stats.devices_built, 1);
         assert_eq!(stats.build_grants, 1);
         assert_eq!(stats.checkouts, 1);
         drop(lease);
         // the returned device is granted, not rebuilt
-        let lease2 = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let lease2 = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         let stats = pool.stats();
         assert_eq!(stats.devices_built, 1, "capacity 1 pool must reuse the device");
         assert_eq!(stats.checkouts, 2);
@@ -661,11 +700,11 @@ mod tests {
     #[test]
     fn contended_checkout_blocks_until_return() {
         let pool = Arc::new(DevicePool::new(1, SchedPolicy::Fifo));
-        let lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let lease = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         let p2 = Arc::clone(&pool);
         let waiter = std::thread::spawn(move || {
             // blocks until the main thread drops its lease
-            let l = p2.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+            let l = p2.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
             drop(l);
         });
         std::thread::sleep(Duration::from_millis(20));
@@ -681,12 +720,12 @@ mod tests {
     #[test]
     fn modeled_cycle_accounting_reaches_pool_stats() {
         let pool = Arc::new(DevicePool::new(1, SchedPolicy::Fifo));
-        let mut lease = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let mut lease = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         lease.note_cycles(100);
         lease.note_cycles(23);
         let p2 = Arc::clone(&pool);
         let waiter = std::thread::spawn(move || {
-            let l = p2.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+            let l = p2.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
             drop(l);
         });
         std::thread::sleep(Duration::from_millis(20));
@@ -694,7 +733,7 @@ mod tests {
         waiter.join().unwrap();
         // a further checkout serializes behind the waiter's return on the
         // arbiter's FIFO channel, so the counters below are settled
-        let l = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let l = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         drop(l);
         let s = pool.stats();
         assert_eq!(s.busy_cycles, 123, "only the first lease reported cycles");
@@ -704,9 +743,9 @@ mod tests {
     #[test]
     fn per_target_capacity_is_independent() {
         let pool = DevicePool::new(1, SchedPolicy::Affinity);
-        let a = pool.checkout(Target::FlexAsr, &[], toy_sim).unwrap();
+        let a = pool.checkout(Target::FlexAsr, &[], toy_dev).unwrap();
         // a different target gets its own device without waiting
-        let b = pool.checkout(Target::Vta, &[], toy_sim).unwrap();
+        let b = pool.checkout(Target::Vta, &[], toy_dev).unwrap();
         assert_eq!(pool.stats().devices_built, 2);
         drop(a);
         drop(b);
@@ -715,9 +754,9 @@ mod tests {
     #[test]
     fn stats_classify_grants_exclusively() {
         let pool = DevicePool::new(2, SchedPolicy::Affinity);
-        let a = pool.checkout(Target::FlexAsr, &[1], toy_sim).unwrap();
+        let a = pool.checkout(Target::FlexAsr, &[1], toy_dev).unwrap();
         drop(a);
-        let b = pool.checkout(Target::FlexAsr, &[2], toy_sim).unwrap();
+        let b = pool.checkout(Target::FlexAsr, &[2], toy_dev).unwrap();
         drop(b);
         let s = pool.stats();
         assert_eq!(

@@ -519,9 +519,7 @@ impl<'m> Shadow<'m> {
     /// Replay a `DMA_CTRL` word: weight-DRAM → PE buffer copy, same
     /// field layout as [`fx::dma_word`].
     fn flex_dma(&mut self, w: u64) -> Result<(), String> {
-        let src = (w & 0xFF_FFFF) as usize;
-        let dst = ((w >> 24) & 0xF_FFFF) as usize;
-        let len = (w >> 44) as usize;
+        let (src, dst, len) = fx::dma_fields(w);
         if src + len > fx::WGT_DRAM_SIZE || dst + len > fx::PE_WGT_SIZE {
             return Err(format!("DMA out of range: src {src:#x} dst {dst:#x} len {len:#x}"));
         }

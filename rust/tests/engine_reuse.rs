@@ -199,6 +199,104 @@ fn tiled_linear_mirror_and_tiles_cache() {
     assert!(second.bytes_streamed < first.bytes_streamed);
 }
 
+/// Satellite for the ahead-of-trigger prefetch: the same tiled linear
+/// run with the builder knob on and off must produce identical bits and
+/// identical streamed bytes — prefetch only moves stages earlier — while
+/// the modeled timeline credits the overlap and gets strictly cheaper.
+#[test]
+fn prefetch_overlap_cuts_modeled_cycles_not_bits() {
+    let run = |prefetch: bool| -> (Tensor, u64, u64, u64, u64) {
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::IlaMmio)
+            .prefetch(prefetch)
+            .build();
+        let mut g = GraphBuilder::new();
+        let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+        g.expr.add(Op::FlexLinear, vec![x, w, b]);
+        let program = session.attach(g.finish());
+        let mut rng = Rng::new(47);
+        let point = Bindings::new()
+            .with("x", Tensor::randn(&[2, 600], &mut rng, 1.0))
+            .with("w", Tensor::randn(&[1200, 600], &mut rng, 0.3))
+            .with("b", Tensor::randn(&[1200], &mut rng, 0.1));
+        let mut engine = program.engine();
+        let trace = program.run_traced_with(&mut engine, &point).unwrap();
+        let ahead: u64 =
+            trace.op_cycles.iter().map(|o| o.prefetched_bytes).sum();
+        (
+            trace.output,
+            engine.prefetched_stages(),
+            ahead,
+            trace.bytes_streamed,
+            trace.cycles.total(),
+        )
+    };
+    let (on_out, on_stages, on_bytes, on_streamed, on_cycles) = run(true);
+    let (off_out, off_stages, off_bytes, off_streamed, off_cycles) =
+        run(false);
+    assert_eq!(on_out, off_out, "prefetch must not change a single bit");
+    assert_eq!(on_streamed, off_streamed, "prefetch moves bytes, not adds");
+    assert!(on_stages > 0, "a 3-tile DRAM program must prefetch ahead");
+    assert!(on_bytes > 0, "prefetched bytes must surface in op_cycles");
+    assert_eq!(off_stages, 0, "the knob must actually disable prefetch");
+    assert_eq!(off_bytes, 0);
+    assert!(
+        on_cycles < off_cycles,
+        "overlap credit must cut modeled cycles: {on_cycles} vs {off_cycles}"
+    );
+}
+
+/// Satellite pinning the LoweringCache debt: per-point sweep inputs
+/// change the operand fingerprints, so the program cache misses every
+/// call — but page-table residency is keyed by burst fingerprint, so the
+/// unchanged weight tiles must still dedup and the repeat call must
+/// stream an order of magnitude fewer bytes.
+#[test]
+fn sweep_inputs_miss_program_cache_but_weights_stay_resident() {
+    let session = Session::builder()
+        .targets(&[Target::FlexAsr])
+        .backend(ExecBackend::IlaMmio)
+        .build();
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    g.expr.add(Op::FlexLinear, vec![x, w, b]);
+    let program = session.attach(g.finish());
+    let mut rng = Rng::new(48);
+    let w_t = Tensor::randn(&[600, 600], &mut rng, 0.3);
+    let b_t = Tensor::randn(&[600], &mut rng, 0.1);
+    let point = |rng: &mut Rng| {
+        Bindings::new()
+            .with("x", Tensor::randn(&[2, 600], rng, 1.0))
+            .with("w", w_t.clone())
+            .with("b", b_t.clone())
+    };
+    let mut engine = program.engine();
+    let first =
+        program.run_traced_with(&mut engine, &point(&mut rng)).unwrap();
+    let p2 = point(&mut rng);
+    let second = program.run_traced_with(&mut engine, &p2).unwrap();
+    assert_eq!(
+        second.mirror_hits, 0,
+        "a fresh input fingerprint must miss the lowering cache"
+    );
+    assert!(
+        second.bursts_deduped > 0,
+        "weight tiles must ride page residency across the program miss"
+    );
+    assert!(
+        second.bytes_streamed * 10 < first.bytes_streamed,
+        "only the input and control replays should stream: {} vs {}",
+        second.bytes_streamed,
+        first.bytes_streamed
+    );
+    assert_eq!(
+        second.output,
+        program.run(&p2).unwrap(),
+        "residency across a program-cache miss diverged"
+    );
+}
+
 #[test]
 fn functional_engines_build_no_simulators() {
     let session = Session::builder().targets(&[Target::FlexAsr]).build();

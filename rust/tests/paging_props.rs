@@ -1,0 +1,222 @@
+//! Seeded property tests for the paged weight-staging DRAM
+//! (hand-rolled generators — proptest is absent from the offline
+//! vendored set; see DESIGN.md). Failures print the seed so a run can
+//! be replayed under a debugger.
+//!
+//! Two layers are exercised:
+//! * the [`PageTable`] allocator directly, against a shadow byte map:
+//!   every fingerprint that claims residency must still hold exactly
+//!   the bytes it was staged with (the property a `DMA_CTRL` replay
+//!   relies on), accounting never exceeds capacity, and LRU eviction
+//!   never touches a page pinned by the in-flight program;
+//! * the full MMIO engine under randomized DRAM capacities, where the
+//!   CrossCheck backend is the bit-comparator — paging, eviction, and
+//!   the whole-program unpaged fallback must all be invisible to
+//!   results.
+
+use d2a::accel::flexasr::model as fx;
+use d2a::accel::flexasr::paging::PageTable;
+use d2a::ir::{GraphBuilder, Op, Target};
+use d2a::session::{Bindings, ExecBackend, Session};
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+use std::collections::HashMap;
+
+/// Random tile-set sequences against random DRAM capacities: replaying
+/// any resident fingerprint must source the exact bytes it was staged
+/// with, and the resident-set accounting must never exceed capacity.
+#[test]
+fn prop_paged_dram_serves_the_bytes_each_fingerprint_claims() {
+    for seed in 0..32u64 {
+        let mut rng = Rng::new(seed);
+        let capacity = 256 + 16 * rng.below(128);
+        let mut pt = PageTable::new(capacity);
+        // shadow state: the simulated DRAM plus the payload each
+        // fingerprint claims (fixed at first staging, like a lowered
+        // weight tile)
+        let mut dram = vec![0u8; capacity];
+        let mut shadow: HashMap<u64, Vec<u8>> = HashMap::new();
+        let mut fps: Vec<u64> = Vec::new();
+        let mut next_fp = 0u64;
+        for step in 0..120 {
+            // each step models one lowered program: pins reset, then a
+            // few tiles looked up or allocated (and pinned) together
+            pt.unpin_all();
+            let tiles = 1 + rng.below(3);
+            let mut program: Vec<(u64, usize)> = Vec::new();
+            for _ in 0..tiles {
+                let fp = if !fps.is_empty() && rng.below(3) > 0 {
+                    fps[rng.below(fps.len())]
+                } else {
+                    next_fp += 1;
+                    let len = 1 + rng.below(capacity / 3);
+                    let bytes: Vec<u8> =
+                        (0..len).map(|_| rng.below(256) as u8).collect();
+                    shadow.insert(next_fp, bytes);
+                    fps.push(next_fp);
+                    next_fp
+                };
+                let bytes = shadow[&fp].clone();
+                let off = match pt.lookup(fp) {
+                    Some(off) => {
+                        // residency hit: the DRAM must still hold the
+                        // claimed bytes, bit for bit
+                        assert_eq!(
+                            &dram[off..off + bytes.len()],
+                            &bytes[..],
+                            "seed {seed} step {step}: resident fp {fp} \
+                             no longer holds its claimed bytes"
+                        );
+                        off
+                    }
+                    None => match pt.alloc(fp, bytes.len()) {
+                        Some((off, evicted)) => {
+                            for e in &evicted {
+                                assert!(
+                                    !pt.contains(*e),
+                                    "seed {seed} step {step}: evicted fp \
+                                     {e} still claims residency"
+                                );
+                                assert!(
+                                    !program.iter().any(|(pf, _)| pf == e),
+                                    "seed {seed} step {step}: eviction \
+                                     victimized a page pinned by the \
+                                     in-flight program"
+                                );
+                            }
+                            dram[off..off + bytes.len()]
+                                .copy_from_slice(&bytes);
+                            off
+                        }
+                        // the program's pinned set plus this tile
+                        // exceeds what eviction can free — the engine
+                        // falls back to unpaged streaming here; the
+                        // allocator just refuses
+                        None => continue,
+                    },
+                };
+                program.push((fp, off));
+            }
+            assert!(
+                pt.live_bytes() <= pt.capacity(),
+                "seed {seed} step {step}: resident accounting {} exceeds \
+                 capacity {}",
+                pt.live_bytes(),
+                pt.capacity()
+            );
+            // every tile of this program is simultaneously resident with
+            // its exact bytes — a DMA replay mid-program would source
+            // correctly from any of them
+            for (fp, off) in &program {
+                let bytes = &shadow[fp];
+                assert!(pt.contains(*fp), "seed {seed} step {step}: fp {fp}");
+                assert_eq!(
+                    &dram[*off..*off + bytes.len()],
+                    &bytes[..],
+                    "seed {seed} step {step}: fp {fp} corrupted by a \
+                     later placement in the same program"
+                );
+            }
+        }
+        // the capacities chosen must actually force churn, or the LRU
+        // path went untested
+        assert!(pt.evictions() > 0, "seed {seed}: no eviction exercised");
+    }
+}
+
+fn tiled_linear_program(session: &Session) -> d2a::CompiledProgram {
+    let mut g = GraphBuilder::new();
+    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+    g.expr.add(Op::FlexLinear, vec![x, w, b]);
+    session.attach(g.finish())
+}
+
+/// Random DRAM capacities against a recalled set of tiled weight
+/// matrices, cross-checked invocation by invocation. Capacities below
+/// one tile set force the whole-program unpaged fallback; mid-range
+/// capacities force LRU eviction on every switch; large ones keep
+/// everything resident — all must stay bit-clean.
+#[test]
+fn prop_engine_paging_is_bit_exact_under_random_capacities() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(100 + seed);
+        let capacity = (64 + 64 * rng.below(15)) * 1024;
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::CrossCheck)
+            .dram_capacity(capacity)
+            .build();
+        let program = tiled_linear_program(&session);
+        let x = Tensor::randn(&[2, 600], &mut rng, 1.0);
+        let b = Tensor::randn(&[600], &mut rng, 0.1);
+        let sets: Vec<Bindings> = (0..3)
+            .map(|_| {
+                Bindings::new()
+                    .with("x", x.clone())
+                    .with("w", Tensor::randn(&[600, 600], &mut rng, 0.3))
+                    .with("b", b.clone())
+            })
+            .collect();
+        let mut engine = program.engine();
+        for _call in 0..8 {
+            let point = &sets[rng.below(sets.len())];
+            program.run_with(&mut engine, point).unwrap();
+        }
+        let report = engine.take_fidelity();
+        assert!(report.total_checked() >= 8, "seed {}", 100 + seed);
+        assert!(
+            report.is_clean(),
+            "seed {}: capacity {capacity}: {report}",
+            100 + seed
+        );
+    }
+}
+
+/// LRU eviction across programs, end to end: a DRAM sized for one
+/// 600x600 tile set but not two must evict the other set's pages on
+/// every switch — losing all dedup — while producing exactly the bits
+/// the full 32 MiB DRAM produces with both sets resident.
+#[test]
+fn lru_eviction_across_programs_is_invisible_to_results() {
+    let run_seq = |capacity: usize| -> (Vec<Tensor>, Vec<u64>) {
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::IlaMmio)
+            .dram_capacity(capacity)
+            .build();
+        let program = tiled_linear_program(&session);
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&[2, 600], &mut rng, 1.0);
+        let b = Tensor::randn(&[600], &mut rng, 0.1);
+        let w1 = Tensor::randn(&[600, 600], &mut rng, 0.3);
+        let w2 = Tensor::randn(&[600, 600], &mut rng, 0.3);
+        let p1 = Bindings::new()
+            .with("x", x.clone())
+            .with("w", w1)
+            .with("b", b.clone());
+        let p2 = Bindings::new().with("x", x).with("w", w2).with("b", b);
+        let mut engine = program.engine();
+        let mut outs = Vec::new();
+        let mut deduped = Vec::new();
+        for point in [&p1, &p2, &p1] {
+            let trace = program.run_traced_with(&mut engine, point).unwrap();
+            outs.push(trace.output);
+            deduped.push(trace.bursts_deduped);
+        }
+        (outs, deduped)
+    };
+    // ~353 KiB of tiles per set: 384 KiB holds one set, never two
+    let (small_outs, small_dedup) = run_seq(384 * 1024);
+    let (big_outs, big_dedup) = run_seq(fx::WGT_DRAM_SIZE);
+    assert_eq!(small_outs, big_outs, "eviction must never change results");
+    assert_eq!(
+        small_dedup,
+        vec![0, 0, 0],
+        "a one-set DRAM must evict w1's pages when w2 arrives, so the \
+         returning w1 program re-streams everything"
+    );
+    assert!(
+        big_dedup[2] > 0,
+        "the full DRAM must keep w1's tiles resident across the w2 run"
+    );
+}
