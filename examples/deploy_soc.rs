@@ -22,12 +22,12 @@ fn main() -> anyhow::Result<()> {
     let x = fa.quant(&Tensor::randn(&[4, 32], &mut rng, 1.0));
     let w1 = fa.quant(&Tensor::randn(&[16, 32], &mut rng, 0.3));
     let b1 = fa.quant(&Tensor::randn(&[16], &mut rng, 0.1));
-    let lin1 = fa.lower(&Op::FlexLinear, &[&x, &w1, &b1]).expect("fits");
+    let lin1 = fa.lower_concrete(&Op::FlexLinear, &[&x, &w1, &b1]).expect("fits");
     let h = drv.invoke_program(&lin1)?;
     let w2 = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b2 = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
     let hq = fa.quant(&h);
-    let lin2 = fa.lower(&Op::FlexLinear, &[&hq, &w2, &b2]).expect("fits");
+    let lin2 = fa.lower_concrete(&Op::FlexLinear, &[&hq, &w2, &b2]).expect("fits");
     let y = drv.invoke_program(&lin2)?;
     let expect = fa.linear(&fa.quant(&fa.linear(&x, &w1, &b1)), &w2, &b2);
     println!(
@@ -50,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     println!("=== synthetic program 3: heterogeneous FlexASR -> VTA pipeline ===");
     let q = vta.quant(&pooled.reshape(&[4, 64]));
     let wq = vta.quant(&Tensor::randn(&[8, 64], &mut rng, 1.0));
-    let gemm = vta.lower(&Op::VtaGemm, &[&q, &wq]).expect("fits");
+    let gemm = vta.lower_concrete(&Op::VtaGemm, &[&q, &wq]).expect("fits");
     let g = drv.invoke_program(&gemm)?;
     assert_eq!(g.rel_error(&vta.gemm(&q, &wq)), 0.0);
     println!("  VTA GEMM exact ({:?})", g.shape);

@@ -72,7 +72,7 @@ fn main() -> anyhow::Result<()> {
 
     // 4. lower the matched fasr_linear to ILA assembly + MMIO commands
     let prog = dev
-        .lower(&Op::FlexLinear, &[&xv, &wv, &bv])
+        .lower_concrete(&Op::FlexLinear, &[&xv, &wv, &bv])
         .expect("linear fits the device");
     let inv = &prog.invocations[0];
     println!("FlexASR ILA fragment (Fig. 5c):\n{}", inv.asm);

@@ -2,9 +2,11 @@
 //! open-loop Poisson load generator drives W worker threads against a
 //! shared pool of K < W ILA devices, serving the LSTM-WLM layer with M
 //! rotating weight sets (M tenants). Reports throughput, p50/p99
-//! latency, pool occupancy, and the residency hit rate for both
-//! scheduling policies, and emits a `BENCH_serving.json` trajectory
-//! point (hand-serialized; the offline crate set has no serde).
+//! latency, pool occupancy, the residency hit rate, and the
+//! weight-keyed template-cache hit rate (per-request inputs differ, so
+//! every template hit is a lowering avoided) for both scheduling
+//! policies, and emits a `BENCH_serving.json` trajectory point
+//! (hand-serialized; the offline crate set has no serde).
 //!
 //! Open loop means arrivals are precomputed from an exponential
 //! inter-arrival distribution and do **not** wait for completions — a
@@ -93,6 +95,11 @@ struct ServingReport {
     p99: Duration,
     occupancy: f64,
     hit_rate: f64,
+    /// Weight-keyed template-cache hit rate across the worker engines:
+    /// per-request inputs differ, so every hit is a lowering (weight
+    /// encode + calibration mirrors) avoided — only the cheap operand
+    /// bind ran.
+    template_hit_rate: f64,
     bytes_streamed: u64,
     mean_interarrival: Duration,
     /// Modeled device cycles summed over the worker engines — the
@@ -143,7 +150,7 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
 
     let next = AtomicUsize::new(0);
     let clock = Instant::now();
-    let (mut latencies, dedup, streamed, bytes, cycles) = std::thread::scope(|scope| {
+    let (mut latencies, dedup, streamed, bytes, cycles, tmpl) = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..WORKERS)
             .map(|_| {
                 scope.spawn(|| {
@@ -166,24 +173,29 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
                     let streamed = engine.staged_streamed();
                     let bytes = engine.bytes_streamed();
                     let cycles = engine.modeled_cycles();
-                    (mine, dedup, streamed, bytes, cycles)
+                    let tmpl = (engine.lower_cache_hits(), engine.lower_cache_misses());
+                    (mine, dedup, streamed, bytes, cycles, tmpl)
                 })
             })
             .collect();
         let mut lat = Vec::with_capacity(load.requests);
         let (mut dedup, mut streamed, mut bytes) = (0u64, 0u64, 0u64);
         let mut cycles = CycleBreakdown::default();
+        let (mut tmpl_hits, mut tmpl_misses) = (0u64, 0u64);
         for h in handles {
-            let (mine, d, s, b, c) = h.join().expect("serving worker panicked");
+            let (mine, d, s, b, c, (th, tm)) = h.join().expect("serving worker panicked");
             lat.extend(mine);
             dedup += d;
             streamed += s;
             bytes += b;
             cycles += c;
+            tmpl_hits += th;
+            tmpl_misses += tm;
         }
-        (lat, dedup, streamed, bytes, cycles)
+        (lat, dedup, streamed, bytes, cycles, (tmpl_hits, tmpl_misses))
     });
     let wall = clock.elapsed();
+    let (tmpl_hits, tmpl_misses) = tmpl;
     latencies.sort();
 
     let stats = session.device_pool().unwrap().stats();
@@ -195,6 +207,7 @@ fn open_loop(load: &Load, policy: SchedPolicy) -> ServingReport {
         p99: percentile(&latencies, 0.99),
         occupancy: stats.busy.as_secs_f64() / (POOL as f64 * wall.as_secs_f64()),
         hit_rate: dedup as f64 / (dedup + streamed).max(1) as f64,
+        template_hit_rate: tmpl_hits as f64 / (tmpl_hits + tmpl_misses).max(1) as f64,
         bytes_streamed: bytes,
         mean_interarrival: mean,
         cycles,
@@ -227,6 +240,7 @@ fn report_json(r: &ServingReport, load: &Load) -> String {
          \"mean_interarrival_ms\": {:.3}, \"wall_ms\": {:.1}, \
          \"throughput_rps\": {:.2}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \
          \"occupancy\": {:.3}, \"residency_hit_rate\": {:.3}, \
+         \"template_hit_rate\": {:.3}, \
          \"bytes_streamed\": {}, \"transfer_cycles\": {}, \
          \"compute_cycles\": {}, \"overhead_cycles\": {}, \
          \"total_cycles\": {}, \"pool_busy_cycles\": {}, \
@@ -248,6 +262,7 @@ fn report_json(r: &ServingReport, load: &Load) -> String {
         r.p99.as_secs_f64() * 1e3,
         r.occupancy,
         r.hit_rate,
+        r.template_hit_rate,
         r.bytes_streamed,
         r.cycles.transfer,
         r.cycles.compute,
@@ -282,13 +297,15 @@ fn main() -> std::io::Result<()> {
         let r = open_loop(&load, policy);
         println!(
             "{:<9} {:>7.1} req/s  p50 {:>8.2} ms  p99 {:>8.2} ms  \
-             occupancy {:>5.1}%  residency hits {:>5.1}%  {:>12} B streamed",
+             occupancy {:>5.1}%  residency hits {:>5.1}%  template hits \
+             {:>5.1}%  {:>12} B streamed",
             r.policy.to_string(),
             r.throughput,
             r.p50.as_secs_f64() * 1e3,
             r.p99.as_secs_f64() * 1e3,
             r.occupancy * 1e2,
             r.hit_rate * 1e2,
+            r.template_hit_rate * 1e2,
             r.bytes_streamed,
         );
         println!(
@@ -304,6 +321,7 @@ fn main() -> std::io::Result<()> {
         assert!(r.throughput > 0.0);
         assert!(r.p50 <= r.p99);
         assert!((0.0..=1.0).contains(&r.hit_rate));
+        assert!((0.0..=1.0).contains(&r.template_hit_rate));
         assert!(
             r.stats.devices_built as usize <= POOL,
             "pool must cap device construction"

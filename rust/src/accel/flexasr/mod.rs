@@ -17,7 +17,11 @@ pub mod model;
 pub mod paging;
 
 use super::Accelerator;
-use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{
+    BindCalib, BindValue, Burst, CmdPatch, LoweredInvocation, LoweredProgram,
+    OperandSlot, ProgramTemplate, ReadPlan, ScaleRule, SlotCodec, Stitch,
+    TemplateBurst, TemplateInvocation,
+};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
@@ -25,6 +29,41 @@ use crate::numerics::adaptivfloat::AdaptivFloatFormat;
 use crate::numerics::NumericFormat;
 use crate::tensor::{ops, Tensor};
 use self::model as fx;
+use std::sync::Arc;
+
+/// The linear-layer forced output bias, from its input-independent
+/// weight-side factors plus the bind-time input row norm:
+/// `select_bias(‖w row‖₂ · ‖x row‖₂ + max|b|)` — a Cauchy–Schwarz bound
+/// on every accumulator element, so the forced lattice always covers the
+/// true output range. Shared by the functional fast path and
+/// [`ProgramTemplate::bind`] so both evaluate bit-identical f32
+/// arithmetic (the CrossCheck invariant).
+pub(crate) fn linear_bias_bound(
+    af: &AdaptivFloatFormat,
+    w_row_norm: f32,
+    x_row_norm: f32,
+    b_max: f32,
+) -> i32 {
+    af.select_bias(w_row_norm * x_row_norm + b_max)
+}
+
+/// The LSTM wide gate-accumulator bias, constant across timesteps:
+/// `select_bias(‖wi row‖₂ · ‖x row‖₂ + ‖wh row‖₂ · √h + max|b|)`. The
+/// hidden-state term uses `√h` because h is re-encoded under the unit
+/// bound every step (`|h| ≤ 1` after `tanh · sigmoid`), so `‖h‖₂ ≤ √h`.
+/// Shared by [`FlexAsr::lstm_traced`] and [`ProgramTemplate::bind`].
+pub(crate) fn lstm_wide_bias_bound(
+    af_wide: &AdaptivFloatFormat,
+    wi_row_norm: f32,
+    x_row_norm: f32,
+    wh_row_norm: f32,
+    hidden: usize,
+    b_max: f32,
+) -> i32 {
+    af_wide.select_bias(
+        wi_row_norm * x_row_norm + wh_row_norm * (hidden as f32).sqrt() + b_max,
+    )
+}
 
 /// FlexASR datapath configuration.
 #[derive(Debug, Clone, Copy)]
@@ -98,12 +137,30 @@ impl FlexAsr {
     /// Linear layer: operands on the AF8 lattice, f32 MAC array, output
     /// re-encoded to AF8 (the PE writes results back through the
     /// activation unit's 8-bit port).
+    ///
+    /// The output lattice is anchored at the **input-independent-formula
+    /// bias bound** ([`linear_bias_bound`]) rather than the observed
+    /// `max_abs` of the accumulator, so the MMIO template lowering can
+    /// force the exact same `CFG_OUT_BIAS` without replaying the whole
+    /// layer per input (the bound's weight factor is baked into the
+    /// weight-keyed template; the input row norm is evaluated at bind).
+    /// The bound over-covers the true range by up to ~√k, trading a
+    /// little dynamic range for input-independent programs — the
+    /// accuracy delta is measured in `tests/template_bind.rs` and
+    /// remains within the Table 2 envelopes.
     pub fn linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Tensor {
         let xq = self.quant(x);
         let wq = self.quant(w);
         let bq = self.quant(b);
         let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
-        self.quant(&acc)
+        let k = x.shape[1];
+        let out_bias = linear_bias_bound(
+            &self.af,
+            fx::max_row_l2(&wq.data, k),
+            fx::max_row_l2(&xq.data, k),
+            bq.max_abs(),
+        );
+        fx::codec_roundtrip_with(&self.af, &acc, out_bias)
     }
 
     /// LSTM layer: gate pre-activations quantized wide (accumulator
@@ -115,12 +172,25 @@ impl FlexAsr {
     }
 
     /// [`Self::lstm`] plus the per-step quantization-bias schedule it
-    /// used. The tiled MMIO lowering mirrors the recurrence through this
-    /// function to learn, ahead of execution, which bias every re-encode
-    /// point will need (a driver-side calibration pass, like a quantized
-    /// deployment deriving static scales) — the device then replays the
-    /// schedule with forced biases so each tile lands on the exact
-    /// lattice the whole-tensor fast path chose.
+    /// used. The schedule is derived from **input-independent bounds**
+    /// rather than observed per-step magnitudes, so the tiled MMIO
+    /// template can bake it into weight-keyed programs and replay it for
+    /// any input of the shape:
+    ///
+    /// * wide gate accumulators — one [`lstm_wide_bias_bound`] constant
+    ///   across all steps (its only input factor, the sequence row norm,
+    ///   is evaluated once at bind);
+    /// * h states — the unit bound `select_bias(1.0)` (`|h| ≤ 1` after
+    ///   `tanh · sigmoid`), constant;
+    /// * c states — `select_bias(step + 1)`: `c_t = f⊙c_{t-1} + i⊙g`
+    ///   with `|f|, |i|, |g| ≤ 1` gives `|c_t| ≤ t` by induction;
+    /// * the assembled output — the unit bound again.
+    ///
+    /// The device replays exactly these forced biases, so each tile
+    /// lands on the lattice this fast path chose — bit-exactness is
+    /// preserved while the bound's slack (vs the old observed-`max_abs`
+    /// schedule) costs a little dynamic range, measured in
+    /// `tests/template_bind.rs`.
     pub fn lstm_traced(
         &self,
         x: &Tensor,
@@ -134,6 +204,15 @@ impl FlexAsr {
         let wiq = self.quant(w_ih);
         let whq = self.quant(w_hh);
         let bq = self.quant(b);
+        let wide_bias = lstm_wide_bias_bound(
+            &self.af_wide,
+            fx::max_row_l2(&wiq.data, i),
+            fx::max_row_l2(&xq.data, i),
+            fx::max_row_l2(&whq.data, hidden),
+            hidden,
+            bq.max_abs(),
+        );
+        let h_bias = self.af.select_bias(1.0);
         let mut sched = LstmBiasSchedule::default();
         let mut h = Tensor::zeros(&[n, hidden]);
         let mut c = Tensor::zeros(&[n, hidden]);
@@ -147,14 +226,12 @@ impl FlexAsr {
                 &ops::add(&ops::dense(&xt, &wiq), &ops::dense(&h, &whq)),
                 &bq,
             );
-            let wide_bias = self.af_wide.select_bias(gates.max_abs());
             let gates = self.af_wide.quantize_with_bias(&gates, wide_bias);
             let (nh, nc) = fx::lstm_cell(&gates.data, &c.data, n, hidden);
             // h and c live in the global buffer between steps: AF8
             let nh = Tensor::new(vec![n, hidden], nh);
             let nc = Tensor::new(vec![n, hidden], nc);
-            let h_bias = self.af.select_bias(nh.max_abs());
-            let c_bias = self.af.select_bias(nc.max_abs());
+            let c_bias = self.af.select_bias((step + 1) as f32);
             h = fx::codec_roundtrip_with(&self.af, &nh, h_bias);
             c = fx::codec_roundtrip_with(&self.af, &nc, c_bias);
             sched.wide.push(wide_bias);
@@ -167,7 +244,7 @@ impl FlexAsr {
         // were encoded under per-step biases), so the whole output is
         // re-encoded here — exactly what the MMIO path's store does
         let out = Tensor::new(vec![t, n, hidden], out);
-        sched.out = self.af.select_bias(out.max_abs());
+        sched.out = self.af.select_bias(1.0);
         (fx::codec_roundtrip_with(&self.af, &out, sched.out), sched)
     }
 
@@ -286,27 +363,28 @@ fn align16(n: usize) -> u64 {
 // ----------------------------------------------------------------------
 
 impl FlexAsr {
-    /// The forced output-port bias the tiled linear lowering programs:
-    /// the driver-side calibration mirror (encode, decode, dense +
-    /// bias-add, `select_bias`) that every tile's `CFG_OUT_BIAS` replays.
-    /// Exposed so translation validation can recompute the side condition
-    /// independently of the lowering.
+    /// The forced output-port bias every linear `CFG_OUT_BIAS` programs:
+    /// [`linear_bias_bound`] over codec-roundtripped operands — the
+    /// weight-side factors live in the template, the input row norm is
+    /// the bind-time factor. Exposed so translation validation can
+    /// recompute the side condition independently of the lowering.
     pub(crate) fn linear_forced_bias(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> i32 {
-        let fmt = self.af;
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
-        let (wc, wb) = fx::encode_tensor(&fmt, w);
-        let (bc, bb) = fx::encode_tensor(&fmt, b);
-        let xq = fx::decode_tensor(&fmt, &xc, xb, &x.shape);
-        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
-        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
-        let acc = ops::bias_add(&ops::dense(&xq, &wq), &bq);
-        fmt.select_bias(acc.max_abs())
+        let k = x.shape[1];
+        let xq = fx::codec_roundtrip(&self.af, x);
+        let wq = fx::codec_roundtrip(&self.af, w);
+        let bq = fx::codec_roundtrip(&self.af, b);
+        linear_bias_bound(
+            &self.af,
+            fx::max_row_l2(&wq.data, k),
+            fx::max_row_l2(&xq.data, k),
+            bq.max_abs(),
+        )
     }
 
     /// Tiled-linear entry point for translation validation: forces a
     /// row-tile `cap` so small obligation shapes still exercise genuine
     /// multi-tile programs (the production path only tiles when buffers
-    /// overflow).
+    /// overflow). Concrete — template + bind over the same operands.
     pub(crate) fn lower_linear_for_verify(
         &self,
         x: &Tensor,
@@ -314,26 +392,44 @@ impl FlexAsr {
         b: &Tensor,
         cap: usize,
     ) -> Option<LoweredProgram> {
+        let tmpl = self.lower_linear_tiled(x, w, b, cap)?;
+        tmpl.bind(&[x, w, b]).ok().map(|bp| bp.program)
+    }
+
+    /// Template form of [`Self::lower_linear_for_verify`], for slot-aware
+    /// obligations over symbolic operand bytes.
+    pub(crate) fn lower_linear_template_for_verify(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        b: &Tensor,
+        cap: usize,
+    ) -> Option<ProgramTemplate> {
         self.lower_linear_tiled(x, w, b, cap)
     }
 
     /// Tiled-LSTM entry point for translation validation: forces a
-    /// gate-row tile `cap` (see [`Self::lower_linear_for_verify`]).
-    pub(crate) fn lower_lstm_for_verify(
+    /// gate-row tile `cap` (see [`Self::lower_linear_template_for_verify`])
+    /// and keeps the input slot symbolic for the obligation bind.
+    pub(crate) fn lower_lstm_template_for_verify(
         &self,
         x: &Tensor,
         wi: &Tensor,
         wh: &Tensor,
         b: &Tensor,
         cap: usize,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         self.lower_lstm_tiled(x, wi, wh, b, cap)
     }
 
-    /// Lower a linear layer (`fasr_linear x w b`) — Fig. 5 end to end.
-    /// Layers whose weights or outputs exceed the device buffers come
-    /// back as a weight-row-tiled multi-trigger program.
-    fn lower_linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Option<LoweredProgram> {
+    /// Lower a linear layer (`fasr_linear x w b`) — Fig. 5 end to end,
+    /// as a weight-keyed template: the input matrix is an
+    /// [`OperandSlot`], its `CFG_EXP_BIAS` lane and the forced
+    /// `CFG_OUT_BIAS` (the [`linear_bias_bound`] the functional path also
+    /// anchors on) are bind-time patches. Layers whose weights or outputs
+    /// exceed the device buffers come back as a weight-row-tiled
+    /// multi-trigger template.
+    fn lower_linear(&self, x: &Tensor, w: &Tensor, b: &Tensor) -> Option<ProgramTemplate> {
         if x.shape.len() != 2 || w.shape.len() != 2 || b.shape.len() != 1 {
             return None;
         }
@@ -355,14 +451,22 @@ impl FlexAsr {
             return self.lower_linear_tiled(x, w, b, usize::MAX);
         }
         let fmt = self.af;
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
         let (wc, wb) = fx::encode_tensor(&fmt, w);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
+        // weight-side factors of the output bias bound (over the
+        // roundtripped values the device arithmetic sees)
+        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
+        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
 
         let mut bursts = vec![
-            Burst::stage(fx::GB_BASE, &xc),
-            Burst::stage(fx::PE_WGT_BASE, &wc),
-            Burst::stage(fx::PE_WGT_BASE + bias_base, &bc),
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: fx::GB_BASE,
+                bytes: 0..n * k,
+                codec: SlotCodec::FlexAf8 { fmt },
+            }),
+            TemplateBurst::Concrete(Burst::stage(fx::PE_WGT_BASE, &wc)),
+            TemplateBurst::Concrete(Burst::stage(fx::PE_WGT_BASE + bias_base, &bc)),
         ];
         let mut cmds = Vec::new();
         cmds.push(Cmd::write_u64(
@@ -376,12 +480,20 @@ impl FlexAsr {
             fx::OP_LINEAR | ((n as u64) << 8),
         ));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
+        // lane 0 (the input bias) is a bind patch; the weight lanes are
+        // template constants
         cmds.push(Cmd::write_u64(
             fx::CFG_EXP_BIAS,
-            (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
+            ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
         ));
+        // the forced output bias (low lane patched at bind) keeps the
+        // device output on the bound lattice the fast path chose
+        cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0x100));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
-        bursts.push(Burst::control(cmds));
+        // driver hygiene: disarm the override for later programs on an
+        // un-reset device
+        cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
+        bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%input"])
@@ -392,27 +504,59 @@ impl FlexAsr {
             .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%n"])
             .push("FlexASR_ILA.gb_cfg_mmngr_gb_large", &["%in", "%out"])
             .push("FlexASR_ILA.cfg_exp_bias", &["%biases"])
+            .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%output"]);
 
-        Some(LoweredProgram::single(LoweredInvocation {
+        Some(ProgramTemplate {
             target: Target::FlexAsr,
-            asm,
-            bursts,
-            read: Some(ReadPlan::FlexAf8 {
-                base: fx::GB_BASE + out_base,
-                shape: vec![n, m],
-                fmt: self.af,
-            }),
-        }))
+            invocations: vec![TemplateInvocation {
+                target: Target::FlexAsr,
+                asm,
+                bursts,
+                read: Some(ReadPlan::FlexAf8 {
+                    base: fx::GB_BASE + out_base,
+                    shape: vec![n, m],
+                    fmt: self.af,
+                }),
+            }],
+            stitch: Stitch::Last,
+            mirrors: 1,
+            operand_shapes: vec![x.shape.clone(), w.shape.clone(), b.shape.clone()],
+            weight_ops: vec![(1, w.fingerprint()), (2, b.fingerprint())],
+            calib: BindCalib::FlexLinear {
+                af: fmt,
+                w_row_norm: fx::max_row_l2(&wq.data, k),
+                b_max: bq.max_abs(),
+                k,
+            },
+            scale_rule: ScaleRule::None,
+            patches: vec![
+                CmdPatch {
+                    invocation: 0,
+                    burst: 3,
+                    cmd: 5,
+                    shift: 0,
+                    value: BindValue::SlotBias { operand: 0 },
+                },
+                CmdPatch {
+                    invocation: 0,
+                    burst: 3,
+                    cmd: 6,
+                    shift: 0,
+                    value: BindValue::OutBias,
+                },
+            ],
+        })
     }
 
-    /// Row-tiled linear: the input matrix is staged once; every tile
-    /// loads its weight-row block + bias slice, reconfigures, triggers,
-    /// and reads its output column block back, with the output-port bias
-    /// **forced** to the bias the whole-result store would have chosen
-    /// (derived by a driver-side mirror of the accumulation) so all tiles
-    /// share the fast path's output lattice bit-exactly.
+    /// Row-tiled linear template: the input matrix is one slot staged
+    /// once; every tile loads its weight-row block + bias slice,
+    /// reconfigures, triggers, and reads its output column block back,
+    /// with the output-port bias **forced** to the input-independent
+    /// [`linear_bias_bound`] (weight factors in the template, input row
+    /// norm at bind) so all tiles share the fast path's output lattice
+    /// bit-exactly — without re-lowering per input.
     ///
     /// When the whole tile set fits the device's weight staging DRAM
     /// (since the DRAM grew to 32 MiB this includes the [33278 × 650]
@@ -434,7 +578,7 @@ impl FlexAsr {
         w: &Tensor,
         b: &Tensor,
         cap: usize,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         let fmt = self.af;
         let (n, k) = (x.shape[0], x.shape[1]);
         let m = w.shape[0];
@@ -457,12 +601,12 @@ impl FlexAsr {
             return None; // not even one output row can be staged
         }
 
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
         let (wc, wb) = fx::encode_tensor(&fmt, w);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
-        // driver calibration mirror: replay the device arithmetic on the
-        // host to learn the whole-result output bias ahead of execution
-        let out_bias = self.linear_forced_bias(x, w, b);
+        // weight-side factors of the forced-output-bias bound; the input
+        // row norm joins at bind ([`BindCalib::FlexLinear`])
+        let wq = fx::decode_tensor(&fmt, &wc, wb, &w.shape);
+        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
 
         // tile table: row range + per-tile PE layout + DRAM slot
         let mut tiles = Vec::new(); // (lo, r, bias_base, tile_len, dram_off)
@@ -478,18 +622,27 @@ impl FlexAsr {
         }
         let use_dram = dram_off <= self.dram_budget.min(fx::WGT_DRAM_SIZE);
 
+        let x_slot = |bytes: std::ops::Range<usize>| {
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: fx::GB_BASE,
+                bytes,
+                codec: SlotCodec::FlexAf8 { fmt },
+            })
+        };
         let mut invocations = Vec::new();
+        let mut patches = Vec::new();
         if use_dram {
-            // stage phase, part one: the input burst. Each weight tile's
+            // stage phase, part one: the input slot. Each weight tile's
             // fingerprinted DRAM burst instead rides in the invocation
             // that first consumes it, so a persistent engine can stage
             // tile N+1 while tile N's trigger is in flight.
             let mut asm = Fragment::new();
             asm.push("FlexASR_ILA.write_v", &["%input"]);
-            invocations.push(LoweredInvocation {
+            invocations.push(TemplateInvocation {
                 target: Target::FlexAsr,
                 asm,
-                bursts: vec![Burst::stage(fx::GB_BASE, &xc)],
+                bursts: vec![x_slot(0..n * k)],
                 read: None,
             });
         }
@@ -500,7 +653,10 @@ impl FlexAsr {
                 let mut buf = vec![0u8; tile_len];
                 buf[..r * k].copy_from_slice(&wc[tlo * k..(tlo + r) * k]);
                 buf[bias_base..].copy_from_slice(&bc[tlo..tlo + r]);
-                bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
+                bursts.push(TemplateBurst::Concrete(Burst::stage(
+                    fx::WGT_DRAM_BASE + doff as u64,
+                    &buf,
+                )));
                 cmds.push(Cmd::write_u64(
                     fx::DMA_CTRL,
                     fx::dma_word(doff, 0, tile_len),
@@ -508,17 +664,23 @@ impl FlexAsr {
             } else {
                 if ti == 0 {
                     // the input stays resident across tiles
-                    bursts.push(Burst::stage(fx::GB_BASE, &xc));
+                    bursts.push(x_slot(0..n * k));
                 }
-                bursts.push(Burst::stage(
+                bursts.push(TemplateBurst::Concrete(Burst::stage(
                     fx::PE_WGT_BASE,
                     &wc[tlo * k..(tlo + r) * k],
-                ));
-                bursts.push(Burst::stage(
+                )));
+                bursts.push(TemplateBurst::Concrete(Burst::stage(
                     fx::PE_WGT_BASE + bias_base as u64,
                     &bc[tlo..tlo + r],
-                ));
+                )));
             }
+            // the input-bias lane of CFG_EXP_BIAS and the forced
+            // CFG_OUT_BIAS lane are bind patches; record their command
+            // indices relative to this tile's control burst
+            let exp_cmd = cmds.len() + 5;
+            let out_cmd = cmds.len() + 6;
+            let ctrl_burst = bursts.len();
             cmds.push(Cmd::write_u64(
                 fx::CFG_LAYER_SIZING,
                 (k as u64) | ((r as u64) << 16),
@@ -532,12 +694,9 @@ impl FlexAsr {
             cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, (xa as u64) << 32));
             cmds.push(Cmd::write_u64(
                 fx::CFG_EXP_BIAS,
-                (xb as u8 as u64) | ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
+                ((wb as u8 as u64) << 8) | ((bb as u8 as u64) << 16),
             ));
-            cmds.push(Cmd::write_u64(
-                fx::CFG_OUT_BIAS,
-                0x100 | (out_bias as u8 as u64),
-            ));
+            cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0x100));
             cmds.push(Cmd::write_u64(fx::FN_START, 1));
             if ti + 1 == tiles.len() {
                 // driver hygiene: disarm the output-bias override so a
@@ -545,7 +704,21 @@ impl FlexAsr {
                 // the SoC bus, gets auto-selected output biases again
                 cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
             }
-            bursts.push(Burst::control(cmds));
+            bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
+            patches.push(CmdPatch {
+                invocation: invocations.len(),
+                burst: ctrl_burst,
+                cmd: exp_cmd,
+                shift: 0,
+                value: BindValue::SlotBias { operand: 0 },
+            });
+            patches.push(CmdPatch {
+                invocation: invocations.len(),
+                burst: ctrl_burst,
+                cmd: out_cmd,
+                shift: 0,
+                value: BindValue::OutBias,
+            });
 
             let mut asm = Fragment::new();
             if use_dram {
@@ -563,7 +736,7 @@ impl FlexAsr {
                 .push("FlexASR_ILA.fn_start", &[])
                 .push("FlexASR_ILA.read_v", &["%out_cols"]);
 
-            invocations.push(LoweredInvocation {
+            invocations.push(TemplateInvocation {
                 target: Target::FlexAsr,
                 asm,
                 bursts,
@@ -574,10 +747,21 @@ impl FlexAsr {
                 }),
             });
         }
-        Some(LoweredProgram {
+        Some(ProgramTemplate {
+            target: Target::FlexAsr,
             invocations,
             stitch: Stitch::Concat { axis: 1, shape: vec![n, m] },
             mirrors: 1,
+            operand_shapes: vec![x.shape.clone(), w.shape.clone(), b.shape.clone()],
+            weight_ops: vec![(1, w.fingerprint()), (2, b.fingerprint())],
+            calib: BindCalib::FlexLinear {
+                af: fmt,
+                w_row_norm: fx::max_row_l2(&wq.data, k),
+                b_max: bq.max_abs(),
+                k,
+            },
+            scale_rule: ScaleRule::None,
+            patches,
         })
     }
 
@@ -592,7 +776,7 @@ impl FlexAsr {
         wi: &Tensor,
         wh: &Tensor,
         b: &Tensor,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         if x.shape.len() != 3
             || x.shape[1] != 1
             || wi.shape.len() != 2
@@ -630,16 +814,20 @@ impl FlexAsr {
             return self.lower_lstm_tiled(x, wi, wh, b, usize::MAX);
         }
         let fmt = self.af;
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
         let (wic, wib) = fx::encode_tensor(&fmt, wi);
         let (whc, whb) = fx::encode_tensor(&fmt, wh);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
 
         let mut bursts = vec![
-            Burst::stage(fx::GB_BASE, &xc),
-            Burst::stage(fx::PE_WGT_BASE, &wic),
-            Burst::stage(fx::PE_WGT_BASE + wgt2_base, &whc),
-            Burst::stage(fx::PE_WGT_BASE + bias_base, &bc),
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: fx::GB_BASE,
+                bytes: 0..t * e,
+                codec: SlotCodec::FlexAf8 { fmt },
+            }),
+            TemplateBurst::Concrete(Burst::stage(fx::PE_WGT_BASE, &wic)),
+            TemplateBurst::Concrete(Burst::stage(fx::PE_WGT_BASE + wgt2_base, &whc)),
+            TemplateBurst::Concrete(Burst::stage(fx::PE_WGT_BASE + bias_base, &bc)),
         ];
         let mut cmds = Vec::new();
         cmds.push(Cmd::write_u64(
@@ -653,15 +841,24 @@ impl FlexAsr {
             fx::OP_LSTM | ((t as u64) << 8),
         ));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
+        // lane 0 (the input bias) is a bind patch
         cmds.push(Cmd::write_u64(
             fx::CFG_EXP_BIAS,
-            (xb as u8 as u64)
-                | ((wib as u8 as u64) << 8)
+            ((wib as u8 as u64) << 8)
                 | ((bb as u8 as u64) << 16)
                 | ((whb as u8 as u64) << 24),
         ));
+        // force the output port onto the schedule's unit bound (`|h| ≤ 1`
+        // after tanh · sigmoid) — input-independent, so a template
+        // constant; the internal wide/h/c lattices the device picks are
+        // the same input-independent schedule the fast path derives
+        cmds.push(Cmd::write_u64(
+            fx::CFG_OUT_BIAS,
+            0x100 | (fmt.select_bias(1.0) as u8 as u64),
+        ));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
-        bursts.push(Burst::control(cmds));
+        cmds.push(Cmd::write_u64(fx::CFG_OUT_BIAS, 0));
+        bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x_seq"])
@@ -671,19 +868,45 @@ impl FlexAsr {
             .push("FlexASR_ILA.gb_cfg_gb_control", &["%opcode", "%t"])
             .push("FlexASR_ILA.gb_cfg_mmngr_gb_large", &["%in", "%out"])
             .push("FlexASR_ILA.cfg_exp_bias", &["%biases"])
+            .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%h_seq"]);
 
-        Some(LoweredProgram::single(LoweredInvocation {
+        Some(ProgramTemplate {
             target: Target::FlexAsr,
-            asm,
-            bursts,
-            read: Some(ReadPlan::FlexAf8 {
-                base: fx::GB_BASE + out_base,
-                shape: vec![t, 1, h],
-                fmt: self.af,
-            }),
-        }))
+            invocations: vec![TemplateInvocation {
+                target: Target::FlexAsr,
+                asm,
+                bursts,
+                read: Some(ReadPlan::FlexAf8 {
+                    base: fx::GB_BASE + out_base,
+                    shape: vec![t, 1, h],
+                    fmt: self.af,
+                }),
+            }],
+            stitch: Stitch::Last,
+            mirrors: 1,
+            operand_shapes: vec![
+                x.shape.clone(),
+                wi.shape.clone(),
+                wh.shape.clone(),
+                b.shape.clone(),
+            ],
+            weight_ops: vec![
+                (1, wi.fingerprint()),
+                (2, wh.fingerprint()),
+                (3, b.fingerprint()),
+            ],
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::None,
+            patches: vec![CmdPatch {
+                invocation: 0,
+                burst: 4,
+                cmd: 5,
+                shift: 0,
+                value: BindValue::SlotBias { operand: 0 },
+            }],
+        })
     }
 
     /// Per-step tiled LSTM: the real-driver decomposition when the gate
@@ -725,7 +948,7 @@ impl FlexAsr {
         wh: &Tensor,
         b: &Tensor,
         cap: usize,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         let (t, nrows, e) = (x.shape[0], x.shape[1], x.shape[2]);
         if nrows != 1 {
             return None; // the tiled decomposition models the batch-1 device
@@ -759,13 +982,21 @@ impl FlexAsr {
             return None;
         }
 
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
         let (wic, wib) = fx::encode_tensor(&fmt, wi);
         let (whc, whb) = fx::encode_tensor(&fmt, wh);
         let (bc, bb) = fx::encode_tensor(&fmt, b);
-        // the calibration mirror: one host replay of the recurrence
-        // yields the full bias schedule the device configs replay
-        let (_, sched) = self.lstm_traced(x, wi, wh, b);
+        // the input-independent bias schedule (see [`FlexAsr::lstm_traced`]):
+        // h states on the unit bound, c states on the `step + 1` bound,
+        // the output on the unit bound — all template constants. Only the
+        // wide gate bias keeps an input factor (the sequence row norm),
+        // patched at bind via [`BindValue::WideBias`].
+        let h_bias = fmt.select_bias(1.0);
+        let c_bias = |step: usize| fmt.select_bias((step + 1) as f32);
+        let out_bias = fmt.select_bias(1.0);
+        // weight-side factors of the wide bound
+        let wiq = fx::decode_tensor(&fmt, &wic, wib, &wi.shape);
+        let whq = fx::decode_tensor(&fmt, &whc, whb, &wh.shape);
+        let bq = fx::decode_tensor(&fmt, &bc, bb, &b.shape);
 
         // tile table: (lo, r, wgt2, bias_b, tile_len, dram_off)
         let mut tiles = Vec::new();
@@ -783,25 +1014,32 @@ impl FlexAsr {
         let use_dram = dram_off <= self.dram_budget.min(fx::WGT_DRAM_SIZE);
 
         let mut invocations = Vec::new();
-        // staging: the sequence plus AF8 zero codes for h0/c0. On the
-        // DRAM path each weight tile's burst instead rides in the step-0
-        // invocation that first consumes it (prefetchable stage phase).
+        let mut patches = Vec::new();
+        // staging: the sequence slot plus AF8 zero codes for h0/c0. On
+        // the DRAM path each weight tile's burst instead rides in the
+        // step-0 invocation that first consumes it (prefetchable stage
+        // phase).
         let zeros = vec![0x80u8; align16(h) as usize];
         let bursts = vec![
-            Burst::stage(fx::GB_BASE, &xc),
-            Burst::stage(fx::GB_BASE + h_base as u64, &zeros),
-            Burst::stage(fx::GB_BASE + c_base as u64, &zeros),
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: fx::GB_BASE,
+                bytes: 0..t * e,
+                codec: SlotCodec::FlexAf8 { fmt },
+            }),
+            TemplateBurst::Concrete(Burst::stage(fx::GB_BASE + h_base as u64, &zeros)),
+            TemplateBurst::Concrete(Burst::stage(fx::GB_BASE + c_base as u64, &zeros)),
         ];
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x_seq", "%h0", "%c0"]);
-        invocations.push(LoweredInvocation {
+        invocations.push(TemplateInvocation {
             target: Target::FlexAsr,
             asm,
             bursts,
             read: None,
         });
         // fallback path: encode each tile's stage bursts once and share
-        // them (`Arc`) across all timesteps
+        // them across all timesteps
         let direct_bursts: Vec<Vec<Burst>> = if use_dram {
             Vec::new()
         } else {
@@ -821,8 +1059,8 @@ impl FlexAsr {
         };
 
         for step in 0..t {
-            let h_bias_in = if step == 0 { 0 } else { sched.h[step - 1] };
-            let c_bias_in = if step == 0 { 0 } else { sched.c[step - 1] };
+            let h_bias_in = if step == 0 { 0 } else { h_bias };
+            let c_bias_in = if step == 0 { 0 } else { c_bias(step - 1) };
             for (ti, &(tlo, r, wgt2, bias_b, tile_len, doff)) in tiles.iter().enumerate()
             {
                 let mut bursts = Vec::new();
@@ -838,15 +1076,25 @@ impl FlexAsr {
                         buf[wgt2..wgt2 + r * h]
                             .copy_from_slice(&whc[tlo * h..(tlo + r) * h]);
                         buf[bias_b..].copy_from_slice(&bc[tlo..tlo + r]);
-                        bursts.push(Burst::stage(fx::WGT_DRAM_BASE + doff as u64, &buf));
+                        bursts.push(TemplateBurst::Concrete(Burst::stage(
+                            fx::WGT_DRAM_BASE + doff as u64,
+                            &buf,
+                        )));
                     }
                     cmds.push(Cmd::write_u64(
                         fx::DMA_CTRL,
                         fx::dma_word(doff, 0, tile_len),
                     ));
                 } else {
-                    bursts.extend(direct_bursts[ti].iter().cloned());
+                    bursts.extend(
+                        direct_bursts[ti].iter().cloned().map(TemplateBurst::Concrete),
+                    );
                 }
+                // bind patches: the input-bias lane of CFG_EXP_BIAS and
+                // the wide-bias lane of CFG_EXP_BIAS2
+                let exp_cmd = cmds.len() + 5;
+                let exp2_cmd = cmds.len() + 6;
+                let ctrl_burst = bursts.len();
                 cmds.push(Cmd::write_u64(
                     fx::CFG_LAYER_SIZING,
                     (e as u64) | ((r as u64) << 16),
@@ -866,17 +1114,30 @@ impl FlexAsr {
                 cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR2, h_base as u64));
                 cmds.push(Cmd::write_u64(
                     fx::CFG_EXP_BIAS,
-                    (xb as u8 as u64)
-                        | ((wib as u8 as u64) << 8)
+                    ((wib as u8 as u64) << 8)
                         | ((bb as u8 as u64) << 16)
                         | ((whb as u8 as u64) << 24),
                 ));
                 cmds.push(Cmd::write_u64(
                     fx::CFG_EXP_BIAS2,
-                    (h_bias_in as u8 as u64) | ((sched.wide[step] as u8 as u64) << 8),
+                    h_bias_in as u8 as u64,
                 ));
                 cmds.push(Cmd::write_u64(fx::FN_START, 1));
-                bursts.push(Burst::control(cmds));
+                bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
+                patches.push(CmdPatch {
+                    invocation: invocations.len(),
+                    burst: ctrl_burst,
+                    cmd: exp_cmd,
+                    shift: 0,
+                    value: BindValue::SlotBias { operand: 0 },
+                });
+                patches.push(CmdPatch {
+                    invocation: invocations.len(),
+                    burst: ctrl_burst,
+                    cmd: exp2_cmd,
+                    shift: 8,
+                    value: BindValue::WideBias,
+                });
 
                 let mut asm = Fragment::new();
                 if use_dram {
@@ -894,7 +1155,7 @@ impl FlexAsr {
                     .push("FlexASR_ILA.gb_cfg_gb_control", &["%lstm_gates", "%h"])
                     .push("FlexASR_ILA.cfg_exp_bias2", &["%h_bias", "%wide_bias"])
                     .push("FlexASR_ILA.fn_start", &[]);
-                invocations.push(LoweredInvocation {
+                invocations.push(TemplateInvocation {
                     target: Target::FlexAsr,
                     asm,
                     bursts,
@@ -902,6 +1163,8 @@ impl FlexAsr {
                 });
             }
 
+            // the ACT trigger's whole config is input-independent: the
+            // c/h/out lattices come from the bound schedule
             let mut cmds = Vec::new();
             cmds.push(Cmd::write_u64(
                 fx::CFG_GB_CONTROL,
@@ -918,22 +1181,22 @@ impl FlexAsr {
             cmds.push(Cmd::write_u64(
                 fx::CFG_EXP_BIAS,
                 (c_bias_in as u8 as u64)
-                    | ((sched.h[step] as u8 as u64) << 8)
-                    | ((sched.c[step] as u8 as u64) << 16),
+                    | ((h_bias as u8 as u64) << 8)
+                    | ((c_bias(step) as u8 as u64) << 16),
             ));
             cmds.push(Cmd::write_u64(
                 fx::CFG_OUT_BIAS,
-                0x100 | (sched.out as u8 as u64),
+                0x100 | (out_bias as u8 as u64),
             ));
             cmds.push(Cmd::write_u64(fx::FN_START, 1));
             let mut asm = Fragment::new();
             asm.push("FlexASR_ILA.gb_cfg_gb_control", &["%lstm_act", "%h"])
                 .push("FlexASR_ILA.cfg_out_bias", &["%forced"])
                 .push("FlexASR_ILA.fn_start", &[]);
-            invocations.push(LoweredInvocation {
+            invocations.push(TemplateInvocation {
                 target: Target::FlexAsr,
                 asm,
-                bursts: vec![Burst::control(cmds)],
+                bursts: vec![TemplateBurst::Concrete(Burst::control(cmds))],
                 read: None,
             });
         }
@@ -945,17 +1208,46 @@ impl FlexAsr {
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.cfg_out_bias", &["%auto"])
             .push("FlexASR_ILA.read_v", &["%h_seq"]);
-        invocations.push(LoweredInvocation {
+        invocations.push(TemplateInvocation {
             target: Target::FlexAsr,
             asm,
-            bursts: vec![Burst::control(vec![Cmd::write_u64(fx::CFG_OUT_BIAS, 0)])],
+            bursts: vec![TemplateBurst::Concrete(Burst::control(vec![
+                Cmd::write_u64(fx::CFG_OUT_BIAS, 0),
+            ]))],
             read: Some(ReadPlan::FlexAf8 {
                 base: fx::GB_BASE + out_base as u64,
                 shape: vec![t, 1, h],
                 fmt,
             }),
         });
-        Some(LoweredProgram { invocations, stitch: Stitch::Last, mirrors: 1 })
+        Some(ProgramTemplate {
+            target: Target::FlexAsr,
+            invocations,
+            stitch: Stitch::Last,
+            mirrors: 1,
+            operand_shapes: vec![
+                x.shape.clone(),
+                wi.shape.clone(),
+                wh.shape.clone(),
+                b.shape.clone(),
+            ],
+            weight_ops: vec![
+                (1, wi.fingerprint()),
+                (2, wh.fingerprint()),
+                (3, b.fingerprint()),
+            ],
+            calib: BindCalib::FlexLstm {
+                af: fmt,
+                af_wide: self.af_wide,
+                wi_row_norm: fx::max_row_l2(&wiq.data, e),
+                wh_row_norm: fx::max_row_l2(&whq.data, h),
+                b_max: bq.max_abs(),
+                feat: e,
+                hidden: h,
+            },
+            scale_rule: ScaleRule::None,
+            patches,
+        })
     }
 
     /// Lower a row-wise GB op (max pool / mean pool / layer norm): store,
@@ -965,7 +1257,7 @@ impl FlexAsr {
         x: &Tensor,
         opcode: u64,
         out_rows: usize,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         if x.shape.len() != 2 {
             return None;
         }
@@ -978,14 +1270,22 @@ impl FlexAsr {
             return None;
         }
         let fmt = self.af;
-        let (xc, xb) = fx::encode_tensor(&fmt, x);
         let mut cmds = Vec::new();
         cmds.push(Cmd::write_u64(fx::CFG_LAYER_SIZING, c as u64));
         cmds.push(Cmd::write_u64(fx::CFG_GB_CONTROL, opcode | ((r as u64) << 8)));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
-        cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, xb as u8 as u64));
+        // the input bias is the only input-dependent bit: a bind patch
+        cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, 0));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
-        let bursts = vec![Burst::stage(fx::GB_BASE, &xc), Burst::control(cmds)];
+        let bursts = vec![
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: fx::GB_BASE,
+                bytes: 0..r * c,
+                codec: SlotCodec::FlexAf8 { fmt },
+            }),
+            TemplateBurst::Concrete(Burst::control(cmds)),
+        ];
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%x"])
@@ -996,16 +1296,32 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%out"]);
 
-        Some(LoweredProgram::single(LoweredInvocation {
+        Some(ProgramTemplate {
             target: Target::FlexAsr,
-            asm,
-            bursts,
-            read: Some(ReadPlan::FlexAf8 {
-                base: fx::GB_BASE + out_base,
-                shape: vec![out_rows, c],
-                fmt: self.af,
-            }),
-        }))
+            invocations: vec![TemplateInvocation {
+                target: Target::FlexAsr,
+                asm,
+                bursts,
+                read: Some(ReadPlan::FlexAf8 {
+                    base: fx::GB_BASE + out_base,
+                    shape: vec![out_rows, c],
+                    fmt: self.af,
+                }),
+            }],
+            stitch: Stitch::Last,
+            mirrors: 0,
+            operand_shapes: vec![x.shape.clone()],
+            weight_ops: Vec::new(),
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::None,
+            patches: vec![CmdPatch {
+                invocation: 0,
+                burst: 1,
+                cmd: 3,
+                shift: 0,
+                value: BindValue::SlotBias { operand: 0 },
+            }],
+        })
     }
 
     /// Lower single-head attention: q/k/v staged in three GB regions,
@@ -1015,7 +1331,7 @@ impl FlexAsr {
         q: &Tensor,
         k: &Tensor,
         v: &Tensor,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         if q.shape.len() != 2 || k.shape.len() != 2 || v.shape.len() != 2 {
             return None;
         }
@@ -1040,14 +1356,18 @@ impl FlexAsr {
             return None;
         }
         let fmt = self.af;
-        let (qc, qb) = fx::encode_tensor(&fmt, q);
-        let (kc, kb) = fx::encode_tensor(&fmt, k);
-        let (vc, vb) = fx::encode_tensor(&fmt, v);
-
+        let slot = |operand: usize, base: u64, len: usize| {
+            TemplateBurst::Slot(OperandSlot {
+                operand,
+                base,
+                bytes: 0..len,
+                codec: SlotCodec::FlexAf8 { fmt },
+            })
+        };
         let mut bursts = vec![
-            Burst::stage(fx::GB_BASE, &qc),
-            Burst::stage(fx::GB_BASE + k_base, &kc),
-            Burst::stage(fx::GB_BASE + v_base, &vc),
+            slot(0, fx::GB_BASE, n * d),
+            slot(1, fx::GB_BASE + k_base, n * d),
+            slot(2, fx::GB_BASE + v_base, n * dv),
         ];
         let mut cmds = Vec::new();
         cmds.push(Cmd::write_u64(
@@ -1060,12 +1380,10 @@ impl FlexAsr {
         ));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR, out_base << 32));
         cmds.push(Cmd::write_u64(fx::CFG_GB_MMNGR2, k_base | (v_base << 32)));
-        cmds.push(Cmd::write_u64(
-            fx::CFG_EXP_BIAS,
-            (qb as u8 as u64) | ((kb as u8 as u64) << 8) | ((vb as u8 as u64) << 24),
-        ));
+        // all three operand-bias lanes are bind patches
+        cmds.push(Cmd::write_u64(fx::CFG_EXP_BIAS, 0));
         cmds.push(Cmd::write_u64(fx::FN_START, 1));
-        bursts.push(Burst::control(cmds));
+        bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
 
         let mut asm = Fragment::new();
         asm.push("FlexASR_ILA.write_v", &["%q", "%k", "%v"])
@@ -1077,16 +1395,33 @@ impl FlexAsr {
             .push("FlexASR_ILA.fn_start", &[])
             .push("FlexASR_ILA.read_v", &["%context"]);
 
-        Some(LoweredProgram::single(LoweredInvocation {
+        let patch = |operand: usize, shift: u32| CmdPatch {
+            invocation: 0,
+            burst: 3,
+            cmd: 4,
+            shift,
+            value: BindValue::SlotBias { operand },
+        };
+        Some(ProgramTemplate {
             target: Target::FlexAsr,
-            asm,
-            bursts,
-            read: Some(ReadPlan::FlexAf8 {
-                base: fx::GB_BASE + out_base,
-                shape: vec![n, dv],
-                fmt: self.af,
-            }),
-        }))
+            invocations: vec![TemplateInvocation {
+                target: Target::FlexAsr,
+                asm,
+                bursts,
+                read: Some(ReadPlan::FlexAf8 {
+                    base: fx::GB_BASE + out_base,
+                    shape: vec![n, dv],
+                    fmt: self.af,
+                }),
+            }],
+            stitch: Stitch::Last,
+            mirrors: 0,
+            operand_shapes: vec![q.shape.clone(), k.shape.clone(), v.shape.clone()],
+            weight_ops: Vec::new(),
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::None,
+            patches: vec![patch(0, 0), patch(1, 8), patch(2, 24)],
+        })
     }
 
     /// Lower a chain of `stages` temporal max pools over `t` with the
@@ -1205,11 +1540,11 @@ impl Accelerator for FlexAsr {
         })
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
-        match op {
-            Op::FlexLinear => self.lower_linear(inputs[0], inputs[1], inputs[2]),
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<Arc<ProgramTemplate>> {
+        let tmpl = match op {
+            Op::FlexLinear => self.lower_linear(inputs[0], inputs[1], inputs[2])?,
             Op::FlexLstm { .. } => {
-                self.lower_lstm(inputs[0], inputs[1], inputs[2], inputs[3])
+                self.lower_lstm(inputs[0], inputs[1], inputs[2], inputs[3])?
             }
             Op::FlexLstmFused { .. } => {
                 let x = inputs[0];
@@ -1218,13 +1553,23 @@ impl Accelerator for FlexAsr {
                 }
                 // the driver splits the fused gate matrix; each part gets
                 // its own wire encoding, matching the fast path's
-                // per-part quantization
+                // per-part quantization. The template is keyed on the
+                // FUSED operand list: slots and calib only reference
+                // operand 0 (the input sequence), so re-pointing the
+                // metadata at the fused tensors is sound.
                 let (wih, whh) = split_fused_gates(inputs[1], x.shape[2])?;
-                self.lower_lstm(x, &wih, &whh, inputs[2])
+                let mut tmpl = self.lower_lstm(x, &wih, &whh, inputs[2])?;
+                tmpl.operand_shapes = vec![
+                    x.shape.clone(),
+                    inputs[1].shape.clone(),
+                    inputs[2].shape.clone(),
+                ];
+                tmpl.weight_ops = vec![(1, inputs[1].fingerprint()), (2, inputs[2].fingerprint())];
+                tmpl
             }
             Op::FlexLayerNorm => {
                 let r = *inputs[0].shape.first()?;
-                self.lower_rowwise(inputs[0], fx::OP_LAYERNORM, r)
+                self.lower_rowwise(inputs[0], fx::OP_LAYERNORM, r)?
             }
             Op::FlexMaxpool | Op::FlexMeanpool => {
                 let r = *inputs[0].shape.first()?;
@@ -1236,12 +1581,24 @@ impl Accelerator for FlexAsr {
                 } else {
                     fx::OP_MEANPOOL
                 };
-                self.lower_rowwise(inputs[0], opcode, r / 2)
+                self.lower_rowwise(inputs[0], opcode, r / 2)?
             }
-            Op::FlexAttention => self.lower_attention(inputs[0], inputs[1], inputs[2]),
+            Op::FlexAttention => {
+                self.lower_attention(inputs[0], inputs[1], inputs[2])?
+            }
             // data movement (store/load) has no single-op MMIO program of
             // its own; the engine falls back to the tensor fast path
-            _ => None,
+            _ => return None,
+        };
+        Some(Arc::new(tmpl))
+    }
+
+    fn weight_operands(&self, op: &Op) -> &'static [usize] {
+        match op {
+            Op::FlexLinear => &[1, 2],
+            Op::FlexLstm { .. } => &[1, 2, 3],
+            Op::FlexLstmFused { .. } => &[1, 2],
+            _ => &[],
         }
     }
 
@@ -1268,6 +1625,9 @@ impl Accelerator for FlexAsr {
 ///   scoring + softmax + context (160); 64 covers anything unprofiled.
 /// * Resets re-arm the CSR file (32 cycles) and restore dirty buffer
 ///   bytes at 64 B/cycle.
+/// * `bind_cycles = 8` — the host-side template bind (slot encode + lane
+///   patches) books a small flat overhead per call, so modeled timelines
+///   expose the two-phase lowering's per-call cost explicitly.
 pub fn cost_model() -> crate::cost::CostModel {
     use crate::cost::{CostModel, OpFamily};
     let mut b = CostModel::zero()
@@ -1275,7 +1635,8 @@ pub fn cost_model() -> crate::cost::CostModel {
         .mmio_beat_cycles(4)
         .dma_bytes_per_cycle(32)
         .reset_base_cycles(32)
-        .restore_bytes_per_cycle(64);
+        .restore_bytes_per_cycle(64)
+        .bind_cycles(8);
     for f in OpFamily::ALL {
         b = b.trigger(f, 64);
     }

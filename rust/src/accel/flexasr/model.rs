@@ -182,12 +182,26 @@ pub fn codec_roundtrip(fmt: &AdaptivFloatFormat, t: &Tensor) -> Tensor {
     codec_roundtrip_with(fmt, t, fmt.select_bias(t.max_abs()))
 }
 
-/// [`codec_roundtrip`] under an explicit bias. The tiled-LSTM driver
-/// mirrors the functional recurrence to derive a per-step bias schedule
-/// and replays it here and in the device, so both paths land on the same
-/// lattice.
+/// [`codec_roundtrip`] under an explicit bias. The driver derives
+/// input-independent bias bounds (linear output, LSTM schedule) and
+/// replays them here and in the device configs, so both paths land on
+/// the same lattice.
 pub fn codec_roundtrip_with(fmt: &AdaptivFloatFormat, t: &Tensor, bias: i32) -> Tensor {
     t.map(|v| decode_byte(fmt, encode_byte(fmt, v, bias), bias))
+}
+
+/// Max L2 norm over length-`row_len` rows of `data` — the row factor of
+/// the Cauchy–Schwarz bias bounds (`|x·w row| ≤ ‖x row‖₂·‖w row‖₂`).
+/// Shared by the functional fast path, the template lowerings (weight
+/// side), and [`crate::codegen::ProgramTemplate::bind`] (input side) so
+/// every consumer evaluates bit-identical f32 arithmetic.
+pub fn max_row_l2(data: &[f32], row_len: usize) -> f32 {
+    if row_len == 0 {
+        return 0.0;
+    }
+    data.chunks(row_len)
+        .map(|row| row.iter().map(|v| v * v).sum::<f32>().sqrt())
+        .fold(0.0f32, f32::max)
 }
 
 /// One LSTM timestep's activation/state update over wide-quantized gate

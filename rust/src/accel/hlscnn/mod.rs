@@ -13,13 +13,17 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{
+    BindCalib, Burst, LoweredProgram, OperandSlot, ProgramTemplate, ReadPlan,
+    ScaleRule, SlotCodec, Stitch, TemplateBurst, TemplateInvocation,
+};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
 use crate::numerics::fixed_point::FixedPointFormat;
 use crate::tensor::Tensor;
 use self::model as hx;
+use std::sync::Arc;
 
 /// HLSCNN numerics configuration — the co-design knob of Table 4.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -151,27 +155,32 @@ impl Hlscnn {
         Tensor::new(vec![n, o, oh, ow], out)
     }
 
-    /// Lower `hlscnn_conv2d` to an MMIO command program (batch-1 device;
-    /// the engine falls back to the tensor path for batched inputs).
-    /// When the filter bank or the output exceed the scratchpads, the
-    /// driver tiles over **output channels**: the feature map is staged
-    /// once and each tile streams its filter rows, reconfigures the
+    /// Lower `hlscnn_conv2d` to a weight-keyed MMIO program template
+    /// (batch-1 device; the engine falls back to the tensor path for
+    /// batched inputs). The feature map is the template's one
+    /// [`OperandSlot`] (NHWC i16 codes, staged once); every filter tile
+    /// is a concrete fingerprinted burst. No command lane depends on
+    /// input values — the fixed-point output requantization is
+    /// per-element, with no whole-tensor parameter to calibrate — so the
+    /// template has no patches. When the filter bank or the output
+    /// exceed the scratchpads, the driver tiles over **output
+    /// channels**: each tile streams its filter rows, reconfigures the
     /// shape register with its channel count, triggers, and reads its
-    /// output block back — bit-exact because the fixed-point output
-    /// requantization is per-element (no whole-tensor parameter).
+    /// output block back.
     fn lower_conv2d(
         &self,
         x: &Tensor,
         w: &Tensor,
         stride: (usize, usize),
         pad: (usize, usize),
-    ) -> Option<LoweredProgram> {
-        self.lower_conv2d_capped(x, w, stride, pad, usize::MAX)
+    ) -> Option<ProgramTemplate> {
+        self.lower_conv2d_template(x, w, stride, pad, usize::MAX)
     }
 
     /// [`Self::lower_conv2d`] with a forced output-channel tile `cap`,
     /// the translation-validation entry point: small obligation shapes
-    /// still exercise genuine channel-split programs.
+    /// still exercise genuine channel-split programs. Concrete —
+    /// template + bind over the same operands.
     pub(crate) fn lower_conv2d_capped(
         &self,
         x: &Tensor,
@@ -180,6 +189,20 @@ impl Hlscnn {
         pad: (usize, usize),
         cap: usize,
     ) -> Option<LoweredProgram> {
+        let tmpl = self.lower_conv2d_template(x, w, stride, pad, cap)?;
+        tmpl.bind(&[x, w]).ok().map(|bp| bp.program)
+    }
+
+    /// Template form of [`Self::lower_conv2d_capped`], for slot-aware
+    /// obligations over symbolic feature-map bytes.
+    pub(crate) fn lower_conv2d_template(
+        &self,
+        x: &Tensor,
+        w: &Tensor,
+        stride: (usize, usize),
+        pad: (usize, usize),
+        cap: usize,
+    ) -> Option<ProgramTemplate> {
         if x.shape.len() != 4 || w.shape.len() != 4 || x.shape[0] != 1 {
             return None;
         }
@@ -228,13 +251,19 @@ impl Hlscnn {
             let oc = o_cap.min(o - lo);
             let mut bursts = Vec::new();
             if lo == 0 {
-                // the feature map stays resident across tiles
-                bursts.push(Burst::stage(hx::ACT_BASE, &hx::encode_act_nhwc(self, x)));
+                // the feature map stays resident across tiles: one slot,
+                // encoded at bind (2 bytes per element, NHWC)
+                bursts.push(TemplateBurst::Slot(OperandSlot {
+                    operand: 0,
+                    base: hx::ACT_BASE,
+                    bytes: 0..2 * c * h * wd,
+                    codec: SlotCodec::HlscnnActNhwc { fmt: self.cfg.act_fmt },
+                }));
             }
-            bursts.push(Burst::stage(
+            bursts.push(TemplateBurst::Concrete(Burst::stage(
                 hx::WGT_BASE,
                 &wgt_codes[lo * filter_bytes..(lo + oc) * filter_bytes],
-            ));
+            )));
             let mut cmds = Vec::new();
             cmds.push(Cmd::write_u64(
                 hx::CFG_SHAPE,
@@ -251,7 +280,7 @@ impl Hlscnn {
                     | ((pad.1 as u64) << 40),
             ));
             cmds.push(Cmd::write_u64(hx::CFG_START, 1));
-            bursts.push(Burst::control(cmds));
+            bursts.push(TemplateBurst::Concrete(Burst::control(cmds)));
 
             let mut asm = Fragment::new();
             if lo == 0 {
@@ -263,7 +292,7 @@ impl Hlscnn {
                 .push("HLSCNN_ILA.conv_start", &[])
                 .push("HLSCNN_ILA.rd_out", &["%out_channels"]);
 
-            invocations.push(LoweredInvocation {
+            invocations.push(TemplateInvocation {
                 target: Target::Hlscnn,
                 asm,
                 bursts,
@@ -275,10 +304,16 @@ impl Hlscnn {
             });
             lo += oc;
         }
-        Some(LoweredProgram {
+        Some(ProgramTemplate {
+            target: Target::Hlscnn,
             invocations,
             stitch: Stitch::Concat { axis: 1, shape: vec![1, o, oh, ow] },
             mirrors: 0,
+            operand_shapes: vec![x.shape.clone(), w.shape.clone()],
+            weight_ops: vec![(1, w.fingerprint())],
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::None,
+            patches: Vec::new(),
         })
     }
 }
@@ -305,12 +340,19 @@ impl Accelerator for Hlscnn {
         }
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<Arc<ProgramTemplate>> {
         match op {
-            Op::HlscnnConv2d { stride, pad } => {
-                self.lower_conv2d(inputs[0], inputs[1], *stride, *pad)
-            }
+            Op::HlscnnConv2d { stride, pad } => self
+                .lower_conv2d(inputs[0], inputs[1], *stride, *pad)
+                .map(Arc::new),
             _ => None,
+        }
+    }
+
+    fn weight_operands(&self, op: &Op) -> &'static [usize] {
+        match op {
+            Op::HlscnnConv2d { .. } => &[1],
+            _ => &[],
         }
     }
 
@@ -332,6 +374,7 @@ impl Accelerator for Hlscnn {
 ///   mapped here today) default to 128.
 /// * Resets re-arm the config registers (48) and restore dirty
 ///   activation/weight SRAM at 32 B/cycle.
+/// * `bind_cycles = 8` — flat host-side template-bind overhead per call.
 pub fn cost_model() -> crate::cost::CostModel {
     use crate::cost::{CostModel, OpFamily};
     let mut b = CostModel::zero()
@@ -339,7 +382,8 @@ pub fn cost_model() -> crate::cost::CostModel {
         .mmio_beat_cycles(8)
         .dma_bytes_per_cycle(16)
         .reset_base_cycles(48)
-        .restore_bytes_per_cycle(32);
+        .restore_bytes_per_cycle(32)
+        .bind_cycles(8);
     for f in OpFamily::ALL {
         b = b.trigger(f, 128);
     }

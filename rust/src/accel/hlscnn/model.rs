@@ -136,8 +136,13 @@ fn i16_load(mem: &[u8], base: usize, n: usize) -> Vec<i16> {
 
 /// Encode an NCHW activation tensor into the device's NHWC i16 layout.
 pub fn encode_act_nhwc(dev: &Hlscnn, x: &Tensor) -> Vec<u8> {
+    encode_act_nhwc_fmt(dev.cfg.act_fmt, x)
+}
+
+/// [`encode_act_nhwc`] with an explicit activation format (what a
+/// [`crate::codegen::SlotCodec`] carries).
+pub fn encode_act_nhwc_fmt(fmt: FixedPointFormat, x: &Tensor) -> Vec<u8> {
     let (n, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let fmt = dev.cfg.act_fmt;
     let mut out = vec![0u8; n * c * h * w * 2];
     let mut idx = 0;
     for b in 0..n {

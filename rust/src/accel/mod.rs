@@ -19,6 +19,14 @@
 //! invocation — the always-on VT3-style consistency check that replaced
 //! the old ad-hoc `mmio_matches_tensor_*` tests (see
 //! `tests/backend_parity.rs`).
+//!
+//! Lowering is **two-phase** ([`crate::codegen::ProgramTemplate`]):
+//! [`Accelerator::lower`] yields a weight-keyed template — a function of
+//! the op head, operand shapes, and *weight* contents only — and
+//! [`ProgramTemplate::bind`](crate::codegen::ProgramTemplate::bind)
+//! fills its input-operand slots per call. [`Accelerator::lower_concrete`]
+//! composes the two for callers that want the classic one-shot concrete
+//! program.
 
 pub mod flexasr;
 pub mod hlscnn;
@@ -28,10 +36,11 @@ pub use flexasr::FlexAsr;
 pub use hlscnn::{Hlscnn, HlscnnConfig};
 pub use vta::Vta;
 
-use crate::codegen::LoweredProgram;
+use crate::codegen::{LoweredProgram, ProgramTemplate};
 use crate::ila::Ila;
 use crate::ir::{Op, Target};
 use crate::tensor::Tensor;
+use std::sync::Arc;
 
 /// A supported accelerator.
 pub trait Accelerator: Send + Sync {
@@ -48,23 +57,50 @@ pub trait Accelerator: Send + Sync {
     /// Returns `None` when the op does not belong to this accelerator.
     fn exec_op(&self, op: &Op, inputs: &[&Tensor]) -> Option<Tensor>;
 
-    /// Lower one accelerator IR op to a driver-level MMIO program
-    /// (operand encoding + command streams + result read/stitch plan)
-    /// for execution on the accelerator's ILA simulator.
+    /// Lower one accelerator IR op to a driver-level MMIO **program
+    /// template** (weight encoding + command streams + result read/stitch
+    /// plan, with input operands left as late-bound slots) for execution
+    /// on the accelerator's ILA simulator after a
+    /// [`bind`](ProgramTemplate::bind).
+    ///
+    /// The template depends only on the op head, the operand shapes, and
+    /// the contents of the operands named by [`Self::weight_operands`] —
+    /// never on input values — so one template serves every call of an
+    /// input-varying sweep. Host-side calibration that used to mirror
+    /// input-dependent device state (the FlexASR forced output bias, the
+    /// LSTM bias schedules) is derived from conservative weight-magnitude
+    /// bounds instead; the bind step adds the cheap input-side factor.
     ///
     /// Ops whose operands exceed the device buffers are **tiled**: the
-    /// program carries multiple trigger invocations (weight-row tiles for
+    /// template carries multiple trigger invocations (weight-row tiles for
     /// FlexASR linear layers, per-timestep gate tiles for LSTM,
     /// output-channel tiles for HLSCNN conv2d, flat chunks for the VTA
-    /// ALU) plus a stitch step, and remains bit-exact with
-    /// [`Self::exec_op`] by construction.
+    /// ALU) plus a stitch step, and the bound program remains bit-exact
+    /// with [`Self::exec_op`] by construction.
     ///
     /// Returns `None` when the op does not belong to this accelerator,
     /// is pure data movement, or cannot be staged even tile-wise
     /// (operand shapes outside config-register field widths, inputs
     /// larger than the staging buffers) — the execution engine then
     /// falls back to [`Self::exec_op`].
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram>;
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<Arc<ProgramTemplate>>;
+
+    /// Indices of `op`'s operands that are **weights**: operands a
+    /// template bakes into concrete bursts, so their content fingerprints
+    /// belong in the lowering-cache key (and a bind with different
+    /// contents is rejected). Everything else is a late-bound input.
+    fn weight_operands(&self, op: &Op) -> &'static [usize] {
+        let _ = op;
+        &[]
+    }
+
+    /// One-shot concrete lowering: [`Self::lower`] then bind the same
+    /// operands. This is the classic single-phase entry used by the SoC
+    /// driver, the verification obligations' witness replays, and tests
+    /// that do not exercise template reuse.
+    fn lower_concrete(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
+        self.lower(op, inputs)?.bind(inputs).ok().map(|b| b.program)
+    }
 
     /// Names of the supported operations (Appendix A).
     fn supported_ops(&self) -> Vec<&'static str>;

@@ -11,13 +11,17 @@
 pub mod model;
 
 use super::Accelerator;
-use crate::codegen::{Burst, LoweredInvocation, LoweredProgram, ReadPlan, Stitch};
+use crate::codegen::{
+    BindCalib, Burst, OperandSlot, ProgramTemplate, ReadPlan,
+    ScaleRule, SlotCodec, Stitch, TemplateBurst, TemplateInvocation,
+};
 use crate::ila::asm::Fragment;
 use crate::ila::{Cmd, Ila};
 use crate::ir::{Op, Target};
 use crate::numerics::int8::{int8_gemm_acc, Int8Format};
 use crate::tensor::Tensor;
 use self::model as vx;
+use std::sync::Arc;
 
 /// The VTA accelerator model.
 #[derive(Debug, Clone, Copy, Default)]
@@ -57,7 +61,14 @@ impl Vta {
 
     /// Lower `vta_gemm` (dense semantics) to the fixed
     /// load/load/reset/gemm/store instruction sequence (Appendix A).
-    fn lower_gemm(&self, x: &Tensor, w: &Tensor) -> Option<LoweredProgram> {
+    ///
+    /// The weight operand is encoded into a concrete staged burst at
+    /// lowering (its scale `sw` is baked into the template's
+    /// [`ScaleRule::VtaGemm`]); the activation operand is a late-bound
+    /// [`OperandSlot`] whose int8 scale `sx` and the `sx · sw` read-back
+    /// dequantization are resolved per bind — exactly the values a
+    /// monolithic lowering of the same operands would compute.
+    fn lower_gemm(&self, x: &Tensor, w: &Tensor) -> Option<ProgramTemplate> {
         if x.shape.len() != 2 || w.shape.len() != 2 {
             return None;
         }
@@ -73,18 +84,21 @@ impl Vta {
         if n * k > vx::INP_SIZE || m * k > vx::WGT_SIZE || n * m * 4 > vx::ACC_SIZE {
             return None;
         }
-        let sx = self.int8.select_scale(x.max_abs());
         let sw = self.int8.select_scale(w.max_abs());
-        let xc: Vec<u8> = x.data.iter().map(|&v| self.int8.encode(v, sx) as u8).collect();
         let wc: Vec<u8> = w.data.iter().map(|&v| self.int8.encode(v, sw) as u8).collect();
 
         let bursts = vec![
-            Burst::stage(vx::INP_BASE, &xc),
-            Burst::stage(vx::WGT_BASE, &wc),
-            Burst::control(vec![
+            TemplateBurst::Slot(OperandSlot {
+                operand: 0,
+                base: vx::INP_BASE,
+                bytes: 0..n * k,
+                codec: SlotCodec::VtaI8,
+            }),
+            TemplateBurst::Concrete(Burst::stage(vx::WGT_BASE, &wc)),
+            TemplateBurst::Concrete(Burst::control(vec![
                 Cmd::write(vx::INSN_ADDR, vx::insn_reset((n * m) as u32)),
                 Cmd::write(vx::INSN_ADDR, vx::insn_gemm(n as u16, k as u16, m as u16)),
-            ]),
+            ])),
         ];
 
         let mut asm = Fragment::new();
@@ -94,16 +108,27 @@ impl Vta {
             .push("VTA_ILA.gemm", &["%n", "%k", "%m"])
             .push("VTA_ILA.store_out", &["%out"]);
 
-        Some(LoweredProgram::single(LoweredInvocation {
+        Some(ProgramTemplate {
             target: Target::Vta,
-            asm,
-            bursts,
-            read: Some(ReadPlan::VtaI32 {
-                base: vx::ACC_BASE,
-                shape: vec![n, m],
-                scale: sx * sw,
-            }),
-        }))
+            invocations: vec![TemplateInvocation {
+                target: Target::Vta,
+                asm,
+                bursts,
+                // placeholder scale; the bind rewrites it to `sx · sw`
+                read: Some(ReadPlan::VtaI32 {
+                    base: vx::ACC_BASE,
+                    shape: vec![n, m],
+                    scale: sw,
+                }),
+            }],
+            stitch: Stitch::Last,
+            mirrors: 0,
+            operand_shapes: vec![x.shape.clone(), w.shape.clone()],
+            weight_ops: vec![(1, w.fingerprint())],
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::VtaGemm { sw },
+            patches: Vec::new(),
+        })
     }
 
     /// Lower `vta_add` to driver-level int32 ALU operand staging: the
@@ -114,25 +139,29 @@ impl Vta {
     /// processed in flat chunks (the driver's loop) and stitched by
     /// concatenation — bit-exact because the shared power-of-two scale
     /// is per-*tensor* and computed once by the driver.
-    fn lower_add(&self, a: &Tensor, b: &Tensor) -> Option<LoweredProgram> {
-        self.lower_add_capped(a, b, usize::MAX)
+    fn lower_add(&self, a: &Tensor, b: &Tensor) -> Option<ProgramTemplate> {
+        self.lower_add_template(a, b, usize::MAX)
     }
 
-    /// [`Self::lower_add`] with a forced chunk `cap`, the
-    /// translation-validation entry point: small obligation shapes still
-    /// exercise genuine multi-chunk programs.
-    pub(crate) fn lower_add_capped(
+    /// Template form of the ALU-add lowering: both operands are
+    /// late-bound slots (neither is a weight), sharing one bind-time
+    /// scale ([`ScaleRule::VtaAdd`]) exactly as the driver's monolithic
+    /// loop shares one per-tensor scale. Each chunk invocation slices
+    /// `4·lo .. 4·(lo+len)` out of the operands' widened i32
+    /// accumulator-word streams. A `cap` below the buffer capacity is
+    /// the translation-validation override: small obligation shapes
+    /// still exercise genuine multi-chunk programs.
+    pub(crate) fn lower_add_template(
         &self,
         a: &Tensor,
         b: &Tensor,
         cap: usize,
-    ) -> Option<LoweredProgram> {
+    ) -> Option<ProgramTemplate> {
         // the staged form requires equal shapes; broadcast adds fall
         // back to the (integer-exact) tensor path
         if a.shape != b.shape || a.data.is_empty() {
             return None;
         }
-        let scale = self.int8.select_scale(a.max_abs().max(b.max_abs()));
         let chunk_cap = (vx::ACC_SIZE / 4)
             .min(vx::WGT_SIZE / 4)
             .min(u32::MAX as usize)
@@ -142,20 +171,23 @@ impl Vta {
         let mut lo = 0usize;
         while lo < total {
             let len = chunk_cap.min(total - lo);
-            let enc = |v: f32| (self.int8.encode(v, scale) as i32).to_le_bytes();
-            let mut a_bytes = Vec::with_capacity(4 * len);
-            let mut b_bytes = Vec::with_capacity(4 * len);
-            for i in lo..lo + len {
-                a_bytes.extend_from_slice(&enc(a.data[i]));
-                b_bytes.extend_from_slice(&enc(b.data[i]));
-            }
             let bursts = vec![
-                Burst::stage(vx::ACC_BASE, &a_bytes),
-                Burst::stage(vx::WGT_BASE, &b_bytes),
-                Burst::control(vec![Cmd::write(
+                TemplateBurst::Slot(OperandSlot {
+                    operand: 0,
+                    base: vx::ACC_BASE,
+                    bytes: 4 * lo..4 * (lo + len),
+                    codec: SlotCodec::VtaI8Acc,
+                }),
+                TemplateBurst::Slot(OperandSlot {
+                    operand: 1,
+                    base: vx::WGT_BASE,
+                    bytes: 4 * lo..4 * (lo + len),
+                    codec: SlotCodec::VtaI8Acc,
+                }),
+                TemplateBurst::Concrete(Burst::control(vec![Cmd::write(
                     vx::INSN_ADDR,
                     vx::insn_alu_add(len as u32, true),
-                )]),
+                )])),
             ];
 
             let mut asm = Fragment::new();
@@ -164,22 +196,30 @@ impl Vta {
                 .push("VTA_ILA.alu_add_sat", &["%len"])
                 .push("VTA_ILA.store_out", &["%out_chunk"]);
 
-            invocations.push(LoweredInvocation {
+            invocations.push(TemplateInvocation {
                 target: Target::Vta,
                 asm,
                 bursts,
+                // placeholder scale; the bind rewrites it to the shared
+                // joint-max scale
                 read: Some(ReadPlan::VtaI32 {
                     base: vx::ACC_BASE,
                     shape: vec![len],
-                    scale,
+                    scale: 1.0,
                 }),
             });
             lo += len;
         }
-        Some(LoweredProgram {
+        Some(ProgramTemplate {
+            target: Target::Vta,
             invocations,
             stitch: Stitch::Concat { axis: 0, shape: a.shape.clone() },
             mirrors: 0,
+            operand_shapes: vec![a.shape.clone(), b.shape.clone()],
+            weight_ops: Vec::new(),
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::VtaAdd,
+            patches: Vec::new(),
         })
     }
 
@@ -220,11 +260,22 @@ impl Accelerator for Vta {
         }
     }
 
-    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<LoweredProgram> {
+    fn lower(&self, op: &Op, inputs: &[&Tensor]) -> Option<Arc<ProgramTemplate>> {
+        let tmpl = match op {
+            Op::VtaGemm => self.lower_gemm(inputs[0], inputs[1])?,
+            Op::VtaAdd => self.lower_add(inputs[0], inputs[1])?,
+            _ => return None,
+        };
+        Some(Arc::new(tmpl))
+    }
+
+    fn weight_operands(&self, op: &Op) -> &'static [usize] {
         match op {
-            Op::VtaGemm => self.lower_gemm(inputs[0], inputs[1]),
-            Op::VtaAdd => self.lower_add(inputs[0], inputs[1]),
-            _ => None,
+            // GEMM bakes the pre-encoded weight matrix into a concrete
+            // staged burst; the ALU add has no weight operands (both
+            // sides are late-bound).
+            Op::VtaGemm => &[1],
+            _ => &[],
         }
     }
 
@@ -245,6 +296,9 @@ impl Accelerator for Vta {
 ///   unprofiled families.
 /// * Resets are cheap (24) — the ISA has an explicit accumulator-reset
 ///   instruction — with restores at 32 B/cycle.
+/// * `bind_cycles = 6` — filling a template's operand slots is one int8
+///   encode pass on the host, cheaper than FlexASR's AdaptivFloat
+///   bind (8) thanks to the trivial codec.
 pub fn cost_model() -> crate::cost::CostModel {
     use crate::cost::{CostModel, OpFamily};
     let mut b = CostModel::zero()
@@ -252,7 +306,8 @@ pub fn cost_model() -> crate::cost::CostModel {
         .mmio_beat_cycles(6)
         .dma_bytes_per_cycle(16)
         .reset_base_cycles(24)
-        .restore_bytes_per_cycle(32);
+        .restore_bytes_per_cycle(32)
+        .bind_cycles(6);
     for f in OpFamily::ALL {
         b = b.trigger(f, 48);
     }

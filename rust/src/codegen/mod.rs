@@ -24,6 +24,16 @@
 //! free-function lowerings here any more. The §5.1 fused maxpool-chain
 //! lowering is `FlexAsr::lower_maxpool_chain`; its program-level
 //! accounting stays in [`optimize`].
+//!
+//! Lowering is **two-phase**: `Accelerator::lower` produces a
+//! weight-keyed [`ProgramTemplate`] whose bursts are either concrete
+//! payloads (weights, config, `DMA_CTRL` descriptors) or symbolic
+//! [`OperandSlot`]s for the late-bound input operands, and a cheap
+//! [`ProgramTemplate::bind`] fills the slots per call, yielding the
+//! concrete [`LoweredProgram`] the executors play. The template is a
+//! function of (op head, operand shapes, weight contents) only, so an
+//! engine may cache it across input-varying calls — see
+//! `session::ExecEngine`.
 
 pub mod optimize;
 
@@ -35,8 +45,12 @@ use crate::ila::Cmd;
 use crate::ir::Target;
 use crate::numerics::adaptivfloat::AdaptivFloatFormat;
 use crate::numerics::fixed_point::FixedPointFormat;
+use crate::numerics::int8::Int8Format;
 use crate::tensor::Tensor;
 use crate::util::fnv1a;
+use std::collections::HashMap;
+use std::fmt;
+use std::ops::Range;
 use std::sync::Arc;
 
 /// The MMIO address range an operand burst stages into.
@@ -496,6 +510,577 @@ pub fn read_result(
     }
 }
 
+// ----------------------------------------------------------------------
+// Program templates: weight-keyed programs with late-bound input slots
+// ----------------------------------------------------------------------
+
+/// The wire codec a late-bound operand is encoded with at bind time —
+/// the same storage codec the driver-side lowering would have used on a
+/// concrete tensor.
+#[derive(Debug, Clone, Copy)]
+pub enum SlotCodec {
+    /// FlexASR AdaptivFloat-8 codes. The whole-tensor exponent bias is
+    /// chosen at bind (`select_bias(max_abs)`) and patched into every
+    /// command lane registered with [`BindValue::SlotBias`].
+    FlexAf8 {
+        /// Storage format of the owning design revision.
+        fmt: AdaptivFloatFormat,
+    },
+    /// HLSCNN NHWC activation stream: little-endian i16 fixed-point
+    /// codes in the device's configured activation format.
+    HlscnnActNhwc {
+        /// Activation format of the owning design revision.
+        fmt: FixedPointFormat,
+    },
+    /// VTA int8 codes, one byte per element, quantized by the bind-time
+    /// scale resolved from the template's [`ScaleRule`].
+    VtaI8,
+    /// VTA int8 codes widened to little-endian i32 accumulator words
+    /// (the ALU path pre-loads both operands into the accumulator
+    /// window), quantized by the [`ScaleRule`] scale.
+    VtaI8Acc,
+}
+
+impl SlotCodec {
+    /// Wire bytes per tensor element: AF8 and VTA int8 codes are one
+    /// byte, HLSCNN activations are little-endian i16 words, and the
+    /// VTA ALU path widens each int8 code to an i32 accumulator word.
+    pub fn elem_bytes(&self) -> usize {
+        match self {
+            SlotCodec::FlexAf8 { .. } | SlotCodec::VtaI8 => 1,
+            SlotCodec::HlscnnActNhwc { .. } => 2,
+            SlotCodec::VtaI8Acc => 4,
+        }
+    }
+
+    /// Encode a bound operand into its full wire byte stream. Returns
+    /// the bytes plus the AdaptivFloat exponent bias chosen (0 for
+    /// non-AF codecs). `scale` is the int8 scale for the VTA codecs and
+    /// ignored elsewhere.
+    fn encode(&self, t: &Tensor, scale: f32) -> (Vec<u8>, i32) {
+        match self {
+            SlotCodec::FlexAf8 { fmt } => fx::encode_tensor(fmt, t),
+            SlotCodec::HlscnnActNhwc { fmt } => {
+                (hx::encode_act_nhwc_fmt(*fmt, t), 0)
+            }
+            SlotCodec::VtaI8 => {
+                let f = Int8Format;
+                (t.data.iter().map(|&v| f.encode(v, scale) as u8).collect(), 0)
+            }
+            SlotCodec::VtaI8Acc => {
+                let f = Int8Format;
+                let mut out = Vec::with_capacity(t.data.len() * 4);
+                for &v in &t.data {
+                    out.extend_from_slice(
+                        &(f.encode(v, scale) as i32).to_le_bytes(),
+                    );
+                }
+                (out, 0)
+            }
+        }
+    }
+}
+
+/// A symbolic operand burst inside a [`ProgramTemplate`]: the staging
+/// region is fixed by the template, the payload arrives at bind time.
+#[derive(Debug, Clone)]
+pub struct OperandSlot {
+    /// Index into the op's operand list this slot is filled from.
+    pub operand: usize,
+    /// First byte address the payload stages into.
+    pub base: u64,
+    /// The slice of the operand's encoded byte stream this slot stages
+    /// — tiled/chunked lowerings split one operand across several slots.
+    pub bytes: Range<usize>,
+    /// Wire codec for the operand.
+    pub codec: SlotCodec,
+}
+
+/// One burst position of a template invocation: a concrete fingerprinted
+/// burst (weights, config, triggers, `DMA_CTRL` words) or a late-bound
+/// operand slot.
+#[derive(Debug, Clone)]
+pub enum TemplateBurst {
+    /// Input-independent payload, shared by every bind of the template.
+    Concrete(Burst),
+    /// Late-bound operand staging burst.
+    Slot(OperandSlot),
+}
+
+/// One invocation of a [`ProgramTemplate`] (mirrors
+/// [`LoweredInvocation`], with slot-or-concrete bursts).
+#[derive(Debug, Clone)]
+pub struct TemplateInvocation {
+    /// Owning accelerator.
+    pub target: Target,
+    /// The Fig. 5(c) assembly-level fragment.
+    pub asm: Fragment,
+    /// The burst positions, in stream order.
+    pub bursts: Vec<TemplateBurst>,
+    /// Read plan (a `VtaI32` scale here is a placeholder the bind step
+    /// rewrites per the template's [`ScaleRule`]).
+    pub read: Option<ReadPlan>,
+}
+
+/// A bind-time value patched into an 8-bit lane of a control command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BindValue {
+    /// The AdaptivFloat exponent bias the bind chose for a slotted
+    /// operand (FlexASR `CFG_EXP_BIAS` lanes).
+    SlotBias {
+        /// Operand index the bias belongs to.
+        operand: usize,
+    },
+    /// The input-independent-formula output bias evaluated at bind
+    /// ([`BindCalib`] — FlexASR forced `CFG_OUT_BIAS` low byte).
+    OutBias,
+    /// The LSTM wide accumulator bias evaluated at bind ([`BindCalib`] —
+    /// FlexASR `CFG_EXP_BIAS2` lane).
+    WideBias,
+}
+
+/// One 8-bit lane patch the bind step applies to a control command: the
+/// template keeps every input-independent bit of the word (opcodes,
+/// sizes, the `CFG_OUT_BIAS` force flag) and the bind overwrites only
+/// the registered byte lane.
+#[derive(Debug, Clone, Copy)]
+pub struct CmdPatch {
+    /// Invocation index the patched command lives in.
+    pub invocation: usize,
+    /// Burst index within the invocation (must be a control burst).
+    pub burst: usize,
+    /// Command index within the burst.
+    pub cmd: usize,
+    /// Bit offset of the 8-bit lane to overwrite.
+    pub shift: u32,
+    /// The value resolved at bind time.
+    pub value: BindValue,
+}
+
+/// Input-independent calibration carried by a template: the weight-side
+/// factors of the conservative whole-layer bias bound. The bind step
+/// combines them with the (cheap) input-side factor — see
+/// `accel::flexasr` for the shared bound helpers both this and the
+/// functional fast path evaluate, guaranteeing bit-identical biases.
+#[derive(Debug, Clone)]
+pub enum BindCalib {
+    /// No host-side calibration (HLSCNN, VTA, FlexASR row-wise ops whose
+    /// output bias the device auto-selects).
+    None,
+    /// FlexASR linear: `out_bias = select_bias(w_row_norm · ‖xq row‖₂ +
+    /// b_max)` (Cauchy–Schwarz row bound over codec-roundtripped
+    /// values).
+    FlexLinear {
+        /// Storage format (bias selection + operand roundtrip).
+        af: AdaptivFloatFormat,
+        /// Max L2 norm over rows of the roundtripped weight matrix.
+        w_row_norm: f32,
+        /// Max |b| over the roundtripped bias vector.
+        b_max: f32,
+        /// Row length of the input operand (the contraction dim).
+        k: usize,
+    },
+    /// FlexASR LSTM: `wide = select_bias(wi_norm · ‖xq row‖₂ + wh_norm ·
+    /// √h + b_max)`, constant across timesteps (h is roundtripped at
+    /// bias `select_bias(1.0)` so `‖h row‖₂ ≤ √h`).
+    FlexLstm {
+        /// Storage format (input operand roundtrip).
+        af: AdaptivFloatFormat,
+        /// Wide accumulator format (bias selection).
+        af_wide: AdaptivFloatFormat,
+        /// Max row L2 of the roundtripped input-gate weights.
+        wi_row_norm: f32,
+        /// Max row L2 of the roundtripped hidden-gate weights.
+        wh_row_norm: f32,
+        /// Max |b| over the roundtripped gate bias.
+        b_max: f32,
+        /// Input feature dimension (x row length).
+        feat: usize,
+        /// Hidden dimension.
+        hidden: usize,
+    },
+}
+
+impl BindCalib {
+    /// The forced output bias for this bind, if the calibration defines
+    /// one.
+    fn out_bias(&self, inputs: &[&Tensor]) -> Option<i32> {
+        match self {
+            BindCalib::FlexLinear { af, w_row_norm, b_max, k } => {
+                let xq = fx::codec_roundtrip(af, inputs[0]);
+                let xn = fx::max_row_l2(&xq.data, *k);
+                Some(crate::accel::flexasr::linear_bias_bound(
+                    af, *w_row_norm, xn, *b_max,
+                ))
+            }
+            _ => None,
+        }
+    }
+
+    /// The LSTM wide accumulator bias for this bind, if defined.
+    fn wide_bias(&self, inputs: &[&Tensor]) -> Option<i32> {
+        match self {
+            BindCalib::FlexLstm {
+                af,
+                af_wide,
+                wi_row_norm,
+                wh_row_norm,
+                b_max,
+                feat,
+                hidden,
+            } => {
+                let xq = fx::codec_roundtrip(af, inputs[0]);
+                let xn = fx::max_row_l2(&xq.data, *feat);
+                Some(crate::accel::flexasr::lstm_wide_bias_bound(
+                    af_wide,
+                    *wi_row_norm,
+                    xn,
+                    *wh_row_norm,
+                    *hidden,
+                    *b_max,
+                ))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// How the bind step resolves int8 quantization scales (VTA) and
+/// rewrites the `VtaI32` read-plan dequantization factor.
+#[derive(Debug, Clone, Copy)]
+pub enum ScaleRule {
+    /// No bind-time scale (FlexASR/HLSCNN codecs carry their formats).
+    None,
+    /// VTA GEMM: operand 0 quantizes at `select_scale(max_abs)`; the
+    /// read-back dequantizes by `sx · sw` (`sw` fixed when the template
+    /// was lowered from the weight operand).
+    VtaGemm {
+        /// Weight scale chosen at lowering.
+        sw: f32,
+    },
+    /// VTA ALU add: every slotted operand shares one bind-time scale
+    /// (`select_scale` over their joint max), which also dequantizes the
+    /// read-back.
+    VtaAdd,
+}
+
+/// Why [`ProgramTemplate::bind`] rejected an operand set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BindError {
+    /// Wrong number of operands for the templated op.
+    OperandCount {
+        /// Operands the template was lowered for.
+        expected: usize,
+        /// Operands supplied.
+        got: usize,
+    },
+    /// An operand's shape differs from the shape the template was
+    /// lowered for (templates are shape-keyed).
+    ShapeMismatch {
+        /// Offending operand index.
+        operand: usize,
+    },
+    /// A *weight* operand's content fingerprint differs from the one
+    /// baked into the template — the template's concrete weight bursts
+    /// would silently stage stale weights, so the bind refuses
+    /// (cache-key soundness).
+    WeightMismatch {
+        /// Offending operand index.
+        operand: usize,
+    },
+    /// Internal template inconsistency: a patch or slot referenced a
+    /// position that does not exist.
+    Malformed {
+        /// What was inconsistent.
+        what: &'static str,
+    },
+}
+
+impl fmt::Display for BindError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BindError::OperandCount { expected, got } => {
+                write!(f, "template binds {expected} operands, got {got}")
+            }
+            BindError::ShapeMismatch { operand } => {
+                write!(f, "operand {operand} shape differs from the template key")
+            }
+            BindError::WeightMismatch { operand } => write!(
+                f,
+                "weight operand {operand} content differs from the template \
+                 fingerprint; re-lower instead of re-binding"
+            ),
+            BindError::Malformed { what } => {
+                write!(f, "malformed template: {what}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BindError {}
+
+/// A bound, ready-to-play program plus what the bind resolved — handed
+/// to the engine so binding cost and chosen calibration are observable.
+#[derive(Debug, Clone)]
+pub struct BoundProgram {
+    /// The concrete program (plays exactly like a monolithic lowering).
+    pub program: LoweredProgram,
+    /// Payload bytes the bind encoded into slot bursts.
+    pub slot_bytes: u64,
+    /// AdaptivFloat biases chosen per slotted operand index.
+    pub slot_biases: Vec<(usize, i32)>,
+    /// Forced output bias this bind evaluated, if any.
+    pub out_bias: Option<i32>,
+    /// LSTM wide accumulator bias this bind evaluated, if any.
+    pub wide_bias: Option<i32>,
+    /// VTA read-back dequantization scale this bind resolved, if any.
+    pub read_scale: Option<f32>,
+}
+
+/// A weight-keyed lowered-program template: phase one of the two-phase
+/// lowering. Everything input-independent — weight bursts, `DMA_CTRL`
+/// schedules, tile structure, config words, the weight-side bias-bound
+/// factors — is concrete; input operands are [`OperandSlot`]s plus
+/// [`CmdPatch`]es for the few command lanes that depend on them.
+///
+/// A template is valid for any operand set matching its shapes whose
+/// weight operands match its fingerprints, which is exactly the
+/// engine-side cache key (target, rev, op head, shapes, weight
+/// fingerprints). [`Self::bind`] enforces the weight half at bind time.
+#[derive(Debug, Clone)]
+pub struct ProgramTemplate {
+    /// Owning accelerator.
+    pub target: Target,
+    /// Template invocations, in execution order.
+    pub invocations: Vec<TemplateInvocation>,
+    /// How read-backs assemble into the op result.
+    pub stitch: Stitch,
+    /// Driver-side calibration mirrors a *monolithic* lowering would
+    /// recompute per call and a template hit avoids (weight encodes +
+    /// weight-side bound factors). Reported via the engine's
+    /// `mirror_hits` counter.
+    pub mirrors: usize,
+    /// Shapes of every operand the template was lowered for.
+    pub operand_shapes: Vec<Vec<usize>>,
+    /// `(operand index, content fingerprint)` of each weight operand
+    /// baked into concrete bursts.
+    pub weight_ops: Vec<(usize, u64)>,
+    /// Weight-side factors of the input-independent bias bound.
+    pub calib: BindCalib,
+    /// Bind-time int8 scale resolution (VTA).
+    pub scale_rule: ScaleRule,
+    /// Command-lane patches the bind applies.
+    pub patches: Vec<CmdPatch>,
+}
+
+impl ProgramTemplate {
+    /// Wrap a fully concrete program (no slots, no patches) as a
+    /// template — the degenerate case for lowerings whose whole command
+    /// stream is input-independent apart from the staged operands
+    /// already being weights.
+    pub fn concrete(
+        target: Target,
+        prog: LoweredProgram,
+        operand_shapes: Vec<Vec<usize>>,
+        weight_ops: Vec<(usize, u64)>,
+    ) -> Self {
+        ProgramTemplate {
+            target,
+            mirrors: prog.mirrors,
+            stitch: prog.stitch.clone(),
+            invocations: prog
+                .invocations
+                .into_iter()
+                .map(|inv| TemplateInvocation {
+                    target: inv.target,
+                    asm: inv.asm,
+                    bursts: inv
+                        .bursts
+                        .into_iter()
+                        .map(TemplateBurst::Concrete)
+                        .collect(),
+                    read: inv.read,
+                })
+                .collect(),
+            operand_shapes,
+            weight_ops,
+            calib: BindCalib::None,
+            scale_rule: ScaleRule::None,
+            patches: Vec::new(),
+        }
+    }
+
+    /// Content fingerprints of the template's concrete region-staged
+    /// bursts — the *weight set* of the template. This is what pooled
+    /// checkout affinity routes on: two binds of one template share
+    /// exactly these resident bursts, while slot bursts differ per call.
+    pub fn weight_fingerprints(&self) -> Vec<u64> {
+        self.invocations
+            .iter()
+            .flat_map(|i| i.bursts.iter())
+            .filter_map(|b| match b {
+                TemplateBurst::Concrete(b) if b.region.is_some() => {
+                    Some(b.fingerprint)
+                }
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Every operand slot with its (invocation, burst) position.
+    pub fn slots(&self) -> impl Iterator<Item = (usize, usize, &OperandSlot)> {
+        self.invocations.iter().enumerate().flat_map(|(ii, inv)| {
+            inv.bursts.iter().enumerate().filter_map(move |(bi, b)| match b {
+                TemplateBurst::Slot(s) => Some((ii, bi, s)),
+                TemplateBurst::Concrete(_) => None,
+            })
+        })
+    }
+
+    /// Number of multi-trigger invocations (templates mirror
+    /// [`LoweredProgram::is_tiled`]).
+    pub fn is_tiled(&self) -> bool {
+        self.invocations.len() > 1
+    }
+
+    /// Bind input operands into the slots, producing a concrete program
+    /// bit-identical to a monolithic lowering of the same operands.
+    ///
+    /// Validates shapes and weight fingerprints (a mutated weight tensor
+    /// is rejected — the concrete weight bursts would be stale), encodes
+    /// each slotted operand once through its codec, evaluates the
+    /// input-side bias-bound factors, and applies the command-lane
+    /// patches.
+    pub fn bind(&self, inputs: &[&Tensor]) -> Result<BoundProgram, BindError> {
+        if inputs.len() != self.operand_shapes.len() {
+            return Err(BindError::OperandCount {
+                expected: self.operand_shapes.len(),
+                got: inputs.len(),
+            });
+        }
+        for (i, sh) in self.operand_shapes.iter().enumerate() {
+            if inputs[i].shape != *sh {
+                return Err(BindError::ShapeMismatch { operand: i });
+            }
+        }
+        for &(idx, fp) in &self.weight_ops {
+            if inputs[idx].fingerprint() != fp {
+                return Err(BindError::WeightMismatch { operand: idx });
+            }
+        }
+
+        // Resolve the bind-time int8 scale (VTA) before encoding slots.
+        let (slot_scale, read_scale) = match self.scale_rule {
+            ScaleRule::None => (1.0, None),
+            ScaleRule::VtaGemm { sw } => {
+                let sx = Int8Format.select_scale(inputs[0].max_abs());
+                (sx, Some(sx * sw))
+            }
+            ScaleRule::VtaAdd => {
+                let mut m = 0.0f32;
+                for (_, _, s) in self.slots() {
+                    m = m.max(inputs[s.operand].max_abs());
+                }
+                let s = Int8Format.select_scale(m);
+                (s, Some(s))
+            }
+        };
+
+        // Encode each slotted operand exactly once (tiled lowerings
+        // slice one stream across several slots).
+        let mut streams: HashMap<usize, (Vec<u8>, i32)> = HashMap::new();
+        for (_, _, s) in self.slots() {
+            if !streams.contains_key(&s.operand) {
+                streams.insert(
+                    s.operand,
+                    s.codec.encode(inputs[s.operand], slot_scale),
+                );
+            }
+        }
+        let out_bias = self.calib.out_bias(inputs);
+        let wide_bias = self.calib.wide_bias(inputs);
+
+        let mut slot_bytes = 0u64;
+        let mut invocations = Vec::with_capacity(self.invocations.len());
+        for (ii, tinv) in self.invocations.iter().enumerate() {
+            let mut bursts = Vec::with_capacity(tinv.bursts.len());
+            for (bi, tb) in tinv.bursts.iter().enumerate() {
+                let mut burst = match tb {
+                    TemplateBurst::Concrete(b) => b.clone(),
+                    TemplateBurst::Slot(s) => {
+                        let (stream, _) = &streams[&s.operand];
+                        if s.bytes.end > stream.len() {
+                            return Err(BindError::Malformed {
+                                what: "slot range exceeds operand stream",
+                            });
+                        }
+                        slot_bytes += s.bytes.len() as u64;
+                        Burst::stage(s.base, &stream[s.bytes.clone()])
+                    }
+                };
+                let pats = self
+                    .patches
+                    .iter()
+                    .filter(|p| p.invocation == ii && p.burst == bi);
+                let mut cmds: Option<Vec<Cmd>> = None;
+                for p in pats {
+                    let lane = match p.value {
+                        BindValue::SlotBias { operand } => streams
+                            .get(&operand)
+                            .map(|&(_, b)| b)
+                            .ok_or(BindError::Malformed {
+                                what: "SlotBias patch on an unslotted operand",
+                            })?,
+                        BindValue::OutBias => out_bias.ok_or(
+                            BindError::Malformed { what: "OutBias without calib" },
+                        )?,
+                        BindValue::WideBias => wide_bias.ok_or(
+                            BindError::Malformed { what: "WideBias without calib" },
+                        )?,
+                    } as u8;
+                    let cs = cmds.get_or_insert_with(|| burst.cmds.to_vec());
+                    let c = cs.get_mut(p.cmd).ok_or(BindError::Malformed {
+                        what: "patch command index out of range",
+                    })?;
+                    let v = (c.data_u64() & !(0xFFu64 << p.shift))
+                        | ((lane as u64) << p.shift);
+                    *c = Cmd::write_u64(c.addr, v);
+                }
+                if let Some(cs) = cmds {
+                    // patched bursts are control bursts: rebuild so the
+                    // fingerprint covers the patched payload
+                    burst = Burst::control(cs);
+                }
+                bursts.push(burst);
+            }
+            let read = tinv.read.clone().map(|r| match (r, read_scale) {
+                (ReadPlan::VtaI32 { base, shape, .. }, Some(scale)) => {
+                    ReadPlan::VtaI32 { base, shape, scale }
+                }
+                (r, _) => r,
+            });
+            invocations.push(LoweredInvocation {
+                target: tinv.target,
+                asm: tinv.asm.clone(),
+                bursts,
+                read,
+            });
+        }
+        Ok(BoundProgram {
+            program: LoweredProgram {
+                invocations,
+                stitch: self.stitch.clone(),
+                mirrors: self.mirrors,
+            },
+            slot_bytes,
+            slot_biases: streams.iter().map(|(&i, &(_, b))| (i, b)).collect(),
+            out_bias,
+            wide_bias,
+            read_scale,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,7 +1096,7 @@ mod tests {
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
         let b = dev.quant(&Tensor::randn(&[8], &mut rng, 0.1));
-        let prog = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        let prog = dev.lower_concrete(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
         assert!(!prog.is_tiled(), "small linear is a single trigger");
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_program(&prog, &mut sim).unwrap();
@@ -534,7 +1119,7 @@ mod tests {
         let x = Tensor::randn(&[2, 600], &mut rng, 1.0);
         let w = Tensor::randn(&[600, 600], &mut rng, 0.3);
         let b = Tensor::randn(&[600], &mut rng, 0.1);
-        let prog = dev.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
+        let prog = dev.lower_concrete(&Op::FlexLinear, &[&x, &w, &b]).unwrap();
         assert!(prog.is_tiled(), "600x600 weights exceed one tile");
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_program(&prog, &mut sim).unwrap();
@@ -661,7 +1246,7 @@ mod tests {
         let wi = Tensor::randn(&[4 * h, e], &mut rng, 0.3);
         let wh = Tensor::randn(&[4 * h, h], &mut rng, 0.3);
         let b = Tensor::randn(&[4 * h], &mut rng, 0.1);
-        let prog = dev.lower(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
+        let prog = dev.lower_concrete(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
         assert!(prog.is_tiled());
         assert_eq!(prog.mirrors, 1, "the bias-schedule mirror is declared");
         use crate::accel::flexasr::model as fxm;
@@ -704,7 +1289,7 @@ mod tests {
         let x = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
         let w = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
         let op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
-        let prog = dev.lower(&op, &[&x, &w]).unwrap();
+        let prog = dev.lower_concrete(&op, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_program(&prog, &mut sim).unwrap();
         // updated design: the integer kernel is shared, so the MMIO and
@@ -719,7 +1304,7 @@ mod tests {
         let mut rng = Rng::new(74);
         let x = dev.quant(&Tensor::randn(&[4, 16], &mut rng, 1.0));
         let w = dev.quant(&Tensor::randn(&[8, 16], &mut rng, 1.0));
-        let prog = dev.lower(&Op::VtaGemm, &[&x, &w]).unwrap();
+        let prog = dev.lower_concrete(&Op::VtaGemm, &[&x, &w]).unwrap();
         let mut sim = IlaSim::new(dev.build_ila());
         let got = execute_program(&prog, &mut sim).unwrap();
         let expect = dev.gemm(&x, &w);
@@ -796,7 +1381,7 @@ mod tests {
         let wh = Tensor::randn(&[4 * h, h], &mut rng, 0.3);
         let b = Tensor::randn(&[4 * h], &mut rng, 0.1);
         let prog =
-            dev.lower(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
+            dev.lower_concrete(&Op::FlexLstm { steps: t }, &[&x, &wi, &wh, &b]).unwrap();
         let weight_bytes = (4 * h * e + 4 * h * h) as u64;
         assert!(
             prog.dma_replay_bytes() >= weight_bytes * t as u64,

@@ -276,6 +276,16 @@ pub enum Event {
         /// Bytes restored.
         bytes: u64,
     },
+    /// A template bind: host-side encoding of late-bound input operands
+    /// into a cached [`crate::codegen::ProgramTemplate`]'s slots plus
+    /// the command-lane patches. Flat per-bind overhead — the encoded
+    /// bytes still cross the bus as ordinary `Stage` events, so only the
+    /// fixed host work is charged here.
+    Bind {
+        /// Slot payload bytes the bind encoded (reported for visibility;
+        /// not part of the cycle cost).
+        bytes: u64,
+    },
 }
 
 // ----------------------------------------------------------------------
@@ -299,6 +309,9 @@ pub struct CostModel {
     /// Bandwidth of restoring/re-zeroing dirty bytes on reset, bytes per
     /// cycle.
     pub restore_bytes_per_cycle: u64,
+    /// Flat host-side cost of binding input operands into a cached
+    /// program template (slot encodes + command-lane patches).
+    pub bind_cycles: u64,
 }
 
 impl CostModel {
@@ -322,6 +335,7 @@ impl CostModel {
             trigger_cycles: [0; OpFamily::COUNT],
             reset_base_cycles: 0,
             restore_bytes_per_cycle: 1,
+            bind_cycles: 0,
         }
     }
 
@@ -367,6 +381,11 @@ impl CostModel {
                         0
                     };
             }
+            Event::Bind { .. } => {
+                // flat per-bind host work; the encoded bytes are costed
+                // by the Stage events that stream them
+                c.overhead = self.bind_cycles;
+            }
         }
         c
     }
@@ -406,6 +425,12 @@ impl CostModelBuilder {
     /// Override the reset restore bandwidth (bytes per cycle).
     pub fn restore_bytes_per_cycle(mut self, v: u64) -> Self {
         self.model.restore_bytes_per_cycle = v;
+        self
+    }
+
+    /// Override the flat template-bind cost.
+    pub fn bind_cycles(mut self, v: u64) -> Self {
+        self.model.bind_cycles = v;
         self
     }
 
@@ -476,6 +501,9 @@ pub struct OpCycles {
     pub read_bytes: u64,
     /// Triggers fired.
     pub triggers: u64,
+    /// Template binds performed (input operands encoded into a cached
+    /// program template's slots).
+    pub binds: u64,
 }
 
 impl OpCycles {
@@ -491,6 +519,7 @@ impl OpCycles {
             dma_bytes: 0,
             read_bytes: 0,
             triggers: 0,
+            binds: 0,
         }
     }
 
@@ -503,6 +532,7 @@ impl OpCycles {
         self.dma_bytes += o.dma_bytes;
         self.read_bytes += o.read_bytes;
         self.triggers += o.triggers;
+        self.binds += o.binds;
     }
 
     fn delta_from(&self, base: &OpCycles) -> OpCycles {
@@ -517,6 +547,7 @@ impl OpCycles {
             dma_bytes: self.dma_bytes.saturating_sub(base.dma_bytes),
             read_bytes: self.read_bytes.saturating_sub(base.read_bytes),
             triggers: self.triggers.saturating_sub(base.triggers),
+            binds: self.binds.saturating_sub(base.binds),
         }
     }
 
@@ -529,6 +560,7 @@ impl OpCycles {
             && self.dma_bytes == 0
             && self.read_bytes == 0
             && self.triggers == 0
+            && self.binds == 0
     }
 
     /// Merge per-worker op tallies into one canonical list: sums are
@@ -634,6 +666,7 @@ impl Timeline {
             Event::DmaReplay { bytes } => entry.dma_bytes += bytes,
             Event::Trigger { .. } => entry.triggers += 1,
             Event::Read { bytes } => entry.read_bytes += bytes,
+            Event::Bind { .. } => entry.binds += 1,
             Event::Control { .. } | Event::Reset { .. } => {}
         }
     }
@@ -799,6 +832,7 @@ mod tests {
             .trigger(OpFamily::Linear, 96)
             .reset_base_cycles(10)
             .restore_bytes_per_cycle(64)
+            .bind_cycles(7)
             .build();
         assert_eq!(m.cycles(&Event::Stage { bytes: 22, beats: 2 }).transfer, 8);
         assert_eq!(m.cycles(&Event::DedupSkip { bytes: 1 << 20 }).total(), 0);
@@ -818,6 +852,9 @@ mod tests {
         assert_eq!(m.cycles(&Event::Read { bytes: 17 }).transfer, 8);
         assert_eq!(m.cycles(&Event::Reset { bytes: 0 }).overhead, 10);
         assert_eq!(m.cycles(&Event::Reset { bytes: 65 }).overhead, 12);
+        // binds are flat overhead regardless of payload size
+        let bind = m.cycles(&Event::Bind { bytes: 1 << 20 });
+        assert_eq!((bind.overhead, bind.transfer, bind.compute), (7, 0, 0));
     }
 
     #[test]
@@ -841,9 +878,11 @@ mod tests {
         tl.record(Event::Stage { bytes: 160, beats: 10 });
         tl.record(Event::PrefetchedStage { bytes: 40, beats: 3, overlap_cycles: 6 });
         tl.record(Event::Trigger { family: OpFamily::Linear });
+        tl.record(Event::Bind { bytes: 160 });
         let linear = tl.per_op()[0].clone();
         assert_eq!(linear.staged_bytes, 200, "prefetched bytes also count as staged");
         assert_eq!(linear.prefetched_bytes, 40);
+        assert_eq!(linear.binds, 1);
         let snap = tl.snapshot();
 
         tl.begin_op(Target::Vta, "vta_gemm");

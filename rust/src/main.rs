@@ -366,7 +366,7 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
     let w = fa.quant(&Tensor::randn(&[8, 16], &mut rng, 0.3));
     let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
     let prog = fa
-        .lower(&Op::FlexLinear, &[&x, &w, &b])
+        .lower_concrete(&Op::FlexLinear, &[&x, &w, &b])
         .expect("linear fits the device");
     println!("FlexASR linear fragment (Fig. 5c):\n{}", prog.invocations[0].asm);
     println!("final MMIO commands (Fig. 5d):");
@@ -379,7 +379,7 @@ fn cmd_soc_demo() -> anyhow::Result<()> {
     let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
     let yq = vta.quant(&y);
     let gemm = vta
-        .lower(&Op::VtaGemm, &[&yq, &w2])
+        .lower_concrete(&Op::VtaGemm, &[&yq, &w2])
         .expect("gemm fits the device");
     let y2 = drv.invoke_program(&gemm)?;
     println!(

@@ -37,7 +37,7 @@ use super::{AcceleratorRegistry, DesignRev};
 use crate::accel::flexasr::model as fx;
 use crate::accel::flexasr::paging::PageTable;
 use crate::accel::Accelerator;
-use crate::codegen::{self, Burst, LoweredInvocation, LoweredProgram};
+use crate::codegen::{self, Burst, LoweredInvocation, LoweredProgram, ProgramTemplate};
 use crate::cost::{self, CostTable, CycleBreakdown, Event, OpFamily, Timeline};
 use crate::ila::sim::IlaSim;
 use crate::ila::{Cmd, Ila};
@@ -228,50 +228,68 @@ impl fmt::Display for FidelityReport {
 }
 
 /// Cache key of one lowering: the accelerator, the design revision it
-/// was instantiated for, the op head, and a content fingerprint of every
-/// operand (shape + element bits). Two calls with bit-identical operands
-/// — the common case for repeated evaluations of the same layer in
-/// `classify_sweep`/`lm_sweep` and for caller-held-engine reruns — hit
-/// the same entry.
+/// was instantiated for, the op head, every operand's **shape**, and a
+/// content fingerprint of the **weight** operands only (per
+/// [`Accelerator::weight_operands`]). Input operand *values* are
+/// deliberately absent — [`Accelerator::lower`] produces a weight-keyed
+/// [`ProgramTemplate`] that is valid for every input of the keyed
+/// shapes, so an input-varying sweep over a fixed layer hits one entry
+/// per op instead of missing per data point.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 struct LowerKey {
     target: Target,
     rev: Option<DesignRev>,
     op: String,
-    operands: Vec<u64>,
+    shapes: Vec<Vec<usize>>,
+    weights: Vec<u64>,
 }
 
-/// Bound on cached lowered programs per engine (per-datapoint operands
-/// in big sweeps would otherwise grow the memo without bound, and a
-/// tiled program can hold megabytes of encoded weight bursts). When
+/// Default bound on cached program templates per engine (distinct layers
+/// in big models would otherwise grow the memo without bound, and a
+/// tiled template can hold megabytes of encoded weight bursts). When
 /// full, the **least-recently-used single entry** is evicted, so hot
-/// repeated-layer programs survive per-datapoint churn that a wholesale
-/// clear would flush.
+/// repeated-layer templates survive churn that a wholesale clear would
+/// flush. Override per engine with
+/// [`ExecEngine::with_lowering_cache_capacity`].
 const LOWER_CACHE_CAP: usize = 16;
 
-/// One cached lowering plus its LRU stamp.
+/// One cached template plus its LRU stamp.
 struct CacheSlot {
-    prog: Option<Arc<LoweredProgram>>,
+    tmpl: Option<Arc<ProgramTemplate>>,
     last_use: u64,
 }
 
-/// A per-engine memo of whole lowered programs, `Arc`-shared with every
-/// caller. A hit skips re-encoding every operand burst **and** skips the
-/// driver-side calibration mirrors the tiled lowerings must otherwise
-/// recompute per call (the tiled-linear forced-bias matmul replay and
-/// the tiled-LSTM `lstm_traced` bias-schedule replay) — the dominant
-/// host-side cost of the MMIO path for repeated evaluations. Declines
-/// (`lower` → `None`) are cached too, so unlowerable ops pay the probe
-/// once per operand set. Eviction is per-entry LRU (see
-/// [`LOWER_CACHE_CAP`]), counted in `evictions`.
-#[derive(Default)]
+/// A per-engine memo of weight-keyed program templates, `Arc`-shared
+/// with every caller. A hit skips re-encoding the weight bursts **and**
+/// skips the driver-side calibration mirrors a monolithic lowering must
+/// otherwise recompute per call (the FlexASR forced-bias bound factors
+/// and the tiled-LSTM bias schedule) — the dominant host-side cost of
+/// the MMIO path; only the cheap per-call [`ProgramTemplate::bind`]
+/// remains. Declines (`lower` → `None`) are cached too, so unlowerable
+/// ops pay the probe once per (shape, weight) set. Eviction is per-entry
+/// LRU up to `cap`, counted in `evictions`.
 struct LoweringCache {
     entries: HashMap<LowerKey, CacheSlot>,
+    cap: usize,
     clock: u64,
     hits: u64,
     misses: u64,
     mirror_hits: u64,
     evictions: u64,
+}
+
+impl Default for LoweringCache {
+    fn default() -> Self {
+        LoweringCache {
+            entries: HashMap::new(),
+            cap: LOWER_CACHE_CAP,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            mirror_hits: 0,
+            evictions: 0,
+        }
+    }
 }
 
 /// Drop residency entries that `cmds` may invalidate: writes to a
@@ -590,6 +608,20 @@ impl<'r> ExecEngine<'r> {
         self
     }
 
+    /// Cap the per-engine template cache at `entries` (clamped to ≥ 1;
+    /// default [`LOWER_CACHE_CAP`]). Sessions serving many distinct
+    /// layers raise it to keep every template hot; capacity tests shrink
+    /// it to force LRU churn.
+    pub fn with_lowering_cache_capacity(mut self, entries: usize) -> Self {
+        self.cache.cap = entries.max(1);
+        self
+    }
+
+    /// The template-cache capacity in effect.
+    pub fn lowering_cache_capacity(&self) -> usize {
+        self.cache.cap
+    }
+
     /// True when this engine draws devices from a shared [`DevicePool`].
     pub fn pooled(&self) -> bool {
         matches!(self.devices, DeviceSource::Pooled(_))
@@ -715,19 +747,23 @@ impl<'r> ExecEngine<'r> {
         self.timeline.set_models(models);
     }
 
-    /// Driver-side calibration mirrors avoided by lowering-cache hits
-    /// (the tiled-linear forced-bias replay and the tiled-LSTM
-    /// `lstm_traced` bias-schedule replay).
+    /// Driver-side calibration mirrors avoided by template-cache hits:
+    /// the weight encodes and weight-side bias-bound factors (the
+    /// FlexASR forced `CFG_OUT_BIAS` and LSTM bias-schedule mirrors) a
+    /// monolithic lowering would recompute per call. Because templates
+    /// are weight-keyed, these accrue even when every call's *inputs*
+    /// differ.
     pub fn mirror_hits(&self) -> u64 {
         self.cache.mirror_hits
     }
 
-    /// Lowering-cache hits (whole programs reused without re-encoding).
+    /// Template-cache hits (weight-keyed templates reused; only the
+    /// per-call bind ran).
     pub fn lower_cache_hits(&self) -> u64 {
         self.cache.hits
     }
 
-    /// Lowering-cache misses (programs lowered from scratch).
+    /// Template-cache misses (templates lowered from scratch).
     pub fn lower_cache_misses(&self) -> u64 {
         self.cache.misses
     }
@@ -788,7 +824,7 @@ impl<'r> ExecEngine<'r> {
         match self.backend {
             ExecBackend::Functional => Ok(accel.exec_op(op, inputs)),
             ExecBackend::IlaMmio => match self.lower_cached(accel, op, inputs) {
-                Some(prog) => self.run_lowered(accel, op, &prog).map(Some),
+                Some(tmpl) => self.run_template(accel, op, &tmpl, inputs).map(Some),
                 // not lowerable (data movement, shapes that cannot be
                 // staged even tile-wise): the tensor path keeps the
                 // application running end to end
@@ -800,8 +836,8 @@ impl<'r> ExecEngine<'r> {
                     None => return Ok(None),
                 };
                 match self.lower_cached(accel, op, inputs) {
-                    Some(prog) => {
-                        let mmio = self.run_lowered(accel, op, &prog)?;
+                    Some(tmpl) => {
+                        let mmio = self.run_template(accel, op, &tmpl, inputs)?;
                         self.fidelity.record(op, accel.target(), &functional, &mmio);
                     }
                     // not lowerable: count it so a "clean" report cannot
@@ -813,42 +849,48 @@ impl<'r> ExecEngine<'r> {
         }
     }
 
-    /// Lower an op through the per-engine [`LoweringCache`]: bit-identical
-    /// operands reuse the `Arc`-shared program (and its embedded
-    /// calibration-mirror results) instead of re-encoding every burst;
-    /// declines are memoized too.
+    /// Lower an op through the per-engine [`LoweringCache`]: any call
+    /// whose shapes match and whose *weight* operands are bit-identical
+    /// reuses the `Arc`-shared template (weight bursts pre-encoded,
+    /// weight-side calibration factors pre-computed) — input values do
+    /// not participate in the key. Declines are memoized too.
     fn lower_cached(
         &mut self,
         accel: &dyn Accelerator,
         op: &Op,
         inputs: &[&Tensor],
-    ) -> Option<Arc<LoweredProgram>> {
+    ) -> Option<Arc<ProgramTemplate>> {
         let key = LowerKey {
             target: accel.target(),
             rev: self.registry.design_rev(),
             op: op.head(),
-            operands: inputs.iter().map(|t| t.fingerprint()).collect(),
+            shapes: inputs.iter().map(|t| t.shape.clone()).collect(),
+            weights: accel
+                .weight_operands(op)
+                .iter()
+                .filter_map(|&i| inputs.get(i).map(|t| t.fingerprint()))
+                .collect(),
         };
         self.cache.clock += 1;
         let now = self.cache.clock;
         if let Some(slot) = self.cache.entries.get_mut(&key) {
             slot.last_use = now;
             self.cache.hits += 1;
-            return match &slot.prog {
-                Some(p) => {
-                    let p = Arc::clone(p);
-                    self.cache.mirror_hits += p.mirrors as u64;
-                    Some(p)
+            return match &slot.tmpl {
+                Some(t) => {
+                    let t = Arc::clone(t);
+                    self.cache.mirror_hits += t.mirrors as u64;
+                    Some(t)
                 }
                 None => None,
             };
         }
         self.cache.misses += 1;
-        let lowered = accel.lower(op, inputs).map(Arc::new);
-        if self.cache.entries.len() >= LOWER_CACHE_CAP {
-            // evict the least-recently-used single entry: per-datapoint
-            // operands churn through the cold slots while hot
-            // repeated-layer programs keep refreshing their stamp
+        let lowered = accel.lower(op, inputs);
+        if self.cache.entries.len() >= self.cache.cap {
+            // evict the least-recently-used single entry: cold one-off
+            // layers churn through while hot repeated-layer templates
+            // keep refreshing their stamp
             let victim = self
                 .cache
                 .entries
@@ -860,17 +902,58 @@ impl<'r> ExecEngine<'r> {
                 self.cache.evictions += 1;
             }
         }
-        self.cache.entries.insert(key, CacheSlot { prog: lowered.clone(), last_use: now });
+        self.cache.entries.insert(key, CacheSlot { tmpl: lowered.clone(), last_use: now });
         lowered
     }
 
-    /// Run a lowered program on a device — private or checked out of the
-    /// shared pool, per this engine's [`DeviceSource`].
+    /// Bind a cached template to this call's operands and play the
+    /// resulting concrete program. The bind is the whole per-call
+    /// host-side cost of a template hit — one codec pass over the input
+    /// operands plus a few command-lane patches — recorded as
+    /// [`Event::Bind`]. Pooled checkouts route on the template's
+    /// *weight* fingerprints (stable across binds), not the per-call
+    /// slot bursts, so affinity keeps steering repeat calls of one layer
+    /// to the device already holding its weights.
+    fn run_template(
+        &mut self,
+        accel: &dyn Accelerator,
+        op: &Op,
+        tmpl: &ProgramTemplate,
+        inputs: &[&Tensor],
+    ) -> Result<Tensor, EvalError> {
+        let bound = tmpl
+            .bind(inputs)
+            .map_err(|e| EvalError::Op(op.head(), format!("template bind: {e}")))?;
+        let fps = tmpl.weight_fingerprints();
+        self.run_program(accel, op, &bound.program, &fps, Some(bound.slot_bytes))
+    }
+
+    /// Run an already-concrete lowered program (no template bind): the
+    /// entry point for verification replays and prefetch tests that hold
+    /// a `LoweredProgram` directly. Pooled checkouts route on every
+    /// staged-burst fingerprint.
     fn run_lowered(
         &mut self,
         accel: &dyn Accelerator,
         op: &Op,
         prog: &LoweredProgram,
+    ) -> Result<Tensor, EvalError> {
+        let fps = staged_fingerprints(prog);
+        self.run_program(accel, op, prog, &fps, None)
+    }
+
+    /// Run a lowered program on a device — private or checked out of the
+    /// shared pool, per this engine's [`DeviceSource`]. `affinity`
+    /// carries the burst fingerprints a pooled checkout scores devices
+    /// by; `bind_bytes` is `Some` when the program came from a template
+    /// bind (recorded as [`Event::Bind`] overhead inside the op).
+    fn run_program(
+        &mut self,
+        accel: &dyn Accelerator,
+        op: &Op,
+        prog: &LoweredProgram,
+        affinity: &[u64],
+        bind_bytes: Option<u64>,
     ) -> Result<Tensor, EvalError> {
         self.lowered += 1;
         self.triggers += prog.invocations.len();
@@ -879,12 +962,11 @@ impl<'r> ExecEngine<'r> {
             DeviceSource::Private(_) => None,
         };
         if let Some(pool) = pool {
-            // checkout carries the program's staged-burst fingerprints so
-            // the arbiter can route to the device with the best residency
-            let fps = staged_fingerprints(prog);
+            // checkout carries the affinity fingerprints so the arbiter
+            // can route to the device with the best residency
             let cap = self.dram_capacity;
             let mut lease = pool
-                .checkout(accel.target(), &fps, || {
+                .checkout(accel.target(), affinity, || {
                     Device::with_dram_capacity(IlaSim::new(accel.build_ila()), cap)
                 })
                 .map_err(|e| EvalError::Op(op.head(), format!("MMIO backend: {e}")))?;
@@ -893,7 +975,7 @@ impl<'r> ExecEngine<'r> {
             // this program executed ride back with it so the pool can
             // report occupancy/wait in device cycles, not just wall time
             let before = self.timeline.totals();
-            let out = self.play_program(lease.device_mut(), op, prog);
+            let out = self.play_program(lease.device_mut(), op, prog, bind_bytes);
             let delta = self.timeline.totals().saturating_sub(&before);
             lease.note_cycles(delta.total());
             return out;
@@ -910,7 +992,7 @@ impl<'r> ExecEngine<'r> {
                 Device::with_dram_capacity(IlaSim::new(accel.build_ila()), self.dram_capacity)
             }
         };
-        let out = self.play_program(&mut dev, op, prog);
+        let out = self.play_program(&mut dev, op, prog, bind_bytes);
         if let DeviceSource::Private(slots) = &mut self.devices {
             slots[idx] = Some(dev);
         }
@@ -944,11 +1026,17 @@ impl<'r> ExecEngine<'r> {
         dev: &mut Device,
         op: &Op,
         prog: &LoweredProgram,
+        bind_bytes: Option<u64>,
     ) -> Result<Tensor, EvalError> {
         let head = op.head();
         let family = OpFamily::of_head(&head);
         let target = prog.target();
         self.timeline.begin_op(target, &head);
+        if let Some(bytes) = bind_bytes {
+            // the template bind that produced this program: flat host
+            // overhead, attributed to the op it served
+            self.timeline.record(Event::Bind { bytes });
+        }
         let Device { sim, resident, pages } = dev;
         // phase 1: bind every DRAM stage burst to a page (this purges
         // residency for evicted pages, so the reset below rewinds them)
@@ -1352,6 +1440,52 @@ mod tests {
         let misses_before = engine.lower_cache_misses();
         engine.execute(&Op::FlexLinear, &[&x, &weights[1], &b]).unwrap().unwrap();
         assert_eq!(engine.lower_cache_misses(), misses_before + 1);
+    }
+
+    #[test]
+    fn lowering_cache_capacity_knob_bounds_evictions() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine =
+            ExecEngine::new(&reg, ExecBackend::IlaMmio).with_lowering_cache_capacity(2);
+        assert_eq!(engine.lowering_cache_capacity(), 2);
+        let mut rng = Rng::new(12);
+        let x = Tensor::randn(&[1, 16], &mut rng, 1.0);
+        let b = Tensor::randn(&[4], &mut rng, 0.1);
+        let weights: Vec<Tensor> = (0..4).map(|_| Tensor::randn(&[4, 16], &mut rng, 0.3)).collect();
+        for w in weights.iter().take(2) {
+            engine.execute(&Op::FlexLinear, &[&x, w, &b]).unwrap().unwrap();
+        }
+        assert_eq!(engine.lower_cache_evictions(), 0, "at capacity, no eviction yet");
+        for w in weights.iter().skip(2) {
+            engine.execute(&Op::FlexLinear, &[&x, w, &b]).unwrap().unwrap();
+        }
+        // each overflow evicts exactly one LRU entry
+        assert_eq!(engine.lower_cache_evictions(), 2);
+        // the zero request clamps to one live entry, not an unusable cache
+        let clamped = ExecEngine::new(&reg, ExecBackend::IlaMmio).with_lowering_cache_capacity(0);
+        assert_eq!(clamped.lowering_cache_capacity(), 1);
+    }
+
+    #[test]
+    fn input_varying_calls_hit_the_weight_keyed_template_cache() {
+        let reg = registry(DesignRev::Updated);
+        let mut engine = ExecEngine::new(&reg, ExecBackend::CrossCheck);
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(&[8, 16], &mut rng, 0.3);
+        let b = Tensor::randn(&[8], &mut rng, 0.1);
+        for i in 0..4 {
+            let x = Tensor::randn(&[4, 16], &mut rng, 1.0 + i as f32 * 0.1);
+            engine.execute(&Op::FlexLinear, &[&x, &w, &b]).unwrap().unwrap();
+        }
+        // one template miss, then every fresh-input call hits and binds
+        assert_eq!(engine.lower_cache_misses(), 1);
+        assert_eq!(engine.lower_cache_hits(), 3);
+        assert!(engine.mirror_hits() > 0, "weight-side mirrors must be reused");
+        let row = &engine.timeline().per_op()[0];
+        assert_eq!(row.binds, 4, "every call binds the template");
+        let rep = engine.take_fidelity();
+        assert_eq!(rep.total_checked(), 4);
+        assert!(rep.is_clean(), "bound programs must stay bit-exact:\n{rep}");
     }
 
     #[test]

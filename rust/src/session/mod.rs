@@ -115,6 +115,7 @@ pub struct SessionBuilder {
     sched: SchedPolicy,
     prefetch: bool,
     dram_capacity: usize,
+    lower_cache_cap: Option<usize>,
 }
 
 impl Default for SessionBuilder {
@@ -141,6 +142,7 @@ impl SessionBuilder {
             sched: SchedPolicy::Affinity,
             prefetch: true,
             dram_capacity: crate::accel::flexasr::model::WGT_DRAM_SIZE,
+            lower_cache_cap: None,
         }
     }
 
@@ -243,6 +245,17 @@ impl SessionBuilder {
         self
     }
 
+    /// Cap each engine's weight-keyed template cache at `entries`
+    /// (clamped to ≥ 1; engine default when unset). Templates are keyed
+    /// by (target, revision, op head, operand shapes, weight
+    /// fingerprints), so a serving session with more distinct hot layers
+    /// than the default capacity raises this to keep every layer's
+    /// template resident.
+    pub fn lowering_cache_capacity(mut self, entries: usize) -> Self {
+        self.lower_cache_cap = Some(entries.max(1));
+        self
+    }
+
     /// Instantiate the accelerator models once and freeze the session.
     pub fn build(self) -> Session {
         Session {
@@ -258,6 +271,7 @@ impl SessionBuilder {
             pool: self.pool_devices.map(|k| Arc::new(DevicePool::new(k, self.sched))),
             prefetch: self.prefetch,
             dram_capacity: self.dram_capacity,
+            lower_cache_cap: self.lower_cache_cap,
         }
     }
 }
@@ -277,6 +291,7 @@ pub struct Session {
     pool: Option<Arc<DevicePool>>,
     prefetch: bool,
     dram_capacity: usize,
+    lower_cache_cap: Option<usize>,
 }
 
 impl Session {
@@ -384,6 +399,7 @@ impl Session {
             pool: self.pool.clone(),
             prefetch: self.prefetch,
             dram_capacity: self.dram_capacity,
+            lower_cache_cap: self.lower_cache_cap,
         }
     }
 }
@@ -648,6 +664,7 @@ pub struct CompiledProgram {
     pool: Option<Arc<DevicePool>>,
     prefetch: bool,
     dram_capacity: usize,
+    lower_cache_cap: Option<usize>,
 }
 
 impl CompiledProgram {
@@ -710,7 +727,11 @@ impl CompiledProgram {
             }
             None => ExecEngine::new(&self.registry, self.backend),
         };
-        engine.with_prefetch(self.prefetch).with_dram_capacity(self.dram_capacity)
+        let engine = engine.with_prefetch(self.prefetch).with_dram_capacity(self.dram_capacity);
+        match self.lower_cache_cap {
+            Some(cap) => engine.with_lowering_cache_capacity(cap),
+            None => engine,
+        }
     }
 
     /// The shared device pool this handle's engines draw from (None for

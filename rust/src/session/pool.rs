@@ -15,12 +15,18 @@
 //! worker N ──return────▶ └──────────────┘
 //! ```
 //!
-//! Every checkout sends a request (target + the program's staged-burst
-//! fingerprints) over the pool's MPSC work queue and blocks on its own
-//! private response channel; the arbiter thread answers with either a
-//! granted [`Device`] or a `Build` ticket (capacity reserved, the caller
-//! constructs the simulator itself so model construction never blocks
-//! the arbiter). Returned devices keep their **residency set** — the
+//! Every checkout sends a request (target + affinity fingerprints) over
+//! the pool's MPSC work queue and blocks on its own private response
+//! channel; the arbiter thread answers with either a granted [`Device`]
+//! or a `Build` ticket (capacity reserved, the caller constructs the
+//! simulator itself so model construction never blocks the arbiter).
+//! For template-bound programs the affinity fingerprints are the
+//! template's **weight set**
+//! ([`crate::codegen::ProgramTemplate::weight_fingerprints`]) — stable
+//! across binds, so every call of an input-varying sweep scores against
+//! the same resident weights; per-call slot bursts never pollute the
+//! score. Direct `LoweredProgram` replays send every staged-burst
+//! fingerprint. Returned devices keep their **residency set** — the
 //! `(region, fingerprint)` pairs of operand bursts still staged in
 //! device memory — which is exactly what the scheduler routes on:
 //!

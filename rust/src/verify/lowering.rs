@@ -35,6 +35,15 @@
 //! construct marker tensors whose canonical encoding provably
 //! round-trips (asserted, not assumed), so the correspondence
 //! `staged byte ↔ symbolic variable` is exact.
+//!
+//! Since drivers lower to weight-keyed
+//! [`crate::codegen::ProgramTemplate`]s, the obligations bind each
+//! template with the marker tensors and structurally require that every
+//! byte a late-bound [`crate::codegen::OperandSlot`] stages resolves to
+//! a registered marker (`super::obligations::bind_slot_symbolic`). Slot
+//! payloads therefore enter the walk as *free symbolic operand bytes*:
+//! the discharged verdict covers every input the template can be bound
+//! with, not just the one concrete lowering that was executed.
 
 use crate::accel::flexasr::model as fx;
 use crate::accel::hlscnn::model as hx;

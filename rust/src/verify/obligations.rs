@@ -5,9 +5,14 @@
 //! bounded shape chosen to exercise a specific **tiling edge** (single
 //! tile, exact tile split, uneven tail, capacity-bound tiles, padded
 //! borders, multi-step LSTM schedules, chunk tails). Checking an
-//! obligation runs the *real* driver lowering on marker tensors (via
-//! the `*_for_verify` cap-override entry points, so small shapes still
-//! produce multi-tile programs), symbolically executes the resulting
+//! obligation runs the *real* driver template lowering on marker
+//! tensors (via the `*_template*` cap-override entry points, so small
+//! shapes still produce multi-tile programs), binds the resulting
+//! slot-symbolic [`crate::codegen::ProgramTemplate`] with the markers
+//! under a structural side condition — every byte a late-bound
+//! [`crate::codegen::OperandSlot`] stages must resolve to a registered
+//! marker variable, so slot payloads enter the proof as *free symbolic
+//! operand bytes* — then symbolically executes the bound
 //! [`crate::codegen::LoweredProgram`] with
 //! [`super::lowering::sym_execute_program`], builds an independent
 //! symbolic reference grid for the op's semantics, and discharges the
@@ -31,6 +36,7 @@ use crate::accel::flexasr::FlexAsr;
 use crate::accel::hlscnn::model as hx;
 use crate::accel::hlscnn::{Hlscnn, HlscnnConfig};
 use crate::accel::vta::Vta;
+use crate::codegen::{LoweredProgram, ProgramTemplate};
 use crate::ir::Target;
 use crate::session::DesignRev;
 use crate::smt::{BitBlaster, BvTerm, EquivResult};
@@ -387,6 +393,63 @@ fn finish(
     Ok(ObligationReport { ob: ob.clone(), status, stats: Some(outcome) })
 }
 
+/// Bind a slot-symbolic template with marker operands under the slot
+/// discipline the obligations rely on: each late-bound burst must stage
+/// exactly its [`crate::codegen::OperandSlot`]'s payload slice, and
+/// every element code in it must resolve to a registered marker
+/// variable. That is what makes the check a proof *over the template*
+/// rather than over one concrete lowering — slot payloads reach the
+/// shadow device as free symbolic operand bytes, so the verdict covers
+/// every input the template can ever be bound with, while a concrete
+/// operand byte leaking into a late-bound payload (a template that
+/// secretly specialized on the marker inputs) fails structurally before
+/// any solving.
+fn bind_slot_symbolic(
+    tmpl: &ProgramTemplate,
+    operands: &[&Tensor],
+    markers: &MarkerMap,
+) -> Result<LoweredProgram, String> {
+    let bound = tmpl
+        .bind(operands)
+        .map_err(|e| format!("template bind rejected marker operands: {e}"))?;
+    let prog = bound.program;
+    for (ii, bi, slot) in tmpl.slots() {
+        let burst = prog
+            .invocations
+            .get(ii)
+            .and_then(|inv| inv.bursts.get(bi))
+            .ok_or_else(|| format!("slot ({ii},{bi}) missing from the bound program"))?;
+        let payload: Vec<u8> = burst
+            .cmds
+            .iter()
+            .filter(|c| c.is_write)
+            .flat_map(|c| c.payload().iter().copied())
+            .collect();
+        if payload.len() != slot.bytes.len() {
+            return Err(format!(
+                "slot ({ii},{bi}) staged {} bytes, expected {}",
+                payload.len(),
+                slot.bytes.len()
+            ));
+        }
+        let width = slot.codec.elem_bytes();
+        for (ei, chunk) in payload.chunks(width).enumerate() {
+            let mut code = 0u64;
+            for (j, &byte) in chunk.iter().enumerate() {
+                code |= (byte as u64) << (8 * j);
+            }
+            if !markers.contains_key(&(width, code)) {
+                return Err(format!(
+                    "slot ({ii},{bi}) element {ei} staged code {code:#x} that is \
+                     not a registered marker — a concrete operand byte leaked \
+                     into a late-bound payload"
+                ));
+            }
+        }
+    }
+    Ok(prog)
+}
+
 fn run_linear(
     ob: &Obligation,
     n: usize,
@@ -401,9 +464,10 @@ fn run_linear(
     let x = pool.tensor(&[n, k], "x", &mut markers)?;
     let w = pool.tensor(&[m, k], "w", &mut markers)?;
     let b = pool.tensor(&[m], "b", &mut markers)?;
-    let prog = dev
-        .lower_linear_for_verify(&x, &w, &b, cap)
+    let tmpl = dev
+        .lower_linear_template_for_verify(&x, &w, &b, cap)
         .ok_or_else(|| "tiled linear lowering declined the shape".to_string())?;
+    let prog = bind_slot_symbolic(&tmpl, &[&x, &w, &b], &markers)?;
     let mut uf = UfTable::new();
     let hw = sym_execute_program(&prog, &DeviceModel::FlexAsr, &markers, &mut uf)?;
     let (_, xb) = fx::encode_tensor(&dev.af, &x);
@@ -443,9 +507,10 @@ fn run_lstm(
     let wi = pool.tensor(&[four_h, e], "wi", &mut markers)?;
     let wh = pool.tensor(&[four_h, h], "wh", &mut markers)?;
     let b = pool.tensor(&[four_h], "b", &mut markers)?;
-    let prog = dev
-        .lower_lstm_for_verify(&x, &wi, &wh, &b, cap)
+    let tmpl = dev
+        .lower_lstm_template_for_verify(&x, &wi, &wh, &b, cap)
         .ok_or_else(|| "tiled LSTM lowering declined the shape".to_string())?;
+    let prog = bind_slot_symbolic(&tmpl, &[&x, &wi, &wh, &b], &markers)?;
     let mut uf = UfTable::new();
     let hw = sym_execute_program(&prog, &DeviceModel::FlexAsr, &markers, &mut uf)?;
     let (_, xb) = fx::encode_tensor(&dev.af, &x);
@@ -495,9 +560,10 @@ fn run_conv(
     let mut markers = MarkerMap::new();
     let x = hlscnn_act_markers(cfg.act_fmt, &[1, c, h, w], &mut markers)?;
     let wt = hlscnn_wgt_markers(&[o, c, kh, kw], c * h * w + 1, &mut markers)?;
-    let prog = dev
-        .lower_conv2d_capped(&x, &wt, stride, pad, cap)
+    let tmpl = dev
+        .lower_conv2d_template(&x, &wt, stride, pad, cap)
         .ok_or_else(|| "tiled conv2d lowering declined the shape".to_string())?;
+    let prog = bind_slot_symbolic(&tmpl, &[&x, &wt], &markers)?;
     let mut uf = UfTable::new();
     let hw = sym_execute_program(&prog, &DeviceModel::Hlscnn(cfg), &markers, &mut uf)?;
     let reference = ref_conv2d(
@@ -526,9 +592,10 @@ fn run_vta_add(
     let dev = Vta::new();
     let mut markers = MarkerMap::new();
     let (a, b, scale) = vta_add_markers(len, &mut markers)?;
-    let prog = dev
-        .lower_add_capped(&a, &b, cap)
+    let tmpl = dev
+        .lower_add_template(&a, &b, cap)
         .ok_or_else(|| "chunked vta_add lowering declined the shape".to_string())?;
+    let prog = bind_slot_symbolic(&tmpl, &[&a, &b], &markers)?;
     let mut uf = UfTable::new();
     let hw = sym_execute_program(&prog, &DeviceModel::Vta, &markers, &mut uf)?;
     let reference = ref_vta_add(&svar_grid("a", len, 7), &svar_grid("b", len, 7), &[len]);

@@ -247,54 +247,77 @@ fn prefetch_overlap_cuts_modeled_cycles_not_bits() {
     );
 }
 
-/// Satellite pinning the LoweringCache debt: per-point sweep inputs
-/// change the operand fingerprints, so the program cache misses every
-/// call — but page-table residency is keyed by burst fingerprint, so the
-/// unchanged weight tiles must still dedup and the repeat call must
-/// stream an order of magnitude fewer bytes.
+/// Regression for the closed LoweringCache debt: sweep inputs leave
+/// the weight-keyed template cache HOT. Per-point inputs change, but
+/// the cache key covers only (target, rev, op head, shapes, weight
+/// fingerprints), so an n-point sweep lowers the layer exactly once —
+/// a hit rate of (n−1)/n — reuses the calibration mirrors on every
+/// hit, keeps the weight tiles device-resident, and stays bit-clean
+/// under CrossCheck on both design revisions.
 #[test]
-fn sweep_inputs_miss_program_cache_but_weights_stay_resident() {
-    let session = Session::builder()
-        .targets(&[Target::FlexAsr])
-        .backend(ExecBackend::IlaMmio)
-        .build();
-    let mut g = GraphBuilder::new();
-    let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
-    g.expr.add(Op::FlexLinear, vec![x, w, b]);
-    let program = session.attach(g.finish());
-    let mut rng = Rng::new(48);
-    let w_t = Tensor::randn(&[600, 600], &mut rng, 0.3);
-    let b_t = Tensor::randn(&[600], &mut rng, 0.1);
-    let point = |rng: &mut Rng| {
-        Bindings::new()
-            .with("x", Tensor::randn(&[2, 600], rng, 1.0))
-            .with("w", w_t.clone())
-            .with("b", b_t.clone())
-    };
-    let mut engine = program.engine();
-    let first =
-        program.run_traced_with(&mut engine, &point(&mut rng)).unwrap();
-    let p2 = point(&mut rng);
-    let second = program.run_traced_with(&mut engine, &p2).unwrap();
-    assert_eq!(
-        second.mirror_hits, 0,
-        "a fresh input fingerprint must miss the lowering cache"
-    );
-    assert!(
-        second.bursts_deduped > 0,
-        "weight tiles must ride page residency across the program miss"
-    );
-    assert!(
-        second.bytes_streamed * 10 < first.bytes_streamed,
-        "only the input and control replays should stream: {} vs {}",
-        second.bytes_streamed,
-        first.bytes_streamed
-    );
-    assert_eq!(
-        second.output,
-        program.run(&p2).unwrap(),
-        "residency across a program-cache miss diverged"
-    );
+fn sweep_inputs_hit_the_weight_keyed_template_cache() {
+    for rev in [
+        d2a::session::DesignRev::Original,
+        d2a::session::DesignRev::Updated,
+    ] {
+        let session = Session::builder()
+            .targets(&[Target::FlexAsr])
+            .backend(ExecBackend::CrossCheck)
+            .design_rev(rev)
+            .build();
+        let mut g = GraphBuilder::new();
+        let (x, w, b) = (g.var("x"), g.weight("w"), g.weight("b"));
+        g.expr.add(Op::FlexLinear, vec![x, w, b]);
+        let program = session.attach(g.finish());
+        let mut rng = Rng::new(48);
+        let w_t = Tensor::randn(&[600, 600], &mut rng, 0.3);
+        let b_t = Tensor::randn(&[600], &mut rng, 0.1);
+        let point = |rng: &mut Rng| {
+            Bindings::new()
+                .with("x", Tensor::randn(&[2, 600], rng, 1.0))
+                .with("w", w_t.clone())
+                .with("b", b_t.clone())
+        };
+        let n = 5usize;
+        let mut engine = program.engine();
+        let mut first_streamed = 0u64;
+        let mut last_streamed = 0u64;
+        for i in 0..n {
+            let p = point(&mut rng);
+            let trace = program.run_traced_with(&mut engine, &p).unwrap();
+            assert!(
+                trace.fidelity.is_clean(),
+                "{rev:?} sweep point {i} not bit-clean: {}",
+                trace.fidelity
+            );
+            assert_eq!(
+                trace.output,
+                program.run(&p).unwrap(),
+                "{rev:?} template reuse diverged at point {i}"
+            );
+            if i == 0 {
+                first_streamed = trace.bytes_streamed;
+            } else {
+                assert!(
+                    trace.bursts_deduped > 0,
+                    "{rev:?} weight tiles must stay device-resident"
+                );
+                last_streamed = trace.bytes_streamed;
+            }
+        }
+        // the op lowered exactly once: hit rate (n-1)/n
+        assert_eq!(engine.lower_cache_misses(), 1, "{rev:?}");
+        assert_eq!(engine.lower_cache_hits(), (n - 1) as u64, "{rev:?}");
+        assert!(
+            engine.mirror_hits() > 0,
+            "{rev:?} template hits must reuse the calibration mirrors"
+        );
+        assert!(
+            last_streamed * 10 < first_streamed,
+            "{rev:?} only the input and control replays should stream: \
+             {last_streamed} vs {first_streamed}"
+        );
+    }
 }
 
 #[test]

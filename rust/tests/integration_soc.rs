@@ -22,7 +22,7 @@ fn full_pipeline_over_three_devices() {
     let img = Tensor::randn(&[1, 3, 6, 6], &mut rng, 1.0);
     let k = Tensor::randn(&[4, 3, 3, 3], &mut rng, 0.2);
     let conv_op = Op::HlscnnConv2d { stride: (1, 1), pad: (1, 1) };
-    let conv = drv.invoke_program(&hl.lower(&conv_op, &[&img, &k]).unwrap()).unwrap();
+    let conv = drv.invoke_program(&hl.lower_concrete(&conv_op, &[&img, &k]).unwrap()).unwrap();
     assert_eq!(conv.shape, vec![1, 4, 6, 6]);
     assert_eq!(conv, hl.conv2d(&img, &k, (1, 1), (1, 1)));
 
@@ -31,14 +31,14 @@ fn full_pipeline_over_three_devices() {
     let w = fa.quant(&Tensor::randn(&[8, 36], &mut rng, 0.3));
     let b = fa.quant(&Tensor::randn(&[8], &mut rng, 0.1));
     let lin = drv
-        .invoke_program(&fa.lower(&Op::FlexLinear, &[&feat, &w, &b]).unwrap())
+        .invoke_program(&fa.lower_concrete(&Op::FlexLinear, &[&feat, &w, &b]).unwrap())
         .unwrap();
     assert_eq!(lin, fa.linear(&feat, &w, &b));
 
     // VTA GEMM, exact
     let q = vta.quant(&lin);
     let w2 = vta.quant(&Tensor::randn(&[4, 8], &mut rng, 1.0));
-    let g = drv.invoke_program(&vta.lower(&Op::VtaGemm, &[&q, &w2]).unwrap()).unwrap();
+    let g = drv.invoke_program(&vta.lower_concrete(&Op::VtaGemm, &[&q, &w2]).unwrap()).unwrap();
     assert_eq!(g.rel_error(&vta.gemm(&q, &w2)), 0.0);
 }
 
@@ -78,6 +78,6 @@ fn bus_fault_injection() {
     let mut rng = Rng::new(79);
     let x = vta.quant(&Tensor::randn(&[2, 8], &mut rng, 1.0));
     let w = vta.quant(&Tensor::randn(&[2, 8], &mut rng, 1.0));
-    let g = drv.invoke_program(&vta.lower(&Op::VtaGemm, &[&x, &w]).unwrap()).unwrap();
+    let g = drv.invoke_program(&vta.lower_concrete(&Op::VtaGemm, &[&x, &w]).unwrap()).unwrap();
     assert_eq!(g.shape, vec![2, 2]);
 }

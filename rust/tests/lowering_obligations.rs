@@ -111,7 +111,7 @@ fn conv_counterexample_replays_through_the_device() {
 
     let dev = Hlscnn::new(d2a::accel::hlscnn::HlscnnConfig::original());
     let prog = dev
-        .lower(&Op::HlscnnConv2d { stride, pad }, &[&act, &wgt])
+        .lower_concrete(&Op::HlscnnConv2d { stride, pad }, &[&act, &wgt])
         .expect("witness shape lowers");
     let mut sim = IlaSim::new(dev.build_ila());
     let device = execute_program(&prog, &mut sim).expect("witness replays");

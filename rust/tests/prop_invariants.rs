@@ -410,7 +410,7 @@ fn prop_maxpool_exact_and_codegen_routable() {
         let b = fa.quant(&Tensor::randn(&[m], &mut rng, 0.1));
         let prog = {
             use d2a::accel::Accelerator;
-            fa.lower(&Op::FlexLinear, &[&x, &w, &b]).unwrap()
+            fa.lower_concrete(&Op::FlexLinear, &[&x, &w, &b]).unwrap()
         };
         let out = drv.invoke_program(&prog).unwrap();
         assert_eq!(out.shape, vec![n, m]);

@@ -1,0 +1,173 @@
+//! Property tests for the two-phase template lowering: a weight-keyed
+//! [`d2a::codegen::ProgramTemplate`] bound with *fresh* inputs must
+//! replay bit-identically to a monolithic fresh lowering of those same
+//! inputs, across random shapes and values, all three accelerators,
+//! and both design revisions — and re-binding a template whose weight
+//! operands were mutated must be rejected
+//! ([`d2a::codegen::BindError::WeightMismatch`]) rather than silently
+//! replaying stale weight bursts.
+
+use d2a::accel::flexasr::FlexAsr;
+use d2a::accel::hlscnn::{Hlscnn, HlscnnConfig};
+use d2a::accel::vta::Vta;
+use d2a::accel::Accelerator;
+use d2a::codegen::{execute_program, BindError};
+use d2a::ila::sim::IlaSim;
+use d2a::ir::Op;
+use d2a::tensor::Tensor;
+use d2a::util::Rng;
+
+/// Lower a template from `template_operands`, bind it to
+/// `bind_operands`, and check the bound program replays bit-identically
+/// to `lower_concrete(bind_operands)` on fresh simulators.
+fn assert_template_bind_matches_fresh<A: Accelerator>(
+    dev: &A,
+    op: &Op,
+    template_operands: &[&Tensor],
+    bind_operands: &[&Tensor],
+    label: &str,
+) {
+    let tmpl = dev
+        .lower(op, template_operands)
+        .unwrap_or_else(|| panic!("{label}: template lowering declined"));
+    let bound = tmpl
+        .bind(bind_operands)
+        .unwrap_or_else(|e| panic!("{label}: bind failed: {e}"))
+        .program;
+    let fresh = dev
+        .lower_concrete(op, bind_operands)
+        .unwrap_or_else(|| panic!("{label}: fresh lowering declined"));
+
+    let mut sim_b = IlaSim::new(dev.build_ila());
+    let out_bound = execute_program(&bound, &mut sim_b)
+        .unwrap_or_else(|e| panic!("{label}: bound replay failed: {e}"));
+    let mut sim_f = IlaSim::new(dev.build_ila());
+    let out_fresh = execute_program(&fresh, &mut sim_f)
+        .unwrap_or_else(|e| panic!("{label}: fresh replay failed: {e}"));
+    assert_eq!(
+        out_bound, out_fresh,
+        "{label}: template-bind-execute diverged from monolithic lowering"
+    );
+}
+
+/// Mutating a weight operand and re-binding must be rejected with
+/// [`BindError::WeightMismatch`] on that operand.
+fn assert_mutated_weight_rejected<A: Accelerator>(
+    dev: &A,
+    op: &Op,
+    operands: &[&Tensor],
+    weight_idx: usize,
+    label: &str,
+) {
+    let tmpl = dev
+        .lower(op, operands)
+        .unwrap_or_else(|| panic!("{label}: template lowering declined"));
+    let mut mutated: Vec<Tensor> = operands.iter().map(|t| (*t).clone()).collect();
+    mutated[weight_idx].data[0] += 0.5;
+    let refs: Vec<&Tensor> = mutated.iter().collect();
+    match tmpl.bind(&refs) {
+        Err(BindError::WeightMismatch { operand }) => {
+            assert_eq!(operand, weight_idx, "{label}: wrong operand blamed");
+        }
+        Err(other) => panic!("{label}: expected WeightMismatch, got {other}"),
+        Ok(_) => panic!("{label}: mutated weights must not re-bind"),
+    }
+}
+
+#[test]
+fn flexasr_linear_templates_bind_fresh_inputs_bit_identically() {
+    let mut rng = Rng::new(101);
+    for (ri, dev) in [FlexAsr::original(), FlexAsr::updated()].into_iter().enumerate() {
+        for trial in 0..4 {
+            let n = 1 + rng.below(3);
+            let k = 1 + rng.below(64);
+            let m = 1 + rng.below(48);
+            let w = Tensor::randn(&[m, k], &mut rng, 0.3);
+            let b = Tensor::randn(&[m], &mut rng, 0.1);
+            let x_a = Tensor::randn(&[n, k], &mut rng, 1.0);
+            let x_b = Tensor::randn(&[n, k], &mut rng, 1.0);
+            let label = format!("linear rev{ri} trial={trial} {n}x{k}->{m}");
+            assert_template_bind_matches_fresh(
+                &dev,
+                &Op::FlexLinear,
+                &[&x_a, &w, &b],
+                &[&x_b, &w, &b],
+                &label,
+            );
+            assert_mutated_weight_rejected(&dev, &Op::FlexLinear, &[&x_b, &w, &b], 1, &label);
+        }
+    }
+}
+
+#[test]
+fn hlscnn_conv_templates_bind_fresh_activations_bit_identically() {
+    let mut rng = Rng::new(102);
+    for cfg in [HlscnnConfig::original(), HlscnnConfig::updated()] {
+        let dev = Hlscnn::new(cfg);
+        for trial in 0..4 {
+            let c = 1 + rng.below(3);
+            let h = 2 + rng.below(4);
+            let wd = 2 + rng.below(4);
+            let o = 1 + rng.below(4);
+            let kk = if rng.below(2) == 0 { 1 } else { 3 };
+            let pad = if kk == 3 { (1, 1) } else { (0, 0) };
+            let op = Op::HlscnnConv2d { stride: (1, 1), pad };
+            let wt = Tensor::randn(&[o, c, kk, kk], &mut rng, 0.2);
+            let x_a = Tensor::randn(&[1, c, h, wd], &mut rng, 1.0);
+            let x_b = Tensor::randn(&[1, c, h, wd], &mut rng, 1.0);
+            let label =
+                format!("conv2d rev trial={trial} c{c} {h}x{wd} o{o} k{kk}");
+            assert_template_bind_matches_fresh(&dev, &op, &[&x_a, &wt], &[&x_b, &wt], &label);
+            assert_mutated_weight_rejected(&dev, &op, &[&x_b, &wt], 1, &label);
+        }
+    }
+}
+
+#[test]
+fn vta_templates_bind_fresh_inputs_bit_identically() {
+    let mut rng = Rng::new(103);
+    let dev = Vta::new();
+    for trial in 0..4 {
+        // GEMM: weight operand baked into the template
+        let n = 1 + rng.below(4);
+        let k = 1 + rng.below(16);
+        let m = 1 + rng.below(8);
+        let w = dev.quant(&Tensor::randn(&[m, k], &mut rng, 1.0));
+        let x_a = dev.quant(&Tensor::randn(&[n, k], &mut rng, 1.0));
+        let x_b = dev.quant(&Tensor::randn(&[n, k], &mut rng, 1.0));
+        let label = format!("gemm trial={trial} {n}x{k}->{m}");
+        assert_template_bind_matches_fresh(
+            &dev,
+            &Op::VtaGemm,
+            &[&x_a, &w],
+            &[&x_b, &w],
+            &label,
+        );
+        assert_mutated_weight_rejected(&dev, &Op::VtaGemm, &[&x_b, &w], 1, &label);
+
+        // ALU add: both operands late-bound, no weights — a same-shape
+        // re-bind always succeeds, a different shape is rejected
+        let len = 1 + rng.below(64);
+        let a1 = dev.quant(&Tensor::randn(&[len], &mut rng, 1.0));
+        let b1 = dev.quant(&Tensor::randn(&[len], &mut rng, 1.0));
+        let a2 = dev.quant(&Tensor::randn(&[len], &mut rng, 1.0));
+        let b2 = dev.quant(&Tensor::randn(&[len], &mut rng, 1.0));
+        let label = format!("add trial={trial} len={len}");
+        assert_template_bind_matches_fresh(
+            &dev,
+            &Op::VtaAdd,
+            &[&a1, &b1],
+            &[&a2, &b2],
+            &label,
+        );
+        let tmpl = dev.lower(&Op::VtaAdd, &[&a1, &b1]).expect("add lowers");
+        let short = dev.quant(&Tensor::randn(&[len + 1], &mut rng, 1.0));
+        assert!(
+            matches!(
+                tmpl.bind(&[&short, &short]),
+                Err(BindError::ShapeMismatch { .. })
+            ),
+            "{label}: shape-changing re-bind must be rejected"
+        );
+    }
+}
